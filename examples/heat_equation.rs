@@ -1,0 +1,85 @@
+//! Heat-equation case study (Figs 1 & 7): run the 1D heat equation at the
+//! paper's scale (~1.5 M multiplications) under f64 / f32 / E5M10 / R2F2
+//! and compare the final temperature profiles.
+//!
+//! ```sh
+//! cargo run --release --example heat_equation [-- sin|exp]
+//! ```
+
+use r2f2::pde::heat1d::{run, HeatParams};
+use r2f2::pde::init::HeatInit;
+use r2f2::pde::{rel_l2, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
+use r2f2::r2f2core::R2f2Config;
+use r2f2::report::ascii_plot::line_plot;
+use r2f2::report::Table;
+use r2f2::softfloat::FpFormat;
+
+fn main() {
+    let init = match std::env::args().nth(1).as_deref() {
+        Some("exp") => HeatInit::exp_default(),
+        _ => HeatInit::sin_default(),
+    };
+    let params = HeatParams { init, ..HeatParams::default() };
+    println!(
+        "1D heat equation: n={}, steps={}, r={}, init={}  (~{} muls)",
+        params.n,
+        params.steps,
+        params.r(),
+        params.init.name(),
+        params.expected_muls()
+    );
+
+    let truth = run(&params, &mut F64Arith, QuantMode::MulOnly);
+
+    let mut table = Table::new(vec!["backend", "mode", "rel-err vs f64", "notes"]);
+    let mut series: Vec<(String, Vec<f64>)> = vec![("f64".into(), sample(&truth.u))];
+
+    // f32 — the paper's "32-bit" reference that R2F2 must match.
+    let f32_run = run(&params, &mut F32Arith, QuantMode::MulOnly);
+    table.row(vec![
+        "f32".to_string(),
+        "mul-only".into(),
+        format!("{:.2e}", rel_l2(&f32_run.u, &truth.u)),
+        "reference".into(),
+    ]);
+
+    // Standard half, honestly deployed (state + arithmetic) — Fig 1(b).
+    let mut half = FixedArith::new(FpFormat::E5M10);
+    let half_run = run(&params, &mut half, QuantMode::Full);
+    let ev = half_run.range_events.unwrap();
+    table.row(vec![
+        "E5M10".to_string(),
+        "full".into(),
+        format!("{:.2e}", rel_l2(&half_run.u, &truth.u)),
+        format!("WRONG — {} overflows, {} underflows", ev.overflows, ev.underflows),
+    ]);
+    series.push(("E5M10-full".into(), sample(&half_run.u)));
+
+    // R2F2 16- and 15-bit — Fig 7(a)/(b).
+    for cfg in [R2f2Config::C16_393, R2f2Config::C15_383] {
+        let mut unit = R2f2Arith::new(cfg);
+        let res = run(&params, &mut unit, QuantMode::MulOnly);
+        let st = res.r2f2_stats.unwrap();
+        table.row(vec![
+            format!("R2F2 {cfg}"),
+            "mul-only".into(),
+            format!("{:.2e}", rel_l2(&res.u, &truth.u)),
+            format!(
+                "{} widen / {} narrow in {} muls (paper: 5 / 23)",
+                st.overflow_adjustments, st.redundancy_adjustments, st.muls
+            ),
+        ]);
+        if cfg == R2f2Config::C16_393 {
+            series.push((format!("R2F2{cfg}"), sample(&res.u)));
+        }
+    }
+
+    println!("\n{}", table.render());
+    let refs: Vec<(&str, &[f64])> = series.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+    println!("{}", line_plot("final temperature profiles (Figs 1/7)", &refs, 72, 16));
+    println!("R2F2 rides the f64 curve; the fully-half run visibly distorts.");
+}
+
+fn sample(u: &[f64]) -> Vec<f64> {
+    u.iter().step_by(u.len().div_ceil(72)).copied().collect()
+}

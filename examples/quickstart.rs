@@ -1,0 +1,51 @@
+//! Quickstart: the R2F2 multiplier in five minutes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the core API: quantizing to arbitrary formats, multiplying through
+//! the runtime-reconfigurable unit, and watching the adjustment unit react
+//! to the data.
+
+use r2f2::r2f2core::{AdjustEvent, R2f2Config, R2f2Multiplier};
+use r2f2::softfloat::{mul_f, quantize, FpFormat};
+
+fn main() {
+    // --- 1. Arbitrary-precision formats (the paper's exploration library).
+    let half = FpFormat::E5M10; // standard half
+    let e6m9 = FpFormat::new(6, 9); // one more exponent bit, one less mantissa
+    println!("E5M10 range: [{:.3e}, {:.3e}]", half.min_normal(), half.max_value());
+    println!("E6M9  range: [{:.3e}, {:.3e}]", e6m9.min_normal(), e6m9.max_value());
+    println!("quantize(3.14159, E5M10) = {}", quantize(3.14159, half));
+
+    // --- 2. Fixed-format multiplication fails outside its range.
+    let (v, flags) = mul_f(300.0, 300.0, half);
+    println!("\n300 × 300 in E5M10 = {v} (overflow: {})  ← the Fig. 6(a) failure", flags.overflow());
+
+    // --- 3. The R2F2 multiplier widens its exponent and retries.
+    let mut unit = R2f2Multiplier::new(R2f2Config::C16_393); // 16-bit <3,9,3>
+    let (v, event) = unit.mul_traced(300.0, 300.0);
+    println!("300 × 300 in R2F2 <3,9,3> = {v} ({event:?})");
+    println!("unit now at split k={} (format {})", unit.split(), unit.config().format(unit.split()));
+
+    // --- 4. And narrows back when the data clusters near 1.0.
+    let mut narrowed = false;
+    for i in 0..40 {
+        let (_, ev) = unit.mul_traced(1.05, 0.97);
+        if ev == AdjustEvent::Narrowed {
+            println!("after {} small multiplications: narrowed to k={}", i + 1, unit.split());
+            narrowed = true;
+            break;
+        }
+    }
+    assert!(narrowed);
+
+    // --- 5. Accuracy accounting.
+    let st = unit.stats();
+    println!(
+        "\nstats: {} muls, {} widen retries, {} narrowings, {} unresolved",
+        st.muls, st.overflow_adjustments, st.redundancy_adjustments, st.unresolved_range_events
+    );
+    println!("\nNext: `cargo run --release --example heat_equation` (Figs 1 & 7)");
+}

@@ -1,0 +1,171 @@
+"""AOT lowering: JAX/Pallas computations → HLO **text** artifacts + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime
+(`rust/src/runtime/`) loads the text with `HloModuleProto::from_text_file`,
+compiles on the PJRT CPU client and drives the step loop. HLO text — NOT
+`.serialize()` — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import formats, model
+from compile.kernels import quantize as qk
+from compile.kernels import r2f2 as rk
+
+HEAT_N = 512
+SWE_N = 16
+ELEMWISE_N = 1024
+
+
+def to_hlo_text(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_desc(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def exports():
+    """Every artifact: (name, fn, input specs, #outputs, note)."""
+    cfg = formats.C16_393
+    swe_cfg = formats.C16_384
+    n_lanes = (SWE_N + 1) * SWE_N
+    consts = model.SweConsts(g=9.8, dt=20.0, dx=2000.0)
+
+    return [
+        (
+            "r2f2_mul_k2",
+            lambda a, b: (rk.r2f2_mul_fixed_split_pallas(a, b, cfg, 2),),
+            [f32(ELEMWISE_N), f32(ELEMWISE_N)],
+            1,
+            "stateless <3,9,3> multiply pinned at split k=2 (bit-exactness probe)",
+        ),
+        (
+            "r2f2_mul_k0",
+            lambda a, b: (rk.r2f2_mul_fixed_split_pallas(a, b, cfg, 0),),
+            [f32(ELEMWISE_N), f32(ELEMWISE_N)],
+            1,
+            "stateless <3,9,3> multiply pinned at k=0 (max truncation path)",
+        ),
+        (
+            "r2f2_mul_adaptive",
+            lambda a, b, k, s: tuple(rk.r2f2_mul_pallas(a, b, k, s, cfg)),
+            [f32(ELEMWISE_N), f32(ELEMWISE_N), i32(ELEMWISE_N), i32(ELEMWISE_N)],
+            6,
+            "adaptive <3,9,3> multiply with per-lane unit state",
+        ),
+        (
+            "quantize_e5m10",
+            lambda x: (qk.quantize_pallas(x, 5, 10),),
+            [f32(ELEMWISE_N)],
+            1,
+            "round-to-nearest E5M10 quantizer",
+        ),
+        (
+            "heat_step_r2f2",
+            lambda u, r, k, s: tuple(model.heat_step_r2f2(u, r, k, s, cfg)),
+            [f32(HEAT_N), f32(1), i32(HEAT_N), i32(HEAT_N)],
+            5,
+            f"heat step n={HEAT_N}, R2F2 <3,9,3> multiplications",
+        ),
+        (
+            "heat_step_e5m10",
+            lambda u, r: (model.heat_step_fixed(u, r, 5, 10),),
+            [f32(HEAT_N), f32(1)],
+            1,
+            f"heat step n={HEAT_N}, fixed E5M10 multiplications",
+        ),
+        (
+            "heat_step_f32",
+            lambda u, r: (model.heat_step_f32(u, r),),
+            [f32(HEAT_N), f32(1)],
+            1,
+            f"heat step n={HEAT_N}, plain f32",
+        ),
+        (
+            "swe_step_r2f2",
+            lambda h, u, v, k, s: model.swe_step(h, u, v, k, s, consts, cfg=swe_cfg),
+            [
+                f32(SWE_N + 2, SWE_N + 2),
+                f32(SWE_N + 2, SWE_N + 2),
+                f32(SWE_N + 2, SWE_N + 2),
+                i32(n_lanes),
+                i32(n_lanes),
+            ],
+            7,
+            f"SWE Lax-Wendroff step n={SWE_N}, Ux flux through R2F2 <3,8,4>",
+        ),
+        (
+            "swe_step_f32",
+            lambda h, u, v: model.swe_step(
+                h, u, v, jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+                consts, cfg=None,
+            )[:3],
+            [
+                f32(SWE_N + 2, SWE_N + 2),
+                f32(SWE_N + 2, SWE_N + 2),
+                f32(SWE_N + 2, SWE_N + 2),
+            ],
+            3,
+            f"SWE Lax-Wendroff step n={SWE_N}, plain f32",
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"heat_n": HEAT_N, "swe_n": SWE_N, "elemwise_n": ELEMWISE_N, "artifacts": []}
+    for name, fn, specs, n_out, note in exports():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [spec_desc(s) for s in specs],
+                "outputs": n_out,
+                "note": note,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Bit-exact R2F2 / arbitrary-precision float emulation in vectorized jnp.
+
+This is the single source of truth for the Layer-1/Layer-2 numerics, the
+Python twin of ``rust/src/softfloat`` + ``rust/src/r2f2core``. Both sides
+implement DESIGN.md §3 exactly; the rust integration tests execute the
+AOT-lowered HLO of these functions and compare bit-for-bit against the rust
+scalar implementation.
+
+Everything operates on f32 carriers with uint32 bit manipulation — no f64
+(build-time JAX runs without x64). Supported fraction widths m_w ≤ 14 so
+mantissa products fit uint32.
+
+Semantics (same as the rust side):
+  * normals only — subnormal inputs and underflowing results flush to zero;
+  * no inf/NaN — the top exponent code is reserved; overflow saturates to
+    the max finite value and raises a flag;
+  * round-to-nearest-even everywhere;
+  * R2F2 multiplication truncates the lowest ``t = max(0, 2·(FX−k) − FX)``
+    product bits (the paper's flexible-partial-product approximation);
+  * the adjustment unit widens (k+1, retry) on result range events or
+    operand overflow, and narrows (k−1) after a 32-streak of all-redundant
+    multiplications with a 2-bit redundancy window.
+"""
+
+from functools import partial
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+
+class R2f2Config(NamedTuple):
+    """The paper's <EB, MB, FX> configuration."""
+
+    eb: int
+    mb: int
+    fx: int
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.eb + self.mb + self.fx
+
+    def e_w(self, k: int) -> int:
+        return self.eb + k
+
+    def m_w(self, k: int) -> int:
+        return self.mb + (self.fx - k)
+
+
+C16_393 = R2f2Config(3, 9, 3)
+C16_384 = R2f2Config(3, 8, 4)
+C15_383 = R2f2Config(3, 8, 3)
+C14_373 = R2f2Config(3, 7, 3)
+
+#: Narrowing hysteresis (must match rust's R2f2Multiplier default).
+STREAK_THRESHOLD = 32
+#: Redundancy window bits after the exponent MSB.
+REDUNDANCY_WINDOW = 2
+
+_U32 = jnp.uint32
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=_U32)
+
+
+def f32_fields(x):
+    """Split f32 values into (sign, biased exponent, fraction) uint32s."""
+    bits = lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), _U32)
+    return bits >> 31, (bits >> 23) & _u32(0xFF), bits & _u32(0x7FFFFF)
+
+
+def build_f32(sign, e, frac):
+    """Assemble f32 from field uint32s (no validation)."""
+    bits = (sign << 31) | (e << 23) | frac
+    return lax.bitcast_convert_type(bits.astype(_U32), jnp.float32)
+
+
+def encode(x, e_w: int, m_w: int):
+    """Encode f32 → (sign, exp, frac, overflow, underflow) in ``E{e_w}M{m_w}``.
+
+    exp == 0 encodes zero. Overflow saturates to max finite; underflow (and
+    f32 subnormal input) flushes to zero. NaN maps to +0, inf saturates —
+    matching rust ``softfloat::encode``.
+    """
+    assert 2 <= e_w <= 8 and 1 <= m_w <= 14
+    sign, e32, f32f = f32_fields(x)
+
+    is_zero_or_sub = e32 == 0
+    is_nan = (e32 == 255) & (f32f != 0)
+    is_inf = (e32 == 255) & (f32f == 0)
+
+    # Round the 23-bit fraction to m_w bits (RNE).
+    shift = 23 - m_w
+    kept = f32f >> shift
+    lost = f32f & _u32((1 << shift) - 1)
+    half = _u32(1 << (shift - 1))
+    round_up = (lost > half) | ((lost == half) & ((kept & 1) == 1))
+    kept = kept + round_up.astype(_U32)
+    carry = kept >> m_w  # 0 or 1
+    frac = kept & _u32((1 << m_w) - 1)
+
+    bias = (1 << (e_w - 1)) - 1
+    max_biased = (1 << e_w) - 2
+    # Biased exponent in the target format (signed arithmetic via int32).
+    eb = e32.astype(jnp.int32) - 127 + carry.astype(jnp.int32) + bias
+
+    underflow = (eb <= 0) & ~is_zero_or_sub & ~is_nan & ~is_inf
+    # f32 subnormals flush silently with an underflow flag like rust.
+    sub_underflow = is_zero_or_sub & (f32f != 0)
+    overflow = ((eb > max_biased) & ~is_zero_or_sub & ~is_nan) | is_inf
+
+    zero_out = is_zero_or_sub | underflow | is_nan
+    exp = jnp.where(zero_out, 0, jnp.where(overflow, max_biased, eb)).astype(_U32)
+    frac = jnp.where(zero_out, _u32(0), jnp.where(overflow, _u32((1 << m_w) - 1), frac))
+    sign = jnp.where(is_nan, _u32(0), sign)
+    return sign, exp, frac, overflow, underflow | sub_underflow
+
+
+def decode(sign, exp, frac, e_w: int, m_w: int):
+    """Decode packed fields back to f32 (exact for every supported format)."""
+    bias = (1 << (e_w - 1)) - 1
+    is_zero = exp == 0
+    e32 = (exp.astype(jnp.int32) - bias + 127).astype(_U32)
+    f32f = frac << (23 - m_w)
+    out = build_f32(sign, jnp.where(is_zero, _u32(0), e32), jnp.where(is_zero, _u32(0), f32f))
+    return out
+
+
+def mul_fields(sa, ea, fa, sb, eb_, fb, e_w: int, m_w: int, trunc_bits: int):
+    """Multiply two packed values with ``trunc_bits`` low product bits dropped.
+
+    Returns (sign, exp, frac, overflow, underflow). Mirrors
+    ``r2f2core::mul::mul_packed`` / ``softfloat::mul`` (trunc_bits = 0).
+    """
+    sign = sa ^ sb
+    any_zero = (ea == 0) | (eb_ == 0)
+
+    ia = _u32(1 << m_w) | fa
+    ib = _u32(1 << m_w) | fb
+    p = ia * ib  # ≤ 2^(2·m_w+2) ≤ 2^30 for m_w ≤ 14
+    if trunc_bits > 0:
+        p = p & _u32(~((1 << trunc_bits) - 1) & 0xFFFFFFFF)
+
+    hi = (p >> (2 * m_w + 1)) & 1  # product in [2,4)?
+    shift = m_w + hi  # dynamic shift (m_w or m_w+1)
+    kept = p >> shift
+    lost = p & ((_u32(1) << shift) - 1)
+    half = _u32(1) << (shift - 1)
+    round_up = (lost > half) | ((lost == half) & ((kept & 1) == 1))
+    kept = kept + round_up.astype(_U32)
+    renorm = kept >> (m_w + 1)  # rounding carried to 2^(m_w+1)?
+    kept = jnp.where(renorm == 1, kept >> 1, kept)
+    frac = kept & _u32((1 << m_w) - 1)
+    exp_inc = hi.astype(jnp.int32) + renorm.astype(jnp.int32)
+
+    # Paper's bias trick: e = ea + eb − 2^(e_w−1) + 1 (+ normalize carries).
+    e = ea.astype(jnp.int32) + eb_.astype(jnp.int32) - (1 << (e_w - 1)) + 1 + exp_inc
+    max_biased = (1 << e_w) - 2
+
+    underflow = (e <= 0) & ~any_zero
+    overflow = (e > max_biased) & ~any_zero
+    exp = jnp.where(
+        any_zero | underflow, 0, jnp.where(overflow, max_biased, e)
+    ).astype(_U32)
+    frac = jnp.where(
+        any_zero | underflow, _u32(0), jnp.where(overflow, _u32((1 << m_w) - 1), frac)
+    )
+    return sign, exp, frac, overflow, underflow
+
+
+def quantize(x, e_w: int, m_w: int):
+    """f32 → nearest representable of ``E{e_w}M{m_w}`` → f32."""
+    s, e, f, _, _ = encode(x, e_w, m_w)
+    return decode(s, e, f, e_w, m_w)
+
+
+def fixed_mul(a, b, e_w: int, m_w: int):
+    """a×b fully in ``E{e_w}M{m_w}``: encode, multiply (one rounding), decode.
+
+    Returns (result, overflow, underflow) — the fixed-format baseline
+    (E5M10 = the paper's standard half multiplier).
+    """
+    sa, ea, fa, oa, ua = encode(a, e_w, m_w)
+    sb, eb_, fb, ob, ub = encode(b, e_w, m_w)
+    s, e, f, om, um = mul_fields(sa, ea, fa, sb, eb_, fb, e_w, m_w, 0)
+    return decode(s, e, f, e_w, m_w), oa | ob | om, ua | ub | um
+
+
+def _is_redundant(exp, e_w: int, window: int):
+    """§4.2 redundancy detector: the `window` bits after the exponent MSB all
+    differ from it. Zero is never redundant."""
+    msb = (exp >> (e_w - 1)) & 1
+    red = exp != 0
+    for i in range(1, window + 1):
+        bit = (exp >> (e_w - 1 - i)) & 1
+        red = red & (bit != msb)
+    return red
+
+
+def trunc_bits(cfg: R2f2Config, k: int) -> int:
+    f = cfg.fx - k
+    return max(0, 2 * f - cfg.fx)
+
+
+def r2f2_mul_at_split(a, b, cfg: R2f2Config, k: int):
+    """One multiplication attempt at static split ``k``.
+
+    Returns (result_f32, packed fields (s,e,f), widen_event, e_w).
+    widen_event = result range event or operand overflow — operand
+    underflow is a silent flush (DESIGN.md §3).
+    """
+    e_w, m_w = cfg.e_w(k), cfg.m_w(k)
+    sa, ea, fa, oa, _ = encode(a, e_w, m_w)
+    sb, eb_, fb, ob, _ = encode(b, e_w, m_w)
+    s, e, f, om, um = mul_fields(sa, ea, fa, sb, eb_, fb, e_w, m_w, trunc_bits(cfg, k))
+    widen = oa | ob | om | um
+    red = (
+        _is_redundant(ea, e_w, REDUNDANCY_WINDOW)
+        & _is_redundant(eb_, e_w, REDUNDANCY_WINDOW)
+        & _is_redundant(e, e_w, REDUNDANCY_WINDOW)
+        if e_w >= REDUNDANCY_WINDOW + 2
+        else jnp.zeros_like(s, dtype=bool)
+    )
+    return decode(s, e, f, e_w, m_w), widen, red
+
+
+def r2f2_adaptive_mul(a, b, k, streak, cfg: R2f2Config):
+    """Vectorized adjustment-unit multiplication: one R2F2 unit **per lane**.
+
+    ``k``/``streak`` are int32 state arrays (one unit per element, the SIMD
+    analogue of the paper's per-multiplier state). Implements the cascade
+    exactly like rust's ``R2f2Multiplier::mul_traced``: the chosen split is
+    the smallest s ≥ k whose attempt raises no widen event (else FX); each
+    increment counts one overflow adjustment; narrowing needs a
+    ``STREAK_THRESHOLD`` streak of all-redundant multiplications.
+
+    Returns (result, k', streak', widen_count, narrow_count, unresolved).
+    Counts are per-lane int32 deltas (sum for the scalar counters).
+    """
+    k = jnp.asarray(k, jnp.int32)
+    streak = jnp.asarray(streak, jnp.int32)
+
+    # Static unroll over all FX+1 candidate splits.
+    results, widens, reds = [], [], []
+    for s in range(cfg.fx + 1):
+        r, w, red = r2f2_mul_at_split(a, b, cfg, s)
+        results.append(r)
+        widens.append(w)
+        reds.append(red)
+    res_stack = jnp.stack(results)  # [FX+1, ...]
+    widen_stack = jnp.stack(widens)
+    red_stack = jnp.stack(reds)
+
+    # chosen = smallest s ≥ k with no widen event; else FX.
+    chosen = jnp.full_like(k, cfg.fx)
+    for s in range(cfg.fx, -1, -1):
+        ok = (jnp.int32(s) >= k) & ~widen_stack[s]
+        chosen = jnp.where(ok, jnp.int32(s), chosen)
+    chosen = jnp.maximum(chosen, k)
+
+    # Signed-zero-safe select (a one-hot sum would turn −0 into +0).
+    res = jnp.take_along_axis(
+        jnp.moveaxis(res_stack, 0, -1), chosen[..., None], axis=-1
+    )[..., 0]
+    widen_at_chosen = jnp.take_along_axis(
+        jnp.moveaxis(widen_stack, 0, -1), chosen[..., None], axis=-1
+    )[..., 0]
+    red_at_chosen = jnp.take_along_axis(
+        jnp.moveaxis(red_stack, 0, -1), chosen[..., None], axis=-1
+    )[..., 0]
+
+    widen_count = (chosen - k).astype(jnp.int32)
+    retried = widen_count > 0
+    unresolved = widen_at_chosen.astype(jnp.int32)  # still failing at FX
+
+    # Redundancy streak (only when no retry happened this mul).
+    red_ok = red_at_chosen & ~retried & (chosen > 0)
+    new_streak = jnp.where(retried | ~red_at_chosen, 0, streak + 1)
+    narrow = red_ok & (new_streak >= STREAK_THRESHOLD)
+    k_out = jnp.where(narrow, chosen - 1, chosen).astype(jnp.int32)
+    new_streak = jnp.where(narrow, 0, new_streak).astype(jnp.int32)
+
+    return res, k_out, new_streak, widen_count, narrow.astype(jnp.int32), unresolved

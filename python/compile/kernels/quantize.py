@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernels for fixed-format quantization and multiplication
+(the paper's standard-precision baselines: E5M10 etc.)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats
+
+BLOCK = 256
+
+
+def quantize_pallas(x, e_w: int, m_w: int):
+    """Round every element to the nearest ``E{e_w}M{m_w}`` value."""
+    n = x.shape[0]
+    assert n % BLOCK == 0
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = formats.quantize(x_ref[...], e_w, m_w)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def fixed_mul_pallas(a, b, e_w: int, m_w: int):
+    """Elementwise a×b computed entirely in ``E{e_w}M{m_w}`` (single
+    rounding), with overflow saturation / underflow flush."""
+    n = a.shape[0]
+    assert n % BLOCK == 0
+
+    def kernel(a_ref, b_ref, o_ref):
+        res, _, _ = formats.fixed_mul(a_ref[...], b_ref[...], e_w, m_w)
+        o_ref[...] = res
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))] * 2,
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b)

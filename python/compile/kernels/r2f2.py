@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernels: the R2F2 multiplier as a TPU-shaped tile kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's bit-serial
+FPGA datapath becomes a **vectorized integer-ALU kernel** — one R2F2 unit
+per SIMD lane, tiles staged HBM→VMEM by ``BlockSpec``. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot run Mosaic custom-calls, and the
+lowered HLO is what the rust runtime loads.
+
+All kernels are shape-polymorphic over 1-D arrays padded to the block size.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats
+from compile.formats import R2f2Config
+
+#: Elementwise tile size — 256 f32 lanes ≈ 1 KiB/operand in VMEM; with the
+#: FX+1 candidate evaluations live, the working set stays ≪ 1 MiB.
+BLOCK = 256
+
+
+def _adaptive_kernel(cfg: R2f2Config):
+    def kernel(a_ref, b_ref, k_ref, streak_ref, out_ref, k_out_ref, streak_out_ref,
+               widen_ref, narrow_ref, unresolved_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        k = k_ref[...]
+        streak = streak_ref[...]
+        res, k2, s2, widen, narrow, unresolved = formats.r2f2_adaptive_mul(
+            a, b, k, streak, cfg
+        )
+        out_ref[...] = res
+        k_out_ref[...] = k2
+        streak_out_ref[...] = s2
+        widen_ref[...] = widen
+        narrow_ref[...] = narrow
+        unresolved_ref[...] = unresolved
+
+    return kernel
+
+
+def r2f2_mul_pallas(a, b, k, streak, cfg: R2f2Config = formats.C16_393):
+    """Adaptive R2F2 multiply over 1-D arrays (length divisible by BLOCK).
+
+    Returns (result, k', streak', widen_delta, narrow_delta, unresolved) —
+    all per-lane, matching ``formats.r2f2_adaptive_mul`` bit-for-bit.
+    """
+    n = a.shape[0]
+    assert n % BLOCK == 0, f"length {n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    spec_f = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    spec_i = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _adaptive_kernel(cfg),
+        grid=grid,
+        in_specs=[spec_f, spec_f, spec_i, spec_i],
+        out_specs=[spec_f, spec_i, spec_i, spec_i, spec_i, spec_i],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(a, b, k, streak)
+
+
+def _fixed_split_kernel(cfg: R2f2Config, k: int):
+    def kernel(a_ref, b_ref, out_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        res, _, _ = formats.r2f2_mul_at_split(a, b, cfg, k)
+        out_ref[...] = res
+
+    return kernel
+
+
+def r2f2_mul_fixed_split_pallas(a, b, cfg: R2f2Config, k: int):
+    """R2F2 multiply pinned at split ``k`` (no adjustment) — the variant the
+    cross-layer bit-exactness artifact uses, since it is stateless."""
+    n = a.shape[0]
+    assert n % BLOCK == 0
+    return pl.pallas_call(
+        _fixed_split_kernel(cfg, k),
+        grid=(n // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))] * 2,
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b)

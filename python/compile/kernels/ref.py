@@ -1,0 +1,188 @@
+"""Independent correctness oracle for the R2F2 numerics.
+
+This is a *separate implementation path* from ``compile.formats``: scalar
+numpy/python-int arithmetic following DESIGN.md §3 step by step, written
+for clarity rather than speed. The pytest suite checks the vectorized jnp
+math and the Pallas kernels against this oracle, and the rust side checks
+its scalar implementation against the AOT artifacts — closing the
+three-way loop rust ↔ HLO(pallas) ↔ oracle.
+
+Only used by tests; never lowered or shipped.
+"""
+
+import math
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+STREAK_THRESHOLD = 32
+REDUNDANCY_WINDOW = 2
+
+
+class Packed(NamedTuple):
+    sign: int
+    exp: int  # biased; 0 == zero
+    frac: int
+
+
+def _f32_parts(x: float) -> Tuple[int, int, int]:
+    bits = int(np.float32(x).view(np.uint32))
+    return bits >> 31, (bits >> 23) & 0xFF, bits & 0x7FFFFF
+
+
+def encode_ref(x: float, e_w: int, m_w: int) -> Tuple[Packed, bool, bool]:
+    """f32 value → packed ExMy, returning (packed, overflow, underflow)."""
+    sign, e32, f32 = _f32_parts(x)
+    if e32 == 255:
+        if f32 != 0:  # NaN → +0
+            return Packed(0, 0, 0), False, False
+        return _max_finite(sign, e_w, m_w), True, False
+    if e32 == 0:  # zero or f32 subnormal: flush
+        return Packed(sign, 0, 0), False, f32 != 0
+
+    # RNE of the 23-bit fraction to m_w bits.
+    shift = 23 - m_w
+    kept, lost = f32 >> shift, f32 & ((1 << shift) - 1)
+    half = 1 << (shift - 1)
+    if lost > half or (lost == half and kept & 1):
+        kept += 1
+    carry = kept >> m_w
+    frac = kept & ((1 << m_w) - 1)
+
+    bias = (1 << (e_w - 1)) - 1
+    eb = e32 - 127 + carry + bias
+    if eb <= 0:
+        return Packed(sign, 0, 0), False, True
+    if eb > (1 << e_w) - 2:
+        return _max_finite(sign, e_w, m_w), True, False
+    return Packed(sign, eb, frac), False, False
+
+
+def _max_finite(sign: int, e_w: int, m_w: int) -> Packed:
+    return Packed(sign, (1 << e_w) - 2, (1 << m_w) - 1)
+
+
+def decode_ref(p: Packed, e_w: int, m_w: int) -> float:
+    if p.exp == 0:
+        return -0.0 if p.sign else 0.0
+    bias = (1 << (e_w - 1)) - 1
+    v = (1.0 + p.frac / (1 << m_w)) * math.ldexp(1.0, p.exp - bias)
+    return -v if p.sign else v
+
+
+def mul_ref(
+    a: Packed, b: Packed, e_w: int, m_w: int, trunc: int
+) -> Tuple[Packed, bool, bool]:
+    """Packed multiply with `trunc` low product bits dropped (exact ints)."""
+    sign = a.sign ^ b.sign
+    if a.exp == 0 or b.exp == 0:
+        return Packed(sign, 0, 0), False, False
+    p = ((1 << m_w) | a.frac) * ((1 << m_w) | b.frac)
+    if trunc:
+        p &= ~((1 << trunc) - 1)
+    hi = (p >> (2 * m_w + 1)) & 1
+    shift = m_w + hi
+    kept, lost = p >> shift, p & ((1 << shift) - 1)
+    half = 1 << (shift - 1)
+    if lost > half or (lost == half and kept & 1):
+        kept += 1
+    exp_inc = hi
+    if kept >> (m_w + 1):
+        kept >>= 1
+        exp_inc += 1
+    frac = kept & ((1 << m_w) - 1)
+    e = a.exp + b.exp - (1 << (e_w - 1)) + 1 + exp_inc
+    if e <= 0:
+        return Packed(sign, 0, 0), False, True
+    if e > (1 << e_w) - 2:
+        return _max_finite(sign, e_w, m_w), True, False
+    return Packed(sign, e, frac), False, False
+
+
+def quantize_ref(x: float, e_w: int, m_w: int) -> float:
+    p, _, _ = encode_ref(x, e_w, m_w)
+    return decode_ref(p, e_w, m_w)
+
+
+def fixed_mul_ref(a: float, b: float, e_w: int, m_w: int) -> float:
+    pa, _, _ = encode_ref(a, e_w, m_w)
+    pb, _, _ = encode_ref(b, e_w, m_w)
+    pc, _, _ = mul_ref(pa, pb, e_w, m_w, 0)
+    return decode_ref(pc, e_w, m_w)
+
+
+def is_redundant_ref(exp: int, e_w: int, window: int = REDUNDANCY_WINDOW) -> bool:
+    if exp == 0:
+        return False
+    msb = (exp >> (e_w - 1)) & 1
+    return all(((exp >> (e_w - 1 - i)) & 1) != msb for i in range(1, window + 1))
+
+
+def trunc_bits_ref(eb: int, mb: int, fx: int, k: int) -> int:
+    f = fx - k
+    return max(0, 2 * f - fx)
+
+
+class R2f2UnitRef:
+    """Scalar reference of the stateful multiplier (rust R2f2Multiplier)."""
+
+    def __init__(self, eb: int, mb: int, fx: int, k: int | None = None):
+        self.eb, self.mb, self.fx = eb, mb, fx
+        self.k = min(max(5 - eb, 0), fx) if k is None else k
+        self.streak = 0
+        self.widen_count = 0
+        self.narrow_count = 0
+        self.unresolved = 0
+
+    def _widths(self, k: int) -> Tuple[int, int]:
+        return self.eb + k, self.mb + (self.fx - k)
+
+    def mul(self, a: float, b: float) -> float:
+        retries = 0
+        while True:
+            e_w, m_w = self._widths(self.k)
+            pa, oa, _ = encode_ref(a, e_w, m_w)
+            pb, ob, _ = encode_ref(b, e_w, m_w)
+            pc, om, um = mul_ref(
+                pa, pb, e_w, m_w, trunc_bits_ref(self.eb, self.mb, self.fx, self.k)
+            )
+            if oa or ob or om or um:
+                self.streak = 0
+                if self.k < self.fx:
+                    self.k += 1
+                    self.widen_count += 1
+                    retries += 1
+                    continue
+                self.unresolved += 1
+                return decode_ref(pc, e_w, m_w)
+            if retries:
+                return decode_ref(pc, e_w, m_w)
+            if (
+                self.k > 0
+                and e_w >= REDUNDANCY_WINDOW + 2
+                and is_redundant_ref(pa.exp, e_w)
+                and is_redundant_ref(pb.exp, e_w)
+                and is_redundant_ref(pc.exp, e_w)
+            ):
+                self.streak += 1
+                if self.streak >= STREAK_THRESHOLD:
+                    self.streak = 0
+                    self.k -= 1
+                    self.narrow_count += 1
+            else:
+                self.streak = 0
+            return decode_ref(pc, e_w, m_w)
+
+
+def heat_step_ref(u: np.ndarray, r: float, mul) -> np.ndarray:
+    """One explicit heat step with multiplications delegated to ``mul``
+    (scalar callable) — oracle for the stencil kernels."""
+    u = np.asarray(u, np.float64)
+    out = u.copy()
+    two_r = np.float64(np.float32(2.0 * np.float32(r)))
+    for i in range(1, len(u) - 1):
+        left = mul(r, u[i - 1])
+        mid = mul(two_r, u[i])
+        right = mul(r, u[i + 1])
+        out[i] = np.float32(u[i] + np.float32(np.float32(left - mid) + right))
+    return out

@@ -1,0 +1,145 @@
+"""Layer-1 Pallas stencil kernel: one explicit heat-equation step with every
+multiplication routed through the R2F2 (or fixed-format) emulation, fused
+decode→stencil→encode in a single VMEM pass.
+
+The whole field lives in one block: the flagship sizes (≤ 4096 nodes) are a
+few KiB — far below VMEM — so no halo exchange is needed, and the HBM↔VMEM
+schedule is one load + one store per step, which is the roofline-optimal
+shape for a bandwidth-bound stencil.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats
+from compile.formats import R2f2Config
+
+
+def _shift_left(u):
+    """u[i+1] with the last element replicated (boundary unused)."""
+    return jnp.concatenate([u[1:], u[-1:]])
+
+
+def _shift_right(u):
+    """u[i−1] with the first element replicated (boundary unused)."""
+    return jnp.concatenate([u[:1], u[:-1]])
+
+
+def _interior_mask(n):
+    idx = jnp.arange(n)
+    return (idx > 0) & (idx < n - 1)
+
+
+def heat_step_r2f2_kernel(cfg: R2f2Config):
+    """Kernel body: three sequential adaptive multiplications per lane
+    (r·u⁻, 2r·u, r·u⁺) threading the per-lane unit state between them —
+    the SIMD analogue of one hardware multiplier seeing the stream."""
+
+    def kernel(u_ref, r_ref, k_ref, streak_ref,
+               u_out_ref, k_out_ref, streak_out_ref, widen_ref, narrow_ref):
+        u = u_ref[...]
+        r = r_ref[0]
+        k = k_ref[...]
+        streak = streak_ref[...]
+        two_r = jnp.float32(2.0) * r
+
+        um = _shift_right(u)
+        up = _shift_left(u)
+        rb = jnp.broadcast_to(r, u.shape)
+        tb = jnp.broadcast_to(two_r, u.shape)
+
+        left, k, streak, w1, n1, _ = formats.r2f2_adaptive_mul(rb, um, k, streak, cfg)
+        mid, k, streak, w2, n2, _ = formats.r2f2_adaptive_mul(tb, u, k, streak, cfg)
+        right, k, streak, w3, n3, _ = formats.r2f2_adaptive_mul(rb, up, k, streak, cfg)
+
+        du = (left - mid) + right
+        unew = u + du
+        mask = _interior_mask(u.shape[0])
+        u_out_ref[...] = jnp.where(mask, unew, u)
+        k_out_ref[...] = k
+        streak_out_ref[...] = streak
+        widen_ref[...] = w1 + w2 + w3
+        narrow_ref[...] = n1 + n2 + n3
+
+    return kernel
+
+
+def heat_step_r2f2_pallas(u, r, k, streak, cfg: R2f2Config = formats.C16_393):
+    """One heat step with R2F2 multiplications.
+
+    Args: ``u`` f32[n], ``r`` f32[1] (diffusion number), per-lane unit state
+    ``k``/``streak`` i32[n]. Returns (u', k', streak', widen, narrow).
+    """
+    n = u.shape[0]
+    return pl.pallas_call(
+        heat_step_r2f2_kernel(cfg),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(u, r, k, streak)
+
+
+def heat_step_fixed_pallas(u, r, e_w: int, m_w: int):
+    """One heat step with fixed-format multiplications (E5M10 baseline)."""
+    n = u.shape[0]
+
+    def kernel(u_ref, r_ref, u_out_ref):
+        u_ = u_ref[...]
+        r_ = r_ref[0]
+        two_r = jnp.float32(2.0) * r_
+        rb = jnp.broadcast_to(r_, u_.shape)
+        tb = jnp.broadcast_to(two_r, u_.shape)
+        left, _, _ = formats.fixed_mul(rb, _shift_right(u_), e_w, m_w)
+        mid, _, _ = formats.fixed_mul(tb, u_, e_w, m_w)
+        right, _, _ = formats.fixed_mul(rb, _shift_left(u_), e_w, m_w)
+        unew = u_ + ((left - mid) + right)
+        u_out_ref[...] = jnp.where(_interior_mask(n), unew, u_)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,)), pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(u, r)
+
+
+def heat_step_f32_pallas(u, r):
+    """Plain f32 heat step (the 32-bit reference the paper compares to)."""
+    n = u.shape[0]
+
+    def kernel(u_ref, r_ref, u_out_ref):
+        u_ = u_ref[...]
+        r_ = r_ref[0]
+        du = r_ * _shift_right(u_) - (jnp.float32(2.0) * r_) * u_ + r_ * _shift_left(u_)
+        u_out_ref[...] = jnp.where(_interior_mask(n), u_ + du, u_)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,)), pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(u, r)

@@ -1,0 +1,180 @@
+"""Layer-2 JAX models: the PDE step functions that the AOT pipeline lowers
+to HLO for the rust runtime. Python never runs at simulation time — rust
+owns the step loop and feeds state buffers back into the compiled step.
+
+Heat steps call the Layer-1 Pallas kernels; the shallow-water step uses the
+same bit-exact emulation math at the jnp level (its irregular half-step
+grids don't tile cleanly, and the flux quantization is 3 elementwise muls —
+the fused-stencil story lives in the heat kernel).
+"""
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from compile import formats
+from compile.formats import R2f2Config
+from compile.kernels import stencil
+
+
+# --------------------------------------------------------------------------
+# Heat equation (Layer-2 wrappers over the Layer-1 kernels)
+# --------------------------------------------------------------------------
+
+def heat_init_sin(n: int, amplitude: float = 500.0, cycles: float = 2.0):
+    """The paper's Fig. 1(a)/2 initial condition."""
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    return (amplitude * jnp.sin(cycles * jnp.pi * x)).astype(jnp.float32)
+
+
+def heat_init_exp(n: int, rate: float = 10.0):
+    """The paper's Fig. 1(c) initial condition."""
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    return (jnp.exp(rate * x) - 1.0).astype(jnp.float32)
+
+
+def heat_unit_state(n: int, cfg: R2f2Config):
+    """Fresh per-lane R2F2 unit state (initial split mimics half's range)."""
+    k0 = min(max(5 - cfg.eb, 0), cfg.fx)
+    return jnp.full((n,), k0, jnp.int32), jnp.zeros((n,), jnp.int32)
+
+
+def heat_step_r2f2(u, r, k, streak, cfg: R2f2Config = formats.C16_393):
+    """One step, R2F2 multiplications (per-lane adaptive units)."""
+    return stencil.heat_step_r2f2_pallas(u, r, k, streak, cfg)
+
+
+def heat_step_fixed(u, r, e_w: int = 5, m_w: int = 10):
+    """One step, fixed-format multiplications (default E5M10)."""
+    return stencil.heat_step_fixed_pallas(u, r, e_w, m_w)
+
+
+def heat_step_f32(u, r):
+    """One step, plain f32 — the 32-bit reference."""
+    return stencil.heat_step_f32_pallas(u, r)
+
+
+# --------------------------------------------------------------------------
+# Shallow-water equations (Richtmyer two-step Lax–Wendroff, jnp)
+# --------------------------------------------------------------------------
+
+class SweConsts(NamedTuple):
+    g: float
+    dt: float
+    dx: float
+
+
+def swe_drop_init(n: int, base_depth: float = 150.0, amplitude: float = 6.0,
+                  width_frac: float = 0.15, dx: float = 2000.0):
+    """Padded (n+2)² initial fields matching rust `SweInit::sample`."""
+    side = n * dx
+    w = width_frac * side
+    ij = (jnp.arange(n, dtype=jnp.float32) + 0.5) / n * side
+    x = ij[:, None]
+    y = ij[None, :]
+    d2 = ((x - 0.5 * side) ** 2 + (y - 0.5 * side) ** 2) / (w * w)
+    h_int = base_depth + amplitude * jnp.exp(-d2)
+    h = jnp.full((n + 2, n + 2), base_depth, jnp.float32)
+    # rust fills h[j*n+i] at grid (i+1, j+1): transpose to match.
+    h = h.at[1:-1, 1:-1].set(h_int.T.astype(jnp.float32))
+    z = jnp.zeros((n + 2, n + 2), jnp.float32)
+    return h, z, z
+
+
+def swe_unit_state(n: int, cfg: R2f2Config):
+    """Per-lane unit state for the (n+1)×n flux lanes."""
+    k0 = min(max(5 - cfg.eb, 0), cfg.fx)
+    lanes = (n + 1) * n
+    return jnp.full((lanes,), k0, jnp.int32), jnp.zeros((lanes,), jnp.int32)
+
+
+def _reflect(h, u, v):
+    """Reflective walls, same order as rust `reflect` (rows then columns)."""
+    h = h.at[0, :].set(h[1, :]).at[-1, :].set(h[-2, :])
+    u = u.at[0, :].set(-u[1, :]).at[-1, :].set(-u[-2, :])
+    v = v.at[0, :].set(v[1, :]).at[-1, :].set(v[-2, :])
+    h = h.at[:, 0].set(h[:, 1]).at[:, -1].set(h[:, -2])
+    u = u.at[:, 0].set(u[:, 1]).at[:, -1].set(u[:, -2])
+    v = v.at[:, 0].set(-v[:, 1]).at[:, -1].set(-v[:, -2])
+    return h, u, v
+
+
+def _f2_plain(g2, q1, q3):
+    return q1 * q1 / q3 + g2 * (q3 * q3)
+
+
+def swe_step(h, u, v, k, streak, consts: SweConsts,
+             cfg: R2f2Config | None = formats.C16_384,
+             fixed: tuple[int, int] | None = None):
+    """One Lax–Wendroff step on padded (n+2)² fields.
+
+    The substituted sub-equation (the paper's `Ux_mx = q1²/q3 + 0.5g·q3²`,
+    §5.3) — the full-step x-momentum flux from midpoint values — runs
+    through the R2F2 units (``cfg``) or a fixed format (``fixed=(e_w,m_w)``)
+    or plain f32 (both None). Everything else is f32, like the paper keeps
+    the other 23 sub-equations in double.
+
+    Returns (h', u', v', k', streak', widen_total, narrow_total).
+    """
+    g2 = jnp.float32(0.5 * consts.g)
+    ddx = jnp.float32(consts.dt / consts.dx)
+    hddx = jnp.float32(0.5) * ddx
+
+    h, u, v = _reflect(h, u, v)
+
+    # x-direction half step: shapes (n+1, n).
+    ha, hb = h[1:, 1:-1], h[:-1, 1:-1]
+    ua, ub = u[1:, 1:-1], u[:-1, 1:-1]
+    va, vb = v[1:, 1:-1], v[:-1, 1:-1]
+    hx = 0.5 * (ha + hb) - hddx * (ua - ub)
+    ux = 0.5 * (ua + ub) - hddx * (_f2_plain(g2, ua, ha) - _f2_plain(g2, ub, hb))
+    vx = 0.5 * (va + vb) - hddx * (ua * va / ha - ub * vb / hb)
+
+    # y-direction half step: shapes (n, n+1).
+    ha, hb = h[1:-1, 1:], h[1:-1, :-1]
+    ua, ub = u[1:-1, 1:], u[1:-1, :-1]
+    va, vb = v[1:-1, 1:], v[1:-1, :-1]
+    hy = 0.5 * (ha + hb) - hddx * (va - vb)
+    uy = 0.5 * (ua + ub) - hddx * (va * ua / ha - vb * ub / hb)
+    vy = 0.5 * (va + vb) - hddx * (_f2_plain(g2, va, ha) - _f2_plain(g2, vb, hb))
+
+    # The quantized sub-equation: F2x over the midpoint (…_mx) values.
+    q1 = ux.reshape(-1)
+    q3 = hx.reshape(-1)
+    widen = jnp.int32(0)
+    narrow = jnp.int32(0)
+    if cfg is not None:
+        g2b = jnp.broadcast_to(g2, q1.shape)
+        q1sq, k, streak, w1, n1, _ = formats.r2f2_adaptive_mul(q1, q1, k, streak, cfg)
+        q3sq, k, streak, w2, n2, _ = formats.r2f2_adaptive_mul(q3, q3, k, streak, cfg)
+        gterm, k, streak, w3, n3, _ = formats.r2f2_adaptive_mul(g2b, q3sq, k, streak, cfg)
+        f2x = (q1sq / q3 + gterm).reshape(ux.shape)
+        widen = (w1 + w2 + w3).sum()
+        narrow = (n1 + n2 + n3).sum()
+    elif fixed is not None:
+        e_w, m_w = fixed
+        q1sq, _, _ = formats.fixed_mul(q1, q1, e_w, m_w)
+        q3sq, _, _ = formats.fixed_mul(q3, q3, e_w, m_w)
+        g2b = jnp.broadcast_to(g2, q1.shape)
+        gterm, _, _ = formats.fixed_mul(g2b, q3sq, e_w, m_w)
+        f2x = (q1sq / q3 + gterm).reshape(ux.shape)
+    else:
+        f2x = _f2_plain(g2, ux, hx)
+
+    # Full step on the interior.
+    h_new = h[1:-1, 1:-1] - ddx * (ux[1:, :] - ux[:-1, :]) - ddx * (vy[:, 1:] - vy[:, :-1])
+    u_new = (
+        u[1:-1, 1:-1]
+        - ddx * (f2x[1:, :] - f2x[:-1, :])
+        - ddx * (vy[:, 1:] * uy[:, 1:] / hy[:, 1:] - vy[:, :-1] * uy[:, :-1] / hy[:, :-1])
+    )
+    v_new = (
+        v[1:-1, 1:-1]
+        - ddx * (ux[1:, :] * vx[1:, :] / hx[1:, :] - ux[:-1, :] * vx[:-1, :] / hx[:-1, :])
+        - ddx * (_f2_plain(g2, vy[:, 1:], hy[:, 1:]) - _f2_plain(g2, vy[:, :-1], hy[:, :-1]))
+    )
+
+    h = h.at[1:-1, 1:-1].set(h_new)
+    u = u.at[1:-1, 1:-1].set(u_new)
+    v = v.at[1:-1, 1:-1].set(v_new)
+    return h, u, v, k, streak, widen, narrow

@@ -1,0 +1,121 @@
+"""Vectorized jnp emulation (compile.formats) vs the independent scalar
+oracle (compile.kernels.ref) — hypothesis-driven, bit-exact."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import formats
+from compile.kernels import ref
+
+FORMATS = [(5, 10), (5, 9), (5, 8), (6, 9), (4, 11), (3, 12), (8, 7), (2, 13)]
+CONFIGS = [formats.C16_393, formats.C16_384, formats.C15_383, formats.C14_373]
+
+
+def bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+finite_f32 = st.floats(
+    min_value=np.float32(-1e30),
+    max_value=np.float32(1e30),
+    allow_nan=False,
+    allow_infinity=False,
+    width=32,
+)
+
+
+@settings(max_examples=300, deadline=None)
+@given(finite_f32, st.sampled_from(FORMATS))
+def test_quantize_matches_oracle(x, fmt):
+    e_w, m_w = fmt
+    got = formats.quantize(jnp.asarray([x], jnp.float32), e_w, m_w)
+    want = ref.quantize_ref(float(np.float32(x)), e_w, m_w)
+    assert bits(got)[0] == bits([want])[0], (x, fmt, float(got[0]), want)
+
+
+@settings(max_examples=300, deadline=None)
+@given(finite_f32, finite_f32, st.sampled_from(FORMATS))
+def test_fixed_mul_matches_oracle(a, b, fmt):
+    e_w, m_w = fmt
+    got, _, _ = formats.fixed_mul(
+        jnp.asarray([a], jnp.float32), jnp.asarray([b], jnp.float32), e_w, m_w
+    )
+    want = ref.fixed_mul_ref(float(np.float32(a)), float(np.float32(b)), e_w, m_w)
+    assert bits(got)[0] == bits([want])[0], (a, b, fmt)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    finite_f32,
+    finite_f32,
+    st.sampled_from(CONFIGS),
+    st.integers(min_value=0, max_value=3),
+)
+def test_adaptive_mul_matches_oracle_unit(a, b, cfg, k0):
+    k0 = min(k0, cfg.fx)
+    res, k2, s2, w, nr, un = formats.r2f2_adaptive_mul(
+        jnp.asarray([a], jnp.float32),
+        jnp.asarray([b], jnp.float32),
+        jnp.asarray([k0], jnp.int32),
+        jnp.asarray([0], jnp.int32),
+        cfg,
+    )
+    unit = ref.R2f2UnitRef(cfg.eb, cfg.mb, cfg.fx, k=k0)
+    want = unit.mul(float(np.float32(a)), float(np.float32(b)))
+    assert bits(res)[0] == bits([want])[0], (a, b, cfg, k0)
+    assert int(k2[0]) == unit.k
+    assert int(w[0]) == unit.widen_count
+    assert int(nr[0]) == unit.narrow_count
+    assert int(un[0]) == unit.unresolved
+
+
+def test_streak_state_threads_across_calls():
+    """Narrowing needs STREAK_THRESHOLD consecutive redundant muls carried
+    through the state arrays."""
+    cfg = formats.C16_393
+    a = jnp.asarray([1.1], jnp.float32)
+    b = jnp.asarray([0.9], jnp.float32)
+    k = jnp.asarray([2], jnp.int32)
+    s = jnp.asarray([0], jnp.int32)
+    narrowed_at = None
+    for i in range(formats.STREAK_THRESHOLD + 5):
+        _, k, s, _, nr, _ = formats.r2f2_adaptive_mul(a, b, k, s, cfg)
+        if int(nr[0]) and narrowed_at is None:
+            narrowed_at = i
+    assert narrowed_at == formats.STREAK_THRESHOLD - 1
+    assert int(k[0]) == 1
+
+
+def test_special_values():
+    e_w, m_w = 5, 10
+    x = jnp.asarray([np.inf, -np.inf, np.nan, 0.0, -0.0, 65504.0, 65520.0], jnp.float32)
+    q = np.asarray(formats.quantize(x, e_w, m_w))
+    assert q[0] == 65504.0 and q[1] == -65504.0  # inf saturates
+    assert q[2] == 0.0  # nan → +0
+    assert bits(q[3:5]).tolist() == bits([0.0, -0.0]).tolist()
+    assert q[5] == 65504.0
+    assert q[6] == 65504.0  # rounds to 2^16 → saturates
+
+
+def test_truncation_bits_match_rust_table():
+    cfg = formats.C16_393
+    assert [formats.trunc_bits(cfg, k) for k in range(4)] == [3, 1, 0, 0]
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(finite_f32, min_size=4, max_size=64), st.sampled_from(CONFIGS))
+def test_vectorized_equals_per_element(vals, cfg):
+    """Vectorization must not couple lanes."""
+    n = len(vals) // 2 * 2
+    if n == 0:
+        return
+    a = jnp.asarray(vals[: n // 2], jnp.float32)
+    b = jnp.asarray(vals[n // 2 : n], jnp.float32)
+    k = jnp.full((n // 2,), 2, jnp.int32)
+    s = jnp.zeros((n // 2,), jnp.int32)
+    batch = formats.r2f2_adaptive_mul(a, b, k, s, cfg)
+    for i in range(n // 2):
+        single = formats.r2f2_adaptive_mul(a[i : i + 1], b[i : i + 1], k[i : i + 1], s[i : i + 1], cfg)
+        for bx, sx in zip(batch, single):
+            assert bits(bx[i : i + 1])[0] == bits(sx)[0] if bx.dtype == jnp.float32 else int(bx[i]) == int(sx[0])

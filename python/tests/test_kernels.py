@@ -1,0 +1,114 @@
+"""Pallas kernels (interpret=True) vs the pure-jnp math and the scalar
+oracle — the Layer-1 correctness gate."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import formats
+from compile.kernels import quantize as qk
+from compile.kernels import r2f2 as rk
+from compile.kernels import ref, stencil
+
+
+def bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def log_uniform(rng, lo, hi, n):
+    return np.exp(rng.uniform(np.log(lo), np.log(hi), n)).astype(np.float32)
+
+
+def test_quantize_kernel_matches_jnp_and_oracle():
+    rng = np.random.default_rng(0)
+    x = log_uniform(rng, 1e-8, 1e8, 1024) * rng.choice([-1.0, 1.0], 1024).astype(np.float32)
+    got = qk.quantize_pallas(jnp.asarray(x), 5, 10)
+    want = formats.quantize(jnp.asarray(x), 5, 10)
+    assert np.array_equal(bits(got), bits(want))
+    for i in range(0, 1024, 97):
+        assert bits(got)[i] == bits([ref.quantize_ref(float(x[i]), 5, 10)])[0]
+
+
+def test_fixed_mul_kernel_matches_jnp():
+    rng = np.random.default_rng(1)
+    a = log_uniform(rng, 1e-6, 1e6, 512)
+    b = log_uniform(rng, 1e-6, 1e6, 512)
+    got = qk.fixed_mul_pallas(jnp.asarray(a), jnp.asarray(b), 5, 10)
+    want, _, _ = formats.fixed_mul(jnp.asarray(a), jnp.asarray(b), 5, 10)
+    assert np.array_equal(bits(got), bits(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=3), st.integers(min_value=0, max_value=2**32 - 1))
+def test_fixed_split_kernel_matches_jnp(k, seed):
+    cfg = formats.C16_393
+    rng = np.random.default_rng(seed)
+    a = log_uniform(rng, 1e-4, 1e4, 256)
+    b = log_uniform(rng, 1e-4, 1e4, 256)
+    got = rk.r2f2_mul_fixed_split_pallas(jnp.asarray(a), jnp.asarray(b), cfg, k)
+    want, _, _ = formats.r2f2_mul_at_split(jnp.asarray(a), jnp.asarray(b), cfg, k)
+    assert np.array_equal(bits(got), bits(want))
+
+
+def test_adaptive_kernel_matches_jnp_multi_block():
+    """Grid > 1: block decomposition must not change any lane."""
+    cfg = formats.C16_393
+    rng = np.random.default_rng(3)
+    n = 1024  # 4 blocks of 256
+    a = log_uniform(rng, 1e-5, 1e5, n)
+    b = log_uniform(rng, 1e-5, 1e5, n)
+    k = rng.integers(0, cfg.fx + 1, n).astype(np.int32)
+    s = rng.integers(0, 31, n).astype(np.int32)
+    got = rk.r2f2_mul_pallas(jnp.asarray(a), jnp.asarray(b), jnp.asarray(k), jnp.asarray(s), cfg)
+    want = formats.r2f2_adaptive_mul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(k), jnp.asarray(s), cfg)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_heat_step_kernel_against_scalar_oracle():
+    """Full heat step with per-lane adaptive units vs a python loop of
+    per-lane R2f2UnitRef instances."""
+    cfg = formats.C16_393
+    n = 64
+    rng = np.random.default_rng(4)
+    u = (500.0 * np.sin(2 * np.pi * np.linspace(0, 1, n))).astype(np.float32)
+    r = np.float32(0.25)
+    k0 = np.full(n, 2, np.int32)
+    u1, k1, s1, w, nr = stencil.heat_step_r2f2_pallas(
+        jnp.asarray(u), jnp.asarray([r]), jnp.asarray(k0), jnp.zeros(n, jnp.int32), cfg
+    )
+    # Scalar oracle: lane i has its own unit doing (r·u⁻, 2r·u, r·u⁺).
+    two_r = np.float32(2.0) * r
+    for i in range(1, n - 1):
+        unit = ref.R2f2UnitRef(cfg.eb, cfg.mb, cfg.fx, k=2)
+        left = unit.mul(float(r), float(u[i - 1]))
+        mid = unit.mul(float(two_r), float(u[i]))
+        right = unit.mul(float(r), float(u[i + 1]))
+        du = np.float32(np.float32(np.float32(left) - np.float32(mid)) + np.float32(right))
+        want = np.float32(u[i] + du)
+        assert bits(np.asarray(u1))[i] == bits([want])[0], i
+        assert int(k1[i]) == unit.k
+    # Boundaries untouched (Dirichlet).
+    assert float(u1[0]) == float(u[0]) and float(u1[-1]) == float(u[-1])
+
+
+def test_heat_step_f32_kernel_is_plain_arithmetic():
+    n = 128
+    u = np.linspace(-1.0, 1.0, n).astype(np.float32)
+    r = np.float32(0.25)
+    got = np.asarray(stencil.heat_step_f32_pallas(jnp.asarray(u), jnp.asarray([r])))
+    want = u.copy()
+    for i in range(1, n - 1):
+        du = r * u[i - 1] - (np.float32(2.0) * r) * u[i] + r * u[i + 1]
+        want[i] = u[i] + np.float32(du)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_heat_step_fixed_kernel_underflow_behaviour():
+    """E5M10 products below 2^-14 flush to zero — the §3.1 failure seed."""
+    n = 64
+    u = np.full(n, 1e-4, np.float32)  # r·u = 2.5e-5 < 6.1e-5
+    r = np.float32(0.25)
+    got = np.asarray(stencil.heat_step_fixed_pallas(jnp.asarray(u), jnp.asarray([r]), 5, 10))
+    # All three products flush; du = 0; field frozen.
+    np.testing.assert_array_equal(got, u)

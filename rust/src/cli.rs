@@ -1,0 +1,197 @@
+//! Command-line argument parsing (the environment has no `clap`).
+//!
+//! Grammar: `r2f2 <subcommand> [--key value]... [--switch]... [positional]...`
+//! `--key=value` is accepted as a synonym for `--key value`. Boolean
+//! switches must be *declared* at parse time (like clap) so that
+//! `--verbose out.csv` doesn't swallow the positional as a value. Unknown
+//! keys are an error at [`Args::finish`] time so typos fail loudly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    switches: BTreeSet<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// Keys the program actually consumed (for unknown-option detection).
+    consumed: BTreeSet<String>,
+}
+
+/// Errors produced while reading options.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    MissingValue(String),
+    BadValue { key: String, value: String, expected: &'static str },
+    Unknown(Vec<String>),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::BadValue { key, value, expected } => {
+                write!(f, "option --{key}={value} is not a valid {expected}")
+            }
+            CliError::Unknown(keys) => write!(f, "unknown options: {}", keys.join(", ")),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse an iterator of tokens (excluding argv[0]). `known_switches`
+    /// lists the boolean flags; every other `--key` expects a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        known_switches: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&body) {
+                    out.switches.insert(body.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        _ => return Err(CliError::MissingValue(body.to_string())),
+                    }
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env(known_switches: &[&str]) -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1), known_switches)
+    }
+
+    /// Raw string option.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.opts.get(key).cloned()
+    }
+
+    /// String option with default.
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v,
+                expected: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Bare switch (`--verbose`).
+    pub fn switch(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    /// Fail if the user passed options the program never consumed.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !self.consumed.contains(*k))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    const SW: &[&str] = &["verbose", "dry-run", "quick"];
+
+    #[test]
+    fn command_options_switches_positionals() {
+        let mut a =
+            Args::parse(toks("run --app heat --steps=100 --verbose out.csv"), SW).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("app").as_deref(), Some("heat"));
+        assert_eq!(a.get_parse("steps", 0u32).unwrap(), 100);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(toks("run"), SW).unwrap();
+        assert_eq!(a.get_or("app", "heat"), "heat");
+        assert_eq!(a.get_parse("n", 64usize).unwrap(), 64);
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let mut a = Args::parse(toks("run --steps abc"), SW).unwrap();
+        let err = a.get_parse("steps", 0u32).unwrap_err();
+        assert!(matches!(err, CliError::BadValue { .. }));
+    }
+
+    #[test]
+    fn missing_value_reported() {
+        let err = Args::parse(toks("run --steps"), SW).unwrap_err();
+        assert_eq!(err, CliError::MissingValue("steps".into()));
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let mut a = Args::parse(toks("run --app heat --tpyo 3"), SW).unwrap();
+        let _ = a.get("app");
+        let err = a.finish().unwrap_err();
+        assert_eq!(err, CliError::Unknown(vec!["--tpyo".into()]));
+    }
+
+    #[test]
+    fn declared_switch_does_not_eat_positional() {
+        let mut a = Args::parse(toks("bench --quick table1"), SW).unwrap();
+        assert!(a.switch("quick"));
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn equals_form_allows_flag_like_values() {
+        let mut a = Args::parse(toks("run --backend=r2f2:<3,9,3> --dry-run"), SW).unwrap();
+        assert_eq!(a.get("backend").as_deref(), Some("r2f2:<3,9,3>"));
+        assert!(a.switch("dry-run"));
+    }
+}

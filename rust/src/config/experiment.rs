@@ -1,0 +1,261 @@
+//! Typed experiment configuration consumed by the CLI, the coordinator and
+//! the examples.
+
+use super::toml_mini::{Document, Value};
+use crate::pde::heat1d::HeatParams;
+use crate::pde::init::{HeatInit, SweInit};
+use crate::pde::swe2d::SweParams;
+use crate::pde::QuantMode;
+use crate::r2f2core::R2f2Config;
+use crate::softfloat::FpFormat;
+
+/// Which arithmetic unit a run uses — the parsed form of CLI/TOML strings
+/// like `f64`, `f32`, `fixed:E5M10`, `r2f2:<3,9,3>`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BackendSpec {
+    F64,
+    F32,
+    Fixed(FpFormat),
+    R2f2(R2f2Config),
+}
+
+impl BackendSpec {
+    /// Instantiate the arithmetic backend.
+    pub fn build(&self) -> Box<dyn crate::pde::Arith> {
+        match *self {
+            BackendSpec::F64 => Box::new(crate::pde::F64Arith),
+            BackendSpec::F32 => Box::new(crate::pde::F32Arith),
+            BackendSpec::Fixed(fmt) => Box::new(crate::pde::FixedArith::new(fmt)),
+            BackendSpec::R2f2(cfg) => Box::new(crate::pde::R2f2Arith::new(cfg)),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            BackendSpec::F64 => "f64".into(),
+            BackendSpec::F32 => "f32".into(),
+            BackendSpec::Fixed(fmt) => format!("fixed:{fmt}"),
+            BackendSpec::R2f2(cfg) => format!("r2f2:{cfg}"),
+        }
+    }
+}
+
+/// Parse a backend spec string.
+///
+/// Accepted: `f64` · `f32` · `fixed:E5M10` (any `E<x>M<y>`) ·
+/// `r2f2:<3,9,3>` (any `<EB,MB,FX>`).
+pub fn parse_backend(s: &str) -> Result<BackendSpec, String> {
+    match s {
+        "f64" => return Ok(BackendSpec::F64),
+        "f32" => return Ok(BackendSpec::F32),
+        _ => {}
+    }
+    if let Some(fmt) = s.strip_prefix("fixed:") {
+        return parse_exmy(fmt).map(BackendSpec::Fixed);
+    }
+    if let Some(cfg) = s.strip_prefix("r2f2:") {
+        return parse_r2f2(cfg).map(BackendSpec::R2f2);
+    }
+    Err(format!("unknown backend `{s}` (expected f64|f32|fixed:ExMy|r2f2:<EB,MB,FX>)"))
+}
+
+/// Parse `E<x>M<y>`.
+pub fn parse_exmy(s: &str) -> Result<FpFormat, String> {
+    let body = s.strip_prefix('E').ok_or_else(|| format!("`{s}`: expected ExMy"))?;
+    let (e, m) = body.split_once('M').ok_or_else(|| format!("`{s}`: expected ExMy"))?;
+    let e_w: u32 = e.parse().map_err(|_| format!("`{s}`: bad exponent width"))?;
+    let m_w: u32 = m.parse().map_err(|_| format!("`{s}`: bad mantissa width"))?;
+    if !(2..=11).contains(&e_w) || !(1..=52).contains(&m_w) {
+        return Err(format!("`{s}`: widths out of range"));
+    }
+    Ok(FpFormat::new(e_w, m_w))
+}
+
+/// Parse `<EB,MB,FX>`.
+pub fn parse_r2f2(s: &str) -> Result<R2f2Config, String> {
+    let body = s
+        .strip_prefix('<')
+        .and_then(|t| t.strip_suffix('>'))
+        .ok_or_else(|| format!("`{s}`: expected <EB,MB,FX>"))?;
+    let parts: Vec<&str> = body.split(',').map(str::trim).collect();
+    if parts.len() != 3 {
+        return Err(format!("`{s}`: expected three comma-separated fields"));
+    }
+    let nums: Result<Vec<u32>, _> = parts.iter().map(|p| p.parse::<u32>()).collect();
+    let nums = nums.map_err(|_| format!("`{s}`: non-numeric field"))?;
+    if !(2..=8).contains(&nums[0]) || !(1..=24).contains(&nums[1]) || !(1..=8).contains(&nums[2]) {
+        return Err(format!("`{s}`: field out of range"));
+    }
+    Ok(R2f2Config::new(nums[0], nums[1], nums[2]))
+}
+
+/// One simulation experiment, loadable from a TOML document.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub title: String,
+    /// `heat` or `swe`.
+    pub app: String,
+    pub backend: BackendSpec,
+    pub mode: QuantMode,
+    pub heat: HeatParams,
+    pub swe: SweParams,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> ExperimentConfig {
+        ExperimentConfig {
+            title: "experiment".into(),
+            app: "heat".into(),
+            backend: BackendSpec::R2f2(R2f2Config::C16_393),
+            mode: QuantMode::MulOnly,
+            heat: HeatParams::default(),
+            swe: SweParams::default(),
+        }
+    }
+}
+
+fn get<'a>(doc: &'a Document, section: &str, key: &str) -> Option<&'a Value> {
+    doc.get(section).and_then(|s| s.get(key))
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed TOML document; unspecified fields keep defaults.
+    pub fn from_document(doc: &Document) -> Result<ExperimentConfig, String> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = get(doc, "", "title").and_then(Value::as_str) {
+            cfg.title = v.to_string();
+        }
+        if let Some(v) = get(doc, "", "app").and_then(Value::as_str) {
+            if v != "heat" && v != "swe" {
+                return Err(format!("app must be heat|swe, got `{v}`"));
+            }
+            cfg.app = v.to_string();
+        }
+        if let Some(v) = get(doc, "", "backend").and_then(Value::as_str) {
+            cfg.backend = parse_backend(v)?;
+        }
+        if let Some(v) = get(doc, "", "mode").and_then(Value::as_str) {
+            cfg.mode = match v {
+                "mul-only" => QuantMode::MulOnly,
+                "full" => QuantMode::Full,
+                other => return Err(format!("mode must be mul-only|full, got `{other}`")),
+            };
+        }
+
+        if let Some(v) = get(doc, "heat", "n").and_then(Value::as_int) {
+            cfg.heat.n = v as usize;
+        }
+        if let Some(v) = get(doc, "heat", "steps").and_then(Value::as_int) {
+            cfg.heat.steps = v as usize;
+        }
+        if let Some(v) = get(doc, "heat", "dt").and_then(Value::as_float) {
+            cfg.heat.dt = v;
+        }
+        if let Some(v) = get(doc, "heat", "alpha").and_then(Value::as_float) {
+            cfg.heat.alpha = v;
+        }
+        if let Some(v) = get(doc, "heat", "init").and_then(Value::as_str) {
+            cfg.heat.init = match v {
+                "sin" => HeatInit::sin_default(),
+                "exp" => HeatInit::exp_default(),
+                other => return Err(format!("heat.init must be sin|exp, got `{other}`")),
+            };
+        }
+        if let Some(v) = get(doc, "heat", "snapshot_every").and_then(Value::as_int) {
+            cfg.heat.snapshot_every = v as usize;
+        }
+
+        if let Some(v) = get(doc, "swe", "n").and_then(Value::as_int) {
+            cfg.swe.n = v as usize;
+        }
+        if let Some(v) = get(doc, "swe", "steps").and_then(Value::as_int) {
+            cfg.swe.steps = v as usize;
+        }
+        if let Some(v) = get(doc, "swe", "dt").and_then(Value::as_float) {
+            cfg.swe.dt = v;
+        }
+        if let Some(v) = get(doc, "swe", "dx").and_then(Value::as_float) {
+            cfg.swe.dx = v;
+        }
+        if let Some(v) = get(doc, "swe", "base_depth").and_then(Value::as_float) {
+            cfg.swe.init = SweInit { base_depth: v, ..cfg.swe.init };
+        }
+        if let Some(v) = get(doc, "swe", "amplitude").and_then(Value::as_float) {
+            cfg.swe.init = SweInit { amplitude: v, ..cfg.swe.init };
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig, String> {
+        let doc = super::toml_mini::parse(text).map_err(|e| e.to_string())?;
+        Self::from_document(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_specs_roundtrip() {
+        for s in ["f64", "f32", "fixed:E5M10", "fixed:E6M9", "r2f2:<3,9,3>", "r2f2:<3,8,4>"] {
+            let b = parse_backend(s).unwrap();
+            assert_eq!(b.name(), s, "roundtrip {s}");
+        }
+    }
+
+    #[test]
+    fn backend_build_produces_working_arith() {
+        let mut be = parse_backend("r2f2:<3,9,3>").unwrap().build();
+        let v = be.mul(3.0, 4.0);
+        assert!((v - 12.0).abs() < 0.05);
+        let mut be = parse_backend("fixed:E5M10").unwrap().build();
+        assert_eq!(be.mul(1000.0, 1000.0), 65504.0);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(parse_backend("f16").is_err());
+        assert!(parse_backend("fixed:X5M10").is_err());
+        assert!(parse_backend("r2f2:<3,9>").is_err());
+        assert!(parse_backend("r2f2:<99,9,3>").is_err());
+    }
+
+    #[test]
+    fn config_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            title = "fig7a"
+            app = "heat"
+            backend = "r2f2:<3,9,3>"
+            mode = "mul-only"
+            [heat]
+            n = 101
+            steps = 200
+            dt = 2.5e-5
+            init = "sin"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.title, "fig7a");
+        assert_eq!(cfg.heat.n, 101);
+        assert_eq!(cfg.heat.steps, 200);
+        assert_eq!(cfg.backend.name(), "r2f2:<3,9,3>");
+        assert_eq!(cfg.mode, QuantMode::MulOnly);
+    }
+
+    #[test]
+    fn defaults_survive_empty_toml() {
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.app, "heat");
+        assert_eq!(cfg.heat.n, 501);
+    }
+
+    #[test]
+    fn invalid_fields_error() {
+        assert!(ExperimentConfig::from_toml("app = \"chess\"").is_err());
+        assert!(ExperimentConfig::from_toml("mode = \"sideways\"").is_err());
+        assert!(ExperimentConfig::from_toml("backend = \"r2f2:bogus\"").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment configuration: a TOML-subset parser (no `serde` in this
+//! environment) plus the typed experiment config the CLI and coordinator
+//! consume.
+
+pub mod experiment;
+pub mod json_mini;
+pub mod toml_mini;
+
+pub use experiment::{parse_backend, BackendSpec, ExperimentConfig};
+pub use json_mini::{parse_json, Json};
+pub use toml_mini::{parse as parse_toml, Document, Value};

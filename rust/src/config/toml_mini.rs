@@ -1,0 +1,193 @@
+//! A TOML-subset parser sufficient for experiment configs.
+//!
+//! Supported: `[section]` headers, `key = value` pairs with string
+//! (`"..."`), integer, float, and boolean values, `#` comments, and blank
+//! lines. Dotted keys, arrays, tables-in-tables and multi-line strings are
+//! deliberately out of scope — experiment configs are flat.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`steps = 100` readable as f64).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Section name → (key → value). Keys before any `[section]` land in the
+/// `""` root section.
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse error with a 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a config document.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::new();
+    let mut section = String::new();
+    doc.insert(section.clone(), BTreeMap::new());
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(v.trim()).map_err(|m| err(lineno, &m))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, msg: &str) -> ParseError {
+    ParseError { line, msg: msg.to_string() }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+            # experiment
+            title = "heat sweep"   # inline comment
+            [app]
+            kind = "heat"
+            n = 501
+            dt = 1e-6
+            quantize_state = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"], Value::Str("heat sweep".into()));
+        assert_eq!(doc["app"]["kind"].as_str(), Some("heat"));
+        assert_eq!(doc["app"]["n"].as_int(), Some(501));
+        assert!((doc["app"]["dt"].as_float().unwrap() - 1e-6).abs() < 1e-18);
+        assert_eq!(doc["app"]["quantize_state"].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn int_readable_as_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc[""]["x"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[oops").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = @@").unwrap_err();
+        assert!(e.msg.contains("@@"));
+    }
+
+    #[test]
+    fn later_sections_merge() {
+        let doc = parse("[a]\nx = 1\n[b]\ny = 2\n[a]\nz = 3").unwrap();
+        assert_eq!(doc["a"]["x"].as_int(), Some(1));
+        assert_eq!(doc["a"]["z"].as_int(), Some(3));
+    }
+}

@@ -1,0 +1,151 @@
+//! Experiment jobs: a typed unit of work the coordinator schedules, and the
+//! outcome record the report layer consumes.
+
+use crate::config::{BackendSpec, ExperimentConfig};
+use crate::metrics::Registry;
+use crate::pde::{self, heat1d, swe2d, QuantMode};
+use std::time::Instant;
+
+/// Outcome of one simulation experiment.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub title: String,
+    pub app: String,
+    pub backend: String,
+    pub mode: QuantMode,
+    /// Relative L2 error of the final field vs the f64 ground truth run
+    /// with identical parameters.
+    pub rel_err_vs_f64: f64,
+    /// Multiplications issued through the backend.
+    pub muls: u64,
+    /// R2F2 adjustment events, if applicable: (widen, narrow).
+    pub adjustments: Option<(u64, u64)>,
+    /// Fixed-format range events, if applicable: (overflow, underflow).
+    pub range_events: Option<(u64, u64)>,
+    pub wall: std::time::Duration,
+    /// Final field for figure rendering.
+    pub field: Vec<f64>,
+}
+
+/// Run one experiment (plus its f64 reference) natively.
+pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
+    let t0 = Instant::now();
+    let (field, reference, muls, adjustments, range_events) = match cfg.app.as_str() {
+        "heat" => {
+            let mut be = cfg.backend.build();
+            let res = heat1d::run(&cfg.heat, be.as_mut(), cfg.mode);
+            let reference = heat1d::run(&cfg.heat, &mut pde::F64Arith, QuantMode::MulOnly);
+            (
+                res.u,
+                reference.u,
+                res.muls,
+                res.r2f2_stats.map(|s| (s.overflow_adjustments, s.redundancy_adjustments)),
+                res.range_events.map(|e| (e.overflows, e.underflows)),
+            )
+        }
+        "swe" => {
+            let mut be = cfg.backend.build();
+            let res = swe2d::run(&cfg.swe, be.as_mut(), swe2d::QuantScope::UxFluxOnly);
+            let reference =
+                swe2d::run(&cfg.swe, &mut pde::F64Arith, swe2d::QuantScope::UxFluxOnly);
+            (
+                res.h,
+                reference.h,
+                res.muls,
+                res.r2f2_stats.map(|s| (s.overflow_adjustments, s.redundancy_adjustments)),
+                res.range_events.map(|e| (e.overflows, e.underflows)),
+            )
+        }
+        other => panic!("unknown app {other}"),
+    };
+    let rel = pde::rel_l2(&field, &reference);
+    metrics.inc("jobs.completed", 1);
+    metrics.inc("jobs.muls", muls);
+    Outcome {
+        title: cfg.title.clone(),
+        app: cfg.app.clone(),
+        backend: cfg.backend.name(),
+        mode: cfg.mode,
+        rel_err_vs_f64: rel,
+        muls,
+        adjustments,
+        range_events,
+        wall: t0.elapsed(),
+        field,
+    }
+}
+
+/// Standard comparison set for an app: f64, f32, fixed half, R2F2-16.
+pub fn comparison_set(app: &str) -> Vec<ExperimentConfig> {
+    use crate::r2f2core::R2f2Config;
+    use crate::softfloat::FpFormat;
+    let mk = |backend: BackendSpec, title: &str| {
+        let mut c = ExperimentConfig::default();
+        c.app = app.to_string();
+        c.backend = backend;
+        c.title = title.to_string();
+        c
+    };
+    let r2f2 = if app == "swe" { R2f2Config::C16_384 } else { R2f2Config::C16_393 };
+    vec![
+        mk(BackendSpec::F64, &format!("{app}/f64")),
+        mk(BackendSpec::F32, &format!("{app}/f32")),
+        mk(BackendSpec::Fixed(FpFormat::E5M10), &format!("{app}/half")),
+        mk(BackendSpec::R2f2(r2f2), &format!("{app}/r2f2")),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_backend;
+    use crate::pde::init::HeatInit;
+
+    fn quick_heat(backend: &str) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = "heat".into();
+        c.backend = parse_backend(backend).unwrap();
+        c.heat.n = 65;
+        c.heat.dt = 0.25 / (64.0 * 64.0);
+        c.heat.steps = 200;
+        c.heat.init = HeatInit::sin_default();
+        c
+    }
+
+    #[test]
+    fn heat_outcome_sane() {
+        let m = Registry::new();
+        let o = run_experiment(&quick_heat("r2f2:<3,9,3>"), &m);
+        assert_eq!(o.app, "heat");
+        assert_eq!(o.muls, 3 * 63 * 200);
+        assert!(o.rel_err_vs_f64 < 0.01, "{}", o.rel_err_vs_f64);
+        assert!(o.adjustments.is_some());
+        assert_eq!(m.counter("jobs.completed"), 1);
+    }
+
+    #[test]
+    fn f64_experiment_has_zero_error() {
+        let m = Registry::new();
+        let o = run_experiment(&quick_heat("f64"), &m);
+        assert_eq!(o.rel_err_vs_f64, 0.0);
+    }
+
+    #[test]
+    fn comparison_set_covers_backends() {
+        let set = comparison_set("heat");
+        let names: Vec<String> = set.iter().map(|c| c.backend.name()).collect();
+        assert_eq!(names, vec!["f64", "f32", "fixed:E5M10", "r2f2:<3,9,3>"]);
+    }
+
+    #[test]
+    fn swe_quick_outcome() {
+        let m = Registry::new();
+        let mut c = ExperimentConfig::default();
+        c.app = "swe".into();
+        c.backend = parse_backend("r2f2:<3,8,4>").unwrap();
+        c.swe.steps = 5;
+        let o = run_experiment(&c, &m);
+        assert_eq!(o.muls, 6 * 16 * 16 * 5);
+        assert!(o.rel_err_vs_f64 < 1e-3);
+    }
+}

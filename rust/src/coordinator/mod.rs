@@ -1,0 +1,103 @@
+//! Experiment coordinator: schedules simulation/sweep jobs across a worker
+//! pool, aggregates outcomes and metrics. The paper's contribution lives at
+//! L1/L2 (the multiplier), so this layer is deliberately thin — a job
+//! system, not a serving stack — but it is what every example, bench and
+//! the CLI drive.
+
+pub mod job;
+pub mod pool;
+
+pub use job::{comparison_set, run_experiment, Outcome};
+pub use pool::{default_workers, parallel_map};
+
+use crate::config::ExperimentConfig;
+use crate::metrics::Registry;
+
+/// The coordinator: a worker pool plus a shared metrics registry.
+pub struct Coordinator {
+    pub workers: usize,
+    pub metrics: Registry,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Coordinator { workers: default_workers(), metrics: Registry::new() }
+    }
+}
+
+impl Coordinator {
+    pub fn new(workers: usize) -> Coordinator {
+        Coordinator { workers: workers.max(1), metrics: Registry::new() }
+    }
+
+    /// Run a batch of experiments in parallel; outcomes keep input order.
+    pub fn run_batch(&self, configs: Vec<ExperimentConfig>) -> Vec<Outcome> {
+        let metrics = &self.metrics;
+        parallel_map(configs, self.workers, |cfg| run_experiment(&cfg, metrics))
+    }
+
+    /// Render a comparison table of outcomes.
+    pub fn outcome_table(outcomes: &[Outcome]) -> String {
+        let mut t = crate::report::Table::new(vec![
+            "experiment",
+            "backend",
+            "rel-err vs f64",
+            "muls",
+            "widen/narrow",
+            "oflow/uflow",
+            "wall",
+        ]);
+        for o in outcomes {
+            t.row(vec![
+                o.title.clone(),
+                o.backend.clone(),
+                format!("{:.3e}", o.rel_err_vs_f64),
+                o.muls.to_string(),
+                o.adjustments.map(|(w, n)| format!("{w}/{n}")).unwrap_or_else(|| "-".into()),
+                o.range_events.map(|(a, b)| format!("{a}/{b}")).unwrap_or_else(|| "-".into()),
+                format!("{:.1?}", o.wall),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_backend;
+    use crate::pde::init::HeatInit;
+
+    fn quick(backend: &str) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = "heat".into();
+        c.backend = parse_backend(backend).unwrap();
+        c.title = backend.to_string();
+        c.heat.n = 65;
+        c.heat.dt = 0.25 / (64.0 * 64.0);
+        c.heat.steps = 100;
+        c.heat.init = HeatInit::sin_default();
+        c
+    }
+
+    #[test]
+    fn batch_runs_in_parallel_and_keeps_order() {
+        let c = Coordinator::new(4);
+        let outcomes =
+            c.run_batch(vec![quick("f64"), quick("f32"), quick("fixed:E5M10"), quick("r2f2:<3,9,3>")]);
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(outcomes[0].backend, "f64");
+        assert_eq!(outcomes[3].backend, "r2f2:<3,9,3>");
+        assert_eq!(c.metrics.counter("jobs.completed"), 4);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let c = Coordinator::new(2);
+        let outcomes = c.run_batch(vec![quick("f64"), quick("r2f2:<3,9,3>")]);
+        let table = Coordinator::outcome_table(&outcomes);
+        assert!(table.contains("f64"));
+        assert!(table.contains("r2f2:<3,9,3>"));
+        assert!(table.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,92 @@
+//! Work distribution across OS threads (no tokio in this environment; the
+//! workloads are CPU-bound simulations, so a scoped thread pool with an
+//! atomic work index is the right shape anyway).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Parallel map preserving input order: runs `f` over `items` on up to
+/// `workers` threads. `f` must be `Sync` (shared immutably across workers).
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item taken twice");
+                let r = f(item);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    out.into_iter().map(|m| m.into_inner().unwrap().expect("missing result")).collect()
+}
+
+/// Default worker count: available parallelism capped at 8 (experiment
+/// fan-out is memory-light but the softfloat sweeps saturate quickly).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(items, 8, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // With 4 workers, 4 sleeps of 50ms should take well under 200ms.
+        let t = std::time::Instant::now();
+        let _ = parallel_map(vec![(); 4], 4, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        assert!(t.elapsed() < std::time::Duration::from_millis(160), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn more_items_than_workers() {
+        let out = parallel_map((0..1000).collect::<Vec<_>>(), 3, |x| x % 7);
+        assert_eq!(out.len(), 1000);
+        assert_eq!(out[999], 999 % 7);
+    }
+}

@@ -1,0 +1,48 @@
+//! # R2F2 — Runtime Reconfigurable Floating-Point Precision
+//!
+//! A production-quality reproduction of *"Exploring and Exploiting Runtime
+//! Reconfigurable Floating Point Precision in Scientific Computing: a Case
+//! Study for Solving PDEs"* (Cong Hao, CS.AR 2024).
+//!
+//! The crate is organized as the Layer-3 (rust) side of a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`softfloat`] — arbitrary-precision floating-point library (the paper's
+//!   exploration substrate, §3): encode/decode/multiply/add for any
+//!   `ExMy` format with selectable rounding.
+//! * [`r2f2core`] — the paper's contribution (§4): the flexible
+//!   `<EB, MB, FX>` representation, the runtime-reconfigurable multiplier
+//!   with the truncated flexible-partial-product approximation, the dynamic
+//!   precision-adjustment unit, a cycle-accurate datapath model and an FPGA
+//!   resource (FF/LUT) cost model for Table 1.
+//! * [`pde`] — the two case studies: 1D heat equation (explicit finite
+//!   differences) and 2D shallow-water equations (Lax–Wendroff), runnable
+//!   under f64 / f32 / fixed `ExMy` / R2F2 multiplication backends.
+//! * [`analysis`] / [`sweep`] — the exploration harnesses behind Figs 2, 3
+//!   and 6.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered JAX/Pallas computations) and drives the simulation step
+//!   loop from rust. Python never runs on this path.
+//! * [`coordinator`] — experiment job system: a thread-pool scheduler that
+//!   fans sweeps and simulations out across workers.
+//! * [`config`] / [`metrics`] / [`report`] / [`cli`] — the supporting
+//!   substrates (TOML-subset config, counters, CSV/ASCII-plot emitters,
+//!   argument parsing) built from scratch for this offline environment.
+//!
+//! See `DESIGN.md` for the bit-exact emulation spec shared with the Pallas
+//! kernels and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod pde;
+pub mod proptest_mini;
+pub mod r2f2core;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod softfloat;
+pub mod sweep;

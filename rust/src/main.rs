@@ -1,0 +1,286 @@
+//! `r2f2` — the Layer-3 command-line driver.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!   run       one simulation experiment (TOML config or flags)
+//!   compare   f64 / f32 / half / R2F2 side by side (Figs 1, 7, 8)
+//!   analyze   data-distribution study (Fig 2)
+//!   profile   precision-configuration profiling + Eq.(1) check (Fig 3)
+//!   sweep     multiplication-accuracy sweep (Fig 6)
+//!   table1    resource + latency model (Table 1)
+//!   pipeline  three-layer run: AOT artifacts via PJRT (the e2e path)
+
+use r2f2::analysis;
+use r2f2::cli::Args;
+use r2f2::config::{parse_backend, ExperimentConfig};
+use r2f2::coordinator::{self, Coordinator};
+use r2f2::metrics::Registry;
+use r2f2::pde::init::HeatInit;
+use r2f2::pde::QuantMode;
+use r2f2::r2f2core::{datapath, resource, R2f2Config};
+use r2f2::report::{self, ascii_plot, Table};
+use r2f2::runtime::{HeatRunner, Runtime};
+use r2f2::softfloat::FpFormat;
+use r2f2::sweep::{config_profile, error_sweep};
+
+const SWITCHES: &[&str] = &["verbose", "json", "help", "full"];
+
+fn main() {
+    let mut args = match Args::from_env(SWITCHES) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&mut args),
+        "compare" => cmd_compare(&mut args),
+        "analyze" => cmd_analyze(&mut args),
+        "profile" => cmd_profile(&mut args),
+        "sweep" => cmd_sweep(&mut args),
+        "table1" => cmd_table1(&mut args),
+        "pipeline" => cmd_pipeline(&mut args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result.and_then(|()| args.finish().map_err(|e| e.to_string())) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "r2f2 — runtime reconfigurable floating-point precision (paper reproduction)
+
+USAGE: r2f2 <command> [options]
+
+COMMANDS
+  run       --config FILE | --app heat|swe --backend SPEC [--mode mul-only|full]
+            [--n N --steps S] — run one experiment vs the f64 reference
+  compare   --app heat|swe — f64/f32/half/R2F2 comparison table (Figs 1/7/8)
+  analyze   [--n N --steps S] — Fig 2 data-distribution study
+  profile   [--pairs P] — Fig 3 precision profiling + Eq.(1) check
+  sweep     [--intervals I --pairs P] — Fig 6 accuracy sweep
+  table1    — Table 1 resource & latency model vs paper
+  pipeline  [--artifacts DIR --steps S --backend r2f2|e5m10|f32] — run the
+            heat simulation through the AOT artifacts on PJRT (three-layer)
+
+BACKEND SPECS: f64 | f32 | fixed:E5M10 (any ExMy) | r2f2:<3,9,3> (any <EB,MB,FX>)"
+    );
+}
+
+fn experiment_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+        return ExperimentConfig::from_toml(&text);
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.app = args.get_or("app", "heat");
+    if let Some(b) = args.get("backend") {
+        cfg.backend = parse_backend(&b)?;
+    }
+    match args.get_or("mode", "mul-only").as_str() {
+        "mul-only" => cfg.mode = QuantMode::MulOnly,
+        "full" => cfg.mode = QuantMode::Full,
+        other => return Err(format!("bad mode {other}")),
+    }
+    if let Some(n) = args.get("n") {
+        let n: usize = n.parse().map_err(|_| "bad --n")?;
+        cfg.heat.n = n;
+        cfg.heat.dt = 0.25 / ((n - 1) as f64 * (n - 1) as f64);
+        cfg.swe.n = n;
+    }
+    if let Some(s) = args.get("steps") {
+        let s: usize = s.parse().map_err(|_| "bad --steps")?;
+        cfg.heat.steps = s;
+        cfg.swe.steps = s;
+    }
+    if let Some(init) = args.get("init") {
+        cfg.heat.init = match init.as_str() {
+            "sin" => HeatInit::sin_default(),
+            "exp" => HeatInit::exp_default(),
+            other => return Err(format!("bad init {other}")),
+        };
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &mut Args) -> Result<(), String> {
+    let cfg = experiment_from_args(args)?;
+    let metrics = Registry::new();
+    let outcome = coordinator::run_experiment(&cfg, &metrics);
+    println!("{}", Coordinator::outcome_table(std::slice::from_ref(&outcome)));
+    if args.switch("verbose") {
+        let ds: Vec<f64> = outcome.field.iter().step_by(outcome.field.len().div_ceil(64)).copied().collect();
+        println!("{}", ascii_plot::line_plot("final field", &[("u", &ds)], 64, 12));
+        println!("{}", metrics.render());
+    }
+    if args.switch("json") {
+        println!("{}", metrics.to_json());
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &mut Args) -> Result<(), String> {
+    let app = args.get_or("app", "heat");
+    let coord = Coordinator::default();
+    let outcomes = coord.run_batch(coordinator::comparison_set(&app));
+    println!("{}", Coordinator::outcome_table(&outcomes));
+    // Overlay the final fields (the Figs 1/7/8 visual).
+    let series: Vec<(&str, Vec<f64>)> = outcomes
+        .iter()
+        .map(|o| {
+            let stride = o.field.len().div_ceil(64);
+            (o.backend.as_str(), o.field.iter().step_by(stride).copied().collect::<Vec<f64>>())
+        })
+        .collect();
+    let refs: Vec<(&str, &[f64])> = series.iter().map(|(n, v)| (*n, v.as_slice())).collect();
+    println!("{}", ascii_plot::line_plot(&format!("{app}: final fields"), &refs, 64, 14));
+    Ok(())
+}
+
+fn cmd_analyze(args: &mut Args) -> Result<(), String> {
+    let n: usize = args.get_parse("n", 257usize).map_err(|e| e.to_string())?;
+    let steps: usize = args.get_parse("steps", 2048usize).map_err(|e| e.to_string())?;
+    let mut p = r2f2::pde::heat1d::HeatParams::default();
+    p.n = n;
+    p.dt = 0.25 / ((n - 1) as f64 * (n - 1) as f64);
+    p.steps = steps;
+    let rep = analysis::heat_distribution(&p, 4);
+    println!("Fig 2(a): octave histogram of all multiplication data ({} samples)", rep.samples);
+    println!("{}", ascii_plot::histogram("", &rep.overall.bars(), 48));
+    let mut t = Table::new(vec!["stage", "min |v|", "max |v|", "bulk-90% octaves"]);
+    for s in &rep.stages {
+        t.row(vec![
+            format!("{}/4", s.index + 1),
+            report::sig(s.min_abs, 3),
+            report::sig(s.max_abs, 3),
+            s.histogram.bulk_octaves(0.9).to_string(),
+        ]);
+    }
+    println!("Fig 2(b/c): per-stage range shift\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_profile(args: &mut Args) -> Result<(), String> {
+    let pairs: usize = args.get_parse("pairs", 1000usize).map_err(|e| e.to_string())?;
+    let configs = config_profile::sixteen_bit_family();
+    let mut t = Table::new(vec!["range", "best (profiled)", "avg err", "Eq.(1) says", "agree?"]);
+    for (lo, hi) in config_profile::PAPER_RANGES {
+        let pts = config_profile::profile_range(lo, hi, &configs, pairs, 42);
+        let best = config_profile::best_of(&pts);
+        let eq1 = config_profile::eq1_exponent_bits(hi);
+        t.row(vec![
+            format!("({lo}, {hi})"),
+            best.fmt.to_string(),
+            format!("{:.3e}", best.avg_err),
+            format!("E{eq1}"),
+            if best.fmt.e_w == eq1 { "yes".into() } else { "NO (paper's point)".to_string() },
+        ]);
+    }
+    println!("Fig 3 / §3.2: profiled optimum vs the intuition formula\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> Result<(), String> {
+    let intervals: usize = args.get_parse("intervals", 2000usize).map_err(|e| e.to_string())?;
+    let pairs: usize = args.get_parse("pairs", 200usize).map_err(|e| e.to_string())?;
+    let params = error_sweep::SweepParams { intervals, pairs, ..Default::default() };
+    let mut t = Table::new(vec![
+        "pairing",
+        "avg reduction (per-interval)",
+        "pooled reduction",
+        "max",
+        "min",
+    ]);
+    for (cfg, fixed) in error_sweep::paper_pairings() {
+        let r = error_sweep::error_sweep(cfg, fixed, &params);
+        t.row(vec![
+            format!("{cfg} vs {fixed}"),
+            report::pct(r.avg_reduction),
+            report::pct(r.global_reduction),
+            report::pct(r.max_reduction),
+            report::pct(r.min_reduction),
+        ]);
+    }
+    println!("Fig 6(g): error reduction (paper: 70.2% / 70.6% / 70.7%)\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_table1(_args: &mut Args) -> Result<(), String> {
+    let mut t = Table::new(vec!["unit", "FF model", "FF paper", "LUT model", "LUT paper", "Lat", "II"]);
+    for (fmt, row) in [
+        (FpFormat::E11M52, &resource::PAPER_ROWS[0]),
+        (FpFormat::E8M23, &resource::PAPER_ROWS[1]),
+        (FpFormat::E5M10, &resource::PAPER_ROWS[2]),
+    ] {
+        let r = resource::fixed_multiplier(fmt);
+        let s = datapath::fixed_schedule(fmt.total_bits());
+        t.row(vec![
+            row.name.to_string(),
+            format!("{:.0}", r.ff),
+            row.ff.to_string(),
+            format!("{:.0}", r.lut),
+            row.lut.to_string(),
+            s.latency.to_string(),
+            s.ii.to_string(),
+        ]);
+    }
+    for (i, cfg) in R2f2Config::TABLE1.iter().enumerate() {
+        let r = resource::r2f2_multiplier(*cfg);
+        let s = datapath::r2f2_schedule(*cfg);
+        let row = &resource::PAPER_ROWS[3 + i];
+        t.row(vec![
+            row.name.to_string(),
+            format!("{:.0}", r.ff),
+            row.ff.to_string(),
+            format!("{:.0}", r.lut),
+            row.lut.to_string(),
+            s.latency.to_string(),
+            s.ii.to_string(),
+        ]);
+    }
+    println!("Table 1: resource cost model + datapath schedule vs paper\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_pipeline(args: &mut Args) -> Result<(), String> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let steps: usize = args.get_parse("steps", 500usize).map_err(|e| e.to_string())?;
+    let variant = match args.get_or("backend", "r2f2").as_str() {
+        "r2f2" => "heat_step_r2f2",
+        "e5m10" => "heat_step_e5m10",
+        "f32" => "heat_step_f32",
+        other => return Err(format!("bad pipeline backend {other}")),
+    };
+    let metrics = Registry::new();
+    let mut rt = Runtime::new(std::path::Path::new(&dir)).map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+    let runner = HeatRunner::new(&mut rt, variant, metrics.clone()).map_err(|e| e.to_string())?;
+    let n = runner.n;
+    let u0: Vec<f32> = (0..n)
+        .map(|i| 500.0 * (2.0 * std::f32::consts::PI * i as f32 / (n - 1) as f32).sin())
+        .collect();
+    let out = runner.run(&u0, 0.25, steps, 2).map_err(|e| e.to_string())?;
+    println!(
+        "{variant}: {} steps in {:?} ({:.1} steps/s), widen={}, narrow={}",
+        out.steps,
+        out.elapsed,
+        out.steps as f64 / out.elapsed.as_secs_f64(),
+        out.widen,
+        out.narrow
+    );
+    let ds: Vec<f64> = out.u.iter().step_by(n.div_ceil(64)).map(|&x| x as f64).collect();
+    println!("{}", ascii_plot::line_plot("final field (PJRT)", &[("u", &ds)], 64, 12));
+    println!("{}", metrics.render());
+    Ok(())
+}

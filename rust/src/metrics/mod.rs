@@ -1,0 +1,220 @@
+//! Lightweight metrics registry: named counters, gauges and duration
+//! histograms, shareable across coordinator worker threads.
+//!
+//! The registry is the L3 observability surface: solvers and the runtime
+//! report multiplication counts, adjustment events, PJRT execution times
+//! etc.; the CLI prints a rendering at the end of a run and the report
+//! module can serialize it as JSON.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    /// Duration samples in nanoseconds, keyed by timer name.
+    timers: BTreeMap<String, Vec<u64>>,
+}
+
+/// A cloneable handle to a shared metrics registry.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Increment a counter.
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge.
+    pub fn set(&self, name: &str, value: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
+    }
+
+    /// Record one duration sample (nanoseconds).
+    pub fn observe_ns(&self, name: &str, ns: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.timers.entry(name.to_string()).or_default().push(ns);
+    }
+
+    /// Time a closure into the named timer.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.observe_ns(name, t.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// (count, mean_ns, max_ns) summary of a timer.
+    pub fn timer_summary(&self, name: &str) -> Option<(usize, f64, u64)> {
+        let g = self.inner.lock().unwrap();
+        let v = g.timers.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        let sum: u64 = v.iter().sum();
+        Some((v.len(), sum as f64 / v.len() as f64, *v.iter().max().unwrap()))
+    }
+
+    /// Human-readable rendering (stable ordering for tests/logs).
+    pub fn render(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("gauge   {k} = {v}\n"));
+        }
+        for (k, v) in &g.timers {
+            let sum: u64 = v.iter().sum();
+            let mean = sum as f64 / v.len() as f64;
+            out.push_str(&format!(
+                "timer   {k}: n={} mean={:.0}ns total={:.3}ms\n",
+                v.len(),
+                mean,
+                sum as f64 / 1e6
+            ));
+        }
+        out
+    }
+
+    /// JSON rendering (hand-rolled; no serde in this environment).
+    pub fn to_json(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut parts = Vec::new();
+        let counters: Vec<String> =
+            g.counters.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        parts.push(format!("\"counters\": {{{}}}", counters.join(", ")));
+        let gauges: Vec<String> = g
+            .gauges
+            .iter()
+            .map(|(k, v)| format!("\"{k}\": {}", json_f64(*v)))
+            .collect();
+        parts.push(format!("\"gauges\": {{{}}}", gauges.join(", ")));
+        let timers: Vec<String> = g
+            .timers
+            .iter()
+            .map(|(k, v)| {
+                let sum: u64 = v.iter().sum();
+                format!(
+                    "\"{k}\": {{\"count\": {}, \"mean_ns\": {}}}",
+                    v.len(),
+                    json_f64(sum as f64 / v.len() as f64)
+                )
+            })
+            .collect();
+        parts.push(format!("\"timers\": {{{}}}", timers.join(", ")));
+        format!("{{{}}}", parts.join(", "))
+    }
+}
+
+/// JSON-safe float rendering (no NaN/inf literals).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Registry::new();
+        m.inc("muls", 10);
+        m.inc("muls", 5);
+        assert_eq!(m.counter("muls"), 15);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Registry::new();
+        m.set("rmse", 0.5);
+        m.set("rmse", 0.25);
+        assert_eq!(m.gauge("rmse"), Some(0.25));
+    }
+
+    #[test]
+    fn timers_summarize() {
+        let m = Registry::new();
+        m.observe_ns("step", 100);
+        m.observe_ns("step", 300);
+        let (n, mean, max) = m.timer_summary("step").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(mean, 200.0);
+        assert_eq!(max, 300);
+    }
+
+    #[test]
+    fn time_closure_records() {
+        let m = Registry::new();
+        let v = m.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(m.timer_summary("work").is_some());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let m = Registry::new();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 8000);
+    }
+
+    #[test]
+    fn json_is_wellformed_ish() {
+        let m = Registry::new();
+        m.inc("a", 1);
+        m.set("b", 2.5);
+        m.observe_ns("t", 10);
+        let j = m.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"a\": 1"));
+        assert!(j.contains("\"b\": 2.5"));
+        assert!(j.contains("\"t\""));
+    }
+
+    #[test]
+    fn render_is_stable() {
+        let m = Registry::new();
+        m.inc("z", 1);
+        m.inc("a", 2);
+        let r = m.render();
+        let za = r.find("counter a").unwrap();
+        let zz = r.find("counter z").unwrap();
+        assert!(za < zz, "BTreeMap ordering expected");
+    }
+}

@@ -1,0 +1,309 @@
+//! 1D heat equation `∂u/∂t = α ∂²u/∂x²`, explicit finite differences (§2).
+//!
+//! Update rule per interior node, written the way stencil codes multiply
+//! coefficients into the field (so the multiplication *operands* are the
+//! coefficient and the state values — the quantities whose distribution §3.1
+//! studies):
+//!
+//! `u'ᵢ = uᵢ + (r·uᵢ₋₁ − (2r)·uᵢ + r·uᵢ₊₁)`, `r = α·Δt/Δx²` (stable for
+//! `r ≤ 1/2`). Each node costs **three multiplications** per step, all
+//! routed through the [`Arith`] backend — the paper's heat run totals
+//! ~1.5 M multiplications, matched here by the default `n = 501,
+//! steps = 1000` (3 × 499 × 1000 ≈ 1.5 M).
+//!
+//! Boundary conditions are Dirichlet: the end nodes hold their initial
+//! values (0 for the sine case).
+
+use super::init::HeatInit;
+use super::{Arith, Ctx, QuantMode, RangeEvents};
+use crate::r2f2core::Stats;
+
+/// Heat-equation run parameters.
+#[derive(Debug, Clone)]
+pub struct HeatParams {
+    /// Number of spatial nodes (including the two boundary nodes).
+    pub n: usize,
+    /// Diffusivity α.
+    pub alpha: f64,
+    /// Domain length L (Δx = L / (n−1)).
+    pub length: f64,
+    /// Time step.
+    pub dt: f64,
+    /// Number of time steps.
+    pub steps: usize,
+    /// Initial condition.
+    pub init: HeatInit,
+    /// Keep a state snapshot every `snapshot_every` steps (0 = none).
+    pub snapshot_every: usize,
+}
+
+impl Default for HeatParams {
+    fn default() -> HeatParams {
+        // r = α·Δt/Δx² = 0.25 with these values; 499 interior nodes ×
+        // 1000 steps × 3 muls ≈ 1.5 M multiplications (§5.3).
+        HeatParams {
+            n: 501,
+            alpha: 1.0,
+            length: 1.0,
+            dt: 0.25 / (500.0f64 * 500.0),
+            steps: 1000,
+            init: HeatInit::sin_default(),
+            snapshot_every: 0,
+        }
+    }
+}
+
+impl HeatParams {
+    /// The dimensionless diffusion number `r = α·Δt/Δx²`.
+    pub fn r(&self) -> f64 {
+        let dx = self.length / (self.n - 1) as f64;
+        self.alpha * self.dt / (dx * dx)
+    }
+
+    /// Multiplications the run will issue (3 per interior node per step).
+    pub fn expected_muls(&self) -> u64 {
+        3 * (self.n as u64 - 2) * self.steps as u64
+    }
+}
+
+/// Result of a heat-equation run.
+#[derive(Debug, Clone)]
+pub struct HeatResult {
+    /// Final temperature field.
+    pub u: Vec<f64>,
+    /// `(step, field)` snapshots if requested.
+    pub snapshots: Vec<(usize, Vec<f64>)>,
+    /// Multiplications issued.
+    pub muls: u64,
+    /// Backend name.
+    pub backend: String,
+    /// R2F2 adjustment statistics, when applicable.
+    pub r2f2_stats: Option<Stats>,
+    /// Fixed-format range events, when applicable.
+    pub range_events: Option<RangeEvents>,
+}
+
+/// Run the simulation with the given arithmetic backend and quantization
+/// mode.
+pub fn run(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResult {
+    assert!(params.n >= 3, "need at least one interior node");
+    assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());
+
+    let name = be.name();
+    let mut ctx = Ctx::new(be, mode);
+    let r = params.r();
+    let two_r = 2.0 * r;
+
+    let mut u = params.init.sample(params.n, params.length);
+    if mode == QuantMode::Full {
+        for v in u.iter_mut() {
+            *v = ctx.quant(*v);
+        }
+    }
+    let mut next = u.clone();
+    let mut snapshots = Vec::new();
+
+    for step in 0..params.steps {
+        for i in 1..params.n - 1 {
+            // du = r·u[i−1] − (2r)·u[i] + r·u[i+1]
+            let left = ctx.mul(r, u[i - 1]);
+            let mid = ctx.mul(two_r, u[i]);
+            let right = ctx.mul(r, u[i + 1]);
+            let du = {
+                let s = ctx.sub(left, mid);
+                ctx.add(s, right)
+            };
+            let unew = ctx.add(u[i], du);
+            next[i] = ctx.quant(unew);
+        }
+        // Dirichlet boundaries keep their (possibly quantized) values.
+        next[0] = u[0];
+        next[params.n - 1] = u[params.n - 1];
+        std::mem::swap(&mut u, &mut next);
+
+        if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
+            snapshots.push((step + 1, u.clone()));
+        }
+    }
+
+    let muls = ctx.muls;
+    HeatResult {
+        u,
+        snapshots,
+        muls,
+        backend: name,
+        r2f2_stats: be.r2f2_stats(),
+        range_events: be.range_events(),
+    }
+}
+
+/// Analytic solution for the single-mode sine case
+/// `u₀ = A·sin(cπx/L)`: `u(x,t) = A·exp(−α(cπ/L)²t)·sin(cπx/L)` — used to
+/// validate the solver itself (not just backend-vs-backend).
+pub fn sine_analytic(params: &HeatParams, t: f64) -> Option<Vec<f64>> {
+    if let HeatInit::Sin { amplitude, cycles } = params.init {
+        let k = cycles * std::f64::consts::PI / params.length;
+        let decay = (-params.alpha * k * k * t).exp();
+        Some(
+            (0..params.n)
+                .map(|i| {
+                    let x = i as f64 / (params.n - 1) as f64 * params.length;
+                    amplitude * decay * (k * x).sin()
+                })
+                .collect(),
+        )
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{rel_l2, F32Arith, F64Arith, FixedArith, R2f2Arith};
+    use crate::r2f2core::R2f2Config;
+    use crate::softfloat::FpFormat;
+
+    fn small() -> HeatParams {
+        HeatParams {
+            n: 101,
+            dt: 0.25 / (100.0f64 * 100.0),
+            steps: 1500,
+            ..HeatParams::default()
+        }
+    }
+
+    #[test]
+    fn f64_matches_analytic_solution() {
+        let p = small();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let t = p.dt * p.steps as f64;
+        let exact = sine_analytic(&p, t).unwrap();
+        let err = rel_l2(&res.u, &exact);
+        assert!(err < 5e-3, "solver discretization error too large: {err}");
+    }
+
+    #[test]
+    fn max_principle_holds_in_f64() {
+        // Explicit heat with r ≤ 1/2 is monotone: no new extrema.
+        let p = small();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let max0 = 500.0;
+        assert!(res.u.iter().all(|&v| v.abs() <= max0 + 1e-9));
+    }
+
+    #[test]
+    fn mul_count_matches_expectation() {
+        let p = small();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert_eq!(res.muls, p.expected_muls());
+    }
+
+    #[test]
+    fn default_run_is_about_1_5m_muls() {
+        // §5.3: "the entire computation ... involves 1.5M multiplications".
+        let p = HeatParams::default();
+        assert_eq!(p.expected_muls(), 1_497_000); // 3 × 499 × 1000
+    }
+
+    #[test]
+    fn f32_close_to_f64() {
+        let p = small();
+        let a = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let b = run(&p, &mut F32Arith, QuantMode::MulOnly);
+        assert!(rel_l2(&b.u, &a.u) < 1e-5);
+    }
+
+    #[test]
+    fn r2f2_16bit_matches_f32_where_full_half_fails() {
+        // The headline case study (Fig. 1b vs Fig. 7a): a genuinely
+        // half-precision simulation (state + arithmetic in E5M10) is wrong,
+        // while 16-bit R2F2 multiplications (state in the f32 carrier, the
+        // paper's deployment, §5.2) track single precision.
+        let p = small();
+        let reference = run(&p, &mut F32Arith, QuantMode::MulOnly);
+
+        let mut r2f2 = R2f2Arith::new(R2f2Config::C16_393);
+        let ours = run(&p, &mut r2f2, QuantMode::MulOnly);
+        let err_r2f2 = rel_l2(&ours.u, &reference.u);
+
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let theirs = run(&p, &mut half, QuantMode::Full);
+        let err_half = rel_l2(&theirs.u, &reference.u);
+
+        assert!(err_r2f2 < 1e-2, "R2F2 error {err_r2f2}");
+        assert!(err_half > 5.0 * err_r2f2, "half {err_half} vs r2f2 {err_r2f2}");
+    }
+
+    #[test]
+    fn r2f2_beats_fixed_half_at_equal_scope() {
+        // Same quantization scope (MulOnly) for both units: the adaptive
+        // format must not be worse than the fixed one.
+        let p = small();
+        let reference = run(&p, &mut F32Arith, QuantMode::MulOnly);
+        let mut r2f2 = R2f2Arith::new(R2f2Config::C16_393);
+        let err_r2f2 = rel_l2(&run(&p, &mut r2f2, QuantMode::MulOnly).u, &reference.u);
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let err_half = rel_l2(&run(&p, &mut half, QuantMode::MulOnly).u, &reference.u);
+        assert!(err_r2f2 <= err_half * 1.05, "r2f2 {err_r2f2} vs half {err_half}");
+    }
+
+    #[test]
+    fn r2f2_adjustments_are_rare() {
+        // §5.3: adjustments happen a handful of times in 1.5M muls.
+        let p = small();
+        let mut r2f2 = R2f2Arith::new(R2f2Config::C16_393);
+        let res = run(&p, &mut r2f2, QuantMode::MulOnly);
+        let st = res.r2f2_stats.unwrap();
+        assert!(st.muls > 0);
+        let adj = st.overflow_adjustments + st.redundancy_adjustments;
+        assert!(adj < st.muls / 100, "adjustments should be rare: {adj} of {}", st.muls);
+    }
+
+    #[test]
+    fn full_mode_half_fails_visibly() {
+        // Fig. 1(b): a *fully* half-precision simulation is wrong (the
+        // coarse ulp at |u| ≈ 500 swallows the per-step updates).
+        let p = small();
+        let reference = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let wrong = run(&p, &mut half, QuantMode::Full);
+        assert!(rel_l2(&wrong.u, &reference.u) > 0.05);
+    }
+
+    #[test]
+    fn stochastic_rounding_rescues_full_half() {
+        // Paxton et al. (cited in §2): deterministic RNE in a fully
+        // half-precision simulation systematically swallows sub-ulp updates,
+        // while stochastic rounding preserves them in expectation. The
+        // stochastic full-half run must beat the RNE full-half run.
+        let p = small();
+        let reference = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let mut rne = FixedArith::new(FpFormat::E5M10);
+        let err_rne = rel_l2(&run(&p, &mut rne, QuantMode::Full).u, &reference.u);
+        let mut sr = crate::pde::StochasticArith::new(FpFormat::E5M10, 7);
+        let err_sr = rel_l2(&run(&p, &mut sr, QuantMode::Full).u, &reference.u);
+        assert!(
+            err_sr < 0.5 * err_rne,
+            "stochastic {err_sr} should beat deterministic {err_rne}"
+        );
+    }
+
+    #[test]
+    fn snapshots_collected() {
+        let mut p = small();
+        p.steps = 400;
+        p.snapshot_every = 100;
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert_eq!(res.snapshots.len(), 4);
+        assert_eq!(res.snapshots[0].0, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "unstable")]
+    fn instability_rejected() {
+        let mut p = small();
+        p.dt *= 3.0; // r = 0.75
+        run(&p, &mut F64Arith, QuantMode::MulOnly);
+    }
+}

@@ -1,0 +1,400 @@
+//! PDE case studies (§2, §5.3): the 1D heat equation and the 2D shallow
+//! water equations, each runnable under interchangeable arithmetic backends
+//! so a single solver implementation serves every precision experiment.
+//!
+//! The paper's methodology replaces *multiplications* with the unit under
+//! test (f64 / f32 / fixed `ExMy` / R2F2), converting operands in and the
+//! result back out (§5.2). [`Arith`] is that pluggable multiplier;
+//! [`QuantMode`] selects whether only multiplications are quantized
+//! (`MulOnly`, the paper's R2F2 case studies) or the whole state and the
+//! additions too (`Full`, the paper's "simulation using half precision"
+//! baseline of Fig. 1).
+
+pub mod heat1d;
+pub mod init;
+pub mod swe2d;
+
+use crate::r2f2core::{R2f2Config, R2f2Multiplier, Stats};
+use crate::softfloat::{add_f, mul_f, quantize, quantize_flagged, FpFormat};
+
+/// How much of the solver arithmetic routes through the backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Only multiplications are quantized; additions and the stored state
+    /// stay in the f64 carrier (the paper's R2F2 deployment, §5.3).
+    MulOnly,
+    /// Multiplications, additions and state storage all go through the
+    /// format (a true low-precision simulation — Fig. 1's baseline).
+    Full,
+}
+
+/// Range-event counters accumulated by the fixed-format backend (the
+/// evidence for *why* a fixed type fails).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RangeEvents {
+    pub overflows: u64,
+    pub underflows: u64,
+}
+
+/// A pluggable arithmetic unit. One instance is owned by one solver run, so
+/// stateful backends (R2F2's split register) behave like one hardware
+/// multiplier seeing the solver's multiplication stream in order.
+pub trait Arith {
+    /// Human-readable backend name for reports (e.g. `E5M10`, `<3,9,3>`).
+    fn name(&self) -> String;
+    /// One multiplication through the unit (operands converted in, result
+    /// converted back).
+    fn mul(&mut self, a: f64, b: f64) -> f64;
+    /// One addition. Defaults to the f64 carrier; `Full` mode overrides.
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+    /// Quantize a state value for storage (`Full` mode only).
+    fn quant(&mut self, x: f64) -> f64 {
+        x
+    }
+    /// R2F2 adjustment statistics, if the backend has them.
+    fn r2f2_stats(&self) -> Option<Stats> {
+        None
+    }
+    /// Overflow/underflow events, if the backend tracks them.
+    fn range_events(&self) -> Option<RangeEvents> {
+        None
+    }
+}
+
+/// IEEE double — the ground-truth backend.
+#[derive(Debug, Default)]
+pub struct F64Arith;
+
+impl Arith for F64Arith {
+    fn name(&self) -> String {
+        "f64".into()
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        a * b
+    }
+}
+
+/// Hardware single precision (the paper's "32-bit" reference).
+#[derive(Debug, Default)]
+pub struct F32Arith;
+
+impl Arith for F32Arith {
+    fn name(&self) -> String {
+        "f32".into()
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        (a as f32 * b as f32) as f64
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        (a as f32 + b as f32) as f64
+    }
+    fn quant(&mut self, x: f64) -> f64 {
+        x as f32 as f64
+    }
+}
+
+/// A fixed `ExMy` software format (E5M10 = the paper's standard half
+/// baseline). Counts range events so reports can show where it breaks.
+#[derive(Debug)]
+pub struct FixedArith {
+    pub fmt: FpFormat,
+    events: RangeEvents,
+}
+
+impl FixedArith {
+    pub fn new(fmt: FpFormat) -> FixedArith {
+        FixedArith { fmt, events: RangeEvents::default() }
+    }
+
+    fn track(&mut self, flags: crate::softfloat::Flags) {
+        if flags.overflow() {
+            self.events.overflows += 1;
+        }
+        if flags.underflow() {
+            self.events.underflows += 1;
+        }
+    }
+}
+
+impl Arith for FixedArith {
+    fn name(&self) -> String {
+        self.fmt.to_string()
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        let (v, fl) = mul_f(a, b, self.fmt);
+        self.track(fl);
+        v
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        let (v, fl) = add_f(a, b, self.fmt);
+        self.track(fl);
+        v
+    }
+    fn quant(&mut self, x: f64) -> f64 {
+        let (v, fl) = quantize_flagged(x, self.fmt);
+        self.track(fl);
+        v
+    }
+    fn range_events(&self) -> Option<RangeEvents> {
+        Some(self.events)
+    }
+}
+
+/// The runtime-reconfigurable multiplier under test.
+#[derive(Debug)]
+pub struct R2f2Arith {
+    pub unit: R2f2Multiplier,
+}
+
+impl R2f2Arith {
+    pub fn new(cfg: R2f2Config) -> R2f2Arith {
+        R2f2Arith { unit: R2f2Multiplier::new(cfg) }
+    }
+}
+
+impl Arith for R2f2Arith {
+    fn name(&self) -> String {
+        self.unit.config().to_string()
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        self.unit.mul(a, b)
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        // R2F2 is a multiplier; in Full mode additions run in the *current*
+        // effective format (same storage width).
+        let fmt = self.unit.config().format(self.unit.split());
+        add_f(a, b, fmt).0
+    }
+    fn quant(&mut self, x: f64) -> f64 {
+        let fmt = self.unit.config().format(self.unit.split());
+        quantize(x, fmt)
+    }
+    fn r2f2_stats(&self) -> Option<Stats> {
+        Some(self.unit.stats())
+    }
+}
+
+/// Fixed format with **stochastic rounding** — the extension the paper
+/// cites from Paxton et al. ("with stochastic rounding, 16-bit half
+/// precision may be useful in future climate modeling"). Rounds up with
+/// probability `discarded / ulp`, so systematically-swallowed small updates
+/// survive in expectation; see the `stochastic_rounding_*` tests and the
+/// ablations bench.
+#[derive(Debug)]
+pub struct StochasticArith {
+    pub fmt: FpFormat,
+    rounder: crate::softfloat::Rounder,
+    events: RangeEvents,
+}
+
+impl StochasticArith {
+    pub fn new(fmt: FpFormat, seed: u64) -> StochasticArith {
+        StochasticArith {
+            fmt,
+            rounder: crate::softfloat::Rounder::stochastic(seed),
+            events: RangeEvents::default(),
+        }
+    }
+
+    fn track(&mut self, flags: crate::softfloat::Flags) {
+        if flags.overflow() {
+            self.events.overflows += 1;
+        }
+        if flags.underflow() {
+            self.events.underflows += 1;
+        }
+    }
+}
+
+impl Arith for StochasticArith {
+    fn name(&self) -> String {
+        format!("{}-sr", self.fmt)
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        let (fa, f1) = crate::softfloat::encode(a, self.fmt, &mut self.rounder);
+        let (fb, f2) = crate::softfloat::encode(b, self.fmt, &mut self.rounder);
+        let (fc, f3) = crate::softfloat::mul(fa, fb, self.fmt, &mut self.rounder);
+        self.track(f1 | f2 | f3);
+        crate::softfloat::decode(fc, self.fmt)
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        let (fa, f1) = crate::softfloat::encode(a, self.fmt, &mut self.rounder);
+        let (fb, f2) = crate::softfloat::encode(b, self.fmt, &mut self.rounder);
+        let (fc, f3) = crate::softfloat::add(fa, fb, self.fmt, &mut self.rounder);
+        self.track(f1 | f2 | f3);
+        crate::softfloat::decode(fc, self.fmt)
+    }
+    fn quant(&mut self, x: f64) -> f64 {
+        let (fp, fl) = crate::softfloat::encode(x, self.fmt, &mut self.rounder);
+        self.track(fl);
+        crate::softfloat::decode(fp, self.fmt)
+    }
+    fn range_events(&self) -> Option<RangeEvents> {
+        Some(self.events)
+    }
+}
+
+/// Decorator that streams every multiplication's operands and result into a
+/// callback — the instrumentation behind the Fig. 2 data-distribution study.
+pub struct RecordingArith<'a, A: Arith> {
+    pub inner: A,
+    pub tap: &'a mut dyn FnMut(f64, f64, f64),
+}
+
+impl<'a, A: Arith> Arith for RecordingArith<'a, A> {
+    fn name(&self) -> String {
+        format!("recorded({})", self.inner.name())
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        let r = self.inner.mul(a, b);
+        (self.tap)(a, b, r);
+        r
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        self.inner.add(a, b)
+    }
+    fn quant(&mut self, x: f64) -> f64 {
+        self.inner.quant(x)
+    }
+    fn r2f2_stats(&self) -> Option<Stats> {
+        self.inner.r2f2_stats()
+    }
+    fn range_events(&self) -> Option<RangeEvents> {
+        self.inner.range_events()
+    }
+}
+
+/// Solver-facing arithmetic context: applies [`QuantMode`] uniformly so the
+/// solvers contain a single code path.
+pub struct Ctx<'a> {
+    pub be: &'a mut dyn Arith,
+    pub mode: QuantMode,
+    /// Multiplications issued through this context.
+    pub muls: u64,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(be: &'a mut dyn Arith, mode: QuantMode) -> Ctx<'a> {
+        Ctx { be, mode, muls: 0 }
+    }
+
+    #[inline]
+    pub fn mul(&mut self, a: f64, b: f64) -> f64 {
+        self.muls += 1;
+        self.be.mul(a, b)
+    }
+
+    #[inline]
+    pub fn add(&mut self, a: f64, b: f64) -> f64 {
+        match self.mode {
+            QuantMode::MulOnly => a + b,
+            QuantMode::Full => self.be.add(a, b),
+        }
+    }
+
+    #[inline]
+    pub fn sub(&mut self, a: f64, b: f64) -> f64 {
+        self.add(a, -b)
+    }
+
+    #[inline]
+    pub fn quant(&mut self, x: f64) -> f64 {
+        match self.mode {
+            QuantMode::MulOnly => x,
+            QuantMode::Full => self.be.quant(x),
+        }
+    }
+}
+
+/// Root-mean-square error between two equal-length fields — the scalar
+/// "same simulation result?" metric used throughout EXPERIMENTS.md.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let s: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Relative L2 error `‖a − b‖ / ‖b‖` (b = reference).
+pub fn rel_l2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f64 = b.iter().map(|y| y * y).sum();
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_backend_is_exact() {
+        let mut be = F64Arith;
+        assert_eq!(be.mul(3.0, 4.0), 12.0);
+    }
+
+    #[test]
+    fn fixed_backend_counts_events() {
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let _ = be.mul(1000.0, 1000.0); // overflow
+        let _ = be.mul(1e-3, 1e-3); // underflow
+        let ev = be.range_events().unwrap();
+        assert_eq!(ev.overflows, 1);
+        assert_eq!(ev.underflows, 1);
+    }
+
+    #[test]
+    fn r2f2_backend_tracks_stats() {
+        let mut be = R2f2Arith::new(R2f2Config::C16_393);
+        let v = be.mul(300.0, 300.0);
+        assert!((v - 9e4).abs() / 9e4 < 1e-2);
+        assert!(be.r2f2_stats().unwrap().overflow_adjustments >= 1);
+    }
+
+    #[test]
+    fn ctx_mode_gates_add_and_quant() {
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let mut ctx = Ctx::new(&mut be, QuantMode::MulOnly);
+        // In MulOnly mode adds stay exact even for values half can't hold.
+        assert_eq!(ctx.add(1e6, 1.0), 1_000_001.0);
+        assert_eq!(ctx.quant(1e6), 1e6);
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let mut ctx = Ctx::new(&mut be, QuantMode::Full);
+        assert_eq!(ctx.quant(1e6), 65504.0); // saturates
+    }
+
+    #[test]
+    fn ctx_counts_muls() {
+        let mut be = F64Arith;
+        let mut ctx = Ctx::new(&mut be, QuantMode::MulOnly);
+        for _ in 0..5 {
+            ctx.mul(1.0, 1.0);
+        }
+        assert_eq!(ctx.muls, 5);
+    }
+
+    #[test]
+    fn recording_taps_every_mul() {
+        let mut count = 0u32;
+        {
+            let mut tap = |_a: f64, _b: f64, _r: f64| count += 1;
+            let mut be = RecordingArith { inner: F64Arith, tap: &mut tap };
+            be.mul(1.0, 2.0);
+            be.mul(3.0, 4.0);
+        }
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 2.0, 4.0];
+        assert!((rmse(&a, &b) - (1.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!(rel_l2(&a, &a) == 0.0);
+    }
+}

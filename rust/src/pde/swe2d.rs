@@ -1,0 +1,420 @@
+//! 2D shallow-water equations, two-step (Richtmyer) Lax–Wendroff (§2, Fig. 8).
+//!
+//! State per cell: `h` (depth), `u = h·vx`, `v = h·vy` on an `n × n`
+//! interior grid with one ring of ghost cells and reflective walls.
+//! Fluxes:
+//!
+//! ```text
+//! x: F = (u,            u²/h + g/2·h²,  u·v/h)
+//! y: G = (v,            u·v/h,          v²/h + g/2·h²)
+//! ```
+//!
+//! The paper substitutes R2F2 into exactly **one sub-equation** of the 24
+//! (§5.3): `Ux_mx[i][j] = q1_mx·q1_mx/q3_mx + 0.5g·q3_mx·q3_mx` — the
+//! x-momentum flux evaluated from the half-step (midpoint) values. With
+//! [`QuantScope::UxFluxOnly`] precisely those multiplications route through
+//! the backend (3 per evaluation: `q1²`, `q3²`, `0.5g·q3²`); everything
+//! else stays f64, as in the paper. [`QuantScope::AllFluxMuls`] is the
+//! ablation that quantizes every flux multiplication.
+
+use super::init::SweInit;
+use super::{Arith, Ctx, QuantMode, RangeEvents};
+use crate::r2f2core::Stats;
+
+/// Which multiplications go through the arithmetic backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantScope {
+    /// Only the full-step x-momentum flux from midpoint values — the
+    /// paper's substituted sub-equation.
+    UxFluxOnly,
+    /// Every multiplication in every flux evaluation (ablation).
+    AllFluxMuls,
+}
+
+/// Shallow-water run parameters.
+#[derive(Debug, Clone)]
+pub struct SweParams {
+    /// Interior grid side (n × n cells).
+    pub n: usize,
+    /// Gravity.
+    pub g: f64,
+    /// Cell size (Δx = Δy).
+    pub dx: f64,
+    /// Time step (CFL: `dt·(√(g·h_max)+|u|) < dx/2` is comfortable).
+    pub dt: f64,
+    /// Number of time steps.
+    pub steps: usize,
+    /// Initial water-drop condition.
+    pub init: SweInit,
+    /// Keep an `h`-field snapshot every `snapshot_every` steps (0 = none).
+    pub snapshot_every: usize,
+}
+
+impl Default for SweParams {
+    fn default() -> SweParams {
+        // Shelf scale: 16×16 cells of 2 km over a 150 m deep basin
+        // (c = √(g·h) ≈ 39 m/s; CFL = c·dt/dx ≈ 0.4). 20 steps ⇒
+        // 6·n²·steps = 30 720 quantized muls, matching the paper's
+        // "within the 30K multiplications" (§5.3).
+        SweParams {
+            n: 16,
+            g: 9.8,
+            dx: 2000.0,
+            dt: 20.0,
+            steps: 20,
+            init: SweInit::default(),
+            snapshot_every: 0,
+        }
+    }
+}
+
+impl SweParams {
+    /// Quantized multiplications the run will issue under
+    /// [`QuantScope::UxFluxOnly`] (2 F2 evaluations × 3 muls per interior
+    /// cell per step).
+    pub fn expected_muls(&self) -> u64 {
+        6 * (self.n * self.n) as u64 * self.steps as u64
+    }
+}
+
+/// Result of a shallow-water run.
+#[derive(Debug, Clone)]
+pub struct SweResult {
+    /// Final interior depth field (n×n, row-major).
+    pub h: Vec<f64>,
+    /// Final interior x-momentum.
+    pub u: Vec<f64>,
+    /// Final interior y-momentum.
+    pub v: Vec<f64>,
+    /// `(step, h-field)` snapshots if requested.
+    pub snapshots: Vec<(usize, Vec<f64>)>,
+    /// Multiplications issued through the backend.
+    pub muls: u64,
+    /// Backend name.
+    pub backend: String,
+    /// R2F2 adjustment statistics, when applicable.
+    pub r2f2_stats: Option<Stats>,
+    /// Fixed-format range events, when applicable.
+    pub range_events: Option<RangeEvents>,
+    /// Relative total-mass drift over the run (conservation check).
+    pub mass_drift: f64,
+}
+
+struct Grid {
+    n: usize,
+    h: Vec<f64>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl Grid {
+    fn idx(&self, i: usize, j: usize) -> usize {
+        i * (self.n + 2) + j
+    }
+}
+
+/// The quantized sub-equation: `F2(q1, q3) = q1²/q3 + 0.5g·q3²` with its
+/// three multiplications routed through the backend.
+#[inline]
+fn f2_quant(ctx: &mut Ctx, g2: f64, q1: f64, q3: f64) -> f64 {
+    let q1sq = ctx.mul(q1, q1);
+    let q3sq = ctx.mul(q3, q3);
+    q1sq / q3 + ctx.mul(g2, q3sq)
+}
+
+/// The same flux in plain f64 (all the paper's other 23 sub-equations).
+#[inline]
+fn f2_plain(g2: f64, q1: f64, q3: f64) -> f64 {
+    q1 * q1 / q3 + g2 * (q3 * q3)
+}
+
+/// Run the simulation. `be` receives only the multiplications selected by
+/// `scope` (the paper's methodology); the rest of the scheme is f64.
+pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
+    let n = params.n;
+    assert!(n >= 4, "grid too small");
+    let name = be.name();
+    let mut ctx = Ctx::new(be, QuantMode::MulOnly);
+    let (dt, dx, g) = (params.dt, params.dx, params.g);
+    let g2 = 0.5 * g;
+    let (ddx, ddy) = (dt / dx, dt / dx);
+
+    let side = n as f64 * dx;
+    let h0 = params.init.sample(n, side);
+    let mut grid = Grid {
+        n,
+        h: vec![params.init.base_depth; (n + 2) * (n + 2)],
+        u: vec![0.0; (n + 2) * (n + 2)],
+        v: vec![0.0; (n + 2) * (n + 2)],
+    };
+    for j in 0..n {
+        for i in 0..n {
+            let id = grid.idx(i + 1, j + 1);
+            grid.h[id] = h0[j * n + i];
+        }
+    }
+
+    let mass0: f64 = interior(&grid.h, n).iter().sum();
+
+    // Half-step arrays (Moler's waterwave layout).
+    let mut hx = vec![0.0; (n + 1) * (n + 1)];
+    let mut ux = vec![0.0; (n + 1) * (n + 1)];
+    let mut vx = vec![0.0; (n + 1) * (n + 1)];
+    let mut hy = vec![0.0; (n + 1) * (n + 1)];
+    let mut uy = vec![0.0; (n + 1) * (n + 1)];
+    let mut vy = vec![0.0; (n + 1) * (n + 1)];
+    let m = n + 1;
+
+    let mut snapshots = Vec::new();
+
+    for step in 0..params.steps {
+        reflect(&mut grid);
+
+        // First half step — x direction (i = 0..n, j = 0..n−1 in the
+        // (n+1)-wide half-step arrays).
+        for i in 0..=n {
+            for j in 0..n {
+                let a = grid.idx(i + 1, j + 1); // (i+1, j+1)
+                let b = grid.idx(i, j + 1); // (i, j+1)
+                let k = i * m + j;
+                hx[k] = 0.5 * (grid.h[a] + grid.h[b]) - 0.5 * ddx * (grid.u[a] - grid.u[b]);
+                let (fa, fb) = match scope {
+                    QuantScope::AllFluxMuls => (
+                        f2_quant(&mut ctx, g2, grid.u[a], grid.h[a]),
+                        f2_quant(&mut ctx, g2, grid.u[b], grid.h[b]),
+                    ),
+                    QuantScope::UxFluxOnly => (
+                        f2_plain(g2, grid.u[a], grid.h[a]),
+                        f2_plain(g2, grid.u[b], grid.h[b]),
+                    ),
+                };
+                ux[k] = 0.5 * (grid.u[a] + grid.u[b]) - 0.5 * ddx * (fa - fb);
+                vx[k] = 0.5 * (grid.v[a] + grid.v[b])
+                    - 0.5
+                        * ddx
+                        * (grid.u[a] * grid.v[a] / grid.h[a] - grid.u[b] * grid.v[b] / grid.h[b]);
+            }
+        }
+
+        // First half step — y direction (i = 0..n−1, j = 0..n).
+        for i in 0..n {
+            for j in 0..=n {
+                let a = grid.idx(i + 1, j + 1); // (i+1, j+1)
+                let b = grid.idx(i + 1, j); // (i+1, j)
+                let k = i * m + j;
+                hy[k] = 0.5 * (grid.h[a] + grid.h[b]) - 0.5 * ddy * (grid.v[a] - grid.v[b]);
+                uy[k] = 0.5 * (grid.u[a] + grid.u[b])
+                    - 0.5
+                        * ddy
+                        * (grid.v[a] * grid.u[a] / grid.h[a] - grid.v[b] * grid.u[b] / grid.h[b]);
+                let (ga, gb) = match scope {
+                    QuantScope::AllFluxMuls => (
+                        f2_quant(&mut ctx, g2, grid.v[a], grid.h[a]),
+                        f2_quant(&mut ctx, g2, grid.v[b], grid.h[b]),
+                    ),
+                    QuantScope::UxFluxOnly => (
+                        f2_plain(g2, grid.v[a], grid.h[a]),
+                        f2_plain(g2, grid.v[b], grid.h[b]),
+                    ),
+                };
+                vy[k] = 0.5 * (grid.v[a] + grid.v[b]) - 0.5 * ddy * (ga - gb);
+            }
+        }
+
+        // Second (full) step on the interior — this is where the paper's
+        // substituted equation `Ux_mx = q1_mx²/q3_mx + 0.5g·q3_mx²` lives:
+        // the x-momentum flux evaluated from the midpoint (…_mx) values.
+        for i in 1..=n {
+            for j in 1..=n {
+                let c = grid.idx(i, j);
+                let kxa = i * m + (j - 1); // Ux(i, j−1)
+                let kxb = (i - 1) * m + (j - 1); // Ux(i−1, j−1)
+                let kya = (i - 1) * m + j; // Vy(i−1, j)
+                let kyb = (i - 1) * m + (j - 1); // Vy(i−1, j−1)
+
+                grid.h[c] -= ddx * (ux[kxa] - ux[kxb]) + ddy * (vy[kya] - vy[kyb]);
+
+                // Quantized sub-equation (two evaluations per cell).
+                let (fa, fb) = (
+                    f2_quant(&mut ctx, g2, ux[kxa], hx[kxa]),
+                    f2_quant(&mut ctx, g2, ux[kxb], hx[kxb]),
+                );
+                grid.u[c] -= ddx * (fa - fb)
+                    + ddy
+                        * (vy[kya] * uy[kya] / hy[kya] - vy[kyb] * uy[kyb] / hy[kyb]);
+
+                let (ga, gb) = match scope {
+                    QuantScope::AllFluxMuls => (
+                        f2_quant(&mut ctx, g2, vy[kya], hy[kya]),
+                        f2_quant(&mut ctx, g2, vy[kyb], hy[kyb]),
+                    ),
+                    QuantScope::UxFluxOnly => (
+                        f2_plain(g2, vy[kya], hy[kya]),
+                        f2_plain(g2, vy[kyb], hy[kyb]),
+                    ),
+                };
+                grid.v[c] -= ddx * (ux[kxa] * vx[kxa] / hx[kxa] - ux[kxb] * vx[kxb] / hx[kxb])
+                    + ddy * (ga - gb);
+            }
+        }
+
+        if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
+            snapshots.push((step + 1, interior(&grid.h, n)));
+        }
+    }
+
+    let h = interior(&grid.h, n);
+    let mass1: f64 = h.iter().sum();
+    let muls = ctx.muls;
+    SweResult {
+        h,
+        u: interior(&grid.u, n),
+        v: interior(&grid.v, n),
+        snapshots,
+        muls,
+        backend: name,
+        r2f2_stats: be.r2f2_stats(),
+        range_events: be.range_events(),
+        mass_drift: ((mass1 - mass0) / mass0).abs(),
+    }
+}
+
+/// Copy the interior n×n block out of an (n+2)²-padded field.
+fn interior(a: &[f64], n: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n * n);
+    for i in 1..=n {
+        for j in 1..=n {
+            out.push(a[i * (n + 2) + j]);
+        }
+    }
+    out
+}
+
+/// Reflective walls: depth mirrors, wall-normal momentum negates.
+fn reflect(grid: &mut Grid) {
+    let n = grid.n;
+    for j in 0..n + 2 {
+        let (w0, w1) = (grid.idx(0, j), grid.idx(1, j));
+        let (e0, e1) = (grid.idx(n + 1, j), grid.idx(n, j));
+        grid.h[w0] = grid.h[w1];
+        grid.u[w0] = -grid.u[w1];
+        grid.v[w0] = grid.v[w1];
+        grid.h[e0] = grid.h[e1];
+        grid.u[e0] = -grid.u[e1];
+        grid.v[e0] = grid.v[e1];
+    }
+    for i in 0..n + 2 {
+        let (s0, s1) = (grid.idx(i, 0), grid.idx(i, 1));
+        let (n0, n1) = (grid.idx(i, n + 1), grid.idx(i, n));
+        grid.h[s0] = grid.h[s1];
+        grid.u[s0] = grid.u[s1];
+        grid.v[s0] = -grid.v[s1];
+        grid.h[n0] = grid.h[n1];
+        grid.u[n0] = grid.u[n1];
+        grid.v[n0] = -grid.v[n1];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{rel_l2, F64Arith, FixedArith, R2f2Arith};
+    use crate::r2f2core::R2f2Config;
+    use crate::softfloat::FpFormat;
+
+    #[test]
+    fn mass_is_conserved_in_f64() {
+        let p = SweParams { steps: 50, ..SweParams::default() };
+        let res = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+        assert!(res.mass_drift < 1e-10, "mass drift {}", res.mass_drift);
+    }
+
+    #[test]
+    fn depth_stays_positive_and_bounded() {
+        let p = SweParams { steps: 100, ..SweParams::default() };
+        let res = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+        let base = p.init.base_depth;
+        assert!(res.h.iter().all(|&h| h > 0.5 * base && h < base + 2.0 * p.init.amplitude));
+    }
+
+    #[test]
+    fn waves_propagate() {
+        // After a few steps the drop must have excited momentum.
+        let p = SweParams { steps: 10, ..SweParams::default() };
+        let res = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+        let umax = res.u.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+        assert!(umax > 1e-3, "umax={umax}");
+    }
+
+    #[test]
+    fn mul_count_matches_expectation() {
+        let p = SweParams::default();
+        let res = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+        assert_eq!(res.muls, p.expected_muls());
+        // ≈ the paper's 30K multiplications in the substituted equation.
+        assert_eq!(res.muls, 30_720);
+    }
+
+    #[test]
+    fn r2f2_matches_f64_where_half_fails() {
+        // Fig. 8: R2F2-16 in the substituted equation tracks double, while
+        // E5M10 saturates on 0.5·g·h² ≈ 5e6 >> 65504 and corrupts the flow.
+        let p = SweParams { steps: 40, ..SweParams::default() };
+        let reference = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+
+        let mut r2f2 = R2f2Arith::new(R2f2Config::C16_384);
+        let ours = run(&p, &mut r2f2, QuantScope::UxFluxOnly);
+        let err_r2f2 = rel_l2(&ours.h, &reference.h);
+
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let theirs = run(&p, &mut half, QuantScope::UxFluxOnly);
+        let err_half = rel_l2(&theirs.h, &reference.h);
+
+        assert!(err_r2f2 < 1e-3, "R2F2 error {err_r2f2}");
+        assert!(err_half > 10.0 * err_r2f2, "half {err_half} vs r2f2 {err_r2f2}");
+        assert!(theirs.range_events.unwrap().overflows > 0);
+    }
+
+    #[test]
+    fn r2f2_adjustment_counts_are_small() {
+        // §5.3: "R2F2 adjusted precision 7 and 15 times, because of overflow
+        // and redundancy" within 30K muls — same order of magnitude here.
+        let p = SweParams::default();
+        let mut r2f2 = R2f2Arith::new(R2f2Config::C16_384);
+        let res = run(&p, &mut r2f2, QuantScope::UxFluxOnly);
+        let st = res.r2f2_stats.unwrap();
+        let adj = st.overflow_adjustments + st.redundancy_adjustments;
+        assert!(adj >= 1, "the ocean scale must force at least one widen");
+        assert!(adj < 100, "adjustments should be rare: {adj} in {} muls", st.muls);
+    }
+
+    #[test]
+    fn symmetric_drop_keeps_symmetry() {
+        // A centered drop on a square basin must stay x/y symmetric in f64.
+        let p = SweParams { steps: 25, ..SweParams::default() };
+        let res = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+        let n = p.n;
+        for i in 0..n {
+            for j in 0..n {
+                let a = res.h[i * n + j];
+                let b = res.h[j * n + i]; // transpose symmetry
+                assert!((a - b).abs() < 1e-9, "asymmetry at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshots_collected() {
+        let p = SweParams { steps: 20, snapshot_every: 10, ..SweParams::default() };
+        let res = run(&p, &mut F64Arith, QuantScope::UxFluxOnly);
+        assert_eq!(res.snapshots.len(), 2);
+    }
+
+    #[test]
+    fn all_flux_scope_issues_more_muls() {
+        let p = SweParams::default();
+        let only = run(&p, &mut F64Arith, QuantScope::UxFluxOnly).muls;
+        let all = run(&p, &mut F64Arith, QuantScope::AllFluxMuls).muls;
+        assert!(all > 3 * only);
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal property-based testing support (the environment has no
+//! `proptest`/`quickcheck`).
+//!
+//! Properties are closures over a [`Gen`]; [`check`] runs them for a fixed
+//! number of cases with a deterministic seed (override with the
+//! `R2F2_PROPTEST_SEED` environment variable to explore) and reports the
+//! failing case index + seed so any failure is replayable.
+
+use crate::rng::SplitMix64;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Case index (0-based) — useful in failure messages.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive) for small integer ranges.
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Log-uniform float in `[lo, hi)`, `lo > 0` — the natural distribution
+    /// for floating-point magnitudes.
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.log_uniform(lo, hi)
+    }
+
+    /// Log-uniform magnitude with random sign.
+    pub fn f64_signed_log(&mut self, lo: f64, hi: f64) -> f64 {
+        let m = self.rng.log_uniform(lo, hi);
+        if self.rng.next_u64() & 1 == 0 {
+            m
+        } else {
+            -m
+        }
+    }
+
+    /// A "nasty" f64: boundary values mixed with random bit patterns and
+    /// log-uniform magnitudes — the adversarial diet for encode/mul/add.
+    pub fn f64_nasty(&mut self) -> f64 {
+        const SPECIALS: [f64; 12] = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            2.0,
+            65504.0,
+            6.103515625e-5,
+            1e-30,
+            1e30,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+        ];
+        match self.below(4) {
+            0 => SPECIALS[self.below(SPECIALS.len() as u64) as usize],
+            1 => f64::from_bits(self.u64()),
+            _ => self.f64_signed_log(1e-20, 1e20),
+        }
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+}
+
+fn seed() -> u64 {
+    std::env::var("R2F2_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_D00D)
+}
+
+/// Run `prop` for `cases` generated inputs; panic with a replayable message
+/// on the first failure (a property fails by returning `Err(description)`
+/// or panicking itself).
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let seed = seed();
+    let mut root = SplitMix64::new(seed);
+    for case in 0..cases {
+        // Fork per case so failures are replayable independently of how
+        // many draws earlier cases consumed.
+        let mut g = Gen { rng: root.fork(), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 replay with R2F2_PROPTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 100, |g| {
+            n += 1;
+            let x = g.f64_in(0.0, 1.0);
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+        assert_eq!(n, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_case_info() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let mut a = Vec::new();
+        check("collect-a", 5, |g| {
+            a.push(g.u64());
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("collect-b", 5, |g| {
+            b.push(g.u64());
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn int_in_is_inclusive() {
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        check("int-range", 1000, |g| {
+            let v = g.int_in(-2, 2);
+            if v == -2 {
+                seen_lo = true;
+            }
+            if v == 2 {
+                seen_hi = true;
+            }
+            if (-2..=2).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v}"))
+            }
+        });
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn nasty_floats_include_specials_and_randoms() {
+        let mut zeros = 0;
+        let mut finites = 0;
+        check("nasty", 2000, |g| {
+            let x = g.f64_nasty();
+            if x == 0.0 {
+                zeros += 1;
+            }
+            if x.is_finite() {
+                finites += 1;
+            }
+            Ok(())
+        });
+        assert!(zeros > 0);
+        assert!(finites > 1000);
+    }
+}

@@ -1,0 +1,422 @@
+//! The dynamic precision-adjustment unit (§4.2, Fig. 5).
+//!
+//! A stateful R2F2 multiplier instance: it holds the current flexible split
+//! `k` (the mask) and adjusts it from the data flowing through:
+//!
+//! * **Widen** (`k += 1`): if the multiplication's *result* overflows or
+//!   underflows, or an *operand* saturates on conversion, the exponent
+//!   gains one flexible bit and the multiplication is **retried** with the
+//!   updated precision ("it issues a signal to retry the multiplication
+//!   using updated precision"). Retries cascade until the result fits or
+//!   `k = FX`. Operand *underflow* does **not** widen: the converter
+//!   flushes silently, as hardware flush-to-zero converters do — a
+//!   saturated operand has unbounded error, a flushed one is bounded by the
+//!   min normal. (Ablatable: [`R2f2Multiplier::widen_on_operand_underflow`].)
+//! * **Narrow** (`k −= 1`): after a **streak** of multiplications whose
+//!   operands *and* result all show exponent redundancy — the two bits
+//!   following the exponent MSB differing from it — one flexible bit moves
+//!   back to the mantissa for *subsequent* multiplications, improving
+//!   resolution. The streak threshold (default 32) is the hysteresis that
+//!   keeps one instance from oscillating when small- and large-range
+//!   multiplications interleave; the paper's single-digit adjustment counts
+//!   over millions of multiplications (§5.3) imply such damping even though
+//!   Fig. 5 only draws the detector.
+//!
+//! The redundancy window is two bits: the paper found one bit "too
+//! sensitive" and three bits "too conservative" (§4.2). Window width and
+//! streak threshold are both exposed for the ablation bench.
+
+use super::mul::mul_packed;
+use super::repr::R2f2Config;
+use crate::softfloat::{decode, encode, Fp, Rounder};
+
+/// Counters exposed by a multiplier instance — the quantities the paper
+/// reports in §5.3 ("precision adjustment because of overflow happened only
+/// 5 times ...; because of redundancy ... 23 times").
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Stats {
+    /// Total multiplications requested.
+    pub muls: u64,
+    /// Retries issued (one per `k` increment while a mul is in flight).
+    pub overflow_adjustments: u64,
+    /// Splits narrowed after redundancy was seen on operands and result.
+    pub redundancy_adjustments: u64,
+    /// Multiplications that still saturated/flushed at `k = FX`.
+    pub unresolved_range_events: u64,
+}
+
+/// What the adjustment unit did for one multiplication.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdjustEvent {
+    /// No precision change.
+    None,
+    /// Widened the exponent `retries` times and re-ran the multiplication.
+    WidenedAndRetried { retries: u32 },
+    /// Narrowed the exponent for subsequent operations.
+    Narrowed,
+}
+
+/// A stateful runtime-reconfigurable multiplier (one hardware instance).
+#[derive(Debug, Clone)]
+pub struct R2f2Multiplier {
+    cfg: R2f2Config,
+    k: u32,
+    rounder: Rounder,
+    stats: Stats,
+    /// Redundancy window width (bits examined after the exponent MSB).
+    window: u32,
+    /// Consecutive all-redundant multiplications required before narrowing.
+    streak_threshold: u32,
+    /// Current redundancy streak.
+    streak: u32,
+    /// Ablation switch: also widen when an operand flushes to zero.
+    widen_on_operand_underflow: bool,
+}
+
+impl R2f2Multiplier {
+    /// New instance at the configuration's default initial split.
+    pub fn new(cfg: R2f2Config) -> R2f2Multiplier {
+        Self::with_split(cfg, cfg.initial_k())
+    }
+
+    /// New instance at an explicit initial split.
+    pub fn with_split(cfg: R2f2Config, k: u32) -> R2f2Multiplier {
+        assert!(k <= cfg.fx);
+        R2f2Multiplier {
+            cfg,
+            k,
+            rounder: Rounder::nearest_even(),
+            stats: Stats::default(),
+            window: 2,
+            streak_threshold: 32,
+            streak: 0,
+            widen_on_operand_underflow: false,
+        }
+    }
+
+    /// Override the redundancy window width (ablation: 1 = "too sensitive",
+    /// 3 = "too conservative" per §4.2).
+    pub fn with_window(mut self, window: u32) -> R2f2Multiplier {
+        assert!((1..=3).contains(&window));
+        self.window = window;
+        self
+    }
+
+    /// Override the narrowing hysteresis (1 = narrow on first detection,
+    /// the literal reading of Fig. 5 — demonstrably oscillation-prone).
+    pub fn with_streak_threshold(mut self, t: u32) -> R2f2Multiplier {
+        assert!(t >= 1);
+        self.streak_threshold = t;
+        self
+    }
+
+    /// Ablation: treat operand flush-to-zero as a widen trigger too.
+    pub fn widen_on_operand_underflow(mut self, on: bool) -> R2f2Multiplier {
+        self.widen_on_operand_underflow = on;
+        self
+    }
+
+    pub fn config(&self) -> R2f2Config {
+        self.cfg
+    }
+
+    /// Current flexible split (bits granted to the exponent).
+    pub fn split(&self) -> u32 {
+        self.k
+    }
+
+    /// Current redundancy streak (exposed for cross-layer state checks).
+    pub fn streak(&self) -> u32 {
+        self.streak
+    }
+
+    /// Current mask bits (1 = flexible bit serves the exponent).
+    pub fn mask(&self) -> u32 {
+        self.cfg.mask(self.k)
+    }
+
+    pub fn stats(&self) -> Stats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = Stats::default();
+    }
+
+    /// Multiply `a × b`: convert the f64 operands into the current format,
+    /// run the truncated multiplier, let the adjustment unit react, convert
+    /// the result back (§5.2's conversion envelope).
+    pub fn mul(&mut self, a: f64, b: f64) -> f64 {
+        self.mul_traced(a, b).0
+    }
+
+    /// [`Self::mul`] that also reports what the adjustment unit did.
+    pub fn mul_traced(&mut self, a: f64, b: f64) -> (f64, AdjustEvent) {
+        self.stats.muls += 1;
+        let mut retries = 0u32;
+        loop {
+            let fmt = self.cfg.format(self.k);
+            let (fa, fla) = encode(a, fmt, &mut self.rounder);
+            let (fb, flb) = encode(b, fmt, &mut self.rounder);
+            let (fc, flc) = mul_packed(fa, fb, self.cfg, self.k, &mut self.rounder);
+
+            // Widen triggers: result out of range, or an operand saturated
+            // on conversion (unbounded error). Operand flush-to-zero is
+            // silent unless the ablation switch is on.
+            let operand_trouble = fla.overflow()
+                || flb.overflow()
+                || (self.widen_on_operand_underflow && (fla.underflow() || flb.underflow()));
+            if operand_trouble || flc.range_event() {
+                self.streak = 0;
+                if self.k < self.cfg.fx {
+                    // Widen the exponent by one flexible bit and retry.
+                    self.k += 1;
+                    self.stats.overflow_adjustments += 1;
+                    retries += 1;
+                    continue;
+                }
+                // Already at the widest exponent: accept the saturated /
+                // flushed result (the hardware has no further recourse).
+                self.stats.unresolved_range_events += 1;
+                return (
+                    decode(fc, fmt),
+                    if retries > 0 { AdjustEvent::WidenedAndRetried { retries } } else { AdjustEvent::None },
+                );
+            }
+
+            if retries > 0 {
+                return (decode(fc, fmt), AdjustEvent::WidenedAndRetried { retries });
+            }
+
+            // Redundancy: narrow for subsequent multiplications once a full
+            // streak of operations wasted exponent range.
+            if self.k > 0
+                && fmt.e_w >= self.window + 2
+                && is_redundant(fa, fmt.e_w, self.window)
+                && is_redundant(fb, fmt.e_w, self.window)
+                && is_redundant(fc, fmt.e_w, self.window)
+            {
+                self.streak += 1;
+                if self.streak >= self.streak_threshold {
+                    self.streak = 0;
+                    self.k -= 1;
+                    self.stats.redundancy_adjustments += 1;
+                    return (decode(fc, fmt), AdjustEvent::Narrowed);
+                }
+            } else {
+                self.streak = 0;
+            }
+            return (decode(fc, fmt), AdjustEvent::None);
+        }
+    }
+}
+
+/// Exponent-redundancy detector (§4.2): the `window` bits following the
+/// exponent MSB all differ from it. Zero values carry no exponent
+/// information and are never considered redundant.
+#[inline]
+pub fn is_redundant(v: Fp, e_w: u32, window: u32) -> bool {
+    if v.is_zero() {
+        return false;
+    }
+    debug_assert!(e_w >= window + 2);
+    let msb = (v.exp >> (e_w - 1)) & 1;
+    for i in 1..=window {
+        let bit = (v.exp >> (e_w - 1 - i)) & 1;
+        if bit == msb {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::softfloat::FpFormat;
+
+    #[test]
+    fn redundancy_detector_matches_paper_example() {
+        // §4.2: 8-bit exponent 10000111 (= 2^(135−127)) is redundant.
+        let v = Fp { sign: 0, exp: 0b1000_0111, frac: 0 };
+        assert!(is_redundant(v, 8, 2));
+        // 1.0 in E8: exp = 127 = 01111111 → bits after MSB are 1s → redundant.
+        let one = Fp { sign: 0, exp: 127, frac: 0 };
+        assert!(is_redundant(one, 8, 2));
+        // A large exponent (2^65: exp=192=11000000) is not redundant — the
+        // bit right after the MSB repeats it.
+        let big = Fp { sign: 0, exp: 192, frac: 0 };
+        assert!(!is_redundant(big, 8, 2));
+        // A very small exponent (2^-100: exp=27=00011011) is not redundant.
+        let small = Fp { sign: 0, exp: 27, frac: 0 };
+        assert!(!is_redundant(small, 8, 2));
+        // Zero is never redundant.
+        assert!(!is_redundant(Fp::zero(0), 8, 2));
+    }
+
+    #[test]
+    fn redundancy_implies_narrowable() {
+        // Whenever the detector fires, the value must be representable with
+        // one fewer exponent bit — otherwise narrowing would corrupt data.
+        for e_w in 4..=8u32 {
+            let wide = FpFormat::new(e_w, 8);
+            let narrow = FpFormat::new(e_w - 1, 9);
+            for exp in 1..=(wide.max_biased_exp() as u32) {
+                let v = Fp { sign: 0, exp, frac: 0 };
+                if is_redundant(v, e_w, 2) {
+                    let unbiased = exp as i64 - wide.bias();
+                    let re = unbiased + narrow.bias();
+                    assert!(
+                        re >= 1 && re <= narrow.max_biased_exp(),
+                        "e_w={e_w} exp={exp} unbiased={unbiased}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_widens_and_retries() {
+        // <3,9,3> starts at k=2 (E5M10, max 65504). 300×300=9e4 overflows
+        // E5M10 but fits E6M9 (max ≈ 4.3e9 at k=3).
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393);
+        assert_eq!(m.split(), 2);
+        let (v, ev) = m.mul_traced(300.0, 300.0);
+        assert_eq!(ev, AdjustEvent::WidenedAndRetried { retries: 1 });
+        assert_eq!(m.split(), 3);
+        assert!((v - 90000.0).abs() / 90000.0 < 2e-3, "v={v}");
+        assert_eq!(m.stats().overflow_adjustments, 1);
+    }
+
+    #[test]
+    fn underflow_widens_and_retries() {
+        // 1e-3 × 1e-3 = 1e-6 underflows E5M10 (min normal 6.1e-5) but fits
+        // E6M9 (min normal ≈ 4.3e-10).
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393);
+        let (v, ev) = m.mul_traced(1e-3, 1e-3);
+        assert!(matches!(ev, AdjustEvent::WidenedAndRetried { .. }));
+        assert!(v != 0.0 && (v - 1e-6).abs() / 1e-6 < 2e-3, "v={v}");
+    }
+
+    #[test]
+    fn redundancy_narrows_after_streak() {
+        // Multiplying values near 1.0 wastes exponent range at k=2; after a
+        // full streak the unit must shift bits back to the mantissa.
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393);
+        let k0 = m.split();
+        let mut narrow_at = None;
+        for i in 0..100 {
+            let (_, ev) = m.mul_traced(1.1, 0.9);
+            if ev == AdjustEvent::Narrowed {
+                narrow_at = Some(i);
+                break;
+            }
+        }
+        // Fires exactly at the streak threshold (32 consecutive redundant
+        // multiplications), not before.
+        assert_eq!(narrow_at, Some(31));
+        assert!(m.split() < k0);
+        assert_eq!(m.stats().redundancy_adjustments, 1);
+    }
+
+    #[test]
+    fn streak_threshold_one_narrows_immediately() {
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393).with_streak_threshold(1);
+        let (_, ev) = m.mul_traced(1.1, 0.9);
+        assert_eq!(ev, AdjustEvent::Narrowed);
+    }
+
+    #[test]
+    fn non_redundant_mul_resets_streak() {
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393).with_streak_threshold(4);
+        for _ in 0..3 {
+            let _ = m.mul_traced(1.1, 0.9); // redundant
+        }
+        let _ = m.mul_traced(400.0, 1.5); // large exponent: breaks the streak
+        for i in 0..4 {
+            let (_, ev) = m.mul_traced(1.1, 0.9);
+            if i < 3 {
+                assert_eq!(ev, AdjustEvent::None);
+            } else {
+                assert_eq!(ev, AdjustEvent::Narrowed);
+            }
+        }
+    }
+
+    #[test]
+    fn operand_flush_is_silent_by_default_but_ablatable() {
+        // 1e-9 flushes at every split of <3,9,3> (even E6M9's min normal is
+        // ≈4.3e-10 > 1e-9? no: 4.3e-10 < 1e-9, so it fits at k=3 — use 1e-10
+        // which is below every split's min normal).
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393);
+        let (v, ev) = m.mul_traced(1e-10, 5.0);
+        assert_eq!(v, 0.0); // operand flushed silently, product is zero
+        assert_eq!(ev, AdjustEvent::None);
+        assert_eq!(m.stats().overflow_adjustments, 0);
+
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393).widen_on_operand_underflow(true);
+        let (_, ev) = m.mul_traced(1e-10, 5.0);
+        // With the ablation on, the unit widens (and still cannot represent
+        // the operand, counting an unresolved event at k = FX).
+        assert!(matches!(ev, AdjustEvent::WidenedAndRetried { .. }) || m.stats().unresolved_range_events > 0);
+    }
+
+    #[test]
+    fn split_stays_in_bounds_under_random_traffic() {
+        let cfg = R2f2Config::C16_384;
+        let mut m = R2f2Multiplier::new(cfg);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..50_000 {
+            let a = rng.log_uniform(1e-8, 1e8)
+                * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let b = rng.log_uniform(1e-8, 1e8);
+            let v = m.mul(a, b);
+            assert!(m.split() <= cfg.fx);
+            assert!(v.is_finite());
+        }
+        assert_eq!(m.stats().muls, 50_000);
+    }
+
+    #[test]
+    fn accuracy_beats_fixed_half_on_wide_range() {
+        // The Fig. 6(a) story in miniature: on operands beyond E5M10's range
+        // R2F2 keeps relative error small where the fixed type saturates.
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393);
+        let a = 5000.0;
+        let b = 400.0; // product 2e6 >> 65504
+        let v = m.mul(a, b);
+        assert!((v - 2e6).abs() / 2e6 < 5e-3, "v={v}");
+        let (fixed, fl) = crate::softfloat::mul_f(a, b, FpFormat::E5M10);
+        assert!(fl.overflow());
+        assert_eq!(fixed, 65504.0); // fixed half is hopeless here
+    }
+
+    #[test]
+    fn result_exact_zero_times_anything() {
+        let mut m = R2f2Multiplier::new(R2f2Config::C16_393);
+        assert_eq!(m.mul(0.0, 123.0), 0.0);
+        assert_eq!(m.mul(-7.0, 0.0), -0.0);
+    }
+
+    #[test]
+    fn cascaded_widening_counts_each_step() {
+        // Start from k=0 and feed a product needing k=3: three retries.
+        let cfg = R2f2Config::C16_393;
+        let mut m = R2f2Multiplier::with_split(cfg, 0);
+        let (v, ev) = m.mul_traced(1000.0, 1000.0); // 1e6 needs E6
+        assert_eq!(ev, AdjustEvent::WidenedAndRetried { retries: 3 });
+        assert_eq!(m.stats().overflow_adjustments, 3);
+        assert!((v - 1e6).abs() / 1e6 < 2e-3);
+    }
+
+    #[test]
+    fn unresolved_at_max_split_saturates() {
+        let cfg = R2f2Config::C16_393; // k=FX gives E6M9, max ≈ 4.6e9? (2^31·~2)
+        let mut m = R2f2Multiplier::with_split(cfg, cfg.fx);
+        let v = m.mul(1e9, 1e9); // 1e18 overflows E6M9
+        let maxv = cfg.format(cfg.fx).max_value();
+        assert_eq!(v, maxv);
+        assert_eq!(m.stats().unresolved_range_events, 1);
+    }
+}

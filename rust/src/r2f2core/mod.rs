@@ -1,0 +1,30 @@
+//! R2F2 — the paper's contribution (§4): a **R**untime **R**econ**F**igurable
+//! **F**loating-point multiplier.
+//!
+//! A value is represented with four regions (§4.1, Fig. 4a): one sign bit, a
+//! fixed exponent region of `EB` bits, a fixed mantissa region of `MB` bits,
+//! and a flexible region of `FX` bits that can serve either field, selected
+//! at runtime by mask bits. The effective format at split `k` (k = flexible
+//! bits granted to the exponent) is `E(EB+k) M(MB+FX−k)`.
+//!
+//! Submodules:
+//! * [`repr`] — the `<EB, MB, FX>` configuration, masks, and packing.
+//! * [`mul`] — the multiplier with the paper's truncated flexible
+//!   partial-product approximation.
+//! * [`adjust`] — the dynamic precision-adjustment unit (§4.2): widen the
+//!   exponent and retry on overflow/underflow; narrow it when the operands
+//!   and result all show exponent redundancy.
+//! * [`datapath`] — cycle-accurate model of the pipelined datapath
+//!   (Table 1's latency / initiation-interval columns).
+//! * [`resource`] — FPGA FF/LUT cost model (Table 1's area columns),
+//!   calibrated on the paper's published synthesis results.
+
+pub mod adjust;
+pub mod datapath;
+pub mod mul;
+pub mod repr;
+pub mod resource;
+
+pub use adjust::{AdjustEvent, R2f2Multiplier, Stats};
+pub use mul::mul_packed;
+pub use repr::R2f2Config;

@@ -1,0 +1,185 @@
+//! The flexible `<EB, MB, FX>` representation (§4.1, Fig. 4a).
+
+use crate::softfloat::FpFormat;
+use std::fmt;
+
+/// An R2F2 multiplier configuration: `EB` fixed exponent bits, `MB` fixed
+/// mantissa bits and `FX` flexible bits. Total storage is `1 + EB + MB + FX`
+/// bits. The paper writes this `<EB, MB, FX>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct R2f2Config {
+    /// Fixed exponent bits.
+    pub eb: u32,
+    /// Fixed mantissa bits.
+    pub mb: u32,
+    /// Flexible bits, assignable to either field at runtime.
+    pub fx: u32,
+}
+
+impl R2f2Config {
+    /// 16-bit `<3,9,3>` — the configuration of Figs. 6(a-d) and 7(a).
+    pub const C16_393: R2f2Config = R2f2Config { eb: 3, mb: 9, fx: 3 };
+    /// 16-bit `<3,8,4>`.
+    pub const C16_384: R2f2Config = R2f2Config { eb: 3, mb: 8, fx: 4 };
+    /// 16-bit `<3,7,5>`.
+    pub const C16_375: R2f2Config = R2f2Config { eb: 3, mb: 7, fx: 5 };
+    /// 15-bit `<3,8,3>` — Figs. 6(e) and 7(b).
+    pub const C15_383: R2f2Config = R2f2Config { eb: 3, mb: 8, fx: 3 };
+    /// 15-bit `<3,7,4>`.
+    pub const C15_374: R2f2Config = R2f2Config { eb: 3, mb: 7, fx: 4 };
+    /// 14-bit `<3,7,3>` — Fig. 6(f).
+    pub const C14_373: R2f2Config = R2f2Config { eb: 3, mb: 7, fx: 3 };
+    /// 14-bit `<3,6,4>`.
+    pub const C14_364: R2f2Config = R2f2Config { eb: 3, mb: 6, fx: 4 };
+
+    /// All configurations evaluated in Table 1, in the paper's row order.
+    pub const TABLE1: [R2f2Config; 7] = [
+        Self::C16_393,
+        Self::C16_384,
+        Self::C16_375,
+        Self::C15_383,
+        Self::C15_374,
+        Self::C14_373,
+        Self::C14_364,
+    ];
+
+    /// Construct and validate a configuration.
+    pub const fn new(eb: u32, mb: u32, fx: u32) -> R2f2Config {
+        assert!(eb >= 2 && eb <= 8, "EB must be in 2..=8");
+        assert!(mb >= 1 && mb <= 24, "MB must be in 1..=24");
+        assert!(fx >= 1 && fx <= 8, "FX must be in 1..=8");
+        assert!(eb + fx <= 11, "EB+FX must fit the f64 carrier (≤ 11)");
+        R2f2Config { eb, mb, fx }
+    }
+
+    /// Total storage bits, sign included.
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.eb + self.mb + self.fx
+    }
+
+    /// The effective fixed format when `k` flexible bits serve the exponent.
+    pub fn format(&self, k: u32) -> FpFormat {
+        assert!(k <= self.fx, "split k={k} exceeds FX={}", self.fx);
+        FpFormat::new(self.eb + k, self.mb + (self.fx - k))
+    }
+
+    /// Mask bits for split `k`: `1` = flexible bit serves the exponent
+    /// (§4.1: "a bit 1'b1 means that the corresponding flexible bit is used
+    /// by exponent"). The k exponent bits occupy the top of the flexible
+    /// region.
+    pub const fn mask(&self, k: u32) -> u32 {
+        assert!(k <= self.fx);
+        if k == 0 {
+            0
+        } else {
+            (((1u32 << k) - 1) << (self.fx - k)) & ((1u32 << self.fx) - 1)
+        }
+    }
+
+    /// Recover the split from a mask (number of leading ones).
+    pub const fn split_of_mask(&self, mask: u32) -> u32 {
+        // Masks are contiguous-from-the-top by construction.
+        (mask << (32 - self.fx)).leading_ones()
+    }
+
+    /// Default initial split: start the exponent at 5 bits (standard half's
+    /// range) when possible, so the multiplier behaves like the fixed
+    /// baseline until the data says otherwise.
+    pub fn initial_k(&self) -> u32 {
+        (5u32.saturating_sub(self.eb)).min(self.fx)
+    }
+
+    /// Truncation width of the flexible partial products at split `k`
+    /// (DESIGN.md §3): the hardware keeps only `FX` extra result bits beyond
+    /// the fixed `2·MB`, dropping the lowest `t = max(0, 2·(FX−k) − FX)`
+    /// product bits.
+    pub const fn trunc_bits(&self, k: u32) -> u32 {
+        let f = self.fx - k; // flexible bits currently on the mantissa
+        if 2 * f > self.fx {
+            2 * f - self.fx
+        } else {
+            0
+        }
+    }
+
+    /// Widest exponent this configuration can reach (`k = FX`).
+    pub fn max_exponent_format(&self) -> FpFormat {
+        self.format(self.fx)
+    }
+}
+
+impl fmt::Display for R2f2Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<{},{},{}>", self.eb, self.mb, self.fx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_bits_matches_paper_configs() {
+        assert_eq!(R2f2Config::C16_393.total_bits(), 16);
+        assert_eq!(R2f2Config::C16_384.total_bits(), 16);
+        assert_eq!(R2f2Config::C16_375.total_bits(), 16);
+        assert_eq!(R2f2Config::C15_383.total_bits(), 15);
+        assert_eq!(R2f2Config::C14_373.total_bits(), 14);
+    }
+
+    #[test]
+    fn format_split_arithmetic() {
+        let c = R2f2Config::C16_393;
+        assert_eq!(c.format(0), FpFormat::new(3, 12));
+        assert_eq!(c.format(2), FpFormat::new(5, 10)); // = E5M10 shape
+        assert_eq!(c.format(3), FpFormat::new(6, 9));
+    }
+
+    #[test]
+    fn paper_widest_range_for_384() {
+        // §4.1: <3,8,4> at k=FX reaches E7M8, max ≈ 1.8410715e19.
+        let f = R2f2Config::C16_384.max_exponent_format();
+        assert_eq!(f, FpFormat::new(7, 8));
+        assert!((f.max_value() - 1.8410715e19).abs() / 1.8410715e19 < 1e-7);
+    }
+
+    #[test]
+    fn masks_are_contiguous_and_invertible() {
+        let c = R2f2Config::new(3, 8, 4);
+        assert_eq!(c.mask(0), 0b0000);
+        assert_eq!(c.mask(1), 0b1000);
+        assert_eq!(c.mask(2), 0b1100);
+        assert_eq!(c.mask(4), 0b1111);
+        for k in 0..=c.fx {
+            assert_eq!(c.split_of_mask(c.mask(k)), k);
+        }
+    }
+
+    #[test]
+    fn initial_split_mimics_half_range() {
+        assert_eq!(R2f2Config::C16_393.initial_k(), 2); // E5M10
+        assert_eq!(R2f2Config::C15_383.initial_k(), 2); // E5M9
+        assert_eq!(R2f2Config::C14_373.initial_k(), 2); // E5M8
+        assert_eq!(R2f2Config::new(6, 8, 1).initial_k(), 0);
+    }
+
+    #[test]
+    fn truncation_widths() {
+        let c = R2f2Config::C16_393; // FX=3
+        assert_eq!(c.trunc_bits(3), 0); // all flex on exponent: exact
+        assert_eq!(c.trunc_bits(2), 0); // f=1, 2f=2 ≤ 3
+        assert_eq!(c.trunc_bits(1), 1); // f=2, 2f=4 > 3
+        assert_eq!(c.trunc_bits(0), 3); // f=3, 2f=6 > 3
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(R2f2Config::C16_393.to_string(), "<3,9,3>");
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_split_panics() {
+        let _ = R2f2Config::C16_393.format(4);
+    }
+}

@@ -1,0 +1,154 @@
+//! ASCII renderings of the paper's figures, so `cargo bench` output shows
+//! the *shape* of each result (wave profiles, error curves, histograms)
+//! directly in the terminal / bench_output.txt.
+
+/// Render one or more named series as an ASCII line plot.
+///
+/// All series share the x-index (0..len) and the y-scale. Each series draws
+/// with its own glyph; later series overdraw earlier ones.
+pub fn line_plot(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    assert!(!series.is_empty() && height >= 2 && width >= 2);
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    let mut maxlen = 0usize;
+    for (_, ys) in series {
+        maxlen = maxlen.max(ys.len());
+        for &y in ys.iter().filter(|y| y.is_finite()) {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !ymin.is_finite() || ymax == ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let x = if maxlen <= 1 { 0 } else { i * (width - 1) / (maxlen - 1) };
+            let fy = (y - ymin) / (ymax - ymin);
+            let r = height - 1 - ((fy * (height - 1) as f64).round() as usize).min(height - 1);
+            canvas[r][x] = g;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("  ymax = {ymax:.4e}\n"));
+    for row in canvas {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("  ymin = {ymin:.4e}   legend: "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", glyphs[si % glyphs.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Render a pre-bucketed histogram (`(label, count)` bars).
+pub fn histogram(title: &str, buckets: &[(String, u64)], width: usize) -> String {
+    let maxc = buckets.iter().map(|(_, c)| *c).max().unwrap_or(1).max(1);
+    let lw = buckets.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = format!("{title}\n");
+    for (label, count) in buckets {
+        let bar = (*count as usize * width) / maxc as usize;
+        out.push_str(&format!("  {label:<lw$} |{} {count}\n", "#".repeat(bar)));
+    }
+    out
+}
+
+/// Render a small 2D field (e.g. the SWE height map) with intensity glyphs.
+pub fn surface(title: &str, field: &[f64], n: usize) -> String {
+    assert_eq!(field.len(), n * n);
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in field.iter().filter(|v| v.is_finite()) {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || hi == lo {
+        hi = lo + 1.0;
+    }
+    let mut out = format!("{title}  [{lo:.4e} … {hi:.4e}]\n");
+    for j in 0..n {
+        out.push_str("  ");
+        for i in 0..n {
+            let v = field[j * n + i];
+            let t = if v.is_finite() { (v - lo) / (hi - lo) } else { 0.0 };
+            let idx = ((t * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+            out.push(RAMP[idx] as char); // double width ≈ square pixels
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_plot_contains_series_and_bounds() {
+        let ys: Vec<f64> = (0..50).map(|i| (i as f64 / 8.0).sin()).collect();
+        let p = line_plot("sine", &[("u", &ys)], 60, 12);
+        assert!(p.contains("sine"));
+        assert!(p.contains("ymax"));
+        assert!(p.contains('*'));
+        assert_eq!(p.lines().count(), 12 + 4);
+    }
+
+    #[test]
+    fn two_series_two_glyphs() {
+        let a = [0.0, 1.0, 0.0];
+        let b = [1.0, 0.0, 1.0];
+        let p = line_plot("two", &[("a", &a), ("b", &b)], 20, 8);
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.contains("legend"));
+    }
+
+    #[test]
+    fn histogram_bars_scale() {
+        let b = vec![("[0,1)".to_string(), 10u64), ("[1,2)".to_string(), 5)];
+        let h = histogram("h", &b, 20);
+        let lines: Vec<&str> = h.lines().collect();
+        let bars: Vec<usize> =
+            lines[1..].iter().map(|l| l.matches('#').count()).collect();
+        assert_eq!(bars[0], 20);
+        assert_eq!(bars[1], 10);
+    }
+
+    #[test]
+    fn surface_renders_square() {
+        let f: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let s = surface("field", &f, 4);
+        assert_eq!(s.lines().count(), 5);
+        assert!(s.contains('@'));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let ys = [2.0; 10];
+        let p = line_plot("const", &[("c", &ys)], 20, 5);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn non_finite_values_skipped() {
+        let ys = [1.0, f64::NAN, 2.0, f64::INFINITY, 0.5];
+        let p = line_plot("nan", &[("v", &ys)], 20, 5);
+        assert!(p.contains('*'));
+        let f = [1.0, f64::NAN, 2.0, 0.0];
+        let s = surface("nan", &f, 2);
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal CSV writing (quoting only when needed).
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// Accumulates rows, then writes to a string or file.
+#[derive(Debug, Default, Clone)]
+pub struct CsvWriter {
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new() -> CsvWriter {
+        CsvWriter::default()
+    }
+
+    /// Add a row of raw cells (quoted on write if they contain `,"\n`).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Add a row of floats.
+    pub fn row_f64(&mut self, cells: &[f64]) -> &mut Self {
+        self.rows.push(cells.iter().map(|v| format!("{v}")).collect());
+        self
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let encoded: Vec<String> = row.iter().map(|c| quote(c)).collect();
+            out.push_str(&encoded.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_rows() {
+        let mut w = CsvWriter::new();
+        w.row(vec!["a", "b"]).row_f64(&[1.5, 2.0]);
+        assert_eq!(w.to_string(), "a,b\n1.5,2\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new();
+        w.row(vec!["x,y", "he said \"hi\""]);
+        assert_eq!(w.to_string(), "\"x,y\",\"he said \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut w = CsvWriter::new();
+        w.row(vec!["k", "v"]).row(vec!["n", "3"]);
+        let p = std::env::temp_dir().join("r2f2_csv_test/out.csv");
+        w.write(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "k,v\nn,3\n");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,121 @@
+//! Report emitters: aligned tables, CSV files, and ASCII plots.
+//!
+//! The bench binaries print the paper's tables/figures through this module
+//! so `cargo bench | tee bench_output.txt` records everything as text, and
+//! also drop machine-readable CSVs under `target/reports/`.
+
+pub mod ascii_plot;
+pub mod csv;
+
+pub use ascii_plot::{histogram, line_plot, surface};
+pub use csv::CsvWriter;
+
+/// An aligned text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with columns padded to their widest cell. First column is
+    /// left-aligned, the rest right-aligned (numeric convention).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for row in std::iter::once(&self.header).chain(self.rows.iter()) {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |row: &[String], out: &mut String| {
+            for (i, c) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                if i == 0 {
+                    out.push_str(&format!("{:<w$}", c, w = width[i]));
+                } else {
+                    out.push_str(&format!("{:>w$}", c, w = width[i]));
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(r, &mut out);
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` significant decimals, trimming noise.
+pub fn sig(v: f64, digits: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if !(1e-4..1e7).contains(&a) {
+        return format!("{v:.*e}", digits.saturating_sub(1));
+    }
+    let decimals = (digits as i32 - 1 - a.log10().floor() as i32).max(0) as usize;
+    format!("{v:.decimals$}")
+}
+
+/// Percentage rendering (`0.702` → `70.2%`).
+pub fn pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["short", "1"]).row(vec!["a-much-longer-name", "12345"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[1].starts_with('-'));
+        // Right-aligned second column: both rows end aligned.
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_mismatch_panics() {
+        Table::new(vec!["a", "b"]).row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn sig_formatting() {
+        assert_eq!(sig(0.0, 3), "0");
+        assert_eq!(sig(1234.5678, 4), "1235");
+        assert_eq!(sig(0.00123, 3), "0.00123");
+        assert!(sig(1.23e-9, 3).contains('e'));
+    }
+
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(pct(0.702), "70.2%");
+        assert_eq!(pct(0.0), "0.0%");
+    }
+}

@@ -1,0 +1,110 @@
+//! PJRT client wrapper: HLO text → compiled executable → literal execution.
+//!
+//! The interchange is HLO **text** (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+
+use super::manifest::{ArtifactInfo, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled artifact ready to run.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Output-tuple arity per the manifest.
+    pub outputs: usize,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True, so outputs always arrive as
+        // one tuple literal.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.outputs {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.outputs,
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Convenience: run and read output `idx` as a f32 vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal], idx: usize) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        Ok(outs[idx].to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT CPU client plus an executable cache (compile once per artifact,
+/// reuse across jobs — "one compiled executable per model variant").
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Create from the default artifacts directory (`$R2F2_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(&super::manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let info: ArtifactInfo = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))?
+            .clone();
+        let path = self.manifest.path_of(&info);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = std::sync::Arc::new(Executable { name: name.to_string(), exe, outputs: info.outputs });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Literal helpers for the common dtypes.
+    pub fn lit_f32(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    pub fn lit_i32(data: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// 2-D f32 literal (row-major).
+    pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+}

@@ -1,0 +1,164 @@
+//! Simulation step-loop executors: rust owns the time loop, the compiled
+//! step is the body. State literals feed back between steps — the request
+//! path is pure rust → PJRT.
+
+use super::client::{Executable, Runtime};
+use crate::metrics::Registry;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Heat-equation runner over a `heat_step_*` artifact.
+pub struct HeatRunner {
+    exe: Arc<Executable>,
+    pub n: usize,
+    /// Whether the artifact threads R2F2 unit state (5 outputs) or is a
+    /// plain field→field step (1 output).
+    adaptive: bool,
+    metrics: Registry,
+}
+
+/// Result of a heat run through PJRT.
+#[derive(Debug, Clone)]
+pub struct HeatRunOutput {
+    pub u: Vec<f32>,
+    /// Total widen / narrow adjustment events (adaptive variants only).
+    pub widen: i64,
+    pub narrow: i64,
+    /// Wall time of the stepped region.
+    pub elapsed: std::time::Duration,
+    pub steps: usize,
+}
+
+impl HeatRunner {
+    /// `variant` is a manifest name: `heat_step_r2f2`, `heat_step_e5m10`,
+    /// `heat_step_f32`.
+    pub fn new(rt: &mut Runtime, variant: &str, metrics: Registry) -> Result<HeatRunner> {
+        let info = rt
+            .manifest
+            .find(variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown heat variant {variant}"))?;
+        let n = info.inputs[0].0[0];
+        let adaptive = info.outputs == 5;
+        let exe = rt.load(variant)?;
+        Ok(HeatRunner { exe, n, adaptive, metrics })
+    }
+
+    /// Run `steps` steps from the initial field `u0` with diffusion number
+    /// `r`. Initial unit split `k0` applies to adaptive variants.
+    pub fn run(&self, u0: &[f32], r: f32, steps: usize, k0: i32) -> Result<HeatRunOutput> {
+        assert_eq!(u0.len(), self.n, "field length must match the artifact");
+        let r_lit = Runtime::lit_f32(&[r]);
+        let mut u = Runtime::lit_f32(u0);
+        let mut k = Runtime::lit_i32(&vec![k0; self.n]);
+        let mut s = Runtime::lit_i32(&vec![0i32; self.n]);
+        let mut widen = 0i64;
+        let mut narrow = 0i64;
+
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            if self.adaptive {
+                let mut outs = self.exe.run(&[u, r_lit.clone_literal(), k, s])?;
+                // Outputs: u', k', streak', widen, narrow.
+                let nr: Vec<i32> = outs[4].to_vec()?;
+                let wd: Vec<i32> = outs[3].to_vec()?;
+                widen += wd.iter().map(|&x| x as i64).sum::<i64>();
+                narrow += nr.iter().map(|&x| x as i64).sum::<i64>();
+                s = outs.remove(2);
+                k = outs.remove(1);
+                u = outs.remove(0);
+            } else {
+                let mut outs = self.exe.run(&[u, r_lit.clone_literal()])?;
+                u = outs.remove(0);
+            }
+        }
+        let elapsed = t0.elapsed();
+        self.metrics.inc("heat.steps", steps as u64);
+        self.metrics.observe_ns(
+            &format!("heat.run.{}", self.exe.name),
+            elapsed.as_nanos() as u64,
+        );
+        Ok(HeatRunOutput { u: u.to_vec::<f32>()?, widen, narrow, elapsed, steps })
+    }
+}
+
+/// Shallow-water runner over a `swe_step_*` artifact.
+pub struct SweRunner {
+    exe: Arc<Executable>,
+    pub n: usize,
+    adaptive: bool,
+    metrics: Registry,
+}
+
+/// Result of an SWE run through PJRT.
+#[derive(Debug, Clone)]
+pub struct SweRunOutput {
+    /// Final padded (n+2)² height field, row-major.
+    pub h: Vec<f32>,
+    pub widen: i64,
+    pub narrow: i64,
+    pub elapsed: std::time::Duration,
+    pub steps: usize,
+}
+
+impl SweRunner {
+    pub fn new(rt: &mut Runtime, variant: &str, metrics: Registry) -> Result<SweRunner> {
+        let info = rt
+            .manifest
+            .find(variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown swe variant {variant}"))?;
+        let n = info.inputs[0].0[0] - 2;
+        let adaptive = info.outputs == 7;
+        let exe = rt.load(variant)?;
+        Ok(SweRunner { exe, n, adaptive, metrics })
+    }
+
+    /// Run from padded initial fields (length (n+2)²).
+    pub fn run(&self, h0: &[f32], steps: usize, k0: i32) -> Result<SweRunOutput> {
+        let side = self.n + 2;
+        assert_eq!(h0.len(), side * side);
+        let lanes = (self.n + 1) * self.n;
+        let mut h = Runtime::lit_f32_2d(h0, side, side)?;
+        let zeros = vec![0f32; side * side];
+        let mut u = Runtime::lit_f32_2d(&zeros, side, side)?;
+        let mut v = Runtime::lit_f32_2d(&zeros, side, side)?;
+        let mut k = Runtime::lit_i32(&vec![k0; lanes]);
+        let mut s = Runtime::lit_i32(&vec![0i32; lanes]);
+        let mut widen = 0i64;
+        let mut narrow = 0i64;
+
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            if self.adaptive {
+                let mut outs = self.exe.run(&[h, u, v, k, s])?;
+                widen += outs[5].get_first_element::<i32>()? as i64;
+                narrow += outs[6].get_first_element::<i32>()? as i64;
+                s = outs.remove(4);
+                k = outs.remove(3);
+                v = outs.remove(2);
+                u = outs.remove(1);
+                h = outs.remove(0);
+            } else {
+                let mut outs = self.exe.run(&[h, u, v])?;
+                v = outs.remove(2);
+                u = outs.remove(1);
+                h = outs.remove(0);
+            }
+        }
+        let elapsed = t0.elapsed();
+        self.metrics.inc("swe.steps", steps as u64);
+        Ok(SweRunOutput { h: h.to_vec::<f32>()?, widen, narrow, elapsed, steps })
+    }
+}
+
+/// `xla::Literal` lacks `Clone`; shallow re-materialize via raw copy.
+trait CloneLiteral {
+    fn clone_literal(&self) -> xla::Literal;
+}
+
+impl CloneLiteral for xla::Literal {
+    fn clone_literal(&self) -> xla::Literal {
+        let v: Vec<f32> = self.to_vec().expect("clone_literal: f32 vec");
+        xla::Literal::vec1(&v)
+    }
+}

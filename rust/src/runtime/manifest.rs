@@ -1,0 +1,150 @@
+//! `artifacts/manifest.json` loading — the contract between the AOT
+//! pipeline and the rust runtime (names, files, input shapes, output
+//! arity).
+
+use crate::config::json_mini::{parse_json, Json};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    /// Input specs as (shape, dtype) in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+    pub note: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub heat_n: usize,
+    pub swe_n: usize,
+    pub elemwise_n: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = parse_json(text)?;
+        let get_n = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("manifest missing `{k}`"))
+        };
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing `artifacts`")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or("artifact missing inputs")?
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    let dtype =
+                        i.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+                    (shape, dtype)
+                })
+                .collect();
+            artifacts.push(ArtifactInfo {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact missing name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact missing file")?
+                    .to_string(),
+                inputs,
+                outputs: a.get("outputs").and_then(Json::as_usize).unwrap_or(1),
+                note: a.get("note").and_then(Json::as_str).unwrap_or("").to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            heat_n: get_n("heat_n")?,
+            swe_n: get_n("swe_n")?,
+            elemwise_n: get_n("elemwise_n")?,
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn path_of(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+/// Default artifacts directory: `$R2F2_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("R2F2_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "heat_n": 512, "swe_n": 16, "elemwise_n": 1024,
+        "artifacts": [
+            {"name": "heat_step_f32", "file": "heat_step_f32.hlo.txt",
+             "inputs": [{"shape": [512], "dtype": "float32"},
+                        {"shape": [1], "dtype": "float32"}],
+             "outputs": 1, "note": "plain"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.heat_n, 512);
+        let a = m.find("heat_step_f32").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].0, vec![512]);
+        assert_eq!(a.outputs, 1);
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/arts/heat_step_f32.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(Manifest::parse(Path::new("."), "{\"heat_n\": 1}").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft test: only checks when `make artifacts` has run.
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("heat_step_r2f2").is_some());
+            assert!(m.find("r2f2_mul_k2").is_some());
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from rust. This is the only
+//! bridge between Layer 3 and the compiled Layer-1/Layer-2 computations —
+//! python never runs on this path.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use executor::{HeatRunner, SweRunner};
+pub use manifest::{ArtifactInfo, Manifest};

@@ -1,0 +1,216 @@
+//! Arbitrary-precision floating-point addition/subtraction.
+//!
+//! A textbook align–add–normalize–round datapath with guard/round/sticky
+//! bits, correctly rounded in a single step for every supported format.
+//! The PDE solvers use it for the "fully quantized" mode (the Fig. 1
+//! half-precision baseline, where the whole state lives in the format), and
+//! it stands in for the approximate-adder substrate the paper cites
+//! (Omidi et al., Liu et al.).
+
+use super::format::{Flags, Fp, FpFormat};
+use super::round::Rounder;
+
+/// Guard + round + sticky bits carried through alignment.
+const G: u32 = 3;
+
+/// Add two packed values of the same format with one rounding step.
+///
+/// Signed-zero behaviour follows IEEE round-to-nearest: `(+0) + (−0) = +0`,
+/// exact cancellation of finite values gives `+0`.
+pub fn add(a: Fp, b: Fp, fmt: FpFormat, r: &mut Rounder) -> (Fp, Flags) {
+    if a.is_zero() && b.is_zero() {
+        return (Fp::zero(a.sign & b.sign), Flags::NONE);
+    }
+    if a.is_zero() {
+        return (b, Flags::NONE);
+    }
+    if b.is_zero() {
+        return (a, Flags::NONE);
+    }
+
+    // Order by magnitude so `hi` dominates the result sign.
+    let (hi, lo) =
+        if (a.exp, a.frac) >= (b.exp, b.frac) { (a, b) } else { (b, a) };
+    let m_w = fmt.m_w;
+    let mhi = (((1u64 << m_w) | hi.frac) as u128) << G;
+    let mlo_full = ((1u64 << m_w) | lo.frac) as u128;
+    let d = hi.exp - lo.exp;
+
+    // Align the smaller operand, collapsing shifted-out bits into sticky.
+    let mlo = if d == 0 {
+        mlo_full << G
+    } else if d >= m_w + G + 2 {
+        1 // pure sticky: lo is non-zero but far below the guard bits
+    } else {
+        let full = mlo_full << G;
+        let kept = full >> d;
+        let lost = full & ((1u128 << d) - 1);
+        kept | (lost != 0) as u128
+    };
+
+    let mut flags = Flags::NONE;
+    if a.sign == b.sign {
+        // Effective addition: sum ∈ [2^(m_w+G+1), 2^(m_w+G+2)).
+        let sum = mhi + mlo;
+        let (shift, exp_inc) =
+            if sum >> (m_w + G + 1) != 0 { (G + 1, 1i64) } else { (G, 0i64) };
+        let (val, inexact) = r.round_shift(sum, shift);
+        if inexact {
+            flags |= Flags::INEXACT;
+        }
+        pack(val, hi.sign, hi.exp as i64 + exp_inc, fmt, flags)
+    } else {
+        // Effective subtraction. Note: if the result needs a left shift
+        // (cancellation), then d ≤ 1 and alignment lost no bits, so the
+        // sticky bit is exact and shifting it left is sound.
+        let diff = mhi - mlo;
+        if diff == 0 {
+            return (Fp::zero(0), flags);
+        }
+        let msb = 127 - diff.leading_zeros(); // index of leading 1
+        let target = m_w + G;
+        debug_assert!(msb <= target);
+        let lshift = target - msb;
+        let e = hi.exp as i64 - lshift as i64;
+        if e <= 0 {
+            return (Fp::zero(hi.sign), flags | Flags::UNDERFLOW);
+        }
+        let (val, inexact) = r.round_shift(diff << lshift, G);
+        if inexact {
+            flags |= Flags::INEXACT;
+        }
+        pack(val, hi.sign, e, fmt, flags)
+    }
+}
+
+/// Common tail: handle the post-rounding renormalize carry, then range-check
+/// the exponent and pack.
+fn pack(mut val: u64, sign: u8, mut e: i64, fmt: FpFormat, flags: Flags) -> (Fp, Flags) {
+    let m_w = fmt.m_w;
+    if val >> (m_w + 1) != 0 {
+        val >>= 1; // 10.00…0 — exact
+        e += 1;
+    }
+    debug_assert!(val >> m_w == 1, "normalized significand expected");
+    if e <= 0 {
+        return (Fp::zero(sign), flags | Flags::UNDERFLOW);
+    }
+    if e > fmt.max_biased_exp() {
+        return (fmt.max_finite(sign), flags | Flags::OVERFLOW);
+    }
+    (Fp { sign, exp: e as u32, frac: val & ((1u64 << m_w) - 1) }, flags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::softfloat::{decode, encode};
+
+    fn enc(x: f64, fmt: FpFormat) -> Fp {
+        encode(x, fmt, &mut Rounder::nearest_even()).0
+    }
+
+    #[test]
+    fn simple_sums_exact() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        for &(a, b, want) in &[
+            (1.0, 1.0, 2.0),
+            (1.5, 0.25, 1.75),
+            (-3.0, 1.0, -2.0),
+            (100.0, -100.0, 0.0),
+            (0.0, 5.0, 5.0),
+        ] {
+            let (s, _) = add(enc(a, fmt), enc(b, fmt), fmt, &mut r);
+            assert_eq!(decode(s, fmt), want, "{a}+{b}");
+        }
+    }
+
+    #[test]
+    fn matches_single_rounding_reference_random() {
+        // m_w ≤ 24: exact sum fits f64, so f64-add + one encode is the
+        // correctly-rounded reference.
+        let fmt = FpFormat::new(6, 11);
+        let mut r = Rounder::nearest_even();
+        let mut rng = SplitMix64::new(2024);
+        for _ in 0..50_000 {
+            let a = decode(enc(rng.log_uniform(1e-4, 1e4), fmt), fmt)
+                * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let b = decode(enc(rng.log_uniform(1e-4, 1e4), fmt), fmt)
+                * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let (s, _) = add(enc(a, fmt), enc(b, fmt), fmt, &mut r);
+            let want = encode(a + b, fmt, &mut Rounder::nearest_even()).0;
+            assert_eq!(s, want, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn catastrophic_cancellation_is_exact() {
+        // Sterbenz: if a/2 ≤ b ≤ 2a the difference is exact.
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let a = 1.0 + 512.0 * fmt.ulp_at_one();
+        let b = -1.0;
+        let (s, fl) = add(enc(a, fmt), enc(b, fmt), fmt, &mut r);
+        assert_eq!(decode(s, fmt), a - 1.0);
+        assert!(!fl.inexact());
+    }
+
+    #[test]
+    fn exact_cancel_gives_plus_zero() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (s, _) = add(enc(7.5, fmt), enc(-7.5, fmt), fmt, &mut r);
+        assert!(s.is_zero());
+        assert_eq!(s.sign, 0);
+    }
+
+    #[test]
+    fn tiny_plus_huge_keeps_huge() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (s, fl) = add(enc(65504.0, fmt), enc(1e-4, fmt), fmt, &mut r);
+        assert_eq!(decode(s, fmt), 65504.0);
+        assert!(fl.inexact());
+    }
+
+    #[test]
+    fn overflow_saturates() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (s, fl) = add(enc(65504.0, fmt), enc(65504.0, fmt), fmt, &mut r);
+        assert!(fl.overflow());
+        assert_eq!(decode(s, fmt), 65504.0);
+    }
+
+    #[test]
+    fn subtraction_underflow_flushes() {
+        // Two adjacent tiny normals differ by less than the min normal.
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let tiny = fmt.min_normal();
+        let tiny2 = tiny * (1.0 + fmt.ulp_at_one());
+        let (s, fl) = add(enc(tiny2, fmt), enc(-tiny, fmt), fmt, &mut r);
+        assert!(fl.underflow());
+        assert!(s.is_zero());
+    }
+
+    #[test]
+    fn commutative() {
+        let fmt = FpFormat::new(5, 7);
+        let mut rng = SplitMix64::new(31);
+        let mut r = Rounder::nearest_even();
+        for _ in 0..10_000 {
+            let a = enc(
+                rng.log_uniform(1e-3, 1e3) * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 },
+                fmt,
+            );
+            let b = enc(
+                rng.log_uniform(1e-3, 1e3) * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 },
+                fmt,
+            );
+            assert_eq!(add(a, b, fmt, &mut r), add(b, a, fmt, &mut r));
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Conversion between `f64` and arbitrary formats.
+//!
+//! The paper's datapath reads operands "converting from single precision to
+//! R2F2 format and converting back" (§5.2); `encode`/`decode` are that
+//! conversion for any [`FpFormat`]. `f64` is the carrier type so the same
+//! code also services the double-precision reference runs.
+
+use super::format::{pow2, Flags, Fp, FpFormat};
+use super::round::Rounder;
+
+const F64_FRAC_BITS: u32 = 52;
+const F64_EXP_MASK: u64 = 0x7FF;
+
+/// Encode an `f64` into `fmt` with one correctly-rounded step.
+///
+/// * f64 subnormals flush to zero (they are far below any supported format's
+///   range anyway).
+/// * ±inf saturates to the max finite value with [`Flags::OVERFLOW`].
+/// * NaN maps to +0 with [`Flags::NAN_INPUT`].
+/// * Results below the min normal flush to zero with [`Flags::UNDERFLOW`];
+///   above the max finite they saturate with [`Flags::OVERFLOW`].
+#[inline]
+pub fn encode(x: f64, fmt: FpFormat, r: &mut Rounder) -> (Fp, Flags) {
+    let bits = x.to_bits();
+    let sign = (bits >> 63) as u8;
+    let e_f64 = ((bits >> F64_FRAC_BITS) & F64_EXP_MASK) as i64;
+    let frac52 = bits & ((1u64 << F64_FRAC_BITS) - 1);
+
+    if e_f64 == 0 {
+        // Zero or f64 subnormal: flush.
+        let fl = if frac52 != 0 { Flags::UNDERFLOW } else { Flags::NONE };
+        return (Fp::zero(sign), fl);
+    }
+    if e_f64 == F64_EXP_MASK as i64 {
+        if frac52 != 0 {
+            return (Fp::zero(0), Flags::NAN_INPUT);
+        }
+        return (fmt.max_finite(sign), Flags::OVERFLOW);
+    }
+
+    let unbiased = e_f64 - 1023;
+    let mut flags = Flags::NONE;
+
+    // Round the 52-bit fraction to m_w bits.
+    let frac;
+    let mut exp_carry = 0i64;
+    if fmt.m_w >= F64_FRAC_BITS {
+        frac = frac52 << (fmt.m_w - F64_FRAC_BITS);
+    } else {
+        let shift = F64_FRAC_BITS - fmt.m_w;
+        let (f, inexact) = r.round_shift(frac52 as u128, shift);
+        if inexact {
+            flags |= Flags::INEXACT;
+        }
+        if f >> fmt.m_w != 0 {
+            // Fraction rounded up to 2.0: renormalize.
+            frac = 0;
+            exp_carry = 1;
+        } else {
+            frac = f;
+        }
+    }
+
+    let e = unbiased + exp_carry + fmt.bias();
+    if e <= 0 {
+        return (Fp::zero(sign), flags | Flags::UNDERFLOW);
+    }
+    if e > fmt.max_biased_exp() {
+        return (fmt.max_finite(sign), flags | Flags::OVERFLOW);
+    }
+    (Fp { sign, exp: e as u32, frac }, flags)
+}
+
+/// Decode a packed value back to `f64`. Exact: every representable value of
+/// every supported format is exactly representable in `f64`.
+#[inline]
+pub fn decode(fp: Fp, fmt: FpFormat) -> f64 {
+    if fp.is_zero() {
+        return if fp.sign == 1 { -0.0 } else { 0.0 };
+    }
+    let e = fp.exp as i64 - fmt.bias();
+    let m = 1.0 + fp.frac as f64 / (1u64 << fmt.m_w) as f64;
+    let v = m * pow2(e);
+    if fp.sign == 1 {
+        -v
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        for &x in &[1.0, -1.0, 0.5, 1.5, 2.0, 65504.0, 6.103515625e-5, -1024.0] {
+            let (fp, fl) = encode(x, fmt, &mut r);
+            assert!(fl.is_empty(), "x={x} flags={fl:?}");
+            assert_eq!(decode(fp, fmt), x);
+        }
+    }
+
+    #[test]
+    fn zero_signs_preserved() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (fp, _) = encode(-0.0, fmt, &mut r);
+        assert!(fp.is_zero() && fp.sign == 1);
+        assert_eq!(decode(fp, fmt).to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn e8m23_encode_matches_f32_cast() {
+        // Rounding f64 -> E8M23 must match the hardware f64->f32 conversion
+        // on values that stay normal.
+        let fmt = FpFormat::E8M23;
+        let mut r = Rounder::nearest_even();
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..50_000 {
+            let x = rng.log_uniform(1e-30, 1e30)
+                * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let want = x as f32;
+            if !want.is_normal() {
+                continue;
+            }
+            let (fp, _) = encode(x, fmt, &mut r);
+            assert_eq!(decode(fp, fmt) as f32, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn e11m52_is_lossless_for_f64_normals() {
+        let fmt = FpFormat::E11M52;
+        let mut r = Rounder::nearest_even();
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..10_000 {
+            let x = f64::from_bits(rng.next_u64());
+            if !x.is_normal() {
+                continue;
+            }
+            let (fp, fl) = encode(x, fmt, &mut r);
+            assert!(fl.is_empty());
+            assert_eq!(decode(fp, fmt), x);
+        }
+    }
+
+    #[test]
+    fn overflow_saturates_and_flags() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (fp, fl) = encode(1e6, fmt, &mut r);
+        assert!(fl.overflow());
+        assert_eq!(decode(fp, fmt), 65504.0);
+        let (fp, fl) = encode(-1e6, fmt, &mut r);
+        assert!(fl.overflow());
+        assert_eq!(decode(fp, fmt), -65504.0);
+    }
+
+    #[test]
+    fn underflow_flushes_and_flags() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (fp, fl) = encode(1e-6, fmt, &mut r);
+        assert!(fl.underflow());
+        assert!(fp.is_zero());
+    }
+
+    #[test]
+    fn inf_nan_handled() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (fp, fl) = encode(f64::INFINITY, fmt, &mut r);
+        assert!(fl.overflow());
+        assert_eq!(decode(fp, fmt), 65504.0);
+        let (fp, fl) = encode(f64::NAN, fmt, &mut r);
+        assert!(fl.nan_input());
+        assert!(fp.is_zero());
+    }
+
+    #[test]
+    fn rounding_carry_into_exponent() {
+        // 2047.9999 rounds up to 2048 in E5M10 (all-ones fraction carries).
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let x = 2047.9999;
+        let (fp, fl) = encode(x, fmt, &mut r);
+        assert!(fl.inexact());
+        assert_eq!(decode(fp, fmt), 2048.0);
+    }
+
+    #[test]
+    fn boundary_just_above_max_rounds_to_overflow() {
+        // Values that round to 2^16 overflow E5M10 even though 65504 doesn't.
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (fp, fl) = encode(65520.0, fmt, &mut r); // rounds to 65536
+        assert!(fl.overflow());
+        assert_eq!(decode(fp, fmt), 65504.0);
+    }
+
+    #[test]
+    fn toward_zero_never_overflows_from_rounding() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::toward_zero();
+        let (fp, fl) = encode(65535.9, fmt, &mut r);
+        assert!(!fl.overflow());
+        assert_eq!(decode(fp, fmt), 65504.0);
+        assert!(fl.inexact());
+    }
+}

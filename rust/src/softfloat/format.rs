@@ -1,0 +1,246 @@
+//! Floating-point format descriptors, packed values and exception flags.
+
+use std::fmt;
+
+/// An arbitrary floating-point format: `e_w` exponent bits, `m_w` stored
+/// fraction bits (the leading 1 is implicit). Written `E{e_w}M{m_w}` in the
+/// paper's notation — `E5M10` is IEEE half without subnormals/inf/NaN.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Exponent field width in bits (2..=11).
+    pub e_w: u32,
+    /// Fraction field width in bits (1..=52).
+    pub m_w: u32,
+}
+
+impl FpFormat {
+    /// Standard half precision (5-bit exponent, 10-bit fraction).
+    pub const E5M10: FpFormat = FpFormat { e_w: 5, m_w: 10 };
+    /// 15-bit fixed baseline used in the paper's Fig. 6(e).
+    pub const E5M9: FpFormat = FpFormat { e_w: 5, m_w: 9 };
+    /// 14-bit fixed baseline used in the paper's Fig. 6(f).
+    pub const E5M8: FpFormat = FpFormat { e_w: 5, m_w: 8 };
+    /// bfloat16.
+    pub const E8M7: FpFormat = FpFormat { e_w: 8, m_w: 7 };
+    /// Single precision (normals only).
+    pub const E8M23: FpFormat = FpFormat { e_w: 8, m_w: 23 };
+    /// Double precision (normals only).
+    pub const E11M52: FpFormat = FpFormat { e_w: 11, m_w: 52 };
+
+    /// Construct a format, validating the supported widths.
+    pub const fn new(e_w: u32, m_w: u32) -> FpFormat {
+        assert!(e_w >= 2 && e_w <= 11, "exponent width must be in 2..=11");
+        assert!(m_w >= 1 && m_w <= 52, "fraction width must be in 1..=52");
+        FpFormat { e_w, m_w }
+    }
+
+    /// Exponent bias: `2^(e_w−1) − 1`.
+    pub const fn bias(&self) -> i64 {
+        (1i64 << (self.e_w - 1)) - 1
+    }
+
+    /// Largest biased exponent of a finite value (`2^e_w − 2`; the all-ones
+    /// code is reserved, matching IEEE and the paper's max-value arithmetic).
+    pub const fn max_biased_exp(&self) -> i64 {
+        (1i64 << self.e_w) - 2
+    }
+
+    /// Total storage bits including the sign.
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.e_w + self.m_w
+    }
+
+    /// Largest representable finite value.
+    pub fn max_value(&self) -> f64 {
+        let e = self.max_biased_exp() - self.bias();
+        let frac = ((1u64 << self.m_w) - 1) as f64 / (1u64 << self.m_w) as f64;
+        (1.0 + frac) * pow2(e)
+    }
+
+    /// Smallest positive normal value (`2^(1 − bias)`).
+    pub fn min_normal(&self) -> f64 {
+        pow2(1 - self.bias())
+    }
+
+    /// Unit in the last place at 1.0 (`2^−m_w`) — the format's resolution.
+    pub fn ulp_at_one(&self) -> f64 {
+        pow2(-(self.m_w as i64))
+    }
+
+    /// Largest finite value of this format as a packed [`Fp`].
+    pub fn max_finite(&self, sign: u8) -> Fp {
+        Fp { sign, exp: self.max_biased_exp() as u32, frac: (1u64 << self.m_w) - 1 }
+    }
+}
+
+impl fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "E{}M{}", self.e_w, self.m_w)
+    }
+}
+
+/// Exact power of two as `f64` (|e| ≤ 1023 — always true for our formats).
+pub(crate) fn pow2(e: i64) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// A value packed in some [`FpFormat`]: sign, biased exponent, fraction.
+///
+/// `exp == 0` encodes zero (there are no subnormals). Fields are kept
+/// unpacked for clarity; [`Fp::to_bits`]/[`Fp::from_bits`] give the wire
+/// layout used by the Pallas kernels (sign at the top, then exponent,
+/// then fraction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fp {
+    /// 0 = positive, 1 = negative.
+    pub sign: u8,
+    /// Biased exponent; 0 means the value is zero.
+    pub exp: u32,
+    /// Fraction bits (without the implicit leading 1).
+    pub frac: u64,
+}
+
+impl Fp {
+    /// Zero with the given sign.
+    pub const fn zero(sign: u8) -> Fp {
+        Fp { sign, exp: 0, frac: 0 }
+    }
+
+    /// Is this the (signed) zero?
+    pub const fn is_zero(&self) -> bool {
+        self.exp == 0
+    }
+
+    /// Pack to the wire layout `[sign | exp | frac]` (low bits = fraction).
+    pub fn to_bits(&self, fmt: FpFormat) -> u64 {
+        debug_assert!(self.frac < (1u64 << fmt.m_w));
+        debug_assert!((self.exp as u64) < (1u64 << fmt.e_w));
+        ((self.sign as u64) << (fmt.e_w + fmt.m_w)) | ((self.exp as u64) << fmt.m_w) | self.frac
+    }
+
+    /// Unpack from the wire layout.
+    pub fn from_bits(bits: u64, fmt: FpFormat) -> Fp {
+        Fp {
+            sign: ((bits >> (fmt.e_w + fmt.m_w)) & 1) as u8,
+            exp: ((bits >> fmt.m_w) & ((1u64 << fmt.e_w) - 1)) as u32,
+            frac: bits & ((1u64 << fmt.m_w) - 1),
+        }
+    }
+}
+
+/// Exception flags accumulated by encode/mul/add, modeled on IEEE-754 status
+/// bits. The R2F2 precision-adjustment unit (§4.2) keys off
+/// [`Flags::OVERFLOW`] and [`Flags::UNDERFLOW`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Flags(pub u8);
+
+impl Flags {
+    pub const NONE: Flags = Flags(0);
+    /// Result magnitude exceeded the format's max finite value (saturated).
+    pub const OVERFLOW: Flags = Flags(1);
+    /// Non-zero result flushed to zero (below the min normal).
+    pub const UNDERFLOW: Flags = Flags(2);
+    /// Rounding discarded non-zero bits.
+    pub const INEXACT: Flags = Flags(4);
+    /// A NaN reached encode (mapped to zero; the format has no NaN).
+    pub const NAN_INPUT: Flags = Flags(8);
+
+    pub const fn overflow(&self) -> bool {
+        self.0 & Self::OVERFLOW.0 != 0
+    }
+    pub const fn underflow(&self) -> bool {
+        self.0 & Self::UNDERFLOW.0 != 0
+    }
+    pub const fn inexact(&self) -> bool {
+        self.0 & Self::INEXACT.0 != 0
+    }
+    pub const fn nan_input(&self) -> bool {
+        self.0 & Self::NAN_INPUT.0 != 0
+    }
+    /// Overflow or underflow — the adjustment unit's "range trouble" signal.
+    pub const fn range_event(&self) -> bool {
+        self.overflow() || self.underflow()
+    }
+    pub const fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::ops::BitOr for Flags {
+    type Output = Flags;
+    fn bitor(self, rhs: Flags) -> Flags {
+        Flags(self.0 | rhs.0)
+    }
+}
+
+impl std::ops::BitOrAssign for Flags {
+    fn bitor_assign(&mut self, rhs: Flags) {
+        self.0 |= rhs.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_and_limits_match_ieee_half() {
+        let h = FpFormat::E5M10;
+        assert_eq!(h.bias(), 15);
+        assert_eq!(h.max_biased_exp(), 30);
+        assert_eq!(h.max_value(), 65504.0);
+        assert_eq!(h.min_normal(), 6.103515625e-5);
+        assert_eq!(h.total_bits(), 16);
+    }
+
+    #[test]
+    fn bias_and_limits_match_ieee_single() {
+        let s = FpFormat::E8M23;
+        assert_eq!(s.bias(), 127);
+        assert_eq!(s.max_value(), f32::MAX as f64);
+        assert_eq!(s.min_normal(), f32::MIN_POSITIVE as f64);
+    }
+
+    #[test]
+    fn paper_r2f2_widest_exponent_range() {
+        // §4.1: <3,8,4> with all flexible bits on the exponent gives E7M8,
+        // largest value 2^63 · (1+255/256) ≈ 1.8410715e19.
+        let f = FpFormat::new(7, 8);
+        let expected = (1.0 + 255.0 / 256.0) * (2f64).powi(63);
+        assert_eq!(f.max_value(), expected);
+        assert!((f.max_value() - 1.8410715e19).abs() / 1.8410715e19 < 1e-7);
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let fmt = FpFormat::new(6, 9);
+        let v = Fp { sign: 1, exp: 37, frac: 0x1AB };
+        assert_eq!(Fp::from_bits(v.to_bits(fmt), fmt), v);
+    }
+
+    #[test]
+    fn pow2_is_exact() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-14), 6.103515625e-5);
+    }
+
+    #[test]
+    fn flags_compose() {
+        let f = Flags::OVERFLOW | Flags::INEXACT;
+        assert!(f.overflow() && f.inexact() && !f.underflow());
+        assert!(f.range_event());
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_width_rejected() {
+        let _ = FpFormat::new(1, 10);
+    }
+
+    #[test]
+    fn display_notation() {
+        assert_eq!(FpFormat::E5M10.to_string(), "E5M10");
+    }
+}

@@ -1,0 +1,136 @@
+//! Arbitrary-precision software floating point.
+//!
+//! This is the paper's exploration substrate (§3): an "open-source library
+//! for floating point multiplications using arbitrary data precision". Any
+//! format `ExMy` with `2 ≤ x ≤ 11` exponent bits and `1 ≤ y ≤ 52` mantissa
+//! (fraction) bits is supported, with round-to-nearest-even, toward-zero and
+//! stochastic rounding.
+//!
+//! ## Semantics (shared with the Pallas kernels — see DESIGN.md §3)
+//!
+//! * **Normals only.** Subnormal inputs and underflowing results flush to
+//!   zero (the paper's HLS datapath has no subnormal path).
+//! * **No inf/NaN.** The all-ones exponent is *reserved* (matching the
+//!   paper's "largest half = 2^15·(1+1023/1024)" arithmetic), so the maximum
+//!   biased exponent of a finite value is `2^e_w − 2`. Overflow **saturates**
+//!   to the largest finite value and raises [`Flags::OVERFLOW`] — the signal
+//!   consumed by the R2F2 precision-adjustment unit.
+//! * Results carry [`Flags`] so callers (and the adjustment unit) can see
+//!   overflow/underflow/inexact events.
+//!
+//! The `ExMy` notation follows the paper: `E5M10` is standard half.
+
+pub mod add;
+pub mod encode;
+pub mod format;
+pub mod mul;
+pub mod round;
+
+pub use add::add;
+pub use encode::{decode, encode};
+pub use format::{Flags, Fp, FpFormat};
+pub use mul::mul;
+pub use round::{Rounder, RoundingMode};
+
+/// Quantize an `f64` to the nearest representable value of `fmt`
+/// (round-to-nearest-even), returning the value back as `f64`.
+///
+/// This is the "convert from single precision and back" step the paper's
+/// datapath performs around every multiplication (§5.2).
+pub fn quantize(x: f64, fmt: FpFormat) -> f64 {
+    let mut r = Rounder::nearest_even();
+    let (fp, _) = encode(x, fmt, &mut r);
+    decode(fp, fmt)
+}
+
+/// Quantize, also reporting the encode flags (overflow/underflow/inexact).
+pub fn quantize_flagged(x: f64, fmt: FpFormat) -> (f64, Flags) {
+    let mut r = Rounder::nearest_even();
+    let (fp, f) = encode(x, fmt, &mut r);
+    (decode(fp, fmt), f)
+}
+
+/// `a × b` computed entirely in `fmt`: encode both operands, multiply with a
+/// single rounding, decode the result. Returns the result and the union of
+/// all flags raised along the way.
+pub fn mul_f(a: f64, b: f64, fmt: FpFormat) -> (f64, Flags) {
+    let mut r = Rounder::nearest_even();
+    let (fa, fla) = encode(a, fmt, &mut r);
+    let (fb, flb) = encode(b, fmt, &mut r);
+    let (fc, flc) = mul(fa, fb, fmt, &mut r);
+    (decode(fc, fmt), fla | flb | flc)
+}
+
+/// `a + b` computed entirely in `fmt` (encode, add with one rounding, decode).
+pub fn add_f(a: f64, b: f64, fmt: FpFormat) -> (f64, Flags) {
+    let mut r = Rounder::nearest_even();
+    let (fa, fla) = encode(a, fmt, &mut r);
+    let (fb, flb) = encode(b, fmt, &mut r);
+    let (fc, flc) = add(fa, fb, fmt, &mut r);
+    (decode(fc, fmt), fla | flb | flc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let fmt = FpFormat::E5M10;
+        for &x in &[1.0, 0.1, 3.14159, 1234.5, -0.0625, 6.1e-5] {
+            let q = quantize(x, fmt);
+            assert_eq!(q, quantize(q, fmt), "x={x}");
+        }
+    }
+
+    #[test]
+    fn mul_f_matches_f32_hardware_for_e8m23() {
+        // E8M23 *is* single precision (minus inf/NaN/subnormals); on normal
+        // in-range data the software pipeline must agree with the FPU
+        // bit-for-bit.
+        let fmt = FpFormat::E8M23;
+        let mut rng = crate::rng::SplitMix64::new(0xBEEF);
+        for _ in 0..20_000 {
+            let a = rng.log_uniform(1e-18, 1e18) * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let b = rng.log_uniform(1e-18, 1e18);
+            let (got, _) = mul_f(a, b, fmt);
+            let want = (a as f32) * (b as f32);
+            if want.is_normal() {
+                assert_eq!(got as f32, want, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_f_matches_f32_hardware_for_e8m23() {
+        let fmt = FpFormat::E8M23;
+        let mut rng = crate::rng::SplitMix64::new(0xCAFE);
+        for _ in 0..20_000 {
+            let a = rng.log_uniform(1e-12, 1e12) * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let b = rng.log_uniform(1e-12, 1e12) * if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let (got, _) = add_f(a, b, fmt);
+            let want = (a as f32) + (b as f32);
+            if want.is_normal() || want == 0.0 {
+                assert_eq!(got as f32, want, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_largest_value_matches_paper() {
+        // §4.1: "The standard half precision ... can represent largest
+        // number 65504 (2^15 · (1+1023/1024))".
+        assert_eq!(FpFormat::E5M10.max_value(), 65504.0);
+    }
+
+    #[test]
+    fn flags_reported_on_overflow_and_underflow() {
+        let fmt = FpFormat::E5M10;
+        let (v, f) = mul_f(1000.0, 1000.0, fmt); // 1e6 > 65504
+        assert!(f.overflow());
+        assert_eq!(v, 65504.0); // saturates
+        let (v, f) = mul_f(1e-4, 1e-4, fmt); // 1e-8 < 2^-14
+        assert!(f.underflow());
+        assert_eq!(v, 0.0); // flushes
+    }
+}

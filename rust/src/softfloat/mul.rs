@@ -1,0 +1,171 @@
+//! Arbitrary-precision floating-point multiplication.
+//!
+//! This is the *exact* (single-rounding) multiplier used as the fixed-format
+//! baseline ("Impl. 16-bit FP" etc. in Table 1) and as the reference the
+//! R2F2 truncation approximation is validated against. The R2F2 multiplier
+//! itself lives in [`crate::r2f2core::mul`] and differs only by the
+//! flexible-partial-product truncation.
+
+use super::format::{Flags, Fp, FpFormat};
+use super::round::Rounder;
+
+/// Multiply two packed values of the same format with one rounding step.
+///
+/// Algorithm (the paper's §4.1 datapath, without the flexible-bit
+/// truncation):
+/// 1. sign = XOR of signs;
+/// 2. integer mantissa product `P = (2^m_w + fa)·(2^m_w + fb)`;
+/// 3. normalize P (product of two values in `[1,2)` lies in `[1,4)`);
+/// 4. round to `m_w` fraction bits (carry may renormalize);
+/// 5. exponent = `ea + eb − bias (+ carries)`, computed the way the paper's
+///    hardware does (`− 2^(e_w−1) + 1`);
+/// 6. saturate on overflow, flush on underflow.
+#[inline]
+pub fn mul(a: Fp, b: Fp, fmt: FpFormat, r: &mut Rounder) -> (Fp, Flags) {
+    let sign = a.sign ^ b.sign;
+    if a.is_zero() || b.is_zero() {
+        return (Fp::zero(sign), Flags::NONE);
+    }
+
+    let m_w = fmt.m_w;
+    let ia = (1u64 << m_w) | a.frac;
+    let ib = (1u64 << m_w) | b.frac;
+    let p = ia as u128 * ib as u128; // 2·m_w+2 bits, fits u128 (m_w ≤ 52)
+
+    normalize_round_pack(p, sign, a.exp as i64 + b.exp as i64, fmt, r)
+}
+
+/// Shared tail of the exact and R2F2 multipliers: normalize the raw product
+/// `p` (in `[2^(2m_w), 2^(2m_w+2))`), round to `m_w` fraction bits, add the
+/// exponents with the paper's bias trick, and handle range events.
+///
+/// `exp_sum` is the sum of the two biased exponents.
+#[inline]
+pub(crate) fn normalize_round_pack(
+    p: u128,
+    sign: u8,
+    exp_sum: i64,
+    fmt: FpFormat,
+    r: &mut Rounder,
+) -> (Fp, Flags) {
+    let m_w = fmt.m_w;
+    let mut flags = Flags::NONE;
+
+    // Product of [1,2)×[1,2) is [1,4): one possible normalize shift.
+    let (shift, mut exp_inc) = if p >> (2 * m_w + 1) != 0 { (m_w + 1, 1i64) } else { (m_w, 0i64) };
+    let (mut frac_with_lead, inexact) = r.round_shift(p, shift);
+    if inexact {
+        flags |= Flags::INEXACT;
+    }
+    // frac_with_lead holds 1.m_w bits; rounding may carry to 2^(m_w+1).
+    if frac_with_lead >> (m_w + 1) != 0 {
+        frac_with_lead >>= 1; // 10.00..0 -> 1.000..0, exact
+        exp_inc += 1;
+    }
+    let frac = frac_with_lead & ((1u64 << m_w) - 1);
+
+    // Paper's bias subtraction: e1 + e2 − BIAS = e1 + e2 − 2^(e_w−1) + 1.
+    let e = exp_sum - (1i64 << (fmt.e_w - 1)) + 1 + exp_inc;
+
+    if e <= 0 {
+        return (Fp::zero(sign), flags | Flags::UNDERFLOW);
+    }
+    if e > fmt.max_biased_exp() {
+        return (fmt.max_finite(sign), flags | Flags::OVERFLOW);
+    }
+    (Fp { sign, exp: e as u32, frac }, flags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::softfloat::{decode, encode};
+
+    fn enc(x: f64, fmt: FpFormat) -> Fp {
+        encode(x, fmt, &mut Rounder::nearest_even()).0
+    }
+
+    #[test]
+    fn simple_products_exact() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        for &(a, b, want) in
+            &[(1.0, 1.0, 1.0), (2.0, 3.0, 6.0), (-2.5, 4.0, -10.0), (0.5, 0.5, 0.25)]
+        {
+            let (p, fl) = mul(enc(a, fmt), enc(b, fmt), fmt, &mut r);
+            assert_eq!(decode(p, fmt), want);
+            assert!(fl.is_empty());
+        }
+    }
+
+    #[test]
+    fn zero_operand_gives_signed_zero() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (p, _) = mul(enc(0.0, fmt), enc(-3.0, fmt), fmt, &mut r);
+        assert!(p.is_zero());
+        assert_eq!(p.sign, 1);
+    }
+
+    #[test]
+    fn matches_f64_single_rounding_random() {
+        // For random in-range operands, our mul must equal: exact product in
+        // f64 (m_w ≤ 26 ⇒ product fits 53 bits) re-encoded to the format.
+        let fmt = FpFormat::new(6, 9);
+        let mut r = Rounder::nearest_even();
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..50_000 {
+            let a = decode(enc(rng.log_uniform(1e-3, 1e3), fmt), fmt);
+            let b = decode(enc(rng.log_uniform(1e-3, 1e3), fmt), fmt);
+            let (p, _) = mul(enc(a, fmt), enc(b, fmt), fmt, &mut r);
+            let exact = a * b; // exact in f64: 10 bits × 10 bits
+            let want = encode(exact, fmt, &mut Rounder::nearest_even()).0;
+            assert_eq!(p, want, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn overflow_saturates() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (p, fl) = mul(enc(300.0, fmt), enc(300.0, fmt), fmt, &mut r);
+        assert!(fl.overflow());
+        assert_eq!(decode(p, fmt), 65504.0);
+    }
+
+    #[test]
+    fn underflow_flushes() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (p, fl) = mul(enc(1e-3, fmt), enc(1e-3, fmt), fmt, &mut r);
+        assert!(fl.underflow());
+        assert!(p.is_zero());
+        assert_eq!(p.sign, 0);
+    }
+
+    #[test]
+    fn commutative() {
+        let fmt = FpFormat::new(4, 7);
+        let mut rng = SplitMix64::new(5);
+        let mut r = Rounder::nearest_even();
+        for _ in 0..10_000 {
+            let a = enc(rng.log_uniform(1e-2, 1e2), fmt);
+            let b = enc(rng.log_uniform(1e-2, 1e2), fmt);
+            assert_eq!(mul(a, b, fmt, &mut r), mul(b, a, fmt, &mut r));
+        }
+    }
+
+    #[test]
+    fn rounding_carry_renormalizes() {
+        // Choose operands whose product fraction is all ones + eps so RNE
+        // carries: 1.9990234375 (max E5M10 mantissa) squared = 3.99609...
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let x = decode(fmt.max_finite(0), fmt) / 32768.0; // 1.9990234375
+        let (p, _) = mul(enc(x, fmt), enc(x, fmt), fmt, &mut r);
+        let exact = x * x;
+        let want = encode(exact, fmt, &mut Rounder::nearest_even()).0;
+        assert_eq!(p, want);
+    }
+}

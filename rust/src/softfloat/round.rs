@@ -1,0 +1,147 @@
+//! Rounding of fixed-point intermediates.
+//!
+//! Everything in the library rounds through [`Rounder::round_shift`], so the
+//! three supported modes (nearest-even, toward-zero, stochastic) behave
+//! identically in encode, multiply and add. Stochastic rounding is the
+//! extension the paper cites from Paxton et al. (climate modeling in low
+//! precision); it is exposed so the PDE harness can ablate it.
+
+use crate::rng::SplitMix64;
+
+/// IEEE-style rounding mode selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundingMode {
+    /// Round to nearest, ties to even — the paper's datapath behaviour.
+    NearestEven,
+    /// Truncate (round toward zero).
+    TowardZero,
+    /// Stochastic rounding: round up with probability = discarded / ulp.
+    Stochastic,
+}
+
+/// A rounding context: the mode plus the RNG used by stochastic rounding.
+#[derive(Debug, Clone)]
+pub struct Rounder {
+    pub mode: RoundingMode,
+    rng: SplitMix64,
+}
+
+impl Rounder {
+    pub fn new(mode: RoundingMode, seed: u64) -> Rounder {
+        Rounder { mode, rng: SplitMix64::new(seed) }
+    }
+
+    /// Round-to-nearest-even context (deterministic; RNG unused).
+    pub fn nearest_even() -> Rounder {
+        Rounder::new(RoundingMode::NearestEven, 0)
+    }
+
+    /// Toward-zero context (deterministic; RNG unused).
+    pub fn toward_zero() -> Rounder {
+        Rounder::new(RoundingMode::TowardZero, 0)
+    }
+
+    /// Stochastic-rounding context with the given seed.
+    pub fn stochastic(seed: u64) -> Rounder {
+        Rounder::new(RoundingMode::Stochastic, seed)
+    }
+
+    /// Compute `round(value / 2^shift)` per the mode.
+    ///
+    /// Returns `(rounded, inexact)`. `shift` may be 0 (identity) or up to
+    /// 127. The caller is responsible for detecting carry-out (the rounded
+    /// value reaching `2^width`).
+    ///
+    /// When callers pre-collapse low bits into a sticky bit (the adder does
+    /// this), nearest-even and toward-zero decisions are unaffected as long
+    /// as at least guard+round+sticky bits are kept; stochastic rounding
+    /// then sees a coarsened probability, which we accept and document.
+    #[inline]
+    pub fn round_shift(&mut self, value: u128, shift: u32) -> (u64, bool) {
+        if shift == 0 {
+            return (value as u64, false);
+        }
+        let kept = (value >> shift) as u64;
+        let lost = value & ((1u128 << shift) - 1);
+        if lost == 0 {
+            return (kept, false);
+        }
+        let up = match self.mode {
+            RoundingMode::TowardZero => false,
+            RoundingMode::NearestEven => {
+                let half = 1u128 << (shift - 1);
+                lost > half || (lost == half && kept & 1 == 1)
+            }
+            RoundingMode::Stochastic => {
+                // Draw r uniform in [0, 2^shift); round up iff r < lost.
+                let r = if shift >= 64 {
+                    ((self.rng.next_u64() as u128) << 64 | self.rng.next_u64() as u128)
+                        & ((1u128 << shift) - 1)
+                } else {
+                    (self.rng.next_u64() & ((1u64 << shift) - 1)) as u128
+                };
+                r < lost
+            }
+        };
+        (kept + up as u64, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_when_no_bits_lost() {
+        let mut r = Rounder::nearest_even();
+        assert_eq!(r.round_shift(0b1000, 3), (1, false));
+        assert_eq!(r.round_shift(42, 0), (42, false));
+    }
+
+    #[test]
+    fn nearest_even_basic() {
+        let mut r = Rounder::nearest_even();
+        // 0b101.1 -> 6 (round half up to even)
+        assert_eq!(r.round_shift(0b1011, 1), (0b110, true));
+        // 0b100.1 -> 4 (round half down to even)
+        assert_eq!(r.round_shift(0b1001, 1), (0b100, true));
+        // 0b100.11 -> 5 (above half)
+        assert_eq!(r.round_shift(0b10011, 2), (0b101, true));
+        // 0b101.01 -> 5 (below half)
+        assert_eq!(r.round_shift(0b10101, 2), (0b101, true));
+    }
+
+    #[test]
+    fn toward_zero_truncates() {
+        let mut r = Rounder::toward_zero();
+        assert_eq!(r.round_shift(0b1011, 1), (0b101, true));
+        assert_eq!(r.round_shift(0b1111, 2), (0b11, true));
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        // E[round(x / 2^s)] == x / 2^s: rounding 0b1.01 (1.25) by 2 bits
+        // should go up ~25% of the time.
+        let mut r = Rounder::stochastic(123);
+        let mut ups = 0u32;
+        let n = 100_000;
+        for _ in 0..n {
+            let (v, inexact) = r.round_shift(0b101, 2);
+            assert!(inexact);
+            if v == 2 {
+                ups += 1;
+            } else {
+                assert_eq!(v, 1);
+            }
+        }
+        let p = ups as f64 / n as f64;
+        assert!((p - 0.25).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn large_shift_ok() {
+        let mut r = Rounder::nearest_even();
+        let v = (1u128 << 100) + (1u128 << 99); // 1.5 * 2^100
+        assert_eq!(r.round_shift(v, 100), (2, true)); // ties to even -> 2
+    }
+}

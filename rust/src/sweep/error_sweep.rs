@@ -1,0 +1,235 @@
+//! Fig. 6: the multiplication-accuracy sweep.
+//!
+//! §5.1: "we sweep the range (0.0001, 10000) for operands, divided into 10K
+//! intervals, and each interval has 1000 randomly sampled data pairs."
+//! Per interval we measure the mean relative error (vs the single-precision
+//! product; overflow/underflow cast to 100%, the paper's convention) of the
+//! R2F2 multiplier and of its fixed-type counterpart, then report the
+//! per-interval error-reduction distribution of Fig. 6(g).
+
+use crate::pde::{Arith, FixedArith, R2f2Arith};
+use crate::r2f2core::R2f2Config;
+use crate::rng::SplitMix64;
+use crate::softfloat::FpFormat;
+
+/// Sweep configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepParams {
+    pub lo: f64,
+    pub hi: f64,
+    /// Number of log-spaced operand intervals.
+    pub intervals: usize,
+    /// Random operand pairs per interval.
+    pub pairs: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepParams {
+    fn default() -> SweepParams {
+        // The paper's full sweep. Benches use this; unit tests shrink it.
+        SweepParams { lo: 1e-4, hi: 1e4, intervals: 10_000, pairs: 1000, seed: 0x516 }
+    }
+}
+
+/// Per-interval outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct IntervalResult {
+    /// Interval bounds (operands are drawn log-uniformly inside).
+    pub lo: f64,
+    pub hi: f64,
+    /// Mean relative error of the fixed format.
+    pub err_fixed: f64,
+    /// Mean relative error of R2F2.
+    pub err_r2f2: f64,
+}
+
+impl IntervalResult {
+    /// Relative error reduction of R2F2 vs the fixed type (can be negative
+    /// where the truncation approximation loses — Fig. 6(d)'s dips).
+    pub fn reduction(&self) -> f64 {
+        if self.err_fixed == 0.0 {
+            0.0
+        } else {
+            (self.err_fixed - self.err_r2f2) / self.err_fixed
+        }
+    }
+}
+
+/// Whole-sweep outcome.
+///
+/// Two aggregations of "error reduction" are reported because the paper's
+/// exact definition is not fully specified: [`SweepResult::avg_reduction`]
+/// (mean over intervals of the per-interval relative reduction — the
+/// conservative reading) and [`SweepResult::global_reduction`] (reduction
+/// of the error mass pooled over all samples — the generous reading).
+/// The paper's 70.2% falls between the two; see EXPERIMENTS.md E5.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub cfg: R2f2Config,
+    pub fixed: FpFormat,
+    pub intervals: Vec<IntervalResult>,
+    /// Mean of per-interval reductions.
+    pub avg_reduction: f64,
+    /// Maximum per-interval reduction (paper: up to 99.9%).
+    pub max_reduction: f64,
+    /// Most negative per-interval reduction (paper: R2F2 occasionally worse
+    /// due to the mantissa truncation; largest regression 0.09% error).
+    pub min_reduction: f64,
+    /// Pooled mean error of the fixed type over the whole sweep.
+    pub global_err_fixed: f64,
+    /// Pooled mean error of R2F2 over the whole sweep.
+    pub global_err_r2f2: f64,
+    /// `1 − global_err_r2f2 / global_err_fixed`.
+    pub global_reduction: f64,
+}
+
+/// Run the sweep for one R2F2 configuration against one fixed format.
+pub fn error_sweep(cfg: R2f2Config, fixed: FpFormat, p: &SweepParams) -> SweepResult {
+    let mut rng = SplitMix64::new(p.seed);
+    let log_lo = p.lo.ln();
+    let step = (p.hi.ln() - log_lo) / p.intervals as f64;
+
+    let mut intervals = Vec::with_capacity(p.intervals);
+    for i in 0..p.intervals {
+        let ilo = (log_lo + step * i as f64).exp();
+        let ihi = (log_lo + step * (i + 1) as f64).exp();
+
+        // Fresh units per interval: the sweep measures steady-state
+        // accuracy on locally-clustered data (the paper's premise), with
+        // R2F2's adjustment allowed to settle within the interval stream.
+        let mut r2f2 = R2f2Arith::new(cfg);
+        let mut fix = FixedArith::new(fixed);
+
+        let mut sum_f = 0.0;
+        let mut sum_r = 0.0;
+        for _ in 0..p.pairs {
+            let a = rng.range_f64(ilo, ihi);
+            let b = rng.range_f64(ilo, ihi);
+            let want = (a as f32 * b as f32) as f64;
+            sum_f += rel_err(fix.mul(a, b), want);
+            sum_r += rel_err(r2f2.mul(a, b), want);
+        }
+        intervals.push(IntervalResult {
+            lo: ilo,
+            hi: ihi,
+            err_fixed: sum_f / p.pairs as f64,
+            err_r2f2: sum_r / p.pairs as f64,
+        });
+    }
+
+    let reductions: Vec<f64> = intervals.iter().map(IntervalResult::reduction).collect();
+    let avg = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    let max = reductions.iter().cloned().fold(f64::MIN, f64::max);
+    let min = reductions.iter().cloned().fold(f64::MAX, f64::min);
+    let gf = intervals.iter().map(|iv| iv.err_fixed).sum::<f64>() / intervals.len() as f64;
+    let gr = intervals.iter().map(|iv| iv.err_r2f2).sum::<f64>() / intervals.len() as f64;
+    SweepResult {
+        cfg,
+        fixed,
+        intervals,
+        avg_reduction: avg,
+        max_reduction: max,
+        min_reduction: min,
+        global_err_fixed: gf,
+        global_err_r2f2: gr,
+        global_reduction: if gf > 0.0 { 1.0 - gr / gf } else { 0.0 },
+    }
+}
+
+/// Relative error with the paper's 100%-on-range-failure convention.
+fn rel_err(got: f64, want: f64) -> f64 {
+    if want == 0.0 {
+        return if got == 0.0 { 0.0 } else { 1.0 };
+    }
+    ((got - want) / want).abs().min(1.0)
+}
+
+/// The three fixed-vs-R2F2 pairings evaluated in Fig. 6(g).
+pub fn paper_pairings() -> [(R2f2Config, FpFormat); 3] {
+    [
+        (R2f2Config::C16_393, FpFormat::E5M10),
+        (R2f2Config::C15_383, FpFormat::E5M9),
+        (R2f2Config::C14_373, FpFormat::E5M8),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> SweepParams {
+        SweepParams { intervals: 200, pairs: 60, ..SweepParams::default() }
+    }
+
+    #[test]
+    fn r2f2_reduces_error_substantially_vs_half() {
+        // Fig. 6(g): 70.2% average reduction. Our two aggregations bracket
+        // it: per-interval mean ≈ 0.45-0.6, pooled error-mass ≈ 0.99+.
+        let r = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
+        assert!(
+            r.avg_reduction > 0.4 && r.avg_reduction < 0.95,
+            "avg reduction {}",
+            r.avg_reduction
+        );
+        assert!(r.global_reduction > 0.9, "global {}", r.global_reduction);
+        assert!(
+            r.avg_reduction < 0.702 && 0.702 < r.global_reduction,
+            "paper's 70.2% should fall between the two aggregations: {} vs {}",
+            r.avg_reduction,
+            r.global_reduction
+        );
+        assert!(r.max_reduction > 0.99, "max {}", r.max_reduction);
+    }
+
+    #[test]
+    fn fixed_fails_outside_its_range_r2f2_does_not() {
+        let r = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
+        // Intervals with operands near 1e4 (products ~1e8) overflow E5M10.
+        let top = r.intervals.last().unwrap();
+        assert!(top.err_fixed > 0.99, "fixed should cap at 100%: {}", top.err_fixed);
+        assert!(top.err_r2f2 < 0.01, "r2f2 should follow the range: {}", top.err_r2f2);
+        // Intervals near 1e-4 (products ~1e-8) underflow E5M10.
+        let bot = r.intervals.first().unwrap();
+        assert!(bot.err_fixed > 0.99);
+        assert!(bot.err_r2f2 < 0.01);
+    }
+
+    #[test]
+    fn in_range_intervals_have_small_errors_for_both() {
+        let r = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
+        // Operands around 1..100: well inside E5M10.
+        let mid: Vec<&IntervalResult> =
+            r.intervals.iter().filter(|iv| iv.lo > 1.0 && iv.hi < 100.0).collect();
+        assert!(!mid.is_empty());
+        for iv in mid {
+            assert!(iv.err_fixed < 2e-3, "fixed err {} at [{},{}]", iv.err_fixed, iv.lo, iv.hi);
+            assert!(iv.err_r2f2 < 2e-3, "r2f2 err {} at [{},{}]", iv.err_r2f2, iv.lo, iv.hi);
+        }
+    }
+
+    #[test]
+    fn reductions_can_be_negative_but_small() {
+        // The truncation approximation may cost accuracy in spots
+        // (Fig. 6(d)'s negative dips) but never much.
+        let r = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
+        assert!(r.min_reduction > -0.6, "min reduction {}", r.min_reduction);
+    }
+
+    #[test]
+    fn fewer_bits_keep_the_advantage() {
+        // Fig. 6(g): 70.6% and 70.7% for 15/14 bits — the advantage holds
+        // as total width shrinks, in both aggregations.
+        for (cfg, fixed) in paper_pairings() {
+            let r = error_sweep(cfg, fixed, &quick());
+            assert!(r.avg_reduction > 0.4, "{cfg}: avg {}", r.avg_reduction);
+            assert!(r.global_reduction > 0.9, "{cfg}: global {}", r.global_reduction);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
+        let b = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
+        assert_eq!(a.avg_reduction, b.avg_reduction);
+    }
+}

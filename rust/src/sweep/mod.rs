@@ -1,0 +1,8 @@
+//! Multiplication-accuracy sweeps: the harnesses behind Fig. 3 (precision-
+//! configuration profiling) and Fig. 6 (R2F2 vs fixed-type error sweep).
+
+pub mod config_profile;
+pub mod error_sweep;
+
+pub use config_profile::{eq1_exponent_bits, profile_range, ProfilePoint, PAPER_RANGES};
+pub use error_sweep::{error_sweep, IntervalResult, SweepParams, SweepResult};

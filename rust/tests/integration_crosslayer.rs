@@ -1,0 +1,176 @@
+//! Cross-layer bit-exactness: the AOT-lowered Pallas kernels executed via
+//! PJRT must agree **bit-for-bit** with the rust scalar implementation of
+//! DESIGN.md §3. This is the contract that lets accuracy results measured
+//! natively (sweeps, case studies) transfer to the compiled artifacts.
+//!
+//! Requires `make artifacts`; tests skip politely when artifacts are absent
+//! (e.g. a cargo-only CI lane).
+
+use r2f2::r2f2core::{mul_packed, R2f2Config, R2f2Multiplier};
+use r2f2::rng::SplitMix64;
+use r2f2::runtime::Runtime;
+use r2f2::softfloat::{decode, encode, Rounder};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// Random f32 operands covering the full sweep range plus specials.
+fn operands(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    for i in 0..n {
+        if i < 8 {
+            // Edge lanes: zeros, signed zeros, huge, tiny.
+            let specials = [0.0f32, -0.0, 1.0, -1.0, 65504.0, 1e-7, 3.0e9, 5e-39];
+            a.push(specials[i]);
+            b.push(specials[(i + 3) % 8]);
+        } else {
+            let sa = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            a.push((rng.log_uniform(1e-9, 1e9) * sa) as f32);
+            b.push(rng.log_uniform(1e-9, 1e9) as f32);
+        }
+    }
+    (a, b)
+}
+
+/// Rust scalar path for a fixed split: encode(f32) → truncated mul → decode.
+fn rust_mul_at_split(a: f32, b: f32, cfg: R2f2Config, k: u32) -> f32 {
+    let fmt = cfg.format(k);
+    let mut r = Rounder::nearest_even();
+    let (fa, _) = encode(a as f64, fmt, &mut r);
+    let (fb, _) = encode(b as f64, fmt, &mut r);
+    let (fc, _) = mul_packed(fa, fb, cfg, k, &mut r);
+    decode(fc, fmt) as f32
+}
+
+#[test]
+fn pallas_fixed_split_k2_is_bit_exact() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.elemwise_n;
+    let exe = rt.load("r2f2_mul_k2").unwrap();
+    let (a, b) = operands(n, 0xA0);
+    let got = exe.run_f32(&[Runtime::lit_f32(&a), Runtime::lit_f32(&b)], 0).unwrap();
+    let cfg = R2f2Config::C16_393;
+    for i in 0..n {
+        let want = rust_mul_at_split(a[i], b[i], cfg, 2);
+        assert_eq!(
+            got[i].to_bits(),
+            want.to_bits(),
+            "lane {i}: {} × {} → pallas {} vs rust {}",
+            a[i],
+            b[i],
+            got[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn pallas_fixed_split_k0_truncation_path_is_bit_exact() {
+    // k=0 exercises the maximum flexible-partial-product truncation.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.elemwise_n;
+    let exe = rt.load("r2f2_mul_k0").unwrap();
+    let (a, b) = operands(n, 0xB1);
+    let got = exe.run_f32(&[Runtime::lit_f32(&a), Runtime::lit_f32(&b)], 0).unwrap();
+    let cfg = R2f2Config::C16_393;
+    for i in 0..n {
+        let want = rust_mul_at_split(a[i], b[i], cfg, 0);
+        assert_eq!(got[i].to_bits(), want.to_bits(), "lane {i}: {} × {}", a[i], b[i]);
+    }
+}
+
+#[test]
+fn pallas_adaptive_unit_matches_rust_multiplier_state_machine() {
+    // Full adjustment-unit semantics: result, final split, streak and all
+    // three counters must match rust's R2f2Multiplier per lane.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.elemwise_n;
+    let exe = rt.load("r2f2_mul_adaptive").unwrap();
+    let cfg = R2f2Config::C16_393;
+    let (a, b) = operands(n, 0xC2);
+    let mut rng = SplitMix64::new(0xD3);
+    let k0: Vec<i32> = (0..n).map(|_| rng.below(cfg.fx as u64 + 1) as i32).collect();
+    let s0 = vec![0i32; n];
+
+    let outs = exe
+        .run(&[
+            Runtime::lit_f32(&a),
+            Runtime::lit_f32(&b),
+            Runtime::lit_i32(&k0),
+            Runtime::lit_i32(&s0),
+        ])
+        .unwrap();
+    let res: Vec<f32> = outs[0].to_vec().unwrap();
+    let k1: Vec<i32> = outs[1].to_vec().unwrap();
+    let s1: Vec<i32> = outs[2].to_vec().unwrap();
+    let widen: Vec<i32> = outs[3].to_vec().unwrap();
+    let narrow: Vec<i32> = outs[4].to_vec().unwrap();
+    let unresolved: Vec<i32> = outs[5].to_vec().unwrap();
+
+    for i in 0..n {
+        let mut unit = R2f2Multiplier::with_split(cfg, k0[i] as u32);
+        let want = unit.mul(a[i] as f64, b[i] as f64) as f32;
+        assert_eq!(res[i].to_bits(), want.to_bits(), "lane {i}: {} × {}", a[i], b[i]);
+        assert_eq!(k1[i] as u32, unit.split(), "lane {i} split");
+        assert_eq!(s1[i] as u32, unit.streak(), "lane {i} streak");
+        let st = unit.stats();
+        assert_eq!(widen[i] as u64, st.overflow_adjustments, "lane {i} widen");
+        assert_eq!(narrow[i] as u64, st.redundancy_adjustments, "lane {i} narrow");
+        assert_eq!(unresolved[i] as u64, st.unresolved_range_events, "lane {i} unresolved");
+    }
+}
+
+#[test]
+fn pallas_quantizer_matches_rust_softfloat() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.elemwise_n;
+    let exe = rt.load("quantize_e5m10").unwrap();
+    let (x, _) = operands(n, 0xE4);
+    let got = exe.run_f32(&[Runtime::lit_f32(&x)], 0).unwrap();
+    let fmt = r2f2::softfloat::FpFormat::E5M10;
+    for i in 0..n {
+        let want = r2f2::softfloat::quantize(x[i] as f64, fmt) as f32;
+        assert_eq!(got[i].to_bits(), want.to_bits(), "lane {i}: {}", x[i]);
+    }
+}
+
+#[test]
+fn adaptive_streak_threads_across_executions() {
+    // Drive the same lanes through repeated executions and check the unit
+    // narrows after the 32-streak, exactly like the rust state machine.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.elemwise_n;
+    let exe = rt.load("r2f2_mul_adaptive").unwrap();
+    let a = vec![1.1f32; n];
+    let b = vec![0.9f32; n];
+    let mut k = vec![2i32; n];
+    let mut s = vec![0i32; n];
+    let mut narrowed_at = None;
+    for iter in 0..40 {
+        let outs = exe
+            .run(&[
+                Runtime::lit_f32(&a),
+                Runtime::lit_f32(&b),
+                Runtime::lit_i32(&k),
+                Runtime::lit_i32(&s),
+            ])
+            .unwrap();
+        k = outs[1].to_vec().unwrap();
+        s = outs[2].to_vec().unwrap();
+        let narrow: Vec<i32> = outs[4].to_vec().unwrap();
+        if narrow[0] == 1 && narrowed_at.is_none() {
+            narrowed_at = Some(iter);
+        }
+    }
+    assert_eq!(narrowed_at, Some(31), "narrowing must fire exactly at the streak threshold");
+    assert_eq!(k[0], 1);
+}

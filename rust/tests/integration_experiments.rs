@@ -1,0 +1,145 @@
+//! Full-scale experiment integration: the paper's §5.3 numbers at the
+//! paper's own workload sizes (1.5 M heat multiplications, 30 K SWE
+//! multiplications), run natively through the coordinator.
+
+use r2f2::config::{parse_backend, ExperimentConfig};
+use r2f2::coordinator::Coordinator;
+use r2f2::pde::{self, heat1d, swe2d, QuantMode};
+use r2f2::r2f2core::R2f2Config;
+use r2f2::softfloat::FpFormat;
+
+#[test]
+fn paper_scale_heat_run_adjustment_counts() {
+    // §5.3: "During the entire computation that involves 1.5M
+    // multiplications, R2F2 precision adjustment because of overflow
+    // happened only 5 times ...; because of redundancy happened 23 times."
+    // Same order of magnitude expected (exact counts depend on the solver's
+    // initial data and sweep order, which the paper doesn't pin down).
+    let p = heat1d::HeatParams::default();
+    assert_eq!(p.expected_muls(), 1_497_000);
+    let mut be = pde::R2f2Arith::new(R2f2Config::C16_393);
+    let res = heat1d::run(&p, &mut be, QuantMode::MulOnly);
+    let st = res.r2f2_stats.unwrap();
+    assert_eq!(st.muls, 1_497_000);
+    assert!(
+        st.overflow_adjustments < 200,
+        "overflow adjustments {} (paper: 5)",
+        st.overflow_adjustments
+    );
+    assert!(
+        st.redundancy_adjustments < 500,
+        "redundancy adjustments {} (paper: 23)",
+        st.redundancy_adjustments
+    );
+    assert_eq!(st.unresolved_range_events, 0);
+}
+
+#[test]
+fn paper_scale_heat_r2f2_matches_f32() {
+    // Fig 7(a)+(b): both 16-bit <3,9,3> and 15-bit <3,8,3> achieve "the
+    // same simulation result" as single precision.
+    let p = heat1d::HeatParams::default();
+    let reference = heat1d::run(&p, &mut pde::F32Arith, QuantMode::MulOnly);
+    for cfg in [R2f2Config::C16_393, R2f2Config::C15_383] {
+        let mut be = pde::R2f2Arith::new(cfg);
+        let res = heat1d::run(&p, &mut be, QuantMode::MulOnly);
+        let err = pde::rel_l2(&res.u, &reference.u);
+        assert!(err < 5e-3, "{cfg}: rel err {err}");
+    }
+}
+
+#[test]
+fn paper_scale_heat_full_half_fails() {
+    // Fig 1(b): the all-half simulation is visibly wrong at paper scale.
+    let p = heat1d::HeatParams::default();
+    let reference = heat1d::run(&p, &mut pde::F64Arith, QuantMode::MulOnly);
+    let mut half = pde::FixedArith::new(FpFormat::E5M10);
+    let res = heat1d::run(&p, &mut half, QuantMode::Full);
+    let err = pde::rel_l2(&res.u, &reference.u);
+    // ~4% field error after only 1000 steps (0.1% of the diffusion time) is
+    // a drastically wrong trajectory — an order of magnitude above every
+    // mul-only backend at the same scale (R2F2 < 0.5%).
+    assert!(err > 0.02, "full-half should fail: {err}");
+    let mut r2 = pde::R2f2Arith::new(R2f2Config::C16_393);
+    let ok = heat1d::run(&p, &mut r2, QuantMode::MulOnly);
+    let err_r2 = pde::rel_l2(&ok.u, &reference.u);
+    assert!(err > 10.0 * err_r2, "half {err} vs r2f2 {err_r2}");
+}
+
+#[test]
+fn paper_scale_swe_run_30k_muls_and_counts() {
+    // §5.3: "Within the 30K multiplications, R2F2 adjusted precision 7 and
+    // 15 times, because of overflow and redundancy, respectively."
+    let p = swe2d::SweParams::default();
+    assert_eq!(p.expected_muls(), 30_720);
+    let mut be = pde::R2f2Arith::new(R2f2Config::C16_384);
+    let res = swe2d::run(&p, &mut be, swe2d::QuantScope::UxFluxOnly);
+    let st = res.r2f2_stats.unwrap();
+    assert_eq!(st.muls, 30_720);
+    let total = st.overflow_adjustments + st.redundancy_adjustments;
+    assert!(total >= 1 && total < 100, "adjustments {total} (paper: 7+15)");
+}
+
+#[test]
+fn exp_init_heat_also_works() {
+    // Fig 1(c)/(d): the exponential initialization spans (0, 2.2e4).
+    use r2f2::pde::init::HeatInit;
+    let mut p = heat1d::HeatParams::default();
+    p.init = HeatInit::exp_default();
+    p.steps = 500;
+    let reference = heat1d::run(&p, &mut pde::F32Arith, QuantMode::MulOnly);
+    let mut be = pde::R2f2Arith::new(R2f2Config::C16_393);
+    let res = heat1d::run(&p, &mut be, QuantMode::MulOnly);
+    let err = pde::rel_l2(&res.u, &reference.u);
+    assert!(err < 5e-3, "exp init: {err}");
+}
+
+#[test]
+fn coordinator_comparison_reproduces_figure_ordering() {
+    // The compare command's invariant across both apps: err(f32) ≤
+    // err(R2F2) < err(half-style baseline), with R2F2 close to f32.
+    let coord = Coordinator::new(4);
+    let mut configs = r2f2::coordinator::comparison_set("heat");
+    // Full-half for the fixed baseline (the paper's Fig 1 semantics).
+    for c in configs.iter_mut() {
+        if c.backend.name().starts_with("fixed") {
+            c.mode = QuantMode::Full;
+        }
+        c.heat.steps = 600;
+        c.heat.n = 257;
+        c.heat.dt = 0.25 / (256.0f64 * 256.0);
+    }
+    let outcomes = coord.run_batch(configs);
+    let err_of = |name: &str| {
+        outcomes
+            .iter()
+            .find(|o| o.backend.contains(name))
+            .map(|o| o.rel_err_vs_f64)
+            .unwrap()
+    };
+    assert!(err_of("f32") < 1e-5);
+    assert!(err_of("r2f2") < 5e-3);
+    assert!(err_of("E5M10") > 3.0 * err_of("r2f2"));
+}
+
+#[test]
+fn config_roundtrip_through_toml_runs() {
+    let cfg = ExperimentConfig::from_toml(
+        r#"
+        title = "it"
+        app = "heat"
+        backend = "r2f2:<3,9,3>"
+        [heat]
+        n = 65
+        steps = 100
+        dt = 6.1e-5
+        "#,
+    )
+    .unwrap();
+    let m = r2f2::metrics::Registry::new();
+    let o = r2f2::coordinator::run_experiment(&cfg, &m);
+    assert!(o.rel_err_vs_f64.is_finite());
+    assert_eq!(o.muls, 3 * 63 * 100);
+    // And a bogus backend spec errors.
+    assert!(parse_backend("r2f2:<9,9,9>").is_err());
+}

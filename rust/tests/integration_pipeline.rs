@@ -1,0 +1,159 @@
+//! End-to-end pipeline integration: rust drives multi-step simulations
+//! through the compiled AOT artifacts and checks the paper's qualitative
+//! claims on the PJRT path (not just natively).
+//!
+//! Requires `make artifacts`; skips politely otherwise.
+
+use r2f2::metrics::Registry;
+use r2f2::runtime::{HeatRunner, Runtime, SweRunner};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn sine_field(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| 500.0 * (2.0 * std::f32::consts::PI * i as f32 / (n - 1) as f32).sin())
+        .collect()
+}
+
+fn rel_l2_f32(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 =
+        a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64).powi(2)).sum();
+    let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum();
+    (num / den).sqrt()
+}
+
+#[test]
+fn heat_pjrt_r2f2_matches_f32_variant() {
+    // Fig 7 through the full stack: the R2F2 artifact's trajectory tracks
+    // the f32 artifact's trajectory.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let m = Registry::new();
+    let n = rt.manifest.heat_n;
+    let steps = 400;
+    let u0 = sine_field(n);
+
+    let r2f2 = HeatRunner::new(&mut rt, "heat_step_r2f2", m.clone()).unwrap();
+    let out_r2f2 = r2f2.run(&u0, 0.25, steps, 2).unwrap();
+    let f32v = HeatRunner::new(&mut rt, "heat_step_f32", m.clone()).unwrap();
+    let out_f32 = f32v.run(&u0, 0.25, steps, 0).unwrap();
+
+    let err = rel_l2_f32(&out_r2f2.u, &out_f32.u);
+    assert!(err < 5e-3, "R2F2 vs f32 on PJRT: {err}");
+    // Boundary values pinned (Dirichlet) on both.
+    assert_eq!(out_r2f2.u[0], u0[0]);
+    assert_eq!(out_r2f2.u[n - 1], u0[n - 1]);
+}
+
+#[test]
+fn heat_pjrt_adjustments_are_rare_and_counted() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let m = Registry::new();
+    let n = rt.manifest.heat_n;
+    let runner = HeatRunner::new(&mut rt, "heat_step_r2f2", m).unwrap();
+    let out = runner.run(&sine_field(n), 0.25, 300, 2).unwrap();
+    let muls = (300 * 3 * n) as i64;
+    assert!(out.widen + out.narrow > 0, "some adjustment expected");
+    assert!(
+        out.widen + out.narrow < muls / 100,
+        "adjustments must be rare: {}+{} in {muls}",
+        out.widen,
+        out.narrow
+    );
+}
+
+#[test]
+fn heat_pjrt_e5m10_freezes_small_updates() {
+    // §3.1 on the PJRT path: a uniformly tiny field stops evolving under
+    // E5M10 multiplications (products underflow), but not under f32.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let m = Registry::new();
+    let n = rt.manifest.heat_n;
+    // Small bump around the center, all values ≤ 1e-4. Tail values below
+    // 1e-30 are clamped to zero: XLA's CPU backend runs with FTZ, so f32
+    // subnormals would be flushed by the plain `u + 0` path and confound
+    // the exact-freeze comparison.
+    let u0: Vec<f32> = (0..n)
+        .map(|i| {
+            let x = (i as f32 - n as f32 / 2.0) / 20.0;
+            let v = 1e-4 * (-x * x).exp();
+            if v < 1e-30 {
+                0.0
+            } else {
+                v
+            }
+        })
+        .collect();
+
+    let half = HeatRunner::new(&mut rt, "heat_step_e5m10", m.clone()).unwrap();
+    let frozen = half.run(&u0, 0.25, 50, 0).unwrap();
+    assert_eq!(frozen.u, u0, "E5M10 must freeze (all products underflow)");
+
+    let f32v = HeatRunner::new(&mut rt, "heat_step_f32", m).unwrap();
+    let alive = f32v.run(&u0, 0.25, 50, 0).unwrap();
+    assert_ne!(alive.u, u0, "f32 must keep diffusing");
+}
+
+#[test]
+fn swe_pjrt_r2f2_close_to_f32_and_stable() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let m = Registry::new();
+    let n = rt.manifest.swe_n;
+    let side = n + 2;
+    // Shelf-scale drop matching python's swe_drop_init defaults.
+    let mut h0 = vec![150.0f32; side * side];
+    let dx = 2000.0f32;
+    let sidelen = n as f32 * dx;
+    let w = 0.15 * sidelen;
+    for j in 0..n {
+        for i in 0..n {
+            let x = (i as f32 + 0.5) / n as f32 * sidelen - 0.5 * sidelen;
+            let y = (j as f32 + 0.5) / n as f32 * sidelen - 0.5 * sidelen;
+            // python writes h_int.T at [1+i][1+j] — row index is x.
+            h0[(i + 1) * side + (j + 1)] = 150.0 + 6.0 * (-(x * x + y * y) / (w * w)).exp();
+        }
+    }
+
+    let r2f2 = SweRunner::new(&mut rt, "swe_step_r2f2", m.clone()).unwrap();
+    let out_r = r2f2.run(&h0, 30, 2).unwrap();
+    let f32v = SweRunner::new(&mut rt, "swe_step_f32", m).unwrap();
+    let out_f = f32v.run(&h0, 30, 0).unwrap();
+
+    let err = rel_l2_f32(&out_r.h, &out_f.h);
+    assert!(err < 1e-3, "R2F2 vs f32 SWE on PJRT: {err}");
+    assert!(out_r.h.iter().all(|&h| h > 100.0 && h < 200.0), "depth stable");
+    assert!(out_r.widen > 0, "shelf scale must force exponent widening");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = rt.load("heat_step_f32").unwrap();
+    let b = rt.load("heat_step_f32").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second load must hit the cache");
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in [
+        "r2f2_mul_k2",
+        "r2f2_mul_k0",
+        "r2f2_mul_adaptive",
+        "quantize_e5m10",
+        "heat_step_r2f2",
+        "heat_step_e5m10",
+        "heat_step_f32",
+        "swe_step_r2f2",
+        "swe_step_f32",
+    ] {
+        assert!(rt.manifest.find(name).is_some(), "missing artifact {name}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Property-based invariants over the numerics stack (proptest_mini).
+
+use r2f2::proptest_mini::check;
+use r2f2::r2f2core::{mul_packed, R2f2Config, R2f2Multiplier};
+use r2f2::softfloat::{add, decode, encode, mul, FpFormat, Fp, Rounder};
+
+fn arb_format(g: &mut r2f2::proptest_mini::Gen) -> FpFormat {
+    FpFormat::new(g.int_in(2, 8) as u32, g.int_in(1, 14) as u32)
+}
+
+fn arb_config(g: &mut r2f2::proptest_mini::Gen) -> R2f2Config {
+    *g.choose(&R2f2Config::TABLE1)
+}
+
+#[test]
+fn prop_encode_decode_is_idempotent() {
+    check("encode∘decode idempotent", 5000, |g| {
+        let fmt = arb_format(g);
+        let x = g.f64_nasty();
+        let q = r2f2::softfloat::quantize(x, fmt);
+        let qq = r2f2::softfloat::quantize(q, fmt);
+        if q.to_bits() == qq.to_bits() {
+            Ok(())
+        } else {
+            Err(format!("{fmt}: {x} → {q} → {qq}"))
+        }
+    });
+}
+
+#[test]
+fn prop_decode_encode_roundtrips_representables() {
+    check("decode∘encode identity on packed values", 5000, |g| {
+        let fmt = arb_format(g);
+        let v = Fp {
+            sign: g.bool() as u8,
+            exp: g.int_in(1, fmt.max_biased_exp()) as u32,
+            frac: g.below(1 << fmt.m_w),
+        };
+        let x = decode(v, fmt);
+        let (v2, flags) = encode(x, fmt, &mut Rounder::nearest_even());
+        if v2 == v && flags.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{fmt}: {v:?} → {x} → {v2:?} ({flags:?})"))
+        }
+    });
+}
+
+#[test]
+fn prop_mul_commutative_and_sign_correct() {
+    check("mul commutative + sign", 5000, |g| {
+        let fmt = arb_format(g);
+        let mut r = Rounder::nearest_even();
+        let a = encode(g.f64_nasty(), fmt, &mut r).0;
+        let b = encode(g.f64_nasty(), fmt, &mut r).0;
+        let (ab, _) = mul(a, b, fmt, &mut r);
+        let (ba, _) = mul(b, a, fmt, &mut r);
+        if ab != ba {
+            return Err(format!("{fmt}: not commutative {a:?} {b:?}"));
+        }
+        if ab.sign != a.sign ^ b.sign {
+            return Err(format!("{fmt}: sign wrong {a:?} {b:?} -> {ab:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mul_magnitude_monotone_in_operand() {
+    // |a| ≤ |a'| (same signs) ⇒ |a×b| ≤ |a'×b| after rounding/saturation.
+    check("mul monotone", 3000, |g| {
+        let fmt = arb_format(g);
+        let mut r = Rounder::nearest_even();
+        let b = encode(g.f64_log(1e-6, 1e6), fmt, &mut r).0;
+        let x = g.f64_log(1e-6, 1e6);
+        let y = x * g.f64_in(1.0, 16.0);
+        let a1 = encode(x, fmt, &mut r).0;
+        let a2 = encode(y, fmt, &mut r).0;
+        let (p1, _) = mul(a1, b, fmt, &mut r);
+        let (p2, _) = mul(a2, b, fmt, &mut r);
+        if decode(p1, fmt).abs() <= decode(p2, fmt).abs() {
+            Ok(())
+        } else {
+            Err(format!("{fmt}: {x}·b > {y}·b"))
+        }
+    });
+}
+
+#[test]
+fn prop_add_commutative_and_bounded() {
+    check("add commutative", 5000, |g| {
+        let fmt = arb_format(g);
+        let mut r = Rounder::nearest_even();
+        let a = encode(g.f64_signed_log(1e-6, 1e6), fmt, &mut r).0;
+        let b = encode(g.f64_signed_log(1e-6, 1e6), fmt, &mut r).0;
+        let (s1, _) = add(a, b, fmt, &mut r);
+        let (s2, _) = add(b, a, fmt, &mut r);
+        if s1 != s2 {
+            return Err(format!("{fmt}: {a:?}+{b:?}"));
+        }
+        // Result magnitude bounded by the format.
+        if decode(s1, fmt).abs() > fmt.max_value() {
+            return Err("exceeded max finite".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_mul_never_exceeds_exact() {
+    // The flexible-partial-product truncation only clears low bits, so the
+    // truncated product magnitude never exceeds the exact one.
+    check("truncation conservative", 3000, |g| {
+        let cfg = arb_config(g);
+        let k = g.int_in(0, cfg.fx as i64) as u32;
+        let fmt = cfg.format(k);
+        let mut r = Rounder::nearest_even();
+        let a = encode(g.f64_log(1e-4, 1e4), fmt, &mut r).0;
+        let b = encode(g.f64_log(1e-4, 1e4), fmt, &mut r).0;
+        let (apx, _) = mul_packed(a, b, cfg, k, &mut Rounder::nearest_even());
+        let (exact, _) = mul(a, b, fmt, &mut Rounder::nearest_even());
+        if decode(apx, fmt).abs() <= decode(exact, fmt).abs() {
+            Ok(())
+        } else {
+            Err(format!("{cfg} k={k}: {a:?}×{b:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_adjustment_unit_invariants() {
+    // Across random multiplication streams: k stays in [0, FX]; results are
+    // finite; counters are consistent with the observed events.
+    check("adjustment invariants", 300, |g| {
+        let cfg = arb_config(g);
+        let mut unit = R2f2Multiplier::new(cfg);
+        let mut last_k = unit.split();
+        for _ in 0..200 {
+            let a = g.f64_signed_log(1e-9, 1e9);
+            let b = g.f64_log(1e-9, 1e9);
+            let v = unit.mul(a, b);
+            let k = unit.split();
+            if k > cfg.fx {
+                return Err(format!("{cfg}: split {k} out of range"));
+            }
+            if !v.is_finite() {
+                return Err(format!("{cfg}: non-finite result {v}"));
+            }
+            // Narrowing moves one step at a time.
+            if k + 1 < last_k {
+                return Err(format!("{cfg}: narrowed more than one step {last_k}→{k}"));
+            }
+            last_k = k;
+        }
+        let st = unit.stats();
+        if st.muls != 200 {
+            return Err("mul count wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_widening_result_is_at_least_as_accurate() {
+    // After a widen-and-retry, the result's relative error vs the exact
+    // product must be no worse than the saturated/flushed fixed result.
+    check("widen helps", 2000, |g| {
+        let cfg = R2f2Config::C16_393;
+        let a = g.f64_log(1e2, 1e4);
+        let b = g.f64_log(1e2, 1e4); // products 1e4..1e8 often overflow E5M10
+        let exact = a * b;
+        let mut unit = R2f2Multiplier::new(cfg);
+        let v = unit.mul(a, b);
+        let (fixed, _) = r2f2::softfloat::mul_f(a, b, FpFormat::E5M10);
+        let e_unit = ((v - exact) / exact).abs();
+        let e_fixed = ((fixed - exact) / exact).abs();
+        if e_unit <= e_fixed + 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("{a}×{b}: unit {e_unit} worse than fixed {e_fixed}"))
+        }
+    });
+}
+
+#[test]
+fn prop_datapath_latency_constant_for_all_configs() {
+    check("datapath latency", 500, |g| {
+        let cfg = arb_config(g);
+        let s = r2f2::r2f2core::datapath::r2f2_schedule(cfg);
+        if s.latency == 12 && s.ii == 4 {
+            Ok(())
+        } else {
+            Err(format!("{cfg}: {}/{}", s.latency, s.ii))
+        }
+    });
+}
+
+#[test]
+fn prop_quantize_is_nearest() {
+    // |quantize(x) − x| ≤ |v − x| for the two neighbouring representables.
+    check("quantize nearest", 3000, |g| {
+        // e_w ≥ 3 so the normal range spans more than one octave.
+        let fmt = FpFormat::new(g.int_in(3, 8) as u32, g.int_in(1, 14) as u32);
+        let x = g.f64_log(fmt.min_normal() * 2.0, fmt.max_value() / 2.0);
+        let q = r2f2::softfloat::quantize(x, fmt);
+        // Step one ulp in each direction from q.
+        let (fp, _) = encode(q, fmt, &mut Rounder::nearest_even());
+        let up = Fp {
+            frac: if fp.frac + 1 < (1 << fmt.m_w) { fp.frac + 1 } else { 0 },
+            exp: if fp.frac + 1 < (1 << fmt.m_w) { fp.exp } else { fp.exp + 1 },
+            ..fp
+        };
+        if up.exp <= fmt.max_biased_exp() as u32 {
+            let vu = decode(up, fmt);
+            if (vu - x).abs() < (q - x).abs() * (1.0 - 1e-12) {
+                return Err(format!("{fmt}: {x} closer to {vu} than {q}"));
+            }
+        }
+        Ok(())
+    });
+}
