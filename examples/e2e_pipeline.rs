@@ -22,7 +22,7 @@ fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
     (num / den).sqrt()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> r2f2::runtime::Result<()> {
     let metrics = Registry::new();
     let mut rt = Runtime::from_default_dir()?;
     println!("PJRT platform: {} | artifacts: {}", rt.platform(), rt.manifest.dir.display());

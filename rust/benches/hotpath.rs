@@ -1,19 +1,21 @@
 //! §Perf — hot-path microbenchmarks across all three layers.
 //!
 //! L3 native: scalar multiplier throughput (the sweep/solver inner loop),
-//! batch heat/SWE step throughput, parallel sweep scaling.
+//! scalar-dispatch vs batched-engine heat steps (the DESIGN.md §8 rows —
+//! the batched fixed-format and R2F2 paths must come out ≥ 2× faster),
+//! parallel sweep scaling.
 //! L1/L2 via PJRT: compiled heat/SWE step latency and steps/s (skipped when
 //! artifacts are absent).
 
 use r2f2::bench_util::{bench, bench_with, black_box, fmt_ns, print_results, BenchResult};
 use r2f2::coordinator::parallel_map;
 use r2f2::metrics::Registry;
-use r2f2::pde::heat1d::{run, HeatParams};
-use r2f2::pde::{F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
+use r2f2::pde::heat1d::{run, run_scalar, HeatParams, HeatResult};
+use r2f2::pde::{Arith, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
 use r2f2::r2f2core::{R2f2Config, R2f2Multiplier};
 use r2f2::rng::SplitMix64;
 use r2f2::runtime::{HeatRunner, Runtime};
-use r2f2::softfloat::{add_f, mul_f, quantize, FpFormat};
+use r2f2::softfloat::{add_f, mul_batch_f, mul_f, quantize, Flags, FpFormat};
 use r2f2::sweep::error_sweep::{error_sweep, SweepParams};
 use std::time::Duration;
 
@@ -49,39 +51,86 @@ fn main() {
         i += 1;
         black_box(unit.mul(a, b));
     }));
-    print_results("L3 scalar hot path", &results);
+    // Batched counterparts of the scalar units above: one constant operand,
+    // hoisted format/rounder state (DESIGN.md §8).
+    let xs: Vec<f64> = ops.iter().map(|&(_, b)| b).collect();
+    let mut out = vec![0.0f64; xs.len()];
+    let mut flags = vec![Flags::NONE; xs.len()];
+    results.push(bench_with(
+        "softfloat mul_batch_f E5M10 ×256 els",
+        30,
+        Duration::from_millis(2),
+        &mut || {
+            mul_batch_f(0.25, &xs[..256], FpFormat::E5M10, &mut out[..256], &mut flags[..256]);
+            black_box(&out);
+        },
+    ));
+    let mut unit = R2f2Arith::new(R2f2Config::C16_393);
+    results.push(bench_with(
+        "R2f2Arith::mul_batch ×256 els",
+        30,
+        Duration::from_millis(2),
+        &mut || {
+            unit.mul_batch(&mut out[..256], 0.25, &xs[..256]);
+            black_box(&out);
+        },
+    ));
+    print_results("L3 scalar vs batched units", &results);
 
-    // ---- L3 solver steps -------------------------------------------------
+    // ---- L3 solver steps: scalar dispatch vs batched engine -------------
     let mut p = HeatParams::default();
     p.n = 257;
     p.dt = 0.25 / (256.0f64 * 256.0);
     p.steps = 50;
-    let mut results = Vec::new();
-    for (name, f) in [
-        ("heat 257×50 f64", 0usize),
-        ("heat 257×50 f32", 1),
-        ("heat 257×50 fixed E5M10", 2),
-        ("heat 257×50 r2f2 <3,9,3>", 3),
-    ] {
-        let pp = p.clone();
-        results.push(bench_with(name, 10, Duration::from_millis(5), &mut || match f {
+
+    fn heat_case(p: &HeatParams, which: usize, batched: bool) {
+        type Run = fn(&HeatParams, &mut dyn Arith, QuantMode) -> HeatResult;
+        let go: Run = if batched { run } else { run_scalar };
+        match which {
             0 => {
-                black_box(run(&pp, &mut F64Arith, QuantMode::MulOnly));
+                black_box(go(p, &mut F64Arith, QuantMode::MulOnly));
             }
             1 => {
-                black_box(run(&pp, &mut F32Arith, QuantMode::MulOnly));
+                black_box(go(p, &mut F32Arith, QuantMode::MulOnly));
             }
             2 => {
                 let mut be = FixedArith::new(FpFormat::E5M10);
-                black_box(run(&pp, &mut be, QuantMode::MulOnly));
+                black_box(go(p, &mut be, QuantMode::MulOnly));
             }
             _ => {
                 let mut be = R2f2Arith::new(R2f2Config::C16_393);
-                black_box(run(&pp, &mut be, QuantMode::MulOnly));
+                black_box(go(p, &mut be, QuantMode::MulOnly));
             }
-        }));
+        }
+    }
+
+    let mut results = Vec::new();
+    let mut medians = [[0.0f64; 2]; 4];
+    for (which, name) in [
+        (0usize, "heat 257×50 f64"),
+        (1, "heat 257×50 f32"),
+        (2, "heat 257×50 fixed E5M10"),
+        (3, "heat 257×50 r2f2 <3,9,3>"),
+    ] {
+        for (bi, label) in [(0usize, "scalar dispatch"), (1, "batched engine")] {
+            let pp = p.clone();
+            let r = bench_with(
+                &format!("{name} [{label}]"),
+                10,
+                Duration::from_millis(5),
+                &mut || heat_case(&pp, which, bi == 1),
+            );
+            medians[which][bi] = r.median_ns;
+            results.push(r);
+        }
     }
     print_results("L3 solver (50 steps per iteration)", &results);
+    println!("\nbatched-engine speedup vs scalar dispatch (median):");
+    for (which, name) in
+        [(0usize, "f64"), (1, "f32"), (2, "fixed E5M10"), (3, "r2f2 <3,9,3>")]
+    {
+        println!("  {name:<14} ×{:.2}", medians[which][0] / medians[which][1]);
+    }
 
     // ---- Coordinator fan-out scaling ------------------------------------
     let sweep_job = |workers: usize| {

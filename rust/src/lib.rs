@@ -17,7 +17,11 @@
 //!   resource (FF/LUT) cost model for Table 1.
 //! * [`pde`] — the two case studies: 1D heat equation (explicit finite
 //!   differences) and 2D shallow-water equations (Lax–Wendroff), runnable
-//!   under f64 / f32 / fixed `ExMy` / R2F2 multiplication backends.
+//!   under f64 / f32 / fixed `ExMy` / R2F2 multiplication backends. The
+//!   [`pde::Arith`] trait carries the **batched arithmetic engine**
+//!   (DESIGN.md §8): slice-level operations whose per-backend fast paths
+//!   hoist dispatch, constant-operand encodes and format constants out of
+//!   the hot loops while staying bit-identical to the scalar path.
 //! * [`analysis`] / [`sweep`] — the exploration harnesses behind Figs 2, 3
 //!   and 6.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`

@@ -84,8 +84,22 @@ pub struct HeatResult {
 }
 
 /// Run the simulation with the given arithmetic backend and quantization
-/// mode.
+/// mode, using the backend's batched stencil engine (DESIGN.md §8). Results
+/// are bit-identical to [`run_scalar`]; `rust/tests/batched_vs_scalar.rs`
+/// holds the contract.
 pub fn run(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResult {
+    run_impl(params, be, mode, true)
+}
+
+/// The per-multiplication reference path: every stencil multiplication goes
+/// through one dynamically-dispatched [`Arith::mul`] call, exactly as the
+/// paper's emulation is specified. Kept as the semantic reference for the
+/// batched engine and as the baseline for `benches/hotpath.rs`.
+pub fn run_scalar(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResult {
+    run_impl(params, be, mode, false)
+}
+
+fn run_impl(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode, batched: bool) -> HeatResult {
     assert!(params.n >= 3, "need at least one interior node");
     assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());
 
@@ -104,21 +118,27 @@ pub fn run(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResu
     let mut snapshots = Vec::new();
 
     for step in 0..params.steps {
-        for i in 1..params.n - 1 {
-            // du = r·u[i−1] − (2r)·u[i] + r·u[i+1]
-            let left = ctx.mul(r, u[i - 1]);
-            let mid = ctx.mul(two_r, u[i]);
-            let right = ctx.mul(r, u[i + 1]);
-            let du = {
-                let s = ctx.sub(left, mid);
-                ctx.add(s, right)
-            };
-            let unew = ctx.add(u[i], du);
-            next[i] = ctx.quant(unew);
+        if batched {
+            // One fused sweep: 3·(n−2) multiplications, boundary copy
+            // included. Bit-identical to the scalar loop below.
+            ctx.stencil_step(&mut next, &u, r);
+        } else {
+            for i in 1..params.n - 1 {
+                // du = r·u[i−1] − (2r)·u[i] + r·u[i+1]
+                let left = ctx.mul(r, u[i - 1]);
+                let mid = ctx.mul(two_r, u[i]);
+                let right = ctx.mul(r, u[i + 1]);
+                let du = {
+                    let s = ctx.sub(left, mid);
+                    ctx.add(s, right)
+                };
+                let unew = ctx.add(u[i], du);
+                next[i] = ctx.quant(unew);
+            }
+            // Dirichlet boundaries keep their (possibly quantized) values.
+            next[0] = u[0];
+            next[params.n - 1] = u[params.n - 1];
         }
-        // Dirichlet boundaries keep their (possibly quantized) values.
-        next[0] = u[0];
-        next[params.n - 1] = u[params.n - 1];
         std::mem::swap(&mut u, &mut next);
 
         if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
@@ -287,6 +307,22 @@ mod tests {
             err_sr < 0.5 * err_rne,
             "stochastic {err_sr} should beat deterministic {err_rne}"
         );
+    }
+
+    #[test]
+    fn batched_run_matches_scalar_reference() {
+        // The DESIGN.md §8 contract in miniature; the full per-backend
+        // matrix lives in tests/batched_vs_scalar.rs.
+        let p = small();
+        let mut a = R2f2Arith::new(R2f2Config::C16_393);
+        let mut b = R2f2Arith::new(R2f2Config::C16_393);
+        let scalar = super::run_scalar(&p, &mut a, QuantMode::MulOnly);
+        let batched = run(&p, &mut b, QuantMode::MulOnly);
+        assert_eq!(scalar.muls, batched.muls);
+        assert_eq!(scalar.r2f2_stats, batched.r2f2_stats);
+        for i in 0..p.n {
+            assert_eq!(scalar.u[i].to_bits(), batched.u[i].to_bits(), "node {i}");
+        }
     }
 
     #[test]

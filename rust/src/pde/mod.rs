@@ -14,8 +14,11 @@ pub mod heat1d;
 pub mod init;
 pub mod swe2d;
 
-use crate::r2f2core::{R2f2Config, R2f2Multiplier, Stats};
-use crate::softfloat::{add_f, mul_f, quantize, quantize_flagged, FpFormat};
+use crate::r2f2core::{EncSlot, R2f2Config, R2f2Multiplier, Stats};
+use crate::softfloat::{
+    add_f, decode, encode, mul as sf_mul, mul_batch_f, mul_f, mul_pairs_f, quantize,
+    quantize_flagged, Flags, Fp, FpFormat, Rounder,
+};
 
 /// How much of the solver arithmetic routes through the backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +42,26 @@ pub struct RangeEvents {
 /// A pluggable arithmetic unit. One instance is owned by one solver run, so
 /// stateful backends (R2F2's split register) behave like one hardware
 /// multiplier seeing the solver's multiplication stream in order.
+///
+/// Besides the scalar operations, the trait carries the **batched engine**
+/// (DESIGN.md §8): slice-level operations with default implementations that
+/// replay the scalar path, and per-backend fast paths that hoist
+/// loop-invariant work (dynamic dispatch, constant-operand encodes, format
+/// decomposition) out of the inner loop. The contract is strict: a batched
+/// call must produce **bit-identical results and identical counters** to
+/// the equivalent scalar sequence — `rust/tests/batched_vs_scalar.rs`
+/// enforces it per backend.
+///
+/// ```
+/// use r2f2::pde::{Arith, F64Arith};
+///
+/// let mut unit = F64Arith;
+/// assert_eq!(unit.mul(3.0, 4.0), 12.0);
+///
+/// let mut out = [0.0; 3];
+/// unit.mul_batch(&mut out, 2.0, &[1.0, 2.0, 3.0]);
+/// assert_eq!(out, [2.0, 4.0, 6.0]);
+/// ```
 pub trait Arith {
     /// Human-readable backend name for reports (e.g. `E5M10`, `<3,9,3>`).
     fn name(&self) -> String;
@@ -53,6 +76,42 @@ pub trait Arith {
     fn quant(&mut self, x: f64) -> f64 {
         x
     }
+    /// Batched constant × slice multiply: `out[i] = a ⊗ xs[i]`, issued in
+    /// index order. Bit-identical to the scalar loop, including counters.
+    fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        assert_eq!(out.len(), xs.len());
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = self.mul(a, x);
+        }
+    }
+    /// Batched pairwise multiply: `out[i] = pairs[i].0 ⊗ pairs[i].1`, in
+    /// index order. Bit-identical to the scalar loop, including counters.
+    fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        assert_eq!(out.len(), pairs.len());
+        for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
+            *o = self.mul(a, b);
+        }
+    }
+    /// Fused heat stencil sweep: for every interior node
+    /// `next[i] = u[i] + (r·u[i−1] − 2r·u[i] + r·u[i+1])` with the three
+    /// multiplications routed through the unit in the canonical per-node
+    /// order (left, mid, right), and boundary nodes copied. `mode` selects
+    /// whether the additions and storage quantization also go through the
+    /// backend, exactly as the scalar solver does.
+    fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
+        scalar_stencil_step(self, next, u, r, mode);
+    }
+    /// Fused shallow-water x-momentum flux batch: for each `(q1, q3)` pair
+    /// compute `q1²/q3 + g2·q3²` with its three multiplications (`q1·q1`,
+    /// `q3·q3`, `g2·q3²`) through the unit, in index order.
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+        assert_eq!(out.len(), q.len());
+        for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+            let q1sq = self.mul(q1, q1);
+            let q3sq = self.mul(q3, q3);
+            *o = q1sq / q3 + self.mul(g2, q3sq);
+        }
+    }
     /// R2F2 adjustment statistics, if the backend has them.
     fn r2f2_stats(&self) -> Option<Stats> {
         None
@@ -61,6 +120,41 @@ pub trait Arith {
     fn range_events(&self) -> Option<RangeEvents> {
         None
     }
+}
+
+/// The canonical scalar heat-stencil sequence — the reference semantics the
+/// batched fast paths must reproduce bit-for-bit. Shared by the default
+/// [`Arith::stencil_step`] and by backends that fall back for modes they do
+/// not accelerate.
+pub fn scalar_stencil_step<A: Arith + ?Sized>(
+    be: &mut A,
+    next: &mut [f64],
+    u: &[f64],
+    r: f64,
+    mode: QuantMode,
+) {
+    let n = u.len();
+    assert_eq!(next.len(), n);
+    assert!(n >= 3);
+    let two_r = 2.0 * r;
+    for i in 1..n - 1 {
+        let left = be.mul(r, u[i - 1]);
+        let mid = be.mul(two_r, u[i]);
+        let right = be.mul(r, u[i + 1]);
+        match mode {
+            QuantMode::MulOnly => {
+                next[i] = u[i] + ((left - mid) + right);
+            }
+            QuantMode::Full => {
+                let s = be.add(left, -mid);
+                let du = be.add(s, right);
+                let unew = be.add(u[i], du);
+                next[i] = be.quant(unew);
+            }
+        }
+    }
+    next[0] = u[0];
+    next[n - 1] = u[n - 1];
 }
 
 /// IEEE double — the ground-truth backend.
@@ -73,6 +167,37 @@ impl Arith for F64Arith {
     }
     fn mul(&mut self, a: f64, b: f64) -> f64 {
         a * b
+    }
+    fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        assert_eq!(out.len(), xs.len());
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = a * x;
+        }
+    }
+    fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        assert_eq!(out.len(), pairs.len());
+        for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
+            *o = a * b;
+        }
+    }
+    fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, _mode: QuantMode) {
+        // add/quant are identity for f64, so Full and MulOnly coincide and
+        // the whole sweep vectorizes as one tight loop.
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        let two_r = 2.0 * r;
+        for i in 1..n - 1 {
+            next[i] = u[i] + ((r * u[i - 1] - two_r * u[i]) + r * u[i + 1]);
+        }
+        next[0] = u[0];
+        next[n - 1] = u[n - 1];
+    }
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+        assert_eq!(out.len(), q.len());
+        for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+            *o = q1 * q1 / q3 + g2 * (q3 * q3);
+        }
     }
 }
 
@@ -92,6 +217,40 @@ impl Arith for F32Arith {
     }
     fn quant(&mut self, x: f64) -> f64 {
         x as f32 as f64
+    }
+    fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        assert_eq!(out.len(), xs.len());
+        let af = a as f32;
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = (af * x as f32) as f64;
+        }
+    }
+    fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        assert_eq!(out.len(), pairs.len());
+        for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
+            *o = (a as f32 * b as f32) as f64;
+        }
+    }
+    fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
+        if mode == QuantMode::Full {
+            // Additions and storage also run in f32; keep the canonical
+            // sequence (still monomorphized — no per-mul dynamic dispatch).
+            scalar_stencil_step(self, next, u, r, mode);
+            return;
+        }
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        let rf = r as f32;
+        let two_rf = (2.0 * r) as f32;
+        for i in 1..n - 1 {
+            let left = (rf * u[i - 1] as f32) as f64;
+            let mid = (two_rf * u[i] as f32) as f64;
+            let right = (rf * u[i + 1] as f32) as f64;
+            next[i] = u[i] + ((left - mid) + right);
+        }
+        next[0] = u[0];
+        next[n - 1] = u[n - 1];
     }
 }
 
@@ -137,6 +296,121 @@ impl Arith for FixedArith {
         self.track(fl);
         v
     }
+    fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        let mut flags = vec![Flags::NONE; xs.len()];
+        mul_batch_f(a, xs, self.fmt, out, &mut flags);
+        for fl in &flags {
+            self.track(*fl);
+        }
+    }
+    fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        let mut flags = vec![Flags::NONE; pairs.len()];
+        mul_pairs_f(pairs, self.fmt, out, &mut flags);
+        for fl in &flags {
+            self.track(*fl);
+        }
+    }
+    fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
+        if mode == QuantMode::Full {
+            // Full mode also quantizes the adds and the stored state; no
+            // products can be shared there, so keep the canonical sequence.
+            scalar_stencil_step(self, next, u, r, mode);
+            return;
+        }
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        let fmt = self.fmt;
+        let mut rnd = Rounder::nearest_even();
+        let (fr, flr) = encode(r, fmt, &mut rnd);
+        let (f2r, fl2r) = encode(2.0 * r, fmt, &mut rnd);
+
+        // Encode the state once. The scalar path re-encodes `u[j]` for each
+        // of its up-to-three uses; encode is deterministic under RNE, so
+        // reuse is bit-identical.
+        let eb: Vec<(Fp, Flags)> = {
+            let mut v = Vec::with_capacity(n);
+            for &x in u.iter() {
+                v.push(encode(x, fmt, &mut rnd));
+            }
+            v
+        };
+
+        // r ⊗ u[j], shared between the `right` of node j−1 and the `left`
+        // of node j+1 (identical operands ⇒ identical product and flags).
+        let mut pr_val = vec![0.0f64; n];
+        let mut pr_fl = vec![Flags::NONE; n];
+        for j in 0..n {
+            let (fc, flc) = sf_mul(fr, eb[j].0, fmt, &mut rnd);
+            pr_val[j] = decode(fc, fmt);
+            pr_fl[j] = flr | eb[j].1 | flc;
+        }
+
+        // Range events with the scalar path's multiplicity: the product
+        // r·u[j] is tracked once per use — as `left` when j ≤ n−3 and as
+        // `right` when j ≥ 2.
+        let mut of = 0u64;
+        let mut uf = 0u64;
+        for j in 0..n {
+            let mult = u64::from(j + 3 <= n) + u64::from(j >= 2);
+            if pr_fl[j].overflow() {
+                of += mult;
+            }
+            if pr_fl[j].underflow() {
+                uf += mult;
+            }
+        }
+
+        for i in 1..n - 1 {
+            let (fc, flc) = sf_mul(f2r, eb[i].0, fmt, &mut rnd);
+            let mid = decode(fc, fmt);
+            let flm = fl2r | eb[i].1 | flc;
+            if flm.overflow() {
+                of += 1;
+            }
+            if flm.underflow() {
+                uf += 1;
+            }
+            next[i] = u[i] + ((pr_val[i - 1] - mid) + pr_val[i + 1]);
+        }
+        self.events.overflows += of;
+        self.events.underflows += uf;
+        next[0] = u[0];
+        next[n - 1] = u[n - 1];
+    }
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+        assert_eq!(out.len(), q.len());
+        let fmt = self.fmt;
+        let mut rnd = Rounder::nearest_even();
+        let (fg, flg) = encode(g2, fmt, &mut rnd);
+        let mut of = 0u64;
+        let mut uf = 0u64;
+        for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+            // q1² and q3²: encode each operand once (the scalar path encodes
+            // it twice; the encodings are identical).
+            let (fq1, fl1) = encode(q1, fmt, &mut rnd);
+            let (p1, flp1) = sf_mul(fq1, fq1, fmt, &mut rnd);
+            let q1sq = decode(p1, fmt);
+            let (fq3, fl3) = encode(q3, fmt, &mut rnd);
+            let (p3, flp3) = sf_mul(fq3, fq3, fmt, &mut rnd);
+            let q3sq = decode(p3, fmt);
+            // g2 · q3²: the scalar path re-encodes the decoded product.
+            let (fq3sq, fl3sq) = encode(q3sq, fmt, &mut rnd);
+            let (pg, flpg) = sf_mul(fg, fq3sq, fmt, &mut rnd);
+            let gq = decode(pg, fmt);
+            *o = q1sq / q3 + gq;
+            for fl in [fl1 | flp1, fl3 | flp3, flg | fl3sq | flpg] {
+                if fl.overflow() {
+                    of += 1;
+                }
+                if fl.underflow() {
+                    uf += 1;
+                }
+            }
+        }
+        self.events.overflows += of;
+        self.events.underflows += uf;
+    }
     fn range_events(&self) -> Option<RangeEvents> {
         Some(self.events)
     }
@@ -170,6 +444,54 @@ impl Arith for R2f2Arith {
     fn quant(&mut self, x: f64) -> f64 {
         let fmt = self.unit.config().format(self.unit.split());
         quantize(x, fmt)
+    }
+    fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        assert_eq!(out.len(), xs.len());
+        // §2's observation: operand ranges are stable within a simulation
+        // stage, so the constant operand's encoding (and its redundancy
+        // verdict) is derived once per split and reused across the block
+        // instead of per multiplication. State transitions stay exact.
+        let c = self.unit.prepare_const(a);
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = self.unit.mul_const(&c, x);
+        }
+    }
+    fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
+        if mode == QuantMode::Full {
+            scalar_stencil_step(self, next, u, r, mode);
+            return;
+        }
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        let cr = self.unit.prepare_const(r);
+        let c2r = self.unit.prepare_const(2.0 * r);
+        // Sliding-window encode cache: u[j] feeds the `right` of node j−1,
+        // the `mid` of node j and the `left` of node j+1; while the split
+        // is unchanged those three encodes collapse into one.
+        let mut sl = EncSlot::empty();
+        let mut sm = EncSlot::empty();
+        let mut sr = EncSlot::empty();
+        for i in 1..n - 1 {
+            let left = self.unit.mul_const_cached(&cr, u[i - 1], &mut sl);
+            let mid = self.unit.mul_const_cached(&c2r, u[i], &mut sm);
+            let right = self.unit.mul_const_cached(&cr, u[i + 1], &mut sr);
+            next[i] = u[i] + ((left - mid) + right);
+            sl = sm;
+            sm = sr;
+            sr = EncSlot::empty();
+        }
+        next[0] = u[0];
+        next[n - 1] = u[n - 1];
+    }
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+        assert_eq!(out.len(), q.len());
+        let cg = self.unit.prepare_const(g2);
+        for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+            let q1sq = self.unit.mul(q1, q1);
+            let q3sq = self.unit.mul(q3, q3);
+            *o = q1sq / q3 + self.unit.mul_const(&cg, q3sq);
+        }
     }
     fn r2f2_stats(&self) -> Option<Stats> {
         Some(self.unit.stats())
@@ -306,6 +628,30 @@ impl<'a> Ctx<'a> {
             QuantMode::Full => self.be.quant(x),
         }
     }
+
+    /// Batched constant × slice multiply through the backend.
+    pub fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        self.muls += xs.len() as u64;
+        self.be.mul_batch(out, a, xs);
+    }
+
+    /// Batched pairwise multiply through the backend.
+    pub fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        self.muls += pairs.len() as u64;
+        self.be.mul_pairs(out, pairs);
+    }
+
+    /// One fused heat-stencil sweep (3 multiplications per interior node).
+    pub fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64) {
+        self.muls += 3 * (u.len() as u64 - 2);
+        self.be.stencil_step(next, u, r, self.mode);
+    }
+
+    /// Batched x-momentum flux evaluations (3 multiplications per pair).
+    pub fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+        self.muls += 3 * q.len() as u64;
+        self.be.flux_batch(out, g2, q);
+    }
 }
 
 /// Root-mean-square error between two equal-length fields — the scalar
@@ -396,5 +742,205 @@ mod tests {
         let b = [1.0, 2.0, 4.0];
         assert!((rmse(&a, &b) - (1.0f64 / 3.0).sqrt()).abs() < 1e-12);
         assert!(rel_l2(&a, &a) == 0.0);
+    }
+
+    /// Operand set spanning in-range, overflowing and underflowing values.
+    fn nasty_xs(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::rng::SplitMix64::new(seed);
+        let mut xs: Vec<f64> = (0..n)
+            .map(|_| {
+                let s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                s * rng.log_uniform(1e-7, 1e7)
+            })
+            .collect();
+        xs.extend_from_slice(&[0.0, -0.0, 65504.0, 1e-8, 3e8]);
+        xs
+    }
+
+    fn check_mul_batch_equivalence(mk: &dyn Fn() -> Box<dyn Arith>, what: &str) {
+        let xs = nasty_xs(400, 0x90);
+        for &a in &[0.25, 0.5, 4.9, 2000.0, 1e-4] {
+            let mut scalar_be = mk();
+            let mut batch_be = mk();
+            let want: Vec<f64> = xs.iter().map(|&x| scalar_be.mul(a, x)).collect();
+            let mut got = vec![0.0; xs.len()];
+            batch_be.mul_batch(&mut got, a, &xs);
+            for i in 0..xs.len() {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "{what}: {a} × {} (lane {i})",
+                    xs[i]
+                );
+            }
+            assert_eq!(scalar_be.range_events(), batch_be.range_events(), "{what}: events");
+            assert_eq!(scalar_be.r2f2_stats(), batch_be.r2f2_stats(), "{what}: stats");
+        }
+    }
+
+    #[test]
+    fn mul_batch_bit_identical_across_backends() {
+        check_mul_batch_equivalence(&|| Box::new(F64Arith) as Box<dyn Arith>, "f64");
+        check_mul_batch_equivalence(&|| Box::new(F32Arith) as Box<dyn Arith>, "f32");
+        check_mul_batch_equivalence(&|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>, "E5M10");
+        check_mul_batch_equivalence(
+            &|| Box::new(FixedArith::new(FpFormat::new(6, 9))) as Box<dyn Arith>,
+            "E6M9",
+        );
+        check_mul_batch_equivalence(&|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>, "r2f2");
+        check_mul_batch_equivalence(
+            &|| Box::new(StochasticArith::new(FpFormat::E5M10, 42)) as Box<dyn Arith>,
+            "E5M10-sr",
+        );
+    }
+
+    #[test]
+    fn mul_pairs_bit_identical_across_backends() {
+        let xs = nasty_xs(300, 0x91);
+        let ys = nasty_xs(300, 0x92);
+        let pairs: Vec<(f64, f64)> = xs.into_iter().zip(ys).collect();
+        let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
+            (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
+            (Box::new(|| Box::new(F32Arith) as Box<dyn Arith>), "f32"),
+            (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>), "r2f2"),
+        ];
+        for (mk, what) in &mks {
+            let mut scalar_be = mk();
+            let mut batch_be = mk();
+            let want: Vec<f64> = pairs.iter().map(|&(a, b)| scalar_be.mul(a, b)).collect();
+            let mut got = vec![0.0; pairs.len()];
+            batch_be.mul_pairs(&mut got, &pairs);
+            for i in 0..pairs.len() {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "{what}: lane {i}");
+            }
+            assert_eq!(scalar_be.range_events(), batch_be.range_events(), "{what}: events");
+            assert_eq!(scalar_be.r2f2_stats(), batch_be.r2f2_stats(), "{what}: stats");
+        }
+    }
+
+    #[test]
+    fn stencil_step_bit_identical_across_backends_and_modes() {
+        // One stencil sweep over a field that spans the full §3.1 range
+        // story: large values near the crest, sub-ulp values in the tails.
+        let mut rng = crate::rng::SplitMix64::new(0x93);
+        let n = 257;
+        let u: Vec<f64> = (0..n)
+            .map(|i| {
+                let x = i as f64 / (n - 1) as f64;
+                500.0 * (std::f64::consts::PI * x).sin() * rng.range_f64(0.99, 1.01)
+            })
+            .collect();
+        let r = 0.25;
+        let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
+            (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
+            (Box::new(|| Box::new(F32Arith) as Box<dyn Arith>), "f32"),
+            (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>), "r2f2"),
+            (Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 7)) as Box<dyn Arith>), "E5M10-sr"),
+        ];
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            for (mk, what) in &mks {
+                let mut scalar_be = mk();
+                let mut batch_be = mk();
+                let mut want = u.clone();
+                let mut got = u.clone();
+                scalar_stencil_step(scalar_be.as_mut(), &mut want, &u, r, mode);
+                batch_be.stencil_step(&mut got, &u, r, mode);
+                for i in 0..n {
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want[i].to_bits(),
+                        "{what}/{mode:?}: node {i}: {} vs {}",
+                        got[i],
+                        want[i]
+                    );
+                }
+                assert_eq!(
+                    scalar_be.range_events(),
+                    batch_be.range_events(),
+                    "{what}/{mode:?}: events"
+                );
+                assert_eq!(
+                    scalar_be.r2f2_stats(),
+                    batch_be.r2f2_stats(),
+                    "{what}/{mode:?}: stats"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_step_fixed_counts_range_events_like_scalar() {
+        // A tiny field drives every r·u product below E5M10's min normal:
+        // the deduplicated fast path must still report the scalar path's
+        // event multiplicity (each product is counted once per use).
+        let n = 33;
+        let u: Vec<f64> = (0..n).map(|i| 1e-4 * (i as f64 + 1.0)).collect();
+        let r = 0.25;
+        let mut scalar_be = FixedArith::new(FpFormat::E5M10);
+        let mut batch_be = FixedArith::new(FpFormat::E5M10);
+        let mut want = u.clone();
+        let mut got = u.clone();
+        scalar_stencil_step(&mut scalar_be, &mut want, &u, r, QuantMode::MulOnly);
+        batch_be.stencil_step(&mut got, &u, r, QuantMode::MulOnly);
+        let se = scalar_be.range_events().unwrap();
+        let be = batch_be.range_events().unwrap();
+        assert!(se.underflows > 0, "test field must actually underflow");
+        assert_eq!(se, be);
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "node {i}");
+        }
+    }
+
+    #[test]
+    fn flux_batch_bit_identical_across_backends() {
+        let mut rng = crate::rng::SplitMix64::new(0x94);
+        // Shelf-scale operands (the Fig. 8 regime): h ≈ 150, u ≈ ±40.
+        let q: Vec<(f64, f64)> = (0..500)
+            .map(|_| (rng.range_f64(-40.0, 40.0), rng.range_f64(140.0, 160.0)))
+            .collect();
+        let g2 = 4.9;
+        let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
+            (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
+            (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>), "r2f2"),
+        ];
+        for (mk, what) in &mks {
+            let mut scalar_be = mk();
+            let mut batch_be = mk();
+            let want: Vec<f64> = q
+                .iter()
+                .map(|&(q1, q3)| {
+                    let q1sq = scalar_be.mul(q1, q1);
+                    let q3sq = scalar_be.mul(q3, q3);
+                    q1sq / q3 + scalar_be.mul(g2, q3sq)
+                })
+                .collect();
+            let mut got = vec![0.0; q.len()];
+            batch_be.flux_batch(&mut got, g2, &q);
+            for i in 0..q.len() {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "{what}: lane {i}");
+            }
+            assert_eq!(scalar_be.range_events(), batch_be.range_events(), "{what}: events");
+            assert_eq!(scalar_be.r2f2_stats(), batch_be.r2f2_stats(), "{what}: stats");
+        }
+    }
+
+    #[test]
+    fn ctx_batched_ops_count_muls() {
+        let mut be = F64Arith;
+        let mut ctx = Ctx::new(&mut be, QuantMode::MulOnly);
+        let mut out = [0.0; 4];
+        ctx.mul_batch(&mut out, 2.0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ctx.muls, 4);
+        ctx.mul_pairs(&mut out, &[(1.0, 2.0); 4]);
+        assert_eq!(ctx.muls, 8);
+        let u = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut next = [0.0; 5];
+        ctx.stencil_step(&mut next, &u, 0.25);
+        assert_eq!(ctx.muls, 8 + 9); // 3 interior nodes × 3 muls
+        ctx.flux_batch(&mut out, 4.9, &[(1.0, 2.0); 4]);
+        assert_eq!(ctx.muls, 17 + 12);
     }
 }

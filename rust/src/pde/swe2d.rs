@@ -130,7 +130,36 @@ fn f2_plain(g2: f64, q1: f64, q3: f64) -> f64 {
 
 /// Run the simulation. `be` receives only the multiplications selected by
 /// `scope` (the paper's methodology); the rest of the scheme is f64.
+///
+/// Flux evaluations are issued row-at-a-time through the backend's batched
+/// [`Arith::flux_batch`] engine (DESIGN.md §8), preserving the exact
+/// multiplication stream of the per-call reference [`run_scalar`] — the two
+/// produce bit-identical fields and counters.
 pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
+    run_impl(params, be, scope, true)
+}
+
+/// Per-multiplication reference path (one dynamically-dispatched `mul` per
+/// stencil multiplication); the baseline for `benches/hotpath.rs` and the
+/// semantic reference for the batched engine.
+pub fn run_scalar(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
+    run_impl(params, be, scope, false)
+}
+
+/// Evaluate one row's worth of quantized fluxes into a reused output
+/// buffer, either fused through the batched engine or via per-call
+/// [`f2_quant`] — the streams are identical.
+fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batched: bool) {
+    out.clear();
+    if batched {
+        out.resize(fin.len(), 0.0);
+        ctx.flux_batch(out, g2, fin);
+    } else {
+        out.extend(fin.iter().map(|&(q1, q3)| f2_quant(ctx, g2, q1, q3)));
+    }
+}
+
+fn run_impl(params: &SweParams, be: &mut dyn Arith, scope: QuantScope, batched: bool) -> SweResult {
     let n = params.n;
     assert!(n >= 4, "grid too small");
     let name = be.name();
@@ -165,24 +194,38 @@ pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResu
     let mut vy = vec![0.0; (n + 1) * (n + 1)];
     let m = n + 1;
 
+    // Reused flux input/output row buffers (no per-row allocation in the
+    // hot loop).
+    let mut fin: Vec<(f64, f64)> = Vec::new();
+    let mut frow: Vec<f64> = Vec::new();
+
     let mut snapshots = Vec::new();
 
     for step in 0..params.steps {
         reflect(&mut grid);
 
         // First half step — x direction (i = 0..n, j = 0..n−1 in the
-        // (n+1)-wide half-step arrays).
+        // (n+1)-wide half-step arrays). Under the ablation scope the flux
+        // pairs of a whole row go through the backend in one batch; the
+        // input order (fa then fb per column) matches the per-call path.
         for i in 0..=n {
+            if scope == QuantScope::AllFluxMuls {
+                fin.clear();
+                for j in 0..n {
+                    let a = grid.idx(i + 1, j + 1);
+                    let b = grid.idx(i, j + 1);
+                    fin.push((grid.u[a], grid.h[a]));
+                    fin.push((grid.u[b], grid.h[b]));
+                }
+                flux_row(&mut ctx, g2, &fin, &mut frow, batched);
+            }
             for j in 0..n {
                 let a = grid.idx(i + 1, j + 1); // (i+1, j+1)
                 let b = grid.idx(i, j + 1); // (i, j+1)
                 let k = i * m + j;
                 hx[k] = 0.5 * (grid.h[a] + grid.h[b]) - 0.5 * ddx * (grid.u[a] - grid.u[b]);
                 let (fa, fb) = match scope {
-                    QuantScope::AllFluxMuls => (
-                        f2_quant(&mut ctx, g2, grid.u[a], grid.h[a]),
-                        f2_quant(&mut ctx, g2, grid.u[b], grid.h[b]),
-                    ),
+                    QuantScope::AllFluxMuls => (frow[2 * j], frow[2 * j + 1]),
                     QuantScope::UxFluxOnly => (
                         f2_plain(g2, grid.u[a], grid.h[a]),
                         f2_plain(g2, grid.u[b], grid.h[b]),
@@ -198,6 +241,16 @@ pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResu
 
         // First half step — y direction (i = 0..n−1, j = 0..n).
         for i in 0..n {
+            if scope == QuantScope::AllFluxMuls {
+                fin.clear();
+                for j in 0..=n {
+                    let a = grid.idx(i + 1, j + 1);
+                    let b = grid.idx(i + 1, j);
+                    fin.push((grid.v[a], grid.h[a]));
+                    fin.push((grid.v[b], grid.h[b]));
+                }
+                flux_row(&mut ctx, g2, &fin, &mut frow, batched);
+            }
             for j in 0..=n {
                 let a = grid.idx(i + 1, j + 1); // (i+1, j+1)
                 let b = grid.idx(i + 1, j); // (i+1, j)
@@ -208,10 +261,7 @@ pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResu
                         * ddy
                         * (grid.v[a] * grid.u[a] / grid.h[a] - grid.v[b] * grid.u[b] / grid.h[b]);
                 let (ga, gb) = match scope {
-                    QuantScope::AllFluxMuls => (
-                        f2_quant(&mut ctx, g2, grid.v[a], grid.h[a]),
-                        f2_quant(&mut ctx, g2, grid.v[b], grid.h[b]),
-                    ),
+                    QuantScope::AllFluxMuls => (frow[2 * j], frow[2 * j + 1]),
                     QuantScope::UxFluxOnly => (
                         f2_plain(g2, grid.v[a], grid.h[a]),
                         f2_plain(g2, grid.v[b], grid.h[b]),
@@ -224,7 +274,27 @@ pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResu
         // Second (full) step on the interior — this is where the paper's
         // substituted equation `Ux_mx = q1_mx²/q3_mx + 0.5g·q3_mx²` lives:
         // the x-momentum flux evaluated from the midpoint (…_mx) values.
+        // The flux inputs all come from the (read-only) half-step arrays, so
+        // a whole row is evaluated through the batched engine up front; the
+        // stream order (fa, fb[, ga, gb] per cell) matches the per-call
+        // reference exactly.
+        let all = scope == QuantScope::AllFluxMuls;
+        let stride = if all { 4 } else { 2 };
         for i in 1..=n {
+            fin.clear();
+            for j in 1..=n {
+                let kxa = i * m + (j - 1);
+                let kxb = (i - 1) * m + (j - 1);
+                fin.push((ux[kxa], hx[kxa]));
+                fin.push((ux[kxb], hx[kxb]));
+                if all {
+                    let kya = (i - 1) * m + j;
+                    let kyb = (i - 1) * m + (j - 1);
+                    fin.push((vy[kya], hy[kya]));
+                    fin.push((vy[kyb], hy[kyb]));
+                }
+            }
+            flux_row(&mut ctx, g2, &fin, &mut frow, batched);
             for j in 1..=n {
                 let c = grid.idx(i, j);
                 let kxa = i * m + (j - 1); // Ux(i, j−1)
@@ -235,23 +305,16 @@ pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResu
                 grid.h[c] -= ddx * (ux[kxa] - ux[kxb]) + ddy * (vy[kya] - vy[kyb]);
 
                 // Quantized sub-equation (two evaluations per cell).
-                let (fa, fb) = (
-                    f2_quant(&mut ctx, g2, ux[kxa], hx[kxa]),
-                    f2_quant(&mut ctx, g2, ux[kxb], hx[kxb]),
-                );
+                let base = (j - 1) * stride;
+                let (fa, fb) = (frow[base], frow[base + 1]);
                 grid.u[c] -= ddx * (fa - fb)
                     + ddy
                         * (vy[kya] * uy[kya] / hy[kya] - vy[kyb] * uy[kyb] / hy[kyb]);
 
-                let (ga, gb) = match scope {
-                    QuantScope::AllFluxMuls => (
-                        f2_quant(&mut ctx, g2, vy[kya], hy[kya]),
-                        f2_quant(&mut ctx, g2, vy[kyb], hy[kyb]),
-                    ),
-                    QuantScope::UxFluxOnly => (
-                        f2_plain(g2, vy[kya], hy[kya]),
-                        f2_plain(g2, vy[kyb], hy[kyb]),
-                    ),
+                let (ga, gb) = if all {
+                    (frow[base + 2], frow[base + 3])
+                } else {
+                    (f2_plain(g2, vy[kya], hy[kya]), f2_plain(g2, vy[kyb], hy[kyb]))
                 };
                 grid.v[c] -= ddx * (ux[kxa] * vx[kxa] / hx[kxa] - ux[kxb] * vx[kxb] / hx[kxb])
                     + ddy * (ga - gb);
@@ -416,5 +479,28 @@ mod tests {
         let only = run(&p, &mut F64Arith, QuantScope::UxFluxOnly).muls;
         let all = run(&p, &mut F64Arith, QuantScope::AllFluxMuls).muls;
         assert!(all > 3 * only);
+    }
+
+    #[test]
+    fn batched_run_matches_scalar_reference() {
+        // Row-batched flux evaluation must reproduce the per-call stream
+        // exactly (DESIGN.md §8) — fields, counters and mass drift.
+        let p = SweParams { steps: 30, ..SweParams::default() };
+        for scope in [QuantScope::UxFluxOnly, QuantScope::AllFluxMuls] {
+            let mut a = R2f2Arith::new(R2f2Config::C16_384);
+            let mut b = R2f2Arith::new(R2f2Config::C16_384);
+            let scalar = run_scalar(&p, &mut a, scope);
+            let batched = run(&p, &mut b, scope);
+            assert_eq!(scalar.muls, batched.muls, "{scope:?}");
+            assert_eq!(scalar.r2f2_stats, batched.r2f2_stats, "{scope:?}");
+            assert_eq!(scalar.mass_drift.to_bits(), batched.mass_drift.to_bits(), "{scope:?}");
+            for (field, s, t) in
+                [("h", &scalar.h, &batched.h), ("u", &scalar.u, &batched.u), ("v", &scalar.v, &batched.v)]
+            {
+                for i in 0..s.len() {
+                    assert_eq!(s[i].to_bits(), t[i].to_bits(), "{scope:?} {field}[{i}]");
+                }
+            }
+        }
     }
 }

@@ -28,7 +28,7 @@
 
 use super::mul::mul_packed;
 use super::repr::R2f2Config;
-use crate::softfloat::{decode, encode, Fp, Rounder};
+use crate::softfloat::{decode, encode, Flags, Fp, Rounder};
 
 /// Counters exposed by a multiplier instance — the quantities the paper
 /// reports in §5.3 ("precision adjustment because of overflow happened only
@@ -207,6 +207,139 @@ impl R2f2Multiplier {
                 self.streak = 0;
             }
             return (decode(fc, fmt), AdjustEvent::None);
+        }
+    }
+}
+
+/// A constant multiplication operand pre-encoded at every split of one
+/// configuration — the batched-engine fast path for the PDE stencils, where
+/// one operand of every multiplication is a loop-invariant coefficient
+/// (`r`, `2r`, `g/2`; see DESIGN.md §8).
+///
+/// [`encode`] is deterministic under round-to-nearest-even, so reusing the
+/// cached encoding is bit-identical to re-encoding per multiplication. The
+/// per-split redundancy verdict of the constant is precomputed too, since
+/// the detector only looks at the packed exponent.
+#[derive(Debug, Clone)]
+pub struct ConstOperand {
+    value: f64,
+    /// Configuration the encodings were prepared for (guards against a
+    /// cache prepared on one unit being replayed on another).
+    cfg: R2f2Config,
+    /// Per split `k`: packed encoding, encode flags, and whether the
+    /// redundancy detector fires for it at that split's format.
+    enc: Vec<(Fp, Flags, bool)>,
+}
+
+impl ConstOperand {
+    /// The f64 value this cache was built from.
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+}
+
+/// One-slot cache of an encoded *varying* operand, keyed by (f64 bits,
+/// split). The heat stencil reads each state value up to three times in a
+/// sliding window; when the split has not changed in between, the second
+/// and third encodes are free.
+#[derive(Debug, Clone, Copy)]
+pub struct EncSlot {
+    bits: u64,
+    k: u32,
+    fp: Fp,
+    fl: Flags,
+    valid: bool,
+}
+
+impl EncSlot {
+    /// An empty (always-miss) slot.
+    pub fn empty() -> EncSlot {
+        EncSlot { bits: 0, k: 0, fp: Fp::zero(0), fl: Flags::NONE, valid: false }
+    }
+}
+
+impl R2f2Multiplier {
+    /// Pre-encode a constant operand at every split of this unit's
+    /// configuration, for use with [`R2f2Multiplier::mul_const`].
+    pub fn prepare_const(&self, a: f64) -> ConstOperand {
+        let mut rnd = Rounder::nearest_even();
+        let enc = (0..=self.cfg.fx)
+            .map(|k| {
+                let fmt = self.cfg.format(k);
+                let (fa, fla) = encode(a, fmt, &mut rnd);
+                let red = fmt.e_w >= self.window + 2 && is_redundant(fa, fmt.e_w, self.window);
+                (fa, fla, red)
+            })
+            .collect();
+        ConstOperand { value: a, cfg: self.cfg, enc }
+    }
+
+    /// `self.mul(c.value(), b)` computed from the cached constant encoding:
+    /// bit-identical result, identical state transitions and [`Stats`].
+    pub fn mul_const(&mut self, c: &ConstOperand, b: f64) -> f64 {
+        let mut slot = EncSlot::empty();
+        self.mul_const_cached(c, b, &mut slot)
+    }
+
+    /// [`Self::mul_const`] with a caller-managed cache slot for the varying
+    /// operand `b`. The slot is consulted when it holds the encoding of the
+    /// same f64 bits at the current split, and refreshed otherwise; callers
+    /// that stream overlapping windows (the heat stencil) rotate slots to
+    /// skip most encodes.
+    pub fn mul_const_cached(&mut self, c: &ConstOperand, b: f64, slot: &mut EncSlot) -> f64 {
+        assert_eq!(c.cfg, self.cfg, "ConstOperand prepared for another configuration");
+        self.stats.muls += 1;
+        let bbits = b.to_bits();
+        let mut retried = false;
+        loop {
+            let k = self.k;
+            let fmt = self.cfg.format(k);
+            let (fa, fla, a_red) = c.enc[k as usize];
+            let (fb, flb) = if slot.valid && slot.bits == bbits && slot.k == k {
+                (slot.fp, slot.fl)
+            } else {
+                let (fb, flb) = encode(b, fmt, &mut self.rounder);
+                *slot = EncSlot { bits: bbits, k, fp: fb, fl: flb, valid: true };
+                (fb, flb)
+            };
+            let (fc, flc) = mul_packed(fa, fb, self.cfg, k, &mut self.rounder);
+
+            // Mirror of `mul_traced`, with the constant's encode flags and
+            // redundancy verdict read from the cache.
+            let operand_trouble = fla.overflow()
+                || flb.overflow()
+                || (self.widen_on_operand_underflow && (fla.underflow() || flb.underflow()));
+            if operand_trouble || flc.range_event() {
+                self.streak = 0;
+                if self.k < self.cfg.fx {
+                    self.k += 1;
+                    self.stats.overflow_adjustments += 1;
+                    retried = true;
+                    continue;
+                }
+                self.stats.unresolved_range_events += 1;
+                return decode(fc, fmt);
+            }
+
+            if retried {
+                return decode(fc, fmt);
+            }
+
+            if self.k > 0
+                && a_red
+                && is_redundant(fb, fmt.e_w, self.window)
+                && is_redundant(fc, fmt.e_w, self.window)
+            {
+                self.streak += 1;
+                if self.streak >= self.streak_threshold {
+                    self.streak = 0;
+                    self.k -= 1;
+                    self.stats.redundancy_adjustments += 1;
+                }
+            } else {
+                self.streak = 0;
+            }
+            return decode(fc, fmt);
         }
     }
 }
@@ -408,6 +541,61 @@ mod tests {
         assert_eq!(ev, AdjustEvent::WidenedAndRetried { retries: 3 });
         assert_eq!(m.stats().overflow_adjustments, 3);
         assert!((v - 1e6).abs() / 1e6 < 2e-3);
+    }
+
+    /// Two units stepped in lockstep must agree on everything observable.
+    fn assert_units_equal(a: &R2f2Multiplier, b: &R2f2Multiplier, ctx: &str) {
+        assert_eq!(a.split(), b.split(), "{ctx}: split");
+        assert_eq!(a.streak(), b.streak(), "{ctx}: streak");
+        assert_eq!(a.stats(), b.stats(), "{ctx}: stats");
+    }
+
+    #[test]
+    fn mul_const_is_bit_identical_to_mul() {
+        // The batched-engine contract (DESIGN.md §8): cached-constant
+        // multiplication replays the exact scalar state machine, through
+        // widen retries, narrowing streaks and unresolved saturations.
+        for cfg in [R2f2Config::C16_393, R2f2Config::C16_384, R2f2Config::C14_373] {
+            let mut scalar = R2f2Multiplier::new(cfg);
+            let mut batched = R2f2Multiplier::new(cfg);
+            let mut rng = SplitMix64::new(0x77);
+            for &a in &[0.25, 0.5, 1.1, 4.9, 900.0, 1e-3] {
+                let c = batched.prepare_const(a);
+                assert_eq!(c.value(), a);
+                for _ in 0..2000 {
+                    let s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                    let b = s * rng.log_uniform(1e-7, 1e7);
+                    let want = scalar.mul(a, b);
+                    let got = batched.mul_const(&c, b);
+                    assert_eq!(got.to_bits(), want.to_bits(), "{cfg}: {a} × {b}");
+                    assert_units_equal(&scalar, &batched, "after mul");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_const_cached_slot_reuse_is_bit_identical() {
+        // Repeating the same varying operand through a live slot (the heat
+        // stencil's sliding window) must not change anything, even when the
+        // split moves between repeats.
+        let cfg = R2f2Config::C16_393;
+        let mut scalar = R2f2Multiplier::new(cfg);
+        let mut batched = R2f2Multiplier::new(cfg);
+        let c = batched.prepare_const(0.25);
+        let mut rng = SplitMix64::new(0x78);
+        let mut slot = EncSlot::empty();
+        for i in 0..3000 {
+            // Mostly mid-range values with occasional range-busting spikes
+            // so the split keeps moving while slots are warm.
+            let b = if i % 97 == 0 { 3.0e5 } else { rng.log_uniform(1e-2, 1e2) };
+            for _ in 0..3 {
+                let want = scalar.mul(0.25, b);
+                let got = batched.mul_const_cached(&c, b, &mut slot);
+                assert_eq!(got.to_bits(), want.to_bits(), "iter {i}: 0.25 × {b}");
+                assert_units_equal(&scalar, &batched, "after cached mul");
+            }
+        }
     }
 
     #[test]

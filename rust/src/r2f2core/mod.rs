@@ -25,6 +25,6 @@ pub mod mul;
 pub mod repr;
 pub mod resource;
 
-pub use adjust::{AdjustEvent, R2f2Multiplier, Stats};
+pub use adjust::{AdjustEvent, ConstOperand, EncSlot, R2f2Multiplier, Stats};
 pub use mul::mul_packed;
 pub use repr::R2f2Config;

@@ -6,6 +6,21 @@ use std::fmt;
 /// An R2F2 multiplier configuration: `EB` fixed exponent bits, `MB` fixed
 /// mantissa bits and `FX` flexible bits. Total storage is `1 + EB + MB + FX`
 /// bits. The paper writes this `<EB, MB, FX>`.
+///
+/// ```
+/// use r2f2::r2f2core::{R2f2Config, R2f2Multiplier};
+///
+/// let cfg = R2f2Config::C16_393;               // the paper's 16-bit <3,9,3>
+/// assert_eq!(cfg.total_bits(), 16);
+/// assert_eq!(cfg.format(2).to_string(), "E5M10"); // split k=2 ≡ half's shape
+/// assert_eq!(cfg.initial_k(), 2);              // starts at half's range
+///
+/// // 300 × 300 overflows E5M10; the unit widens its exponent and retries.
+/// let mut unit = R2f2Multiplier::new(cfg);
+/// let v = unit.mul(300.0, 300.0);
+/// assert!((v - 90_000.0).abs() / 90_000.0 < 2e-3);
+/// assert_eq!(unit.split(), 3);                 // now at E6M9
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct R2f2Config {
     /// Fixed exponent bits.

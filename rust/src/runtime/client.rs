@@ -3,10 +3,13 @@
 //! The interchange is HLO **text** (`HloModuleProto::from_text_file`):
 //! jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
-//! /opt/xla-example/README.md and DESIGN.md).
+//! /opt/xla-example/README.md and DESIGN.md §7).
+//!
+//! Compiled only with the `pjrt` feature (requires the vendored `xla`
+//! bindings); see `runtime::stub` for the featureless build.
 
+use super::error::{ctx, wrap, Result, RuntimeError};
 use super::manifest::{ArtifactInfo, Manifest};
-use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -21,18 +24,18 @@ pub struct Executable {
 impl Executable {
     /// Execute with literal inputs; returns the flattened output tuple.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
         // aot.py lowers with return_tuple=True, so outputs always arrive as
         // one tuple literal.
-        let parts = lit.to_tuple()?;
+        let parts = lit.to_tuple().map_err(wrap)?;
         if parts.len() != self.outputs {
-            bail!(
+            return Err(RuntimeError(format!(
                 "{}: expected {} outputs, got {}",
                 self.name,
                 self.outputs,
                 parts.len()
-            );
+            )));
         }
         Ok(parts)
     }
@@ -40,7 +43,7 @@ impl Executable {
     /// Convenience: run and read output `idx` as a f32 vector.
     pub fn run_f32(&self, inputs: &[xla::Literal], idx: usize) -> Result<Vec<f32>> {
         let outs = self.run(inputs)?;
-        Ok(outs[idx].to_vec::<f32>()?)
+        outs[idx].to_vec::<f32>().map_err(wrap)
     }
 }
 
@@ -55,8 +58,8 @@ pub struct Runtime {
 impl Runtime {
     /// Create a CPU runtime over an artifacts directory.
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
-        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifacts_dir).map_err(RuntimeError::from)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
         Ok(Runtime { client, manifest, cache: HashMap::new() })
     }
 
@@ -78,16 +81,16 @@ impl Runtime {
         let info: ArtifactInfo = self
             .manifest
             .find(name)
-            .with_context(|| format!("artifact `{name}` not in manifest"))?
+            .ok_or_else(|| RuntimeError(format!("artifact `{name}` not in manifest")))?
             .clone();
         let path = self.manifest.path_of(&info);
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {}", path.display()))?;
+            .map_err(|e| ctx(&format!("parsing {}", path.display()), e))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
+            .map_err(|e| ctx(&format!("compiling {name}"), e))?;
         let e = std::sync::Arc::new(Executable { name: name.to_string(), exe, outputs: info.outputs });
         self.cache.insert(name.to_string(), e.clone());
         Ok(e)
@@ -105,6 +108,6 @@ impl Runtime {
     /// 2-D f32 literal (row-major).
     pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
         assert_eq!(data.len(), rows * cols);
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+        xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64]).map_err(wrap)
     }
 }

@@ -1,0 +1,57 @@
+//! Runtime-layer error type.
+//!
+//! The offline build environment carries no external error crates, so the
+//! runtime defines its own minimal error: a message string that implements
+//! [`std::error::Error`]. The PJRT-backed implementation (feature `pjrt`)
+//! and the stub share it, so callers are identical under both builds.
+
+use std::fmt;
+
+/// An error from the PJRT runtime layer (or its stub).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<String> for RuntimeError {
+    fn from(s: String) -> RuntimeError {
+        RuntimeError(s)
+    }
+}
+
+impl From<&str> for RuntimeError {
+    fn from(s: &str) -> RuntimeError {
+        RuntimeError(s.to_string())
+    }
+}
+
+/// Runtime-layer result alias.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Wrap any displayable error (the PJRT bindings' error types included).
+pub fn wrap<E: fmt::Display>(e: E) -> RuntimeError {
+    RuntimeError(e.to_string())
+}
+
+/// Wrap with a context prefix, anyhow-style.
+pub fn ctx<E: fmt::Display>(context: &str, e: E) -> RuntimeError {
+    RuntimeError(format!("{context}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context() {
+        let e = ctx("parsing manifest", RuntimeError::from("bad json"));
+        assert_eq!(e.to_string(), "parsing manifest: bad json");
+        assert_eq!(wrap("plain").to_string(), "plain");
+    }
+}

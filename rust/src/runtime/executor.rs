@@ -1,10 +1,13 @@
 //! Simulation step-loop executors: rust owns the time loop, the compiled
 //! step is the body. State literals feed back between steps — the request
 //! path is pure rust → PJRT.
+//!
+//! Compiled only with the `pjrt` feature; see `runtime::stub` otherwise.
 
 use super::client::{Executable, Runtime};
+use super::error::{wrap, Result, RuntimeError};
+use super::{HeatRunOutput, SweRunOutput};
 use crate::metrics::Registry;
-use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -18,18 +21,6 @@ pub struct HeatRunner {
     metrics: Registry,
 }
 
-/// Result of a heat run through PJRT.
-#[derive(Debug, Clone)]
-pub struct HeatRunOutput {
-    pub u: Vec<f32>,
-    /// Total widen / narrow adjustment events (adaptive variants only).
-    pub widen: i64,
-    pub narrow: i64,
-    /// Wall time of the stepped region.
-    pub elapsed: std::time::Duration,
-    pub steps: usize,
-}
-
 impl HeatRunner {
     /// `variant` is a manifest name: `heat_step_r2f2`, `heat_step_e5m10`,
     /// `heat_step_f32`.
@@ -37,7 +28,7 @@ impl HeatRunner {
         let info = rt
             .manifest
             .find(variant)
-            .ok_or_else(|| anyhow::anyhow!("unknown heat variant {variant}"))?;
+            .ok_or_else(|| RuntimeError(format!("unknown heat variant {variant}")))?;
         let n = info.inputs[0].0[0];
         let adaptive = info.outputs == 5;
         let exe = rt.load(variant)?;
@@ -60,8 +51,8 @@ impl HeatRunner {
             if self.adaptive {
                 let mut outs = self.exe.run(&[u, r_lit.clone_literal(), k, s])?;
                 // Outputs: u', k', streak', widen, narrow.
-                let nr: Vec<i32> = outs[4].to_vec()?;
-                let wd: Vec<i32> = outs[3].to_vec()?;
+                let nr: Vec<i32> = outs[4].to_vec().map_err(wrap)?;
+                let wd: Vec<i32> = outs[3].to_vec().map_err(wrap)?;
                 widen += wd.iter().map(|&x| x as i64).sum::<i64>();
                 narrow += nr.iter().map(|&x| x as i64).sum::<i64>();
                 s = outs.remove(2);
@@ -78,7 +69,7 @@ impl HeatRunner {
             &format!("heat.run.{}", self.exe.name),
             elapsed.as_nanos() as u64,
         );
-        Ok(HeatRunOutput { u: u.to_vec::<f32>()?, widen, narrow, elapsed, steps })
+        Ok(HeatRunOutput { u: u.to_vec::<f32>().map_err(wrap)?, widen, narrow, elapsed, steps })
     }
 }
 
@@ -90,23 +81,12 @@ pub struct SweRunner {
     metrics: Registry,
 }
 
-/// Result of an SWE run through PJRT.
-#[derive(Debug, Clone)]
-pub struct SweRunOutput {
-    /// Final padded (n+2)² height field, row-major.
-    pub h: Vec<f32>,
-    pub widen: i64,
-    pub narrow: i64,
-    pub elapsed: std::time::Duration,
-    pub steps: usize,
-}
-
 impl SweRunner {
     pub fn new(rt: &mut Runtime, variant: &str, metrics: Registry) -> Result<SweRunner> {
         let info = rt
             .manifest
             .find(variant)
-            .ok_or_else(|| anyhow::anyhow!("unknown swe variant {variant}"))?;
+            .ok_or_else(|| RuntimeError(format!("unknown swe variant {variant}")))?;
         let n = info.inputs[0].0[0] - 2;
         let adaptive = info.outputs == 7;
         let exe = rt.load(variant)?;
@@ -131,8 +111,8 @@ impl SweRunner {
         for _ in 0..steps {
             if self.adaptive {
                 let mut outs = self.exe.run(&[h, u, v, k, s])?;
-                widen += outs[5].get_first_element::<i32>()? as i64;
-                narrow += outs[6].get_first_element::<i32>()? as i64;
+                widen += outs[5].get_first_element::<i32>().map_err(wrap)? as i64;
+                narrow += outs[6].get_first_element::<i32>().map_err(wrap)? as i64;
                 s = outs.remove(4);
                 k = outs.remove(3);
                 v = outs.remove(2);
@@ -147,7 +127,7 @@ impl SweRunner {
         }
         let elapsed = t0.elapsed();
         self.metrics.inc("swe.steps", steps as u64);
-        Ok(SweRunOutput { h: h.to_vec::<f32>()?, widen, narrow, elapsed, steps })
+        Ok(SweRunOutput { h: h.to_vec::<f32>().map_err(wrap)?, widen, narrow, elapsed, steps })
     }
 }
 

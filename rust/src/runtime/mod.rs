@@ -2,11 +2,65 @@
 //! `python/compile/aot.py` and executes them from rust. This is the only
 //! bridge between Layer 3 and the compiled Layer-1/Layer-2 computations —
 //! python never runs on this path.
+//!
+//! The PJRT client itself depends on the `xla` bindings, which are not
+//! vendored in this offline environment; they are gated behind the `pjrt`
+//! cargo feature (DESIGN.md §7). Without the feature, a stub with the same
+//! API is compiled whose `Runtime::new` always fails, so benches, examples
+//! and the cross-layer tests skip politely — exactly as they already do
+//! when `make artifacts` has not been run.
 
-pub mod client;
-pub mod executor;
+pub mod error;
 pub mod manifest;
 
-pub use client::{Executable, Runtime};
-pub use executor::{HeatRunner, SweRunner};
+pub use error::{Result, RuntimeError};
 pub use manifest::{ArtifactInfo, Manifest};
+
+/// Result of a heat run through PJRT (shared by the real executor and the
+/// stub so the public API cannot drift between feature builds).
+#[derive(Debug, Clone)]
+pub struct HeatRunOutput {
+    pub u: Vec<f32>,
+    /// Total widen / narrow adjustment events (adaptive variants only).
+    pub widen: i64,
+    pub narrow: i64,
+    /// Wall time of the stepped region.
+    pub elapsed: std::time::Duration,
+    pub steps: usize,
+}
+
+/// Result of an SWE run through PJRT (shared by the real executor and the
+/// stub).
+#[derive(Debug, Clone)]
+pub struct SweRunOutput {
+    /// Final padded (n+2)² height field, row-major.
+    pub h: Vec<f32>,
+    pub widen: i64,
+    pub narrow: i64,
+    pub elapsed: std::time::Duration,
+    pub steps: usize,
+}
+
+// The real client needs the `xla` PJRT bindings, which this offline
+// manifest cannot declare (they are not on crates.io and the build
+// environment has no network). Turn the otherwise-opaque unresolved-crate
+// error into instructions.
+#[cfg(all(feature = "pjrt", not(feature = "pjrt_vendored")))]
+compile_error!(
+    "the `pjrt` feature needs the `xla` bindings: add them as a path dependency in \
+rust/Cargo.toml (see DESIGN.md §7) and enable the `pjrt_vendored` feature as well"
+);
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(feature = "pjrt")]
+pub use client::{Executable, Runtime};
+#[cfg(feature = "pjrt")]
+pub use executor::{HeatRunner, SweRunner};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, HeatRunner, Literal, Runtime, SweRunner};

@@ -1,0 +1,116 @@
+//! Batched fixed-format kernels with hoisted per-operation state.
+//!
+//! The scalar helpers ([`crate::softfloat::mul_f`] and friends) construct a
+//! fresh [`Rounder`] and re-encode both operands on every call — fine for
+//! one multiplication, wasteful for the PDE hot loops that issue millions
+//! (DESIGN.md §8). The batch kernels hoist everything that is loop-invariant
+//! out of the inner loop:
+//!
+//! * one rounding context per batch (round-to-nearest-even is stateless, so
+//!   sharing it is bit-identical to constructing one per call);
+//! * the encoding of a constant operand (the stencil coefficient `r`, the
+//!   flux constant `g/2`) is computed once per batch;
+//! * format-derived constants (bias, widths) stay in registers instead of
+//!   being re-derived per element.
+//!
+//! Every kernel returns per-element [`Flags`] with exactly the same union
+//! semantics as its scalar counterpart, so callers that count range events
+//! (e.g. `pde::FixedArith`) observe identical counters.
+
+use super::encode::{decode, encode};
+use super::format::{Flags, FpFormat};
+use super::mul::mul;
+use super::round::Rounder;
+
+/// `out[i] = a ⊗ xs[i]` in `fmt`, with `flags[i] = fla | flb_i | flc_i` —
+/// element-for-element bit-identical to calling
+/// [`crate::softfloat::mul_f`]`(a, xs[i], fmt)` in a loop, but the constant
+/// operand `a` is encoded once.
+///
+/// Panics if `out` or `flags` differ in length from `xs`.
+pub fn mul_batch_f(a: f64, xs: &[f64], fmt: FpFormat, out: &mut [f64], flags: &mut [Flags]) {
+    assert_eq!(out.len(), xs.len());
+    assert_eq!(flags.len(), xs.len());
+    let mut r = Rounder::nearest_even();
+    let (fa, fla) = encode(a, fmt, &mut r);
+    for i in 0..xs.len() {
+        let (fb, flb) = encode(xs[i], fmt, &mut r);
+        let (fc, flc) = mul(fa, fb, fmt, &mut r);
+        out[i] = decode(fc, fmt);
+        flags[i] = fla | flb | flc;
+    }
+}
+
+/// `out[i] = pairs[i].0 ⊗ pairs[i].1` in `fmt` — bit-identical to the
+/// scalar loop, with one shared rounding context and the format constants
+/// hoisted.
+///
+/// Panics if `out` or `flags` differ in length from `pairs`.
+pub fn mul_pairs_f(pairs: &[(f64, f64)], fmt: FpFormat, out: &mut [f64], flags: &mut [Flags]) {
+    assert_eq!(out.len(), pairs.len());
+    assert_eq!(flags.len(), pairs.len());
+    let mut r = Rounder::nearest_even();
+    for i in 0..pairs.len() {
+        let (a, b) = pairs[i];
+        let (fa, fla) = encode(a, fmt, &mut r);
+        let (fb, flb) = encode(b, fmt, &mut r);
+        let (fc, flc) = mul(fa, fb, fmt, &mut r);
+        out[i] = decode(fc, fmt);
+        flags[i] = fla | flb | flc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::softfloat::mul_f;
+
+    #[test]
+    fn mul_batch_matches_scalar_bit_for_bit() {
+        let fmt = FpFormat::E5M10;
+        let mut rng = SplitMix64::new(0x51);
+        // Include range-event operands so flags differ across elements.
+        let mut xs: Vec<f64> = (0..512).map(|_| rng.log_uniform(1e-8, 1e8)).collect();
+        xs.push(0.0);
+        xs.push(-0.0);
+        for &a in &[0.25, 0.5, 1e-3, 4000.0] {
+            let mut out = vec![0.0; xs.len()];
+            let mut flags = vec![Flags::NONE; xs.len()];
+            mul_batch_f(a, &xs, fmt, &mut out, &mut flags);
+            for i in 0..xs.len() {
+                let (want, want_fl) = mul_f(a, xs[i], fmt);
+                assert_eq!(out[i].to_bits(), want.to_bits(), "a={a} x={}", xs[i]);
+                assert_eq!(flags[i], want_fl, "a={a} x={}", xs[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_pairs_matches_scalar_bit_for_bit() {
+        let fmt = FpFormat::new(6, 9);
+        let mut rng = SplitMix64::new(0x52);
+        let pairs: Vec<(f64, f64)> = (0..512)
+            .map(|_| {
+                let s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                (s * rng.log_uniform(1e-8, 1e8), rng.log_uniform(1e-8, 1e8))
+            })
+            .collect();
+        let mut out = vec![0.0; pairs.len()];
+        let mut flags = vec![Flags::NONE; pairs.len()];
+        mul_pairs_f(&pairs, fmt, &mut out, &mut flags);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (want, want_fl) = mul_f(a, b, fmt);
+            assert_eq!(out[i].to_bits(), want.to_bits(), "{a} × {b}");
+            assert_eq!(flags[i], want_fl, "{a} × {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_rejected() {
+        let mut out = vec![0.0; 2];
+        let mut flags = vec![Flags::NONE; 3];
+        mul_batch_f(1.0, &[1.0, 2.0, 3.0], FpFormat::E5M10, &mut out, &mut flags);
+    }
+}

@@ -5,6 +5,22 @@ use std::fmt;
 /// An arbitrary floating-point format: `e_w` exponent bits, `m_w` stored
 /// fraction bits (the leading 1 is implicit). Written `E{e_w}M{m_w}` in the
 /// paper's notation — `E5M10` is IEEE half without subnormals/inf/NaN.
+///
+/// ```
+/// use r2f2::softfloat::{quantize, FpFormat};
+///
+/// let half = FpFormat::E5M10;                  // standard half precision
+/// assert_eq!(half.max_value(), 65504.0);       // §4.1: 2¹⁵·(1+1023/1024)
+/// assert_eq!(half.total_bits(), 16);
+///
+/// // One more exponent bit buys range at the cost of resolution.
+/// let e6m9 = FpFormat::new(6, 9);
+/// assert!(e6m9.max_value() > half.max_value());
+/// assert!(e6m9.ulp_at_one() > half.ulp_at_one());
+///
+/// // Round-trip an f64 through the format.
+/// assert_eq!(quantize(3.14159265, half), 3.140625);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FpFormat {
     /// Exponent field width in bits (2..=11).

@@ -21,12 +21,14 @@
 //! The `ExMy` notation follows the paper: `E5M10` is standard half.
 
 pub mod add;
+pub mod batch;
 pub mod encode;
 pub mod format;
 pub mod mul;
 pub mod round;
 
 pub use add::add;
+pub use batch::{mul_batch_f, mul_pairs_f};
 pub use encode::{decode, encode};
 pub use format::{Flags, Fp, FpFormat};
 pub use mul::mul;

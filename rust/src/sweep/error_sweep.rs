@@ -100,14 +100,27 @@ pub fn error_sweep(cfg: R2f2Config, fixed: FpFormat, p: &SweepParams) -> SweepRe
         let mut r2f2 = R2f2Arith::new(cfg);
         let mut fix = FixedArith::new(fixed);
 
-        let mut sum_f = 0.0;
-        let mut sum_r = 0.0;
+        // Each unit sees the interval's pair stream as one batch through
+        // the engine (DESIGN.md §8); per-unit order — and therefore every
+        // result and adjustment — is identical to per-call multiplication.
+        let mut pairs = Vec::with_capacity(p.pairs);
+        let mut wants = Vec::with_capacity(p.pairs);
         for _ in 0..p.pairs {
             let a = rng.range_f64(ilo, ihi);
             let b = rng.range_f64(ilo, ihi);
-            let want = (a as f32 * b as f32) as f64;
-            sum_f += rel_err(fix.mul(a, b), want);
-            sum_r += rel_err(r2f2.mul(a, b), want);
+            pairs.push((a, b));
+            wants.push((a as f32 * b as f32) as f64);
+        }
+        let mut got_f = vec![0.0; p.pairs];
+        let mut got_r = vec![0.0; p.pairs];
+        fix.mul_pairs(&mut got_f, &pairs);
+        r2f2.mul_pairs(&mut got_r, &pairs);
+
+        let mut sum_f = 0.0;
+        let mut sum_r = 0.0;
+        for idx in 0..p.pairs {
+            sum_f += rel_err(got_f[idx], wants[idx]);
+            sum_r += rel_err(got_r[idx], wants[idx]);
         }
         intervals.push(IntervalResult {
             lo: ilo,

@@ -1,0 +1,149 @@
+//! The batched-engine contract (DESIGN.md §8): for every backend, a run
+//! through the batched API must produce **bit-identical** fields and
+//! **identical** counters (`muls`, R2F2 `Stats`, fixed-format
+//! `RangeEvents`) to the per-multiplication scalar-dispatch reference.
+//!
+//! This is what makes the engine an *optimization* rather than a semantic
+//! change: every accuracy figure in EXPERIMENTS.md is measured on the fast
+//! path but specified by the scalar path.
+
+use r2f2::pde::heat1d::{self, HeatParams};
+use r2f2::pde::init::HeatInit;
+use r2f2::pde::swe2d::{self, QuantScope, SweParams};
+use r2f2::pde::{Arith, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith, StochasticArith};
+use r2f2::r2f2core::R2f2Config;
+use r2f2::softfloat::FpFormat;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{what}: lane {i}: scalar {} vs batched {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// Every backend under test, freshly constructed per call so scalar and
+/// batched runs start from identical state.
+fn backends() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn Arith>>)> {
+    vec![
+        ("f64", Box::new(|| Box::new(F64Arith) as Box<dyn Arith>)),
+        ("f32", Box::new(|| Box::new(F32Arith) as Box<dyn Arith>)),
+        ("fixed E5M10", Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>)),
+        ("fixed E6M9", Box::new(|| Box::new(FixedArith::new(FpFormat::new(6, 9))) as Box<dyn Arith>)),
+        ("r2f2 <3,9,3>", Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>)),
+        ("r2f2 <3,8,4>", Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>)),
+        ("E5M10-sr", Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 11)) as Box<dyn Arith>)),
+    ]
+}
+
+fn check_heat(p: &HeatParams, mode: QuantMode, ctx: &str) {
+    for (name, mk) in &backends() {
+        let mut scalar_be = mk();
+        let mut batched_be = mk();
+        let s = heat1d::run_scalar(p, scalar_be.as_mut(), mode);
+        let b = heat1d::run(p, batched_be.as_mut(), mode);
+        let what = format!("{ctx}/{name}/{mode:?}");
+        assert_bits_eq(&s.u, &b.u, &what);
+        assert_eq!(s.muls, b.muls, "{what}: muls");
+        assert_eq!(s.muls, p.expected_muls(), "{what}: expected muls");
+        assert_eq!(s.backend, b.backend, "{what}: backend name");
+        assert_eq!(s.r2f2_stats, b.r2f2_stats, "{what}: r2f2 stats");
+        assert_eq!(s.range_events, b.range_events, "{what}: range events");
+        assert_eq!(s.snapshots.len(), b.snapshots.len(), "{what}: snapshots");
+        for (i, ((ss, su), (bs, bu))) in s.snapshots.iter().zip(b.snapshots.iter()).enumerate() {
+            assert_eq!(ss, bs, "{what}: snapshot step {i}");
+            assert_bits_eq(su, bu, &format!("{what}: snapshot {i}"));
+        }
+    }
+}
+
+#[test]
+fn heat_bit_identical_mul_only() {
+    let p = HeatParams {
+        n: 101,
+        dt: 0.25 / (100.0f64 * 100.0),
+        steps: 400,
+        snapshot_every: 100,
+        ..HeatParams::default()
+    };
+    check_heat(&p, QuantMode::MulOnly, "heat");
+}
+
+#[test]
+fn heat_bit_identical_full_mode() {
+    let p = HeatParams { n: 101, dt: 0.25 / (100.0f64 * 100.0), steps: 300, ..HeatParams::default() };
+    check_heat(&p, QuantMode::Full, "heat-full");
+}
+
+#[test]
+fn heat_bit_identical_in_the_underflow_regime() {
+    // §3.1's failure regime: a tiny field drives the fixed format's
+    // products below the min normal, so the deduplicated fast path must
+    // reproduce the scalar event *multiplicity*, not just event presence.
+    let p = HeatParams {
+        n: 101,
+        dt: 0.25 / (100.0f64 * 100.0),
+        steps: 200,
+        init: HeatInit::Sin { amplitude: 5e-4, cycles: 2.0 },
+        ..HeatParams::default()
+    };
+    let mut probe = FixedArith::new(FpFormat::E5M10);
+    let events = heat1d::run(&p, &mut probe, QuantMode::MulOnly).range_events.unwrap();
+    assert!(events.underflows > 0, "regime must actually underflow");
+    check_heat(&p, QuantMode::MulOnly, "heat-tiny");
+}
+
+#[test]
+fn heat_bit_identical_in_the_overflow_regime() {
+    let p = HeatParams {
+        n: 101,
+        dt: 0.25 / (100.0f64 * 100.0),
+        steps: 100,
+        init: HeatInit::Sin { amplitude: 2.5e5, cycles: 2.0 },
+        ..HeatParams::default()
+    };
+    let mut probe = FixedArith::new(FpFormat::E5M10);
+    let events = heat1d::run(&p, &mut probe, QuantMode::MulOnly).range_events.unwrap();
+    assert!(events.overflows > 0, "regime must actually overflow");
+    check_heat(&p, QuantMode::MulOnly, "heat-huge");
+}
+
+#[test]
+fn swe_bit_identical_both_scopes() {
+    let p = SweParams { steps: 25, ..SweParams::default() };
+    for scope in [QuantScope::UxFluxOnly, QuantScope::AllFluxMuls] {
+        for (name, mk) in &backends() {
+            let mut scalar_be = mk();
+            let mut batched_be = mk();
+            let s = swe2d::run_scalar(&p, scalar_be.as_mut(), scope);
+            let b = swe2d::run(&p, batched_be.as_mut(), scope);
+            let what = format!("swe/{name}/{scope:?}");
+            assert_bits_eq(&s.h, &b.h, &format!("{what}: h"));
+            assert_bits_eq(&s.u, &b.u, &format!("{what}: u"));
+            assert_bits_eq(&s.v, &b.v, &format!("{what}: v"));
+            assert_eq!(s.muls, b.muls, "{what}: muls");
+            assert_eq!(s.r2f2_stats, b.r2f2_stats, "{what}: r2f2 stats");
+            assert_eq!(s.range_events, b.range_events, "{what}: range events");
+            assert_eq!(s.mass_drift.to_bits(), b.mass_drift.to_bits(), "{what}: mass drift");
+        }
+    }
+}
+
+#[test]
+fn r2f2_batched_heat_still_adjusts_rarely() {
+    // The batched fast path reuses adjustment decisions across blocks; the
+    // paper's §5.3 observation (a handful of adjustments per 1.5M muls)
+    // must survive verbatim since the state machine is bit-identical.
+    let p = HeatParams { n: 101, dt: 0.25 / (100.0f64 * 100.0), steps: 1500, ..HeatParams::default() };
+    let mut be = R2f2Arith::new(R2f2Config::C16_393);
+    let res = heat1d::run(&p, &mut be, QuantMode::MulOnly);
+    let st = res.r2f2_stats.unwrap();
+    assert_eq!(st.muls, p.expected_muls());
+    let adj = st.overflow_adjustments + st.redundancy_adjustments;
+    assert!(adj < st.muls / 100, "adjustments must stay rare: {adj} of {}", st.muls);
+}
