@@ -1,155 +1,429 @@
 //! §Perf — hot-path microbenchmarks across all three layers.
 //!
 //! L3 native: scalar multiplier throughput (the sweep/solver inner loop),
-//! scalar-dispatch vs batched-engine heat steps (the DESIGN.md §8 rows —
-//! the batched fixed-format and R2F2 paths must come out ≥ 2× faster),
-//! parallel sweep scaling.
-//! L1/L2 via PJRT: compiled heat/SWE step latency and steps/s (skipped when
-//! artifacts are absent).
+//! then the perf trajectory of the solver engines — **scalar dispatch**
+//! (per-mul virtual calls) → **carrier engine** (PR-1 batching, f64-carrier
+//! round-trips) → **packed engine** (DESIGN.md §9, state in bits) — on the
+//! heat and shallow-water workloads, plus sweep sharding scaling.
+//! L1/L2 via PJRT: compiled heat/SWE step latency (skipped when artifacts
+//! are absent).
+//!
+//! Flags (after `--` on the cargo command line):
+//!   --smoke         cut workload sizes and sample counts (CI mode)
+//!   --json <path>   also emit machine-readable results
+//!                   (schema `r2f2-bench-hotpath/1`, see EXPERIMENTS.md)
 
-use r2f2::bench_util::{bench, bench_with, black_box, fmt_ns, print_results, BenchResult};
+use r2f2::bench_util::{bench_with, black_box, fmt_ns, print_results, BenchResult};
 use r2f2::coordinator::parallel_map;
 use r2f2::metrics::Registry;
-use r2f2::pde::heat1d::{run, run_scalar, HeatParams, HeatResult};
-use r2f2::pde::{Arith, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
+use r2f2::pde::heat1d::{run as heat_run, run_scalar as heat_run_scalar, HeatParams};
+use r2f2::pde::swe2d::{run as swe_run, run_scalar as swe_run_scalar, QuantScope, SweParams};
+use r2f2::pde::{Arith, BatchEngine, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
 use r2f2::r2f2core::{R2f2Config, R2f2Multiplier};
 use r2f2::rng::SplitMix64;
 use r2f2::runtime::{HeatRunner, Runtime};
-use r2f2::softfloat::{add_f, mul_batch_f, mul_f, quantize, Flags, FpFormat};
+use r2f2::softfloat::packed;
+use r2f2::softfloat::{add_f, mul_batch_f, mul_f, quantize, Flags, FpFormat, Rounder};
 use r2f2::sweep::error_sweep::{error_sweep, SweepParams};
 use std::time::Duration;
 
+struct Opts {
+    smoke: bool,
+    json: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { smoke: false, json: None };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => opts.json = args.next().or_else(|| {
+                eprintln!("--json needs a path");
+                std::process::exit(2);
+            }),
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg {other:?}"),
+        }
+    }
+    if std::env::var("R2F2_BENCH_SMOKE").is_ok() {
+        opts.smoke = true;
+    }
+    opts
+}
+
+/// One engine tier of the perf trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Scalar,
+    Carrier,
+    Packed,
+}
+
+impl Tier {
+    fn label(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar dispatch",
+            Tier::Carrier => "carrier engine",
+            Tier::Packed => "packed engine",
+        }
+    }
+}
+
+/// Per-workload median timings of the three tiers, for the speedup table.
+struct Trajectory {
+    workload: &'static str,
+    backend: &'static str,
+    ns: [f64; 3], // indexed by Tier as declared
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn emit_json(path: &str, smoke: bool, rows: &[BenchResult], trajs: &[Trajectory]) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"r2f2-bench-hotpath/1\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_ns\": {:.3}, \"mean_ns\": {:.3}, \
+             \"p95_ns\": {:.3}, \"ops_per_s\": {:.3}}}{}\n",
+            json_escape(&r.name),
+            r.median_ns,
+            r.mean_ns,
+            r.p95_ns,
+            r.throughput(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"speedups\": [\n");
+    for (i, t) in trajs.iter().enumerate() {
+        let [s, c, p] = t.ns;
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"backend\": \"{}\", \"scalar_ns\": {:.3}, \
+             \"carrier_ns\": {:.3}, \"packed_ns\": {:.3}, \
+             \"packed_vs_carrier\": {:.3}, \"packed_vs_scalar\": {:.3}}}{}\n",
+            json_escape(t.workload),
+            json_escape(t.backend),
+            s,
+            c,
+            p,
+            c / p,
+            s / p,
+            if i + 1 < trajs.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("failed to write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("\nwrote {path}");
+}
+
 fn main() {
+    let opts = parse_opts();
+    let (samples, batch_ms) = if opts.smoke { (5, 1) } else { (10, 5) };
+    let unit_samples = if opts.smoke { 8 } else { 30 };
+    let mut all_rows: Vec<BenchResult> = Vec::new();
+    let mut trajs: Vec<Trajectory> = Vec::new();
+
     let mut rng = SplitMix64::new(2);
     let ops: Vec<(f64, f64)> =
         (0..4096).map(|_| (rng.log_uniform(1e-4, 1e4), rng.log_uniform(1e-4, 1e4))).collect();
 
-    // ---- L3 scalar units ------------------------------------------------
+    // ---- L3 scalar vs batched vs packed units ---------------------------
     let mut results: Vec<BenchResult> = Vec::new();
     let mut i = 0usize;
-    results.push(bench("quantize E5M10", || {
+    results.push(bench_with("quantize E5M10", unit_samples, Duration::from_millis(2), &mut || {
         let (a, _) = ops[i & 4095];
         i += 1;
         black_box(quantize(a, FpFormat::E5M10));
     }));
     let mut i = 0usize;
-    results.push(bench("softfloat mul_f E5M10", || {
-        let (a, b) = ops[i & 4095];
-        i += 1;
-        black_box(mul_f(a, b, FpFormat::E5M10));
-    }));
+    results.push(bench_with(
+        "softfloat mul_f E5M10",
+        unit_samples,
+        Duration::from_millis(2),
+        &mut || {
+            let (a, b) = ops[i & 4095];
+            i += 1;
+            black_box(mul_f(a, b, FpFormat::E5M10));
+        },
+    ));
     let mut i = 0usize;
-    results.push(bench("softfloat add_f E5M10", || {
-        let (a, b) = ops[i & 4095];
-        i += 1;
-        black_box(add_f(a, b, FpFormat::E5M10));
-    }));
+    results.push(bench_with(
+        "softfloat add_f E5M10",
+        unit_samples,
+        Duration::from_millis(2),
+        &mut || {
+            let (a, b) = ops[i & 4095];
+            i += 1;
+            black_box(add_f(a, b, FpFormat::E5M10));
+        },
+    ));
+    // The packed word kernel alone (encode → mul → decode, no Fp structs).
+    let pf = FpFormat::E5M10.packed();
+    let mut rnd = Rounder::nearest_even();
+    let mut i = 0usize;
+    results.push(bench_with(
+        "packed encode+mul+decode E5M10",
+        unit_samples,
+        Duration::from_millis(2),
+        &mut || {
+            let (a, b) = ops[i & 4095];
+            i += 1;
+            let (wa, fla) = packed::encode_bits(a.to_bits(), &pf, &mut rnd);
+            let (wb, flb) = packed::encode_bits(b.to_bits(), &pf, &mut rnd);
+            let (wc, flc) = packed::mul_packed(wa, wb, &pf, &mut rnd);
+            black_box((packed::decode_word(wc, &pf), fla | flb | flc));
+        },
+    ));
     let mut unit = R2f2Multiplier::new(R2f2Config::C16_393);
     let mut i = 0usize;
-    results.push(bench("R2f2Multiplier::mul (adaptive)", || {
-        let (a, b) = ops[i & 4095];
-        i += 1;
-        black_box(unit.mul(a, b));
-    }));
-    // Batched counterparts of the scalar units above: one constant operand,
-    // hoisted format/rounder state (DESIGN.md §8).
+    results.push(bench_with(
+        "R2f2Multiplier::mul (adaptive)",
+        unit_samples,
+        Duration::from_millis(2),
+        &mut || {
+            let (a, b) = ops[i & 4095];
+            i += 1;
+            black_box(unit.mul(a, b));
+        },
+    ));
+    let mut unit = R2f2Multiplier::new(R2f2Config::C16_393);
+    let mut i = 0usize;
+    results.push(bench_with(
+        "R2f2Multiplier::mul_packed_pair",
+        unit_samples,
+        Duration::from_millis(2),
+        &mut || {
+            let (a, b) = ops[i & 4095];
+            i += 1;
+            black_box(unit.mul_packed_pair(a, b));
+        },
+    ));
+    // Batched slice kernels: one constant operand, hoisted state.
     let xs: Vec<f64> = ops.iter().map(|&(_, b)| b).collect();
     let mut out = vec![0.0f64; xs.len()];
     let mut flags = vec![Flags::NONE; xs.len()];
     results.push(bench_with(
         "softfloat mul_batch_f E5M10 ×256 els",
-        30,
+        unit_samples,
         Duration::from_millis(2),
         &mut || {
             mul_batch_f(0.25, &xs[..256], FpFormat::E5M10, &mut out[..256], &mut flags[..256]);
             black_box(&out);
         },
     ));
-    let mut unit = R2f2Arith::new(R2f2Config::C16_393);
+    let mut be = R2f2Arith::new(R2f2Config::C16_393);
     results.push(bench_with(
         "R2f2Arith::mul_batch ×256 els",
-        30,
+        unit_samples,
         Duration::from_millis(2),
         &mut || {
-            unit.mul_batch(&mut out[..256], 0.25, &xs[..256]);
+            be.mul_batch(&mut out[..256], 0.25, &xs[..256]);
             black_box(&out);
         },
     ));
-    print_results("L3 scalar vs batched units", &results);
+    print_results("L3 scalar vs batched vs packed units", &results);
+    all_rows.extend(results);
 
-    // ---- L3 solver steps: scalar dispatch vs batched engine -------------
+    // ---- L3 heat solver: the three-tier perf trajectory -----------------
     let mut p = HeatParams::default();
-    p.n = 257;
-    p.dt = 0.25 / (256.0f64 * 256.0);
-    p.steps = 50;
+    if opts.smoke {
+        p.n = 129;
+        p.dt = 0.25 / (128.0f64 * 128.0);
+        p.steps = 10;
+    } else {
+        p.n = 257;
+        p.dt = 0.25 / (256.0f64 * 256.0);
+        p.steps = 50;
+    }
 
-    fn heat_case(p: &HeatParams, which: usize, batched: bool) {
-        type Run = fn(&HeatParams, &mut dyn Arith, QuantMode) -> HeatResult;
-        let go: Run = if batched { run } else { run_scalar };
-        match which {
-            0 => {
-                black_box(go(p, &mut F64Arith, QuantMode::MulOnly));
+    fn heat_case(p: &HeatParams, which: usize, tier: Tier, mode: QuantMode) {
+        let mut be: Box<dyn Arith> = match (which, tier) {
+            (0, _) => Box::new(F64Arith),
+            (1, _) => Box::new(F32Arith),
+            (2, Tier::Carrier) => {
+                Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
             }
-            1 => {
-                black_box(go(p, &mut F32Arith, QuantMode::MulOnly));
+            (2, _) => Box::new(FixedArith::new(FpFormat::E5M10)),
+            (_, Tier::Carrier) => {
+                Box::new(R2f2Arith::new(R2f2Config::C16_393).with_engine(BatchEngine::Carrier))
             }
-            2 => {
-                let mut be = FixedArith::new(FpFormat::E5M10);
-                black_box(go(p, &mut be, QuantMode::MulOnly));
-            }
-            _ => {
-                let mut be = R2f2Arith::new(R2f2Config::C16_393);
-                black_box(go(p, &mut be, QuantMode::MulOnly));
-            }
+            (_, _) => Box::new(R2f2Arith::new(R2f2Config::C16_393)),
+        };
+        if tier == Tier::Scalar {
+            black_box(heat_run_scalar(p, be.as_mut(), mode));
+        } else {
+            black_box(heat_run(p, be.as_mut(), mode));
         }
     }
 
+    let heat_label = if opts.smoke { "heat 129×10" } else { "heat 257×50" };
     let mut results = Vec::new();
-    let mut medians = [[0.0f64; 2]; 4];
-    for (which, name) in [
-        (0usize, "heat 257×50 f64"),
-        (1, "heat 257×50 f32"),
-        (2, "heat 257×50 fixed E5M10"),
-        (3, "heat 257×50 r2f2 <3,9,3>"),
+    for (which, name, is_fixed_or_r2f2) in [
+        (0usize, "f64", false),
+        (1, "f32", false),
+        (2, "fixed E5M10", true),
+        (3, "r2f2 <3,9,3>", true),
     ] {
-        for (bi, label) in [(0usize, "scalar dispatch"), (1, "batched engine")] {
+        let tiers: &[Tier] = if is_fixed_or_r2f2 {
+            &[Tier::Scalar, Tier::Carrier, Tier::Packed]
+        } else {
+            &[Tier::Scalar, Tier::Packed]
+        };
+        let mut ns = [0.0f64; 3];
+        for &tier in tiers {
             let pp = p.clone();
             let r = bench_with(
-                &format!("{name} [{label}]"),
-                10,
-                Duration::from_millis(5),
-                &mut || heat_case(&pp, which, bi == 1),
+                &format!("{heat_label} {name} [{}]", tier.label()),
+                samples,
+                Duration::from_millis(batch_ms),
+                &mut || heat_case(&pp, which, tier, QuantMode::MulOnly),
             );
-            medians[which][bi] = r.median_ns;
+            ns[tier as usize] = r.median_ns;
             results.push(r);
         }
+        if is_fixed_or_r2f2 {
+            trajs.push(Trajectory { workload: "heat-mulonly", backend: name, ns });
+        }
     }
-    print_results("L3 solver (50 steps per iteration)", &results);
-    println!("\nbatched-engine speedup vs scalar dispatch (median):");
-    for (which, name) in
-        [(0usize, "f64"), (1, "f32"), (2, "fixed E5M10"), (3, "r2f2 <3,9,3>")]
+    // Full mode: the packed engine keeps the whole state in bits across
+    // timesteps — the tentpole row.
     {
-        println!("  {name:<14} ×{:.2}", medians[which][0] / medians[which][1]);
+        let mut ns = [0.0f64; 3];
+        for tier in [Tier::Scalar, Tier::Carrier, Tier::Packed] {
+            let pp = p.clone();
+            let r = bench_with(
+                &format!("{heat_label} fixed E5M10 full [{}]", tier.label()),
+                samples,
+                Duration::from_millis(batch_ms),
+                &mut || heat_case(&pp, 2, tier, QuantMode::Full),
+            );
+            ns[tier as usize] = r.median_ns;
+            results.push(r);
+        }
+        trajs.push(Trajectory { workload: "heat-full", backend: "fixed E5M10", ns });
+    }
+    print_results("L3 heat solver (one run per iteration)", &results);
+    all_rows.extend(results);
+
+    // ---- L3 shallow water: same trajectory on the flux engine -----------
+    let swe_p = SweParams { steps: if opts.smoke { 5 } else { 20 }, ..SweParams::default() };
+    fn swe_case(p: &SweParams, fixed: bool, tier: Tier) {
+        let mut be: Box<dyn Arith> = match (fixed, tier) {
+            (true, Tier::Carrier) => {
+                Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+            }
+            (true, _) => Box::new(FixedArith::new(FpFormat::E5M10)),
+            (false, Tier::Carrier) => {
+                Box::new(R2f2Arith::new(R2f2Config::C16_384).with_engine(BatchEngine::Carrier))
+            }
+            (false, _) => Box::new(R2f2Arith::new(R2f2Config::C16_384)),
+        };
+        // AllFluxMuls so the quantized share of the work dominates.
+        if tier == Tier::Scalar {
+            black_box(swe_run_scalar(p, be.as_mut(), QuantScope::AllFluxMuls));
+        } else {
+            black_box(swe_run(p, be.as_mut(), QuantScope::AllFluxMuls));
+        }
+    }
+    let swe_label = if opts.smoke { "swe 16×16×5" } else { "swe 16×16×20" };
+    let mut results = Vec::new();
+    for (fixed, name) in [(true, "fixed E5M10"), (false, "r2f2 <3,8,4>")] {
+        let mut ns = [0.0f64; 3];
+        for tier in [Tier::Scalar, Tier::Carrier, Tier::Packed] {
+            let pp = swe_p.clone();
+            let r = bench_with(
+                &format!("{swe_label} {name} [{}]", tier.label()),
+                samples,
+                Duration::from_millis(batch_ms),
+                &mut || swe_case(&pp, fixed, tier),
+            );
+            ns[tier as usize] = r.median_ns;
+            results.push(r);
+        }
+        trajs.push(Trajectory { workload: "swe-allflux", backend: name, ns });
+    }
+    print_results("L3 shallow water (one run per iteration)", &results);
+    all_rows.extend(results);
+
+    // ---- Speedup summary -------------------------------------------------
+    println!("\npacked-engine speedups (median):");
+    println!(
+        "{:<14} {:<14} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "workload", "backend", "scalar", "carrier", "packed", "vs carr", "vs scal"
+    );
+    for t in &trajs {
+        let [s, c, p] = t.ns;
+        println!(
+            "{:<14} {:<14} {:>12} {:>12} {:>12} {:>9.2}x {:>9.2}x",
+            t.workload,
+            t.backend,
+            fmt_ns(s),
+            fmt_ns(c),
+            fmt_ns(p),
+            c / p,
+            s / p
+        );
     }
 
-    // ---- Coordinator fan-out scaling ------------------------------------
-    let sweep_job = |workers: usize| {
+    // ---- Sweep sharding + coordinator fan-out ---------------------------
+    let sweep_intervals = if opts.smoke { 32 } else { 64 };
+    let shard_job = |workers: usize| {
+        let t0 = std::time::Instant::now();
+        let _ = error_sweep(
+            R2f2Config::C16_393,
+            FpFormat::E5M10,
+            &SweepParams {
+                intervals: sweep_intervals * 8,
+                pairs: 100,
+                workers,
+                ..Default::default()
+            },
+        );
+        t0.elapsed()
+    };
+    let t1 = shard_job(1);
+    let tn = shard_job(r2f2::coordinator::default_workers());
+    println!(
+        "\nsweep sharding: {} intervals  1 worker: {}  {} workers: {}  speedup ×{:.1}",
+        sweep_intervals * 8,
+        fmt_ns(t1.as_nanos() as f64),
+        r2f2::coordinator::default_workers(),
+        fmt_ns(tn.as_nanos() as f64),
+        t1.as_secs_f64() / tn.as_secs_f64()
+    );
+    let fan_job = |workers: usize| {
         let t0 = std::time::Instant::now();
         let chunks: Vec<u64> = (0..8).collect();
         let _ = parallel_map(chunks, workers, |seed| {
             error_sweep(
                 R2f2Config::C16_393,
                 FpFormat::E5M10,
-                &SweepParams { intervals: 64, pairs: 100, seed, ..Default::default() },
+                &SweepParams {
+                    intervals: sweep_intervals,
+                    pairs: 100,
+                    seed,
+                    workers: 1,
+                    ..Default::default()
+                },
             )
             .avg_reduction
         });
         t0.elapsed()
     };
-    let t1 = sweep_job(1);
-    let tn = sweep_job(r2f2::coordinator::default_workers());
+    let t1 = fan_job(1);
+    let tn = fan_job(r2f2::coordinator::default_workers());
     println!(
-        "\ncoordinator fan-out: 8 sweep shards  1 worker: {}  {} workers: {}  speedup ×{:.1}",
+        "coordinator fan-out: 8 sweep shards  1 worker: {}  {} workers: {}  speedup ×{:.1}",
         fmt_ns(t1.as_nanos() as f64),
         r2f2::coordinator::default_workers(),
         fmt_ns(tn.as_nanos() as f64),
@@ -188,5 +462,9 @@ fn main() {
                 fmt_ns(hit.as_nanos() as f64)
             );
         }
+    }
+
+    if let Some(path) = &opts.json {
+        emit_json(path, opts.smoke, &all_rows, &trajs);
     }
 }

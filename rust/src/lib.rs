@@ -19,9 +19,11 @@
 //!   differences) and 2D shallow-water equations (Lax–Wendroff), runnable
 //!   under f64 / f32 / fixed `ExMy` / R2F2 multiplication backends. The
 //!   [`pde::Arith`] trait carries the **batched arithmetic engine**
-//!   (DESIGN.md §8): slice-level operations whose per-backend fast paths
-//!   hoist dispatch, constant-operand encodes and format constants out of
-//!   the hot loops while staying bit-identical to the scalar path.
+//!   (DESIGN.md §8) and, by default, routes it through the
+//!   **packed-domain engine** (DESIGN.md §9): solver state held as `u32`
+//!   `[sign|exp|frac]` words, 64-bit integer datapaths, no f64 carrier
+//!   round-trip on the hot path — bit-identical to the scalar path, with
+//!   the PR-1 carrier engine kept selectable as the perf baseline.
 //! * [`analysis`] / [`sweep`] — the exploration harnesses behind Figs 2, 3
 //!   and 6.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`

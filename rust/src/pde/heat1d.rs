@@ -117,12 +117,20 @@ fn run_impl(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode, batched: b
     let mut next = u.clone();
     let mut snapshots = Vec::new();
 
-    for step in 0..params.steps {
-        if batched {
-            // One fused sweep: 3·(n−2) multiplications, boundary copy
-            // included. Bit-identical to the scalar loop below.
-            ctx.stencil_step(&mut next, &u, r);
-        } else {
+    if batched {
+        // The whole run is one fused multi-step call (DESIGN.md §9): packed
+        // backends keep Full-mode state in the packed domain across steps.
+        // Bit-identical to the scalar loop below.
+        ctx.stencil_multi(
+            &mut u,
+            &mut next,
+            r,
+            params.steps,
+            params.snapshot_every,
+            &mut snapshots,
+        );
+    } else {
+        for step in 0..params.steps {
             for i in 1..params.n - 1 {
                 // du = r·u[i−1] − (2r)·u[i] + r·u[i+1]
                 let left = ctx.mul(r, u[i - 1]);
@@ -138,11 +146,11 @@ fn run_impl(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode, batched: b
             // Dirichlet boundaries keep their (possibly quantized) values.
             next[0] = u[0];
             next[params.n - 1] = u[params.n - 1];
-        }
-        std::mem::swap(&mut u, &mut next);
+            std::mem::swap(&mut u, &mut next);
 
-        if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
-            snapshots.push((step + 1, u.clone()));
+            if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
+                snapshots.push((step + 1, u.clone()));
+            }
         }
     }
 

@@ -15,9 +15,11 @@ pub mod init;
 pub mod swe2d;
 
 use crate::r2f2core::{EncSlot, R2f2Config, R2f2Multiplier, Stats};
+use crate::softfloat::batch::{mul_batch_packed, mul_pairs_packed};
+use crate::softfloat::packed as pk;
 use crate::softfloat::{
-    add_f, decode, encode, mul as sf_mul, mul_batch_f, mul_f, mul_pairs_f, quantize,
-    quantize_flagged, Flags, Fp, FpFormat, Rounder,
+    add_f, decode, encode, mul as sf_mul, mul_f, quantize, quantize_flagged, Flags, Fp, FpFormat,
+    Rounder,
 };
 
 /// How much of the solver arithmetic routes through the backend.
@@ -29,6 +31,25 @@ pub enum QuantMode {
     /// Multiplications, additions and state storage all go through the
     /// format (a true low-precision simulation — Fig. 1's baseline).
     Full,
+}
+
+/// Which batched-engine implementation a backend runs (DESIGN.md §9).
+///
+/// Both engines are **bit-identical** to the scalar specification — the
+/// selector exists so the perf trajectory keeps comparing them
+/// (`benches/hotpath.rs`) and so `rust/tests/packed_vs_carrier.rs` can hold
+/// them against each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchEngine {
+    /// The PR-1 engine: hoisted encodes and dispatch, but every product
+    /// still round-trips through the `f64` carrier (`Fp` structs, `u128`
+    /// datapath). Frozen as the perf baseline.
+    Carrier,
+    /// The packed-domain engine: state and products stay in `u32` words
+    /// (`softfloat::packed`), 64-bit datapaths, direct-bits transcoding,
+    /// and `QuantMode::Full` state persists packed across timesteps.
+    #[default]
+    Packed,
 }
 
 /// Range-event counters accumulated by the fixed-format backend (the
@@ -101,16 +122,36 @@ pub trait Arith {
     fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
         scalar_stencil_step(self, next, u, r, mode);
     }
+    /// Fused **multi-step** heat sweep (DESIGN.md §9): equivalent to
+    /// `steps` iterations of [`Arith::stencil_step`] each followed by
+    /// `mem::swap(u, next)`, recording `(step + 1, u.clone())` snapshots
+    /// every `snapshot_every` steps (0 = none). On return `u` holds the
+    /// final state, bit-identical to the iterated-step reference; `next` is
+    /// scratch and its contents are unspecified.
+    ///
+    /// This is the hook that lets packed backends keep `QuantMode::Full`
+    /// state in the packed domain **across** timesteps instead of bouncing
+    /// through the `f64` carrier at every node.
+    fn stencil_multi(
+        &mut self,
+        u: &mut Vec<f64>,
+        next: &mut Vec<f64>,
+        r: f64,
+        mode: QuantMode,
+        steps: usize,
+        snapshot_every: usize,
+        snapshots: &mut Vec<(usize, Vec<f64>)>,
+    ) {
+        stencil_multi_via_steps(self, u, next, r, mode, steps, snapshot_every, snapshots);
+    }
     /// Fused shallow-water x-momentum flux batch: for each `(q1, q3)` pair
     /// compute `q1²/q3 + g2·q3²` with its three multiplications (`q1·q1`,
-    /// `q3·q3`, `g2·q3²`) through the unit, in index order.
-    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
-        assert_eq!(out.len(), q.len());
-        for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
-            let q1sq = self.mul(q1, q1);
-            let q3sq = self.mul(q3, q3);
-            *o = q1sq / q3 + self.mul(g2, q3sq);
-        }
+    /// `q3·q3`, `g2·q3²`) through the unit, in index order. Under
+    /// [`QuantMode::Full`] the final combine also routes through
+    /// [`Arith::add`] (the division stays in the `f64` carrier — the
+    /// backends model multipliers and adders, not dividers).
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)], mode: QuantMode) {
+        scalar_flux_batch(self, out, g2, q, mode);
     }
     /// R2F2 adjustment statistics, if the backend has them.
     fn r2f2_stats(&self) -> Option<Stats> {
@@ -157,6 +198,51 @@ pub fn scalar_stencil_step<A: Arith + ?Sized>(
     next[n - 1] = u[n - 1];
 }
 
+/// The canonical multi-step sequence: iterate [`Arith::stencil_step`] with
+/// swaps and snapshots. Shared by the default [`Arith::stencil_multi`] and
+/// by backends falling back for modes they do not accelerate.
+#[allow(clippy::too_many_arguments)]
+pub fn stencil_multi_via_steps<A: Arith + ?Sized>(
+    be: &mut A,
+    u: &mut Vec<f64>,
+    next: &mut Vec<f64>,
+    r: f64,
+    mode: QuantMode,
+    steps: usize,
+    snapshot_every: usize,
+    snapshots: &mut Vec<(usize, Vec<f64>)>,
+) {
+    for step in 0..steps {
+        be.stencil_step(next, u, r, mode);
+        std::mem::swap(u, next);
+        if snapshot_every != 0 && (step + 1) % snapshot_every == 0 {
+            snapshots.push((step + 1, u.clone()));
+        }
+    }
+}
+
+/// The canonical scalar flux sequence — the reference semantics the batched
+/// fast paths must reproduce bit-for-bit (per pair: `q1·q1`, `q3·q3`,
+/// `g2·q3²` through the unit, then the mode-gated combine).
+pub fn scalar_flux_batch<A: Arith + ?Sized>(
+    be: &mut A,
+    out: &mut [f64],
+    g2: f64,
+    q: &[(f64, f64)],
+    mode: QuantMode,
+) {
+    assert_eq!(out.len(), q.len());
+    for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+        let q1sq = be.mul(q1, q1);
+        let q3sq = be.mul(q3, q3);
+        let gq = be.mul(g2, q3sq);
+        *o = match mode {
+            QuantMode::MulOnly => q1sq / q3 + gq,
+            QuantMode::Full => be.add(q1sq / q3, gq),
+        };
+    }
+}
+
 /// IEEE double — the ground-truth backend.
 #[derive(Debug, Default)]
 pub struct F64Arith;
@@ -193,7 +279,8 @@ impl Arith for F64Arith {
         next[0] = u[0];
         next[n - 1] = u[n - 1];
     }
-    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)], _mode: QuantMode) {
+        // add is identity for f64, so Full and MulOnly coincide.
         assert_eq!(out.len(), q.len());
         for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
             *o = q1 * q1 / q3 + g2 * (q3 * q3);
@@ -254,17 +341,48 @@ impl Arith for F32Arith {
     }
 }
 
+/// Reusable scratch buffers for the packed per-sweep paths, so the
+/// per-timestep hot path performs no heap allocation after the first
+/// sweep. Not semantic state — contents are transient within one call.
+#[derive(Debug, Default)]
+struct PackedScratch {
+    wu: Vec<u32>,
+    enc_fl: Vec<Flags>,
+    pr_w: Vec<u32>,
+    pr_fl: Vec<Flags>,
+    pr_val: Vec<f64>,
+    wnext: Vec<u32>,
+}
+
 /// A fixed `ExMy` software format (E5M10 = the paper's standard half
 /// baseline). Counts range events so reports can show where it breaks.
+///
+/// Runs the packed-domain engine by default (DESIGN.md §9);
+/// [`FixedArith::with_engine`] selects the frozen PR-1 carrier engine for
+/// perf-baseline runs. Formats wider than one packed word (`E11M52`) fall
+/// back to the carrier path automatically.
 #[derive(Debug)]
 pub struct FixedArith {
     pub fmt: FpFormat,
+    engine: BatchEngine,
     events: RangeEvents,
+    scratch: PackedScratch,
 }
 
 impl FixedArith {
     pub fn new(fmt: FpFormat) -> FixedArith {
-        FixedArith { fmt, events: RangeEvents::default() }
+        FixedArith {
+            fmt,
+            engine: BatchEngine::default(),
+            events: RangeEvents::default(),
+            scratch: PackedScratch::default(),
+        }
+    }
+
+    /// Select the batched-engine implementation (both are bit-identical).
+    pub fn with_engine(mut self, engine: BatchEngine) -> FixedArith {
+        self.engine = engine;
+        self
     }
 
     fn track(&mut self, flags: crate::softfloat::Flags) {
@@ -275,6 +393,242 @@ impl FixedArith {
             self.events.underflows += 1;
         }
     }
+
+    /// Does this instance run the packed-domain kernels?
+    fn packed_on(&self) -> bool {
+        self.engine == BatchEngine::Packed && self.fmt.fits_word()
+    }
+
+    /// One packed `MulOnly` stencil sweep: encode the state vector once,
+    /// multiply in the word domain (with the `r·u[j]` product dedup and the
+    /// scalar event multiplicity), decode each product once for the
+    /// f64-carrier adds.
+    fn stencil_sweep_packed_mul_only(&mut self, next: &mut [f64], u: &[f64], r: f64) {
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        let pf = self.fmt.packed();
+        let mut rnd = Rounder::nearest_even();
+        let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
+        let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
+
+        // Scratch reuse: after the first sweep the per-timestep hot path
+        // performs no heap allocation.
+        let PackedScratch { wu, enc_fl, pr_val, pr_fl, .. } = &mut self.scratch;
+        pk::encode_slice_bits(u, &pf, &mut rnd, wu, enc_fl);
+
+        // r ⊗ u[j], shared between the `right` of node j−1 and the `left`
+        // of node j+1 (identical operands ⇒ identical product and flags);
+        // events counted once per use, the scalar multiplicity.
+        pr_val.clear();
+        pr_val.resize(n, 0.0);
+        pr_fl.clear();
+        pr_fl.resize(n, Flags::NONE);
+        for j in 0..n {
+            let (w, fl) = pk::mul_packed(wr, wu[j], &pf, &mut rnd);
+            pr_val[j] = pk::decode_word(w, &pf);
+            pr_fl[j] = flr | enc_fl[j] | fl;
+        }
+        let mut of = 0u64;
+        let mut uf = 0u64;
+        count_shared_product_events(pr_fl, &mut of, &mut uf);
+
+        for i in 1..n - 1 {
+            let (wm, flm) = pk::mul_packed(w2r, wu[i], &pf, &mut rnd);
+            let mid = pk::decode_word(wm, &pf);
+            let flm = fl2r | enc_fl[i] | flm;
+            of += u64::from(flm.overflow());
+            uf += u64::from(flm.underflow());
+            next[i] = u[i] + ((pr_val[i - 1] - mid) + pr_val[i + 1]);
+        }
+        self.events.overflows += of;
+        self.events.underflows += uf;
+        next[0] = u[0];
+        next[n - 1] = u[n - 1];
+    }
+
+    /// One packed `Full` stencil sweep with fresh encode/decode envelopes
+    /// (the multi-step driver below keeps the state packed instead).
+    fn stencil_sweep_packed_full(&mut self, next: &mut [f64], u: &[f64], r: f64) {
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        let pf = self.fmt.packed();
+        let mut rnd = Rounder::nearest_even();
+        let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
+        let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
+        let PackedScratch { wu, enc_fl, pr_w, pr_fl, wnext, .. } = &mut self.scratch;
+        pk::encode_slice_bits(u, &pf, &mut rnd, wu, enc_fl);
+        wnext.clear();
+        wnext.resize(n, 0);
+        pr_w.clear();
+        pr_w.resize(n, 0);
+        pr_fl.clear();
+        pr_fl.resize(n, Flags::NONE);
+        let (of, uf) =
+            packed_full_sweep(&pf, &mut rnd, wr, flr, w2r, fl2r, wu, enc_fl, wnext, pr_w, pr_fl);
+        self.events.overflows += of;
+        self.events.underflows += uf;
+        for (o, &w) in next.iter_mut().zip(self.scratch.wnext.iter()) {
+            *o = pk::decode_word(w, &pf);
+        }
+        // The scalar path copies the raw f64 boundary values (they may not
+        // be representable in the format).
+        next[0] = u[0];
+        next[n - 1] = u[n - 1];
+    }
+
+    /// The packed-domain `Full`-mode driver: encode the state **once**,
+    /// step `steps` times entirely in the packed domain, decode once at the
+    /// end (and per snapshot) — no f64 carrier round-trip per node per
+    /// step. Bit-identical to iterating the scalar sweep: after the first
+    /// sweep every interior value is format-representable, so its re-encode
+    /// in the scalar path is exact and flag-free; raw Dirichlet boundary
+    /// values are kept aside verbatim (their encode flags persist per
+    /// sweep, exactly as the scalar path re-incurs them).
+    fn stencil_multi_packed_full(
+        &mut self,
+        u: &mut [f64],
+        next: &mut [f64],
+        r: f64,
+        steps: usize,
+        snapshot_every: usize,
+        snapshots: &mut Vec<(usize, Vec<f64>)>,
+    ) {
+        let n = u.len();
+        assert_eq!(next.len(), n);
+        assert!(n >= 3);
+        debug_assert!(steps > 0);
+        let pf = self.fmt.packed();
+        let mut rnd = Rounder::nearest_even();
+        let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
+        let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
+
+        let (b0, b1) = (u[0], u[n - 1]);
+        let mut wu: Vec<u32> = Vec::new();
+        let mut enc_fl: Vec<Flags> = Vec::new();
+        pk::encode_slice_bits(u, &pf, &mut rnd, &mut wu, &mut enc_fl);
+        let mut wnext = wu.clone();
+        let mut pr = vec![0u32; n];
+        let mut pr_fl = vec![Flags::NONE; n];
+
+        let mut of = 0u64;
+        let mut uf = 0u64;
+        for step in 0..steps {
+            let (o, f) = packed_full_sweep(
+                &pf, &mut rnd, wr, flr, w2r, fl2r, &wu, &enc_fl, &mut wnext, &mut pr, &mut pr_fl,
+            );
+            of += o;
+            uf += f;
+            std::mem::swap(&mut wu, &mut wnext);
+            if step == 0 {
+                // Interior values are representable from now on: the scalar
+                // path's re-encodes become exact and flag-free. Boundaries
+                // stay raw and keep their flags.
+                for fl in enc_fl[1..n - 1].iter_mut() {
+                    *fl = Flags::NONE;
+                }
+            }
+            if snapshot_every != 0 && (step + 1) % snapshot_every == 0 {
+                let mut snap = vec![0.0; n];
+                for (s, &w) in snap.iter_mut().zip(wu.iter()) {
+                    *s = pk::decode_word(w, &pf);
+                }
+                snap[0] = b0;
+                snap[n - 1] = b1;
+                snapshots.push((step + 1, snap));
+            }
+        }
+        self.events.overflows += of;
+        self.events.underflows += uf;
+        for (o, &w) in u.iter_mut().zip(wu.iter()) {
+            *o = pk::decode_word(w, &pf);
+        }
+        u[0] = b0;
+        u[n - 1] = b1;
+        for (o, &w) in next.iter_mut().zip(wnext.iter()) {
+            *o = pk::decode_word(w, &pf);
+        }
+        next[0] = b0;
+        next[n - 1] = b1;
+    }
+}
+
+/// Count range events of the deduplicated `r·u[j]` products at the scalar
+/// multiplicity: each product is charged once per use — as a `left` when
+/// `j ≤ n−3` and as a `right` when `j ≥ 2` (DESIGN.md §8). This invariant
+/// is load-bearing for the bit-identity contract, so it is single-sourced
+/// across the carrier and packed sweeps.
+fn count_shared_product_events(pr_fl: &[Flags], of: &mut u64, uf: &mut u64) {
+    let n = pr_fl.len();
+    for (j, fl) in pr_fl.iter().enumerate() {
+        let mult = u64::from(j + 3 <= n) + u64::from(j >= 2);
+        if fl.overflow() {
+            *of += mult;
+        }
+        if fl.underflow() {
+            *uf += mult;
+        }
+    }
+}
+
+/// One `Full`-mode sweep entirely in the packed domain (muls, adds and
+/// storage quantization — the quantize of an already-packed result is the
+/// identity). `enc_fl` carries the per-element encode flags of the current
+/// state, charged at the scalar multiplicity: each state value feeds up to
+/// three multiplications and one addition. Returns `(overflows, underflows)`.
+#[allow(clippy::too_many_arguments)]
+fn packed_full_sweep(
+    pf: &crate::softfloat::PackedFormat,
+    rnd: &mut Rounder,
+    wr: u32,
+    flr: Flags,
+    w2r: u32,
+    fl2r: Flags,
+    wu: &[u32],
+    enc_fl: &[Flags],
+    wnext: &mut [u32],
+    pr: &mut [u32],
+    pr_fl: &mut [Flags],
+) -> (u64, u64) {
+    let n = wu.len();
+    let mut of = 0u64;
+    let mut uf = 0u64;
+
+    // r ⊗ u[j] once per j; range events counted once per use (`left` uses
+    // exist for j ≤ n−3, `right` uses for j ≥ 2 — the scalar multiplicity).
+    for j in 0..n {
+        let (w, fl) = pk::mul_packed(wr, wu[j], pf, rnd);
+        pr[j] = w;
+        pr_fl[j] = flr | enc_fl[j] | fl;
+    }
+    count_shared_product_events(pr_fl, &mut of, &mut uf);
+
+    for i in 1..n - 1 {
+        let (wm, flm) = pk::mul_packed(w2r, wu[i], pf, rnd);
+        let flm = fl2r | enc_fl[i] | flm;
+        of += u64::from(flm.overflow());
+        uf += u64::from(flm.underflow());
+        // s = left + (−mid); du = s + right; unew = u[i] + du — the scalar
+        // Full sequence, with every operand already packed.
+        let (ws, fls) = pk::add_packed(pr[i - 1], pf.neg_word(wm), pf, rnd);
+        of += u64::from(fls.overflow());
+        uf += u64::from(fls.underflow());
+        let (wdu, fldu) = pk::add_packed(ws, pr[i + 1], pf, rnd);
+        of += u64::from(fldu.overflow());
+        uf += u64::from(fldu.underflow());
+        let (wnew, flnew) = pk::add_packed(wu[i], wdu, pf, rnd);
+        // The scalar path re-encodes the raw u[i] inside this add.
+        let flnew = flnew | enc_fl[i];
+        of += u64::from(flnew.overflow());
+        uf += u64::from(flnew.underflow());
+        // quant(unew): encode∘decode is the identity on packed values and
+        // raises no flags — storage quantization is free in this domain.
+        wnext[i] = wnew;
+    }
+    wnext[0] = wu[0];
+    wnext[n - 1] = wu[n - 1];
+    (of, uf)
 }
 
 impl Arith for FixedArith {
@@ -297,23 +651,69 @@ impl Arith for FixedArith {
         v
     }
     fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
-        let mut flags = vec![Flags::NONE; xs.len()];
-        mul_batch_f(a, xs, self.fmt, out, &mut flags);
-        for fl in &flags {
-            self.track(*fl);
+        assert_eq!(out.len(), xs.len());
+        let fmt = self.fmt;
+        let mut rnd = Rounder::nearest_even();
+        if self.packed_on() {
+            // Packed engine: constant encoded once, word kernels, counters
+            // accumulated without a per-batch flags allocation. One shared
+            // kernel with `softfloat::batch` (DESIGN.md §9).
+            let pf = fmt.packed();
+            let mut of = 0u64;
+            let mut uf = 0u64;
+            mul_batch_packed(a, xs, &pf, &mut rnd, out, |_, fl| {
+                of += u64::from(fl.overflow());
+                uf += u64::from(fl.underflow());
+            });
+            self.events.overflows += of;
+            self.events.underflows += uf;
+            return;
+        }
+        // Carrier engine (the frozen PR-1 fast path): hoisted constant
+        // encode on the Fp structs.
+        let (fa, fla) = encode(a, fmt, &mut rnd);
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            let (fb, flb) = encode(x, fmt, &mut rnd);
+            let (fc, flc) = sf_mul(fa, fb, fmt, &mut rnd);
+            *o = decode(fc, fmt);
+            self.track(fla | flb | flc);
         }
     }
     fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
-        let mut flags = vec![Flags::NONE; pairs.len()];
-        mul_pairs_f(pairs, self.fmt, out, &mut flags);
-        for fl in &flags {
-            self.track(*fl);
+        assert_eq!(out.len(), pairs.len());
+        let fmt = self.fmt;
+        let mut rnd = Rounder::nearest_even();
+        if self.packed_on() {
+            let pf = fmt.packed();
+            let mut of = 0u64;
+            let mut uf = 0u64;
+            mul_pairs_packed(pairs, &pf, &mut rnd, out, |_, fl| {
+                of += u64::from(fl.overflow());
+                uf += u64::from(fl.underflow());
+            });
+            self.events.overflows += of;
+            self.events.underflows += uf;
+            return;
+        }
+        for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
+            let (fa, fla) = encode(a, fmt, &mut rnd);
+            let (fb, flb) = encode(b, fmt, &mut rnd);
+            let (fc, flc) = sf_mul(fa, fb, fmt, &mut rnd);
+            *o = decode(fc, fmt);
+            self.track(fla | flb | flc);
         }
     }
     fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
+        if self.packed_on() {
+            match mode {
+                QuantMode::MulOnly => self.stencil_sweep_packed_mul_only(next, u, r),
+                QuantMode::Full => self.stencil_sweep_packed_full(next, u, r),
+            }
+            return;
+        }
         if mode == QuantMode::Full {
-            // Full mode also quantizes the adds and the stored state; no
-            // products can be shared there, so keep the canonical sequence.
+            // Carrier engine, Full mode: quantized adds and storage — no
+            // products can be shared, keep the canonical sequence (PR-1).
             scalar_stencil_step(self, next, u, r, mode);
             return;
         }
@@ -346,20 +746,9 @@ impl Arith for FixedArith {
             pr_fl[j] = flr | eb[j].1 | flc;
         }
 
-        // Range events with the scalar path's multiplicity: the product
-        // r·u[j] is tracked once per use — as `left` when j ≤ n−3 and as
-        // `right` when j ≥ 2.
         let mut of = 0u64;
         let mut uf = 0u64;
-        for j in 0..n {
-            let mult = u64::from(j + 3 <= n) + u64::from(j >= 2);
-            if pr_fl[j].overflow() {
-                of += mult;
-            }
-            if pr_fl[j].underflow() {
-                uf += mult;
-            }
-        }
+        count_shared_product_events(&pr_fl, &mut of, &mut uf);
 
         for i in 1..n - 1 {
             let (fc, flc) = sf_mul(f2r, eb[i].0, fmt, &mut rnd);
@@ -378,10 +767,76 @@ impl Arith for FixedArith {
         next[0] = u[0];
         next[n - 1] = u[n - 1];
     }
-    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+    fn stencil_multi(
+        &mut self,
+        u: &mut Vec<f64>,
+        next: &mut Vec<f64>,
+        r: f64,
+        mode: QuantMode,
+        steps: usize,
+        snapshot_every: usize,
+        snapshots: &mut Vec<(usize, Vec<f64>)>,
+    ) {
+        if self.packed_on() && mode == QuantMode::Full && steps > 0 {
+            // The tentpole: Full-mode state stays packed across timesteps.
+            self.stencil_multi_packed_full(u, next, r, steps, snapshot_every, snapshots);
+            return;
+        }
+        // MulOnly state lives in the f64 carrier between sweeps (the adds
+        // are f64 by definition), so iterating the per-sweep engine is
+        // already optimal.
+        stencil_multi_via_steps(self, u, next, r, mode, steps, snapshot_every, snapshots);
+    }
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)], mode: QuantMode) {
         assert_eq!(out.len(), q.len());
         let fmt = self.fmt;
         let mut rnd = Rounder::nearest_even();
+        if self.packed_on() {
+            let pf = fmt.packed();
+            let (wg, flg) = pk::encode_bits(g2.to_bits(), &pf, &mut rnd);
+            let mut of = 0u64;
+            let mut uf = 0u64;
+            let count = |fl: Flags, of: &mut u64, uf: &mut u64| {
+                *of += u64::from(fl.overflow());
+                *uf += u64::from(fl.underflow());
+            };
+            for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+                let (w1, fl1) = pk::encode_bits(q1.to_bits(), &pf, &mut rnd);
+                let (p1, flp1) = pk::mul_packed(w1, w1, &pf, &mut rnd);
+                let q1sq = pk::decode_word(p1, &pf);
+                let (w3, fl3) = pk::encode_bits(q3.to_bits(), &pf, &mut rnd);
+                let (p3, flp3) = pk::mul_packed(w3, w3, &pf, &mut rnd);
+                // g2 · q3²: the scalar path re-encodes the decoded product;
+                // encode∘decode is the identity (and flag-free) on packed
+                // values, so the product feeds the next multiplication
+                // without ever leaving the packed domain.
+                let (pg, flpg) = pk::mul_packed(wg, p3, &pf, &mut rnd);
+                let gq = pk::decode_word(pg, &pf);
+                let t = q1sq / q3;
+                count(fl1 | flp1, &mut of, &mut uf);
+                count(fl3 | flp3, &mut of, &mut uf);
+                count(flg | flpg, &mut of, &mut uf);
+                match mode {
+                    QuantMode::MulOnly => *o = t + gq,
+                    QuantMode::Full => {
+                        // add(t, gq): the dividend re-enters the format; the
+                        // addend is still packed.
+                        let (wt, flt) = pk::encode_bits(t.to_bits(), &pf, &mut rnd);
+                        let (wsum, flsum) = pk::add_packed(wt, pg, &pf, &mut rnd);
+                        *o = pk::decode_word(wsum, &pf);
+                        count(flt | flsum, &mut of, &mut uf);
+                    }
+                }
+            }
+            self.events.overflows += of;
+            self.events.underflows += uf;
+            return;
+        }
+        if mode == QuantMode::Full {
+            // Carrier engine has no fused Full flux: canonical sequence.
+            scalar_flux_batch(self, out, g2, q, mode);
+            return;
+        }
         let (fg, flg) = encode(g2, fmt, &mut rnd);
         let mut of = 0u64;
         let mut uf = 0u64;
@@ -417,14 +872,26 @@ impl Arith for FixedArith {
 }
 
 /// The runtime-reconfigurable multiplier under test.
+///
+/// Runs the packed adjustment unit by default
+/// ([`R2f2Multiplier::mul_packed`], DESIGN.md §9);
+/// [`R2f2Arith::with_engine`] selects the frozen PR-1 cached-carrier engine
+/// for perf-baseline runs. Both are bit-identical to the scalar unit.
 #[derive(Debug)]
 pub struct R2f2Arith {
     pub unit: R2f2Multiplier,
+    engine: BatchEngine,
 }
 
 impl R2f2Arith {
     pub fn new(cfg: R2f2Config) -> R2f2Arith {
-        R2f2Arith { unit: R2f2Multiplier::new(cfg) }
+        R2f2Arith { unit: R2f2Multiplier::new(cfg), engine: BatchEngine::default() }
+    }
+
+    /// Select the batched-engine implementation (both are bit-identical).
+    pub fn with_engine(mut self, engine: BatchEngine) -> R2f2Arith {
+        self.engine = engine;
+        self
     }
 }
 
@@ -452,8 +919,33 @@ impl Arith for R2f2Arith {
         // verdict) is derived once per split and reused across the block
         // instead of per multiplication. State transitions stay exact.
         let c = self.unit.prepare_const(a);
-        for (o, &x) in out.iter_mut().zip(xs.iter()) {
-            *o = self.unit.mul_const(&c, x);
+        match self.engine {
+            BatchEngine::Packed => {
+                let mut slot = EncSlot::empty();
+                for (o, &x) in out.iter_mut().zip(xs.iter()) {
+                    *o = self.unit.mul_packed(&c, x, &mut slot);
+                }
+            }
+            BatchEngine::Carrier => {
+                for (o, &x) in out.iter_mut().zip(xs.iter()) {
+                    *o = self.unit.mul_const(&c, x);
+                }
+            }
+        }
+    }
+    fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        assert_eq!(out.len(), pairs.len());
+        match self.engine {
+            BatchEngine::Packed => {
+                for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
+                    *o = self.unit.mul_packed_pair(a, b);
+                }
+            }
+            BatchEngine::Carrier => {
+                for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
+                    *o = self.unit.mul(a, b);
+                }
+            }
         }
     }
     fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
@@ -468,29 +960,66 @@ impl Arith for R2f2Arith {
         let c2r = self.unit.prepare_const(2.0 * r);
         // Sliding-window encode cache: u[j] feeds the `right` of node j−1,
         // the `mid` of node j and the `left` of node j+1; while the split
-        // is unchanged those three encodes collapse into one.
+        // is unchanged those three encodes collapse into one. The packed
+        // engine additionally runs the truncated datapath on 64-bit words
+        // with direct-bits decode (the §9 packed adjustment unit); repack
+        // happens only when `k` actually moves.
         let mut sl = EncSlot::empty();
         let mut sm = EncSlot::empty();
         let mut sr = EncSlot::empty();
-        for i in 1..n - 1 {
-            let left = self.unit.mul_const_cached(&cr, u[i - 1], &mut sl);
-            let mid = self.unit.mul_const_cached(&c2r, u[i], &mut sm);
-            let right = self.unit.mul_const_cached(&cr, u[i + 1], &mut sr);
-            next[i] = u[i] + ((left - mid) + right);
-            sl = sm;
-            sm = sr;
-            sr = EncSlot::empty();
+        match self.engine {
+            BatchEngine::Packed => {
+                for i in 1..n - 1 {
+                    let left = self.unit.mul_packed(&cr, u[i - 1], &mut sl);
+                    let mid = self.unit.mul_packed(&c2r, u[i], &mut sm);
+                    let right = self.unit.mul_packed(&cr, u[i + 1], &mut sr);
+                    next[i] = u[i] + ((left - mid) + right);
+                    sl = sm;
+                    sm = sr;
+                    sr = EncSlot::empty();
+                }
+            }
+            BatchEngine::Carrier => {
+                for i in 1..n - 1 {
+                    let left = self.unit.mul_const_cached(&cr, u[i - 1], &mut sl);
+                    let mid = self.unit.mul_const_cached(&c2r, u[i], &mut sm);
+                    let right = self.unit.mul_const_cached(&cr, u[i + 1], &mut sr);
+                    next[i] = u[i] + ((left - mid) + right);
+                    sl = sm;
+                    sm = sr;
+                    sr = EncSlot::empty();
+                }
+            }
         }
         next[0] = u[0];
         next[n - 1] = u[n - 1];
     }
-    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)], mode: QuantMode) {
+        if mode == QuantMode::Full {
+            // R2F2 is a multiplier: Full-mode adds run through `add` in the
+            // current split's format — no fused fast path, keep the
+            // canonical sequence.
+            scalar_flux_batch(self, out, g2, q, mode);
+            return;
+        }
         assert_eq!(out.len(), q.len());
         let cg = self.unit.prepare_const(g2);
-        for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
-            let q1sq = self.unit.mul(q1, q1);
-            let q3sq = self.unit.mul(q3, q3);
-            *o = q1sq / q3 + self.unit.mul_const(&cg, q3sq);
+        match self.engine {
+            BatchEngine::Packed => {
+                let mut slot = EncSlot::empty();
+                for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+                    let q1sq = self.unit.mul_packed_pair(q1, q1);
+                    let q3sq = self.unit.mul_packed_pair(q3, q3);
+                    *o = q1sq / q3 + self.unit.mul_packed(&cg, q3sq, &mut slot);
+                }
+            }
+            BatchEngine::Carrier => {
+                for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
+                    let q1sq = self.unit.mul(q1, q1);
+                    let q3sq = self.unit.mul(q3, q3);
+                    *o = q1sq / q3 + self.unit.mul_const(&cg, q3sq);
+                }
+            }
         }
     }
     fn r2f2_stats(&self) -> Option<Stats> {
@@ -647,10 +1176,25 @@ impl<'a> Ctx<'a> {
         self.be.stencil_step(next, u, r, self.mode);
     }
 
+    /// Fused multi-step heat run (`3·(n−2)·steps` multiplications); on
+    /// return `u` holds the final state and `next` is scratch.
+    pub fn stencil_multi(
+        &mut self,
+        u: &mut Vec<f64>,
+        next: &mut Vec<f64>,
+        r: f64,
+        steps: usize,
+        snapshot_every: usize,
+        snapshots: &mut Vec<(usize, Vec<f64>)>,
+    ) {
+        self.muls += 3 * (u.len() as u64 - 2) * steps as u64;
+        self.be.stencil_multi(u, next, r, self.mode, steps, snapshot_every, snapshots);
+    }
+
     /// Batched x-momentum flux evaluations (3 multiplications per pair).
     pub fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)]) {
         self.muls += 3 * q.len() as u64;
-        self.be.flux_batch(out, g2, q);
+        self.be.flux_batch(out, g2, q, self.mode);
     }
 }
 
@@ -782,12 +1326,36 @@ mod tests {
     fn mul_batch_bit_identical_across_backends() {
         check_mul_batch_equivalence(&|| Box::new(F64Arith) as Box<dyn Arith>, "f64");
         check_mul_batch_equivalence(&|| Box::new(F32Arith) as Box<dyn Arith>, "f32");
-        check_mul_batch_equivalence(&|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>, "E5M10");
+        check_mul_batch_equivalence(
+            &|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>,
+            "E5M10",
+        );
+        check_mul_batch_equivalence(
+            &|| {
+                Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+                    as Box<dyn Arith>
+            },
+            "E5M10-carrier",
+        );
         check_mul_batch_equivalence(
             &|| Box::new(FixedArith::new(FpFormat::new(6, 9))) as Box<dyn Arith>,
             "E6M9",
         );
-        check_mul_batch_equivalence(&|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>, "r2f2");
+        check_mul_batch_equivalence(
+            &|| Box::new(FixedArith::new(FpFormat::E11M52)) as Box<dyn Arith>,
+            "E11M52 (no word fit, carrier fallback)",
+        );
+        check_mul_batch_equivalence(
+            &|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>,
+            "r2f2",
+        );
+        check_mul_batch_equivalence(
+            &|| {
+                Box::new(R2f2Arith::new(R2f2Config::C16_393).with_engine(BatchEngine::Carrier))
+                    as Box<dyn Arith>
+            },
+            "r2f2-carrier",
+        );
         check_mul_batch_equivalence(
             &|| Box::new(StochasticArith::new(FpFormat::E5M10, 42)) as Box<dyn Arith>,
             "E5M10-sr",
@@ -799,11 +1367,26 @@ mod tests {
         let xs = nasty_xs(300, 0x91);
         let ys = nasty_xs(300, 0x92);
         let pairs: Vec<(f64, f64)> = xs.into_iter().zip(ys).collect();
+        #[allow(clippy::type_complexity)]
         let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
             (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
             (Box::new(|| Box::new(F32Arith) as Box<dyn Arith>), "f32"),
             (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-carrier",
+            ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>), "r2f2"),
+            (
+                Box::new(|| {
+                    Box::new(R2f2Arith::new(R2f2Config::C16_384).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "r2f2-carrier",
+            ),
         ];
         for (mk, what) in &mks {
             let mut scalar_be = mk();
@@ -832,12 +1415,30 @@ mod tests {
             })
             .collect();
         let r = 0.25;
+        #[allow(clippy::type_complexity)]
         let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
             (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
             (Box::new(|| Box::new(F32Arith) as Box<dyn Arith>), "f32"),
             (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-carrier",
+            ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>), "r2f2"),
-            (Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 7)) as Box<dyn Arith>), "E5M10-sr"),
+            (
+                Box::new(|| {
+                    Box::new(R2f2Arith::new(R2f2Config::C16_393).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "r2f2-carrier",
+            ),
+            (
+                Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 7)) as Box<dyn Arith>),
+                "E5M10-sr",
+            ),
         ];
         for mode in [QuantMode::MulOnly, QuantMode::Full] {
             for (mk, what) in &mks {
@@ -894,36 +1495,141 @@ mod tests {
     }
 
     #[test]
-    fn flux_batch_bit_identical_across_backends() {
+    fn flux_batch_bit_identical_across_backends_and_modes() {
         let mut rng = crate::rng::SplitMix64::new(0x94);
         // Shelf-scale operands (the Fig. 8 regime): h ≈ 150, u ≈ ±40.
         let q: Vec<(f64, f64)> = (0..500)
             .map(|_| (rng.range_f64(-40.0, 40.0), rng.range_f64(140.0, 160.0)))
             .collect();
         let g2 = 4.9;
+        #[allow(clippy::type_complexity)]
         let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
             (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
             (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-carrier",
+            ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>), "r2f2"),
+            (
+                Box::new(|| {
+                    Box::new(R2f2Arith::new(R2f2Config::C16_384).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "r2f2-carrier",
+            ),
         ];
-        for (mk, what) in &mks {
-            let mut scalar_be = mk();
-            let mut batch_be = mk();
-            let want: Vec<f64> = q
-                .iter()
-                .map(|&(q1, q3)| {
-                    let q1sq = scalar_be.mul(q1, q1);
-                    let q3sq = scalar_be.mul(q3, q3);
-                    q1sq / q3 + scalar_be.mul(g2, q3sq)
-                })
-                .collect();
-            let mut got = vec![0.0; q.len()];
-            batch_be.flux_batch(&mut got, g2, &q);
-            for i in 0..q.len() {
-                assert_eq!(got[i].to_bits(), want[i].to_bits(), "{what}: lane {i}");
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            for (mk, what) in &mks {
+                let mut scalar_be = mk();
+                let mut batch_be = mk();
+                let mut want = vec![0.0; q.len()];
+                scalar_flux_batch(scalar_be.as_mut(), &mut want, g2, &q, mode);
+                let mut got = vec![0.0; q.len()];
+                batch_be.flux_batch(&mut got, g2, &q, mode);
+                for i in 0..q.len() {
+                    assert_eq!(got[i].to_bits(), want[i].to_bits(), "{what}/{mode:?}: lane {i}");
+                }
+                assert_eq!(
+                    scalar_be.range_events(),
+                    batch_be.range_events(),
+                    "{what}/{mode:?}: events"
+                );
+                assert_eq!(
+                    scalar_be.r2f2_stats(),
+                    batch_be.r2f2_stats(),
+                    "{what}/{mode:?}: stats"
+                );
             }
-            assert_eq!(scalar_be.range_events(), batch_be.range_events(), "{what}: events");
-            assert_eq!(scalar_be.r2f2_stats(), batch_be.r2f2_stats(), "{what}: stats");
+        }
+    }
+
+    #[test]
+    fn stencil_multi_matches_iterated_steps() {
+        // The multi-step driver vs the iterated single-sweep reference —
+        // values, snapshots and counters — for the backends with packed
+        // cross-step state as well as the defaults.
+        let mut rng = crate::rng::SplitMix64::new(0x95);
+        let n = 65;
+        let u0: Vec<f64> = (0..n)
+            .map(|i| {
+                let x = i as f64 / (n - 1) as f64;
+                400.0 * (std::f64::consts::PI * x).sin() * rng.range_f64(0.99, 1.01)
+            })
+            .collect();
+        let r = 0.25;
+        #[allow(clippy::type_complexity)]
+        let mks: Vec<(Box<dyn Fn() -> Box<dyn Arith>>, &str)> = vec![
+            (Box::new(|| Box::new(F64Arith) as Box<dyn Arith>), "f64"),
+            (Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>), "E5M10"),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-carrier",
+            ),
+            (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>), "r2f2"),
+            (
+                Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 3)) as Box<dyn Arith>),
+                "E5M10-sr",
+            ),
+        ];
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            for steps in [0usize, 1, 7, 40] {
+                for (mk, what) in &mks {
+                    let mut ref_be = mk();
+                    let mut multi_be = mk();
+                    let what = format!("{what}/{mode:?}/steps={steps}");
+
+                    let mut u_ref = u0.clone();
+                    let mut next_ref = u0.clone();
+                    let mut snaps_ref = Vec::new();
+                    stencil_multi_via_steps(
+                        ref_be.as_mut(),
+                        &mut u_ref,
+                        &mut next_ref,
+                        r,
+                        mode,
+                        steps,
+                        10,
+                        &mut snaps_ref,
+                    );
+
+                    let mut u_got = u0.clone();
+                    let mut next_got = u0.clone();
+                    let mut snaps_got = Vec::new();
+                    multi_be.stencil_multi(
+                        &mut u_got,
+                        &mut next_got,
+                        r,
+                        mode,
+                        steps,
+                        10,
+                        &mut snaps_got,
+                    );
+
+                    for i in 0..n {
+                        assert_eq!(u_got[i].to_bits(), u_ref[i].to_bits(), "{what}: node {i}");
+                    }
+                    assert_eq!(ref_be.range_events(), multi_be.range_events(), "{what}: events");
+                    assert_eq!(ref_be.r2f2_stats(), multi_be.r2f2_stats(), "{what}: stats");
+                    assert_eq!(snaps_got.len(), snaps_ref.len(), "{what}: snapshot count");
+                    for (s, (g, w)) in snaps_got.iter().zip(snaps_ref.iter()).enumerate() {
+                        assert_eq!(g.0, w.0, "{what}: snapshot step {s}");
+                        for i in 0..n {
+                            assert_eq!(
+                                g.1[i].to_bits(),
+                                w.1[i].to_bits(),
+                                "{what}: snapshot {s} node {i}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

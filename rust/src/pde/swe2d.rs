@@ -114,12 +114,16 @@ impl Grid {
 }
 
 /// The quantized sub-equation: `F2(q1, q3) = q1²/q3 + 0.5g·q3²` with its
-/// three multiplications routed through the backend.
+/// three multiplications routed through the backend. Under
+/// [`QuantMode::Full`] the final combine also routes through the backend's
+/// adder (`Ctx::add` gates this on the mode); the division stays in the
+/// f64 carrier — the backends model multipliers and adders, not dividers.
 #[inline]
 fn f2_quant(ctx: &mut Ctx, g2: f64, q1: f64, q3: f64) -> f64 {
     let q1sq = ctx.mul(q1, q1);
     let q3sq = ctx.mul(q3, q3);
-    q1sq / q3 + ctx.mul(g2, q3sq)
+    let gq = ctx.mul(g2, q3sq);
+    ctx.add(q1sq / q3, gq)
 }
 
 /// The same flux in plain f64 (all the paper's other 23 sub-equations).
@@ -136,14 +140,37 @@ fn f2_plain(g2: f64, q1: f64, q3: f64) -> f64 {
 /// multiplication stream of the per-call reference [`run_scalar`] — the two
 /// produce bit-identical fields and counters.
 pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
-    run_impl(params, be, scope, true)
+    run_impl(params, be, scope, QuantMode::MulOnly, true)
 }
 
 /// Per-multiplication reference path (one dynamically-dispatched `mul` per
 /// stencil multiplication); the baseline for `benches/hotpath.rs` and the
 /// semantic reference for the batched engine.
 pub fn run_scalar(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
-    run_impl(params, be, scope, false)
+    run_impl(params, be, scope, QuantMode::MulOnly, false)
+}
+
+/// [`run`] with an explicit [`QuantMode`]: under [`QuantMode::Full`] the
+/// quantized flux's final add also routes through the backend (see
+/// `f2_quant`), modeling a datapath whose adder sits in the reduced format
+/// as well. The paper's deployment is `MulOnly`; `Full` is the ablation.
+pub fn run_mode(
+    params: &SweParams,
+    be: &mut dyn Arith,
+    scope: QuantScope,
+    mode: QuantMode,
+) -> SweResult {
+    run_impl(params, be, scope, mode, true)
+}
+
+/// The scalar-dispatch reference for [`run_mode`].
+pub fn run_scalar_mode(
+    params: &SweParams,
+    be: &mut dyn Arith,
+    scope: QuantScope,
+    mode: QuantMode,
+) -> SweResult {
+    run_impl(params, be, scope, mode, false)
 }
 
 /// Evaluate one row's worth of quantized fluxes into a reused output
@@ -159,11 +186,17 @@ fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batc
     }
 }
 
-fn run_impl(params: &SweParams, be: &mut dyn Arith, scope: QuantScope, batched: bool) -> SweResult {
+fn run_impl(
+    params: &SweParams,
+    be: &mut dyn Arith,
+    scope: QuantScope,
+    mode: QuantMode,
+    batched: bool,
+) -> SweResult {
     let n = params.n;
     assert!(n >= 4, "grid too small");
     let name = be.name();
-    let mut ctx = Ctx::new(be, QuantMode::MulOnly);
+    let mut ctx = Ctx::new(be, mode);
     let (dt, dx, g) = (params.dt, params.dx, params.g);
     let g2 = 0.5 * g;
     let (ddx, ddy) = (dt / dx, dt / dx);

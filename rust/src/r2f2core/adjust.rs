@@ -26,7 +26,7 @@
 //! sensitive" and three bits "too conservative" (§4.2). Window width and
 //! streak threshold are both exposed for the ablation bench.
 
-use super::mul::mul_packed;
+use super::mul::{mul_packed, mul_packed_fast};
 use super::repr::R2f2Config;
 use crate::softfloat::{decode, encode, Flags, Fp, Rounder};
 
@@ -152,13 +152,34 @@ impl R2f2Multiplier {
 
     /// [`Self::mul`] that also reports what the adjustment unit did.
     pub fn mul_traced(&mut self, a: f64, b: f64) -> (f64, AdjustEvent) {
+        self.mul_pair_machine(a, b, mul_packed)
+    }
+
+    /// The packed twin of [`Self::mul`] for pairs where **both** operands
+    /// vary (the Fig. 6 sweep, the SWE flux squares): the same §4 state
+    /// machine instantiated over the §9 u64 truncated datapath.
+    /// Bit-identical to `mul` (`packed_vs_carrier.rs` polices it).
+    pub fn mul_packed_pair(&mut self, a: f64, b: f64) -> f64 {
+        self.mul_pair_machine(a, b, mul_packed_fast).0
+    }
+
+    /// The §4 widen/narrow state machine for a two-varying-operand
+    /// multiplication, generic over the mantissa datapath — the `u128`
+    /// specification ([`mul_packed`]) or the §9 `u64` fast path
+    /// (`mul_packed_fast`). One copy of the state machine serves both
+    /// engines, so they cannot drift.
+    #[inline]
+    fn mul_pair_machine<D>(&mut self, a: f64, b: f64, datapath: D) -> (f64, AdjustEvent)
+    where
+        D: Fn(Fp, Fp, R2f2Config, u32, &mut Rounder) -> (Fp, Flags),
+    {
         self.stats.muls += 1;
         let mut retries = 0u32;
         loop {
             let fmt = self.cfg.format(self.k);
             let (fa, fla) = encode(a, fmt, &mut self.rounder);
             let (fb, flb) = encode(b, fmt, &mut self.rounder);
-            let (fc, flc) = mul_packed(fa, fb, self.cfg, self.k, &mut self.rounder);
+            let (fc, flc) = datapath(fa, fb, self.cfg, self.k, &mut self.rounder);
 
             // Widen triggers: result out of range, or an operand saturated
             // on conversion (unbounded error). Operand flush-to-zero is
@@ -287,6 +308,37 @@ impl R2f2Multiplier {
     /// that stream overlapping windows (the heat stencil) rotate slots to
     /// skip most encodes.
     pub fn mul_const_cached(&mut self, c: &ConstOperand, b: f64, slot: &mut EncSlot) -> f64 {
+        self.mul_const_machine(c, b, slot, mul_packed)
+    }
+
+    /// The **packed adjustment unit** (DESIGN.md §9): the cached-constant
+    /// state machine instantiated over the §9 `u64` truncated datapath.
+    /// The constant operand comes pre-packed at every split from
+    /// [`Self::prepare_const`]; the varying operand lives in the caller's
+    /// [`EncSlot`] and is **repacked only when `k` actually moves** (or the
+    /// value changes). Bit-identical to [`Self::mul_const_cached`] — one
+    /// shared state machine, two datapath instantiations. (The result is
+    /// still returned through the f64 carrier: in `MulOnly` deployments the
+    /// surrounding additions are f64 by definition, and `decode` is a
+    /// direct bit construction since this PR.)
+    pub fn mul_packed(&mut self, c: &ConstOperand, b: f64, slot: &mut EncSlot) -> f64 {
+        self.mul_const_machine(c, b, slot, mul_packed_fast)
+    }
+
+    /// The §4 widen/narrow state machine for a cached-constant
+    /// multiplication, generic over the mantissa datapath (see
+    /// `mul_pair_machine`).
+    #[inline]
+    fn mul_const_machine<D>(
+        &mut self,
+        c: &ConstOperand,
+        b: f64,
+        slot: &mut EncSlot,
+        datapath: D,
+    ) -> f64
+    where
+        D: Fn(Fp, Fp, R2f2Config, u32, &mut Rounder) -> (Fp, Flags),
+    {
         assert_eq!(c.cfg, self.cfg, "ConstOperand prepared for another configuration");
         self.stats.muls += 1;
         let bbits = b.to_bits();
@@ -302,7 +354,7 @@ impl R2f2Multiplier {
                 *slot = EncSlot { bits: bbits, k, fp: fb, fl: flb, valid: true };
                 (fb, flb)
             };
-            let (fc, flc) = mul_packed(fa, fb, self.cfg, k, &mut self.rounder);
+            let (fc, flc) = datapath(fa, fb, self.cfg, k, &mut self.rounder);
 
             // Mirror of `mul_traced`, with the constant's encode flags and
             // redundancy verdict read from the cache.
@@ -594,6 +646,57 @@ mod tests {
                 let got = batched.mul_const_cached(&c, b, &mut slot);
                 assert_eq!(got.to_bits(), want.to_bits(), "iter {i}: 0.25 × {b}");
                 assert_units_equal(&scalar, &batched, "after cached mul");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_packed_is_bit_identical_to_mul_const_cached() {
+        // The packed adjustment unit replays the cached-carrier state
+        // machine exactly — values, split, streak, stats — through widen
+        // retries, narrowing streaks and warm-slot reuse.
+        for cfg in [R2f2Config::C16_393, R2f2Config::C16_384, R2f2Config::C14_373] {
+            let mut carrier = R2f2Multiplier::new(cfg);
+            let mut packed = R2f2Multiplier::new(cfg);
+            let mut rng = SplitMix64::new(0x79);
+            for &a in &[0.25, 1.1, 4.9, 900.0, 1e-3] {
+                let cc = carrier.prepare_const(a);
+                let cp = packed.prepare_const(a);
+                let mut sc = EncSlot::empty();
+                let mut sp = EncSlot::empty();
+                for i in 0..3000 {
+                    let b = if i % 97 == 0 {
+                        3.0e5
+                    } else {
+                        let s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                        s * rng.log_uniform(1e-7, 1e7)
+                    };
+                    let reps = 1 + (i % 3);
+                    for _ in 0..reps {
+                        let want = carrier.mul_const_cached(&cc, b, &mut sc);
+                        let got = packed.mul_packed(&cp, b, &mut sp);
+                        assert_eq!(got.to_bits(), want.to_bits(), "{cfg}: {a} × {b}");
+                        assert_units_equal(&carrier, &packed, "after packed mul");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_packed_pair_is_bit_identical_to_mul() {
+        for cfg in [R2f2Config::C16_393, R2f2Config::C16_384] {
+            let mut scalar = R2f2Multiplier::new(cfg);
+            let mut packed = R2f2Multiplier::new(cfg);
+            let mut rng = SplitMix64::new(0x7A);
+            for _ in 0..20_000 {
+                let s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                let a = s * rng.log_uniform(1e-8, 1e8);
+                let b = rng.log_uniform(1e-8, 1e8);
+                let want = scalar.mul(a, b);
+                let got = packed.mul_packed_pair(a, b);
+                assert_eq!(got.to_bits(), want.to_bits(), "{cfg}: {a} × {b}");
+                assert_units_equal(&scalar, &packed, "after packed pair mul");
             }
         }
     }

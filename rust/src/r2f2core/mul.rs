@@ -11,7 +11,10 @@
 //! Pallas kernel `python/compile/kernels/r2f2.py`.
 
 use super::repr::R2f2Config;
-use crate::softfloat::{mul::normalize_round_pack, Flags, Fp, Rounder};
+use crate::softfloat::{
+    mul::{normalize_round_pack, normalize_round_pack64},
+    Flags, Fp, Rounder,
+};
 
 /// Multiply two values packed in `cfg.format(k)`, applying the flexible
 /// partial-product truncation for split `k`.
@@ -40,6 +43,42 @@ pub fn mul_packed(a: Fp, b: Fp, cfg: R2f2Config, k: u32, r: &mut Rounder) -> (Fp
     }
 
     normalize_round_pack(p, sign, a.exp as i64 + b.exp as i64, fmt, r)
+}
+
+/// [`mul_packed`] with 64-bit intermediates — the packed-domain engine's
+/// datapath (DESIGN.md §9). For `m_w ≤ 30` (every valid `<EB,MB,FX>` at
+/// every split of the paper's configurations) the raw mantissa product fits
+/// `u64`, so the `u128` multiply and shifts of the specification path are
+/// avoided; wider splits fall back to [`mul_packed`]. Bit-identical either
+/// way, including the truncation mask and the rounding draw sequence.
+#[inline]
+pub(crate) fn mul_packed_fast(
+    a: Fp,
+    b: Fp,
+    cfg: R2f2Config,
+    k: u32,
+    r: &mut Rounder,
+) -> (Fp, Flags) {
+    let fmt = cfg.format(k);
+    if fmt.m_w > 30 {
+        return mul_packed(a, b, cfg, k, r);
+    }
+    let sign = a.sign ^ b.sign;
+    if a.is_zero() || b.is_zero() {
+        return (Fp::zero(sign), Flags::NONE);
+    }
+
+    let m_w = fmt.m_w;
+    let ia = (1u64 << m_w) | a.frac;
+    let ib = (1u64 << m_w) | b.frac;
+    let mut p = ia * ib; // 2·m_w + 2 ≤ 62 bits: fits u64
+
+    let t = cfg.trunc_bits(k);
+    if t > 0 {
+        p &= !((1u64 << t) - 1);
+    }
+
+    normalize_round_pack64(p, sign, a.exp as i64 + b.exp as i64, fmt, r)
 }
 
 #[cfg(test)]
@@ -136,6 +175,34 @@ mod tests {
         assert!(!fl.overflow());
         let v = decode(p, fmt);
         assert!((v - 1.2e19).abs() / 1.2e19 < 0.01, "v={v}");
+    }
+
+    #[test]
+    fn fast_datapath_matches_specification_all_splits() {
+        // The u64 packed-domain datapath must agree with the u128
+        // specification on every split, including truncating ones, zeros
+        // and range-event operands.
+        let mut rng = SplitMix64::new(0x2F);
+        for cfg in [R2f2Config::C16_393, R2f2Config::C16_384, R2f2Config::C14_373] {
+            for k in 0..=cfg.fx {
+                let fmt = cfg.format(k);
+                let mut r1 = Rounder::nearest_even();
+                let mut r2 = Rounder::nearest_even();
+                for i in 0..10_000 {
+                    let a = if i % 50 == 0 {
+                        Fp::zero((i % 100 == 0) as u8)
+                    } else {
+                        enc(rng.log_uniform(1e-8, 1e8), fmt)
+                    };
+                    let b = enc(rng.log_uniform(1e-8, 1e8), fmt);
+                    assert_eq!(
+                        mul_packed_fast(a, b, cfg, k, &mut r1),
+                        mul_packed(a, b, cfg, k, &mut r2),
+                        "{cfg} k={k} a={a:?} b={b:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

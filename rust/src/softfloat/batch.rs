@@ -18,9 +18,50 @@
 //! (e.g. `pde::FixedArith`) observe identical counters.
 
 use super::encode::{decode, encode};
-use super::format::{Flags, FpFormat};
+use super::format::{Flags, FpFormat, PackedFormat};
 use super::mul::mul;
+use super::packed;
 use super::round::Rounder;
+
+/// Packed-domain core of [`mul_batch_f`]: constant ⊗ slice through the
+/// word kernels (DESIGN.md §9), streaming each element's flag union to
+/// `on_flags(index, flags)`. Shared with `pde::FixedArith`'s batched
+/// engine so the encode → mul → decode → flag-union sequence exists once.
+pub fn mul_batch_packed(
+    a: f64,
+    xs: &[f64],
+    pf: &PackedFormat,
+    r: &mut Rounder,
+    out: &mut [f64],
+    mut on_flags: impl FnMut(usize, Flags),
+) {
+    assert_eq!(out.len(), xs.len());
+    let (wa, fla) = packed::encode_bits(a.to_bits(), pf, r);
+    for (i, (o, &x)) in out.iter_mut().zip(xs.iter()).enumerate() {
+        let (wb, flb) = packed::encode_bits(x.to_bits(), pf, r);
+        let (wc, flc) = packed::mul_packed(wa, wb, pf, r);
+        *o = packed::decode_word(wc, pf);
+        on_flags(i, fla | flb | flc);
+    }
+}
+
+/// Packed-domain core of [`mul_pairs_f`] — see [`mul_batch_packed`].
+pub fn mul_pairs_packed(
+    pairs: &[(f64, f64)],
+    pf: &PackedFormat,
+    r: &mut Rounder,
+    out: &mut [f64],
+    mut on_flags: impl FnMut(usize, Flags),
+) {
+    assert_eq!(out.len(), pairs.len());
+    for (i, (o, &(a, b))) in out.iter_mut().zip(pairs.iter()).enumerate() {
+        let (wa, fla) = packed::encode_bits(a.to_bits(), pf, r);
+        let (wb, flb) = packed::encode_bits(b.to_bits(), pf, r);
+        let (wc, flc) = packed::mul_packed(wa, wb, pf, r);
+        *o = packed::decode_word(wc, pf);
+        on_flags(i, fla | flb | flc);
+    }
+}
 
 /// `out[i] = a ⊗ xs[i]` in `fmt`, with `flags[i] = fla | flb_i | flc_i` —
 /// element-for-element bit-identical to calling
@@ -32,6 +73,13 @@ pub fn mul_batch_f(a: f64, xs: &[f64], fmt: FpFormat, out: &mut [f64], flags: &m
     assert_eq!(out.len(), xs.len());
     assert_eq!(flags.len(), xs.len());
     let mut r = Rounder::nearest_even();
+    if fmt.fits_word() {
+        // Packed-domain fast path (DESIGN.md §9): same transcode semantics,
+        // word kernels with 64-bit intermediates — bit-identical.
+        let pf = fmt.packed();
+        mul_batch_packed(a, xs, &pf, &mut r, out, |i, fl| flags[i] = fl);
+        return;
+    }
     let (fa, fla) = encode(a, fmt, &mut r);
     for i in 0..xs.len() {
         let (fb, flb) = encode(xs[i], fmt, &mut r);
@@ -50,6 +98,12 @@ pub fn mul_pairs_f(pairs: &[(f64, f64)], fmt: FpFormat, out: &mut [f64], flags: 
     assert_eq!(out.len(), pairs.len());
     assert_eq!(flags.len(), pairs.len());
     let mut r = Rounder::nearest_even();
+    if fmt.fits_word() {
+        // Packed-domain fast path — see `mul_batch_f`.
+        let pf = fmt.packed();
+        mul_pairs_packed(pairs, &pf, &mut r, out, |i, fl| flags[i] = fl);
+        return;
+    }
     for i in 0..pairs.len() {
         let (a, b) = pairs[i];
         let (fa, fla) = encode(a, fmt, &mut r);

@@ -5,7 +5,7 @@
 //! conversion for any [`FpFormat`]. `f64` is the carrier type so the same
 //! code also services the double-precision reference runs.
 
-use super::format::{pow2, Flags, Fp, FpFormat};
+use super::format::{Flags, Fp, FpFormat};
 use super::round::Rounder;
 
 const F64_FRAC_BITS: u32 = 52;
@@ -73,19 +73,25 @@ pub fn encode(x: f64, fmt: FpFormat, r: &mut Rounder) -> (Fp, Flags) {
 
 /// Decode a packed value back to `f64`. Exact: every representable value of
 /// every supported format is exactly representable in `f64`.
+///
+/// Implemented as **direct bit construction** — the format's fraction slides
+/// into the top of the f64 fraction field and the exponent is rebased — with
+/// no floating-point arithmetic on the path. The arithmetic construction
+/// `±(1 + frac/2^m_w)·2^e` it replaces cost an integer→float conversion, a
+/// division and a multiplication per value; both agree bit-for-bit on every
+/// codepoint of every supported format (`decode_bit_construction_matches_*`
+/// below verify this exhaustively), because every supported exponent lands
+/// in f64's normal range: `e − bias + 1023 ∈ [1, 2046]` for `e_w ≤ 11`.
 #[inline]
 pub fn decode(fp: Fp, fmt: FpFormat) -> f64 {
     if fp.is_zero() {
         return if fp.sign == 1 { -0.0 } else { 0.0 };
     }
-    let e = fp.exp as i64 - fmt.bias();
-    let m = 1.0 + fp.frac as f64 / (1u64 << fmt.m_w) as f64;
-    let v = m * pow2(e);
-    if fp.sign == 1 {
-        -v
-    } else {
-        v
-    }
+    let e_f64 = fp.exp as i64 - fmt.bias() + 1023;
+    debug_assert!((1..=2046).contains(&e_f64));
+    f64::from_bits(
+        ((fp.sign as u64) << 63) | ((e_f64 as u64) << 52) | (fp.frac << (52 - fmt.m_w)),
+    )
 }
 
 #[cfg(test)]
@@ -200,6 +206,71 @@ mod tests {
         let (fp, fl) = encode(65520.0, fmt, &mut r); // rounds to 65536
         assert!(fl.overflow());
         assert_eq!(decode(fp, fmt), 65504.0);
+    }
+
+    /// The arithmetic decode the bit construction replaced — kept as the
+    /// test oracle for the exhaustive equivalence sweeps.
+    fn decode_arith(fp: Fp, fmt: FpFormat) -> f64 {
+        use crate::softfloat::format::pow2;
+        if fp.is_zero() {
+            return if fp.sign == 1 { -0.0 } else { 0.0 };
+        }
+        let e = fp.exp as i64 - fmt.bias();
+        let m = 1.0 + fp.frac as f64 / (1u64 << fmt.m_w) as f64;
+        let v = m * pow2(e);
+        if fp.sign == 1 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    fn assert_decode_equivalent_exhaustive(fmt: FpFormat) {
+        for sign in 0..=1u8 {
+            for exp in 0..=fmt.max_biased_exp() as u32 {
+                for frac in 0..(1u64 << fmt.m_w) {
+                    let fp = Fp { sign, exp, frac };
+                    let got = decode(fp, fmt);
+                    let want = decode_arith(fp, fmt);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{fmt} sign={sign} exp={exp} frac={frac}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_bit_construction_matches_arithmetic_e5m10_exhaustive() {
+        // Every codepoint of E5M10 (2 × 31 × 1024 values incl. signed zero).
+        assert_decode_equivalent_exhaustive(FpFormat::E5M10);
+    }
+
+    #[test]
+    fn decode_bit_construction_matches_arithmetic_e4m3_exhaustive() {
+        assert_decode_equivalent_exhaustive(FpFormat::new(4, 3));
+    }
+
+    #[test]
+    fn decode_bit_construction_matches_arithmetic_extreme_widths() {
+        // Spot the corners the exhaustive formats cannot reach: the widest
+        // exponent (E11M52 — lossless f64 mirror) and a 1-bit fraction.
+        for fmt in [FpFormat::E11M52, FpFormat::new(2, 1), FpFormat::new(11, 1)] {
+            for sign in 0..=1u8 {
+                for exp in [1u32, 2, fmt.max_biased_exp() as u32] {
+                    for frac in [0u64, 1, (1u64 << fmt.m_w) - 1] {
+                        let fp = Fp { sign, exp, frac };
+                        assert_eq!(
+                            decode(fp, fmt).to_bits(),
+                            decode_arith(fp, fmt).to_bits(),
+                            "{fmt} {fp:?}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

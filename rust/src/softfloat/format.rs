@@ -87,6 +87,117 @@ impl FpFormat {
     pub fn max_finite(&self, sign: u8) -> Fp {
         Fp { sign, exp: self.max_biased_exp() as u32, frac: (1u64 << self.m_w) - 1 }
     }
+
+    /// Does the format fit one [`PackedFormat`] word (`total_bits ≤ 32`)?
+    /// Every format the packed-domain engine accelerates must; `E11M52`
+    /// (the f64 mirror) is the notable exception and falls back to the
+    /// carrier path.
+    pub const fn fits_word(&self) -> bool {
+        self.total_bits() <= 32
+    }
+
+    /// Precompute the packed-domain constant table for this format
+    /// (DESIGN.md §9). Panics unless [`FpFormat::fits_word`].
+    pub fn packed(&self) -> PackedFormat {
+        PackedFormat::new(*self)
+    }
+}
+
+/// Per-format constants precomputed once per batch/sweep so the
+/// packed-domain kernels (`softfloat::packed`) never re-derive shifts,
+/// masks or biases per element (DESIGN.md §9).
+///
+/// Values are stored as one `u32` word in the §3.1 wire layout
+/// `[sign | biased exponent | fraction]` (sign at bit `e_w + m_w`). Only
+/// formats with `total_bits ≤ 32` are supported — which also guarantees
+/// `m_w ≤ 29`, so every kernel intermediate (mantissa products of
+/// `2·m_w + 2` bits, aligned adder sums of `m_w + 5` bits) fits `u64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedFormat {
+    /// The format these constants were derived from.
+    pub fmt: FpFormat,
+    /// Stored fraction bits (`fmt.m_w`).
+    pub m_w: u32,
+    /// Exponent bits (`fmt.e_w`).
+    pub e_w: u32,
+    /// Exponent bias (`fmt.bias()`).
+    pub bias: i64,
+    /// Largest biased exponent of a finite value (`fmt.max_biased_exp()`).
+    pub max_biased_exp: i64,
+    /// `52 − m_w`: the right-shift aligning an f64 fraction to `m_w` bits
+    /// on encode (and the left-shift restoring it on decode).
+    pub frac_shift: u32,
+    /// `m_w`-bit fraction mask.
+    pub frac_mask: u32,
+    /// `e_w`-bit exponent-field mask.
+    pub exp_mask: u32,
+    /// Bit position of the sign in the word (`e_w + m_w`).
+    pub sign_shift: u32,
+    /// Mask of the magnitude bits (exponent + fraction, sign cleared).
+    pub mag_mask: u32,
+    /// Positive max-finite word (`[0 | 2^e_w − 2 | all-ones]`).
+    pub max_word: u32,
+}
+
+impl PackedFormat {
+    /// Derive the table. Panics when the format does not fit a `u32` word.
+    pub fn new(fmt: FpFormat) -> PackedFormat {
+        assert!(
+            fmt.fits_word(),
+            "packed-domain words require total_bits ≤ 32, got {} for {fmt}",
+            fmt.total_bits()
+        );
+        let sign_shift = fmt.e_w + fmt.m_w;
+        let frac_mask = (1u32 << fmt.m_w) - 1;
+        PackedFormat {
+            fmt,
+            m_w: fmt.m_w,
+            e_w: fmt.e_w,
+            bias: fmt.bias(),
+            max_biased_exp: fmt.max_biased_exp(),
+            frac_shift: 52 - fmt.m_w,
+            frac_mask,
+            exp_mask: (1u32 << fmt.e_w) - 1,
+            sign_shift,
+            mag_mask: (1u32 << sign_shift) - 1,
+            max_word: ((fmt.max_biased_exp() as u32) << fmt.m_w) | frac_mask,
+        }
+    }
+
+    /// The (signed) zero word.
+    #[inline]
+    pub fn zero_word(&self, sign: u32) -> u32 {
+        sign << self.sign_shift
+    }
+
+    /// The signed max-finite word (saturation target).
+    #[inline]
+    pub fn max_word_signed(&self, sign: u32) -> u32 {
+        (sign << self.sign_shift) | self.max_word
+    }
+
+    /// Flip a word's sign bit (exact negation — zero words flip too,
+    /// matching `-0.0`).
+    #[inline]
+    pub fn neg_word(&self, w: u32) -> u32 {
+        w ^ (1u32 << self.sign_shift)
+    }
+
+    /// Word → [`Fp`] (for interop with the carrier-path structs).
+    #[inline]
+    pub fn to_fp(&self, w: u32) -> Fp {
+        Fp {
+            sign: ((w >> self.sign_shift) & 1) as u8,
+            exp: (w >> self.m_w) & self.exp_mask,
+            frac: (w & self.frac_mask) as u64,
+        }
+    }
+
+    /// [`Fp`] → word.
+    #[inline]
+    pub fn from_fp(&self, fp: Fp) -> u32 {
+        ((fp.sign as u32) << self.sign_shift) | (fp.exp << self.m_w) | (fp.frac as u32)
+    }
 }
 
 impl fmt::Display for FpFormat {
@@ -258,5 +369,38 @@ mod tests {
     #[test]
     fn display_notation() {
         assert_eq!(FpFormat::E5M10.to_string(), "E5M10");
+    }
+
+    #[test]
+    fn packed_constants_match_format_derivation() {
+        for fmt in [FpFormat::E5M10, FpFormat::E8M7, FpFormat::E8M23, FpFormat::new(4, 3)] {
+            let pf = fmt.packed();
+            assert_eq!(pf.bias, fmt.bias());
+            assert_eq!(pf.max_biased_exp, fmt.max_biased_exp());
+            assert_eq!(pf.frac_shift, 52 - fmt.m_w);
+            assert_eq!(pf.sign_shift, fmt.e_w + fmt.m_w);
+            assert_eq!(pf.to_fp(pf.max_word), fmt.max_finite(0));
+            assert_eq!(pf.to_fp(pf.max_word_signed(1)), fmt.max_finite(1));
+            assert_eq!(pf.to_fp(pf.zero_word(1)), Fp::zero(1));
+        }
+    }
+
+    #[test]
+    fn packed_word_roundtrips_through_fp_and_wire_bits() {
+        let fmt = FpFormat::new(6, 9);
+        let pf = fmt.packed();
+        let v = Fp { sign: 1, exp: 37, frac: 0x1AB };
+        let w = pf.from_fp(v);
+        assert_eq!(pf.to_fp(w), v);
+        // The word IS the §3.1 wire layout.
+        assert_eq!(w as u64, v.to_bits(fmt));
+        assert_eq!(pf.neg_word(pf.neg_word(w)), w);
+        assert_eq!(pf.to_fp(pf.neg_word(w)).sign, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "total_bits")]
+    fn packed_rejects_oversized_formats() {
+        let _ = FpFormat::E11M52.packed();
     }
 }

@@ -19,19 +19,27 @@
 //!   overflow/underflow/inexact events.
 //!
 //! The `ExMy` notation follows the paper: `E5M10` is standard half.
+//!
+//! Two kernel families implement these semantics, bit-identically: the
+//! **carrier** path ([`encode`]/[`mul`]/[`add`]/[`decode`] on [`Fp`]
+//! structs — the specification) and the **packed-domain** path
+//! ([`packed`]: `u32`-word kernels with precomputed [`PackedFormat`]
+//! constants and 64-bit intermediates — the hot-path engine, DESIGN.md §9).
 
 pub mod add;
 pub mod batch;
 pub mod encode;
 pub mod format;
 pub mod mul;
+pub mod packed;
 pub mod round;
 
 pub use add::add;
 pub use batch::{mul_batch_f, mul_pairs_f};
 pub use encode::{decode, encode};
-pub use format::{Flags, Fp, FpFormat};
+pub use format::{Flags, Fp, FpFormat, PackedFormat};
 pub use mul::mul;
+pub use packed::PackedVec;
 pub use round::{Rounder, RoundingMode};
 
 /// Quantize an `f64` to the nearest representable value of `fmt`

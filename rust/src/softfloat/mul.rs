@@ -76,6 +76,44 @@ pub(crate) fn normalize_round_pack(
     (Fp { sign, exp: e as u32, frac }, flags)
 }
 
+/// [`normalize_round_pack`] with 64-bit intermediates — the packed-domain
+/// fast path (DESIGN.md §9). Valid for `m_w ≤ 30` (raw product ≤ 62 bits);
+/// bit-identical to the u128 version, including the stochastic rounding
+/// draw sequence (see [`Rounder::round_shift64`]).
+#[inline]
+pub(crate) fn normalize_round_pack64(
+    p: u64,
+    sign: u8,
+    exp_sum: i64,
+    fmt: FpFormat,
+    r: &mut Rounder,
+) -> (Fp, Flags) {
+    let m_w = fmt.m_w;
+    debug_assert!(m_w <= 30);
+    let mut flags = Flags::NONE;
+
+    let (shift, mut exp_inc) = if p >> (2 * m_w + 1) != 0 { (m_w + 1, 1i64) } else { (m_w, 0i64) };
+    let (mut frac_with_lead, inexact) = r.round_shift64(p, shift);
+    if inexact {
+        flags |= Flags::INEXACT;
+    }
+    if frac_with_lead >> (m_w + 1) != 0 {
+        frac_with_lead >>= 1; // 10.00..0 -> 1.000..0, exact
+        exp_inc += 1;
+    }
+    let frac = frac_with_lead & ((1u64 << m_w) - 1);
+
+    let e = exp_sum - (1i64 << (fmt.e_w - 1)) + 1 + exp_inc;
+
+    if e <= 0 {
+        return (Fp::zero(sign), flags | Flags::UNDERFLOW);
+    }
+    if e > fmt.max_biased_exp() {
+        return (fmt.max_finite(sign), flags | Flags::OVERFLOW);
+    }
+    (Fp { sign, exp: e as u32, frac }, flags)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

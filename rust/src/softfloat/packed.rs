@@ -1,0 +1,491 @@
+//! The packed-domain kernels (DESIGN.md §9).
+//!
+//! The PR-1 batched engine still pays the **carrier tax** on the hot path:
+//! every multiplication decodes packed operands to the `f64` carrier,
+//! re-encodes them, multiplies in the integer domain and decodes the product
+//! back. These kernels keep values **in** the packed representation — one
+//! `u32` word per element in the §3.1 wire layout `[sign | exp | frac]` —
+//! and do all arithmetic with 64-bit integer intermediates (`m_w ≤ 29` is
+//! guaranteed by [`PackedFormat`], so nothing needs `u128`).
+//!
+//! **Contract.** Every kernel is **bit-identical** to its carrier twin:
+//!
+//! * [`encode_bits`] ≡ [`encode`]`(f64::from_bits(bits), fmt, r)` packed to
+//!   a word — same value, same [`Flags`], same stochastic RNG draws;
+//! * [`mul_packed`] ≡ [`crate::softfloat::mul`] on the unpacked operands;
+//! * [`add_packed`] ≡ [`crate::softfloat::add`];
+//! * [`decode_word`] ≡ [`crate::softfloat::decode`].
+//!
+//! `rust/tests/packed_vs_carrier.rs` enforces this exhaustively for small
+//! formats and property-based over log-uniform regimes (including the
+//! saturate/flush boundaries) for the larger ones.
+
+use super::encode::encode;
+use super::format::{Flags, FpFormat, PackedFormat};
+use super::round::Rounder;
+
+const F64_FRAC_BITS: u32 = 52;
+const F64_EXP_MASK: u64 = 0x7FF;
+
+/// Guard + round + sticky bits carried through addition alignment (must
+/// match `softfloat::add`).
+const G: u32 = 3;
+
+/// Encode raw `f64` bits into a packed word with one correctly-rounded
+/// step — the branch-light twin of [`encode`] using the precomputed
+/// [`PackedFormat`] constants. Same values, same flags, same RNG draws.
+#[inline]
+pub fn encode_bits(bits: u64, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) {
+    let sign = ((bits >> 63) as u32) & 1;
+    let e_f64 = ((bits >> F64_FRAC_BITS) & F64_EXP_MASK) as i64;
+    let frac52 = bits & ((1u64 << F64_FRAC_BITS) - 1);
+
+    if e_f64 == 0 {
+        // Zero or f64 subnormal: flush.
+        let fl = if frac52 != 0 { Flags::UNDERFLOW } else { Flags::NONE };
+        return (pf.zero_word(sign), fl);
+    }
+    if e_f64 == F64_EXP_MASK as i64 {
+        if frac52 != 0 {
+            return (0, Flags::NAN_INPUT);
+        }
+        return (pf.max_word_signed(sign), Flags::OVERFLOW);
+    }
+
+    let mut flags = Flags::NONE;
+    // m_w ≤ 29 ⇒ frac_shift ≥ 23: the shifted rounding always runs.
+    let (f, inexact) = r.round_shift64(frac52, pf.frac_shift);
+    if inexact {
+        flags |= Flags::INEXACT;
+    }
+    let (frac, exp_carry) = if f >> pf.m_w != 0 {
+        (0u32, 1i64) // fraction rounded up to 2.0: renormalize
+    } else {
+        (f as u32, 0i64)
+    };
+
+    let e = e_f64 - 1023 + exp_carry + pf.bias;
+    if e <= 0 {
+        return (pf.zero_word(sign), flags | Flags::UNDERFLOW);
+    }
+    if e > pf.max_biased_exp {
+        return (pf.max_word_signed(sign), flags | Flags::OVERFLOW);
+    }
+    ((sign << pf.sign_shift) | ((e as u32) << pf.m_w) | frac, flags)
+}
+
+/// Encode a whole `f64` slice into packed words, appending per-element
+/// words and flags (both vectors are cleared first). One shared rounding
+/// context, constants hoisted — element-for-element bit-identical to
+/// calling [`encode`] in a loop.
+pub fn encode_slice_bits(
+    xs: &[f64],
+    pf: &PackedFormat,
+    r: &mut Rounder,
+    words: &mut Vec<u32>,
+    flags: &mut Vec<Flags>,
+) {
+    words.clear();
+    flags.clear();
+    words.reserve(xs.len());
+    flags.reserve(xs.len());
+    for &x in xs {
+        let (w, fl) = encode_bits(x.to_bits(), pf, r);
+        words.push(w);
+        flags.push(fl);
+    }
+}
+
+/// Decode a packed word back to `f64` by direct bit construction — the
+/// word's fraction slides into the top of the f64 fraction field and the
+/// exponent is rebased. No float arithmetic; exact.
+#[inline]
+pub fn decode_word(w: u32, pf: &PackedFormat) -> f64 {
+    let sign = ((w >> pf.sign_shift) & 1) as u64;
+    let exp = (w >> pf.m_w) & pf.exp_mask;
+    if exp == 0 {
+        return f64::from_bits(sign << 63);
+    }
+    let e_f64 = (exp as i64 - pf.bias + 1023) as u64;
+    let frac = (w & pf.frac_mask) as u64;
+    f64::from_bits((sign << 63) | (e_f64 << 52) | (frac << pf.frac_shift))
+}
+
+/// Shared tail of [`mul_packed`]: normalize the raw mantissa product,
+/// round, rebase the exponent, saturate/flush. Delegates to the one
+/// 64-bit implementation (`softfloat::mul::normalize_round_pack64`) and
+/// packs the result to a word — the repack is a few shifts, and keeping a
+/// single copy of the rounding algorithm keeps the bit-identity contract
+/// un-forkable.
+#[inline]
+pub(crate) fn normalize_round_pack_word(
+    p: u64,
+    sign: u32,
+    exp_sum: i64,
+    pf: &PackedFormat,
+    r: &mut Rounder,
+) -> (u32, Flags) {
+    let (fp, flags) = super::mul::normalize_round_pack64(p, sign as u8, exp_sum, pf.fmt, r);
+    (pf.from_fp(fp), flags)
+}
+
+/// Multiply two packed words with one rounding step — the word-domain twin
+/// of [`crate::softfloat::mul`], operating on `[sign|exp|frac]` words
+/// directly with no decode.
+#[inline]
+pub fn mul_packed(wa: u32, wb: u32, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) {
+    let sign = ((wa ^ wb) >> pf.sign_shift) & 1;
+    let ea = (wa >> pf.m_w) & pf.exp_mask;
+    let eb = (wb >> pf.m_w) & pf.exp_mask;
+    if ea == 0 || eb == 0 {
+        return (pf.zero_word(sign), Flags::NONE);
+    }
+
+    let lead = 1u64 << pf.m_w;
+    let ia = lead | (wa & pf.frac_mask) as u64;
+    let ib = lead | (wb & pf.frac_mask) as u64;
+    let p = ia * ib; // ≤ 2·m_w + 2 ≤ 60 bits: fits u64
+
+    normalize_round_pack_word(p, sign, ea as i64 + eb as i64, pf, r)
+}
+
+/// Add two packed words with one rounding step — the word-domain twin of
+/// [`crate::softfloat::add`] (align–add–normalize–round with
+/// guard/round/sticky bits), including its signed-zero conventions.
+pub fn add_packed(wa: u32, wb: u32, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) {
+    let sa = (wa >> pf.sign_shift) & 1;
+    let sb = (wb >> pf.sign_shift) & 1;
+    let mag_a = wa & pf.mag_mask;
+    let mag_b = wb & pf.mag_mask;
+    if mag_a >> pf.m_w == 0 && mag_b >> pf.m_w == 0 {
+        return (pf.zero_word(sa & sb), Flags::NONE);
+    }
+    if mag_a >> pf.m_w == 0 {
+        return (wb, Flags::NONE);
+    }
+    if mag_b >> pf.m_w == 0 {
+        return (wa, Flags::NONE);
+    }
+
+    // Order by magnitude so `hi` dominates the result sign; the word's
+    // magnitude bits ARE the (exp, frac) lexicographic key.
+    let (hs, hmag, lmag) = if mag_a >= mag_b { (sa, mag_a, mag_b) } else { (sb, mag_b, mag_a) };
+    let m_w = pf.m_w;
+    let lead = 1u64 << m_w;
+    let mhi = (lead | (hmag & pf.frac_mask) as u64) << G;
+    let mlo_full = lead | (lmag & pf.frac_mask) as u64;
+    let hexp = (hmag >> m_w) as i64;
+    let d = (hmag >> m_w) - (lmag >> m_w);
+
+    // Align the smaller operand, collapsing shifted-out bits into sticky.
+    let mlo = if d == 0 {
+        mlo_full << G
+    } else if d >= m_w + G + 2 {
+        1 // pure sticky: lo is non-zero but far below the guard bits
+    } else {
+        let full = mlo_full << G;
+        (full >> d) | u64::from(full & ((1u64 << d) - 1) != 0)
+    };
+
+    let mut flags = Flags::NONE;
+    if sa == sb {
+        // Effective addition: sum ∈ [2^(m_w+G+1), 2^(m_w+G+2)).
+        let sum = mhi + mlo;
+        let (shift, exp_inc) =
+            if sum >> (m_w + G + 1) != 0 { (G + 1, 1i64) } else { (G, 0i64) };
+        let (val, inexact) = r.round_shift64(sum, shift);
+        if inexact {
+            flags |= Flags::INEXACT;
+        }
+        pack_word(val, hs, hexp + exp_inc, pf, flags)
+    } else {
+        // Effective subtraction; exact cancellation gives +0.
+        let diff = mhi - mlo;
+        if diff == 0 {
+            return (0, flags);
+        }
+        let msb = 63 - diff.leading_zeros();
+        let target = m_w + G;
+        debug_assert!(msb <= target);
+        let lshift = target - msb;
+        let e = hexp - lshift as i64;
+        if e <= 0 {
+            return (pf.zero_word(hs), flags | Flags::UNDERFLOW);
+        }
+        let (val, inexact) = r.round_shift64(diff << lshift, G);
+        if inexact {
+            flags |= Flags::INEXACT;
+        }
+        pack_word(val, hs, e, pf, flags)
+    }
+}
+
+/// Common tail of [`add_packed`]: post-rounding renormalize carry, range
+/// check, pack — the word twin of `softfloat::add`'s `pack`.
+#[inline]
+fn pack_word(mut val: u64, sign: u32, mut e: i64, pf: &PackedFormat, flags: Flags) -> (u32, Flags) {
+    if val >> (pf.m_w + 1) != 0 {
+        val >>= 1; // 10.00…0 — exact
+        e += 1;
+    }
+    debug_assert!(val >> pf.m_w == 1, "normalized significand expected");
+    if e <= 0 {
+        return (pf.zero_word(sign), flags | Flags::UNDERFLOW);
+    }
+    if e > pf.max_biased_exp {
+        return (pf.max_word_signed(sign), flags | Flags::OVERFLOW);
+    }
+    ((sign << pf.sign_shift) | ((e as u32) << pf.m_w) | (val as u32 & pf.frac_mask), flags)
+}
+
+/// A state vector living in the packed domain: one `u32` word per element
+/// in the §3.1 wire layout, plus the constant table of the format it is
+/// packed in. This is what the packed solver paths keep across
+/// `QuantMode::Full` timesteps instead of bouncing every node through the
+/// `f64` carrier.
+///
+/// ```
+/// use r2f2::softfloat::{FpFormat, PackedVec, Rounder};
+///
+/// let mut r = Rounder::nearest_even();
+/// let (v, flags) = PackedVec::encode(&[1.0, -2.5, 0.0], FpFormat::E5M10, &mut r);
+/// assert!(flags.iter().all(|f| f.is_empty()));
+/// let mut out = [0.0f64; 3];
+/// v.decode_into(&mut out);
+/// assert_eq!(out, [1.0, -2.5, 0.0]);
+/// ```
+#[derive(Debug, Clone)]
+pub struct PackedVec {
+    pf: PackedFormat,
+    words: Vec<u32>,
+}
+
+impl PackedVec {
+    /// An empty vector in `fmt` (panics unless [`FpFormat::fits_word`]).
+    pub fn new(fmt: FpFormat) -> PackedVec {
+        PackedVec { pf: PackedFormat::new(fmt), words: Vec::new() }
+    }
+
+    /// Encode an `f64` slice, returning the packed vector and the
+    /// per-element encode flags.
+    pub fn encode(xs: &[f64], fmt: FpFormat, r: &mut Rounder) -> (PackedVec, Vec<Flags>) {
+        let mut v = PackedVec::new(fmt);
+        let mut flags = Vec::new();
+        encode_slice_bits(xs, &v.pf, r, &mut v.words, &mut flags);
+        (v, flags)
+    }
+
+    /// Re-encode in place from an `f64` slice (flags appended to `flags`).
+    pub fn encode_from(&mut self, xs: &[f64], r: &mut Rounder, flags: &mut Vec<Flags>) {
+        let pf = self.pf;
+        encode_slice_bits(xs, &pf, r, &mut self.words, flags);
+    }
+
+    /// Decode every element into `out` (must match in length). Exact.
+    pub fn decode_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.words.len());
+        for (o, &w) in out.iter_mut().zip(self.words.iter()) {
+            *o = decode_word(w, &self.pf);
+        }
+    }
+
+    /// The constant table of the format this vector is packed in.
+    pub fn packed_format(&self) -> &PackedFormat {
+        &self.pf
+    }
+
+    /// The format this vector is packed in.
+    pub fn format(&self) -> FpFormat {
+        self.pf.fmt
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// The raw words (wire layout, low bits = fraction).
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Mutable access for in-place kernels.
+    pub fn words_mut(&mut self) -> &mut Vec<u32> {
+        &mut self.words
+    }
+}
+
+/// Convenience for tests and interop: encode one `f64` through the carrier
+/// [`encode`] and pack the result to a word — the value [`encode_bits`]
+/// must reproduce.
+pub fn encode_via_carrier(x: f64, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) {
+    let (fp, fl) = encode(x, pf.fmt, r);
+    (pf.from_fp(fp), fl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::softfloat::{add as carrier_add, decode, mul as carrier_mul};
+
+    fn formats() -> Vec<FpFormat> {
+        vec![
+            FpFormat::E5M10,
+            FpFormat::new(4, 3),
+            FpFormat::new(6, 9),
+            FpFormat::E8M7,
+            FpFormat::E8M23,
+        ]
+    }
+
+    #[test]
+    fn encode_bits_matches_carrier_on_nasty_values() {
+        let specials = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            65520.0,
+            6.103515625e-5,
+            1e-30,
+            1e30,
+            2047.9999,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MIN_POSITIVE / 4.0, // f64 subnormal
+            f64::MAX,
+        ];
+        for fmt in formats() {
+            let pf = fmt.packed();
+            let mut ra = Rounder::nearest_even();
+            let mut rb = Rounder::nearest_even();
+            for &x in &specials {
+                let (got_w, got_fl) = encode_bits(x.to_bits(), &pf, &mut ra);
+                let (want_w, want_fl) = encode_via_carrier(x, &pf, &mut rb);
+                assert_eq!((got_w, got_fl), (want_w, want_fl), "{fmt}: x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_bits_matches_carrier_random_all_modes() {
+        let mut rng = SplitMix64::new(0x915);
+        for fmt in formats() {
+            let pf = fmt.packed();
+            for seed in [1u64, 2, 3] {
+                let mut ra = Rounder::stochastic(seed);
+                let mut rb = Rounder::stochastic(seed);
+                for _ in 0..5_000 {
+                    let x = f64::from_bits(rng.next_u64());
+                    let (gw, gf) = encode_bits(x.to_bits(), &pf, &mut ra);
+                    let (ww, wf) = encode_via_carrier(x, &pf, &mut rb);
+                    assert_eq!((gw, gf), (ww, wf), "{fmt}: x={x:e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_word_matches_carrier_exhaustive_e5m10() {
+        let fmt = FpFormat::E5M10;
+        let pf = fmt.packed();
+        for w in 0..(1u32 << fmt.total_bits()) {
+            let fp = pf.to_fp(w);
+            if fp.exp as i64 > fmt.max_biased_exp() {
+                continue; // reserved all-ones exponent never occurs
+            }
+            let got = decode_word(w, &pf);
+            let want = decode(fp, fmt);
+            assert_eq!(got.to_bits(), want.to_bits(), "w={w:#x}");
+        }
+    }
+
+    #[test]
+    fn mul_packed_matches_carrier_exhaustive_e4m3() {
+        // Every ordered pair of E4M3 codepoints (256 × 256).
+        let fmt = FpFormat::new(4, 3);
+        let pf = fmt.packed();
+        let mut ra = Rounder::nearest_even();
+        let mut rb = Rounder::nearest_even();
+        for wa in 0..(1u32 << fmt.total_bits()) {
+            let fa = pf.to_fp(wa);
+            if fa.exp as i64 > fmt.max_biased_exp() {
+                continue;
+            }
+            for wb in 0..(1u32 << fmt.total_bits()) {
+                let fb = pf.to_fp(wb);
+                if fb.exp as i64 > fmt.max_biased_exp() {
+                    continue;
+                }
+                let (gw, gf) = mul_packed(wa, wb, &pf, &mut ra);
+                let (wfp, wf) = carrier_mul(fa, fb, fmt, &mut rb);
+                assert_eq!((pf.to_fp(gw), gf), (wfp, wf), "{wa:#x} × {wb:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_packed_matches_carrier_exhaustive_e4m3() {
+        let fmt = FpFormat::new(4, 3);
+        let pf = fmt.packed();
+        let mut ra = Rounder::nearest_even();
+        let mut rb = Rounder::nearest_even();
+        for wa in 0..(1u32 << fmt.total_bits()) {
+            let fa = pf.to_fp(wa);
+            if fa.exp as i64 > fmt.max_biased_exp() {
+                continue;
+            }
+            for wb in 0..(1u32 << fmt.total_bits()) {
+                let fb = pf.to_fp(wb);
+                if fb.exp as i64 > fmt.max_biased_exp() {
+                    continue;
+                }
+                let (gw, gf) = add_packed(wa, wb, &pf, &mut ra);
+                let (wfp, wf) = carrier_add(fa, fb, fmt, &mut rb);
+                assert_eq!((pf.to_fp(gw), gf), (wfp, wf), "{wa:#x} + {wb:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_vec_roundtrip_preserves_representable_values() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let xs: Vec<f64> = vec![1.0, -2.5, 0.0, -0.0, 65504.0, 6.103515625e-5];
+        let (v, flags) = PackedVec::encode(&xs, fmt, &mut r);
+        assert_eq!(v.len(), xs.len());
+        assert!(flags.iter().all(|f| f.is_empty()));
+        let mut out = vec![0.0; xs.len()];
+        v.decode_into(&mut out);
+        for (a, b) in xs.iter().zip(out.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn packed_vec_flags_report_range_events() {
+        let fmt = FpFormat::E5M10;
+        let mut r = Rounder::nearest_even();
+        let (_, flags) = PackedVec::encode(&[1e6, 1e-6, 1.5], fmt, &mut r);
+        assert!(flags[0].overflow());
+        assert!(flags[1].underflow());
+        assert!(flags[2].is_empty());
+    }
+
+    #[test]
+    fn neg_word_is_exact_negation() {
+        let fmt = FpFormat::E5M10;
+        let pf = fmt.packed();
+        let mut r = Rounder::nearest_even();
+        for &x in &[1.5, -3.25, 0.0, -0.0, 65504.0] {
+            let (w, _) = encode_bits(x.to_bits(), &pf, &mut r);
+            assert_eq!(decode_word(pf.neg_word(w), &pf).to_bits(), (-x).to_bits(), "x={x}");
+        }
+    }
+}

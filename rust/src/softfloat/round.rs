@@ -85,6 +85,38 @@ impl Rounder {
         };
         (kept + up as u64, true)
     }
+
+    /// [`Rounder::round_shift`] restricted to 64-bit intermediates
+    /// (`shift < 64`) — the packed-domain kernels' fast path (DESIGN.md §9).
+    ///
+    /// Bit-identical to the u128 version for every mode, **including the
+    /// stochastic RNG draw sequence**: both draw exactly one `next_u64` per
+    /// inexact rounding when `shift < 64`, masked the same way, so a packed
+    /// kernel and its carrier twin sharing a `Rounder` stay in lockstep.
+    #[inline]
+    pub fn round_shift64(&mut self, value: u64, shift: u32) -> (u64, bool) {
+        debug_assert!(shift < 64);
+        if shift == 0 {
+            return (value, false);
+        }
+        let kept = value >> shift;
+        let lost = value & ((1u64 << shift) - 1);
+        if lost == 0 {
+            return (kept, false);
+        }
+        let up = match self.mode {
+            RoundingMode::TowardZero => false,
+            RoundingMode::NearestEven => {
+                let half = 1u64 << (shift - 1);
+                lost > half || (lost == half && kept & 1 == 1)
+            }
+            RoundingMode::Stochastic => {
+                let r = self.rng.next_u64() & ((1u64 << shift) - 1);
+                r < lost
+            }
+        };
+        (kept + up as u64, true)
+    }
 }
 
 #[cfg(test)]
@@ -143,5 +175,23 @@ mod tests {
         let mut r = Rounder::nearest_even();
         let v = (1u128 << 100) + (1u128 << 99); // 1.5 * 2^100
         assert_eq!(r.round_shift(v, 100), (2, true)); // ties to even -> 2
+    }
+
+    #[test]
+    fn round_shift64_matches_round_shift_all_modes() {
+        // The packed kernels' 64-bit rounding must agree with the u128
+        // reference bit-for-bit, including the stochastic draw sequence.
+        let mut mk = crate::rng::SplitMix64::new(0x64);
+        for (mut a, mut b) in [
+            (Rounder::nearest_even(), Rounder::nearest_even()),
+            (Rounder::toward_zero(), Rounder::toward_zero()),
+            (Rounder::stochastic(77), Rounder::stochastic(77)),
+        ] {
+            for _ in 0..20_000 {
+                let v = mk.next_u64() >> (mk.below(40) as u32);
+                let s = mk.below(40) as u32;
+                assert_eq!(a.round_shift(v as u128, s), b.round_shift64(v, s), "v={v} s={s}");
+            }
+        }
     }
 }

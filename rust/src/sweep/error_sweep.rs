@@ -7,6 +7,7 @@
 //! R2F2 multiplier and of its fixed-type counterpart, then report the
 //! per-interval error-reduction distribution of Fig. 6(g).
 
+use crate::coordinator::{default_workers, parallel_map};
 use crate::pde::{Arith, FixedArith, R2f2Arith};
 use crate::r2f2core::R2f2Config;
 use crate::rng::SplitMix64;
@@ -22,12 +23,24 @@ pub struct SweepParams {
     /// Random operand pairs per interval.
     pub pairs: usize,
     pub seed: u64,
+    /// Worker threads the intervals are sharded over
+    /// (`coordinator::parallel_map`). Results are **bit-identical for any
+    /// worker count**: every interval draws from its own seed, derived
+    /// sequentially from `seed`.
+    pub workers: usize,
 }
 
 impl Default for SweepParams {
     fn default() -> SweepParams {
         // The paper's full sweep. Benches use this; unit tests shrink it.
-        SweepParams { lo: 1e-4, hi: 1e4, intervals: 10_000, pairs: 1000, seed: 0x516 }
+        SweepParams {
+            lo: 1e-4,
+            hi: 1e4,
+            intervals: 10_000,
+            pairs: 1000,
+            seed: 0x516,
+            workers: default_workers(),
+        }
     }
 }
 
@@ -84,15 +97,28 @@ pub struct SweepResult {
 }
 
 /// Run the sweep for one R2F2 configuration against one fixed format.
+///
+/// The 10K intervals are independent by construction (fresh units, one RNG
+/// stream per interval seeded from `p.seed`), so they shard over
+/// `p.workers` threads via `coordinator::parallel_map` with bit-identical
+/// results for any worker count. Each interval's pair stream runs through
+/// the packed-domain `mul_pairs` engine (DESIGN.md §9) — bit-identical to
+/// per-call multiplication.
 pub fn error_sweep(cfg: R2f2Config, fixed: FpFormat, p: &SweepParams) -> SweepResult {
-    let mut rng = SplitMix64::new(p.seed);
     let log_lo = p.lo.ln();
     let step = (p.hi.ln() - log_lo) / p.intervals as f64;
 
-    let mut intervals = Vec::with_capacity(p.intervals);
-    for i in 0..p.intervals {
+    // Deterministic sharding: per-interval seeds are drawn sequentially
+    // from the root seed, so the sampled operands do not depend on how the
+    // intervals are distributed across workers.
+    let mut root = SplitMix64::new(p.seed);
+    let jobs: Vec<(usize, u64)> = (0..p.intervals).map(|i| (i, root.next_u64())).collect();
+    let pairs_n = p.pairs;
+
+    let intervals = parallel_map(jobs, p.workers.max(1), |(i, seed)| {
         let ilo = (log_lo + step * i as f64).exp();
         let ihi = (log_lo + step * (i + 1) as f64).exp();
+        let mut rng = SplitMix64::new(seed);
 
         // Fresh units per interval: the sweep measures steady-state
         // accuracy on locally-clustered data (the paper's premise), with
@@ -100,35 +126,32 @@ pub fn error_sweep(cfg: R2f2Config, fixed: FpFormat, p: &SweepParams) -> SweepRe
         let mut r2f2 = R2f2Arith::new(cfg);
         let mut fix = FixedArith::new(fixed);
 
-        // Each unit sees the interval's pair stream as one batch through
-        // the engine (DESIGN.md §8); per-unit order — and therefore every
-        // result and adjustment — is identical to per-call multiplication.
-        let mut pairs = Vec::with_capacity(p.pairs);
-        let mut wants = Vec::with_capacity(p.pairs);
-        for _ in 0..p.pairs {
+        let mut pairs = Vec::with_capacity(pairs_n);
+        let mut wants = Vec::with_capacity(pairs_n);
+        for _ in 0..pairs_n {
             let a = rng.range_f64(ilo, ihi);
             let b = rng.range_f64(ilo, ihi);
             pairs.push((a, b));
             wants.push((a as f32 * b as f32) as f64);
         }
-        let mut got_f = vec![0.0; p.pairs];
-        let mut got_r = vec![0.0; p.pairs];
+        let mut got_f = vec![0.0; pairs_n];
+        let mut got_r = vec![0.0; pairs_n];
         fix.mul_pairs(&mut got_f, &pairs);
         r2f2.mul_pairs(&mut got_r, &pairs);
 
         let mut sum_f = 0.0;
         let mut sum_r = 0.0;
-        for idx in 0..p.pairs {
+        for idx in 0..pairs_n {
             sum_f += rel_err(got_f[idx], wants[idx]);
             sum_r += rel_err(got_r[idx], wants[idx]);
         }
-        intervals.push(IntervalResult {
+        IntervalResult {
             lo: ilo,
             hi: ihi,
-            err_fixed: sum_f / p.pairs as f64,
-            err_r2f2: sum_r / p.pairs as f64,
-        });
-    }
+            err_fixed: sum_f / pairs_n as f64,
+            err_r2f2: sum_r / pairs_n as f64,
+        }
+    });
 
     let reductions: Vec<f64> = intervals.iter().map(IntervalResult::reduction).collect();
     let avg = reductions.iter().sum::<f64>() / reductions.len() as f64;
@@ -244,5 +267,30 @@ mod tests {
         let a = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
         let b = error_sweep(R2f2Config::C16_393, FpFormat::E5M10, &quick());
         assert_eq!(a.avg_reduction, b.avg_reduction);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        // Sharding is an implementation detail: the per-interval seed
+        // derivation makes every aggregate bit-identical no matter how many
+        // workers the intervals land on.
+        let results: Vec<_> = [1usize, 2, 5, 8]
+            .iter()
+            .map(|&w| {
+                error_sweep(
+                    R2f2Config::C16_393,
+                    FpFormat::E5M10,
+                    &SweepParams { workers: w, ..quick() },
+                )
+            })
+            .collect();
+        for r in &results[1..] {
+            assert_eq!(r.avg_reduction.to_bits(), results[0].avg_reduction.to_bits());
+            assert_eq!(r.global_reduction.to_bits(), results[0].global_reduction.to_bits());
+            for (a, b) in r.intervals.iter().zip(results[0].intervals.iter()) {
+                assert_eq!(a.err_fixed.to_bits(), b.err_fixed.to_bits());
+                assert_eq!(a.err_r2f2.to_bits(), b.err_r2f2.to_bits());
+            }
+        }
     }
 }

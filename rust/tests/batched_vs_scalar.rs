@@ -10,7 +10,9 @@
 use r2f2::pde::heat1d::{self, HeatParams};
 use r2f2::pde::init::HeatInit;
 use r2f2::pde::swe2d::{self, QuantScope, SweParams};
-use r2f2::pde::{Arith, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith, StochasticArith};
+use r2f2::pde::{
+    Arith, BatchEngine, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith, StochasticArith,
+};
 use r2f2::r2f2core::R2f2Config;
 use r2f2::softfloat::FpFormat;
 
@@ -28,14 +30,31 @@ fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
 }
 
 /// Every backend under test, freshly constructed per call so scalar and
-/// batched runs start from identical state.
+/// batched runs start from identical state. Both batched engines are
+/// represented: the default packed engine (DESIGN.md §9) and the frozen
+/// PR-1 carrier engine.
+#[allow(clippy::type_complexity)]
 fn backends() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn Arith>>)> {
     vec![
         ("f64", Box::new(|| Box::new(F64Arith) as Box<dyn Arith>)),
         ("f32", Box::new(|| Box::new(F32Arith) as Box<dyn Arith>)),
         ("fixed E5M10", Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)) as Box<dyn Arith>)),
+        (
+            "fixed E5M10 carrier",
+            Box::new(|| {
+                Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
+                    as Box<dyn Arith>
+            }),
+        ),
         ("fixed E6M9", Box::new(|| Box::new(FixedArith::new(FpFormat::new(6, 9))) as Box<dyn Arith>)),
         ("r2f2 <3,9,3>", Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>)),
+        (
+            "r2f2 <3,9,3> carrier",
+            Box::new(|| {
+                Box::new(R2f2Arith::new(R2f2Config::C16_393).with_engine(BatchEngine::Carrier))
+                    as Box<dyn Arith>
+            }),
+        ),
         ("r2f2 <3,8,4>", Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>)),
         ("E5M10-sr", Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 11)) as Box<dyn Arith>)),
     ]
@@ -131,6 +150,48 @@ fn swe_bit_identical_both_scopes() {
             assert_eq!(s.range_events, b.range_events, "{what}: range events");
             assert_eq!(s.mass_drift.to_bits(), b.mass_drift.to_bits(), "{what}: mass drift");
         }
+    }
+}
+
+#[test]
+fn swe_bit_identical_full_mode() {
+    // QuantMode::Full on the shallow-water flux (the adder ablation): the
+    // final combine of every quantized flux runs through the backend too,
+    // and the batched engines must still replay the scalar stream exactly —
+    // including the stochastic-rounding backend, whose RNG draw sequence is
+    // part of the contract.
+    let p = SweParams { steps: 20, ..SweParams::default() };
+    for scope in [QuantScope::UxFluxOnly, QuantScope::AllFluxMuls] {
+        for (name, mk) in &backends() {
+            let mut scalar_be = mk();
+            let mut batched_be = mk();
+            let s = swe2d::run_scalar_mode(&p, scalar_be.as_mut(), scope, QuantMode::Full);
+            let b = swe2d::run_mode(&p, batched_be.as_mut(), scope, QuantMode::Full);
+            let what = format!("swe-full/{name}/{scope:?}");
+            assert_bits_eq(&s.h, &b.h, &format!("{what}: h"));
+            assert_bits_eq(&s.u, &b.u, &format!("{what}: u"));
+            assert_bits_eq(&s.v, &b.v, &format!("{what}: v"));
+            assert_eq!(s.muls, b.muls, "{what}: muls");
+            assert_eq!(s.r2f2_stats, b.r2f2_stats, "{what}: r2f2 stats");
+            assert_eq!(s.range_events, b.range_events, "{what}: range events");
+            assert_eq!(s.mass_drift.to_bits(), b.mass_drift.to_bits(), "{what}: mass drift");
+        }
+    }
+}
+
+#[test]
+fn heat_bit_identical_full_mode_stochastic_long_run() {
+    // Stochastic rounding consumes one RNG draw per inexact rounding, so a
+    // long Full-mode run is the sharpest detector of any packed/batched
+    // path issuing a different operation stream.
+    let p = HeatParams { n: 65, dt: 0.25 / (64.0f64 * 64.0), steps: 800, ..HeatParams::default() };
+    for mode in [QuantMode::MulOnly, QuantMode::Full] {
+        let mut a = StochasticArith::new(FpFormat::E5M10, 0x5EED);
+        let mut b = StochasticArith::new(FpFormat::E5M10, 0x5EED);
+        let s = heat1d::run_scalar(&p, &mut a, mode);
+        let g = heat1d::run(&p, &mut b, mode);
+        assert_bits_eq(&s.u, &g.u, &format!("stochastic-{mode:?}"));
+        assert_eq!(s.range_events, g.range_events, "stochastic-{mode:?}: events");
     }
 }
 

@@ -1,0 +1,318 @@
+//! The packed-domain engine contract (DESIGN.md §9): the carrier path is
+//! the **specification**, the packed path is only an implementation. For
+//! every kernel and every backend, packed execution must produce
+//! **bit-identical values**, identical [`Flags`], identical R2F2 [`Stats`]
+//! and identical fixed-format [`RangeEvents`] (with the scalar event
+//! *multiplicity*) — across the backend × mode × regime matrix, the same
+//! way `batched_vs_scalar.rs` froze §8.
+
+use r2f2::pde::heat1d::{self, HeatParams};
+use r2f2::pde::init::HeatInit;
+use r2f2::pde::swe2d::{self, QuantScope, SweParams};
+use r2f2::pde::{Arith, BatchEngine, FixedArith, QuantMode, R2f2Arith};
+use r2f2::proptest_mini::{check, Gen};
+use r2f2::r2f2core::R2f2Config;
+use r2f2::softfloat::{
+    add as carrier_add, decode, encode, mul as carrier_mul, packed, FpFormat, Rounder,
+    RoundingMode,
+};
+
+// ---------------------------------------------------------------------------
+// Kernel level: word kernels vs carrier kernels
+// ---------------------------------------------------------------------------
+
+fn kernel_formats() -> Vec<FpFormat> {
+    vec![
+        FpFormat::E5M10,
+        FpFormat::new(4, 3),
+        FpFormat::new(6, 9),
+        FpFormat::E8M7,
+        FpFormat::E8M23,
+        FpFormat::new(2, 1),
+    ]
+}
+
+fn rounder_pair(mode: RoundingMode, seed: u64) -> (Rounder, Rounder) {
+    (Rounder::new(mode, seed), Rounder::new(mode, seed))
+}
+
+#[test]
+fn encode_bits_matches_encode_on_log_uniform_regimes() {
+    // Log-uniform magnitudes spanning far past every format's range, so
+    // the saturate (OVERFLOW) and flush (UNDERFLOW) boundaries are hit
+    // constantly — plus zeros, infinities, NaNs and raw bit patterns.
+    for fmt in kernel_formats() {
+        let pf = fmt.packed();
+        for mode in [RoundingMode::NearestEven, RoundingMode::TowardZero, RoundingMode::Stochastic]
+        {
+            let (mut ra, mut rb) = rounder_pair(mode, 0xABC);
+            check(&format!("encode-bits-{fmt}-{mode:?}"), 4000, |g: &mut Gen| {
+                let x = g.f64_nasty();
+                let (gw, gf) = packed::encode_bits(x.to_bits(), &pf, &mut ra);
+                let (wfp, wf) = encode(x, fmt, &mut rb);
+                if (pf.to_fp(gw), gf) == (wfp, wf) {
+                    Ok(())
+                } else {
+                    Err(format!("x={x:e}: packed ({gw:#x}, {gf:?}) vs carrier ({wfp:?}, {wf:?})"))
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn mul_packed_matches_carrier_on_log_uniform_regimes() {
+    for fmt in kernel_formats() {
+        let pf = fmt.packed();
+        for mode in [RoundingMode::NearestEven, RoundingMode::TowardZero, RoundingMode::Stochastic]
+        {
+            let (mut ra, mut rb) = rounder_pair(mode, 0x3114);
+            check(&format!("mul-packed-{fmt}-{mode:?}"), 4000, |g: &mut Gen| {
+                // Operands spanning twelve decades either side of 1.0 drive
+                // products across both range boundaries of every format.
+                let a = if g.below(20) == 0 { 0.0 } else { g.f64_signed_log(1e-12, 1e12) };
+                let b = g.f64_signed_log(1e-12, 1e12);
+                let (wa, _) = encode(a, fmt, &mut Rounder::nearest_even());
+                let (wb, _) = encode(b, fmt, &mut Rounder::nearest_even());
+                let (gw, gf) = packed::mul_packed(pf.from_fp(wa), pf.from_fp(wb), &pf, &mut ra);
+                let (wfp, wf) = carrier_mul(wa, wb, fmt, &mut rb);
+                if (pf.to_fp(gw), gf) == (wfp, wf) {
+                    Ok(())
+                } else {
+                    Err(format!("{a:e} × {b:e}: packed flags {gf:?} vs carrier {wf:?}"))
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn add_packed_matches_carrier_on_log_uniform_regimes() {
+    for fmt in kernel_formats() {
+        let pf = fmt.packed();
+        for mode in [RoundingMode::NearestEven, RoundingMode::TowardZero, RoundingMode::Stochastic]
+        {
+            let (mut ra, mut rb) = rounder_pair(mode, 0xADD);
+            check(&format!("add-packed-{fmt}-{mode:?}"), 4000, |g: &mut Gen| {
+                let a = if g.below(20) == 0 { 0.0 } else { g.f64_signed_log(1e-10, 1e10) };
+                let b = if g.below(20) == 0 { -0.0 } else { g.f64_signed_log(1e-10, 1e10) };
+                let (fa, _) = encode(a, fmt, &mut Rounder::nearest_even());
+                let (fb, _) = encode(b, fmt, &mut Rounder::nearest_even());
+                let (gw, gf) = packed::add_packed(pf.from_fp(fa), pf.from_fp(fb), &pf, &mut ra);
+                let (wfp, wf) = carrier_add(fa, fb, fmt, &mut rb);
+                if (pf.to_fp(gw), gf) == (wfp, wf) {
+                    Ok(())
+                } else {
+                    Err(format!("{a:e} + {b:e}: packed flags {gf:?} vs carrier {wf:?}"))
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn decode_word_matches_decode_on_random_codepoints() {
+    for fmt in kernel_formats() {
+        let pf = fmt.packed();
+        check(&format!("decode-word-{fmt}"), 4000, |g: &mut Gen| {
+            let exp = g.below(fmt.max_biased_exp() as u64 + 1) as u32;
+            let frac = g.below(1 << fmt.m_w);
+            let sign = g.bool() as u8;
+            let fp = r2f2::softfloat::Fp { sign, exp, frac };
+            let got = packed::decode_word(pf.from_fp(fp), &pf);
+            let want = decode(fp, fmt);
+            if got.to_bits() == want.to_bits() {
+                Ok(())
+            } else {
+                Err(format!("{fp:?}: {got:e} vs {want:e}"))
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solver level: packed engine vs carrier engine vs scalar dispatch
+// ---------------------------------------------------------------------------
+
+/// The regimes of the §8 matrix: in-range, underflow-heavy, overflow-heavy.
+fn heat_regimes() -> Vec<(&'static str, HeatParams)> {
+    let base = HeatParams { n: 101, dt: 0.25 / (100.0f64 * 100.0), ..HeatParams::default() };
+    vec![
+        (
+            "mid",
+            HeatParams { steps: 300, snapshot_every: 100, ..base.clone() },
+        ),
+        (
+            "tiny",
+            HeatParams {
+                steps: 200,
+                init: HeatInit::Sin { amplitude: 5e-4, cycles: 2.0 },
+                ..base.clone()
+            },
+        ),
+        (
+            "huge",
+            HeatParams {
+                steps: 100,
+                init: HeatInit::Sin { amplitude: 2.5e5, cycles: 2.0 },
+                ..base
+            },
+        ),
+    ]
+}
+
+#[allow(clippy::type_complexity)]
+fn engine_backends() -> Vec<(&'static str, Box<dyn Fn(BatchEngine) -> Box<dyn Arith>>)> {
+    vec![
+        (
+            "fixed E5M10",
+            Box::new(|e| Box::new(FixedArith::new(FpFormat::E5M10).with_engine(e)) as Box<dyn Arith>),
+        ),
+        (
+            "fixed E6M9",
+            Box::new(|e| {
+                Box::new(FixedArith::new(FpFormat::new(6, 9)).with_engine(e)) as Box<dyn Arith>
+            }),
+        ),
+        (
+            "r2f2 <3,9,3>",
+            Box::new(|e| {
+                Box::new(R2f2Arith::new(R2f2Config::C16_393).with_engine(e)) as Box<dyn Arith>
+            }),
+        ),
+        (
+            "r2f2 <3,8,4>",
+            Box::new(|e| {
+                Box::new(R2f2Arith::new(R2f2Config::C16_384).with_engine(e)) as Box<dyn Arith>
+            }),
+        ),
+    ]
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{what}: lane {i}: {} vs {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn heat_packed_engine_bit_identical_across_modes_and_regimes() {
+    for (regime, p) in &heat_regimes() {
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            for (name, mk) in &engine_backends() {
+                let what = format!("heat/{regime}/{name}/{mode:?}");
+                // The scalar path is the specification…
+                let mut scalar_be = mk(BatchEngine::Packed);
+                let s = heat1d::run_scalar(p, scalar_be.as_mut(), mode);
+                // …the carrier engine is the frozen PR-1 implementation…
+                let mut carrier_be = mk(BatchEngine::Carrier);
+                let c = heat1d::run(p, carrier_be.as_mut(), mode);
+                // …and the packed engine must match both, bit for bit.
+                let mut packed_be = mk(BatchEngine::Packed);
+                let b = heat1d::run(p, packed_be.as_mut(), mode);
+
+                for (other, tag) in [(&s, "scalar"), (&c, "carrier")] {
+                    assert_bits_eq(&other.u, &b.u, &format!("{what} vs {tag}"));
+                    assert_eq!(other.muls, b.muls, "{what} vs {tag}: muls");
+                    assert_eq!(other.r2f2_stats, b.r2f2_stats, "{what} vs {tag}: stats");
+                    assert_eq!(
+                        other.range_events, b.range_events,
+                        "{what} vs {tag}: range events (multiplicity)"
+                    );
+                    assert_eq!(
+                        other.snapshots.len(),
+                        b.snapshots.len(),
+                        "{what} vs {tag}: snapshots"
+                    );
+                    for (i, ((ss, su), (bs, bu))) in
+                        other.snapshots.iter().zip(b.snapshots.iter()).enumerate()
+                    {
+                        assert_eq!(ss, bs, "{what} vs {tag}: snapshot step {i}");
+                        assert_bits_eq(su, bu, &format!("{what} vs {tag}: snapshot {i}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn heat_regimes_actually_hit_the_boundaries() {
+    // Guard the matrix itself: the tiny regime must underflow E5M10, the
+    // huge regime must overflow it — otherwise the multiplicity checks
+    // above are vacuous.
+    let regimes = heat_regimes();
+    let (_, tiny) = &regimes[1];
+    let mut probe = FixedArith::new(FpFormat::E5M10);
+    let ev = heat1d::run(tiny, &mut probe, QuantMode::MulOnly).range_events.unwrap();
+    assert!(ev.underflows > 0, "tiny regime must underflow");
+    let (_, huge) = &regimes[2];
+    let mut probe = FixedArith::new(FpFormat::E5M10);
+    let ev = heat1d::run(huge, &mut probe, QuantMode::MulOnly).range_events.unwrap();
+    assert!(ev.overflows > 0, "huge regime must overflow");
+}
+
+#[test]
+fn swe_packed_engine_bit_identical_both_scopes_and_modes() {
+    let p = SweParams { steps: 25, ..SweParams::default() };
+    for scope in [QuantScope::UxFluxOnly, QuantScope::AllFluxMuls] {
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            for (name, mk) in &engine_backends() {
+                let what = format!("swe/{name}/{scope:?}/{mode:?}");
+                let mut scalar_be = mk(BatchEngine::Packed);
+                let s = swe2d::run_scalar_mode(&p, scalar_be.as_mut(), scope, mode);
+                let mut carrier_be = mk(BatchEngine::Carrier);
+                let c = swe2d::run_mode(&p, carrier_be.as_mut(), scope, mode);
+                let mut packed_be = mk(BatchEngine::Packed);
+                let b = swe2d::run_mode(&p, packed_be.as_mut(), scope, mode);
+
+                for (other, tag) in [(&s, "scalar"), (&c, "carrier")] {
+                    assert_bits_eq(&other.h, &b.h, &format!("{what} vs {tag}: h"));
+                    assert_bits_eq(&other.u, &b.u, &format!("{what} vs {tag}: u"));
+                    assert_bits_eq(&other.v, &b.v, &format!("{what} vs {tag}: v"));
+                    assert_eq!(other.muls, b.muls, "{what} vs {tag}: muls");
+                    assert_eq!(other.r2f2_stats, b.r2f2_stats, "{what} vs {tag}: stats");
+                    assert_eq!(other.range_events, b.range_events, "{what} vs {tag}: events");
+                    assert_eq!(
+                        other.mass_drift.to_bits(),
+                        b.mass_drift.to_bits(),
+                        "{what} vs {tag}: mass drift"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_mode_packed_state_survives_long_runs() {
+    // The tentpole property: a long Full-mode run through the packed
+    // engine (state encoded once, stepped packed, decoded once) agrees
+    // with the scalar specification to the last bit — including the
+    // adjustment-free Dirichlet boundaries, which stay raw f64.
+    let p = HeatParams {
+        n: 101,
+        dt: 0.25 / (100.0f64 * 100.0),
+        steps: 1500,
+        snapshot_every: 500,
+        ..HeatParams::default()
+    };
+    let mut scalar_be = FixedArith::new(FpFormat::E5M10);
+    let s = heat1d::run_scalar(&p, &mut scalar_be, QuantMode::Full);
+    let mut packed_be = FixedArith::new(FpFormat::E5M10);
+    let b = heat1d::run(&p, &mut packed_be, QuantMode::Full);
+    assert_bits_eq(&s.u, &b.u, "long full-mode run");
+    assert_eq!(s.range_events, b.range_events, "long full-mode events");
+    assert_eq!(s.snapshots.len(), b.snapshots.len());
+    for ((ss, su), (bs, bu)) in s.snapshots.iter().zip(b.snapshots.iter()) {
+        assert_eq!(ss, bs);
+        assert_bits_eq(su, bu, "long full-mode snapshot");
+    }
+}
