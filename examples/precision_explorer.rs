@@ -7,9 +7,12 @@
 //! ```
 
 use r2f2::analysis::heat_distribution;
-use r2f2::pde::heat1d::HeatParams;
+use r2f2::pde::adaptive::fixed_cost_lut;
+use r2f2::pde::heat1d::{self, HeatParams};
+use r2f2::pde::{rmse, AdaptiveArith, AdaptivePolicy, F64Arith, FixedArith, QuantMode};
 use r2f2::report::ascii_plot::histogram;
 use r2f2::report::{sig, Table};
+use r2f2::softfloat::FpFormat;
 use r2f2::sweep::config_profile::{
     best_of, eq1_exponent_bits, profile_range, sixteen_bit_family, PAPER_RANGES,
 };
@@ -63,4 +66,49 @@ fn main() {
     }
     println!("\nConclusion (§3.2): \"represent data using low bitwidth but flexible\n\
               precision\" + \"adjust precision at runtime\" — which is what R2F2 does.");
+
+    // --- §10: the same idea at solver granularity — the adaptive
+    // precision scheduler's live schedule trace on a decaying heat run.
+    println!("\nAdaptive precision schedule (DESIGN.md §10): E4M3 → E5M10 ladder");
+    let hp =
+        HeatParams { n: 33, dt: 0.25 / (32.0f64 * 32.0), steps: 2600, ..HeatParams::default() };
+    let mut policy = AdaptivePolicy::heat_default();
+    policy.epoch_len = 50;
+    let mut sched = AdaptiveArith::new(policy);
+    let adaptive = heat1d::run_adaptive(&hp, &mut sched, QuantMode::MulOnly);
+    let rep = sched.report();
+
+    let mut t = Table::new(vec!["epoch", "step", "switch", "why"]);
+    for ev in &rep.trace {
+        t.row(vec![
+            ev.epoch.to_string(),
+            ev.step.to_string(),
+            format!("{} → {}", ev.from, ev.to),
+            if ev.widened { "overflow pressure (epoch retried)".into() } else {
+                "clean streak + stalled dynamics".to_string()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+
+    let reference = heat1d::run(&hp, &mut F64Arith, QuantMode::MulOnly);
+    let mut wide = FixedArith::new(FpFormat::E5M10);
+    let fixed = heat1d::run(&hp, &mut wide, QuantMode::MulOnly);
+    let mut ops = Table::new(vec!["format", "muls charged", "modeled LUT·ops"]);
+    for (fmt, n) in &rep.ops_per_rung {
+        ops.row(vec![fmt.to_string(), n.to_string(), sig(fixed_cost_lut(*fmt, *n), 4)]);
+    }
+    println!("{}", ops.render());
+    println!(
+        "adaptive RMSE {} vs all-E5M10 {} (vs f64) | modeled cost {} vs all-E5M10 {} \
+         ({}% saved)",
+        sig(rmse(&adaptive.u, &reference.u), 3),
+        sig(rmse(&fixed.u, &reference.u), 3),
+        sig(rep.modeled_cost_lut, 4),
+        sig(fixed_cost_lut(FpFormat::E5M10, fixed.muls), 4),
+        sig(
+            100.0 * (1.0 - rep.modeled_cost_lut / fixed_cost_lut(FpFormat::E5M10, fixed.muls)),
+            3
+        ),
+    );
 }

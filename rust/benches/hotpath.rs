@@ -11,14 +11,20 @@
 //! Flags (after `--` on the cargo command line):
 //!   --smoke         cut workload sizes and sample counts (CI mode)
 //!   --json <path>   also emit machine-readable results
-//!                   (schema `r2f2-bench-hotpath/1`, see EXPERIMENTS.md)
+//!                   (schema `r2f2-bench-hotpath/2`, see EXPERIMENTS.md)
 
 use r2f2::bench_util::{bench_with, black_box, fmt_ns, print_results, BenchResult};
 use r2f2::coordinator::parallel_map;
 use r2f2::metrics::Registry;
+use r2f2::pde::adaptive::{
+    fixed_cost_lut, run_heat as heat_run_adaptive, run_heat_scalar as heat_run_adaptive_scalar,
+};
 use r2f2::pde::heat1d::{run as heat_run, run_scalar as heat_run_scalar, HeatParams};
 use r2f2::pde::swe2d::{run as swe_run, run_scalar as swe_run_scalar, QuantScope, SweParams};
-use r2f2::pde::{Arith, BatchEngine, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
+use r2f2::pde::{
+    AdaptiveArith, AdaptivePolicy, Arith, BatchEngine, F32Arith, F64Arith, FixedArith, QuantMode,
+    R2f2Arith,
+};
 use r2f2::r2f2core::{R2f2Config, R2f2Multiplier};
 use r2f2::rng::SplitMix64;
 use r2f2::runtime::{HeatRunner, Runtime};
@@ -77,14 +83,33 @@ struct Trajectory {
     ns: [f64; 3], // indexed by Tier as declared
 }
 
+/// One adaptive-scheduler workload row (DESIGN.md §10): timings of the
+/// scalar vs packed adaptive runs plus the schedule/cost metadata.
+struct AdaptiveRow {
+    workload: String,
+    scalar_ns: f64,
+    packed_ns: f64,
+    widen: u64,
+    narrow: u64,
+    final_format: String,
+    modeled_cost_lut: f64,
+    e5m10_cost_lut: f64,
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn emit_json(path: &str, smoke: bool, rows: &[BenchResult], trajs: &[Trajectory]) {
+fn emit_json(
+    path: &str,
+    smoke: bool,
+    rows: &[BenchResult],
+    trajs: &[Trajectory],
+    adaptive: &[AdaptiveRow],
+) {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"r2f2-bench-hotpath/1\",\n");
+    out.push_str("  \"schema\": \"r2f2-bench-hotpath/2\",\n");
     out.push_str(&format!("  \"smoke\": {smoke},\n"));
     out.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -115,6 +140,24 @@ fn emit_json(path: &str, smoke: bool, rows: &[BenchResult], trajs: &[Trajectory]
             c / p,
             s / p,
             if i + 1 < trajs.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"adaptive\": [\n");
+    for (i, a) in adaptive.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"scalar_ns\": {:.3}, \"packed_ns\": {:.3}, \
+             \"widen_events\": {}, \"narrow_events\": {}, \"final_format\": \"{}\", \
+             \"modeled_cost_lut\": {:.3}, \"all_e5m10_cost_lut\": {:.3}}}{}\n",
+            json_escape(&a.workload),
+            a.scalar_ns,
+            a.packed_ns,
+            a.widen,
+            a.narrow,
+            json_escape(&a.final_format),
+            a.modeled_cost_lut,
+            a.e5m10_cost_lut,
+            if i + 1 < adaptive.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n");
@@ -355,6 +398,64 @@ fn main() {
     print_results("L3 shallow water (one run per iteration)", &results);
     all_rows.extend(results);
 
+    // ---- L3 adaptive precision scheduler (DESIGN.md §10) ----------------
+    // Scalar vs packed adaptive heat runs under the default E4M3→E5M10
+    // ladder. The bench-sized runs widen out of FP8 immediately (amplitude
+    // 500 > 480) and are too short to narrow — the schedule metadata rows
+    // record what the scheduler actually did alongside the timings.
+    let adapt_policy = || {
+        let mut pol = AdaptivePolicy::heat_default();
+        pol.epoch_len = if opts.smoke { 8 } else { 16 };
+        pol
+    };
+    let mut results = Vec::new();
+    let mut adaptive_rows: Vec<AdaptiveRow> = Vec::new();
+    for (mode, mode_label) in [(QuantMode::MulOnly, "mulonly"), (QuantMode::Full, "full")] {
+        let mut ns = [0.0f64; 2];
+        for (idx, tier_label) in [(0usize, "scalar dispatch"), (1, "packed engine")] {
+            let pp = p.clone();
+            let r = bench_with(
+                &format!("{heat_label} adaptive E4M3→E5M10 {mode_label} [{tier_label}]"),
+                samples,
+                Duration::from_millis(batch_ms),
+                &mut || {
+                    let mut sched = AdaptiveArith::new(adapt_policy());
+                    if idx == 0 {
+                        black_box(heat_run_adaptive_scalar(&pp, &mut sched, mode));
+                    } else {
+                        black_box(heat_run_adaptive(&pp, &mut sched, mode));
+                    }
+                },
+            );
+            ns[idx] = r.median_ns;
+            results.push(r);
+        }
+        // One instrumented run for the schedule/cost metadata.
+        let mut sched = AdaptiveArith::new(adapt_policy());
+        let _ = heat_run_adaptive(&p, &mut sched, mode);
+        let rep = sched.report();
+        adaptive_rows.push(AdaptiveRow {
+            workload: format!("heat-{mode_label}"),
+            scalar_ns: ns[0],
+            packed_ns: ns[1],
+            widen: rep.widen_events,
+            narrow: rep.narrow_events,
+            final_format: rep.final_format.to_string(),
+            modeled_cost_lut: rep.modeled_cost_lut,
+            e5m10_cost_lut: fixed_cost_lut(FpFormat::E5M10, p.expected_muls()),
+        });
+    }
+    print_results("L3 adaptive scheduler (one run per iteration)", &results);
+    all_rows.extend(results);
+    println!("\nadaptive schedule metadata:");
+    for a in &adaptive_rows {
+        println!(
+            "  {:<14} widen {}  narrow {}  final {}  modeled cost {:.3e} LUT·ops \
+             (all-E5M10 {:.3e})",
+            a.workload, a.widen, a.narrow, a.final_format, a.modeled_cost_lut, a.e5m10_cost_lut
+        );
+    }
+
     // ---- Speedup summary -------------------------------------------------
     println!("\npacked-engine speedups (median):");
     println!(
@@ -465,6 +566,6 @@ fn main() {
     }
 
     if let Some(path) = &opts.json {
-        emit_json(path, opts.smoke, &all_rows, &trajs);
+        emit_json(path, opts.smoke, &all_rows, &trajs, &adaptive_rows);
     }
 }

@@ -4,29 +4,57 @@
 
 use std::collections::BTreeMap;
 
-/// Histogram over `floor(log2(|v|))`, with dedicated zero / sign counters.
-#[derive(Debug, Clone, Default)]
+/// Histogram over `floor(log2(|v|))`, with dedicated zero / sign /
+/// non-finite counters.
+///
+/// Inf and NaN are tallied in [`Log2Histogram::nonfinite`], *not* in
+/// `zeros` — the adaptive precision scheduler (`pde::adaptive`) keys its
+/// widen trigger off this distinction: a flushed-to-zero value is bounded
+/// error, a non-finite one means the carrier arithmetic itself blew up.
+#[derive(Debug, Clone)]
 pub struct Log2Histogram {
     buckets: BTreeMap<i32, u64>,
     pub zeros: u64,
     pub negatives: u64,
+    /// Inf/NaN inputs (they carry no magnitude and are not zeros).
+    pub nonfinite: u64,
     pub total: u64,
     min_abs: f64,
     max_abs: f64,
 }
 
+/// Same sentinel state as [`Log2Histogram::new`] (`min_abs = +inf`), so a
+/// default-constructed histogram tracks `nonzero_range` correctly.
+impl Default for Log2Histogram {
+    fn default() -> Log2Histogram {
+        Log2Histogram::new()
+    }
+}
+
 impl Log2Histogram {
     pub fn new() -> Log2Histogram {
-        Log2Histogram { min_abs: f64::INFINITY, max_abs: 0.0, ..Default::default() }
+        Log2Histogram {
+            buckets: BTreeMap::new(),
+            zeros: 0,
+            negatives: 0,
+            nonfinite: 0,
+            total: 0,
+            min_abs: f64::INFINITY,
+            max_abs: 0.0,
+        }
     }
 
     pub fn record(&mut self, v: f64) {
         self.total += 1;
+        if !v.is_finite() {
+            self.nonfinite += 1;
+            return;
+        }
         if v < 0.0 {
             self.negatives += 1;
         }
         let a = v.abs();
-        if a == 0.0 || !a.is_finite() {
+        if a == 0.0 {
             self.zeros += 1;
             return;
         }
@@ -144,5 +172,32 @@ mod tests {
         let h = Log2Histogram::new();
         assert_eq!(h.nonzero_range(), None);
         assert_eq!(h.bulk_octaves(0.9), 0);
+    }
+
+    #[test]
+    fn nonfinite_counted_separately_from_zeros_and_negatives() {
+        let mut h = Log2Histogram::new();
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(f64::NAN);
+        h.record(0.0);
+        h.record(-2.0);
+        assert_eq!(h.nonfinite, 3);
+        assert_eq!(h.zeros, 1);
+        assert_eq!(h.negatives, 1); // −inf is non-finite, not a negative sample
+        assert_eq!(h.total, 5);
+        assert_eq!(h.occupied_octaves(), 1);
+        assert_eq!(h.nonzero_range(), Some((2.0, 2.0)));
+    }
+
+    #[test]
+    fn default_matches_new_sentinels() {
+        // The derived Default used to leave `min_abs = 0.0`, corrupting
+        // `nonzero_range` of any default-constructed histogram.
+        let mut h = Log2Histogram::default();
+        h.record(5.0);
+        assert_eq!(h.nonzero_range(), Some((5.0, 5.0)));
+        let empty = Log2Histogram::default();
+        assert_eq!(empty.nonzero_range(), None);
     }
 }

@@ -27,7 +27,10 @@ pub struct DistributionReport {
 /// heat equation during its entire simulation process").
 pub fn heat_distribution(params: &HeatParams, num_stages: usize) -> DistributionReport {
     let mut overall = Log2Histogram::new();
-    let mut tracker = StageTracker::new(num_stages, params.steps as u64 * muls_per_step(params));
+    // The tap records 3 values per multiplication (a, b, result), so the
+    // tracker's expected record count is 3× the multiplication count.
+    let mut tracker =
+        StageTracker::new(num_stages, 3 * params.steps as u64 * muls_per_step(params));
     let mut samples = 0u64;
     {
         let mut tap = |a: f64, b: f64, r: f64| {
@@ -68,6 +71,9 @@ mod tests {
         let rep = heat_distribution(&p, 4);
         assert_eq!(rep.samples, p.expected_muls() * 3);
         assert_eq!(rep.stages.len(), 4);
+        // The quarters are genuine quarters: equal record counts per stage.
+        let per = rep.samples / 4;
+        assert!(rep.stages.iter().all(|s| s.count == per), "{:?}", rep.stages);
     }
 
     #[test]

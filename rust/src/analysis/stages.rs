@@ -29,13 +29,15 @@ pub struct StageTracker {
 }
 
 impl StageTracker {
-    /// `expected_total` is the number of *records* the run will produce
-    /// (stage boundaries are `expected_total / num_stages` apart; a final
-    /// partial stage is kept too).
+    /// `expected_total` is the number of *records* the run will produce.
+    /// Stage boundaries are `floor(expected_total / num_stages)` records
+    /// apart, so streaming exactly `expected_total` records yields exactly
+    /// `num_stages` stages (the final stage absorbs the division remainder;
+    /// see the exact contract on [`StageTracker::finish`]).
     pub fn new(num_stages: usize, expected_total: u64) -> StageTracker {
         assert!(num_stages >= 1);
         StageTracker {
-            per_stage: (expected_total * 3 / num_stages as u64).max(1),
+            per_stage: (expected_total / num_stages as u64).max(1),
             seen: 0,
             current: Log2Histogram::new(),
             done: Vec::new(),
@@ -57,6 +59,17 @@ impl StageTracker {
     }
 
     /// Close the final stage and return all stage summaries.
+    ///
+    /// Exact contract for a stream of exactly `expected_total` records
+    /// (property-tested in `rust/tests/property_suite.rs`):
+    ///
+    /// * `expected_total ≥ num_stages`: exactly `num_stages` stages; the
+    ///   first `num_stages − 1` hold `floor(expected_total / num_stages)`
+    ///   records each and the final stage holds the rest (equal to the
+    ///   others when the division is exact — the final roll then happens
+    ///   here, not in [`StageTracker::record`]).
+    /// * `1 ≤ expected_total < num_stages`: one stage per record.
+    /// * empty stream: a single empty stage.
     pub fn finish(mut self) -> Vec<StageStats> {
         if self.current.total > 0 || self.done.is_empty() {
             self.roll();
@@ -76,8 +89,7 @@ mod tests {
 
     #[test]
     fn splits_into_equal_stages() {
-        // 3 records per logical sample (a, b, result) — mirror the tap.
-        let mut t = StageTracker::new(4, 400);
+        let mut t = StageTracker::new(4, 1200);
         for i in 0..1200u64 {
             t.record(i as f64 + 1.0);
         }
@@ -88,7 +100,7 @@ mod tests {
 
     #[test]
     fn stage_ranges_reflect_data() {
-        let mut t = StageTracker::new(2, 4);
+        let mut t = StageTracker::new(2, 12);
         for v in [100.0, 200.0, 150.0, 180.0, 120.0, 110.0] {
             t.record(v);
         }
@@ -99,6 +111,19 @@ mod tests {
         assert_eq!(stages.len(), 2);
         assert!(stages[0].max_abs >= 100.0);
         assert!(stages[1].max_abs <= 2.0);
+    }
+
+    #[test]
+    fn non_divisible_total_keeps_stage_count() {
+        // 10 records into 4 stages: 2, 2, 2 and a final stage of 4.
+        let mut t = StageTracker::new(4, 10);
+        for i in 0..10u64 {
+            t.record(i as f64 + 1.0);
+        }
+        let stages = t.finish();
+        assert_eq!(stages.len(), 4);
+        let counts: Vec<u64> = stages.iter().map(|s| s.count).collect();
+        assert_eq!(counts, vec![2, 2, 2, 4]);
     }
 
     #[test]

@@ -23,7 +23,12 @@
 //!   **packed-domain engine** (DESIGN.md §9): solver state held as `u32`
 //!   `[sign|exp|frac]` words, 64-bit integer datapaths, no f64 carrier
 //!   round-trip on the hot path — bit-identical to the scalar path, with
-//!   the PR-1 carrier engine kept selectable as the perf baseline.
+//!   the PR-1 carrier engine kept selectable as the perf baseline. The
+//!   [`pde::adaptive`] scheduler (DESIGN.md §10) makes the range-telemetry
+//!   layer load-bearing: solvers walk a ladder of fixed formats between
+//!   timesteps (widen + retry on overflow pressure, narrow after a clean
+//!   streak once the dynamics stall), repacking packed state once per
+//!   switch.
 //! * [`analysis`] / [`sweep`] — the exploration harnesses behind Figs 2, 3
 //!   and 6.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`

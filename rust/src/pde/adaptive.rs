@@ -1,0 +1,1027 @@
+//! Solver-level adaptive precision scheduling — the telemetry layer made
+//! load-bearing.
+//!
+//! The paper's premise (§2, Fig. 2) is that *observed runtime ranges*
+//! should drive precision choices; its R2F2 unit applies that per
+//! multiplier. This module lifts the same widen/narrow/streak state
+//! machine to **solver granularity** (cf. RAPTOR's lightweight numerical
+//! profiling woven into the application loop, arXiv 2507.04647, and the
+//! per-phase mixed-precision switching of Siklósi et al., arXiv
+//! 2505.20911): the solver runs in a *ladder* of fixed `ExMy` formats, and
+//! between timesteps an [`AdaptiveArith`] scheduler inspects cheap range
+//! telemetry — the fixed [`Log2Histogram`]/[`StageTracker`] over the state
+//! vector plus the backend's [`RangeEvents`] overflow/underflow deltas —
+//! and moves along the ladder:
+//!
+//! * **Widen + retry**: overflow (or non-finite) pressure inside an epoch
+//!   widens to the next rung and **re-runs the epoch from its saved start
+//!   state** — the solver-level analogue of R2F2's "retry the
+//!   multiplication using updated precision". The polluted attempt never
+//!   lands in the committed trajectory (its cost is still charged).
+//! * **Narrow after a clean streak**: after a configurable number of
+//!   consecutive epochs with no widen pressure, with the observed peak
+//!   magnitude clearing the narrower rung's ceiling by a headroom margin
+//!   and (by default) with the dynamics *stalled* — the state sample
+//!   bit-unchanged across an epoch. For a flush-induced stall (every
+//!   update product below the wide format's min normal — the generic fate
+//!   of a decaying PDE) the narrower rung's products flush too, so
+//!   narrowing cannot diverge from the wide-format trajectory; a stall
+//!   from exact cancellation of live products carries no such guarantee
+//!   and is what the streak + headroom hysteresis is for. One rung is
+//!   given back — hysteresis exactly like the R2F2 unit's redundancy
+//!   streak.
+//!
+//! **Bit-exactness contract.** The decision function is a deterministic
+//! function of the state vector and the event deltas, both of which are
+//! bit-identical between the scalar reference path and the batched/packed
+//! engines (the PR-2 contract). Therefore a scalar adaptive run and a
+//! packed adaptive run produce the *same switch schedule* and bit-identical
+//! fields — `rust/tests/adaptive_schedule.rs` enforces it, including runs
+//! with widen retries and narrow events. A recorded decision log can also
+//! be replayed verbatim ([`AdaptiveArith::from_trace`]) to pin one path to
+//! another's schedule.
+//!
+//! **Packed state across switches.** In `QuantMode::Full` the packed
+//! engine keeps the whole state vector in [`PackedVec`] words across
+//! epochs; a format switch re-encodes it **once** through the packed
+//! repack hook ([`PackedVec::repack`] / `softfloat::packed::repack_word`)
+//! instead of bouncing every element through the f64 carrier — and raises
+//! exactly the flags the scalar path's per-element re-quantization raises.
+//!
+//! **Modeled datapath cost.** Each multiplication is charged the
+//! calibrated LUT area of a fixed multiplier of the *active* format
+//! (`r2f2core::resource::fixed_multiplier`, anchored on the paper's
+//! Table 1 rows) — an area×op proxy for datapath energy. The scheduler's
+//! win condition, enforced by `tests/adaptive_schedule.rs`, is matching
+//! the wide format's accuracy at strictly lower modeled cost.
+
+use super::heat1d::{HeatParams, HeatResult};
+use super::swe2d::{QuantScope, SweParams, SweResult, SweSim};
+use super::{
+    packed_full_sweep, scalar_stencil_step, Arith, BatchEngine, Ctx, FixedArith, QuantMode,
+    RangeEvents,
+};
+use crate::analysis::{Log2Histogram, StageStats, StageTracker};
+use crate::r2f2core::resource::fixed_multiplier;
+use crate::softfloat::packed as pk;
+use crate::softfloat::{Flags, FpFormat, PackedVec, Rounder};
+
+/// What the scheduler decided at one epoch boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep the current rung; the epoch is committed.
+    Stay,
+    /// Move one rung wider and **retry the epoch** from its saved state.
+    Widen,
+    /// Move one rung narrower for subsequent epochs; the epoch is
+    /// committed (narrowing never retries — mirroring the R2F2 unit, where
+    /// narrowing applies to *subsequent* multiplications).
+    Narrow,
+}
+
+/// One applied format switch, for the schedule trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwitchEvent {
+    /// Epoch index (committed epochs; retried attempts share the index).
+    pub epoch: usize,
+    /// Global timestep at the epoch boundary where the switch fired.
+    pub step: usize,
+    pub from: FpFormat,
+    pub to: FpFormat,
+    /// `true` = widen (the epoch is re-run), `false` = narrow.
+    pub widened: bool,
+}
+
+/// The per-epoch telemetry the policy sees: range-event deltas from the
+/// arithmetic backend plus a magnitude summary of the state vector.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochTelemetry {
+    /// Overflow/underflow events raised during this epoch attempt.
+    pub events: RangeEvents,
+    /// Non-finite state values (distinct from flush-to-zero — the
+    /// [`Log2Histogram::nonfinite`] counter this PR's bugfix added).
+    pub nonfinite: u64,
+    /// Largest non-zero state magnitude (0.0 when the state is all-zero).
+    pub max_abs: f64,
+    /// Smallest non-zero state magnitude (0.0 when the state is all-zero).
+    pub min_abs: f64,
+    /// State samples inspected.
+    pub samples: u64,
+}
+
+/// Hysteresis policy for the solver-level widen/narrow state machine.
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    /// Formats ordered narrow → wide. The scheduler moves along this
+    /// ladder one rung at a time.
+    pub ladder: Vec<FpFormat>,
+    /// Starting rung index into `ladder`.
+    pub start_rung: usize,
+    /// Timesteps per epoch (the telemetry/decision granularity).
+    pub epoch_len: usize,
+    /// Widen when an epoch's overflow-event delta reaches this count.
+    pub widen_overflow_threshold: u64,
+    /// Widen when any non-finite value appears in the state.
+    pub widen_on_nonfinite: bool,
+    /// Consecutive clean epochs required before narrowing (the streak
+    /// hysteresis; cf. the R2F2 unit's redundancy streak).
+    pub narrow_clean_epochs: u32,
+    /// Octaves of headroom the observed peak magnitude must clear below
+    /// the narrower rung's max finite value before narrowing.
+    pub narrow_headroom_octaves: u32,
+    /// If set, an epoch with more underflow events than this is not
+    /// "clean" (off by default: flush-to-zero is bounded error, exactly
+    /// like the R2F2 unit's silent operand flush).
+    pub narrow_underflow_guard: Option<u64>,
+    /// Narrow only once the dynamics have **stalled** in the current
+    /// format: the state sample is bit-identical to the previous epoch's
+    /// (every update flushed or cancelled). When the stall is
+    /// flush-induced — every update product already below the wide
+    /// format's min normal, the generic fate of a decaying PDE — the
+    /// narrower rung's products flush too, so narrowing cannot diverge
+    /// from the wide-format trajectory; that is what lets the adaptive
+    /// schedule match the wide format's accuracy exactly while paying
+    /// narrow-format cost for the tail (a cancellation-induced stall of
+    /// live products carries no such guarantee). On by default; turn off
+    /// for aggressive narrowing that trades accuracy for cost.
+    pub narrow_requires_stall: bool,
+}
+
+impl AdaptivePolicy {
+    /// A policy over `ladder` with the default hysteresis constants.
+    pub fn new(ladder: Vec<FpFormat>) -> AdaptivePolicy {
+        AdaptivePolicy {
+            ladder,
+            start_rung: 0,
+            epoch_len: 32,
+            widen_overflow_threshold: 1,
+            widen_on_nonfinite: true,
+            narrow_clean_epochs: 3,
+            narrow_headroom_octaves: 12,
+            narrow_underflow_guard: None,
+            narrow_requires_stall: true,
+        }
+    }
+
+    /// The heat-equation default: start at FP8 (`E4M3`), widen to the
+    /// paper's half baseline (`E5M10`) under range pressure, narrow back
+    /// once the decaying solution leaves generous headroom.
+    pub fn heat_default() -> AdaptivePolicy {
+        AdaptivePolicy::new(vec![FpFormat::E4M3, FpFormat::E5M10])
+    }
+
+    /// The shallow-water default: start at `E5M10` (which the shelf-scale
+    /// flux overflows, §5.3) with `E6M9` as the wide rung — the same
+    /// trade the R2F2 `<3,9,3>` unit makes per multiplication.
+    pub fn swe_default() -> AdaptivePolicy {
+        let mut p = AdaptivePolicy::new(vec![FpFormat::E5M10, FpFormat::new(6, 9)]);
+        p.epoch_len = 4;
+        p
+    }
+
+    /// May the scheduler narrow onto `narrower` given the observed peak?
+    fn headroom_ok(&self, max_abs: f64, narrower: FpFormat) -> bool {
+        max_abs <= narrower.max_value() * (2.0f64).powi(-(self.narrow_headroom_octaves as i32))
+    }
+}
+
+/// Report of one adaptive run (schedule trace + telemetry + modeled cost).
+#[derive(Debug, Clone)]
+pub struct AdaptiveReport {
+    pub trace: Vec<SwitchEvent>,
+    /// Every epoch-boundary decision in order (including retried attempts)
+    /// — replayable via [`AdaptiveArith::from_trace`].
+    pub decisions: Vec<Decision>,
+    /// Committed epochs.
+    pub epochs: usize,
+    pub widen_events: u64,
+    pub narrow_events: u64,
+    /// Epochs that wanted to widen while already at the widest rung (the
+    /// solver-level analogue of R2F2's unresolved range events).
+    pub pressure_at_widest: u64,
+    /// Multiplications charged per ladder rung (retried attempts included).
+    pub ops_per_rung: Vec<(FpFormat, u64)>,
+    /// Σ ops × calibrated per-multiplication LUT area of the rung.
+    pub modeled_cost_lut: f64,
+    pub final_format: FpFormat,
+    pub events: RangeEvents,
+    /// Whole-run magnitude histogram of the sampled state telemetry.
+    pub overall: Log2Histogram,
+    /// Per-quarter stage summaries of the sampled state telemetry.
+    pub stages: Vec<StageStats>,
+}
+
+/// The solver-level adaptive scheduler. Implements [`Arith`] by delegating
+/// to the wrapped [`FixedArith`] engine at the current rung, so it plugs
+/// into every harness a fixed or R2F2 backend does; the adaptive run
+/// variants ([`run_heat`], [`run_swe`], `heat1d::run_adaptive`,
+/// `swe2d::run_adaptive`) additionally drive its epoch protocol
+/// ([`AdaptiveArith::begin_epoch`] / [`AdaptiveArith::end_epoch`]).
+#[derive(Debug)]
+pub struct AdaptiveArith {
+    pub(super) policy: AdaptivePolicy,
+    pub(super) inner: FixedArith,
+    rung: usize,
+    clean: u32,
+    mark: RangeEvents,
+    epoch: usize,
+    trace: Vec<SwitchEvent>,
+    decisions: Vec<Decision>,
+    replay: Option<Vec<Decision>>,
+    replay_cursor: usize,
+    overall: Log2Histogram,
+    stages: Option<StageTracker>,
+    ops: Vec<u64>,
+    pressure_at_widest: u64,
+    /// Previous epoch's state sample (raw bits), for the stall detector.
+    last_state_bits: Vec<u64>,
+}
+
+impl AdaptiveArith {
+    /// New scheduler at the policy's starting rung, on the default
+    /// (packed) batched engine.
+    pub fn new(policy: AdaptivePolicy) -> AdaptiveArith {
+        assert!(!policy.ladder.is_empty(), "ladder must have at least one rung");
+        assert!(policy.start_rung < policy.ladder.len(), "start_rung out of range");
+        assert!(policy.epoch_len >= 1, "epoch_len must be at least 1");
+        let rung = policy.start_rung;
+        let ops = vec![0u64; policy.ladder.len()];
+        let inner = FixedArith::new(policy.ladder[rung]);
+        AdaptiveArith {
+            policy,
+            inner,
+            rung,
+            clean: 0,
+            mark: RangeEvents::default(),
+            epoch: 0,
+            trace: Vec::new(),
+            decisions: Vec::new(),
+            replay: None,
+            replay_cursor: 0,
+            overall: Log2Histogram::new(),
+            stages: None,
+            ops,
+            pressure_at_widest: 0,
+            last_state_bits: Vec::new(),
+        }
+    }
+
+    /// Select the batched-engine implementation of the wrapped unit (call
+    /// before running; both engines are bit-identical).
+    pub fn with_engine(mut self, engine: BatchEngine) -> AdaptiveArith {
+        self.inner = FixedArith::new(self.policy.ladder[self.rung]).with_engine(engine);
+        self
+    }
+
+    /// Replay mode: ignore live telemetry decisions and apply `decisions`
+    /// (a recorded [`AdaptiveReport::decisions`] log) verbatim, one per
+    /// epoch boundary — this pins a run to another run's switch schedule.
+    pub fn from_trace(policy: AdaptivePolicy, decisions: Vec<Decision>) -> AdaptiveArith {
+        let mut s = AdaptiveArith::new(policy);
+        s.replay = Some(decisions);
+        s
+    }
+
+    /// The format of the current rung.
+    pub fn format(&self) -> FpFormat {
+        self.policy.ladder[self.rung]
+    }
+
+    /// Current rung index.
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    pub fn policy(&self) -> &AdaptivePolicy {
+        &self.policy
+    }
+
+    /// Applied switches so far.
+    pub fn trace(&self) -> &[SwitchEvent] {
+        &self.trace
+    }
+
+    /// Every epoch-boundary decision so far.
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+
+    /// Cumulative range events of the wrapped unit.
+    pub fn events(&self) -> RangeEvents {
+        self.inner.events
+    }
+
+    /// Do all rungs fit a packed `u32` word (⇒ the persistent packed
+    /// Full-mode heat driver is applicable)?
+    pub fn ladder_fits_word(&self) -> bool {
+        self.policy.ladder.iter().all(|f| f.fits_word())
+    }
+
+    /// Size the run-level [`StageTracker`] telemetry: `expected_records`
+    /// state samples from **committed** epochs will stream through
+    /// `end_epoch` over the whole run (widen-retried attempts feed the
+    /// decision but not the stage quarters, so the count is exact and the
+    /// quarters align with simulation quarters).
+    pub fn prepare(&mut self, expected_records: u64) {
+        self.stages = Some(StageTracker::new(4, expected_records));
+    }
+
+    /// Mark the start of an epoch attempt: subsequent [`RangeEvents`] are
+    /// attributed to it. Call again before re-running a retried epoch.
+    pub fn begin_epoch(&mut self) {
+        self.mark = self.inner.events;
+    }
+
+    /// Charge `muls` multiplications to the current rung's cost account.
+    pub fn charge(&mut self, muls: u64) {
+        self.ops[self.rung] += muls;
+    }
+
+    /// Modeled datapath cost so far: Σ per-rung multiplications × the
+    /// calibrated LUT area of a fixed multiplier of that format.
+    pub fn modeled_cost_lut(&self) -> f64 {
+        self.policy
+            .ladder
+            .iter()
+            .zip(self.ops.iter())
+            .map(|(fmt, &n)| n as f64 * fixed_multiplier(*fmt).lut)
+            .sum()
+    }
+
+    /// End an epoch attempt: stream the state sample into the telemetry
+    /// (histogram + stage tracker), compute the event delta since
+    /// [`AdaptiveArith::begin_epoch`], decide, and apply any rung change.
+    /// On [`Decision::Widen`] the caller must restore the epoch's saved
+    /// start state, re-quantize it into the new format, call `begin_epoch`
+    /// and re-run the epoch.
+    pub fn end_epoch(&mut self, state: &[f64], step: usize) -> Decision {
+        let mut hist = Log2Histogram::new();
+        for &v in state {
+            hist.record(v);
+        }
+        let delta = RangeEvents {
+            overflows: self.inner.events.overflows - self.mark.overflows,
+            underflows: self.inner.events.underflows - self.mark.underflows,
+        };
+        let (min_abs, max_abs) = hist.nonzero_range().unwrap_or((0.0, 0.0));
+        let tele = EpochTelemetry {
+            events: delta,
+            nonfinite: hist.nonfinite,
+            max_abs,
+            min_abs,
+            samples: hist.total,
+        };
+        // Stall detector: bit-exact comparison against the previous epoch's
+        // sample (identical across the scalar and packed paths, since both
+        // produce bit-identical states).
+        let stalled = self.last_state_bits.len() == state.len()
+            && self.last_state_bits.iter().zip(state.iter()).all(|(&b, v)| b == v.to_bits());
+        self.last_state_bits.clear();
+        self.last_state_bits.extend(state.iter().map(|v| v.to_bits()));
+
+        let decision = if self.replay.is_some() {
+            let d = self
+                .replay
+                .as_ref()
+                .and_then(|log| log.get(self.replay_cursor).copied())
+                .unwrap_or(Decision::Stay);
+            self.replay_cursor += 1;
+            // A faithful log never walks off the ladder, but a hand-built
+            // or policy-mismatched one could: degrade to Stay instead of
+            // under/overflowing the rung index.
+            match d {
+                Decision::Widen if self.rung + 1 >= self.policy.ladder.len() => Decision::Stay,
+                Decision::Narrow if self.rung == 0 => Decision::Stay,
+                d => d,
+            }
+        } else {
+            self.decide(&tele, stalled)
+        };
+        self.decisions.push(decision);
+
+        // Run-level stage telemetry covers the *committed* trajectory:
+        // widen-retried attempts never reach it, so the quarters line up
+        // with simulation quarters and the record count matches
+        // [`AdaptiveArith::prepare`] exactly.
+        if decision != Decision::Widen {
+            for &v in state {
+                self.overall.record(v);
+                if let Some(t) = self.stages.as_mut() {
+                    t.record(v);
+                }
+            }
+        }
+
+        match decision {
+            Decision::Widen => {
+                let from = self.format();
+                self.rung += 1;
+                self.clean = 0;
+                self.inner.fmt = self.format();
+                self.trace.push(SwitchEvent {
+                    epoch: self.epoch,
+                    step,
+                    from,
+                    to: self.format(),
+                    widened: true,
+                });
+                // Epoch index unchanged: the caller retries this epoch.
+            }
+            Decision::Narrow => {
+                let from = self.format();
+                self.rung -= 1;
+                self.clean = 0;
+                self.inner.fmt = self.format();
+                self.trace.push(SwitchEvent {
+                    epoch: self.epoch,
+                    step,
+                    from,
+                    to: self.format(),
+                    widened: false,
+                });
+                self.epoch += 1;
+            }
+            Decision::Stay => {
+                self.epoch += 1;
+            }
+        }
+        decision
+    }
+
+    /// The live widen/narrow/streak state machine (bypassed in replay).
+    fn decide(&mut self, t: &EpochTelemetry, stalled: bool) -> Decision {
+        let p = &self.policy;
+        let pressure = t.events.overflows >= p.widen_overflow_threshold
+            || (p.widen_on_nonfinite && t.nonfinite > 0);
+        if pressure {
+            self.clean = 0;
+            if self.rung + 1 < p.ladder.len() {
+                return Decision::Widen;
+            }
+            // Already at the widest rung: accept, like R2F2's unresolved
+            // saturation at k = FX.
+            self.pressure_at_widest += 1;
+            return Decision::Stay;
+        }
+        let clean = p.narrow_underflow_guard.is_none_or(|g| t.events.underflows <= g);
+        if clean {
+            self.clean += 1;
+        } else {
+            self.clean = 0;
+        }
+        if self.rung > 0
+            && self.clean >= p.narrow_clean_epochs
+            && (!p.narrow_requires_stall || stalled)
+            && p.headroom_ok(t.max_abs, p.ladder[self.rung - 1])
+        {
+            return Decision::Narrow;
+        }
+        Decision::Stay
+    }
+
+    /// Consume the run's telemetry into a report (the stage tracker is
+    /// finished; further epochs would re-start its staging).
+    pub fn report(&mut self) -> AdaptiveReport {
+        let stages = self.stages.take().map(StageTracker::finish).unwrap_or_default();
+        AdaptiveReport {
+            trace: self.trace.clone(),
+            decisions: self.decisions.clone(),
+            epochs: self.epoch,
+            widen_events: self.trace.iter().filter(|e| e.widened).count() as u64,
+            narrow_events: self.trace.iter().filter(|e| !e.widened).count() as u64,
+            pressure_at_widest: self.pressure_at_widest,
+            ops_per_rung: self
+                .policy
+                .ladder
+                .iter()
+                .copied()
+                .zip(self.ops.iter().copied())
+                .collect(),
+            modeled_cost_lut: self.modeled_cost_lut(),
+            final_format: self.format(),
+            events: self.inner.events,
+            overall: self.overall.clone(),
+            stages,
+        }
+    }
+}
+
+/// Modeled datapath cost of an all-fixed run: `muls` multiplications at
+/// `fmt`'s calibrated per-multiplication LUT area. The comparison target
+/// for [`AdaptiveArith::modeled_cost_lut`].
+pub fn fixed_cost_lut(fmt: FpFormat, muls: u64) -> f64 {
+    muls as f64 * fixed_multiplier(fmt).lut
+}
+
+impl Arith for AdaptiveArith {
+    fn name(&self) -> String {
+        let mut s = String::from("adaptive(");
+        for (i, f) in self.policy.ladder.iter().enumerate() {
+            if i > 0 {
+                s.push('→');
+            }
+            s.push_str(&f.to_string());
+        }
+        s.push(')');
+        s
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        self.inner.mul(a, b)
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        self.inner.add(a, b)
+    }
+    fn quant(&mut self, x: f64) -> f64 {
+        self.inner.quant(x)
+    }
+    fn mul_batch(&mut self, out: &mut [f64], a: f64, xs: &[f64]) {
+        self.inner.mul_batch(out, a, xs);
+    }
+    fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
+        self.inner.mul_pairs(out, pairs);
+    }
+    fn stencil_step(&mut self, next: &mut [f64], u: &[f64], r: f64, mode: QuantMode) {
+        self.inner.stencil_step(next, u, r, mode);
+    }
+    fn stencil_multi(
+        &mut self,
+        u: &mut Vec<f64>,
+        next: &mut Vec<f64>,
+        r: f64,
+        mode: QuantMode,
+        steps: usize,
+        snapshot_every: usize,
+        snapshots: &mut Vec<(usize, Vec<f64>)>,
+    ) {
+        self.inner.stencil_multi(u, next, r, mode, steps, snapshot_every, snapshots);
+    }
+    fn flux_batch(&mut self, out: &mut [f64], g2: f64, q: &[(f64, f64)], mode: QuantMode) {
+        self.inner.flux_batch(out, g2, q, mode);
+    }
+    fn range_events(&self) -> Option<RangeEvents> {
+        Some(self.inner.events)
+    }
+    fn active_format(&self) -> Option<FpFormat> {
+        Some(self.format())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heat-equation adaptive runners
+// ---------------------------------------------------------------------------
+
+/// Adaptive heat run on the batched engines. `QuantMode::Full` with the
+/// packed engine (and a word-sized ladder) runs the persistent packed
+/// driver: state stays in [`PackedVec`] words across epochs and a switch
+/// repacks it once. Bit-identical to [`run_heat_scalar`] under the same
+/// schedule — and the schedules themselves coincide, since the decision
+/// inputs are bit-identical.
+pub fn run_heat(params: &HeatParams, sched: &mut AdaptiveArith, mode: QuantMode) -> HeatResult {
+    run_heat_impl(params, sched, mode, true)
+}
+
+/// The per-multiplication scalar reference of [`run_heat`].
+pub fn run_heat_scalar(
+    params: &HeatParams,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+) -> HeatResult {
+    run_heat_impl(params, sched, mode, false)
+}
+
+fn run_heat_impl(
+    params: &HeatParams,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+) -> HeatResult {
+    assert!(params.n >= 3, "need at least one interior node");
+    assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());
+    let n = params.n;
+    let name = sched.name();
+    let epoch_len = sched.policy.epoch_len;
+    let est_epochs = params.steps.div_ceil(epoch_len).max(1);
+    sched.prepare(est_epochs as u64 * n as u64);
+
+    let raw = params.init.sample(n, params.length);
+
+    if params.steps == 0 {
+        let mut u = raw;
+        if mode == QuantMode::Full {
+            for v in u.iter_mut() {
+                *v = sched.inner.quant(*v);
+            }
+        }
+        return HeatResult {
+            u,
+            snapshots: Vec::new(),
+            muls: 0,
+            backend: name,
+            r2f2_stats: None,
+            range_events: Some(sched.inner.events),
+        };
+    }
+
+    if batched
+        && mode == QuantMode::Full
+        && sched.inner.engine == BatchEngine::Packed
+        && sched.ladder_fits_word()
+    {
+        return run_heat_packed_full(params, sched, &raw, name);
+    }
+
+    let r = params.r();
+    let mut u = raw.clone();
+    let mut next = u.clone();
+    let mut snapshots = Vec::new();
+    let mut muls = 0u64;
+    let mut done = 0usize;
+
+    while done < params.steps {
+        let e_len = epoch_len.min(params.steps - done);
+        // Epoch-start save. For the very first epoch this is the *raw*
+        // field, so a widen retry re-quantizes the original data in the
+        // wider format (nothing of the narrow attempt survives).
+        let save = u.clone();
+        let mut need_quant = mode == QuantMode::Full && done == 0;
+        loop {
+            sched.begin_epoch();
+            if need_quant {
+                for v in u.iter_mut() {
+                    *v = sched.inner.quant(*v);
+                }
+                need_quant = false;
+            }
+            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
+            for s in 0..e_len {
+                if batched {
+                    // The backend's batched per-sweep engine (packed or
+                    // carrier — both bit-identical to the scalar spec).
+                    sched.inner.stencil_step(&mut next, &u, r, mode);
+                } else {
+                    // The one canonical scalar sequence — shared with
+                    // `heat1d::run_scalar` and the batched engines' own
+                    // reference, so the three paths cannot drift.
+                    scalar_stencil_step(&mut sched.inner, &mut next, &u, r, mode);
+                }
+                std::mem::swap(&mut u, &mut next);
+                let global = done + s + 1;
+                if params.snapshot_every != 0 && global % params.snapshot_every == 0 {
+                    esnaps.push((global, u.clone()));
+                }
+            }
+            let delta = 3 * (n as u64 - 2) * e_len as u64;
+            muls += delta;
+            sched.charge(delta);
+            match sched.end_epoch(&u, done + e_len) {
+                Decision::Widen => {
+                    u.copy_from_slice(&save);
+                    need_quant = mode == QuantMode::Full;
+                }
+                Decision::Narrow => {
+                    if mode == QuantMode::Full {
+                        // Re-quantize the committed state into the
+                        // narrower format (may flush/saturate; the flags
+                        // are counted exactly like the packed repack's).
+                        for v in u.iter_mut() {
+                            *v = sched.inner.quant(*v);
+                        }
+                    }
+                    snapshots.extend(esnaps);
+                    break;
+                }
+                Decision::Stay => {
+                    snapshots.extend(esnaps);
+                    break;
+                }
+            }
+        }
+        done += e_len;
+    }
+
+    HeatResult {
+        u,
+        snapshots,
+        muls,
+        backend: name,
+        r2f2_stats: None,
+        range_events: Some(sched.inner.events),
+    }
+}
+
+/// The persistent packed Full-mode driver: state lives in [`PackedVec`]
+/// words across *all* epochs; a format switch repacks the words once
+/// (`PackedVec::repack`) with per-element flags charged exactly like the
+/// scalar path's per-element re-quantization; a widen retry restores the
+/// epoch's saved words and repacks those instead.
+fn run_heat_packed_full(
+    params: &HeatParams,
+    sched: &mut AdaptiveArith,
+    raw: &[f64],
+    name: String,
+) -> HeatResult {
+    let n = params.n;
+    let r = params.r();
+    let epoch_len = sched.policy.epoch_len;
+    let sweep_muls = 3 * (n as u64 - 2);
+    let mut rnd = Rounder::nearest_even();
+
+    let mut pv = PackedVec::new(sched.format());
+    let mut wnext: Vec<u32> = vec![0; n];
+    let mut pr: Vec<u32> = vec![0; n];
+    let mut pr_fl: Vec<Flags> = vec![Flags::NONE; n];
+    // The state is always format-representable (it is quantized on entry
+    // and after every switch), so its per-sweep re-encode flags are NONE —
+    // the same invariant the scalar path sees.
+    let enc_fl: Vec<Flags> = vec![Flags::NONE; n];
+    let mut tele = vec![0.0f64; n];
+    let mut snapshots = Vec::new();
+    let mut muls = 0u64;
+    let mut done = 0usize;
+    // Initial quantization is deferred into the first epoch attempt so its
+    // flags land in epoch 0's event delta, exactly like the scalar path.
+    let mut need_encode = true;
+
+    while done < params.steps {
+        let e_len = epoch_len.min(params.steps - done);
+        let (save_words, save_fmt) = if done == 0 {
+            (Vec::new(), sched.format())
+        } else {
+            (pv.words().to_vec(), pv.format())
+        };
+        loop {
+            sched.begin_epoch();
+            if need_encode {
+                pv = PackedVec::new(sched.format());
+                let mut efl: Vec<Flags> = Vec::new();
+                pv.encode_from(raw, &mut rnd, &mut efl);
+                for f in &efl {
+                    sched.inner.track(*f);
+                }
+                need_encode = false;
+            }
+            let pf = *pv.packed_format();
+            let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
+            let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
+            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
+            let mut of = 0u64;
+            let mut uf = 0u64;
+            for s in 0..e_len {
+                let (o, f) = packed_full_sweep(
+                    &pf, &mut rnd, wr, flr, w2r, fl2r, pv.words(), &enc_fl, &mut wnext, &mut pr,
+                    &mut pr_fl,
+                );
+                of += o;
+                uf += f;
+                std::mem::swap(pv.words_mut(), &mut wnext);
+                let global = done + s + 1;
+                if params.snapshot_every != 0 && global % params.snapshot_every == 0 {
+                    let mut snap = vec![0.0; n];
+                    pv.decode_into(&mut snap);
+                    esnaps.push((global, snap));
+                }
+            }
+            sched.inner.events.overflows += of;
+            sched.inner.events.underflows += uf;
+            let delta = sweep_muls * e_len as u64;
+            muls += delta;
+            sched.charge(delta);
+            pv.decode_into(&mut tele);
+            match sched.end_epoch(&tele, done + e_len) {
+                Decision::Widen => {
+                    if done == 0 {
+                        need_encode = true;
+                    } else {
+                        // Restore the epoch's saved words (in their saved
+                        // format) and repack once into the widened format.
+                        pv = PackedVec::new(save_fmt);
+                        pv.words_mut().extend_from_slice(&save_words);
+                        let to = sched.format();
+                        let inner = &mut sched.inner;
+                        pv.repack(to, &mut rnd, |_, fl| inner.track(fl));
+                    }
+                }
+                Decision::Narrow => {
+                    let to = sched.format();
+                    let inner = &mut sched.inner;
+                    pv.repack(to, &mut rnd, |_, fl| inner.track(fl));
+                    snapshots.extend(esnaps);
+                    break;
+                }
+                Decision::Stay => {
+                    snapshots.extend(esnaps);
+                    break;
+                }
+            }
+        }
+        done += e_len;
+    }
+
+    let mut u = vec![0.0; n];
+    pv.decode_into(&mut u);
+    HeatResult {
+        u,
+        snapshots,
+        muls,
+        backend: name,
+        r2f2_stats: None,
+        range_events: Some(sched.inner.events),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shallow-water adaptive runners
+// ---------------------------------------------------------------------------
+
+/// Adaptive shallow-water run on the batched flux engine. The telemetry
+/// sample is the interior depth + x-momentum fields; SWE state lives in
+/// the f64 carrier under every mode, so a switch only moves the flux
+/// datapath's format (no state repack is needed).
+pub fn run_swe(
+    params: &SweParams,
+    sched: &mut AdaptiveArith,
+    scope: QuantScope,
+    mode: QuantMode,
+) -> SweResult {
+    run_swe_impl(params, sched, scope, mode, true)
+}
+
+/// The per-multiplication scalar reference of [`run_swe`].
+pub fn run_swe_scalar(
+    params: &SweParams,
+    sched: &mut AdaptiveArith,
+    scope: QuantScope,
+    mode: QuantMode,
+) -> SweResult {
+    run_swe_impl(params, sched, scope, mode, false)
+}
+
+fn run_swe_impl(
+    params: &SweParams,
+    sched: &mut AdaptiveArith,
+    scope: QuantScope,
+    mode: QuantMode,
+    batched: bool,
+) -> SweResult {
+    let n = params.n;
+    assert!(n >= 4, "grid too small");
+    let name = sched.name();
+    let epoch_len = sched.policy.epoch_len;
+    let est_epochs = params.steps.div_ceil(epoch_len).max(1);
+    sched.prepare(est_epochs as u64 * 2 * (n * n) as u64);
+
+    let mut sim = SweSim::new(params);
+    let mut snapshots = Vec::new();
+    let mut muls = 0u64;
+    let mut tele: Vec<f64> = Vec::new();
+    let mut done = 0usize;
+
+    while done < params.steps {
+        let e_len = epoch_len.min(params.steps - done);
+        let save = sim.save();
+        loop {
+            sched.begin_epoch();
+            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
+            let delta = {
+                let mut ctx = Ctx::new(&mut sched.inner, mode);
+                for s in 0..e_len {
+                    sim.step(&mut ctx, scope, batched);
+                    let global = done + s + 1;
+                    if params.snapshot_every != 0 && global % params.snapshot_every == 0 {
+                        esnaps.push((global, sim.interior_h()));
+                    }
+                }
+                ctx.muls
+            };
+            muls += delta;
+            sched.charge(delta);
+            sim.telemetry(&mut tele);
+            match sched.end_epoch(&tele, done + e_len) {
+                Decision::Widen => sim.restore(&save),
+                Decision::Narrow | Decision::Stay => {
+                    snapshots.extend(esnaps);
+                    break;
+                }
+            }
+        }
+        done += e_len;
+    }
+
+    sim.finish(muls, name, None, Some(sched.inner.events), snapshots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::heat1d;
+    use crate::pde::rel_l2;
+
+    fn tiny_heat() -> HeatParams {
+        HeatParams {
+            n: 17,
+            dt: 0.25 / (16.0f64 * 16.0),
+            steps: 96,
+            ..HeatParams::default()
+        }
+    }
+
+    #[test]
+    fn widen_fires_on_overflow_pressure_and_retries_cleanly() {
+        // Amplitude 500 > E4M3's max finite 480: epoch 0 must widen, and
+        // because the epoch is retried from the raw field, the committed
+        // MulOnly trajectory is exactly the all-E5M10 one.
+        let p = tiny_heat();
+        let mut sched = AdaptiveArith::new(AdaptivePolicy::heat_default());
+        let res = run_heat(&p, &mut sched, QuantMode::MulOnly);
+        let rep = sched.report();
+        assert!(rep.widen_events >= 1, "trace: {:?}", rep.trace);
+        assert_eq!(rep.final_format, FpFormat::E5M10);
+
+        let mut fixed = FixedArith::new(FpFormat::E5M10);
+        let want = heat1d::run(&p, &mut fixed, QuantMode::MulOnly);
+        for i in 0..p.n {
+            assert_eq!(res.u[i].to_bits(), want.u[i].to_bits(), "node {i}");
+        }
+        // The aborted E4M3 attempt is still charged: one 32-step epoch of
+        // 3·(n−2) multiplications per step on top of the committed run.
+        assert!(rep.ops_per_rung[0].1 > 0);
+        assert_eq!(res.muls, p.expected_muls() + 32 * 3 * (p.n as u64 - 2));
+    }
+
+    #[test]
+    fn narrow_fires_after_decay_with_headroom() {
+        // Longer decay at hysteresis headroom: the solution shrinks far
+        // below E4M3's ceiling, stalls (every E5M10 product flushes), and
+        // the ladder narrows back.
+        let mut p = tiny_heat();
+        p.steps = 900;
+        let mut policy = AdaptivePolicy::heat_default();
+        policy.epoch_len = 16;
+        let mut sched = AdaptiveArith::new(policy);
+        let _ = run_heat(&p, &mut sched, QuantMode::Full);
+        let rep = sched.report();
+        assert!(rep.widen_events >= 1, "trace: {:?}", rep.trace);
+        assert!(rep.narrow_events >= 1, "trace: {:?}", rep.trace);
+        assert_eq!(rep.final_format, FpFormat::E4M3);
+        // Telemetry staging reused the fixed StageTracker: stage maxima
+        // shrink as the sine decays (the Fig. 2 story, now load-bearing).
+        assert_eq!(rep.stages.len(), 4);
+        assert!(rep.stages[rep.stages.len() - 1].max_abs < rep.stages[0].max_abs);
+    }
+
+    #[test]
+    fn replayed_schedule_matches_live_schedule() {
+        let mut p = tiny_heat();
+        p.steps = 700;
+        let mut policy = AdaptivePolicy::heat_default();
+        policy.epoch_len = 16;
+        let mut live = AdaptiveArith::new(policy.clone());
+        let res_live = run_heat(&p, &mut live, QuantMode::Full);
+        let rep = live.report();
+
+        let mut replay = AdaptiveArith::from_trace(policy, rep.decisions.clone());
+        let res_replay = run_heat(&p, &mut replay, QuantMode::Full);
+        let rep2 = replay.report();
+        assert_eq!(rep.trace, rep2.trace);
+        for i in 0..p.n {
+            assert_eq!(res_live.u[i].to_bits(), res_replay.u[i].to_bits(), "node {i}");
+        }
+        assert_eq!(res_live.range_events, res_replay.range_events);
+    }
+
+    #[test]
+    fn pressure_at_widest_is_accounted() {
+        // A one-rung ladder can never widen: pressure is recorded instead.
+        let p = tiny_heat();
+        let mut policy = AdaptivePolicy::new(vec![FpFormat::E4M3]);
+        policy.epoch_len = 16;
+        let mut sched = AdaptiveArith::new(policy);
+        let _ = run_heat(&p, &mut sched, QuantMode::MulOnly);
+        let rep = sched.report();
+        assert_eq!(rep.widen_events, 0);
+        assert!(rep.pressure_at_widest >= 1);
+    }
+
+    #[test]
+    fn modeled_cost_accounts_per_rung() {
+        let mut sched = AdaptiveArith::new(AdaptivePolicy::heat_default());
+        sched.charge(100); // E4M3
+        let before = sched.modeled_cost_lut();
+        assert!((before - fixed_cost_lut(FpFormat::E4M3, 100)).abs() < 1e-9);
+        assert!(fixed_cost_lut(FpFormat::E4M3, 100) < fixed_cost_lut(FpFormat::E5M10, 100));
+    }
+
+    #[test]
+    fn adaptive_arith_delegates_as_plain_backend() {
+        // Plugged into the ordinary (non-adaptive) harness, the scheduler
+        // behaves exactly like its current rung's fixed engine.
+        let p = tiny_heat();
+        let mut sched = AdaptiveArith::new(AdaptivePolicy::new(vec![FpFormat::E5M10]));
+        let a = heat1d::run(&p, &mut sched, QuantMode::MulOnly);
+        let mut fixed = FixedArith::new(FpFormat::E5M10);
+        let b = heat1d::run(&p, &mut fixed, QuantMode::MulOnly);
+        assert_eq!(rel_l2(&a.u, &b.u), 0.0);
+        assert_eq!(a.range_events, b.range_events);
+        assert_eq!(sched.active_format(), Some(FpFormat::E5M10));
+    }
+}

@@ -99,6 +99,30 @@ pub fn run_scalar(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> H
     run_impl(params, be, mode, false)
 }
 
+/// Adaptive-precision run: the [`super::AdaptiveArith`] scheduler samples
+/// range telemetry between timesteps and walks its format ladder under the
+/// widen/narrow hysteresis policy (`pde::adaptive`). In `Full` mode with
+/// the packed engine the state stays in `PackedVec` words across epochs
+/// and a switch repacks it once. The schedule trace is available from the
+/// scheduler afterwards.
+pub fn run_adaptive(
+    params: &HeatParams,
+    sched: &mut super::AdaptiveArith,
+    mode: QuantMode,
+) -> HeatResult {
+    super::adaptive::run_heat(params, sched, mode)
+}
+
+/// The per-multiplication scalar reference of [`run_adaptive`] —
+/// bit-identical to it, including the switch schedule.
+pub fn run_adaptive_scalar(
+    params: &HeatParams,
+    sched: &mut super::AdaptiveArith,
+    mode: QuantMode,
+) -> HeatResult {
+    super::adaptive::run_heat_scalar(params, sched, mode)
+}
+
 fn run_impl(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode, batched: bool) -> HeatResult {
     assert!(params.n >= 3, "need at least one interior node");
     assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());

@@ -10,9 +10,12 @@
 //! additions too (`Full`, the paper's "simulation using half precision"
 //! baseline of Fig. 1).
 
+pub mod adaptive;
 pub mod heat1d;
 pub mod init;
 pub mod swe2d;
+
+pub use adaptive::{AdaptiveArith, AdaptivePolicy, AdaptiveReport, Decision, SwitchEvent};
 
 use crate::r2f2core::{EncSlot, R2f2Config, R2f2Multiplier, Stats};
 use crate::softfloat::batch::{mul_batch_packed, mul_pairs_packed};
@@ -159,6 +162,14 @@ pub trait Arith {
     }
     /// Overflow/underflow events, if the backend tracks them.
     fn range_events(&self) -> Option<RangeEvents> {
+        None
+    }
+    /// The emulated format currently active in this unit, if it has one —
+    /// `FixedArith`'s fixed format, R2F2's effective format at the current
+    /// split, the adaptive scheduler's current rung. Hardware backends
+    /// (`f64`/`f32`) return `None`. Reports and benches use this to label
+    /// rows without downcasting.
+    fn active_format(&self) -> Option<FpFormat> {
         None
     }
 }
@@ -869,6 +880,9 @@ impl Arith for FixedArith {
     fn range_events(&self) -> Option<RangeEvents> {
         Some(self.events)
     }
+    fn active_format(&self) -> Option<FpFormat> {
+        Some(self.fmt)
+    }
 }
 
 /// The runtime-reconfigurable multiplier under test.
@@ -1025,6 +1039,9 @@ impl Arith for R2f2Arith {
     fn r2f2_stats(&self) -> Option<Stats> {
         Some(self.unit.stats())
     }
+    fn active_format(&self) -> Option<FpFormat> {
+        Some(self.unit.config().format(self.unit.split()))
+    }
 }
 
 /// Fixed format with **stochastic rounding** — the extension the paper
@@ -1085,6 +1102,9 @@ impl Arith for StochasticArith {
     fn range_events(&self) -> Option<RangeEvents> {
         Some(self.events)
     }
+    fn active_format(&self) -> Option<FpFormat> {
+        Some(self.fmt)
+    }
 }
 
 /// Decorator that streams every multiplication's operands and result into a
@@ -1114,6 +1134,9 @@ impl<'a, A: Arith> Arith for RecordingArith<'a, A> {
     }
     fn range_events(&self) -> Option<RangeEvents> {
         self.inner.range_events()
+    }
+    fn active_format(&self) -> Option<FpFormat> {
+        self.inner.active_format()
     }
 }
 

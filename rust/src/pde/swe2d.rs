@@ -173,6 +173,30 @@ pub fn run_scalar_mode(
     run_impl(params, be, scope, mode, false)
 }
 
+/// Adaptive-precision run: the [`super::AdaptiveArith`] scheduler samples
+/// range telemetry between timesteps and walks its format ladder under the
+/// widen/narrow hysteresis policy (`pde::adaptive`). The schedule trace is
+/// available from the scheduler afterwards.
+pub fn run_adaptive(
+    params: &SweParams,
+    sched: &mut super::AdaptiveArith,
+    scope: QuantScope,
+    mode: QuantMode,
+) -> SweResult {
+    super::adaptive::run_swe(params, sched, scope, mode)
+}
+
+/// The per-multiplication scalar reference of [`run_adaptive`] —
+/// bit-identical to it, including the switch schedule.
+pub fn run_adaptive_scalar(
+    params: &SweParams,
+    sched: &mut super::AdaptiveArith,
+    scope: QuantScope,
+    mode: QuantMode,
+) -> SweResult {
+    super::adaptive::run_swe_scalar(params, sched, scope, mode)
+}
+
 /// Evaluate one row's worth of quantized fluxes into a reused output
 /// buffer, either fused through the batched engine or via per-call
 /// [`f2_quant`] — the streams are identical.
@@ -186,6 +210,126 @@ fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batc
     }
 }
 
+/// The simulation state + scratch of one shallow-water run, factored out
+/// of the monolithic step loop so the adaptive runner (`pde::adaptive`)
+/// can drive it epoch-by-epoch with save/restore retry semantics. Only the
+/// grid (`h`, `u`, `v` with ghost cells) carries across steps; the
+/// half-step arrays and flux row buffers are per-step scratch.
+pub(super) struct SweSim {
+    n: usize,
+    m: usize,
+    g2: f64,
+    ddx: f64,
+    ddy: f64,
+    grid: Grid,
+    hx: Vec<f64>,
+    ux: Vec<f64>,
+    vx: Vec<f64>,
+    hy: Vec<f64>,
+    uy: Vec<f64>,
+    vy: Vec<f64>,
+    fin: Vec<(f64, f64)>,
+    frow: Vec<f64>,
+    mass0: f64,
+}
+
+impl SweSim {
+    pub(super) fn new(params: &SweParams) -> SweSim {
+        let n = params.n;
+        assert!(n >= 4, "grid too small");
+        let (dt, dx, g) = (params.dt, params.dx, params.g);
+        let side = n as f64 * dx;
+        let h0 = params.init.sample(n, side);
+        let mut grid = Grid {
+            n,
+            h: vec![params.init.base_depth; (n + 2) * (n + 2)],
+            u: vec![0.0; (n + 2) * (n + 2)],
+            v: vec![0.0; (n + 2) * (n + 2)],
+        };
+        for j in 0..n {
+            for i in 0..n {
+                let id = grid.idx(i + 1, j + 1);
+                grid.h[id] = h0[j * n + i];
+            }
+        }
+        let mass0: f64 = interior(&grid.h, n).iter().sum();
+        SweSim {
+            n,
+            m: n + 1,
+            g2: 0.5 * g,
+            ddx: dt / dx,
+            ddy: dt / dx,
+            grid,
+            // Half-step arrays (Moler's waterwave layout).
+            hx: vec![0.0; (n + 1) * (n + 1)],
+            ux: vec![0.0; (n + 1) * (n + 1)],
+            vx: vec![0.0; (n + 1) * (n + 1)],
+            hy: vec![0.0; (n + 1) * (n + 1)],
+            uy: vec![0.0; (n + 1) * (n + 1)],
+            vy: vec![0.0; (n + 1) * (n + 1)],
+            // Reused flux input/output row buffers (no per-row allocation
+            // in the hot loop).
+            fin: Vec::new(),
+            frow: Vec::new(),
+            mass0,
+        }
+    }
+
+    /// The persistent state (`h`, `u`, `v` including ghosts) — everything
+    /// a retried epoch needs restored.
+    pub(super) fn save(&self) -> [Vec<f64>; 3] {
+        [self.grid.h.clone(), self.grid.u.clone(), self.grid.v.clone()]
+    }
+
+    pub(super) fn restore(&mut self, s: &[Vec<f64>; 3]) {
+        self.grid.h.copy_from_slice(&s[0]);
+        self.grid.u.copy_from_slice(&s[1]);
+        self.grid.v.copy_from_slice(&s[2]);
+    }
+
+    /// Stream the interior depth + x-momentum fields into `out` — the
+    /// adaptive scheduler's per-epoch range-telemetry sample.
+    pub(super) fn telemetry(&self, out: &mut Vec<f64>) {
+        out.clear();
+        let n = self.n;
+        for i in 1..=n {
+            for j in 1..=n {
+                out.push(self.grid.h[i * (n + 2) + j]);
+                out.push(self.grid.u[i * (n + 2) + j]);
+            }
+        }
+    }
+
+    pub(super) fn interior_h(&self) -> Vec<f64> {
+        interior(&self.grid.h, self.n)
+    }
+
+    /// Build the result record (consumes the simulation).
+    pub(super) fn finish(
+        self,
+        muls: u64,
+        backend: String,
+        r2f2_stats: Option<Stats>,
+        range_events: Option<RangeEvents>,
+        snapshots: Vec<(usize, Vec<f64>)>,
+    ) -> SweResult {
+        let n = self.n;
+        let h = interior(&self.grid.h, n);
+        let mass1: f64 = h.iter().sum();
+        SweResult {
+            h,
+            u: interior(&self.grid.u, n),
+            v: interior(&self.grid.v, n),
+            snapshots,
+            muls,
+            backend,
+            r2f2_stats,
+            range_events,
+            mass_drift: ((mass1 - self.mass0) / self.mass0).abs(),
+        }
+    }
+}
+
 fn run_impl(
     params: &SweParams,
     be: &mut dyn Arith,
@@ -193,49 +337,38 @@ fn run_impl(
     mode: QuantMode,
     batched: bool,
 ) -> SweResult {
-    let n = params.n;
-    assert!(n >= 4, "grid too small");
     let name = be.name();
     let mut ctx = Ctx::new(be, mode);
-    let (dt, dx, g) = (params.dt, params.dx, params.g);
-    let g2 = 0.5 * g;
-    let (ddx, ddy) = (dt / dx, dt / dx);
-
-    let side = n as f64 * dx;
-    let h0 = params.init.sample(n, side);
-    let mut grid = Grid {
-        n,
-        h: vec![params.init.base_depth; (n + 2) * (n + 2)],
-        u: vec![0.0; (n + 2) * (n + 2)],
-        v: vec![0.0; (n + 2) * (n + 2)],
-    };
-    for j in 0..n {
-        for i in 0..n {
-            let id = grid.idx(i + 1, j + 1);
-            grid.h[id] = h0[j * n + i];
-        }
-    }
-
-    let mass0: f64 = interior(&grid.h, n).iter().sum();
-
-    // Half-step arrays (Moler's waterwave layout).
-    let mut hx = vec![0.0; (n + 1) * (n + 1)];
-    let mut ux = vec![0.0; (n + 1) * (n + 1)];
-    let mut vx = vec![0.0; (n + 1) * (n + 1)];
-    let mut hy = vec![0.0; (n + 1) * (n + 1)];
-    let mut uy = vec![0.0; (n + 1) * (n + 1)];
-    let mut vy = vec![0.0; (n + 1) * (n + 1)];
-    let m = n + 1;
-
-    // Reused flux input/output row buffers (no per-row allocation in the
-    // hot loop).
-    let mut fin: Vec<(f64, f64)> = Vec::new();
-    let mut frow: Vec<f64> = Vec::new();
-
+    let mut sim = SweSim::new(params);
     let mut snapshots = Vec::new();
 
     for step in 0..params.steps {
-        reflect(&mut grid);
+        sim.step(&mut ctx, scope, batched);
+        if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
+            snapshots.push((step + 1, sim.interior_h()));
+        }
+    }
+
+    let muls = ctx.muls;
+    sim.finish(muls, name, be.r2f2_stats(), be.range_events(), snapshots)
+}
+
+impl SweSim {
+    /// One Lax–Wendroff step (two half steps + the full step), with the
+    /// scope-selected flux multiplications routed through `ctx` — the body
+    /// of the original monolithic loop, verbatim.
+    pub(super) fn step(&mut self, ctx: &mut Ctx, scope: QuantScope, batched: bool) {
+        let n = self.n;
+        let m = self.m;
+        let g2 = self.g2;
+        let (ddx, ddy) = (self.ddx, self.ddy);
+        let grid = &mut self.grid;
+        let (hx, ux, vx) = (&mut self.hx, &mut self.ux, &mut self.vx);
+        let (hy, uy, vy) = (&mut self.hy, &mut self.uy, &mut self.vy);
+        let fin = &mut self.fin;
+        let frow = &mut self.frow;
+
+        reflect(grid);
 
         // First half step — x direction (i = 0..n, j = 0..n−1 in the
         // (n+1)-wide half-step arrays). Under the ablation scope the flux
@@ -250,7 +383,7 @@ fn run_impl(
                     fin.push((grid.u[a], grid.h[a]));
                     fin.push((grid.u[b], grid.h[b]));
                 }
-                flux_row(&mut ctx, g2, &fin, &mut frow, batched);
+                flux_row(ctx, g2, fin, frow, batched);
             }
             for j in 0..n {
                 let a = grid.idx(i + 1, j + 1); // (i+1, j+1)
@@ -282,7 +415,7 @@ fn run_impl(
                     fin.push((grid.v[a], grid.h[a]));
                     fin.push((grid.v[b], grid.h[b]));
                 }
-                flux_row(&mut ctx, g2, &fin, &mut frow, batched);
+                flux_row(ctx, g2, fin, frow, batched);
             }
             for j in 0..=n {
                 let a = grid.idx(i + 1, j + 1); // (i+1, j+1)
@@ -327,7 +460,7 @@ fn run_impl(
                     fin.push((vy[kyb], hy[kyb]));
                 }
             }
-            flux_row(&mut ctx, g2, &fin, &mut frow, batched);
+            flux_row(ctx, g2, fin, frow, batched);
             for j in 1..=n {
                 let c = grid.idx(i, j);
                 let kxa = i * m + (j - 1); // Ux(i, j−1)
@@ -353,25 +486,6 @@ fn run_impl(
                     + ddy * (ga - gb);
             }
         }
-
-        if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
-            snapshots.push((step + 1, interior(&grid.h, n)));
-        }
-    }
-
-    let h = interior(&grid.h, n);
-    let mass1: f64 = h.iter().sum();
-    let muls = ctx.muls;
-    SweResult {
-        h,
-        u: interior(&grid.u, n),
-        v: interior(&grid.v, n),
-        snapshots,
-        muls,
-        backend: name,
-        r2f2_stats: be.r2f2_stats(),
-        range_events: be.range_events(),
-        mass_drift: ((mass1 - mass0) / mass0).abs(),
     }
 }
 
@@ -527,9 +641,11 @@ mod tests {
             assert_eq!(scalar.muls, batched.muls, "{scope:?}");
             assert_eq!(scalar.r2f2_stats, batched.r2f2_stats, "{scope:?}");
             assert_eq!(scalar.mass_drift.to_bits(), batched.mass_drift.to_bits(), "{scope:?}");
-            for (field, s, t) in
-                [("h", &scalar.h, &batched.h), ("u", &scalar.u, &batched.u), ("v", &scalar.v, &batched.v)]
-            {
+            for (field, s, t) in [
+                ("h", &scalar.h, &batched.h),
+                ("u", &scalar.u, &batched.u),
+                ("v", &scalar.v, &batched.v),
+            ] {
                 for i in 0..s.len() {
                     assert_eq!(s[i].to_bits(), t[i].to_bits(), "{scope:?} {field}[{i}]");
                 }

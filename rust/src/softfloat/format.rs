@@ -32,6 +32,9 @@ pub struct FpFormat {
 impl FpFormat {
     /// Standard half precision (5-bit exponent, 10-bit fraction).
     pub const E5M10: FpFormat = FpFormat { e_w: 5, m_w: 10 };
+    /// FP8 (4-bit exponent, 3-bit fraction) — the narrow end of the
+    /// adaptive precision scheduler's default ladder (`pde::adaptive`).
+    pub const E4M3: FpFormat = FpFormat { e_w: 4, m_w: 3 };
     /// 15-bit fixed baseline used in the paper's Fig. 6(e).
     pub const E5M9: FpFormat = FpFormat { e_w: 5, m_w: 9 };
     /// 14-bit fixed baseline used in the paper's Fig. 6(f).

@@ -238,6 +238,47 @@ fn pack_word(mut val: u64, sign: u32, mut e: i64, pf: &PackedFormat, flags: Flag
     ((sign << pf.sign_shift) | ((e as u32) << pf.m_w) | (val as u32 & pf.frac_mask), flags)
 }
 
+/// Transcode one packed word from `from` to `to` — the **repack hook** the
+/// adaptive precision scheduler uses at a format switch (`pde::adaptive`):
+/// the whole state vector is re-encoded in one pass over the words instead
+/// of being bounced through an `f64` slice per element.
+///
+/// Contract: bit-identical (value *and* flags) to quantizing the decoded
+/// value into `to` — `encode(decode_word(w, from), to, r)`:
+///
+/// * widening (`to` has ≥ mantissa bits and ≥ exponent bits): pure shifts
+///   and a rebias, exact and flag-free — exactly what the carrier encode
+///   reports for an already-representable value;
+/// * same format: identity, flag-free;
+/// * narrowing (or mixed trade-offs): one correctly-rounded encode from
+///   the exact f64 bit image (`decode_word` is a bit construction, so no
+///   float arithmetic happens even on this path).
+#[inline]
+pub fn repack_word(
+    w: u32,
+    from: &PackedFormat,
+    to: &PackedFormat,
+    r: &mut Rounder,
+) -> (u32, Flags) {
+    if from.fmt == to.fmt {
+        return (w, Flags::NONE);
+    }
+    if to.m_w >= from.m_w && to.e_w >= from.e_w {
+        let sign = (w >> from.sign_shift) & 1;
+        let exp = (w >> from.m_w) & from.exp_mask;
+        if exp == 0 {
+            return (to.zero_word(sign), Flags::NONE);
+        }
+        // Rebias: to.bias ≥ from.bias keeps e ≥ 1, and the max biased
+        // exponents differ by at least the bias difference, so e always
+        // fits — the widened format covers the whole source range.
+        let e = (exp as i64 - from.bias + to.bias) as u32;
+        let frac = (w & from.frac_mask) << (to.m_w - from.m_w);
+        return ((sign << to.sign_shift) | (e << to.m_w) | frac, Flags::NONE);
+    }
+    encode_bits(decode_word(w, from).to_bits(), to, r)
+}
+
 /// A state vector living in the packed domain: one `u32` word per element
 /// in the §3.1 wire layout, plus the constant table of the format it is
 /// packed in. This is what the packed solver paths keep across
@@ -315,6 +356,26 @@ impl PackedVec {
     /// Mutable access for in-place kernels.
     pub fn words_mut(&mut self) -> &mut Vec<u32> {
         &mut self.words
+    }
+
+    /// Re-encode the whole vector into `to` **in place** with one pass of
+    /// [`repack_word`] — the adaptive scheduler's format-switch primitive.
+    /// `on_flags` sees each element's repack flags (index, flags), exactly
+    /// the flags a per-element `quant` through the carrier would raise.
+    pub fn repack(
+        &mut self,
+        to: FpFormat,
+        r: &mut Rounder,
+        mut on_flags: impl FnMut(usize, Flags),
+    ) {
+        let to_pf = PackedFormat::new(to);
+        let from = self.pf;
+        for (i, w) in self.words.iter_mut().enumerate() {
+            let (nw, fl) = repack_word(*w, &from, &to_pf, r);
+            *w = nw;
+            on_flags(i, fl);
+        }
+        self.pf = to_pf;
     }
 }
 
@@ -476,6 +537,68 @@ mod tests {
         assert!(flags[0].overflow());
         assert!(flags[1].underflow());
         assert!(flags[2].is_empty());
+    }
+
+    #[test]
+    fn repack_word_matches_carrier_quantize_exhaustive() {
+        // Every E5M10 codepoint through every interesting transition:
+        // widen (E5M10→E8M23, E5M10→E6M9-by-both?), identity, narrow
+        // (E5M10→E4M3), and the mixed trade (E5M10→E4M11: fewer exponent,
+        // more mantissa bits). The reference is quantize-through-carrier.
+        let from_fmt = FpFormat::E5M10;
+        let from = from_fmt.packed();
+        for to_fmt in
+            [FpFormat::E8M23, FpFormat::new(6, 11), from_fmt, FpFormat::E4M3, FpFormat::new(4, 11)]
+        {
+            let to = to_fmt.packed();
+            let mut ra = Rounder::nearest_even();
+            let mut rb = Rounder::nearest_even();
+            for w in 0..(1u32 << from_fmt.total_bits()) {
+                let fp = from.to_fp(w);
+                if fp.exp as i64 > from_fmt.max_biased_exp() {
+                    continue; // reserved all-ones exponent never occurs
+                }
+                let v = decode_word(w, &from);
+                let (got_w, got_fl) = repack_word(w, &from, &to, &mut ra);
+                let (want_w, want_fl) = encode_bits(v.to_bits(), &to, &mut rb);
+                assert_eq!(
+                    (got_w, got_fl),
+                    (want_w, want_fl),
+                    "{from_fmt}→{to_fmt}: w={w:#x} v={v:e}"
+                );
+                if to_fmt == from_fmt {
+                    assert_eq!(got_w, w, "identity repack must not rewrite");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_vec_repack_roundtrips_and_reports_flags() {
+        let mut r = Rounder::nearest_even();
+        let xs = [1.0, -2.5, 0.0, 480.0, 65504.0, 1e-3];
+        let (mut v, _) = PackedVec::encode(&xs, FpFormat::E5M10, &mut r);
+        // Widen: exact, flag-free, format updated.
+        v.repack(FpFormat::E8M23, &mut r, |i, fl| assert!(fl.is_empty(), "widen flag at {i}"));
+        assert_eq!(v.format(), FpFormat::E8M23);
+        let mut out = [0.0f64; 6];
+        v.decode_into(&mut out);
+        for (a, b) in xs.iter().zip(out.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Narrow to E4M3: 65504 saturates, 1e-3 flushes — the flags the
+        // scheduler's event accounting relies on.
+        let mut saw_over = false;
+        let mut saw_under = false;
+        v.repack(FpFormat::E4M3, &mut r, |_, fl| {
+            saw_over |= fl.overflow();
+            saw_under |= fl.underflow();
+        });
+        assert!(saw_over && saw_under);
+        v.decode_into(&mut out);
+        assert_eq!(out[3], 480.0); // E4M3 max finite
+        assert_eq!(out[4], 480.0);
+        assert_eq!(out[5], 0.0);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! The adaptive precision scheduler's cross-layer contract
+//! (DESIGN.md §10):
+//!
+//! 1. **Bit-exactness across engines and switch points** — a scalar
+//!    adaptive run and a batched (carrier or packed) adaptive run produce
+//!    the same switch schedule and bit-identical fields, counters and
+//!    snapshots, including runs with ≥ 1 widen (epoch retry) and ≥ 1
+//!    narrow event; a recorded decision log replays identically.
+//! 2. **The accuracy/cost envelope** — on the paper's heat setup the
+//!    adaptive schedule matches the all-E5M10 final RMSE within 1e-12
+//!    while spending strictly less modeled datapath cost than all-E5M10
+//!    (and at least the all-E4M3 floor).
+
+use r2f2::pde::adaptive::{fixed_cost_lut, run_heat, run_heat_scalar, run_swe, run_swe_scalar};
+use r2f2::pde::heat1d::{self, HeatParams};
+use r2f2::pde::swe2d::{self, QuantScope, SweParams};
+use r2f2::pde::{rmse, AdaptiveArith, AdaptivePolicy, BatchEngine, F64Arith, FixedArith, QuantMode};
+use r2f2::softfloat::FpFormat;
+
+/// Full-mode heat run sized so the E4M3 start widens immediately (initial
+/// amplitude 500 > 480) and the decaying sine stalls in E5M10 well before
+/// the end, so the ladder narrows back — ≥ 1 widen and ≥ 1 narrow.
+fn heat_full_params() -> HeatParams {
+    HeatParams {
+        n: 17,
+        dt: 0.25 / (16.0f64 * 16.0),
+        steps: 900,
+        snapshot_every: 100,
+        ..HeatParams::default()
+    }
+}
+
+fn heat_full_policy() -> AdaptivePolicy {
+    let mut p = AdaptivePolicy::heat_default();
+    p.epoch_len = 16;
+    p
+}
+
+/// MulOnly heat run at the paper's scope: by ~step 1600 every quantized
+/// product flushes below E5M10's min normal, the dynamics stall, and the
+/// scheduler narrows to E4M3 for the frozen tail.
+fn heat_mulonly_params() -> HeatParams {
+    HeatParams { n: 33, dt: 0.25 / (32.0f64 * 32.0), steps: 3000, ..HeatParams::default() }
+}
+
+fn heat_mulonly_policy() -> AdaptivePolicy {
+    let mut p = AdaptivePolicy::heat_default();
+    p.epoch_len = 50;
+    p
+}
+
+fn assert_fields_bit_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: node {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+#[test]
+fn heat_full_adaptive_bit_identical_scalar_carrier_packed() {
+    let p = heat_full_params();
+    let pol = heat_full_policy();
+
+    let mut s_packed = AdaptiveArith::new(pol.clone());
+    let r_packed = run_heat(&p, &mut s_packed, QuantMode::Full);
+    let rep = s_packed.report();
+    assert!(rep.widen_events >= 1, "expected a widen: {:?}", rep.trace);
+    assert!(rep.narrow_events >= 1, "expected a narrow: {:?}", rep.trace);
+    assert_eq!(rep.final_format, FpFormat::E4M3);
+
+    let mut s_scalar = AdaptiveArith::new(pol.clone());
+    let r_scalar = run_heat_scalar(&p, &mut s_scalar, QuantMode::Full);
+    let mut s_carrier = AdaptiveArith::new(pol).with_engine(BatchEngine::Carrier);
+    let r_carrier = run_heat(&p, &mut s_carrier, QuantMode::Full);
+
+    // Same schedule (decisions and applied switches) on every path.
+    assert_eq!(s_scalar.decisions(), s_packed.decisions());
+    assert_eq!(s_scalar.trace(), s_packed.trace());
+    assert_eq!(s_carrier.trace(), s_packed.trace());
+
+    // Bit-identical fields, counters and snapshots across the engines,
+    // through the widen retry and the narrow repack.
+    assert_fields_bit_equal(&r_scalar.u, &r_packed.u, "scalar vs packed");
+    assert_fields_bit_equal(&r_scalar.u, &r_carrier.u, "scalar vs carrier");
+    assert_eq!(r_scalar.muls, r_packed.muls);
+    assert_eq!(r_scalar.muls, r_carrier.muls);
+    assert_eq!(r_scalar.range_events, r_packed.range_events);
+    assert_eq!(r_scalar.range_events, r_carrier.range_events);
+    assert_eq!(r_scalar.snapshots.len(), r_packed.snapshots.len());
+    for (s, (a, b)) in r_scalar.snapshots.iter().zip(r_packed.snapshots.iter()).enumerate() {
+        assert_eq!(a.0, b.0, "snapshot {s} step");
+        assert_fields_bit_equal(&a.1, &b.1, "snapshot fields");
+    }
+}
+
+#[test]
+fn heat_mulonly_adaptive_bit_identical_and_replayable() {
+    let p = heat_mulonly_params();
+    let pol = heat_mulonly_policy();
+
+    let mut live = AdaptiveArith::new(pol.clone());
+    let r_live = run_heat(&p, &mut live, QuantMode::MulOnly);
+    let rep = live.report();
+    assert!(rep.widen_events >= 1, "expected a widen: {:?}", rep.trace);
+    assert!(rep.narrow_events >= 1, "expected a narrow: {:?}", rep.trace);
+
+    // Live scalar run re-derives the same schedule from its own telemetry.
+    let mut s_scalar = AdaptiveArith::new(pol.clone());
+    let r_scalar = run_heat_scalar(&p, &mut s_scalar, QuantMode::MulOnly);
+    assert_eq!(s_scalar.decisions(), live.decisions());
+    assert_eq!(s_scalar.trace(), live.trace());
+    assert_fields_bit_equal(&r_scalar.u, &r_live.u, "live scalar vs live packed");
+    assert_eq!(r_scalar.muls, r_live.muls);
+    assert_eq!(r_scalar.range_events, r_live.range_events);
+
+    // Replaying the recorded decision log on the scalar path pins it to
+    // the packed run's switch schedule — "same schedule" by construction.
+    let mut replay = AdaptiveArith::from_trace(pol, rep.decisions.clone());
+    let r_replay = run_heat_scalar(&p, &mut replay, QuantMode::MulOnly);
+    assert_eq!(replay.trace(), &rep.trace[..]);
+    assert_fields_bit_equal(&r_replay.u, &r_live.u, "replay vs live");
+    assert_eq!(r_replay.range_events, r_live.range_events);
+}
+
+#[test]
+fn heat_adaptive_matches_e5m10_rmse_at_strictly_lower_modeled_cost() {
+    let p = heat_mulonly_params();
+    let reference = heat1d::run(&p, &mut F64Arith, QuantMode::MulOnly);
+    let mut wide_be = FixedArith::new(FpFormat::E5M10);
+    let wide = heat1d::run(&p, &mut wide_be, QuantMode::MulOnly);
+    let mut narrow_be = FixedArith::new(FpFormat::E4M3);
+    let narrow = heat1d::run(&p, &mut narrow_be, QuantMode::MulOnly);
+
+    let mut sched = AdaptiveArith::new(heat_mulonly_policy());
+    let adaptive = heat1d::run_adaptive(&p, &mut sched, QuantMode::MulOnly);
+    let rep = sched.report();
+    assert!(rep.widen_events >= 1 && rep.narrow_events >= 1, "trace: {:?}", rep.trace);
+    assert_eq!(rep.final_format, FpFormat::E4M3);
+
+    // Accuracy: the widen retry discards the E4M3 attempt and the narrow
+    // fires only once the dynamics stalled, so the committed trajectory is
+    // the all-E5M10 one bit-for-bit — the RMSE matches within 1e-12 (here:
+    // exactly).
+    assert_fields_bit_equal(&adaptive.u, &wide.u, "adaptive vs all-E5M10");
+    let rmse_wide = rmse(&wide.u, &reference.u);
+    let rmse_adaptive = rmse(&adaptive.u, &reference.u);
+    assert!(
+        (rmse_adaptive - rmse_wide).abs() <= 1e-12,
+        "adaptive {rmse_adaptive} vs E5M10 {rmse_wide}"
+    );
+
+    // Cost: strictly below all-E5M10 (the narrow tail outweighs the one
+    // retried epoch), and no lower than the all-E4M3 floor.
+    let cost_adaptive = rep.modeled_cost_lut;
+    let cost_wide = fixed_cost_lut(FpFormat::E5M10, wide.muls);
+    let cost_floor = fixed_cost_lut(FpFormat::E4M3, wide.muls);
+    assert!(
+        cost_adaptive < cost_wide,
+        "adaptive cost {cost_adaptive} must beat all-E5M10 {cost_wide}"
+    );
+    assert!(cost_adaptive >= cost_floor, "cost {cost_adaptive} below floor {cost_floor}");
+
+    // Envelope: adaptive error never exceeds the worst fixed rung.
+    let rmse_narrow = rmse(&narrow.u, &reference.u);
+    assert!(rmse_adaptive <= rmse_wide.max(rmse_narrow) + 1e-15);
+}
+
+#[test]
+fn swe_adaptive_widens_on_shelf_scale_and_stays_bit_identical() {
+    // 0.5·g·h² ≈ 5e6 ≫ 65504: the E5M10 start must widen to E6M9 in the
+    // first epoch; the committed trajectory is then the all-E6M9 run.
+    let p = SweParams { steps: 24, ..SweParams::default() };
+    let pol = AdaptivePolicy::swe_default();
+
+    let mut a = AdaptiveArith::new(pol.clone());
+    let ra = run_swe(&p, &mut a, QuantScope::UxFluxOnly, QuantMode::MulOnly);
+    let rep = a.report();
+    assert!(rep.widen_events >= 1, "trace: {:?}", rep.trace);
+    assert_eq!(rep.final_format, FpFormat::new(6, 9));
+
+    let mut b = AdaptiveArith::new(pol);
+    let rb = run_swe_scalar(&p, &mut b, QuantScope::UxFluxOnly, QuantMode::MulOnly);
+    assert_eq!(a.trace(), b.trace());
+    assert_fields_bit_equal(&ra.h, &rb.h, "h");
+    assert_fields_bit_equal(&ra.u, &rb.u, "u");
+    assert_fields_bit_equal(&ra.v, &rb.v, "v");
+    assert_eq!(ra.muls, rb.muls);
+    assert_eq!(ra.range_events, rb.range_events);
+    assert_eq!(ra.mass_drift.to_bits(), rb.mass_drift.to_bits());
+
+    // The retried first epoch restores the pristine grid, so the committed
+    // fields equal the all-E6M9 fixed run exactly.
+    let mut fixed = FixedArith::new(FpFormat::new(6, 9));
+    let rf = swe2d::run(&p, &mut fixed, QuantScope::UxFluxOnly);
+    assert_fields_bit_equal(&ra.h, &rf.h, "adaptive vs all-E6M9 h");
+    assert_fields_bit_equal(&ra.u, &rf.u, "adaptive vs all-E6M9 u");
+}

@@ -219,3 +219,80 @@ fn prop_quantize_is_nearest() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_stage_tracker_exact_stage_counts() {
+    // The corrected StageTracker contract (the PR-3 `* 3` bugfix): for a
+    // stream of exactly `expected_total` records split into `num_stages`,
+    //   * expected_total ≥ num_stages → exactly num_stages stages, the
+    //     first num_stages − 1 of floor(expected_total / num_stages)
+    //     records each, the final stage absorbing the remainder;
+    //   * 1 ≤ expected_total < num_stages → one stage per record;
+    //   * expected_total = 0 → a single empty stage.
+    check("stage tracker counts", 2000, |g| {
+        let num_stages = g.int_in(1, 16) as usize;
+        let expected_total = g.below(5000);
+        let mut t = r2f2::analysis::StageTracker::new(num_stages, expected_total);
+        for i in 0..expected_total {
+            t.record(i as f64 + 1.0);
+        }
+        let stages = t.finish();
+        if expected_total == 0 {
+            if stages.len() != 1 || stages[0].count != 0 {
+                return Err(format!("empty stream: {} stages", stages.len()));
+            }
+            return Ok(());
+        }
+        let want_stages = num_stages.min(expected_total as usize);
+        if stages.len() != want_stages {
+            return Err(format!(
+                "total {expected_total} / {num_stages} stages: got {}",
+                stages.len()
+            ));
+        }
+        let per = (expected_total / num_stages as u64).max(1);
+        let total: u64 = stages.iter().map(|s| s.count).sum();
+        if total != expected_total {
+            return Err(format!("records lost: {total} of {expected_total}"));
+        }
+        for (i, s) in stages.iter().enumerate() {
+            if s.index != i {
+                return Err(format!("stage {i} has index {}", s.index));
+            }
+            if i + 1 < stages.len() && s.count != per {
+                return Err(format!("stage {i}: {} records, want {per}", s.count));
+            }
+        }
+        // The final stage holds the remainder — never less than the others.
+        let last = stages.last().unwrap().count;
+        if expected_total >= num_stages as u64 && last < per {
+            return Err(format!("final stage too small: {last} < {per}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stage_tracker_exact_multiple_final_roll() {
+    // When num_stages divides expected_total the final boundary lands on
+    // the last record: record() must NOT roll an empty extra stage there —
+    // finish() closes the final stage instead, and all stages are equal.
+    check("stage tracker exact-multiple edge", 500, |g| {
+        let num_stages = g.int_in(1, 12) as usize;
+        let per = g.int_in(1, 40) as u64;
+        let expected_total = per * num_stages as u64;
+        let mut t = r2f2::analysis::StageTracker::new(num_stages, expected_total);
+        for i in 0..expected_total {
+            t.record((i + 1) as f64);
+        }
+        let stages = t.finish();
+        if stages.len() != num_stages {
+            return Err(format!("{num_stages} stages of {per}: got {}", stages.len()));
+        }
+        if !stages.iter().all(|s| s.count == per) {
+            let counts: Vec<u64> = stages.iter().map(|s| s.count).collect();
+            return Err(format!("unequal stages: {counts:?}"));
+        }
+        Ok(())
+    });
+}
