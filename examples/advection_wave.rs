@@ -1,0 +1,78 @@
+//! The scenario registry's two transport workloads: upwind advection
+//! (linear + Burgers) and the damped 2D wave equation.
+//!
+//! ```sh
+//! cargo run --release --example advection_wave
+//! ```
+//!
+//! Walks the new scenarios through the same precision story as the paper's
+//! case studies: f64 ground truth, the fixed 16-bit formats, and the
+//! adaptive FP8→half ladder driven by the generic scenario drivers.
+
+use r2f2::pde::scenario::{find, ScenarioSize};
+use r2f2::pde::{advection1d, rel_l2, AdaptiveArith, F64Arith, FixedArith, QuantMode};
+use r2f2::softfloat::FpFormat;
+
+fn main() {
+    // --- 1. The registry is the source of truth for both scenarios.
+    for name in ["advection1d", "wave2d"] {
+        let spec = find(name).expect("registry scenario");
+        println!("{name}: {}", spec.physics);
+        println!("  stress: {}", spec.stress);
+
+        let reference = (spec.run)(ScenarioSize::Accuracy, &mut F64Arith, QuantMode::MulOnly, true);
+        for fmt in [FpFormat::E4M3, FpFormat::E5M10] {
+            let mut be = FixedArith::new(fmt);
+            let run = (spec.run)(ScenarioSize::Accuracy, &mut be, QuantMode::MulOnly, true);
+            let ev = run.range_events.unwrap();
+            println!(
+                "  {fmt:<6} rel-err {:.3e}  overflows {}  underflows {}  ({} muls)",
+                rel_l2(&run.field, &reference.field),
+                ev.overflows,
+                ev.underflows,
+                run.muls
+            );
+        }
+
+        // --- 2. The adaptive ladder: widen out of FP8 immediately, and
+        // (once the dynamics decay into a stall) narrow back for the tail.
+        let mut sched = AdaptiveArith::new((spec.adaptive_policy)());
+        let _run =
+            (spec.run_adaptive)(ScenarioSize::Adaptive, &mut sched, QuantMode::MulOnly, true);
+        let rep = sched.report();
+        println!(
+            "  adaptive {:?}: widen {}  narrow {}  final {}  modeled cost {:.3e} LUT·ops",
+            rep.ops_per_rung.iter().map(|(f, _)| f.to_string()).collect::<Vec<_>>(),
+            rep.widen_events,
+            rep.narrow_events,
+            rep.final_format,
+            rep.modeled_cost_lut
+        );
+        for ev in rep.trace.iter().take(4) {
+            println!(
+                "    step {:>5}: {} -> {} ({})",
+                ev.step,
+                ev.from,
+                ev.to,
+                if ev.widened { "widen + retry" } else { "narrow" }
+            );
+        }
+        println!();
+    }
+
+    // --- 3. Burgers: the nonlinearity multiplies the state by itself.
+    let p = advection1d::AdvectionParams {
+        n: 128,
+        steps: 120,
+        ..advection1d::AdvectionParams::burgers_default()
+    };
+    let reference = advection1d::run(&p, &mut F64Arith, QuantMode::MulOnly);
+    let mut half = FixedArith::new(FpFormat::E5M10);
+    let res = advection1d::run(&p, &mut half, QuantMode::MulOnly);
+    println!(
+        "burgers (u in [20,100], shock forming): E5M10 rel-err {:.3e} over {} u*u muls",
+        rel_l2(&res.u, &reference.u),
+        res.muls
+    );
+    println!("\nNext: `cargo test --test scenario_matrix` (the registry contract)");
+}

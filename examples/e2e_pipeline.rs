@@ -22,9 +22,27 @@ fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
     (num / den).sqrt()
 }
 
-fn main() -> r2f2::runtime::Result<()> {
+fn main() {
+    // A missing PJRT runtime / artifact directory is an environment gap,
+    // not a failure: skip politely (exit 0) so smoke harnesses can run
+    // every example unconditionally. Anything that goes wrong *after* the
+    // runtime probe succeeded is a genuine regression and exits nonzero
+    // (assertion failures still panic).
+    let mut rt = match Runtime::from_default_dir() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("e2e pipeline skipped: {e}");
+            return;
+        }
+    };
+    if let Err(e) = pipeline(&mut rt) {
+        eprintln!("e2e pipeline failed: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn pipeline(rt: &mut Runtime) -> r2f2::runtime::Result<()> {
     let metrics = Registry::new();
-    let mut rt = Runtime::from_default_dir()?;
     println!("PJRT platform: {} | artifacts: {}", rt.platform(), rt.manifest.dir.display());
 
     // ---------------- Heat equation through the compiled stack ----------
@@ -35,7 +53,7 @@ fn main() -> r2f2::runtime::Result<()> {
         .collect();
 
     let mut table = Table::new(vec!["variant", "steps/s", "rel-err vs f32", "widen", "narrow"]);
-    let f32_runner = HeatRunner::new(&mut rt, "heat_step_f32", metrics.clone())?;
+    let f32_runner = HeatRunner::new(rt, "heat_step_f32", metrics.clone())?;
     let reference = f32_runner.run(&u0, 0.25, steps, 0)?;
     table.row(vec![
         "heat_step_f32".to_string(),
@@ -47,7 +65,7 @@ fn main() -> r2f2::runtime::Result<()> {
 
     let mut final_fields = vec![("f32".to_string(), reference.u.clone())];
     for variant in ["heat_step_r2f2", "heat_step_e5m10"] {
-        let runner = HeatRunner::new(&mut rt, variant, metrics.clone())?;
+        let runner = HeatRunner::new(rt, variant, metrics.clone())?;
         let out = runner.run(&u0, 0.25, steps, 2)?;
         table.row(vec![
             variant.to_string(),
@@ -85,9 +103,9 @@ fn main() -> r2f2::runtime::Result<()> {
         }
     }
     let swe_steps = 40;
-    let swe_f32 = SweRunner::new(&mut rt, "swe_step_f32", metrics.clone())?;
+    let swe_f32 = SweRunner::new(rt, "swe_step_f32", metrics.clone())?;
     let ref_swe = swe_f32.run(&h0, swe_steps, 0)?;
-    let swe_r2f2 = SweRunner::new(&mut rt, "swe_step_r2f2", metrics.clone())?;
+    let swe_r2f2 = SweRunner::new(rt, "swe_step_r2f2", metrics.clone())?;
     let out_swe = swe_r2f2.run(&h0, swe_steps, 2)?;
     println!(
         "Shallow water ({sn}×{sn} × {swe_steps} steps): R2F2 rel-err vs f32 = {:.2e}, \
@@ -107,9 +125,9 @@ fn main() -> r2f2::runtime::Result<()> {
         .map(|i| 5e-4 * (2.0 * std::f32::consts::PI * i as f32 / (n - 1) as f32).sin())
         .collect();
     let late_ref = f32_runner.run(&tiny, 0.25, steps, 0)?;
-    let late_r2f2 = HeatRunner::new(&mut rt, "heat_step_r2f2", metrics.clone())?
+    let late_r2f2 = HeatRunner::new(rt, "heat_step_r2f2", metrics.clone())?
         .run(&tiny, 0.25, steps, 2)?;
-    let late_half = HeatRunner::new(&mut rt, "heat_step_e5m10", metrics.clone())?
+    let late_half = HeatRunner::new(rt, "heat_step_e5m10", metrics.clone())?
         .run(&tiny, 0.25, steps, 0)?;
     let err_r2f2 = rel_l2(&late_r2f2.u, &late_ref.u);
     let err_half = rel_l2(&late_half.u, &late_ref.u);

@@ -11,7 +11,7 @@
 //! Flags (after `--` on the cargo command line):
 //!   --smoke         cut workload sizes and sample counts (CI mode)
 //!   --json <path>   also emit machine-readable results
-//!                   (schema `r2f2-bench-hotpath/2`, see EXPERIMENTS.md)
+//!                   (schema `r2f2-bench-hotpath/3`, see EXPERIMENTS.md)
 
 use r2f2::bench_util::{bench_with, black_box, fmt_ns, print_results, BenchResult};
 use r2f2::coordinator::parallel_map;
@@ -20,6 +20,7 @@ use r2f2::pde::adaptive::{
     fixed_cost_lut, run_heat as heat_run_adaptive, run_heat_scalar as heat_run_adaptive_scalar,
 };
 use r2f2::pde::heat1d::{run as heat_run, run_scalar as heat_run_scalar, HeatParams};
+use r2f2::pde::scenario::{ScenarioSize, SCENARIOS};
 use r2f2::pde::swe2d::{run as swe_run, run_scalar as swe_run_scalar, QuantScope, SweParams};
 use r2f2::pde::{
     AdaptiveArith, AdaptivePolicy, Arith, BatchEngine, F32Arith, F64Arith, FixedArith, QuantMode,
@@ -96,6 +97,15 @@ struct AdaptiveRow {
     e5m10_cost_lut: f64,
 }
 
+/// One scenario-registry row: every registry workload through the shared
+/// generic drivers, scalar dispatch vs the packed batched engine.
+struct ScenarioRow {
+    scenario: &'static str,
+    scalar_ns: f64,
+    packed_ns: f64,
+    muls: u64,
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -106,10 +116,11 @@ fn emit_json(
     rows: &[BenchResult],
     trajs: &[Trajectory],
     adaptive: &[AdaptiveRow],
+    scenarios: &[ScenarioRow],
 ) {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"r2f2-bench-hotpath/2\",\n");
+    out.push_str("  \"schema\": \"r2f2-bench-hotpath/3\",\n");
     out.push_str(&format!("  \"smoke\": {smoke},\n"));
     out.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -158,6 +169,20 @@ fn emit_json(
             a.modeled_cost_lut,
             a.e5m10_cost_lut,
             if i + 1 < adaptive.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"scenarios\": [\n");
+    for (i, s) in scenarios.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"scalar_ns\": {:.3}, \"packed_ns\": {:.3}, \
+             \"scalar_vs_packed\": {:.3}, \"muls\": {}}}{}\n",
+            json_escape(s.scenario),
+            s.scalar_ns,
+            s.packed_ns,
+            s.scalar_ns / s.packed_ns,
+            s.muls,
+            if i + 1 < scenarios.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n");
@@ -456,6 +481,56 @@ fn main() {
         );
     }
 
+    // ---- L3 scenario registry (DESIGN.md §11) ---------------------------
+    // Every registry workload through the shared generic drivers, under
+    // the E5M10 fixed backend: scalar dispatch vs the packed batched
+    // engine. The registry is the row source, so a scenario added there
+    // automatically lands here (and in the CI schema check).
+    let mut results = Vec::new();
+    let mut scenario_rows: Vec<ScenarioRow> = Vec::new();
+    for spec in SCENARIOS {
+        let mut ns = [0.0f64; 2];
+        for (idx, tier_label) in [(0usize, "scalar dispatch"), (1, "packed engine")] {
+            let r = bench_with(
+                &format!("scenario {} E5M10 mulonly [{tier_label}]", spec.name),
+                samples,
+                Duration::from_millis(batch_ms),
+                &mut || {
+                    let mut be = FixedArith::new(FpFormat::E5M10);
+                    black_box((spec.run)(
+                        ScenarioSize::Quick,
+                        &mut be,
+                        QuantMode::MulOnly,
+                        idx == 1,
+                    ));
+                },
+            );
+            ns[idx] = r.median_ns;
+            results.push(r);
+        }
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let probe = (spec.run)(ScenarioSize::Quick, &mut be, QuantMode::MulOnly, true);
+        scenario_rows.push(ScenarioRow {
+            scenario: spec.name,
+            scalar_ns: ns[0],
+            packed_ns: ns[1],
+            muls: probe.muls,
+        });
+    }
+    print_results("L3 scenario registry (one run per iteration)", &results);
+    all_rows.extend(results);
+    println!("\nscenario registry rows:");
+    for s in &scenario_rows {
+        println!(
+            "  {:<12} scalar {}  packed {}  ({:.2}x, {} muls)",
+            s.scenario,
+            fmt_ns(s.scalar_ns),
+            fmt_ns(s.packed_ns),
+            s.scalar_ns / s.packed_ns,
+            s.muls
+        );
+    }
+
     // ---- Speedup summary -------------------------------------------------
     println!("\npacked-engine speedups (median):");
     println!(
@@ -566,6 +641,6 @@ fn main() {
     }
 
     if let Some(path) = &opts.json {
-        emit_json(path, opts.smoke, &all_rows, &trajs, &adaptive_rows);
+        emit_json(path, opts.smoke, &all_rows, &trajs, &adaptive_rows, &scenario_rows);
     }
 }

@@ -64,6 +64,29 @@ impl Log2Histogram {
         *self.buckets.entry(oct).or_insert(0) += 1;
     }
 
+    /// Fold another histogram into this one, as if every sample recorded
+    /// into `other` had been recorded here. Used by scenario harnesses
+    /// that build per-worker histograms under `coordinator::parallel_map`
+    /// and combine them afterwards — merged totals are order- and
+    /// sharding-independent.
+    ///
+    /// Every counter is combined, **including the `nonfinite` counter**
+    /// (added in PR 3 — any merge written against the pre-PR-3 field set
+    /// would silently drop Inf/NaN tallies), and the `min_abs` sentinel is
+    /// taken with `min` (both sides start at `+inf`, so an empty side
+    /// never corrupts the other's range).
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (oct, count) in other.buckets.iter() {
+            *self.buckets.entry(*oct).or_insert(0) += count;
+        }
+        self.zeros += other.zeros;
+        self.negatives += other.negatives;
+        self.nonfinite += other.nonfinite;
+        self.total += other.total;
+        self.min_abs = self.min_abs.min(other.min_abs);
+        self.max_abs = self.max_abs.max(other.max_abs);
+    }
+
     /// Smallest and largest non-zero magnitude recorded.
     pub fn nonzero_range(&self) -> Option<(f64, f64)> {
         if self.max_abs == 0.0 {
@@ -188,6 +211,80 @@ mod tests {
         assert_eq!(h.total, 5);
         assert_eq!(h.occupied_octaves(), 1);
         assert_eq!(h.nonzero_range(), Some((2.0, 2.0)));
+    }
+
+    #[test]
+    fn merge_equals_sequential_recording() {
+        // Shard a mixed stream (zeros, signs, non-finites, wide range) and
+        // merge the per-shard histograms: every counter must equal the
+        // single-histogram recording, in any merge order.
+        let stream: Vec<f64> = vec![
+            0.0,
+            -0.0,
+            1.5,
+            -2.5,
+            1e-7,
+            -1e7,
+            f64::INFINITY,
+            f64::NAN,
+            -3.0,
+            0.25,
+            f64::NEG_INFINITY,
+            42.0,
+        ];
+        let mut want = Log2Histogram::new();
+        for &v in &stream {
+            want.record(v);
+        }
+        for chunk in [1usize, 3, 5] {
+            let parts: Vec<Log2Histogram> = stream
+                .chunks(chunk)
+                .map(|c| {
+                    let mut h = Log2Histogram::new();
+                    for &v in c {
+                        h.record(v);
+                    }
+                    h
+                })
+                .collect();
+            let mut fwd = Log2Histogram::new();
+            for p in parts.iter() {
+                fwd.merge(p);
+            }
+            let mut rev = Log2Histogram::new();
+            for p in parts.iter().rev() {
+                rev.merge(p);
+            }
+            for got in [&fwd, &rev] {
+                assert_eq!(got.total, want.total);
+                assert_eq!(got.zeros, want.zeros);
+                assert_eq!(got.negatives, want.negatives);
+                assert_eq!(got.nonfinite, want.nonfinite, "nonfinite must merge");
+                assert_eq!(got.nonzero_range(), want.nonzero_range());
+                let a: Vec<(i32, u64)> = got.iter().collect();
+                let b: Vec<(i32, u64)> = want.iter().collect();
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_keeps_sentinels() {
+        // The regression the audit was for: an empty histogram's
+        // `min_abs = +inf` sentinel must not corrupt the other side (a
+        // naive `min` over a zero-initialized sentinel would pin the
+        // merged min_abs to 0).
+        let mut h = Log2Histogram::new();
+        h.record(5.0);
+        h.merge(&Log2Histogram::new());
+        assert_eq!(h.nonzero_range(), Some((5.0, 5.0)));
+        let mut empty = Log2Histogram::new();
+        empty.merge(&h);
+        assert_eq!(empty.nonzero_range(), Some((5.0, 5.0)));
+        assert_eq!(empty.total, 1);
+        let mut both = Log2Histogram::new();
+        both.merge(&Log2Histogram::new());
+        assert_eq!(both.nonzero_range(), None);
     }
 
     #[test]

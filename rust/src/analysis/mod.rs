@@ -8,7 +8,9 @@ pub mod stages;
 pub use histogram::Log2Histogram;
 pub use stages::{StageStats, StageTracker};
 
+use crate::coordinator::parallel_map;
 use crate::pde::heat1d::{self, HeatParams};
+use crate::pde::scenario::{self, ScenarioSize};
 use crate::pde::{F64Arith, QuantMode, RecordingArith};
 
 /// Full distribution report for one simulation run.
@@ -48,6 +50,48 @@ pub fn heat_distribution(params: &HeatParams, num_stages: usize) -> Distribution
 
 fn muls_per_step(params: &HeatParams) -> u64 {
     3 * (params.n as u64 - 2)
+}
+
+/// Octave histogram of a field, built by sharding it across `workers`
+/// threads (one [`Log2Histogram`] per worker chunk, folded with
+/// [`Log2Histogram::merge`]). Results are identical for any worker count —
+/// the merge combines every counter, including `nonfinite`, and keeps the
+/// `min_abs` sentinel honest.
+pub fn field_histogram(field: &[f64], workers: usize) -> Log2Histogram {
+    let workers = workers.max(1);
+    // Below the fan-out threshold, thread setup dominates: record serially
+    // (the merged result is identical either way).
+    if workers == 1 || field.len() < 4096 {
+        let mut h = Log2Histogram::new();
+        for &v in field {
+            h.record(v);
+        }
+        return h;
+    }
+    let per = field.len().div_ceil(workers);
+    let chunks: Vec<&[f64]> = field.chunks(per).collect();
+    let parts = parallel_map(chunks, workers, |c| {
+        let mut h = Log2Histogram::new();
+        for &v in c {
+            h.record(v);
+        }
+        h
+    });
+    let mut out = Log2Histogram::new();
+    for p in &parts {
+        out.merge(p);
+    }
+    out
+}
+
+/// [`field_histogram`] of a registry scenario's final f64 field at
+/// [`ScenarioSize::Accuracy`]. Callers that already hold the reference
+/// field (e.g. `sweep::error_sweep::scenario_precision_profile`) should
+/// histogram it directly instead of re-running the simulation here.
+pub fn scenario_field_histogram(name: &str, workers: usize) -> Result<Log2Histogram, String> {
+    let spec = scenario::find(name).ok_or_else(|| format!("unknown scenario `{name}`"))?;
+    let run = (spec.run)(ScenarioSize::Accuracy, &mut F64Arith, QuantMode::MulOnly, true);
+    Ok(field_histogram(&run.field, workers))
 }
 
 #[cfg(test)]
@@ -98,6 +142,42 @@ mod tests {
         );
         // Decay is monotone for the pure sine mode.
         assert!(maxes.windows(2).all(|w| w[1] <= w[0] * 1.01), "{maxes:?}");
+    }
+
+    #[test]
+    fn field_histogram_is_worker_count_invariant() {
+        // A field large enough to cross the fan-out threshold, with every
+        // counter class populated (zeros, signs, non-finites, wide range):
+        // the per-worker histograms must merge to the serial recording no
+        // matter how the chunks land on threads.
+        let mut field: Vec<f64> = (0..10_000)
+            .map(|i| {
+                let s = if i % 3 == 0 { -1.0 } else { 1.0 };
+                s * (i as f64 - 5000.0) * 1e-3
+            })
+            .collect();
+        field[17] = 0.0;
+        field[4096] = f64::INFINITY;
+        field[9000] = f64::NAN;
+        let mut one = Log2Histogram::new();
+        for &v in &field {
+            one.record(v);
+        }
+        for workers in [1usize, 2, 5, 8] {
+            let many = field_histogram(&field, workers);
+            assert_eq!(many.total, one.total);
+            assert_eq!(many.zeros, one.zeros);
+            assert_eq!(many.negatives, one.negatives);
+            assert_eq!(many.nonfinite, one.nonfinite, "workers = {workers}");
+            assert_eq!(many.nonzero_range(), one.nonzero_range());
+            let a: Vec<(i32, u64)> = many.iter().collect();
+            let b: Vec<(i32, u64)> = one.iter().collect();
+            assert_eq!(a, b, "workers = {workers}");
+        }
+        // The by-name wrapper resolves registry scenarios (and rejects
+        // unknown names).
+        assert!(scenario_field_histogram("heat1d", 2).unwrap().total > 0);
+        assert!(scenario_field_histogram("no-such-scenario", 2).is_err());
     }
 
     #[test]

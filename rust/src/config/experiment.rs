@@ -2,9 +2,11 @@
 //! the examples.
 
 use super::toml_mini::{Document, Value};
+use crate::pde::advection1d::AdvectionParams;
 use crate::pde::heat1d::HeatParams;
 use crate::pde::init::{HeatInit, SweInit};
 use crate::pde::swe2d::SweParams;
+use crate::pde::wave2d::WaveParams;
 use crate::pde::QuantMode;
 use crate::r2f2core::R2f2Config;
 use crate::softfloat::FpFormat;
@@ -89,16 +91,22 @@ pub fn parse_r2f2(s: &str) -> Result<R2f2Config, String> {
     Ok(R2f2Config::new(nums[0], nums[1], nums[2]))
 }
 
+/// The scenario apps a config may select (the registry names minus the
+/// `1d`/`2d` suffixes the CLI has always used for heat/swe).
+pub const APPS: &[&str] = &["heat", "swe", "advection", "wave"];
+
 /// One simulation experiment, loadable from a TOML document.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub title: String,
-    /// `heat` or `swe`.
+    /// One of [`APPS`]: `heat`, `swe`, `advection` or `wave`.
     pub app: String,
     pub backend: BackendSpec,
     pub mode: QuantMode,
     pub heat: HeatParams,
     pub swe: SweParams,
+    pub advection: AdvectionParams,
+    pub wave: WaveParams,
 }
 
 impl Default for ExperimentConfig {
@@ -110,6 +118,8 @@ impl Default for ExperimentConfig {
             mode: QuantMode::MulOnly,
             heat: HeatParams::default(),
             swe: SweParams::default(),
+            advection: AdvectionParams::default(),
+            wave: WaveParams::default(),
         }
     }
 }
@@ -126,8 +136,8 @@ impl ExperimentConfig {
             cfg.title = v.to_string();
         }
         if let Some(v) = get(doc, "", "app").and_then(Value::as_str) {
-            if v != "heat" && v != "swe" {
-                return Err(format!("app must be heat|swe, got `{v}`"));
+            if !APPS.contains(&v) {
+                return Err(format!("app must be {}, got `{v}`", APPS.join("|")));
             }
             cfg.app = v.to_string();
         }
@@ -182,6 +192,48 @@ impl ExperimentConfig {
         }
         if let Some(v) = get(doc, "swe", "amplitude").and_then(Value::as_float) {
             cfg.swe.init = SweInit { amplitude: v, ..cfg.swe.init };
+        }
+
+        if let Some(v) = get(doc, "advection", "n").and_then(Value::as_int) {
+            if v < 3 {
+                return Err(format!("advection.n must be at least 3, got {v}"));
+            }
+            let n = v as usize;
+            // Keep the default CFL (0.4) at the new resolution.
+            cfg.advection.dt = cfg.advection.dt * cfg.advection.n as f64 / n as f64;
+            cfg.advection.n = n;
+        }
+        if let Some(v) = get(doc, "advection", "steps").and_then(Value::as_int) {
+            cfg.advection.steps = v as usize;
+        }
+        if let Some(v) = get(doc, "advection", "burgers").and_then(Value::as_bool) {
+            if v {
+                let steps = cfg.advection.steps;
+                let n = cfg.advection.n;
+                cfg.advection =
+                    AdvectionParams { steps, ..AdvectionParams::burgers_default() };
+                cfg.advection.dt = cfg.advection.dt * cfg.advection.n as f64 / n as f64;
+                cfg.advection.n = n;
+            }
+        }
+
+        if let Some(v) = get(doc, "wave", "n").and_then(Value::as_int) {
+            if v < 3 {
+                return Err(format!("wave.n must be at least 3, got {v}"));
+            }
+            let n = v as usize;
+            // Keep the default Courant number (0.5) at the new resolution.
+            cfg.wave.dt = cfg.wave.dt * (cfg.wave.n - 1) as f64 / (n - 1) as f64;
+            cfg.wave.n = n;
+        }
+        if let Some(v) = get(doc, "wave", "steps").and_then(Value::as_int) {
+            cfg.wave.steps = v as usize;
+        }
+        if let Some(v) = get(doc, "wave", "damping").and_then(Value::as_float) {
+            if !(0.0..1.0).contains(&v) {
+                return Err(format!("wave.damping must be in [0, 1), got {v}"));
+            }
+            cfg.wave.damping = v;
         }
         Ok(cfg)
     }
@@ -246,6 +298,40 @@ mod tests {
     }
 
     #[test]
+    fn scenario_apps_accepted_with_sections() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            app = "wave"
+            [wave]
+            n = 17
+            steps = 64
+            damping = 0.02
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.app, "wave");
+        assert_eq!(cfg.wave.n, 17);
+        assert_eq!(cfg.wave.steps, 64);
+        assert_eq!(cfg.wave.damping, 0.02);
+        // Resizing preserves the default Courant number.
+        assert!((cfg.wave.courant() - 0.5).abs() < 1e-12);
+
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            app = "advection"
+            [advection]
+            n = 64
+            steps = 100
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.app, "advection");
+        assert_eq!(cfg.advection.n, 64);
+        assert_eq!(cfg.advection.steps, 100);
+        assert!((cfg.advection.cfl() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
     fn defaults_survive_empty_toml() {
         let cfg = ExperimentConfig::from_toml("").unwrap();
         assert_eq!(cfg.app, "heat");
@@ -257,5 +343,9 @@ mod tests {
         assert!(ExperimentConfig::from_toml("app = \"chess\"").is_err());
         assert!(ExperimentConfig::from_toml("mode = \"sideways\"").is_err());
         assert!(ExperimentConfig::from_toml("backend = \"r2f2:bogus\"").is_err());
+        // Degenerate grids are a config error, not a div-by-zero downstream.
+        assert!(ExperimentConfig::from_toml("[wave]\nn = 1").is_err());
+        assert!(ExperimentConfig::from_toml("[advection]\nn = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[wave]\ndamping = 1.5").is_err());
     }
 }

@@ -6,6 +6,6 @@ pub mod experiment;
 pub mod json_mini;
 pub mod toml_mini;
 
-pub use experiment::{parse_backend, BackendSpec, ExperimentConfig};
+pub use experiment::{parse_backend, BackendSpec, ExperimentConfig, APPS};
 pub use json_mini::{parse_json, Json};
 pub use toml_mini::{parse as parse_toml, Document, Value};

@@ -3,7 +3,7 @@
 
 use crate::config::{BackendSpec, ExperimentConfig};
 use crate::metrics::Registry;
-use crate::pde::{self, heat1d, swe2d, QuantMode};
+use crate::pde::{self, advection1d, heat1d, swe2d, wave2d, QuantMode};
 use std::time::Instant;
 
 /// Outcome of one simulation experiment.
@@ -51,6 +51,31 @@ pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
             (
                 res.h,
                 reference.h,
+                res.muls,
+                res.r2f2_stats.map(|s| (s.overflow_adjustments, s.redundancy_adjustments)),
+                res.range_events.map(|e| (e.overflows, e.underflows)),
+            )
+        }
+        "advection" => {
+            let mut be = cfg.backend.build();
+            let res = advection1d::run(&cfg.advection, be.as_mut(), cfg.mode);
+            let reference =
+                advection1d::run(&cfg.advection, &mut pde::F64Arith, QuantMode::MulOnly);
+            (
+                res.u,
+                reference.u,
+                res.muls,
+                res.r2f2_stats.map(|s| (s.overflow_adjustments, s.redundancy_adjustments)),
+                res.range_events.map(|e| (e.overflows, e.underflows)),
+            )
+        }
+        "wave" => {
+            let mut be = cfg.backend.build();
+            let res = wave2d::run(&cfg.wave, be.as_mut(), cfg.mode);
+            let reference = wave2d::run(&cfg.wave, &mut pde::F64Arith, QuantMode::MulOnly);
+            (
+                res.u,
+                reference.u,
                 res.muls,
                 res.r2f2_stats.map(|s| (s.overflow_adjustments, s.redundancy_adjustments)),
                 res.range_events.map(|e| (e.overflows, e.underflows)),
@@ -135,6 +160,30 @@ mod tests {
         let set = comparison_set("heat");
         let names: Vec<String> = set.iter().map(|c| c.backend.name()).collect();
         assert_eq!(names, vec!["f64", "f32", "fixed:E5M10", "r2f2:<3,9,3>"]);
+    }
+
+    #[test]
+    fn advection_and_wave_quick_outcomes() {
+        let m = Registry::new();
+        let mut c = ExperimentConfig::default();
+        c.app = "advection".into();
+        c.backend = parse_backend("fixed:E5M10").unwrap();
+        c.advection.n = 64;
+        c.advection.steps = 50;
+        let o = run_experiment(&c, &m);
+        assert_eq!(o.muls, 64 * 50);
+        assert!(o.rel_err_vs_f64 < 0.05, "{}", o.rel_err_vs_f64);
+
+        let mut c = ExperimentConfig::default();
+        c.app = "wave".into();
+        c.backend = parse_backend("fixed:E5M10").unwrap();
+        c.wave.n = 17;
+        c.wave.dt = 0.5 / 16.0;
+        c.wave.steps = 40;
+        let o = run_experiment(&c, &m);
+        assert_eq!(o.muls, 3 * 15 * 15 * 40);
+        assert!(o.rel_err_vs_f64 < 0.2, "{}", o.rel_err_vs_f64);
+        assert_eq!(m.counter("jobs.completed"), 2);
     }
 
     #[test]

@@ -15,20 +15,23 @@
 //!   with the truncated flexible-partial-product approximation, the dynamic
 //!   precision-adjustment unit, a cycle-accurate datapath model and an FPGA
 //!   resource (FF/LUT) cost model for Table 1.
-//! * [`pde`] — the two case studies: 1D heat equation (explicit finite
-//!   differences) and 2D shallow-water equations (Lax–Wendroff), runnable
-//!   under f64 / f32 / fixed `ExMy` / R2F2 multiplication backends. The
-//!   [`pde::Arith`] trait carries the **batched arithmetic engine**
-//!   (DESIGN.md §8) and, by default, routes it through the
-//!   **packed-domain engine** (DESIGN.md §9): solver state held as `u32`
-//!   `[sign|exp|frac]` words, 64-bit integer datapaths, no f64 carrier
-//!   round-trip on the hot path — bit-identical to the scalar path, with
-//!   the PR-1 carrier engine kept selectable as the perf baseline. The
-//!   [`pde::adaptive`] scheduler (DESIGN.md §10) makes the range-telemetry
-//!   layer load-bearing: solvers walk a ladder of fixed formats between
-//!   timesteps (widen + retry on overflow pressure, narrow after a clean
-//!   streak once the dynamics stall), repacking packed state once per
-//!   switch.
+//! * [`pde`] — the PDE scenarios: the paper's two case studies (1D heat,
+//!   2D shallow water) plus 1D upwind advection/Burgers and the 2D damped
+//!   wave equation, runnable under f64 / f32 / fixed `ExMy` / R2F2
+//!   multiplication backends. The [`pde::Arith`] trait carries the
+//!   **batched arithmetic engine** (DESIGN.md §8) and, by default, routes
+//!   it through the **packed-domain engine** (DESIGN.md §9): solver state
+//!   held as `u32` `[sign|exp|frac]` words, 64-bit integer datapaths, no
+//!   f64 carrier round-trip on the hot path — bit-identical to the scalar
+//!   path, with the PR-1 carrier engine kept selectable as the perf
+//!   baseline. The [`pde::adaptive`] scheduler (DESIGN.md §10) makes the
+//!   range-telemetry layer load-bearing: solvers walk a ladder of fixed
+//!   formats between timesteps (widen + retry on overflow pressure,
+//!   narrow after a clean streak once the dynamics stall). The
+//!   [`pde::scenario`] layer (DESIGN.md §11) is what every solver plugs
+//!   into: one [`pde::scenario::Sim`] trait, generic run/adaptive
+//!   drivers, and the [`pde::scenario::SCENARIOS`] registry that tests,
+//!   benches, the CLI and CI all iterate.
 //! * [`analysis`] / [`sweep`] — the exploration harnesses behind Figs 2, 3
 //!   and 6.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`

@@ -11,10 +11,11 @@
 
 use r2f2::analysis;
 use r2f2::cli::Args;
-use r2f2::config::{parse_backend, ExperimentConfig};
+use r2f2::config::{parse_backend, ExperimentConfig, APPS};
 use r2f2::coordinator::{self, Coordinator};
 use r2f2::metrics::Registry;
 use r2f2::pde::init::HeatInit;
+use r2f2::pde::scenario::SCENARIOS;
 use r2f2::pde::QuantMode;
 use r2f2::r2f2core::{datapath, resource, R2f2Config};
 use r2f2::report::{self, ascii_plot, Table};
@@ -22,7 +23,7 @@ use r2f2::runtime::{HeatRunner, Runtime};
 use r2f2::softfloat::FpFormat;
 use r2f2::sweep::{config_profile, error_sweep};
 
-const SWITCHES: &[&str] = &["verbose", "json", "help", "full"];
+const SWITCHES: &[&str] = &["verbose", "json", "help", "full", "profile"];
 
 fn main() {
     let mut args = match Args::from_env(SWITCHES) {
@@ -36,6 +37,7 @@ fn main() {
     let result = match cmd.as_str() {
         "run" => cmd_run(&mut args),
         "compare" => cmd_compare(&mut args),
+        "scenarios" => cmd_scenarios(&mut args),
         "analyze" => cmd_analyze(&mut args),
         "profile" => cmd_profile(&mut args),
         "sweep" => cmd_sweep(&mut args),
@@ -64,9 +66,13 @@ fn print_help() {
 USAGE: r2f2 <command> [options]
 
 COMMANDS
-  run       --config FILE | --app heat|swe --backend SPEC [--mode mul-only|full]
-            [--n N --steps S] — run one experiment vs the f64 reference
-  compare   --app heat|swe — f64/f32/half/R2F2 comparison table (Figs 1/7/8)
+  run       --config FILE | --app heat|swe|advection|wave --backend SPEC
+            [--mode mul-only|full] [--n N --steps S] — run one experiment
+            vs the f64 reference
+  compare   --app heat|swe|advection|wave — f64/f32/half/R2F2 comparison
+            table (Figs 1/7/8)
+  scenarios [--scenario NAME] [--profile] — list the scenario registry;
+            with --profile, per-scenario fixed-format precision profiles
   analyze   [--n N --steps S] — Fig 2 data-distribution study
   profile   [--pairs P] — Fig 3 precision profiling + Eq.(1) check
   sweep     [--intervals I --pairs P] — Fig 6 accuracy sweep
@@ -85,6 +91,9 @@ fn experiment_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     }
     let mut cfg = ExperimentConfig::default();
     cfg.app = args.get_or("app", "heat");
+    if !APPS.contains(&cfg.app.as_str()) {
+        return Err(format!("app must be {}, got `{}`", APPS.join("|"), cfg.app));
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = parse_backend(&b)?;
     }
@@ -98,11 +107,18 @@ fn experiment_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
         cfg.heat.n = n;
         cfg.heat.dt = 0.25 / ((n - 1) as f64 * (n - 1) as f64);
         cfg.swe.n = n;
+        // Keep the scenario defaults' stability numbers at the new size.
+        cfg.advection.dt = cfg.advection.dt * cfg.advection.n as f64 / n as f64;
+        cfg.advection.n = n;
+        cfg.wave.dt = cfg.wave.dt * (cfg.wave.n - 1) as f64 / (n - 1) as f64;
+        cfg.wave.n = n;
     }
     if let Some(s) = args.get("steps") {
         let s: usize = s.parse().map_err(|_| "bad --steps")?;
         cfg.heat.steps = s;
         cfg.swe.steps = s;
+        cfg.advection.steps = s;
+        cfg.wave.steps = s;
     }
     if let Some(init) = args.get("init") {
         cfg.heat.init = match init.as_str() {
@@ -132,6 +148,9 @@ fn cmd_run(args: &mut Args) -> Result<(), String> {
 
 fn cmd_compare(args: &mut Args) -> Result<(), String> {
     let app = args.get_or("app", "heat");
+    if !APPS.contains(&app.as_str()) {
+        return Err(format!("app must be {}, got `{app}`", APPS.join("|")));
+    }
     let coord = Coordinator::default();
     let outcomes = coord.run_batch(coordinator::comparison_set(&app));
     println!("{}", Coordinator::outcome_table(&outcomes));
@@ -145,6 +164,53 @@ fn cmd_compare(args: &mut Args) -> Result<(), String> {
         .collect();
     let refs: Vec<(&str, &[f64])> = series.iter().map(|(n, v)| (*n, v.as_slice())).collect();
     println!("{}", ascii_plot::line_plot(&format!("{app}: final fields"), &refs, 64, 14));
+    Ok(())
+}
+
+fn cmd_scenarios(args: &mut Args) -> Result<(), String> {
+    let wanted = args.get("scenario");
+    let profile = args.switch("profile");
+    let specs: Vec<_> = SCENARIOS
+        .iter()
+        .filter(|s| wanted.as_deref().is_none_or(|w| w == s.name))
+        .collect();
+    if specs.is_empty() {
+        let names: Vec<&str> = SCENARIOS.iter().map(|s| s.name).collect();
+        return Err(format!("unknown scenario (have: {})", names.join(", ")));
+    }
+    let mut t = Table::new(vec!["scenario", "physics", "why it stresses precision"]);
+    for s in &specs {
+        t.row(vec![s.name.to_string(), s.physics.to_string(), s.stress.to_string()]);
+    }
+    println!("scenario registry ({} entries)\n{}", SCENARIOS.len(), t.render());
+
+    if profile {
+        let formats = error_sweep::profile_formats();
+        let workers = coordinator::default_workers();
+        for s in &specs {
+            let prof = error_sweep::scenario_precision_profile(s.name, &formats, workers)?;
+            let mut t = Table::new(vec!["format", "rel-err vs f64", "oflow", "uflow", "muls"]);
+            for r in &prof.rows {
+                t.row(vec![
+                    r.fmt.to_string(),
+                    format!("{:.3e}", r.rel_err),
+                    r.overflows.to_string(),
+                    r.underflows.to_string(),
+                    r.muls.to_string(),
+                ]);
+            }
+            // The profile already ran the f64 reference — histogram its
+            // field instead of re-simulating.
+            let hist = analysis::field_histogram(&prof.reference, workers);
+            println!("{}: fixed-format precision profile (MulOnly)\n{}", s.name, t.render());
+            println!(
+                "{}: f64 field occupies {} octaves (90% bulk: {})\n",
+                s.name,
+                hist.occupied_octaves(),
+                hist.bulk_octaves(0.9)
+            );
+        }
+    }
     Ok(())
 }
 

@@ -41,12 +41,15 @@
 //! be replayed verbatim ([`AdaptiveArith::from_trace`]) to pin one path to
 //! another's schedule.
 //!
-//! **Packed state across switches.** In `QuantMode::Full` the packed
-//! engine keeps the whole state vector in [`PackedVec`] words across
-//! epochs; a format switch re-encodes it **once** through the packed
-//! repack hook ([`PackedVec::repack`] / `softfloat::packed::repack_word`)
-//! instead of bouncing every element through the f64 carrier — and raises
-//! exactly the flags the scalar path's per-element re-quantization raises.
+//! **Packed state within an epoch.** In `QuantMode::Full` the packed
+//! engine runs each epoch as one fused `Arith::stencil_multi`-style call,
+//! so the state stays in packed words across every timestep of the epoch
+//! and round-trips through the f64 carrier only at epoch boundaries —
+//! where the scheduler needs the sample anyway. A format switch is then an
+//! ordinary storage re-quantization of the carrier image (the standalone
+//! word-domain repack hook, `softfloat::packed::repack_word` /
+//! `crate::softfloat::PackedVec::repack`, remains available and
+//! bit-equivalent for callers that keep state packed across epochs).
 //!
 //! **Modeled datapath cost.** Each multiplication is charged the
 //! calibrated LUT area of a fixed multiplier of the *active* format
@@ -55,16 +58,12 @@
 //! win condition, enforced by `tests/adaptive_schedule.rs`, is matching
 //! the wide format's accuracy at strictly lower modeled cost.
 
-use super::heat1d::{HeatParams, HeatResult};
-use super::swe2d::{QuantScope, SweParams, SweResult, SweSim};
-use super::{
-    packed_full_sweep, scalar_stencil_step, Arith, BatchEngine, Ctx, FixedArith, QuantMode,
-    RangeEvents,
-};
+use super::heat1d::{self, HeatParams, HeatResult};
+use super::swe2d::{self, QuantScope, SweParams, SweResult};
+use super::{Arith, BatchEngine, FixedArith, QuantMode, RangeEvents};
 use crate::analysis::{Log2Histogram, StageStats, StageTracker};
 use crate::r2f2core::resource::fixed_multiplier;
-use crate::softfloat::packed as pk;
-use crate::softfloat::{Flags, FpFormat, PackedVec, Rounder};
+use crate::softfloat::FpFormat;
 
 /// What the scheduler decided at one epoch boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -177,6 +176,23 @@ impl AdaptivePolicy {
         let mut p = AdaptivePolicy::new(vec![FpFormat::E5M10, FpFormat::new(6, 9)]);
         p.epoch_len = 4;
         p
+    }
+
+    /// The advection default (`pde::advection1d`): the same FP8 → half
+    /// ladder as [`AdaptivePolicy::heat_default`] (delegated, so the rungs
+    /// can never drift apart) — amplitude 400 saturates `E4M3` on encode
+    /// in epoch 0, and upwind diffusion later decays the transport into a
+    /// flush stall that narrows back.
+    pub fn advection_default() -> AdaptivePolicy {
+        AdaptivePolicy::heat_default()
+    }
+
+    /// The wave default (`pde::wave2d`): the same FP8 → half ladder as
+    /// [`AdaptivePolicy::heat_default`] (delegated) — the signed
+    /// oscillation's amplitude 300 saturates `E4M3` immediately, and a
+    /// damped run collapses to exact zeros, the stall that narrows back.
+    pub fn wave_default() -> AdaptivePolicy {
+        AdaptivePolicy::heat_default()
     }
 
     /// May the scheduler narrow onto `narrower` given the observed peak?
@@ -311,8 +327,8 @@ impl AdaptiveArith {
         self.inner.events
     }
 
-    /// Do all rungs fit a packed `u32` word (⇒ the persistent packed
-    /// Full-mode heat driver is applicable)?
+    /// Do all rungs fit a packed `u32` word (⇒ the packed engine's fused
+    /// Full-mode epoch driver is applicable on every rung)?
     pub fn ladder_fits_word(&self) -> bool {
         self.policy.ladder.iter().all(|f| f.fits_word())
     }
@@ -567,17 +583,20 @@ impl Arith for AdaptiveArith {
 }
 
 // ---------------------------------------------------------------------------
-// Heat-equation adaptive runners
+// Per-scenario adaptive entry points (thin wrappers)
 // ---------------------------------------------------------------------------
+//
+// The epoch protocol — save → attempt → telemetry → decide, widen-retry
+// rollback, narrow re-quantization — lives once in
+// `pde::scenario::run_sim_adaptive`; these wrappers only pick the scenario.
 
-/// Adaptive heat run on the batched engines. `QuantMode::Full` with the
-/// packed engine (and a word-sized ladder) runs the persistent packed
-/// driver: state stays in [`PackedVec`] words across epochs and a switch
-/// repacks it once. Bit-identical to [`run_heat_scalar`] under the same
-/// schedule — and the schedules themselves coincide, since the decision
-/// inputs are bit-identical.
+/// Adaptive heat run on the batched engines. In `QuantMode::Full` the
+/// packed engine steps each epoch as one fused multi-step call, so state
+/// stays packed across the epoch. Bit-identical to [`run_heat_scalar`]
+/// under the same schedule — and the schedules themselves coincide, since
+/// the decision inputs are bit-identical.
 pub fn run_heat(params: &HeatParams, sched: &mut AdaptiveArith, mode: QuantMode) -> HeatResult {
-    run_heat_impl(params, sched, mode, true)
+    heat1d::run_adaptive(params, sched, mode)
 }
 
 /// The per-multiplication scalar reference of [`run_heat`].
@@ -586,252 +605,8 @@ pub fn run_heat_scalar(
     sched: &mut AdaptiveArith,
     mode: QuantMode,
 ) -> HeatResult {
-    run_heat_impl(params, sched, mode, false)
+    heat1d::run_adaptive_scalar(params, sched, mode)
 }
-
-fn run_heat_impl(
-    params: &HeatParams,
-    sched: &mut AdaptiveArith,
-    mode: QuantMode,
-    batched: bool,
-) -> HeatResult {
-    assert!(params.n >= 3, "need at least one interior node");
-    assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());
-    let n = params.n;
-    let name = sched.name();
-    let epoch_len = sched.policy.epoch_len;
-    let est_epochs = params.steps.div_ceil(epoch_len).max(1);
-    sched.prepare(est_epochs as u64 * n as u64);
-
-    let raw = params.init.sample(n, params.length);
-
-    if params.steps == 0 {
-        let mut u = raw;
-        if mode == QuantMode::Full {
-            for v in u.iter_mut() {
-                *v = sched.inner.quant(*v);
-            }
-        }
-        return HeatResult {
-            u,
-            snapshots: Vec::new(),
-            muls: 0,
-            backend: name,
-            r2f2_stats: None,
-            range_events: Some(sched.inner.events),
-        };
-    }
-
-    if batched
-        && mode == QuantMode::Full
-        && sched.inner.engine == BatchEngine::Packed
-        && sched.ladder_fits_word()
-    {
-        return run_heat_packed_full(params, sched, &raw, name);
-    }
-
-    let r = params.r();
-    let mut u = raw.clone();
-    let mut next = u.clone();
-    let mut snapshots = Vec::new();
-    let mut muls = 0u64;
-    let mut done = 0usize;
-
-    while done < params.steps {
-        let e_len = epoch_len.min(params.steps - done);
-        // Epoch-start save. For the very first epoch this is the *raw*
-        // field, so a widen retry re-quantizes the original data in the
-        // wider format (nothing of the narrow attempt survives).
-        let save = u.clone();
-        let mut need_quant = mode == QuantMode::Full && done == 0;
-        loop {
-            sched.begin_epoch();
-            if need_quant {
-                for v in u.iter_mut() {
-                    *v = sched.inner.quant(*v);
-                }
-                need_quant = false;
-            }
-            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
-            for s in 0..e_len {
-                if batched {
-                    // The backend's batched per-sweep engine (packed or
-                    // carrier — both bit-identical to the scalar spec).
-                    sched.inner.stencil_step(&mut next, &u, r, mode);
-                } else {
-                    // The one canonical scalar sequence — shared with
-                    // `heat1d::run_scalar` and the batched engines' own
-                    // reference, so the three paths cannot drift.
-                    scalar_stencil_step(&mut sched.inner, &mut next, &u, r, mode);
-                }
-                std::mem::swap(&mut u, &mut next);
-                let global = done + s + 1;
-                if params.snapshot_every != 0 && global % params.snapshot_every == 0 {
-                    esnaps.push((global, u.clone()));
-                }
-            }
-            let delta = 3 * (n as u64 - 2) * e_len as u64;
-            muls += delta;
-            sched.charge(delta);
-            match sched.end_epoch(&u, done + e_len) {
-                Decision::Widen => {
-                    u.copy_from_slice(&save);
-                    need_quant = mode == QuantMode::Full;
-                }
-                Decision::Narrow => {
-                    if mode == QuantMode::Full {
-                        // Re-quantize the committed state into the
-                        // narrower format (may flush/saturate; the flags
-                        // are counted exactly like the packed repack's).
-                        for v in u.iter_mut() {
-                            *v = sched.inner.quant(*v);
-                        }
-                    }
-                    snapshots.extend(esnaps);
-                    break;
-                }
-                Decision::Stay => {
-                    snapshots.extend(esnaps);
-                    break;
-                }
-            }
-        }
-        done += e_len;
-    }
-
-    HeatResult {
-        u,
-        snapshots,
-        muls,
-        backend: name,
-        r2f2_stats: None,
-        range_events: Some(sched.inner.events),
-    }
-}
-
-/// The persistent packed Full-mode driver: state lives in [`PackedVec`]
-/// words across *all* epochs; a format switch repacks the words once
-/// (`PackedVec::repack`) with per-element flags charged exactly like the
-/// scalar path's per-element re-quantization; a widen retry restores the
-/// epoch's saved words and repacks those instead.
-fn run_heat_packed_full(
-    params: &HeatParams,
-    sched: &mut AdaptiveArith,
-    raw: &[f64],
-    name: String,
-) -> HeatResult {
-    let n = params.n;
-    let r = params.r();
-    let epoch_len = sched.policy.epoch_len;
-    let sweep_muls = 3 * (n as u64 - 2);
-    let mut rnd = Rounder::nearest_even();
-
-    let mut pv = PackedVec::new(sched.format());
-    let mut wnext: Vec<u32> = vec![0; n];
-    let mut pr: Vec<u32> = vec![0; n];
-    let mut pr_fl: Vec<Flags> = vec![Flags::NONE; n];
-    // The state is always format-representable (it is quantized on entry
-    // and after every switch), so its per-sweep re-encode flags are NONE —
-    // the same invariant the scalar path sees.
-    let enc_fl: Vec<Flags> = vec![Flags::NONE; n];
-    let mut tele = vec![0.0f64; n];
-    let mut snapshots = Vec::new();
-    let mut muls = 0u64;
-    let mut done = 0usize;
-    // Initial quantization is deferred into the first epoch attempt so its
-    // flags land in epoch 0's event delta, exactly like the scalar path.
-    let mut need_encode = true;
-
-    while done < params.steps {
-        let e_len = epoch_len.min(params.steps - done);
-        let (save_words, save_fmt) = if done == 0 {
-            (Vec::new(), sched.format())
-        } else {
-            (pv.words().to_vec(), pv.format())
-        };
-        loop {
-            sched.begin_epoch();
-            if need_encode {
-                pv = PackedVec::new(sched.format());
-                let mut efl: Vec<Flags> = Vec::new();
-                pv.encode_from(raw, &mut rnd, &mut efl);
-                for f in &efl {
-                    sched.inner.track(*f);
-                }
-                need_encode = false;
-            }
-            let pf = *pv.packed_format();
-            let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
-            let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
-            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
-            let mut of = 0u64;
-            let mut uf = 0u64;
-            for s in 0..e_len {
-                let (o, f) = packed_full_sweep(
-                    &pf, &mut rnd, wr, flr, w2r, fl2r, pv.words(), &enc_fl, &mut wnext, &mut pr,
-                    &mut pr_fl,
-                );
-                of += o;
-                uf += f;
-                std::mem::swap(pv.words_mut(), &mut wnext);
-                let global = done + s + 1;
-                if params.snapshot_every != 0 && global % params.snapshot_every == 0 {
-                    let mut snap = vec![0.0; n];
-                    pv.decode_into(&mut snap);
-                    esnaps.push((global, snap));
-                }
-            }
-            sched.inner.events.overflows += of;
-            sched.inner.events.underflows += uf;
-            let delta = sweep_muls * e_len as u64;
-            muls += delta;
-            sched.charge(delta);
-            pv.decode_into(&mut tele);
-            match sched.end_epoch(&tele, done + e_len) {
-                Decision::Widen => {
-                    if done == 0 {
-                        need_encode = true;
-                    } else {
-                        // Restore the epoch's saved words (in their saved
-                        // format) and repack once into the widened format.
-                        pv = PackedVec::new(save_fmt);
-                        pv.words_mut().extend_from_slice(&save_words);
-                        let to = sched.format();
-                        let inner = &mut sched.inner;
-                        pv.repack(to, &mut rnd, |_, fl| inner.track(fl));
-                    }
-                }
-                Decision::Narrow => {
-                    let to = sched.format();
-                    let inner = &mut sched.inner;
-                    pv.repack(to, &mut rnd, |_, fl| inner.track(fl));
-                    snapshots.extend(esnaps);
-                    break;
-                }
-                Decision::Stay => {
-                    snapshots.extend(esnaps);
-                    break;
-                }
-            }
-        }
-        done += e_len;
-    }
-
-    let mut u = vec![0.0; n];
-    pv.decode_into(&mut u);
-    HeatResult {
-        u,
-        snapshots,
-        muls,
-        backend: name,
-        r2f2_stats: None,
-        range_events: Some(sched.inner.events),
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Shallow-water adaptive runners
-// ---------------------------------------------------------------------------
 
 /// Adaptive shallow-water run on the batched flux engine. The telemetry
 /// sample is the interior depth + x-momentum fields; SWE state lives in
@@ -843,7 +618,7 @@ pub fn run_swe(
     scope: QuantScope,
     mode: QuantMode,
 ) -> SweResult {
-    run_swe_impl(params, sched, scope, mode, true)
+    swe2d::run_adaptive(params, sched, scope, mode)
 }
 
 /// The per-multiplication scalar reference of [`run_swe`].
@@ -853,61 +628,7 @@ pub fn run_swe_scalar(
     scope: QuantScope,
     mode: QuantMode,
 ) -> SweResult {
-    run_swe_impl(params, sched, scope, mode, false)
-}
-
-fn run_swe_impl(
-    params: &SweParams,
-    sched: &mut AdaptiveArith,
-    scope: QuantScope,
-    mode: QuantMode,
-    batched: bool,
-) -> SweResult {
-    let n = params.n;
-    assert!(n >= 4, "grid too small");
-    let name = sched.name();
-    let epoch_len = sched.policy.epoch_len;
-    let est_epochs = params.steps.div_ceil(epoch_len).max(1);
-    sched.prepare(est_epochs as u64 * 2 * (n * n) as u64);
-
-    let mut sim = SweSim::new(params);
-    let mut snapshots = Vec::new();
-    let mut muls = 0u64;
-    let mut tele: Vec<f64> = Vec::new();
-    let mut done = 0usize;
-
-    while done < params.steps {
-        let e_len = epoch_len.min(params.steps - done);
-        let save = sim.save();
-        loop {
-            sched.begin_epoch();
-            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
-            let delta = {
-                let mut ctx = Ctx::new(&mut sched.inner, mode);
-                for s in 0..e_len {
-                    sim.step(&mut ctx, scope, batched);
-                    let global = done + s + 1;
-                    if params.snapshot_every != 0 && global % params.snapshot_every == 0 {
-                        esnaps.push((global, sim.interior_h()));
-                    }
-                }
-                ctx.muls
-            };
-            muls += delta;
-            sched.charge(delta);
-            sim.telemetry(&mut tele);
-            match sched.end_epoch(&tele, done + e_len) {
-                Decision::Widen => sim.restore(&save),
-                Decision::Narrow | Decision::Stay => {
-                    snapshots.extend(esnaps);
-                    break;
-                }
-            }
-        }
-        done += e_len;
-    }
-
-    sim.finish(muls, name, None, Some(sched.inner.events), snapshots)
+    swe2d::run_adaptive_scalar(params, sched, scope, mode)
 }
 
 #[cfg(test)]

@@ -1,0 +1,441 @@
+//! 1D advective transport on a periodic domain, first-order upwind — the
+//! scenario the heat stencil never reaches: transport instead of diffusion.
+//!
+//! Linear form (`∂u/∂t + a ∂u/∂x = 0`, `a > 0`):
+//!
+//! `u'ᵢ = uᵢ − (c·uᵢ − c·uᵢ₋₁)`, `c = a·Δt/Δx` (stable for `c ≤ 1`),
+//! with both `c·u` products routed through the [`Arith`] backend — **one
+//! backend multiplication per node per step** (the `c·uⱼ` product is shared
+//! between its two uses, like the heat stencil's `r·uⱼ`). The canonical
+//! sequence computes the whole product row first (`pⱼ = c ⊗ uⱼ` in index
+//! order — one [`Arith::mul_batch`] on the batched path), then the
+//! mode-gated combine.
+//!
+//! Optional **Burgers nonlinearity** (`∂u/∂t + ∂(u²/2)/∂x = 0`, `u > 0`):
+//! the flux products multiply the state *by itself* —
+//! `qⱼ = uⱼ ⊗ uⱼ` ([`Arith::mul_pairs`]), then `pⱼ = k ⊗ qⱼ` with
+//! `k = Δt/(2Δx)` — two backend multiplications per node per step, and an
+//! operand distribution that slides with the forming shock. This is the
+//! regime that stresses R2F2's sliding-window exponent adjustment: the
+//! multiplier sees `u²`, not `coefficient × u`.
+//!
+//! Why precision-interesting: upwind transport *decays* (numerical
+//! diffusion damps every non-constant mode), so one run walks the operand
+//! range from hundreds down through the flush threshold — by the tail,
+//! every `c·u` product underflows the narrow formats and the transport
+//! freezes, which is exactly the stall the adaptive scheduler narrows on.
+
+use super::init::HeatInit;
+use super::scenario::{self, RunStats, Sim};
+use super::{Arith, Ctx, QuantMode, RangeEvents};
+use crate::r2f2core::Stats;
+
+/// Advection run parameters.
+#[derive(Debug, Clone)]
+pub struct AdvectionParams {
+    /// Number of cells (periodic — no duplicated endpoint).
+    pub n: usize,
+    /// Advection velocity `a > 0` (ignored by the Burgers flux, where the
+    /// state itself is the velocity).
+    pub velocity: f64,
+    /// Domain length L (Δx = L / n).
+    pub length: f64,
+    /// Time step.
+    pub dt: f64,
+    /// Number of time steps.
+    pub steps: usize,
+    /// Evolve Burgers' equation (`f = u²/2`) instead of linear transport.
+    pub burgers: bool,
+    /// Initial condition, sampled periodically (use whole `cycles`).
+    pub init: HeatInit,
+    /// Constant added to the initial profile (Burgers runs keep `u > 0`).
+    pub offset: f64,
+    /// Keep a state snapshot every `snapshot_every` steps (0 = none).
+    pub snapshot_every: usize,
+}
+
+impl Default for AdvectionParams {
+    fn default() -> AdvectionParams {
+        // c = a·Δt/Δx = 0.4; amplitude 400 spans the same octaves as the
+        // heat study's sine and saturates E4M3 (max finite 240) on encode.
+        AdvectionParams {
+            n: 256,
+            velocity: 1.0,
+            length: 1.0,
+            dt: 0.4 / 256.0,
+            steps: 1000,
+            burgers: false,
+            init: HeatInit::Sin { amplitude: 400.0, cycles: 2.0 },
+            offset: 0.0,
+            snapshot_every: 0,
+        }
+    }
+}
+
+impl AdvectionParams {
+    /// A positive Burgers setup: `u ∈ [20, 100]`, steepening into a shock.
+    pub fn burgers_default() -> AdvectionParams {
+        AdvectionParams {
+            burgers: true,
+            init: HeatInit::Sin { amplitude: 40.0, cycles: 2.0 },
+            offset: 60.0,
+            // CFL on max |u| = 100: 100·dt/dx = 0.8.
+            dt: 0.8 / (100.0 * 256.0),
+            ..AdvectionParams::default()
+        }
+    }
+
+    /// The CFL number of the *linear* scheme, `c = a·Δt/Δx`.
+    pub fn cfl(&self) -> f64 {
+        self.velocity * self.dt * self.n as f64 / self.length
+    }
+
+    /// Backend multiplications per run: 1 per cell per step (linear) or 2
+    /// (Burgers).
+    pub fn expected_muls(&self) -> u64 {
+        let per = if self.burgers { 2 } else { 1 };
+        per * self.n as u64 * self.steps as u64
+    }
+}
+
+/// Result of an advection run.
+#[derive(Debug, Clone)]
+pub struct AdvectionResult {
+    /// Final field.
+    pub u: Vec<f64>,
+    /// `(step, field)` snapshots if requested.
+    pub snapshots: Vec<(usize, Vec<f64>)>,
+    /// Multiplications issued.
+    pub muls: u64,
+    /// Backend name.
+    pub backend: String,
+    /// R2F2 adjustment statistics, when applicable.
+    pub r2f2_stats: Option<Stats>,
+    /// Fixed-format range events, when applicable.
+    pub range_events: Option<RangeEvents>,
+}
+
+/// The advection scenario state.
+#[derive(Debug)]
+pub struct AdvectionSim {
+    n: usize,
+    /// `c` (linear) or `Δt/(2Δx)` (Burgers) — the constant operand.
+    coeff: f64,
+    burgers: bool,
+    u: Vec<f64>,
+    next: Vec<f64>,
+    /// Product row `pⱼ` scratch.
+    prod: Vec<f64>,
+    /// Burgers `(uⱼ, uⱼ)` pair scratch.
+    pairs: Vec<(f64, f64)>,
+    /// Burgers `uⱼ²` scratch.
+    sq: Vec<f64>,
+}
+
+impl AdvectionSim {
+    pub fn new(params: &AdvectionParams) -> AdvectionSim {
+        let n = params.n;
+        assert!(n >= 3, "need at least three cells");
+        // Periodic sampling: x = i/n · L (no duplicated endpoint).
+        let u: Vec<f64> = (0..n)
+            .map(|i| {
+                params.offset + params.init.at(i as f64 / n as f64 * params.length, params.length)
+            })
+            .collect();
+        let dx = params.length / n as f64;
+        let coeff = if params.burgers {
+            let umax = u.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+            let cfl = umax * params.dt / dx;
+            assert!(cfl <= 1.0 + 1e-12, "upwind scheme unstable: c = {cfl}");
+            assert!(u.iter().all(|&v| v > 0.0), "Burgers upwind needs u > 0");
+            0.5 * params.dt / dx
+        } else {
+            let c = params.cfl();
+            assert!(c > 0.0 && c <= 1.0 + 1e-12, "upwind scheme unstable: c = {c}");
+            c
+        };
+        let next = u.clone();
+        AdvectionSim {
+            n,
+            coeff,
+            burgers: params.burgers,
+            u,
+            next,
+            prod: vec![0.0; n],
+            pairs: Vec::new(),
+            sq: vec![0.0; n],
+        }
+    }
+
+    /// Consume the simulation into its final field.
+    pub fn into_field(self) -> Vec<f64> {
+        self.u
+    }
+
+    /// One upwind step: fill the product row `pⱼ` (through the backend),
+    /// then the mode-gated combine `u'ᵢ = uᵢ − (pᵢ − pᵢ₋₁)` with periodic
+    /// wrap. The batched path issues the identical multiplication stream
+    /// through `mul_pairs`/`mul_batch` (index order — the §8 contract).
+    fn step(&mut self, ctx: &mut Ctx<'_>, batched: bool) {
+        let n = self.n;
+        if self.burgers {
+            // qⱼ = uⱼ ⊗ uⱼ, then pⱼ = k ⊗ qⱼ — both rows in index order.
+            if batched {
+                self.pairs.clear();
+                self.pairs.extend(self.u.iter().map(|&v| (v, v)));
+                ctx.mul_pairs(&mut self.sq, &self.pairs);
+                ctx.mul_batch(&mut self.prod, self.coeff, &self.sq);
+            } else {
+                for j in 0..n {
+                    self.sq[j] = ctx.mul(self.u[j], self.u[j]);
+                }
+                for j in 0..n {
+                    self.prod[j] = ctx.mul(self.coeff, self.sq[j]);
+                }
+            }
+        } else if batched {
+            ctx.mul_batch(&mut self.prod, self.coeff, &self.u);
+        } else {
+            for j in 0..n {
+                self.prod[j] = ctx.mul(self.coeff, self.u[j]);
+            }
+        }
+        for i in 0..n {
+            let im1 = if i == 0 { n - 1 } else { i - 1 };
+            let d = ctx.sub(self.prod[i], self.prod[im1]);
+            let unew = ctx.sub(self.u[i], d);
+            self.next[i] = ctx.quant(unew);
+        }
+        std::mem::swap(&mut self.u, &mut self.next);
+    }
+}
+
+impl Sim for AdvectionSim {
+    fn scenario(&self) -> &'static str {
+        "advection1d"
+    }
+
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        for v in self.u.iter_mut() {
+            *v = ctx.quant(*v);
+        }
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        for s in 0..steps {
+            self.step(ctx, batched);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.u.clone()));
+            }
+        }
+    }
+
+    fn save(&self) -> Vec<Vec<f64>> {
+        vec![self.u.clone()]
+    }
+
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.u.copy_from_slice(&saved[0]);
+    }
+
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.u);
+    }
+
+    fn telemetry_len(&self) -> usize {
+        self.n
+    }
+
+    fn primary_field(&self) -> Vec<f64> {
+        self.u.clone()
+    }
+}
+
+fn finish(sim: AdvectionSim, stats: RunStats) -> AdvectionResult {
+    AdvectionResult {
+        u: sim.into_field(),
+        snapshots: stats.snapshots,
+        muls: stats.muls,
+        backend: stats.backend,
+        r2f2_stats: stats.r2f2_stats,
+        range_events: stats.range_events,
+    }
+}
+
+/// Run under the backend's batched engine; bit-identical to [`run_scalar`].
+pub fn run(params: &AdvectionParams, be: &mut dyn Arith, mode: QuantMode) -> AdvectionResult {
+    let mut sim = AdvectionSim::new(params);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    finish(sim, stats)
+}
+
+/// The per-multiplication scalar reference of [`run`].
+pub fn run_scalar(
+    params: &AdvectionParams,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+) -> AdvectionResult {
+    let mut sim = AdvectionSim::new(params);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, false);
+    finish(sim, stats)
+}
+
+/// Adaptive-precision run through the generic epoch driver.
+pub fn run_adaptive(
+    params: &AdvectionParams,
+    sched: &mut super::AdaptiveArith,
+    mode: QuantMode,
+) -> AdvectionResult {
+    let mut sim = AdvectionSim::new(params);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    finish(sim, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{rel_l2, F64Arith, FixedArith, R2f2Arith};
+    use crate::r2f2core::R2f2Config;
+    use crate::softfloat::FpFormat;
+
+    fn small() -> AdvectionParams {
+        // dt rescaled so the 64-cell grid keeps the default CFL c = 0.4.
+        AdvectionParams { n: 64, dt: 0.4 / 64.0, steps: 200, ..AdvectionParams::default() }
+    }
+
+    #[test]
+    fn mass_is_conserved_in_f64() {
+        // Conservative upwind on a periodic domain preserves the mean.
+        let p = small();
+        let sum0: f64 = AdvectionSim::new(&p).primary_field().iter().sum();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let sum1: f64 = res.u.iter().sum();
+        assert!((sum1 - sum0).abs() < 1e-7, "mass drift {}", sum1 - sum0);
+    }
+
+    #[test]
+    fn max_principle_holds_in_f64() {
+        // Upwind with 0 ≤ c ≤ 1 is monotone: no new extrema.
+        let p = small();
+        let u0 = AdvectionSim::new(&p).primary_field();
+        let (lo, hi) = u0.iter().fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert!(res.u.iter().all(|&v| v >= lo - 1e-9 && v <= hi + 1e-9));
+    }
+
+    #[test]
+    fn transport_moves_the_profile_and_diffusion_damps_it() {
+        let p = small();
+        let u0 = AdvectionSim::new(&p).primary_field();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        // The profile changed (it moved)...
+        assert!(rel_l2(&res.u, &u0) > 0.1);
+        // ...and first-order upwind damped the mode (|g| < 1).
+        let amp0 = u0.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+        let amp1 = res.u.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()));
+        assert!(amp1 < amp0, "no decay: {amp1} vs {amp0}");
+    }
+
+    #[test]
+    fn mul_count_matches_expectation() {
+        let p = small();
+        assert_eq!(run(&p, &mut F64Arith, QuantMode::MulOnly).muls, p.expected_muls());
+        let b = AdvectionParams { n: 64, steps: 50, ..AdvectionParams::burgers_default() };
+        assert_eq!(run(&b, &mut F64Arith, QuantMode::MulOnly).muls, b.expected_muls());
+    }
+
+    #[test]
+    fn batched_matches_scalar_bitwise() {
+        // §8 contract for both flux forms, both modes, fixed + R2F2.
+        let burgers = AdvectionParams { n: 64, steps: 60, ..AdvectionParams::burgers_default() };
+        for p in [small(), burgers] {
+            for mode in [QuantMode::MulOnly, QuantMode::Full] {
+                let mut a = FixedArith::new(FpFormat::E5M10);
+                let mut b = FixedArith::new(FpFormat::E5M10);
+                let s = run_scalar(&p, &mut a, mode);
+                let g = run(&p, &mut b, mode);
+                assert_eq!(s.muls, g.muls, "{mode:?}");
+                assert_eq!(s.range_events, g.range_events, "{mode:?}");
+                for i in 0..p.n {
+                    assert_eq!(s.u[i].to_bits(), g.u[i].to_bits(), "{mode:?} node {i}");
+                }
+                let mut a = R2f2Arith::new(R2f2Config::C16_393);
+                let mut b = R2f2Arith::new(R2f2Config::C16_393);
+                let s = run_scalar(&p, &mut a, mode);
+                let g = run(&p, &mut b, mode);
+                assert_eq!(s.r2f2_stats, g.r2f2_stats, "{mode:?}");
+                for i in 0..p.n {
+                    assert_eq!(s.u[i].to_bits(), g.u[i].to_bits(), "r2f2 {mode:?} node {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn e5m10_mulonly_tracks_f64() {
+        let p = small();
+        let reference = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let res = run(&p, &mut half, QuantMode::MulOnly);
+        assert!(rel_l2(&res.u, &reference.u) < 1e-1);
+    }
+
+    #[test]
+    fn e4m3_saturates_on_the_amplitude() {
+        // Amplitude 400 > E4M3's max finite: the narrow format must report
+        // overflow pressure — the adaptive ladder's widen trigger.
+        let p = AdvectionParams { n: 64, steps: 4, ..AdvectionParams::default() };
+        let mut narrow = FixedArith::new(FpFormat::E4M3);
+        let res = run(&p, &mut narrow, QuantMode::MulOnly);
+        assert!(res.range_events.unwrap().overflows > 0);
+    }
+
+    #[test]
+    fn burgers_steepens_gradients() {
+        // Nonlinear transport sharpens the leading edge: the maximum
+        // cell-to-cell jump grows before shock dissipation takes over.
+        let p = AdvectionParams { n: 128, steps: 120, ..AdvectionParams::burgers_default() };
+        let u0 = AdvectionSim::new(&p).primary_field();
+        let jump = |u: &[f64]| {
+            (0..u.len())
+                .map(|i| (u[(i + 1) % u.len()] - u[i]).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert!(jump(&res.u) > 1.5 * jump(&u0), "no steepening: {} vs {}", jump(&res.u), jump(&u0));
+    }
+
+    #[test]
+    fn snapshots_collected() {
+        let mut p = small();
+        p.snapshot_every = 50;
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert_eq!(res.snapshots.len(), 4);
+        assert_eq!(res.snapshots[0].0, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "unstable")]
+    fn instability_rejected() {
+        let mut p = small();
+        p.dt *= 4.0; // c = 1.6
+        run(&p, &mut F64Arith, QuantMode::MulOnly);
+    }
+}

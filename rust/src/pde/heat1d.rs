@@ -13,8 +13,14 @@
 //!
 //! Boundary conditions are Dirichlet: the end nodes hold their initial
 //! values (0 for the sine case).
+//!
+//! The run plumbing lives in the generic scenario layer
+//! (`pde::scenario`, DESIGN.md §11): this module provides only the physics
+//! ([`HeatSim`]) and thin result-shaping wrappers around
+//! [`scenario::run_sim`] / [`scenario::run_sim_adaptive`].
 
 use super::init::HeatInit;
+use super::scenario::{self, RunStats, Sim};
 use super::{Arith, Ctx, QuantMode, RangeEvents};
 use crate::r2f2core::Stats;
 
@@ -83,12 +89,152 @@ pub struct HeatResult {
     pub range_events: Option<RangeEvents>,
 }
 
+/// The heat-equation scenario state: the temperature field plus the sweep
+/// scratch buffer. Everything else — run loops, epoch protocol, widen-retry
+/// rollback — is the generic drivers' job.
+#[derive(Debug)]
+pub struct HeatSim {
+    n: usize,
+    r: f64,
+    u: Vec<f64>,
+    next: Vec<f64>,
+}
+
+impl HeatSim {
+    pub fn new(params: &HeatParams) -> HeatSim {
+        assert!(params.n >= 3, "need at least one interior node");
+        assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());
+        let u = params.init.sample(params.n, params.length);
+        let next = u.clone();
+        HeatSim { n: params.n, r: params.r(), u, next }
+    }
+
+    /// Consume the simulation into its final field.
+    pub fn into_field(self) -> Vec<f64> {
+        self.u
+    }
+}
+
+impl Sim for HeatSim {
+    fn scenario(&self) -> &'static str {
+        "heat1d"
+    }
+
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        for v in self.u.iter_mut() {
+            *v = ctx.quant(*v);
+        }
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        if batched {
+            // When the snapshot phase aligns with this call's step window
+            // (always true for whole-run calls; epoch calls align unless a
+            // snapshot boundary cuts an epoch), the whole window is one
+            // fused multi-step call (DESIGN.md §9): packed backends keep
+            // Full-mode state in the packed domain across the window.
+            let aligned = snapshot_every == 0 || step_base % snapshot_every == 0;
+            if aligned {
+                let mut local = Vec::new();
+                ctx.stencil_multi(
+                    &mut self.u,
+                    &mut self.next,
+                    self.r,
+                    steps,
+                    snapshot_every,
+                    &mut local,
+                );
+                snaps.extend(local.into_iter().map(|(s, f)| (step_base + s, f)));
+            } else {
+                for s in 0..steps {
+                    ctx.stencil_step(&mut self.next, &self.u, self.r);
+                    std::mem::swap(&mut self.u, &mut self.next);
+                    let global = step_base + s + 1;
+                    if global % snapshot_every == 0 {
+                        snaps.push((global, self.u.clone()));
+                    }
+                }
+            }
+            return;
+        }
+        // The per-multiplication reference path: every stencil
+        // multiplication goes through one dynamically-dispatched mul call,
+        // exactly as the paper's emulation is specified (and bit-identical
+        // to `scalar_stencil_step` — the shared canonical sequence).
+        let two_r = 2.0 * self.r;
+        for s in 0..steps {
+            for i in 1..self.n - 1 {
+                // du = r·u[i−1] − (2r)·u[i] + r·u[i+1]
+                let left = ctx.mul(self.r, self.u[i - 1]);
+                let mid = ctx.mul(two_r, self.u[i]);
+                let right = ctx.mul(self.r, self.u[i + 1]);
+                let du = {
+                    let t = ctx.sub(left, mid);
+                    ctx.add(t, right)
+                };
+                let unew = ctx.add(self.u[i], du);
+                self.next[i] = ctx.quant(unew);
+            }
+            // Dirichlet boundaries keep their (possibly quantized) values.
+            self.next[0] = self.u[0];
+            self.next[self.n - 1] = self.u[self.n - 1];
+            std::mem::swap(&mut self.u, &mut self.next);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.u.clone()));
+            }
+        }
+    }
+
+    fn save(&self) -> Vec<Vec<f64>> {
+        vec![self.u.clone()]
+    }
+
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.u.copy_from_slice(&saved[0]);
+    }
+
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.u);
+    }
+
+    fn telemetry_len(&self) -> usize {
+        self.n
+    }
+
+    fn primary_field(&self) -> Vec<f64> {
+        self.u.clone()
+    }
+}
+
+fn finish(sim: HeatSim, stats: RunStats) -> HeatResult {
+    HeatResult {
+        u: sim.into_field(),
+        snapshots: stats.snapshots,
+        muls: stats.muls,
+        backend: stats.backend,
+        r2f2_stats: stats.r2f2_stats,
+        range_events: stats.range_events,
+    }
+}
+
 /// Run the simulation with the given arithmetic backend and quantization
 /// mode, using the backend's batched stencil engine (DESIGN.md §8). Results
 /// are bit-identical to [`run_scalar`]; `rust/tests/batched_vs_scalar.rs`
 /// holds the contract.
 pub fn run(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResult {
-    run_impl(params, be, mode, true)
+    let mut sim = HeatSim::new(params);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    finish(sim, stats)
 }
 
 /// The per-multiplication reference path: every stencil multiplication goes
@@ -96,21 +242,32 @@ pub fn run(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResu
 /// paper's emulation is specified. Kept as the semantic reference for the
 /// batched engine and as the baseline for `benches/hotpath.rs`.
 pub fn run_scalar(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode) -> HeatResult {
-    run_impl(params, be, mode, false)
+    let mut sim = HeatSim::new(params);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, false);
+    finish(sim, stats)
 }
 
 /// Adaptive-precision run: the [`super::AdaptiveArith`] scheduler samples
 /// range telemetry between timesteps and walks its format ladder under the
-/// widen/narrow hysteresis policy (`pde::adaptive`). In `Full` mode with
-/// the packed engine the state stays in `PackedVec` words across epochs
-/// and a switch repacks it once. The schedule trace is available from the
-/// scheduler afterwards.
+/// widen/narrow hysteresis policy (`pde::adaptive`), with the epoch
+/// save/restore retry semantics provided by the generic
+/// [`scenario::run_sim_adaptive`] driver. The schedule trace is available
+/// from the scheduler afterwards.
 pub fn run_adaptive(
     params: &HeatParams,
     sched: &mut super::AdaptiveArith,
     mode: QuantMode,
 ) -> HeatResult {
-    super::adaptive::run_heat(params, sched, mode)
+    let mut sim = HeatSim::new(params);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    finish(sim, stats)
 }
 
 /// The per-multiplication scalar reference of [`run_adaptive`] —
@@ -120,73 +277,16 @@ pub fn run_adaptive_scalar(
     sched: &mut super::AdaptiveArith,
     mode: QuantMode,
 ) -> HeatResult {
-    super::adaptive::run_heat_scalar(params, sched, mode)
-}
-
-fn run_impl(params: &HeatParams, be: &mut dyn Arith, mode: QuantMode, batched: bool) -> HeatResult {
-    assert!(params.n >= 3, "need at least one interior node");
-    assert!(params.r() <= 0.5 + 1e-12, "explicit scheme unstable: r = {}", params.r());
-
-    let name = be.name();
-    let mut ctx = Ctx::new(be, mode);
-    let r = params.r();
-    let two_r = 2.0 * r;
-
-    let mut u = params.init.sample(params.n, params.length);
-    if mode == QuantMode::Full {
-        for v in u.iter_mut() {
-            *v = ctx.quant(*v);
-        }
-    }
-    let mut next = u.clone();
-    let mut snapshots = Vec::new();
-
-    if batched {
-        // The whole run is one fused multi-step call (DESIGN.md §9): packed
-        // backends keep Full-mode state in the packed domain across steps.
-        // Bit-identical to the scalar loop below.
-        ctx.stencil_multi(
-            &mut u,
-            &mut next,
-            r,
-            params.steps,
-            params.snapshot_every,
-            &mut snapshots,
-        );
-    } else {
-        for step in 0..params.steps {
-            for i in 1..params.n - 1 {
-                // du = r·u[i−1] − (2r)·u[i] + r·u[i+1]
-                let left = ctx.mul(r, u[i - 1]);
-                let mid = ctx.mul(two_r, u[i]);
-                let right = ctx.mul(r, u[i + 1]);
-                let du = {
-                    let s = ctx.sub(left, mid);
-                    ctx.add(s, right)
-                };
-                let unew = ctx.add(u[i], du);
-                next[i] = ctx.quant(unew);
-            }
-            // Dirichlet boundaries keep their (possibly quantized) values.
-            next[0] = u[0];
-            next[params.n - 1] = u[params.n - 1];
-            std::mem::swap(&mut u, &mut next);
-
-            if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
-                snapshots.push((step + 1, u.clone()));
-            }
-        }
-    }
-
-    let muls = ctx.muls;
-    HeatResult {
-        u,
-        snapshots,
-        muls,
-        backend: name,
-        r2f2_stats: be.r2f2_stats(),
-        range_events: be.range_events(),
-    }
+    let mut sim = HeatSim::new(params);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        false,
+    );
+    finish(sim, stats)
 }
 
 /// Analytic solution for the single-mode sine case

@@ -1,6 +1,10 @@
 //! PDE case studies (§2, §5.3): the 1D heat equation and the 2D shallow
-//! water equations, each runnable under interchangeable arithmetic backends
-//! so a single solver implementation serves every precision experiment.
+//! water equations — plus the scenario-registry additions, 1D upwind
+//! advection/Burgers and the 2D damped wave equation — each runnable under
+//! interchangeable arithmetic backends so a single solver implementation
+//! serves every precision experiment. The solvers implement the
+//! [`scenario::Sim`] trait and share the generic run/adaptive drivers and
+//! the [`scenario::SCENARIOS`] registry (DESIGN.md §11).
 //!
 //! The paper's methodology replaces *multiplications* with the unit under
 //! test (f64 / f32 / fixed `ExMy` / R2F2), converting operands in and the
@@ -11,11 +15,15 @@
 //! baseline of Fig. 1).
 
 pub mod adaptive;
+pub mod advection1d;
 pub mod heat1d;
 pub mod init;
+pub mod scenario;
 pub mod swe2d;
+pub mod wave2d;
 
 pub use adaptive::{AdaptiveArith, AdaptivePolicy, AdaptiveReport, Decision, SwitchEvent};
+pub use scenario::{ScenarioRun, ScenarioSize, ScenarioSpec, Sim, SCENARIOS};
 
 use crate::r2f2core::{EncSlot, R2f2Config, R2f2Multiplier, Stats};
 use crate::softfloat::batch::{mul_batch_packed, mul_pairs_packed};

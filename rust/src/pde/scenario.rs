@@ -1,0 +1,623 @@
+//! The generic scenario layer (DESIGN.md §11): one [`Sim`] trait every PDE
+//! case study implements, blanket drivers that run *any* scenario under any
+//! arithmetic backend, and the [`SCENARIOS`] registry that tests, benches,
+//! the CLI and CI all iterate.
+//!
+//! Before this layer, `heat1d` and `swe2d` each hand-rolled their own
+//! `run`/`run_mode`/`run_adaptive`/`run_adaptive_scalar` plumbing, so every
+//! engine improvement (batched dispatch, packed state, the adaptive
+//! scheduler) had to be wired once per solver. Now a scenario provides only
+//! its physics:
+//!
+//! * [`Sim::advance`] — step the state through a [`Ctx`] (the canonical
+//!   scalar sequence when `batched` is false, the backend's batched engine
+//!   otherwise — the §8/§9 contract makes the two bit-identical);
+//! * [`Sim::save`] / [`Sim::restore`] — the persistent state a widen-retried
+//!   epoch must roll back (the `AdaptiveArith` retry semantics, written
+//!   once in [`run_sim_adaptive`] instead of once per solver);
+//! * [`Sim::telemetry`] — the per-epoch state sample the adaptive
+//!   scheduler's range histogram inspects;
+//! * [`Sim::quant_state`] — storage quantization of the persistent state
+//!   ([`Ctx::quant`] gates it on [`QuantMode`], so scenarios whose state
+//!   lives in the f64 carrier under every mode — shallow water — implement
+//!   it as a no-op).
+//!
+//! Dispatch cost: the drivers are generic over the scenario and issue
+//! arithmetic through the batched [`Arith`] entry points, so the hot path
+//! performs O(1) virtual calls per row/epoch — never per multiplication.
+//!
+//! **Bit-exactness.** The drivers preserve the exact operation streams of
+//! the per-solver plumbing they replaced: `rust/tests/batched_vs_scalar.rs`,
+//! `packed_vs_carrier.rs` and `adaptive_schedule.rs` all pass unmodified,
+//! and `rust/tests/scenario_matrix.rs` extends the same contracts to every
+//! registry scenario.
+
+use super::adaptive::{fixed_cost_lut, AdaptiveArith, AdaptivePolicy, Decision};
+use super::advection1d::{AdvectionParams, AdvectionSim};
+use super::heat1d::{HeatParams, HeatSim};
+use super::swe2d::{QuantScope, SweParams, SweSim};
+use super::wave2d::{WaveParams, WaveSim};
+use super::{Arith, Ctx, QuantMode, RangeEvents};
+use crate::r2f2core::Stats;
+use crate::softfloat::FpFormat;
+
+/// One PDE case study, steppable under any [`Arith`] backend.
+///
+/// The contract mirrors DESIGN.md §8: for every backend,
+/// `advance(batched = true)` must be bit-identical — values, counters,
+/// multiplication count — to `advance(batched = false)`, whose body is the
+/// scenario's canonical scalar sequence.
+pub trait Sim {
+    /// Registry name of the scenario (`heat1d`, `swe2d`, ...).
+    fn scenario(&self) -> &'static str;
+
+    /// Quantize the persistent state into the backend's storage format.
+    /// Route it through [`Ctx::quant`] so `MulOnly` mode is the identity;
+    /// scenarios whose state stays in the f64 carrier under every mode
+    /// implement this as a no-op.
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>);
+
+    /// Advance `steps` timesteps. Global step numbers continue from
+    /// `step_base`; every `snapshot_every` global steps a
+    /// `(global_step, primary field)` snapshot is pushed onto `snaps`
+    /// (0 = none). `batched` selects the backend's batched engine over the
+    /// canonical per-multiplication scalar sequence.
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    );
+
+    /// The persistent state a widen-retried epoch must restore.
+    fn save(&self) -> Vec<Vec<f64>>;
+
+    /// Restore a [`Sim::save`] image.
+    fn restore(&mut self, saved: &[Vec<f64>]);
+
+    /// Stream the adaptive scheduler's per-epoch range-telemetry sample.
+    fn telemetry(&self, out: &mut Vec<f64>);
+
+    /// Telemetry samples per epoch (sizes the scheduler's stage tracker).
+    fn telemetry_len(&self) -> usize;
+
+    /// The field reports and the RMSE-vs-reference metric use.
+    fn primary_field(&self) -> Vec<f64>;
+}
+
+/// Backend-side statistics of one generic run; scenario wrappers combine
+/// it with their final fields into their result records.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Multiplications issued through the backend.
+    pub muls: u64,
+    /// Backend name.
+    pub backend: String,
+    /// R2F2 adjustment statistics, when applicable.
+    pub r2f2_stats: Option<Stats>,
+    /// Fixed-format range events, when applicable.
+    pub range_events: Option<RangeEvents>,
+    /// `(step, primary field)` snapshots if requested.
+    pub snapshots: Vec<(usize, Vec<f64>)>,
+}
+
+/// Run any scenario under any backend — the one driver behind every
+/// `run`/`run_scalar`/`run_mode` entry point.
+pub fn run_sim<S: Sim>(
+    sim: &mut S,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    steps: usize,
+    snapshot_every: usize,
+    batched: bool,
+) -> RunStats {
+    let backend = be.name();
+    let mut snapshots = Vec::new();
+    let muls = {
+        let mut ctx = Ctx::new(be, mode);
+        sim.quant_state(&mut ctx);
+        sim.advance(&mut ctx, steps, 0, snapshot_every, &mut snapshots, batched);
+        ctx.muls
+    };
+    RunStats {
+        muls,
+        backend,
+        r2f2_stats: be.r2f2_stats(),
+        range_events: be.range_events(),
+        snapshots,
+    }
+}
+
+/// Adaptive-precision run of any scenario: the epoch protocol —
+/// save → attempt → telemetry → decide, with widen-and-**retry** rollback
+/// and narrow re-quantization — written once for every scenario
+/// (DESIGN.md §10/§11).
+pub fn run_sim_adaptive<S: Sim>(
+    sim: &mut S,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    steps: usize,
+    snapshot_every: usize,
+    batched: bool,
+) -> RunStats {
+    let backend = sched.name();
+    let epoch_len = sched.policy().epoch_len;
+    let est_epochs = steps.div_ceil(epoch_len).max(1);
+    sched.prepare(est_epochs as u64 * sim.telemetry_len() as u64);
+
+    let mut snapshots = Vec::new();
+    let mut tele: Vec<f64> = Vec::new();
+    let mut muls = 0u64;
+    let mut done = 0usize;
+    // Initial storage quantization is deferred into the first epoch attempt
+    // so its flags land in epoch 0's event delta; a widen retry sets the
+    // flag again so the restored state re-enters the *widened* format
+    // (identity in MulOnly — `Ctx::quant` gates on the mode).
+    let mut pending_quant = true;
+
+    if steps == 0 {
+        let mut ctx = Ctx::new(&mut sched.inner, mode);
+        sim.quant_state(&mut ctx);
+        return RunStats {
+            muls: 0,
+            backend,
+            r2f2_stats: None,
+            range_events: Some(sched.events()),
+            snapshots,
+        };
+    }
+
+    while done < steps {
+        let e_len = epoch_len.min(steps - done);
+        // Epoch-start save. For the very first epoch this is the *raw*
+        // state (quantization happens inside the attempt), so a widen
+        // retry re-quantizes the original data in the wider format —
+        // nothing of the narrow attempt survives.
+        let save = sim.save();
+        loop {
+            sched.begin_epoch();
+            let mut esnaps: Vec<(usize, Vec<f64>)> = Vec::new();
+            let delta = {
+                let mut ctx = Ctx::new(&mut sched.inner, mode);
+                if pending_quant {
+                    sim.quant_state(&mut ctx);
+                    pending_quant = false;
+                }
+                sim.advance(&mut ctx, e_len, done, snapshot_every, &mut esnaps, batched);
+                ctx.muls
+            };
+            muls += delta;
+            sched.charge(delta);
+            sim.telemetry(&mut tele);
+            match sched.end_epoch(&tele, done + e_len) {
+                Decision::Widen => {
+                    sim.restore(&save);
+                    pending_quant = true;
+                }
+                Decision::Narrow => {
+                    // Re-quantize the committed state into the narrower
+                    // format (may flush/saturate; the flags are tracked
+                    // exactly like any storage quantization).
+                    let mut ctx = Ctx::new(&mut sched.inner, mode);
+                    sim.quant_state(&mut ctx);
+                    snapshots.extend(esnaps);
+                    break;
+                }
+                Decision::Stay => {
+                    snapshots.extend(esnaps);
+                    break;
+                }
+            }
+        }
+        done += e_len;
+    }
+
+    RunStats { muls, backend, r2f2_stats: None, range_events: Some(sched.events()), snapshots }
+}
+
+// ---------------------------------------------------------------------------
+// The scenario registry
+// ---------------------------------------------------------------------------
+
+/// Preset run scale, so every consumer of the registry sizes a scenario the
+/// same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioSize {
+    /// Smallest runnable setup — bit-identity matrices, bench smoke rows,
+    /// example walkthroughs.
+    Quick,
+    /// Moderate run where the solution is still live everywhere — the
+    /// RMSE-envelope scale.
+    Accuracy,
+    /// Sized for the adaptive ladder: immediate widen pressure at the
+    /// narrow rung and (where [`ScenarioSpec::expect_narrow`]) a decayed
+    /// tail that stalls and narrows back.
+    Adaptive,
+}
+
+/// Outcome of one registry-driven run.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    /// Final primary field.
+    pub field: Vec<f64>,
+    /// Multiplications issued through the backend.
+    pub muls: u64,
+    /// Backend name.
+    pub backend: String,
+    /// Fixed-format range events, when applicable.
+    pub range_events: Option<RangeEvents>,
+    /// R2F2 adjustment statistics, when applicable.
+    pub r2f2_stats: Option<Stats>,
+}
+
+/// One registry entry: name, one-line physics, why it stresses precision,
+/// and the uniform run hooks every consumer calls.
+#[derive(Clone, Copy)]
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    /// One-line physics description (the README scenario table).
+    pub physics: &'static str,
+    /// Why this scenario stresses reduced-precision arithmetic.
+    pub stress: &'static str,
+    /// Run under an arbitrary backend (`batched` selects the engine path).
+    pub run: fn(ScenarioSize, &mut dyn Arith, QuantMode, bool) -> ScenarioRun,
+    /// Run under the adaptive scheduler (build it from
+    /// [`ScenarioSpec::adaptive_policy`]).
+    pub run_adaptive: fn(ScenarioSize, &mut AdaptiveArith, QuantMode, bool) -> ScenarioRun,
+    /// The scenario's default adaptive ladder + epoch length.
+    pub adaptive_policy: fn() -> AdaptivePolicy,
+    /// The rung the default [`ScenarioSize::Adaptive`] run widens onto in
+    /// its first epoch — the format whose fixed run the committed adaptive
+    /// trajectory bit-equals.
+    pub wide_format: FpFormat,
+    /// Does the default adaptive setup stall and narrow (⇒ strictly lower
+    /// modeled cost than the all-wide run)?
+    pub expect_narrow: bool,
+    /// `(format, max rel-L2 vs the f64 reference)` MulOnly accuracy
+    /// envelopes at [`ScenarioSize::Accuracy`].
+    pub envelopes: &'static [(FpFormat, f64)],
+}
+
+impl std::fmt::Debug for ScenarioSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScenarioSpec").field("name", &self.name).finish()
+    }
+}
+
+/// Every scenario, in registry order. Tests
+/// (`rust/tests/scenario_matrix.rs`), `benches/hotpath.rs`, the CLI
+/// `scenarios` command and the CI scenario-matrix job all iterate this
+/// list — adding a scenario here enrolls it everywhere.
+pub static SCENARIOS: &[ScenarioSpec] = &[
+    ScenarioSpec {
+        name: "heat1d",
+        physics: "1D heat diffusion, explicit finite differences (paper §2)",
+        stress: "decaying sine crosses many octaves: wide range early, sub-ulp updates late",
+        run: run_heat_scn,
+        run_adaptive: run_heat_adaptive_scn,
+        adaptive_policy: heat_scn_policy,
+        wide_format: FpFormat::E5M10,
+        expect_narrow: true,
+        envelopes: &[(FpFormat::E5M10, 1e-2)],
+    },
+    ScenarioSpec {
+        name: "swe2d",
+        physics: "2D shallow water, two-step Lax-Wendroff (paper §2, Fig. 8)",
+        stress: "flux term 0.5*g*h^2 ~ 1e5 overflows E5M10 while gradients need mantissa",
+        run: run_swe_scn,
+        run_adaptive: run_swe_adaptive_scn,
+        adaptive_policy: AdaptivePolicy::swe_default,
+        wide_format: FpFormat::new(6, 9),
+        expect_narrow: false,
+        envelopes: &[(FpFormat::new(6, 9), 2e-2)],
+    },
+    ScenarioSpec {
+        name: "advection1d",
+        physics: "1D upwind advection (optional Burgers nonlinearity), periodic",
+        stress: "CFL-constant and state-by-state products walk the exponent range as transport decays",
+        run: run_advection_scn,
+        run_adaptive: run_advection_adaptive_scn,
+        adaptive_policy: AdaptivePolicy::advection_default,
+        wide_format: FpFormat::E5M10,
+        expect_narrow: true,
+        envelopes: &[(FpFormat::E5M10, 1e-1)],
+    },
+    ScenarioSpec {
+        name: "wave2d",
+        physics: "2D wave equation, damped leapfrog, Dirichlet walls",
+        stress: "signed oscillation exercises negatives/cancellation; amplitude 300 saturates E4M3",
+        run: run_wave_scn,
+        run_adaptive: run_wave_adaptive_scn,
+        adaptive_policy: AdaptivePolicy::wave_default,
+        wide_format: FpFormat::E5M10,
+        expect_narrow: true,
+        envelopes: &[(FpFormat::E5M10, 3e-1)],
+    },
+];
+
+/// Look a scenario up by registry name.
+pub fn find(name: &str) -> Option<&'static ScenarioSpec> {
+    SCENARIOS.iter().find(|s| s.name == name)
+}
+
+fn finish_scn<S: Sim>(sim: S, stats: RunStats) -> ScenarioRun {
+    ScenarioRun {
+        field: sim.primary_field(),
+        muls: stats.muls,
+        backend: stats.backend,
+        range_events: stats.range_events,
+        r2f2_stats: stats.r2f2_stats,
+    }
+}
+
+// -- heat ------------------------------------------------------------------
+
+fn heat_scn_params(size: ScenarioSize) -> HeatParams {
+    match size {
+        ScenarioSize::Quick => HeatParams {
+            n: 33,
+            dt: 0.25 / (32.0f64 * 32.0),
+            steps: 40,
+            ..HeatParams::default()
+        },
+        ScenarioSize::Accuracy => HeatParams {
+            n: 101,
+            dt: 0.25 / (100.0f64 * 100.0),
+            steps: 1500,
+            ..HeatParams::default()
+        },
+        // The adaptive_schedule.rs MulOnly setup: widens out of E4M3 in
+        // epoch 0 (amplitude 500), stalls and narrows back by step ~1600.
+        ScenarioSize::Adaptive => HeatParams {
+            n: 33,
+            dt: 0.25 / (32.0f64 * 32.0),
+            steps: 3000,
+            ..HeatParams::default()
+        },
+    }
+}
+
+fn heat_scn_policy() -> AdaptivePolicy {
+    let mut p = AdaptivePolicy::heat_default();
+    p.epoch_len = 50;
+    p
+}
+
+fn run_heat_scn(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = heat_scn_params(size);
+    let mut sim = HeatSim::new(&p);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_heat_adaptive_scn(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = heat_scn_params(size);
+    let mut sim = HeatSim::new(&p);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+// -- shallow water ---------------------------------------------------------
+
+fn swe_scn_params(size: ScenarioSize) -> SweParams {
+    match size {
+        ScenarioSize::Quick => SweParams { steps: 10, ..SweParams::default() },
+        ScenarioSize::Accuracy => SweParams { steps: 40, ..SweParams::default() },
+        ScenarioSize::Adaptive => SweParams { steps: 24, ..SweParams::default() },
+    }
+}
+
+fn run_swe_scn(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = swe_scn_params(size);
+    let mut sim = SweSim::new(&p, QuantScope::UxFluxOnly);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_swe_adaptive_scn(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = swe_scn_params(size);
+    let mut sim = SweSim::new(&p, QuantScope::UxFluxOnly);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+// -- advection -------------------------------------------------------------
+
+fn advection_scn_params(size: ScenarioSize) -> AdvectionParams {
+    // dt rescales with n so every size keeps the default CFL c = 0.4.
+    match size {
+        ScenarioSize::Quick => {
+            AdvectionParams { n: 64, dt: 0.4 / 64.0, steps: 50, ..AdvectionParams::default() }
+        }
+        ScenarioSize::Accuracy => {
+            AdvectionParams { n: 256, steps: 800, ..AdvectionParams::default() }
+        }
+        // Sized for the envelope: amplitude 400 > E4M3's max finite, so
+        // epoch 0 widens; upwind diffusion then decays the sine below the
+        // flush threshold (~step 3200 at n = 64, c = 0.4), the transport
+        // freezes, and the ladder narrows back for the tail.
+        ScenarioSize::Adaptive => {
+            AdvectionParams { n: 64, dt: 0.4 / 64.0, steps: 4000, ..AdvectionParams::default() }
+        }
+    }
+}
+
+fn run_advection_scn(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = advection_scn_params(size);
+    let mut sim = AdvectionSim::new(&p);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_advection_adaptive_scn(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = advection_scn_params(size);
+    let mut sim = AdvectionSim::new(&p);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+// -- wave ------------------------------------------------------------------
+
+fn wave_scn_params(size: ScenarioSize) -> WaveParams {
+    match size {
+        ScenarioSize::Quick => WaveParams { n: 17, steps: 40, ..WaveParams::default() },
+        ScenarioSize::Accuracy => WaveParams { n: 33, steps: 200, ..WaveParams::default() },
+        // Damped hard enough that the oscillation collapses to exact zeros
+        // well before the end: widen in epoch 0 (amplitude 300 > E4M3's
+        // ceiling), stall at zero, narrow for the tail.
+        ScenarioSize::Adaptive => {
+            WaveParams { n: 17, steps: 768, damping: 0.04, ..WaveParams::default() }
+        }
+    }
+}
+
+fn run_wave_scn(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = wave_scn_params(size);
+    let mut sim = WaveSim::new(&p);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_wave_adaptive_scn(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+) -> ScenarioRun {
+    let p = wave_scn_params(size);
+    let mut sim = WaveSim::new(&p);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+/// Modeled all-fixed datapath cost of a registry run — convenience wrapper
+/// over [`fixed_cost_lut`] for matrix tests and reports.
+pub fn fixed_run_cost(fmt: FpFormat, run: &ScenarioRun) -> f64 {
+    fixed_cost_lut(fmt, run.muls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{rel_l2, F64Arith, FixedArith};
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        for (i, s) in SCENARIOS.iter().enumerate() {
+            assert!(find(s.name).is_some(), "{} not findable", s.name);
+            for t in &SCENARIOS[i + 1..] {
+                assert_ne!(s.name, t.name, "duplicate scenario name");
+            }
+        }
+        assert_eq!(SCENARIOS.len(), 4);
+        assert!(find("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn every_scenario_runs_under_every_mode_and_engine_path() {
+        for spec in SCENARIOS {
+            for mode in [QuantMode::MulOnly, QuantMode::Full] {
+                for batched in [false, true] {
+                    let mut be = FixedArith::new(FpFormat::E5M10);
+                    let r = (spec.run)(ScenarioSize::Quick, &mut be, mode, batched);
+                    assert!(r.muls > 0, "{}: no muls issued", spec.name);
+                    assert!(!r.field.is_empty(), "{}: empty field", spec.name);
+                    assert!(
+                        r.field.iter().all(|v| v.is_finite()),
+                        "{}/{mode:?}: non-finite field",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_batched_registry_runs_are_bit_identical() {
+        // The §8 contract through the generic drivers, per scenario (the
+        // full engine matrix lives in rust/tests/scenario_matrix.rs).
+        for spec in SCENARIOS {
+            let mut a = FixedArith::new(FpFormat::E5M10);
+            let mut b = FixedArith::new(FpFormat::E5M10);
+            let s = (spec.run)(ScenarioSize::Quick, &mut a, QuantMode::Full, false);
+            let g = (spec.run)(ScenarioSize::Quick, &mut b, QuantMode::Full, true);
+            assert_eq!(s.muls, g.muls, "{}", spec.name);
+            assert_eq!(s.range_events, g.range_events, "{}", spec.name);
+            for i in 0..s.field.len() {
+                assert_eq!(
+                    s.field[i].to_bits(),
+                    g.field[i].to_bits(),
+                    "{}: node {i}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quick_runs_track_f64_loosely() {
+        // Sanity, not the envelope (that is Accuracy-sized in the matrix
+        // test): short quick runs under E5M10 MulOnly stay near f64.
+        for spec in SCENARIOS {
+            let reference =
+                (spec.run)(ScenarioSize::Quick, &mut F64Arith, QuantMode::MulOnly, true);
+            let fmt = spec.wide_format;
+            let mut be = FixedArith::new(fmt);
+            let r = (spec.run)(ScenarioSize::Quick, &mut be, QuantMode::MulOnly, true);
+            let err = rel_l2(&r.field, &reference.field);
+            assert!(err < 0.2, "{}: quick rel err {err}", spec.name);
+        }
+    }
+
+    #[test]
+    fn adaptive_driver_reports_schedule_for_every_scenario() {
+        // Full adaptive expectations (widen/narrow/cost/bit-equality) are
+        // in rust/tests/scenario_matrix.rs; here: the generic driver runs
+        // and charges ops for every scenario at Quick size.
+        for spec in SCENARIOS {
+            let mut sched = AdaptiveArith::new((spec.adaptive_policy)());
+            let r = (spec.run_adaptive)(ScenarioSize::Quick, &mut sched, QuantMode::MulOnly, true);
+            let rep = sched.report();
+            let charged: u64 = rep.ops_per_rung.iter().map(|&(_, n)| n).sum();
+            assert_eq!(charged, r.muls, "{}: charge accounting", spec.name);
+        }
+    }
+}

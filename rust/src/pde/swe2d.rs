@@ -18,6 +18,7 @@
 //! ablation that quantizes every flux multiplication.
 
 use super::init::SweInit;
+use super::scenario::{self, RunStats, Sim};
 use super::{Arith, Ctx, QuantMode, RangeEvents};
 use crate::r2f2core::Stats;
 
@@ -132,22 +133,27 @@ fn f2_plain(g2: f64, q1: f64, q3: f64) -> f64 {
     q1 * q1 / q3 + g2 * (q3 * q3)
 }
 
+fn finish_result(sim: SweSim, stats: RunStats) -> SweResult {
+    sim.finish(stats.muls, stats.backend, stats.r2f2_stats, stats.range_events, stats.snapshots)
+}
+
 /// Run the simulation. `be` receives only the multiplications selected by
 /// `scope` (the paper's methodology); the rest of the scheme is f64.
 ///
 /// Flux evaluations are issued row-at-a-time through the backend's batched
 /// [`Arith::flux_batch`] engine (DESIGN.md §8), preserving the exact
 /// multiplication stream of the per-call reference [`run_scalar`] — the two
-/// produce bit-identical fields and counters.
+/// produce bit-identical fields and counters. The run loop itself is the
+/// generic scenario driver (`pde::scenario`, DESIGN.md §11).
 pub fn run(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
-    run_impl(params, be, scope, QuantMode::MulOnly, true)
+    run_mode(params, be, scope, QuantMode::MulOnly)
 }
 
 /// Per-multiplication reference path (one dynamically-dispatched `mul` per
 /// stencil multiplication); the baseline for `benches/hotpath.rs` and the
 /// semantic reference for the batched engine.
 pub fn run_scalar(params: &SweParams, be: &mut dyn Arith, scope: QuantScope) -> SweResult {
-    run_impl(params, be, scope, QuantMode::MulOnly, false)
+    run_scalar_mode(params, be, scope, QuantMode::MulOnly)
 }
 
 /// [`run`] with an explicit [`QuantMode`]: under [`QuantMode::Full`] the
@@ -160,7 +166,9 @@ pub fn run_mode(
     scope: QuantScope,
     mode: QuantMode,
 ) -> SweResult {
-    run_impl(params, be, scope, mode, true)
+    let mut sim = SweSim::new(params, scope);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    finish_result(sim, stats)
 }
 
 /// The scalar-dispatch reference for [`run_mode`].
@@ -170,20 +178,33 @@ pub fn run_scalar_mode(
     scope: QuantScope,
     mode: QuantMode,
 ) -> SweResult {
-    run_impl(params, be, scope, mode, false)
+    let mut sim = SweSim::new(params, scope);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, false);
+    finish_result(sim, stats)
 }
 
 /// Adaptive-precision run: the [`super::AdaptiveArith`] scheduler samples
 /// range telemetry between timesteps and walks its format ladder under the
-/// widen/narrow hysteresis policy (`pde::adaptive`). The schedule trace is
-/// available from the scheduler afterwards.
+/// widen/narrow hysteresis policy (`pde::adaptive`), with the epoch
+/// save/restore retry semantics provided by the generic
+/// [`scenario::run_sim_adaptive`] driver. The schedule trace is available
+/// from the scheduler afterwards.
 pub fn run_adaptive(
     params: &SweParams,
     sched: &mut super::AdaptiveArith,
     scope: QuantScope,
     mode: QuantMode,
 ) -> SweResult {
-    super::adaptive::run_swe(params, sched, scope, mode)
+    let mut sim = SweSim::new(params, scope);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    finish_result(sim, stats)
 }
 
 /// The per-multiplication scalar reference of [`run_adaptive`] —
@@ -194,7 +215,16 @@ pub fn run_adaptive_scalar(
     scope: QuantScope,
     mode: QuantMode,
 ) -> SweResult {
-    super::adaptive::run_swe_scalar(params, sched, scope, mode)
+    let mut sim = SweSim::new(params, scope);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        false,
+    );
+    finish_result(sim, stats)
 }
 
 /// Evaluate one row's worth of quantized fluxes into a reused output
@@ -210,17 +240,17 @@ fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batc
     }
 }
 
-/// The simulation state + scratch of one shallow-water run, factored out
-/// of the monolithic step loop so the adaptive runner (`pde::adaptive`)
-/// can drive it epoch-by-epoch with save/restore retry semantics. Only the
-/// grid (`h`, `u`, `v` with ghost cells) carries across steps; the
+/// The simulation state + scratch of one shallow-water run — the scenario
+/// the generic drivers (`pde::scenario`) step, save/restore and sample.
+/// Only the grid (`h`, `u`, `v` with ghost cells) carries across steps; the
 /// half-step arrays and flux row buffers are per-step scratch.
-pub(super) struct SweSim {
+pub struct SweSim {
     n: usize,
     m: usize,
     g2: f64,
     ddx: f64,
     ddy: f64,
+    scope: QuantScope,
     grid: Grid,
     hx: Vec<f64>,
     ux: Vec<f64>,
@@ -234,7 +264,7 @@ pub(super) struct SweSim {
 }
 
 impl SweSim {
-    pub(super) fn new(params: &SweParams) -> SweSim {
+    pub fn new(params: &SweParams, scope: QuantScope) -> SweSim {
         let n = params.n;
         assert!(n >= 4, "grid too small");
         let (dt, dx, g) = (params.dt, params.dx, params.g);
@@ -259,6 +289,7 @@ impl SweSim {
             g2: 0.5 * g,
             ddx: dt / dx,
             ddy: dt / dx,
+            scope,
             grid,
             // Half-step arrays (Moler's waterwave layout).
             hx: vec![0.0; (n + 1) * (n + 1)],
@@ -275,32 +306,7 @@ impl SweSim {
         }
     }
 
-    /// The persistent state (`h`, `u`, `v` including ghosts) — everything
-    /// a retried epoch needs restored.
-    pub(super) fn save(&self) -> [Vec<f64>; 3] {
-        [self.grid.h.clone(), self.grid.u.clone(), self.grid.v.clone()]
-    }
-
-    pub(super) fn restore(&mut self, s: &[Vec<f64>; 3]) {
-        self.grid.h.copy_from_slice(&s[0]);
-        self.grid.u.copy_from_slice(&s[1]);
-        self.grid.v.copy_from_slice(&s[2]);
-    }
-
-    /// Stream the interior depth + x-momentum fields into `out` — the
-    /// adaptive scheduler's per-epoch range-telemetry sample.
-    pub(super) fn telemetry(&self, out: &mut Vec<f64>) {
-        out.clear();
-        let n = self.n;
-        for i in 1..=n {
-            for j in 1..=n {
-                out.push(self.grid.h[i * (n + 2) + j]);
-                out.push(self.grid.u[i * (n + 2) + j]);
-            }
-        }
-    }
-
-    pub(super) fn interior_h(&self) -> Vec<f64> {
+    pub fn interior_h(&self) -> Vec<f64> {
         interior(&self.grid.h, self.n)
     }
 
@@ -330,34 +336,75 @@ impl SweSim {
     }
 }
 
-fn run_impl(
-    params: &SweParams,
-    be: &mut dyn Arith,
-    scope: QuantScope,
-    mode: QuantMode,
-    batched: bool,
-) -> SweResult {
-    let name = be.name();
-    let mut ctx = Ctx::new(be, mode);
-    let mut sim = SweSim::new(params);
-    let mut snapshots = Vec::new();
+impl Sim for SweSim {
+    fn scenario(&self) -> &'static str {
+        "swe2d"
+    }
 
-    for step in 0..params.steps {
-        sim.step(&mut ctx, scope, batched);
-        if params.snapshot_every != 0 && (step + 1) % params.snapshot_every == 0 {
-            snapshots.push((step + 1, sim.interior_h()));
+    /// Shallow-water state lives in the f64 carrier under every mode
+    /// ([`QuantMode::Full`] only moves the flux adder into the format), so
+    /// storage quantization is a no-op — and a format switch moves only the
+    /// flux datapath's format, never repacks state.
+    fn quant_state(&mut self, _ctx: &mut Ctx<'_>) {}
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        for s in 0..steps {
+            self.step(ctx, batched);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.interior_h()));
+            }
         }
     }
 
-    let muls = ctx.muls;
-    sim.finish(muls, name, be.r2f2_stats(), be.range_events(), snapshots)
+    /// The persistent state (`h`, `u`, `v` including ghosts) — everything
+    /// a retried epoch needs restored.
+    fn save(&self) -> Vec<Vec<f64>> {
+        vec![self.grid.h.clone(), self.grid.u.clone(), self.grid.v.clone()]
+    }
+
+    fn restore(&mut self, s: &[Vec<f64>]) {
+        self.grid.h.copy_from_slice(&s[0]);
+        self.grid.u.copy_from_slice(&s[1]);
+        self.grid.v.copy_from_slice(&s[2]);
+    }
+
+    /// Stream the interior depth + x-momentum fields into `out` — the
+    /// adaptive scheduler's per-epoch range-telemetry sample.
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        out.clear();
+        let n = self.n;
+        for i in 1..=n {
+            for j in 1..=n {
+                out.push(self.grid.h[i * (n + 2) + j]);
+                out.push(self.grid.u[i * (n + 2) + j]);
+            }
+        }
+    }
+
+    fn telemetry_len(&self) -> usize {
+        2 * self.n * self.n
+    }
+
+    fn primary_field(&self) -> Vec<f64> {
+        self.interior_h()
+    }
 }
 
 impl SweSim {
     /// One Lax–Wendroff step (two half steps + the full step), with the
-    /// scope-selected flux multiplications routed through `ctx` — the body
-    /// of the original monolithic loop, verbatim.
-    pub(super) fn step(&mut self, ctx: &mut Ctx, scope: QuantScope, batched: bool) {
+    /// flux multiplications selected by the sim's [`QuantScope`] routed
+    /// through `ctx` — the body of the original monolithic loop, verbatim.
+    pub(super) fn step(&mut self, ctx: &mut Ctx, batched: bool) {
+        let scope = self.scope;
         let n = self.n;
         let m = self.m;
         let g2 = self.g2;

@@ -1,0 +1,470 @@
+//! 2D wave equation `∂²u/∂t² + γ ∂u/∂t = c²∇²u` on the unit square,
+//! leapfrog (three-level) time stepping, Dirichlet zero walls — the
+//! *oscillating* scenario: where heat decays monotonically and advection
+//! translates, the wave field swings through zero every half period.
+//!
+//! Discretization with `C = c·Δt/Δx` (stable for `C ≤ 1/√2` in 2D) and the
+//! per-step damping `k = γ·Δt/2`:
+//!
+//! ```text
+//! u'ᵢⱼ = d₁·uᵢⱼ − d₀·u⁻ᵢⱼ + c₂·lapᵢⱼ
+//! d₁ = 2/(1+k),  d₀ = (1−k)/(1+k),  c₂ = C²/(1+k)
+//! lapᵢⱼ = uᵢ₋₁ⱼ + uᵢ₊₁ⱼ + uᵢⱼ₋₁ + uᵢⱼ₊₁ − 4uᵢⱼ
+//! ```
+//!
+//! The **three coefficient products** (`d₁·u`, `d₀·u⁻`, `c₂·lap`) route
+//! through the [`Arith`] backend — 3 multiplications per interior node per
+//! step; the Laplacian gather itself is index arithmetic on the host, like
+//! the shallow-water scheme's non-substituted terms. The canonical
+//! sequence evaluates each product row in index order (three
+//! [`Arith::mul_batch`] rows per grid row on the batched path), then the
+//! mode-gated combine `(d₁u − d₀u⁻) + c₂·lap` and storage quantization.
+//!
+//! Why precision-interesting: the state is **signed and oscillating**, so
+//! the range histogram's `negatives` population is half the samples and
+//! the combine is a genuine cancellation (`d₁u ≈ d₀u⁻` near the turning
+//! points) — the paths a decaying positive field never exercises. The
+//! default amplitude 300 saturates `E4M3` (max finite 240) on encode, and
+//! with damping the oscillation collapses through the flush threshold to
+//! exact zeros — the stall the adaptive ladder narrows on.
+
+use super::scenario::{self, RunStats, Sim};
+use super::{Arith, Ctx, QuantMode, RangeEvents};
+use crate::r2f2core::Stats;
+
+/// Wave-equation run parameters.
+#[derive(Debug, Clone)]
+pub struct WaveParams {
+    /// Grid side (n × n nodes including the Dirichlet boundary ring).
+    pub n: usize,
+    /// Wave speed c.
+    pub c: f64,
+    /// Domain side L (Δx = L / (n−1)).
+    pub length: f64,
+    /// Time step.
+    pub dt: f64,
+    /// Per-step damping `k = γ·Δt/2` (0 = undamped).
+    pub damping: f64,
+    /// Number of time steps.
+    pub steps: usize,
+    /// Standing-mode initial amplitude `u₀ = A·sin(πx/L)·sin(πy/L)`.
+    pub amplitude: f64,
+    /// Keep a state snapshot every `snapshot_every` steps (0 = none).
+    pub snapshot_every: usize,
+}
+
+impl Default for WaveParams {
+    fn default() -> WaveParams {
+        // C = c·Δt/Δx = 0.5 (C² = 0.25 ≤ 1/2); amplitude 300 saturates
+        // E4M3 while E5M10 holds the whole oscillation.
+        WaveParams {
+            n: 33,
+            c: 1.0,
+            length: 1.0,
+            dt: 0.5 / 32.0,
+            damping: 0.0,
+            steps: 200,
+            amplitude: 300.0,
+            snapshot_every: 0,
+        }
+    }
+}
+
+impl WaveParams {
+    /// The Courant number `C = c·Δt/Δx`.
+    pub fn courant(&self) -> f64 {
+        let dx = self.length / (self.n - 1) as f64;
+        self.c * self.dt / dx
+    }
+
+    /// Backend multiplications per run (3 per interior node per step).
+    pub fn expected_muls(&self) -> u64 {
+        3 * ((self.n - 2) * (self.n - 2)) as u64 * self.steps as u64
+    }
+}
+
+/// Result of a wave run.
+#[derive(Debug, Clone)]
+pub struct WaveResult {
+    /// Final displacement field (n × n, row-major, boundary included).
+    pub u: Vec<f64>,
+    /// `(step, field)` snapshots if requested.
+    pub snapshots: Vec<(usize, Vec<f64>)>,
+    /// Multiplications issued.
+    pub muls: u64,
+    /// Backend name.
+    pub backend: String,
+    /// R2F2 adjustment statistics, when applicable.
+    pub r2f2_stats: Option<Stats>,
+    /// Fixed-format range events, when applicable.
+    pub range_events: Option<RangeEvents>,
+}
+
+/// The wave scenario state: current and previous displacement fields plus
+/// per-row product scratch.
+#[derive(Debug)]
+pub struct WaveSim {
+    n: usize,
+    d1: f64,
+    d0: f64,
+    c2: f64,
+    u: Vec<f64>,
+    uold: Vec<f64>,
+    next: Vec<f64>,
+    /// Per-row scratch: current-state row, previous-state row, Laplacian
+    /// row, and the three product rows.
+    row_u: Vec<f64>,
+    row_old: Vec<f64>,
+    row_lap: Vec<f64>,
+    p1: Vec<f64>,
+    p0: Vec<f64>,
+    p2: Vec<f64>,
+}
+
+impl WaveSim {
+    pub fn new(params: &WaveParams) -> WaveSim {
+        let n = params.n;
+        assert!(n >= 3, "need at least one interior node");
+        let cn = params.courant();
+        assert!(
+            cn * cn <= 0.5 + 1e-12,
+            "leapfrog scheme unstable: C = {cn} (need C^2 <= 1/2 in 2D)"
+        );
+        let k = params.damping;
+        assert!((0.0..1.0).contains(&k), "damping k must be in [0, 1)");
+        let u: Vec<f64> = (0..n * n)
+            .map(|id| {
+                let (i, j) = (id / n, id % n);
+                if i == 0 || i == n - 1 || j == 0 || j == n - 1 {
+                    // Exact Dirichlet zeros (f64's sin(π) is only ~1e-16).
+                    return 0.0;
+                }
+                let sx = (std::f64::consts::PI * i as f64 / (n - 1) as f64).sin();
+                let sy = (std::f64::consts::PI * j as f64 / (n - 1) as f64).sin();
+                params.amplitude * sx * sy
+            })
+            .collect();
+        // Zero initial velocity: the first leapfrog step uses u⁻ = u⁰.
+        let uold = u.clone();
+        let next = u.clone();
+        let interior = n - 2;
+        WaveSim {
+            n,
+            d1: 2.0 / (1.0 + k),
+            d0: (1.0 - k) / (1.0 + k),
+            c2: cn * cn / (1.0 + k),
+            u,
+            uold,
+            next,
+            row_u: vec![0.0; interior],
+            row_old: vec![0.0; interior],
+            row_lap: vec![0.0; interior],
+            p1: vec![0.0; interior],
+            p0: vec![0.0; interior],
+            p2: vec![0.0; interior],
+        }
+    }
+
+    /// Consume the simulation into its final field.
+    pub fn into_field(self) -> Vec<f64> {
+        self.u
+    }
+
+    /// One leapfrog step. Per grid row the three coefficient-product rows
+    /// are evaluated in index order — `d₁·u`, then `d₀·u⁻`, then `c₂·lap` —
+    /// through three [`Ctx::mul_batch`] calls (batched) or the equivalent
+    /// scalar `mul` loops; the combine and storage quantization follow
+    /// per node. Boundary nodes stay at their Dirichlet zeros.
+    fn step(&mut self, ctx: &mut Ctx<'_>, batched: bool) {
+        let n = self.n;
+        for i in 1..n - 1 {
+            let base = i * n;
+            for j in 1..n - 1 {
+                let id = base + j;
+                self.row_u[j - 1] = self.u[id];
+                self.row_old[j - 1] = self.uold[id];
+                self.row_lap[j - 1] = self.u[id - n] + self.u[id + n] + self.u[id - 1]
+                    + self.u[id + 1]
+                    - 4.0 * self.u[id];
+            }
+            if batched {
+                ctx.mul_batch(&mut self.p1, self.d1, &self.row_u);
+                ctx.mul_batch(&mut self.p0, self.d0, &self.row_old);
+                ctx.mul_batch(&mut self.p2, self.c2, &self.row_lap);
+            } else {
+                for j in 0..n - 2 {
+                    self.p1[j] = ctx.mul(self.d1, self.row_u[j]);
+                }
+                for j in 0..n - 2 {
+                    self.p0[j] = ctx.mul(self.d0, self.row_old[j]);
+                }
+                for j in 0..n - 2 {
+                    self.p2[j] = ctx.mul(self.c2, self.row_lap[j]);
+                }
+            }
+            for j in 1..n - 1 {
+                let id = base + j;
+                let s = ctx.sub(self.p1[j - 1], self.p0[j - 1]);
+                let unew = ctx.add(s, self.p2[j - 1]);
+                self.next[id] = ctx.quant(unew);
+            }
+        }
+        // Dirichlet walls stay put.
+        for j in 0..n {
+            self.next[j] = self.u[j];
+            self.next[(n - 1) * n + j] = self.u[(n - 1) * n + j];
+        }
+        for i in 1..n - 1 {
+            self.next[i * n] = self.u[i * n];
+            self.next[i * n + n - 1] = self.u[i * n + n - 1];
+        }
+        std::mem::swap(&mut self.uold, &mut self.u);
+        std::mem::swap(&mut self.u, &mut self.next);
+    }
+}
+
+impl Sim for WaveSim {
+    fn scenario(&self) -> &'static str {
+        "wave2d"
+    }
+
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        for v in self.u.iter_mut() {
+            *v = ctx.quant(*v);
+        }
+        for v in self.uold.iter_mut() {
+            *v = ctx.quant(*v);
+        }
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        for s in 0..steps {
+            self.step(ctx, batched);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.u.clone()));
+            }
+        }
+    }
+
+    fn save(&self) -> Vec<Vec<f64>> {
+        vec![self.u.clone(), self.uold.clone()]
+    }
+
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.u.copy_from_slice(&saved[0]);
+        self.uold.copy_from_slice(&saved[1]);
+    }
+
+    /// Both leapfrog levels are streamed: a stall verdict then requires the
+    /// full three-level state to be bit-frozen, so an oscillation aliasing
+    /// with the epoch length cannot masquerade as one.
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.u);
+        out.extend_from_slice(&self.uold);
+    }
+
+    fn telemetry_len(&self) -> usize {
+        2 * self.n * self.n
+    }
+
+    fn primary_field(&self) -> Vec<f64> {
+        self.u.clone()
+    }
+}
+
+fn finish(sim: WaveSim, stats: RunStats) -> WaveResult {
+    WaveResult {
+        u: sim.into_field(),
+        snapshots: stats.snapshots,
+        muls: stats.muls,
+        backend: stats.backend,
+        r2f2_stats: stats.r2f2_stats,
+        range_events: stats.range_events,
+    }
+}
+
+/// Run under the backend's batched engine; bit-identical to [`run_scalar`].
+pub fn run(params: &WaveParams, be: &mut dyn Arith, mode: QuantMode) -> WaveResult {
+    let mut sim = WaveSim::new(params);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    finish(sim, stats)
+}
+
+/// The per-multiplication scalar reference of [`run`].
+pub fn run_scalar(params: &WaveParams, be: &mut dyn Arith, mode: QuantMode) -> WaveResult {
+    let mut sim = WaveSim::new(params);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, false);
+    finish(sim, stats)
+}
+
+/// Adaptive-precision run through the generic epoch driver.
+pub fn run_adaptive(
+    params: &WaveParams,
+    sched: &mut super::AdaptiveArith,
+    mode: QuantMode,
+) -> WaveResult {
+    let mut sim = WaveSim::new(params);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    finish(sim, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{rel_l2, F64Arith, FixedArith, R2f2Arith};
+    use crate::r2f2core::R2f2Config;
+    use crate::softfloat::FpFormat;
+
+    fn small() -> WaveParams {
+        WaveParams { n: 17, dt: 0.5 / 16.0, steps: 120, ..WaveParams::default() }
+    }
+
+    fn amplitude(u: &[f64]) -> f64 {
+        u.iter().cloned().fold(0.0f64, |a, b| a.max(b.abs()))
+    }
+
+    #[test]
+    fn undamped_oscillation_conserves_amplitude_and_signs() {
+        // The standing mode swings; without damping the envelope holds to
+        // discretization accuracy and the field goes genuinely negative.
+        let mut p = small();
+        p.steps = 400;
+        p.snapshot_every = 10;
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let peak = res.snapshots.iter().map(|(_, u)| amplitude(u)).fold(0.0f64, f64::max);
+        assert!(peak > 0.9 * p.amplitude && peak < 1.05 * p.amplitude, "peak {peak}");
+        let min = res
+            .snapshots
+            .iter()
+            .flat_map(|(_, u)| u.iter())
+            .cloned()
+            .fold(f64::MAX, f64::min);
+        assert!(min < -0.5 * p.amplitude, "no negative swing: {min}");
+    }
+
+    #[test]
+    fn boundaries_stay_clamped() {
+        let p = small();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let n = p.n;
+        for j in 0..n {
+            assert_eq!(res.u[j], 0.0);
+            assert_eq!(res.u[(n - 1) * n + j], 0.0);
+            assert_eq!(res.u[j * n], 0.0);
+            assert_eq!(res.u[j * n + n - 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn damping_decays_the_envelope() {
+        let p = WaveParams { damping: 0.04, steps: 300, ..small() };
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert!(
+            amplitude(&res.u) < 0.01 * p.amplitude,
+            "damped amplitude {}",
+            amplitude(&res.u)
+        );
+    }
+
+    #[test]
+    fn mul_count_matches_expectation() {
+        let p = small();
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert_eq!(res.muls, p.expected_muls());
+    }
+
+    #[test]
+    fn batched_matches_scalar_bitwise() {
+        // §8 contract: values, counters and R2F2 stats per engine path.
+        let p = WaveParams { steps: 60, ..small() };
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            let mut a = FixedArith::new(FpFormat::E5M10);
+            let mut b = FixedArith::new(FpFormat::E5M10);
+            let s = run_scalar(&p, &mut a, mode);
+            let g = run(&p, &mut b, mode);
+            assert_eq!(s.muls, g.muls, "{mode:?}");
+            assert_eq!(s.range_events, g.range_events, "{mode:?}");
+            for i in 0..s.u.len() {
+                assert_eq!(s.u[i].to_bits(), g.u[i].to_bits(), "{mode:?} node {i}");
+            }
+            let mut a = R2f2Arith::new(R2f2Config::C16_393);
+            let mut b = R2f2Arith::new(R2f2Config::C16_393);
+            let s = run_scalar(&p, &mut a, mode);
+            let g = run(&p, &mut b, mode);
+            assert_eq!(s.r2f2_stats, g.r2f2_stats, "{mode:?}");
+            for i in 0..s.u.len() {
+                assert_eq!(s.u[i].to_bits(), g.u[i].to_bits(), "r2f2 {mode:?} node {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn e5m10_mulonly_tracks_f64() {
+        let p = small();
+        let reference = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let mut half = FixedArith::new(FpFormat::E5M10);
+        let res = run(&p, &mut half, QuantMode::MulOnly);
+        assert!(rel_l2(&res.u, &reference.u) < 3e-1, "{}", rel_l2(&res.u, &reference.u));
+    }
+
+    #[test]
+    fn e4m3_saturates_on_the_amplitude() {
+        // Amplitude 300 > E4M3's max finite: overflow pressure — the
+        // adaptive ladder's widen trigger.
+        let p = WaveParams { steps: 4, ..small() };
+        let mut narrow = FixedArith::new(FpFormat::E4M3);
+        let res = run(&p, &mut narrow, QuantMode::MulOnly);
+        assert!(res.range_events.unwrap().overflows > 0);
+    }
+
+    #[test]
+    fn signed_state_populates_negative_telemetry() {
+        // The histogram path the decaying-positive scenarios never hit:
+        // roughly half the sampled magnitudes carry a negative sign.
+        // ~2/3 of a half period: the standing mode has swung negative.
+        let p = WaveParams { steps: 30, ..small() };
+        let mut sim = WaveSim::new(&p);
+        let _ = scenario::run_sim(&mut sim, &mut F64Arith, QuantMode::MulOnly, p.steps, 0, true);
+        let mut tele = Vec::new();
+        sim.telemetry(&mut tele);
+        let mut h = crate::analysis::Log2Histogram::new();
+        for v in &tele {
+            h.record(*v);
+        }
+        assert!(h.negatives > h.total / 8, "negatives {} of {}", h.negatives, h.total);
+        assert_eq!(h.nonfinite, 0);
+    }
+
+    #[test]
+    fn snapshots_collected() {
+        let mut p = small();
+        p.snapshot_every = 40;
+        let res = run(&p, &mut F64Arith, QuantMode::MulOnly);
+        assert_eq!(res.snapshots.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "unstable")]
+    fn instability_rejected() {
+        let mut p = small();
+        p.dt *= 2.0; // C = 1.0, C² = 1 > 1/2
+        run(&p, &mut F64Arith, QuantMode::MulOnly);
+    }
+}

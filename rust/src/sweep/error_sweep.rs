@@ -8,7 +8,8 @@
 //! per-interval error-reduction distribution of Fig. 6(g).
 
 use crate::coordinator::{default_workers, parallel_map};
-use crate::pde::{Arith, FixedArith, R2f2Arith};
+use crate::pde::scenario::{self, ScenarioSize};
+use crate::pde::{rel_l2, Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
 use crate::r2f2core::R2f2Config;
 use crate::rng::SplitMix64;
 use crate::softfloat::FpFormat;
@@ -180,6 +181,63 @@ fn rel_err(got: f64, want: f64) -> f64 {
     ((got - want) / want).abs().min(1.0)
 }
 
+/// One row of a per-scenario precision profile.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioProfileRow {
+    pub fmt: FpFormat,
+    /// Relative L2 error of the fixed-format MulOnly run vs the f64
+    /// reference at [`ScenarioSize::Accuracy`].
+    pub rel_err: f64,
+    pub overflows: u64,
+    pub underflows: u64,
+    /// Multiplications the run issued.
+    pub muls: u64,
+}
+
+/// A per-scenario precision profile: one row per candidate format, plus
+/// the f64 reference field the errors were measured against (so callers
+/// never re-run the reference — e.g. to histogram its range).
+#[derive(Debug, Clone)]
+pub struct ScenarioProfile {
+    pub rows: Vec<ScenarioProfileRow>,
+    /// Final f64 MulOnly field at [`ScenarioSize::Accuracy`].
+    pub reference: Vec<f64>,
+}
+
+/// The Fig. 3 profiling idea pointed at whole simulations instead of
+/// operand ranges: run a registry scenario (selected by name —
+/// `pde::scenario::SCENARIOS`) under every candidate fixed format and
+/// report the end-to-end error + range-event profile. Candidate formats
+/// shard over `workers` threads via `coordinator::parallel_map` — each run
+/// owns a fresh backend, so results are identical for any worker count.
+pub fn scenario_precision_profile(
+    name: &str,
+    formats: &[FpFormat],
+    workers: usize,
+) -> Result<ScenarioProfile, String> {
+    let spec = scenario::find(name).ok_or_else(|| format!("unknown scenario `{name}`"))?;
+    let reference = (spec.run)(ScenarioSize::Accuracy, &mut F64Arith, QuantMode::MulOnly, true);
+    let rows = parallel_map(formats.to_vec(), workers.max(1), |fmt| {
+        let mut be = FixedArith::new(fmt);
+        let run = (spec.run)(ScenarioSize::Accuracy, &mut be, QuantMode::MulOnly, true);
+        let ev = run.range_events.unwrap_or_default();
+        ScenarioProfileRow {
+            fmt,
+            rel_err: rel_l2(&run.field, &reference.field),
+            overflows: ev.overflows,
+            underflows: ev.underflows,
+            muls: run.muls,
+        }
+    });
+    Ok(ScenarioProfile { rows, reference: reference.field })
+}
+
+/// The default candidate ladder for [`scenario_precision_profile`]: the
+/// 16-bit family around the paper's E5M10 plus the FP8 floor.
+pub fn profile_formats() -> Vec<FpFormat> {
+    vec![FpFormat::E4M3, FpFormat::E5M8, FpFormat::E5M10, FpFormat::new(6, 9), FpFormat::E8M7]
+}
+
 /// The three fixed-vs-R2F2 pairings evaluated in Fig. 6(g).
 pub fn paper_pairings() -> [(R2f2Config, FpFormat); 3] {
     [
@@ -259,6 +317,36 @@ mod tests {
             let r = error_sweep(cfg, fixed, &quick());
             assert!(r.avg_reduction > 0.4, "{cfg}: avg {}", r.avg_reduction);
             assert!(r.global_reduction > 0.9, "{cfg}: global {}", r.global_reduction);
+        }
+    }
+
+    #[test]
+    fn scenario_profile_orders_formats_sanely() {
+        // On the shallow-water scenario the shelf-scale flux overflows
+        // E5M10 but fits E6M9: the wider-exponent run must be far more
+        // accurate and the half run must report overflows.
+        let formats = [FpFormat::E5M10, FpFormat::new(6, 9)];
+        let profile = scenario_precision_profile("swe2d", &formats, 2).unwrap();
+        assert_eq!(profile.rows.len(), 2);
+        assert!(!profile.reference.is_empty());
+        let half = &profile.rows[0];
+        let e6m9 = &profile.rows[1];
+        assert!(half.overflows > 0, "E5M10 must overflow the shelf flux");
+        assert!(e6m9.rel_err < 0.2 * half.rel_err, "{} vs {}", e6m9.rel_err, half.rel_err);
+        assert!(half.muls > 0 && e6m9.muls == half.muls);
+        assert!(scenario_precision_profile("nope", &[FpFormat::E5M10], 1).is_err());
+    }
+
+    #[test]
+    fn scenario_profile_is_worker_count_invariant() {
+        let formats = profile_formats();
+        let one = scenario_precision_profile("heat1d", &formats, 1).unwrap().rows;
+        let many = scenario_precision_profile("heat1d", &formats, 4).unwrap().rows;
+        assert_eq!(one.len(), many.len());
+        for (a, b) in one.iter().zip(many.iter()) {
+            assert_eq!(a.fmt, b.fmt);
+            assert_eq!(a.rel_err.to_bits(), b.rel_err.to_bits());
+            assert_eq!((a.overflows, a.underflows, a.muls), (b.overflows, b.underflows, b.muls));
         }
     }
 

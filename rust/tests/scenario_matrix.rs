@@ -1,0 +1,146 @@
+//! The scenario-registry contract (DESIGN.md §11), enforced for **every**
+//! entry of `pde::scenario::SCENARIOS` — adding a scenario to the registry
+//! automatically enrolls it here (and in the CI scenario-matrix job, which
+//! turns this suite's `MATRIX |` lines into a job-summary table):
+//!
+//! 1. **Engine bit-identity** — scalar dispatch ≡ carrier engine ≡ packed
+//!    engine (fields, counters, mul counts) in both quantization modes,
+//!    through the shared generic drivers.
+//! 2. **MulOnly accuracy envelopes** — each scenario's 16-bit-class
+//!    formats stay within their declared rel-L2 bound vs the f64
+//!    reference, while the FP8 floor visibly fails where the physics says
+//!    it must.
+//! 3. **The adaptive envelope, generalized** — every scenario's default
+//!    ladder widens out of its narrow rung in epoch 0 (retry discards the
+//!    attempt), so the committed trajectory bit-equals the all-wide fixed
+//!    run; scenarios that decay into a stall also narrow back, landing the
+//!    same final RMSE at strictly lower modeled datapath cost (the PR-3
+//!    heat envelope, now a property of the registry).
+
+use r2f2::pde::adaptive::fixed_cost_lut;
+use r2f2::pde::scenario::{ScenarioRun, ScenarioSize, SCENARIOS};
+use r2f2::pde::{rmse, AdaptiveArith, BatchEngine, F64Arith, FixedArith, QuantMode};
+
+fn assert_fields_bit_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: node {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+fn assert_runs_bit_equal(a: &ScenarioRun, b: &ScenarioRun, what: &str) {
+    assert_fields_bit_equal(&a.field, &b.field, what);
+    assert_eq!(a.muls, b.muls, "{what}: muls");
+    assert_eq!(a.range_events, b.range_events, "{what}: events");
+    assert_eq!(a.r2f2_stats, b.r2f2_stats, "{what}: stats");
+}
+
+#[test]
+fn engines_bit_identical_for_every_scenario() {
+    for spec in SCENARIOS {
+        let fmt = spec.wide_format;
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            let mut scalar_be = FixedArith::new(fmt);
+            let scalar = (spec.run)(ScenarioSize::Quick, &mut scalar_be, mode, false);
+            let mut carrier_be = FixedArith::new(fmt).with_engine(BatchEngine::Carrier);
+            let carrier = (spec.run)(ScenarioSize::Quick, &mut carrier_be, mode, true);
+            let mut packed_be = FixedArith::new(fmt);
+            let packed = (spec.run)(ScenarioSize::Quick, &mut packed_be, mode, true);
+
+            assert_runs_bit_equal(&scalar, &carrier, &format!("{}/{mode:?} carrier", spec.name));
+            assert_runs_bit_equal(&scalar, &packed, &format!("{}/{mode:?} packed", spec.name));
+            println!(
+                "MATRIX | {} | scalar=carrier=packed | {:?} | bit-identical |",
+                spec.name, mode
+            );
+        }
+    }
+}
+
+#[test]
+fn mulonly_rmse_envelopes_hold_for_every_scenario() {
+    for spec in SCENARIOS {
+        let reference = (spec.run)(ScenarioSize::Accuracy, &mut F64Arith, QuantMode::MulOnly, true);
+        for &(fmt, bound) in spec.envelopes {
+            let mut be = FixedArith::new(fmt);
+            let run = (spec.run)(ScenarioSize::Accuracy, &mut be, QuantMode::MulOnly, true);
+            let err = r2f2::pde::rel_l2(&run.field, &reference.field);
+            assert!(
+                err < bound,
+                "{}: {fmt} rel err {err} exceeds envelope {bound}",
+                spec.name
+            );
+            println!(
+                "MATRIX | {} | {fmt} mulonly | rel-err {err:.3e} | within {bound:.0e} |",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_envelope_generalizes_to_every_scenario() {
+    for spec in SCENARIOS {
+        let policy = (spec.adaptive_policy)();
+        let narrow_fmt = policy.ladder[0];
+
+        // Packed and scalar adaptive runs derive the same schedule and
+        // bit-identical results (the decision inputs are bit-identical).
+        let mut s_packed = AdaptiveArith::new(policy.clone());
+        let packed =
+            (spec.run_adaptive)(ScenarioSize::Adaptive, &mut s_packed, QuantMode::MulOnly, true);
+        let mut s_scalar = AdaptiveArith::new(policy);
+        let scalar =
+            (spec.run_adaptive)(ScenarioSize::Adaptive, &mut s_scalar, QuantMode::MulOnly, false);
+        assert_eq!(s_scalar.decisions(), s_packed.decisions(), "{}: decisions", spec.name);
+        assert_eq!(s_scalar.trace(), s_packed.trace(), "{}: trace", spec.name);
+        let what = format!("{} adaptive scalar vs packed", spec.name);
+        assert_runs_bit_equal(&scalar, &packed, &what);
+
+        let rep = s_packed.report();
+        assert!(rep.widen_events >= 1, "{}: expected a widen: {:?}", spec.name, rep.trace);
+        let want_final = if spec.expect_narrow { narrow_fmt } else { spec.wide_format };
+        assert_eq!(rep.final_format, want_final, "{}", spec.name);
+
+        // Epoch 0 widened and was retried from the pristine state, and any
+        // narrow fired only in a stall — so the committed trajectory is the
+        // all-wide fixed run, bit for bit, and the final RMSE matches it.
+        let mut wide_be = FixedArith::new(spec.wide_format);
+        let wide = (spec.run)(ScenarioSize::Adaptive, &mut wide_be, QuantMode::MulOnly, true);
+        assert_fields_bit_equal(&packed.field, &wide.field, &format!("{} vs all-wide", spec.name));
+        let reference = (spec.run)(ScenarioSize::Adaptive, &mut F64Arith, QuantMode::MulOnly, true);
+        let rmse_adaptive = rmse(&packed.field, &reference.field);
+        let rmse_wide = rmse(&wide.field, &reference.field);
+        assert!(
+            (rmse_adaptive - rmse_wide).abs() <= 1e-12,
+            "{}: adaptive {rmse_adaptive} vs wide {rmse_wide}",
+            spec.name
+        );
+
+        // Cost: strictly below the all-wide run whenever the ladder narrows
+        // for the tail, and never below the all-narrow floor. (The floor
+        // claim only makes sense for ladders whose narrow rung is the
+        // cheaper one — swe2d's E5M10 → E6M9 exponent trade is not.)
+        let cost_adaptive = rep.modeled_cost_lut;
+        let cost_wide = fixed_cost_lut(spec.wide_format, wide.muls);
+        if spec.expect_narrow {
+            let cost_floor = fixed_cost_lut(narrow_fmt, wide.muls);
+            assert!(cost_adaptive >= cost_floor, "{}: cost below floor", spec.name);
+            assert!(rep.narrow_events >= 1, "{}: expected a narrow: {:?}", spec.name, rep.trace);
+            assert!(
+                cost_adaptive < cost_wide,
+                "{}: adaptive cost {cost_adaptive} must beat all-wide {cost_wide}",
+                spec.name
+            );
+        }
+        println!(
+            "MATRIX | {} | adaptive->{} | widen {} narrow {} | cost {:.3e} vs wide {:.3e} |",
+            spec.name,
+            rep.final_format,
+            rep.widen_events,
+            rep.narrow_events,
+            cost_adaptive,
+            cost_wide
+        );
+    }
+}
