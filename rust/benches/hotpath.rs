@@ -106,9 +106,10 @@ struct ScenarioRow {
     muls: u64,
 }
 
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
+// One escape routine crate-wide (PR-5 satellite): the same dual of
+// `config::json_mini`'s parser that `metrics::to_json` and the server use,
+// so bench-case names with quotes/backslashes/control chars stay valid.
+use r2f2::config::json_escape;
 
 fn emit_json(
     path: &str,

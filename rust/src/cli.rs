@@ -194,4 +194,25 @@ mod tests {
         assert_eq!(a.get("backend").as_deref(), Some("r2f2:<3,9,3>"));
         assert!(a.switch("dry-run"));
     }
+
+    #[test]
+    fn serve_style_command_lines_parse() {
+        // The `serve` / `bench-serve` surfaces: numeric options (including
+        // port 0 for an ephemeral bind), a declared switch, and a path.
+        let sw = &["smoke"];
+        let line = toks("serve --port 0 --workers 2 --queue-cap 1 --cache-cap 64");
+        let mut a = Args::parse(line, sw).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_parse("port", 7272u16).unwrap(), 0);
+        assert_eq!(a.get_parse("workers", 1usize).unwrap(), 2);
+        assert_eq!(a.get_parse("queue-cap", 64usize).unwrap(), 1);
+        assert_eq!(a.get_parse("cache-cap", 256usize).unwrap(), 64);
+        a.finish().unwrap();
+
+        let mut b = Args::parse(toks("bench-serve --smoke --out BENCH_serve.json"), sw).unwrap();
+        assert!(b.switch("smoke"));
+        assert_eq!(b.get_or("out", "BENCH_serve.json"), "BENCH_serve.json");
+        assert_eq!(b.get_parse("clients", 8usize).unwrap(), 8, "defaults apply");
+        b.finish().unwrap();
+    }
 }

@@ -153,6 +153,9 @@ impl ExperimentConfig {
         }
 
         if let Some(v) = get(doc, "heat", "n").and_then(Value::as_int) {
+            if v < 3 {
+                return Err(format!("heat.n must be at least 3, got {v}"));
+            }
             cfg.heat.n = v as usize;
         }
         if let Some(v) = get(doc, "heat", "steps").and_then(Value::as_int) {
@@ -176,6 +179,9 @@ impl ExperimentConfig {
         }
 
         if let Some(v) = get(doc, "swe", "n").and_then(Value::as_int) {
+            if v < 3 {
+                return Err(format!("swe.n must be at least 3, got {v}"));
+            }
             cfg.swe.n = v as usize;
         }
         if let Some(v) = get(doc, "swe", "steps").and_then(Value::as_int) {
@@ -242,6 +248,105 @@ impl ExperimentConfig {
     pub fn from_toml(text: &str) -> Result<ExperimentConfig, String> {
         let doc = super::toml_mini::parse(text).map_err(|e| e.to_string())?;
         Self::from_document(&doc)
+    }
+
+    /// Build from a parsed JSON document (the `POST /v1/run` body). The
+    /// shape mirrors the TOML config exactly: scalar fields at the top
+    /// level, one nested object per `[section]` —
+    /// `{"app": "heat", "backend": "fixed:E5M10", "heat": {"n": 65}}`.
+    ///
+    /// The JSON is lowered onto the same [`Document`] the TOML path
+    /// produces and validated by the same [`ExperimentConfig::from_document`],
+    /// so the two config surfaces can never drift (including the TOML
+    /// path's leniency: unknown keys are ignored, wrong-typed values fall
+    /// back to defaults). Integral numbers lower to `Int` so they satisfy
+    /// both integer and float fields, like TOML's `as_float` does.
+    ///
+    /// On top of `from_document`, **serving limits** apply
+    /// ([`ExperimentConfig::check_serving_limits`]): this is the remote
+    /// surface, and a giant grid must be a `400`, not a multi-GB
+    /// allocation (allocation failure aborts the process — a worker's
+    /// panic guard cannot catch it) or a worker pinned for days.
+    pub fn from_json(json: &super::Json) -> Result<ExperimentConfig, String> {
+        use super::Json;
+        fn lower(v: &Json) -> Result<Value, String> {
+            match v {
+                Json::Str(s) => Ok(Value::Str(s.clone())),
+                Json::Bool(b) => Ok(Value::Bool(*b)),
+                Json::Num(n) if n.fract() == 0.0 && n.abs() <= 9.0e15 => Ok(Value::Int(*n as i64)),
+                Json::Num(n) => Ok(Value::Float(*n)),
+                other => Err(format!("config values must be scalars, got {other:?}")),
+            }
+        }
+        let obj = match json {
+            Json::Obj(m) => m,
+            _ => return Err("config must be a JSON object".to_string()),
+        };
+        let mut doc = Document::new();
+        doc.insert(String::new(), Default::default());
+        for (key, value) in obj {
+            match value {
+                Json::Obj(section) => {
+                    let table = doc.entry(key.clone()).or_default();
+                    for (k, v) in section {
+                        table.insert(k.clone(), lower(v)?);
+                    }
+                }
+                scalar => {
+                    doc.get_mut("").unwrap().insert(key.clone(), lower(scalar)?);
+                }
+            }
+        }
+        let cfg = Self::from_document(&doc)?;
+        cfg.check_serving_limits()?;
+        Ok(cfg)
+    }
+
+    /// Reject configs too large to serve: 1D grids above 10⁶ nodes, 2D
+    /// grids above 2048², more than 10⁷ timesteps, or — the binding
+    /// constraint — more than 10⁹ node·steps of total work per section
+    /// (bounding n and steps independently would still admit jobs that pin
+    /// a worker for days; jobs have no timeout). Local (TOML/CLI) runs are
+    /// deliberately not limited — on your own machine, your call — but the
+    /// server must bound memory (an allocation failure aborts the process)
+    /// and job length.
+    pub fn check_serving_limits(&self) -> Result<(), String> {
+        const MAX_NODES_1D: usize = 1_000_000;
+        const MAX_SIDE_2D: usize = 2048;
+        const MAX_STEPS: usize = 10_000_000;
+        // Grid nodes × timesteps: ≈ minutes of worker time at worst, not
+        // days (every default/preset is well below 1e7).
+        const MAX_WORK: usize = 1_000_000_000;
+        let checks: [(&str, usize, usize); 8] = [
+            ("heat.n", self.heat.n, MAX_NODES_1D),
+            ("advection.n", self.advection.n, MAX_NODES_1D),
+            ("swe.n", self.swe.n, MAX_SIDE_2D),
+            ("wave.n", self.wave.n, MAX_SIDE_2D),
+            ("heat.steps", self.heat.steps, MAX_STEPS),
+            ("advection.steps", self.advection.steps, MAX_STEPS),
+            ("swe.steps", self.swe.steps, MAX_STEPS),
+            ("wave.steps", self.wave.steps, MAX_STEPS),
+        ];
+        for (name, value, cap) in checks {
+            if value > cap {
+                return Err(format!("{name} = {value} exceeds the serving limit of {cap}"));
+            }
+        }
+        let work: [(&str, usize); 4] = [
+            ("heat", self.heat.n.saturating_mul(self.heat.steps)),
+            ("advection", self.advection.n.saturating_mul(self.advection.steps)),
+            ("swe", self.swe.n.saturating_mul(self.swe.n).saturating_mul(self.swe.steps)),
+            ("wave", self.wave.n.saturating_mul(self.wave.n).saturating_mul(self.wave.steps)),
+        ];
+        for (name, nodesteps) in work {
+            if nodesteps > MAX_WORK {
+                return Err(format!(
+                    "{name}: n × steps = {nodesteps} node·steps exceeds the serving limit \
+                     of {MAX_WORK}"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -332,6 +437,87 @@ mod tests {
     }
 
     #[test]
+    fn json_and_toml_configs_agree() {
+        let toml = ExperimentConfig::from_toml(
+            r#"
+            title = "served"
+            app = "heat"
+            backend = "fixed:E5M10"
+            mode = "full"
+            [heat]
+            n = 65
+            steps = 120
+            dt = 2.5e-5
+            init = "exp"
+            "#,
+        )
+        .unwrap();
+        let json = ExperimentConfig::from_json(
+            &crate::config::parse_json(
+                r#"{"title": "served", "app": "heat", "backend": "fixed:E5M10",
+                    "mode": "full",
+                    "heat": {"n": 65, "steps": 120, "dt": 2.5e-5, "init": "exp"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(json.title, toml.title);
+        assert_eq!(json.app, toml.app);
+        assert_eq!(json.backend, toml.backend);
+        assert_eq!(json.mode, toml.mode);
+        assert_eq!(json.heat.n, toml.heat.n);
+        assert_eq!(json.heat.steps, toml.heat.steps);
+        assert_eq!(json.heat.dt.to_bits(), toml.heat.dt.to_bits());
+        assert_eq!(json.heat.init, toml.heat.init);
+    }
+
+    #[test]
+    fn json_integral_numbers_satisfy_float_fields() {
+        // `"dt": 1` is an integral JSON number landing on a float field —
+        // must behave like TOML's Int-accepting `as_float`.
+        let cfg = ExperimentConfig::from_json(
+            &crate::config::parse_json(r#"{"swe": {"dt": 1, "steps": 3}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.swe.dt, 1.0);
+        assert_eq!(cfg.swe.steps, 3);
+    }
+
+    #[test]
+    fn bad_json_configs_rejected() {
+        for doc in [
+            "[1, 2]",                          // not an object
+            "{\"app\": \"chess\"}",            // unknown app
+            "{\"mode\": \"sideways\"}",        // unknown mode
+            "{\"backend\": \"r2f2:bogus\"}",   // bad backend spec
+            "{\"heat\": {\"n\": [1, 2]}}",     // non-scalar section value
+            "{\"wave\": {\"n\": 1}}",          // degenerate grid
+            "{\"wave\": {\"damping\": 1.5}}",  // out-of-range damping
+            "{\"heat\": {\"n\": 2000000000}}", // above the serving limit
+            "{\"swe\": {\"n\": 100000}}",      // 2D side above the limit
+            "{\"heat\": {\"steps\": 100000000}}", // job effectively forever
+            // n and steps each in-limits, but the n × steps work product
+            // would pin a worker for days.
+            "{\"heat\": {\"n\": 1000000, \"steps\": 10000000}}",
+            "{\"wave\": {\"n\": 2048, \"steps\": 1000000}}",
+        ] {
+            let j = crate::config::parse_json(doc).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn serving_limits_allow_all_defaults() {
+        // Every local default and preset must stay servable.
+        ExperimentConfig::default().check_serving_limits().unwrap();
+        for app in APPS {
+            let mut c = ExperimentConfig::default();
+            c.app = app.to_string();
+            c.check_serving_limits().unwrap();
+        }
+    }
+
+    #[test]
     fn defaults_survive_empty_toml() {
         let cfg = ExperimentConfig::from_toml("").unwrap();
         assert_eq!(cfg.app, "heat");
@@ -343,9 +529,12 @@ mod tests {
         assert!(ExperimentConfig::from_toml("app = \"chess\"").is_err());
         assert!(ExperimentConfig::from_toml("mode = \"sideways\"").is_err());
         assert!(ExperimentConfig::from_toml("backend = \"r2f2:bogus\"").is_err());
-        // Degenerate grids are a config error, not a div-by-zero downstream.
+        // Degenerate grids are a config error, not a div-by-zero downstream
+        // (load-bearing for the server: a panicking worker is a DoS).
         assert!(ExperimentConfig::from_toml("[wave]\nn = 1").is_err());
         assert!(ExperimentConfig::from_toml("[advection]\nn = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[heat]\nn = 1").is_err());
+        assert!(ExperimentConfig::from_toml("[swe]\nn = 0").is_err());
         assert!(ExperimentConfig::from_toml("[wave]\ndamping = 1.5").is_err());
     }
 }

@@ -48,6 +48,29 @@ impl Json {
     }
 }
 
+/// Escape a string's content for embedding inside a JSON string literal
+/// (the emission-side dual of [`parse_json`]'s string parser: everything
+/// this produces, that parser reads back verbatim). Every JSON emitter in
+/// the crate — `metrics::Registry::to_json`, the server's response
+/// bodies, the bench artifacts — must route names/strings through this,
+/// so a hostile key (quotes, backslashes, control characters) can never
+/// yield a malformed document.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Parse a JSON document.
 pub fn parse_json(text: &str) -> Result<Json, String> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
@@ -271,5 +294,34 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse_json("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse_json("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn escape_roundtrips_through_own_parser() {
+        for hostile in [
+            "plain",
+            "quo\"te",
+            "back\\slash",
+            "new\nline",
+            "tab\tret\r",
+            "ctl\u{1}\u{1f}",
+            "uni é ☃",
+            "\\\"both\\\"",
+            "",
+        ] {
+            let doc = format!("\"{}\"", escape(hostile));
+            assert_eq!(
+                parse_json(&doc).unwrap(),
+                Json::Str(hostile.to_string()),
+                "roundtrip {hostile:?} via {doc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn escaped_keys_keep_objects_wellformed() {
+        let doc = format!("{{\"{}\": 1}}", escape("a\"b\\c\nd"));
+        let j = parse_json(&doc).unwrap();
+        assert_eq!(j.get("a\"b\\c\nd").unwrap().as_f64(), Some(1.0));
     }
 }

@@ -7,5 +7,5 @@ pub mod json_mini;
 pub mod toml_mini;
 
 pub use experiment::{parse_backend, BackendSpec, ExperimentConfig, APPS};
-pub use json_mini::{parse_json, Json};
+pub use json_mini::{escape as json_escape, parse_json, Json};
 pub use toml_mini::{parse as parse_toml, Document, Value};

@@ -44,9 +44,20 @@ where
     out.into_iter().map(|m| m.into_inner().unwrap().expect("missing result")).collect()
 }
 
-/// Default worker count: available parallelism capped at 8 (experiment
-/// fan-out is memory-light but the softfloat sweeps saturate quickly).
+/// Default worker count: the `R2F2_WORKERS` environment override when set
+/// (clamped to ≥ 1; non-numeric values are ignored), else available
+/// parallelism capped at 8 (experiment fan-out is memory-light but the
+/// softfloat sweeps saturate quickly). The override is what CI and the
+/// scenario-matrix suite pin worker counts with, and what sizes the
+/// `r2f2 serve` pool on shared hosts — every sharded computation in the
+/// crate is worker-count-invariant by contract, so the override can only
+/// change speed, never results.
 pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("R2F2_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
 }
 
@@ -88,5 +99,34 @@ mod tests {
         let out = parallel_map((0..1000).collect::<Vec<_>>(), 3, |x| x % 7);
         assert_eq!(out.len(), 1000);
         assert_eq!(out[999], 999 % 7);
+    }
+
+    #[test]
+    fn workers_env_override_clamped_and_validated() {
+        // The env is process-global: serialize against other readers and
+        // put the caller's original value back before releasing the guard.
+        // (Concurrent lib tests can still observe the transient values;
+        // that only moves worker counts, and every sharded computation is
+        // worker-count-invariant by contract.)
+        static ENV_GUARD: Mutex<()> = Mutex::new(());
+        let _g = ENV_GUARD.lock().unwrap();
+        let original = std::env::var("R2F2_WORKERS").ok();
+        std::env::remove_var("R2F2_WORKERS");
+        let base = default_workers();
+        assert!(base >= 1);
+
+        std::env::set_var("R2F2_WORKERS", "3");
+        assert_eq!(default_workers(), 3);
+        std::env::set_var("R2F2_WORKERS", " 12 ");
+        assert_eq!(default_workers(), 12, "whitespace-tolerant");
+        std::env::set_var("R2F2_WORKERS", "0");
+        assert_eq!(default_workers(), 1, "clamped to >= 1");
+        std::env::set_var("R2F2_WORKERS", "not-a-number");
+        assert_eq!(default_workers(), base, "garbage is ignored");
+
+        match original {
+            Some(v) => std::env::set_var("R2F2_WORKERS", v),
+            None => std::env::remove_var("R2F2_WORKERS"),
+        }
     }
 }

@@ -39,6 +39,12 @@
 //!   loop from rust. Python never runs on this path.
 //! * [`coordinator`] — experiment job system: a thread-pool scheduler that
 //!   fans sweeps and simulations out across workers.
+//! * [`server`] — the serving layer (DESIGN.md §12): `r2f2 serve` exposes
+//!   the whole stack over a std-only HTTP/1.1 surface — a persistent
+//!   worker pool with a bounded job queue, and a content-addressed result
+//!   cache that is *sound* because runs are bit-reproducible by the
+//!   §8/§9/§11 contracts (a debug determinism guard re-verifies sampled
+//!   hits). `r2f2 bench-serve` is the in-process loopback load generator.
 //! * [`config`] / [`metrics`] / [`report`] / [`cli`] — the supporting
 //!   substrates (TOML-subset config, counters, CSV/ASCII-plot emitters,
 //!   argument parsing) built from scratch for this offline environment.
@@ -58,5 +64,6 @@ pub mod r2f2core;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod softfloat;
 pub mod sweep;

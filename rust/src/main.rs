@@ -8,6 +8,8 @@
 //!   sweep     multiplication-accuracy sweep (Fig 6)
 //!   table1    resource + latency model (Table 1)
 //!   pipeline  three-layer run: AOT artifacts via PJRT (the e2e path)
+//!   serve     long-lived simulation service (worker pool + result cache)
+//!   bench-serve  loopback load generator for the service (BENCH_serve.json)
 
 use r2f2::analysis;
 use r2f2::cli::Args;
@@ -23,7 +25,7 @@ use r2f2::runtime::{HeatRunner, Runtime};
 use r2f2::softfloat::FpFormat;
 use r2f2::sweep::{config_profile, error_sweep};
 
-const SWITCHES: &[&str] = &["verbose", "json", "help", "full", "profile"];
+const SWITCHES: &[&str] = &["verbose", "json", "help", "full", "profile", "smoke"];
 
 fn main() {
     let mut args = match Args::from_env(SWITCHES) {
@@ -37,6 +39,8 @@ fn main() {
     let result = match cmd.as_str() {
         "run" => cmd_run(&mut args),
         "compare" => cmd_compare(&mut args),
+        "serve" => cmd_serve(&mut args),
+        "bench-serve" => cmd_bench_serve(&mut args),
         "scenarios" => cmd_scenarios(&mut args),
         "analyze" => cmd_analyze(&mut args),
         "profile" => cmd_profile(&mut args),
@@ -79,6 +83,13 @@ COMMANDS
   table1    — Table 1 resource & latency model vs paper
   pipeline  [--artifacts DIR --steps S --backend r2f2|e5m10|f32] — run the
             heat simulation through the AOT artifacts on PJRT (three-layer)
+  serve     [--port P] [--workers W] [--queue-cap Q] [--cache-cap C] — the
+            simulation service: POST /v1/run, GET /v1/scenarios, /healthz,
+            /metrics (DESIGN.md §12); R2F2_WORKERS overrides the pool size
+  bench-serve [--clients N] [--requests M] [--workers W] [--cache-cap C]
+            [--smoke] [--out FILE] — start an in-process server and drive
+            it from N loopback clients (M requests each); emits
+            BENCH_serve.json (schema r2f2-bench-serve/1)
 
 BACKEND SPECS: f64 | f32 | fixed:E5M10 (any ExMy) | r2f2:<3,9,3> (any <EB,MB,FX>)"
     );
@@ -348,5 +359,206 @@ fn cmd_pipeline(args: &mut Args) -> Result<(), String> {
     let ds: Vec<f64> = out.u.iter().step_by(n.div_ceil(64)).map(|&x| x as f64).collect();
     println!("{}", ascii_plot::line_plot("final field (PJRT)", &[("u", &ds)], 64, 12));
     println!("{}", metrics.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<(), String> {
+    use r2f2::server::{ServeOptions, Server};
+    let port: u16 = args.get_parse("port", 7272u16).map_err(|e| e.to_string())?;
+    let workers: usize = args
+        .get_parse("workers", coordinator::default_workers())
+        .map_err(|e| e.to_string())?
+        .max(1);
+    let queue_cap: usize = args.get_parse("queue-cap", 64usize).map_err(|e| e.to_string())?;
+    let cache_cap: usize = args.get_parse("cache-cap", 256usize).map_err(|e| e.to_string())?;
+    // `wait` below never returns; surface unknown-flag typos first.
+    args.finish().map_err(|e| e.to_string())?;
+    let server = Server::start(ServeOptions { port, workers, queue_cap, cache_cap })?;
+    println!("r2f2 serve: listening on http://{}", server.addr());
+    println!("  endpoints  POST /v1/run · GET /v1/scenarios · GET /healthz · GET /metrics");
+    println!("  pool       workers={workers} queue-cap={queue_cap} cache-cap={cache_cap}");
+    println!("  (foreground; stop with Ctrl-C)");
+    server.wait();
+    Ok(())
+}
+
+/// The mixed-scenario request set the load generator cycles through:
+/// every registry scenario, two backends, both quantization modes — small
+/// enough that a single request is milliseconds, repeated often enough
+/// that the cache must carry most of the traffic.
+fn bench_serve_bodies(smoke: bool) -> Vec<String> {
+    let (heat_steps, adv_steps, wave_steps, swe_steps) =
+        if smoke { (40, 50, 40, 5) } else { (200, 200, 120, 10) };
+    vec![
+        format!(
+            "{{\"app\": \"heat\", \"backend\": \"fixed:E5M10\", \
+             \"heat\": {{\"n\": 33, \"dt\": 0.000244140625, \"steps\": {heat_steps}}}}}"
+        ),
+        format!(
+            "{{\"app\": \"heat\", \"backend\": \"r2f2:<3,9,3>\", \
+             \"heat\": {{\"n\": 33, \"dt\": 0.000244140625, \"steps\": {heat_steps}}}}}"
+        ),
+        format!(
+            "{{\"app\": \"heat\", \"backend\": \"fixed:E5M10\", \"mode\": \"full\", \
+             \"heat\": {{\"n\": 33, \"dt\": 0.000244140625, \"steps\": {heat_steps}}}}}"
+        ),
+        format!(
+            "{{\"app\": \"advection\", \"backend\": \"fixed:E5M10\", \
+             \"advection\": {{\"n\": 64, \"steps\": {adv_steps}}}}}"
+        ),
+        format!(
+            "{{\"app\": \"wave\", \"backend\": \"fixed:E5M10\", \
+             \"wave\": {{\"n\": 17, \"steps\": {wave_steps}}}}}"
+        ),
+        format!(
+            "{{\"app\": \"swe\", \"backend\": \"r2f2:<3,8,4>\", \
+             \"swe\": {{\"steps\": {swe_steps}}}}}"
+        ),
+    ]
+}
+
+fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
+    use r2f2::bench_util::{fmt_ns, percentile};
+    use r2f2::server::{http, ServeOptions, Server};
+    use std::time::Instant;
+
+    let smoke = args.switch("smoke");
+    let clients: usize = args
+        .get_parse("clients", if smoke { 4usize } else { 8 })
+        .map_err(|e| e.to_string())?
+        .max(1);
+    let per_client: usize = args
+        .get_parse("requests", if smoke { 24usize } else { 120 })
+        .map_err(|e| e.to_string())?
+        .max(1);
+    let workers: usize = args
+        .get_parse("workers", coordinator::default_workers())
+        .map_err(|e| e.to_string())?
+        .max(1);
+    let cache_cap: usize = args.get_parse("cache-cap", 256usize).map_err(|e| e.to_string())?;
+    let out_path = args.get_or("out", "BENCH_serve.json");
+
+    let server = Server::start(ServeOptions {
+        port: 0,
+        workers,
+        queue_cap: 2 * clients + 8,
+        cache_cap,
+    })?;
+    let addr = server.addr();
+    let bodies = bench_serve_bodies(smoke);
+    let total_requests = clients * per_client;
+    println!(
+        "bench-serve: {clients} clients × {per_client} requests over {} distinct configs \
+         against {addr} ({workers} workers)",
+        bodies.len()
+    );
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let bodies = bodies.clone();
+            std::thread::spawn(move || {
+                let mut latencies: Vec<f64> = Vec::with_capacity(per_client);
+                let (mut hits, mut errors) = (0u64, 0u64);
+                for i in 0..per_client {
+                    let body = &bodies[(c + i) % bodies.len()];
+                    let t = Instant::now();
+                    match http::request(addr, "POST", "/v1/run", body.as_bytes()) {
+                        Ok(resp) if resp.status == 200 => {
+                            latencies.push(t.elapsed().as_nanos() as f64);
+                            if resp.header("x-r2f2-cache") == Some("hit") {
+                                hits += 1;
+                            }
+                        }
+                        _ => errors += 1,
+                    }
+                }
+                (latencies, hits, errors)
+            })
+        })
+        .collect();
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(total_requests);
+    let (mut hits, mut errors) = (0u64, 0u64);
+    for h in handles {
+        let (l, hh, e) = h.join().map_err(|_| "client thread panicked".to_string())?;
+        latencies.extend(l);
+        hits += hh;
+        errors += e;
+    }
+    let wall = t0.elapsed();
+
+    if latencies.is_empty() {
+        server.shutdown();
+        return Err(format!("no successful responses ({errors} errors)"));
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ok = latencies.len();
+
+    // Workers bump `serve.served` after writing the response, so a client
+    // can join before the last increment lands — drain briefly so the
+    // artifact's `served` matches what was actually answered.
+    let deadline = Instant::now() + std::time::Duration::from_secs(2);
+    while server.metrics_snapshot().counter("serve.served") < ok as u64
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let snapshot = server.metrics_snapshot();
+    let served = snapshot.counter("serve.served");
+    let rejected = snapshot.counter("serve.rejected");
+    let cache = server.cache_stats();
+    server.shutdown();
+    let throughput = ok as f64 / wall.as_secs_f64();
+    let p50 = percentile(&latencies, 50.0);
+    let p99 = percentile(&latencies, 99.0);
+    let hit_rate = hits as f64 / ok as f64;
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests ok / sent".to_string(), format!("{ok} / {total_requests}")]);
+    t.row(vec!["wall".to_string(), format!("{:.3} s", wall.as_secs_f64())]);
+    t.row(vec!["throughput".to_string(), format!("{throughput:.1} req/s")]);
+    t.row(vec!["latency p50".to_string(), fmt_ns(p50)]);
+    t.row(vec!["latency p99".to_string(), fmt_ns(p99)]);
+    t.row(vec!["cache hit rate".to_string(), report::pct(hit_rate)]);
+    let hme = format!("{}/{}/{}", cache.hits, cache.misses, cache.evictions);
+    t.row(vec!["cache h/m/evict".to_string(), hme]);
+    t.row(vec!["guard checks".to_string(), cache.guard_checks.to_string()]);
+    t.row(vec!["served (workers)".to_string(), served.to_string()]);
+    t.row(vec!["rejected (503)".to_string(), rejected.to_string()]);
+    t.row(vec!["client errors".to_string(), errors.to_string()]);
+    println!("{}", t.render());
+
+    // Machine-greppable summary row (the CI serve-smoke job tables this).
+    println!(
+        "SERVE | {clients}×{per_client} req, {workers} workers | {throughput:.1} req/s | \
+         p50 {} p99 {} | {} hits, {rejected} rejected |",
+        fmt_ns(p50),
+        fmt_ns(p99),
+        report::pct(hit_rate)
+    );
+
+    let json = format!(
+        "{{\n  \"schema\": \"r2f2-bench-serve/1\",\n  \"smoke\": {smoke},\n  \
+         \"clients\": {clients},\n  \"requests_per_client\": {per_client},\n  \
+         \"requests\": {total_requests},\n  \"distinct_configs\": {},\n  \
+         \"workers\": {workers},\n  \"wall_s\": {:.6},\n  \
+         \"throughput_rps\": {:.3},\n  \"p50_ns\": {:.3},\n  \"p99_ns\": {:.3},\n  \
+         \"cache_hit_rate\": {:.6},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \
+         \"cache_evictions\": {},\n  \"guard_checks\": {},\n  \"served\": {served},\n  \
+         \"rejected\": {rejected},\n  \"errors\": {errors}\n}}\n",
+        bodies.len(),
+        wall.as_secs_f64(),
+        throughput,
+        p50,
+        p99,
+        hit_rate,
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+        cache.guard_checks,
+    );
+    std::fs::write(&out_path, json).map_err(|e| format!("write {out_path}: {e}"))?;
+    println!("wrote {out_path}");
     Ok(())
 }

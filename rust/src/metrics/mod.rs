@@ -10,12 +10,50 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Retained percentile samples per timer. Count/mean/max stay exact
+/// forever; the sample window overwrites ring-style once full, so a
+/// long-lived process (the `r2f2 serve` workers are the first) holds a
+/// bounded, recent-biased window instead of growing per observation.
+const TIMER_SAMPLE_CAP: usize = 4096;
+
+/// One timer: exact aggregates + the capped percentile window.
+#[derive(Debug, Clone, Default)]
+struct Timer {
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+    samples: Vec<u64>,
+}
+
+impl Timer {
+    fn observe(&mut self, ns: u64) {
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+        if self.samples.len() < TIMER_SAMPLE_CAP {
+            self.samples.push(ns);
+        } else {
+            self.samples[(self.count - 1) as usize % TIMER_SAMPLE_CAP] = ns;
+        }
+    }
+
+    fn mean_ns(&self) -> f64 {
+        self.sum_ns as f64 / self.count as f64
+    }
+
+    fn sorted_samples(&self) -> Vec<f64> {
+        let mut sorted: Vec<f64> = self.samples.iter().map(|&x| x as f64).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted
+    }
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
-    /// Duration samples in nanoseconds, keyed by timer name.
-    timers: BTreeMap<String, Vec<u64>>,
+    /// Duration observations in nanoseconds, keyed by timer name.
+    timers: BTreeMap<String, Timer>,
 }
 
 /// A cloneable handle to a shared metrics registry.
@@ -43,7 +81,7 @@ impl Registry {
     /// Record one duration sample (nanoseconds).
     pub fn observe_ns(&self, name: &str, ns: u64) {
         let mut g = self.inner.lock().unwrap();
-        g.timers.entry(name.to_string()).or_default().push(ns);
+        g.timers.entry(name.to_string()).or_default().observe(ns);
     }
 
     /// Time a closure into the named timer.
@@ -62,62 +100,121 @@ impl Registry {
         self.inner.lock().unwrap().gauges.get(name).copied()
     }
 
-    /// (count, mean_ns, max_ns) summary of a timer.
+    /// (count, mean_ns, max_ns) summary of a timer. Exact regardless of
+    /// how many observations the percentile window has dropped.
     pub fn timer_summary(&self, name: &str) -> Option<(usize, f64, u64)> {
         let g = self.inner.lock().unwrap();
-        let v = g.timers.get(name)?;
-        if v.is_empty() {
+        let t = g.timers.get(name)?;
+        if t.count == 0 {
             return None;
         }
-        let sum: u64 = v.iter().sum();
-        Some((v.len(), sum as f64 / v.len() as f64, *v.iter().max().unwrap()))
+        Some((t.count as usize, t.mean_ns(), t.max_ns))
     }
 
-    /// Human-readable rendering (stable ordering for tests/logs).
+    /// Percentiles (nearest-rank, in nanoseconds) of a timer's retained
+    /// samples at the given fractions — `percentiles("t", &[0.5, 0.99])`
+    /// is (p50, p99). `None` if the timer has no samples. Sample order
+    /// never matters, so percentiles over a [`Registry::merge`] rollup are
+    /// invariant to merge order; past `TIMER_SAMPLE_CAP` observations the
+    /// window is recent-biased rather than complete.
+    pub fn percentiles(&self, name: &str, fracs: &[f64]) -> Option<Vec<f64>> {
+        let g = self.inner.lock().unwrap();
+        let t = g.timers.get(name)?;
+        if t.samples.is_empty() {
+            return None;
+        }
+        let sorted = t.sorted_samples();
+        Some(fracs.iter().map(|&p| crate::bench_util::percentile(&sorted, p * 100.0)).collect())
+    }
+
+    /// Fold another registry into this one: counters **sum**, gauges take
+    /// the other's value (**last write wins** — merge order is the write
+    /// order), timers **concatenate** their samples. This is how
+    /// per-worker registries roll up into one `/metrics` snapshot; counter
+    /// totals and timer percentiles are invariant to the merge order.
+    /// Merging a registry into itself (same shared handle) is a no-op.
+    pub fn merge(&self, other: &Registry) {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return;
+        }
+        let (counters, gauges, timers) = {
+            let o = other.inner.lock().unwrap();
+            (o.counters.clone(), o.gauges.clone(), o.timers.clone())
+        };
+        let mut g = self.inner.lock().unwrap();
+        for (k, v) in counters {
+            *g.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in gauges {
+            g.gauges.insert(k, v);
+        }
+        for (k, v) in timers {
+            let t = g.timers.entry(k).or_default();
+            t.count += v.count;
+            t.sum_ns += v.sum_ns;
+            t.max_ns = t.max_ns.max(v.max_ns);
+            // Concatenate the sample windows (each source is capped, so a
+            // snapshot's total is bounded by sources × TIMER_SAMPLE_CAP).
+            t.samples.extend(v.samples);
+        }
+    }
+
+    /// Human-readable rendering (stable ordering for tests/logs). Metric
+    /// names are `escape_debug`-ed so a name containing a newline cannot
+    /// forge extra lines.
     pub fn render(&self) -> String {
         let g = self.inner.lock().unwrap();
         let mut out = String::new();
         for (k, v) in &g.counters {
-            out.push_str(&format!("counter {k} = {v}\n"));
+            out.push_str(&format!("counter {} = {v}\n", k.escape_debug()));
         }
         for (k, v) in &g.gauges {
-            out.push_str(&format!("gauge   {k} = {v}\n"));
+            out.push_str(&format!("gauge   {} = {v}\n", k.escape_debug()));
         }
-        for (k, v) in &g.timers {
-            let sum: u64 = v.iter().sum();
-            let mean = sum as f64 / v.len() as f64;
+        for (k, t) in &g.timers {
             out.push_str(&format!(
-                "timer   {k}: n={} mean={:.0}ns total={:.3}ms\n",
-                v.len(),
-                mean,
-                sum as f64 / 1e6
+                "timer   {}: n={} mean={:.0}ns total={:.3}ms\n",
+                k.escape_debug(),
+                t.count,
+                t.mean_ns(),
+                t.sum_ns as f64 / 1e6
             ));
         }
         out
     }
 
-    /// JSON rendering (hand-rolled; no serde in this environment).
+    /// JSON rendering (hand-rolled; no serde in this environment). Names
+    /// go through [`crate::config::json_mini::escape`] — the same routine
+    /// the `config` parser is the dual of — so hostile names (quotes,
+    /// backslashes, control characters) still yield well-formed JSON.
+    /// Timers carry nearest-rank p50/p99 alongside count/mean.
     pub fn to_json(&self) -> String {
+        use crate::config::json_mini::escape;
         let g = self.inner.lock().unwrap();
         let mut parts = Vec::new();
         let counters: Vec<String> =
-            g.counters.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+            g.counters.iter().map(|(k, v)| format!("\"{}\": {v}", escape(k))).collect();
         parts.push(format!("\"counters\": {{{}}}", counters.join(", ")));
         let gauges: Vec<String> = g
             .gauges
             .iter()
-            .map(|(k, v)| format!("\"{k}\": {}", json_f64(*v)))
+            .map(|(k, v)| format!("\"{}\": {}", escape(k), json_f64(*v)))
             .collect();
         parts.push(format!("\"gauges\": {{{}}}", gauges.join(", ")));
         let timers: Vec<String> = g
             .timers
             .iter()
-            .map(|(k, v)| {
-                let sum: u64 = v.iter().sum();
+            .map(|(k, t)| {
+                let sorted = t.sorted_samples();
+                let p50 = crate::bench_util::percentile(&sorted, 50.0);
+                let p99 = crate::bench_util::percentile(&sorted, 99.0);
                 format!(
-                    "\"{k}\": {{\"count\": {}, \"mean_ns\": {}}}",
-                    v.len(),
-                    json_f64(sum as f64 / v.len() as f64)
+                    "\"{}\": {{\"count\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}}}",
+                    escape(k),
+                    t.count,
+                    json_f64(t.mean_ns()),
+                    json_f64(p50),
+                    json_f64(p99)
                 )
             })
             .collect();
@@ -205,6 +302,116 @@ mod tests {
         assert!(j.contains("\"a\": 1"));
         assert!(j.contains("\"b\": 2.5"));
         assert!(j.contains("\"t\""));
+    }
+
+    #[test]
+    fn hostile_names_roundtrip_through_json() {
+        // The PR-5 fix: names with quotes/backslashes/control characters
+        // used to be interpolated raw and yield malformed JSON. They must
+        // now parse back exactly through the crate's own parser.
+        let m = Registry::new();
+        m.inc("quo\"te", 1);
+        m.inc("back\\slash", 2);
+        m.set("new\nline", 2.5);
+        m.observe_ns("tab\tand\u{1}ctl", 10);
+        let parsed = crate::config::parse_json(&m.to_json()).expect("well-formed JSON");
+        let counters = parsed.get("counters").unwrap();
+        assert_eq!(counters.get("quo\"te").unwrap().as_f64(), Some(1.0));
+        assert_eq!(counters.get("back\\slash").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.get("gauges").unwrap().get("new\nline").unwrap().as_f64(), Some(2.5));
+        let t = parsed.get("timers").unwrap().get("tab\tand\u{1}ctl").unwrap();
+        assert_eq!(t.get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(t.get("p50_ns").unwrap().as_f64(), Some(10.0));
+        assert_eq!(t.get("p99_ns").unwrap().as_f64(), Some(10.0));
+        // render can no longer forge lines either.
+        assert_eq!(m.render().lines().count(), 4);
+    }
+
+    #[test]
+    fn percentiles_empty_one_sample_many() {
+        let m = Registry::new();
+        assert!(m.percentiles("t", &[0.5]).is_none(), "no samples → None");
+        m.observe_ns("t", 100);
+        assert_eq!(m.percentiles("t", &[0.0, 0.5, 0.99]).unwrap(), vec![100.0, 100.0, 100.0]);
+        for v in [300u64, 200, 500, 400] {
+            m.observe_ns("t", v);
+        }
+        // Sorted: [100, 200, 300, 400, 500] — nearest-rank.
+        assert_eq!(m.percentiles("t", &[0.5, 0.99]).unwrap(), vec![300.0, 500.0]);
+    }
+
+    #[test]
+    fn merge_sums_counters_overwrites_gauges_concats_timers() {
+        let a = Registry::new();
+        a.inc("n", 3);
+        a.set("g", 1.0);
+        a.observe_ns("t", 100);
+        let b = Registry::new();
+        b.inc("n", 4);
+        b.inc("only_b", 1);
+        b.set("g", 2.0);
+        b.observe_ns("t", 300);
+        a.merge(&b);
+        assert_eq!(a.counter("n"), 7);
+        assert_eq!(a.counter("only_b"), 1);
+        assert_eq!(a.gauge("g"), Some(2.0), "gauges are last-write-wins");
+        let (count, mean, max) = a.timer_summary("t").unwrap();
+        assert_eq!((count, mean, max), (2, 200.0, 300));
+    }
+
+    #[test]
+    fn merge_order_invariance_for_counters_and_percentiles() {
+        let mk = |vals: &[u64]| {
+            let r = Registry::new();
+            r.inc("n", vals.len() as u64);
+            for &v in vals {
+                r.observe_ns("t", v);
+            }
+            r
+        };
+        let a = mk(&[500, 100]);
+        let b = mk(&[300, 200, 400]);
+        let ab = Registry::new();
+        ab.merge(&a);
+        ab.merge(&b);
+        let ba = Registry::new();
+        ba.merge(&b);
+        ba.merge(&a);
+        assert_eq!(ab.counter("n"), ba.counter("n"));
+        assert_eq!(
+            ab.percentiles("t", &[0.5, 0.9, 0.99]),
+            ba.percentiles("t", &[0.5, 0.9, 0.99])
+        );
+        assert_eq!(ab.timer_summary("t"), ba.timer_summary("t"));
+    }
+
+    #[test]
+    fn timer_sample_window_is_bounded_but_aggregates_stay_exact() {
+        let m = Registry::new();
+        let n = (TIMER_SAMPLE_CAP as u64) * 2 + 7;
+        for i in 0..n {
+            m.observe_ns("t", i);
+        }
+        let (count, mean, max) = m.timer_summary("t").unwrap();
+        assert_eq!(count as u64, n, "count is exact past the window cap");
+        assert_eq!(max, n - 1);
+        assert!((mean - (n - 1) as f64 / 2.0).abs() < 1e-9, "mean is exact");
+        // The percentile window stays capped and recent-biased: after 2n
+        // observations of an increasing series, the retained minimum is
+        // well above the series start.
+        let p = m.percentiles("t", &[0.0]).unwrap();
+        assert!(p[0] >= (n - 2 * TIMER_SAMPLE_CAP as u64) as f64);
+        let g = m.inner.lock().unwrap();
+        assert_eq!(g.timers.get("t").unwrap().samples.len(), TIMER_SAMPLE_CAP);
+    }
+
+    #[test]
+    fn merge_with_self_is_noop() {
+        let m = Registry::new();
+        m.inc("n", 5);
+        let same_handle = m.clone();
+        m.merge(&same_handle);
+        assert_eq!(m.counter("n"), 5, "self-merge must not double counters");
     }
 
     #[test]

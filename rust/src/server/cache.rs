@@ -1,0 +1,350 @@
+//! Content-addressed result cache for the simulation service
+//! (DESIGN.md §12).
+//!
+//! Why caching is *sound* here, not merely fast: every run the server
+//! executes is deterministic and bit-reproducible by construction — the
+//! §8/§9/§11 contracts pin the scalar ≡ carrier ≡ packed operation streams,
+//! and `coordinator::job::run_experiment` takes no RNG, no wall clock and
+//! no thread-count-dependent path. Two requests with the same
+//! [`ExperimentConfig`] therefore have byte-identical responses, so a
+//! cached response is indistinguishable from a fresh run.
+//!
+//! The address is a canonical serialization of the parsed config (not of
+//! the request text — two JSON bodies that differ only in key order or
+//! whitespace map to the same entry). The serialization is the `Debug`
+//! derive of `ExperimentConfig`: it is deterministic within a process, and
+//! because derives track the struct definition, a future config field can
+//! never be silently dropped from the address (the classic stale-cache
+//! bug a hand-rolled serializer invites). An FNV-1a/64 digest of that
+//! string is the externally visible address (`x-r2f2-key`); internally the
+//! full string is the map key, so hash collisions cannot alias entries.
+//!
+//! **Determinism guard**: in debug builds a sampled fraction of cache hits
+//! re-runs the computation and asserts the recomputed response is
+//! byte-identical to the cached one — the serving layer's analogue of the
+//! engine bit-identity suites. `cargo test` exercises it on every hit-heavy
+//! suite; release servers skip it.
+
+use crate::config::ExperimentConfig;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Re-verify every `GUARD_SAMPLE`-th hit per entry in debug builds.
+const GUARD_SAMPLE: u64 = 4;
+
+/// Total bytes of cached response bodies across all entries. The entry
+/// cap alone is not a memory bound — serving limits admit multi-MB
+/// bodies, and an allocation failure aborts the process.
+const MAX_TOTAL_BYTES: usize = 256 * 1024 * 1024;
+
+/// Bodies above this are served but never cached (one giant response must
+/// not evict the whole working set).
+const MAX_ENTRY_BYTES: usize = 32 * 1024 * 1024;
+
+/// Canonical serialization of a config — the content being addressed.
+pub fn canonical_config(cfg: &ExperimentConfig) -> String {
+    format!("{cfg:?}")
+}
+
+/// FNV-1a 64-bit digest (std has no stable, seedable, portable hasher).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// `(canonical serialization, 16-hex-digit content address)` of a config.
+pub fn content_key(cfg: &ExperimentConfig) -> (String, String) {
+    let canonical = canonical_config(cfg);
+    let hex = format!("{:016x}", fnv1a64(canonical.as_bytes()));
+    (canonical, hex)
+}
+
+/// Cache effectiveness counters (monotonic since construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Responses too large to cache (served uncached).
+    pub uncacheable: u64,
+    /// Determinism-guard re-runs performed (debug builds only).
+    pub guard_checks: u64,
+}
+
+struct Entry {
+    /// Shared so a hit hands out a pointer clone, never an O(body) copy
+    /// under the cache lock.
+    value: Arc<String>,
+    last_used: u64,
+    hits: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    /// Sum of `value` lengths across entries (the byte bound).
+    total_bytes: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// An LRU-bounded map from canonical config to cached response body,
+/// bounded by entry count and by total body bytes (whichever bites
+/// first); bodies above `MAX_ENTRY_BYTES` are served uncached.
+pub struct ResultCache {
+    inner: Mutex<Inner>,
+    cap: usize,
+    max_total_bytes: usize,
+    max_entry_bytes: usize,
+}
+
+impl ResultCache {
+    /// Cache holding at most `cap` (≥ 1) entries and `MAX_TOTAL_BYTES`
+    /// (256 MB) of bodies, whichever bound bites first.
+    pub fn new(cap: usize) -> ResultCache {
+        Self::with_byte_caps(cap, MAX_TOTAL_BYTES, MAX_ENTRY_BYTES)
+    }
+
+    /// [`ResultCache::new`] with explicit byte bounds (exposed for tests
+    /// and non-default deployments).
+    pub fn with_byte_caps(
+        cap: usize,
+        max_total_bytes: usize,
+        max_entry_bytes: usize,
+    ) -> ResultCache {
+        ResultCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                total_bytes: 0,
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            cap: cap.max(1),
+            max_total_bytes: max_total_bytes.max(1),
+            max_entry_bytes: max_entry_bytes.max(1),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of cached response bodies currently held.
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    /// Return the cached response for `canonical`, computing and inserting
+    /// it on a miss. The boolean is `true` on a hit.
+    ///
+    /// `compute` runs **outside** the lock, so one slow simulation never
+    /// serializes the other workers; if two workers race the same miss,
+    /// both compute (bit-identical results by the determinism contract)
+    /// and the first insert wins. On a sampled hit in debug builds the
+    /// determinism guard re-runs `compute` and asserts byte-identity.
+    /// Bodies above `MAX_ENTRY_BYTES` are served but not cached.
+    pub fn get_or_insert_with<F: FnOnce() -> String>(
+        &self,
+        canonical: &str,
+        compute: F,
+    ) -> (Arc<String>, bool) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            let found = g.map.get_mut(canonical).map(|e| {
+                e.last_used = tick;
+                e.hits += 1;
+                (e.value.clone(), e.hits)
+            });
+            if let Some((value, hits)) = found {
+                g.stats.hits += 1;
+                let guard = cfg!(debug_assertions) && hits % GUARD_SAMPLE == 1;
+                if guard {
+                    g.stats.guard_checks += 1;
+                }
+                drop(g);
+                if guard {
+                    let recomputed = compute();
+                    assert_eq!(
+                        recomputed.as_str(),
+                        value.as_str(),
+                        "determinism guard: re-run of a cached config diverged \
+                         (the bit-reproducibility contract is broken)"
+                    );
+                }
+                return (value, true);
+            }
+        }
+
+        let value = Arc::new(compute());
+        let bytes = value.len();
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        g.stats.misses += 1;
+        if bytes > self.max_entry_bytes {
+            g.stats.uncacheable += 1;
+            return (value, false);
+        }
+        if !g.map.contains_key(canonical) {
+            // Evict LRU entries until both the entry and byte bounds hold.
+            while !g.map.is_empty()
+                && (g.map.len() >= self.cap || g.total_bytes + bytes > self.max_total_bytes)
+            {
+                let lru = g.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
+                match lru {
+                    Some(k) => {
+                        if let Some(e) = g.map.remove(&k) {
+                            g.total_bytes -= e.value.len();
+                        }
+                        g.stats.evictions += 1;
+                    }
+                    None => break,
+                }
+            }
+            g.total_bytes += bytes;
+            g.map.insert(
+                canonical.to_string(),
+                Entry { value: value.clone(), last_used: tick, hits: 0 },
+            );
+        }
+        (value, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn content_key_is_stable_and_field_sensitive() {
+        let a = ExperimentConfig::default();
+        let mut b = ExperimentConfig::default();
+        assert_eq!(content_key(&a), content_key(&b));
+        b.heat.steps += 1;
+        assert_ne!(content_key(&a).0, content_key(&b).0);
+        assert_eq!(content_key(&a).1.len(), 16);
+    }
+
+    #[test]
+    fn fnv_matches_known_vectors() {
+        // Standard FNV-1a/64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hit_returns_cached_value_without_recompute() {
+        let c = ResultCache::new(8);
+        let calls = AtomicU64::new(0);
+        let f = || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            "value".to_string()
+        };
+        let (v, hit) = c.get_or_insert_with("k", f);
+        assert_eq!((v.as_str(), hit), ("value", false));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        // Hit 1 may be guard-sampled (debug); hit 2 never is, so the call
+        // count must not move across it in either profile.
+        let (_, hit) = c.get_or_insert_with("k", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            "value".to_string()
+        });
+        assert!(hit);
+        let before = calls.load(Ordering::SeqCst);
+        let (v, hit) = c.get_or_insert_with("k", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            "value".to_string()
+        });
+        assert!(hit);
+        assert_eq!(v.as_str(), "value");
+        assert_eq!(calls.load(Ordering::SeqCst), before, "hit 2 is never guard-sampled");
+        assert_eq!(c.stats().hits, 2);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn determinism_guard_samples_hits_and_catches_divergence() {
+        let c = ResultCache::new(8);
+        let (_, hit) = c.get_or_insert_with("k", || "v".to_string());
+        assert!(!hit);
+        // First hit is sampled: a deterministic compute passes...
+        let (_, hit) = c.get_or_insert_with("k", || "v".to_string());
+        assert!(hit);
+        assert_eq!(c.stats().guard_checks, 1);
+        // ...and a diverging compute on the next sampled hit panics.
+        for _ in 0..GUARD_SAMPLE - 1 {
+            let _ = c.get_or_insert_with("k", || "v".to_string());
+        }
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.get_or_insert_with("k", || "DIVERGED".to_string())
+        }));
+        assert!(r.is_err(), "guard must catch a non-reproducible run");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = ResultCache::new(2);
+        let _ = c.get_or_insert_with("a", || "A".to_string());
+        let _ = c.get_or_insert_with("b", || "B".to_string());
+        // Touch `a` so `b` is the LRU entry.
+        let _ = c.get_or_insert_with("a", || "A".to_string());
+        let _ = c.get_or_insert_with("c", || "C".to_string());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        // `a` survives (hit), `b` was evicted (recomputes).
+        let (_, hit_a) = c.get_or_insert_with("a", || "A".to_string());
+        assert!(hit_a);
+        let (_, hit_b) = c.get_or_insert_with("b", || "B".to_string());
+        assert!(!hit_b);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_alias() {
+        let c = ResultCache::new(8);
+        let (va, _) = c.get_or_insert_with("a", || "A".to_string());
+        let (vb, _) = c.get_or_insert_with("b", || "B".to_string());
+        assert_eq!((va.as_str(), vb.as_str()), ("A", "B"));
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_oversized_bodies_bypass_the_cache() {
+        // 100-byte total bound, 40-byte per-entry bound, generous entry cap.
+        let c = ResultCache::with_byte_caps(64, 100, 40);
+        let body30 = "x".repeat(30);
+        let (_, _) = c.get_or_insert_with("a", || body30.clone());
+        let (_, _) = c.get_or_insert_with("b", || body30.clone());
+        let (_, _) = c.get_or_insert_with("c", || body30.clone());
+        assert_eq!(c.total_bytes(), 90);
+        // A 4th 30-byte entry exceeds 100 total → the LRU entry goes.
+        let (_, _) = c.get_or_insert_with("d", || body30.clone());
+        assert_eq!(c.total_bytes(), 90);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+        let (_, hit_a) = c.get_or_insert_with("a", || body30.clone());
+        assert!(!hit_a, "a was the LRU entry and must have been evicted");
+
+        // An oversized body is served but never stored.
+        let big = "y".repeat(41);
+        let (v, hit) = c.get_or_insert_with("huge", || big.clone());
+        assert_eq!((v.len(), hit), (41, false));
+        assert_eq!(c.stats().uncacheable, 1);
+        let (_, hit) = c.get_or_insert_with("huge", || big.clone());
+        assert!(!hit, "oversized bodies recompute every time");
+    }
+}

@@ -1,0 +1,291 @@
+//! Minimal HTTP/1.1 support for the serving subsystem (no hyper/axum in
+//! this environment — DESIGN.md §12).
+//!
+//! Scope: exactly what `r2f2 serve` and its loopback load generator need.
+//! One request per connection (`Connection: close` on every response),
+//! `Content-Length`-framed bodies only (no chunked transfer), header names
+//! normalized to lowercase. Both directions live here — [`read_request`] /
+//! [`write_response`] for the server workers, [`request`] /
+//! [`read_response`] for the in-process clients (`bench-serve`,
+//! `tests/serve_loopback.rs`) — so the parser that the tests drive is the
+//! same code the server trusts.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Reject requests whose header block exceeds this many bytes.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Reject requests whose declared body exceeds this many bytes.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// A parsed HTTP request (server side).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Request target with any `?query` suffix stripped.
+    pub path: String,
+    /// Header names lowercased, values trimmed, in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A parsed HTTP response (client side).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (lossy — bodies here are always JSON text).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Standard reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn read_crlf_line<R: BufRead>(r: &mut R, budget: &mut usize) -> Result<String, String> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).map_err(|e| format!("read: {e}"))?;
+    if n == 0 {
+        return Err("connection closed mid-request".into());
+    }
+    *budget = budget.checked_sub(n).ok_or("header block too large")?;
+    Ok(line.trim_end_matches(['\r', '\n']).to_string())
+}
+
+/// Parse one request: request line, headers, `Content-Length` body.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, String> {
+    // Belt and braces against hostile header blocks: the per-line budget
+    // gives precise errors, and the `take` wrapper hard-bounds how much a
+    // single line with no `\n` in it can ever buffer into memory.
+    let mut budget = MAX_HEADER_BYTES;
+    let mut head = r.by_ref().take(MAX_HEADER_BYTES as u64 + 2);
+    let start = read_crlf_line(&mut head, &mut budget)?;
+    let parts: Vec<&str> = start.split_whitespace().collect();
+    if parts.len() != 3 || !parts[2].starts_with("HTTP/1.") {
+        return Err(format!("malformed request line `{start}`"));
+    }
+    let method = parts[0].to_string();
+    let path = parts[1].split('?').next().unwrap_or("").to_string();
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_crlf_line(&mut head, &mut budget)?;
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line.split_once(':').ok_or_else(|| format!("malformed header `{line}`"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let len: usize = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0,
+        Some((_, v)) => v.parse().map_err(|_| format!("bad content-length `{v}`"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(format!("body of {len} bytes exceeds the {MAX_BODY_BYTES} limit"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| format!("body read: {e}"))?;
+    Ok(Request { method, path, headers, body })
+}
+
+/// Write a complete response (`Content-Length` framed, `Connection: close`).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\n\
+         content-length: {}\r\nconnection: close\r\n",
+        reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Parse one response (client side). With `Connection: close` framing the
+/// body is still read by `Content-Length` so short reads fail loudly.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, String> {
+    let mut budget = MAX_HEADER_BYTES;
+    let mut head = r.by_ref().take(MAX_HEADER_BYTES as u64 + 2);
+    let start = read_crlf_line(&mut head, &mut budget)?;
+    let mut parts = start.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("malformed status line `{start}`"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("malformed status line `{start}`"));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_crlf_line(&mut head, &mut budget)?;
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line.split_once(':').ok_or_else(|| format!("malformed header `{line}`"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let mut body = Vec::new();
+    match headers.iter().find(|(k, _)| k == "content-length") {
+        Some((_, v)) => {
+            let len: usize = v.parse().map_err(|_| format!("bad content-length `{v}`"))?;
+            body = vec![0u8; len];
+            r.read_exact(&mut body).map_err(|e| format!("body read: {e}"))?;
+        }
+        None => {
+            r.read_to_end(&mut body).map_err(|e| format!("body read: {e}"))?;
+        }
+    }
+    Ok(Response { status, headers, body })
+}
+
+/// One-shot client: connect, send `method path` with `body`, parse the
+/// response. Used by `bench-serve` and the loopback tests.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<Response, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| format!("timeout: {e}"))?;
+    let mut w = &stream;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    w.write_all(head.as_bytes()).map_err(|e| format!("send: {e}"))?;
+    w.write_all(body).map_err(|e| format!("send: {e}"))?;
+    w.flush().map_err(|e| format!("send: {e}"))?;
+    let mut r = BufReader::new(&stream);
+    read_response(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_with_body_parses() {
+        let raw = b"POST /v1/run?x=1 HTTP/1.1\r\nHost: localhost\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/run");
+        assert_eq!(req.header("HOST"), Some("localhost"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn request_without_body_is_empty() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            &b"GET /x SMTP/1.0\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\ncontent-length: nan\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nshort"[..],
+            &b""[..],
+        ] {
+            assert!(read_request(&mut Cursor::new(raw)).is_err(), "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_bodies_rejected() {
+        let raw = format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn oversized_header_blocks_rejected_even_without_newlines() {
+        // A single header "line" with no terminator must hit the size
+        // bound, not buffer without limit.
+        let mut raw = b"GET /x HTTP/1.1\r\nx: ".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(MAX_HEADER_BYTES + 64));
+        assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
+        // And many well-formed lines overflow the same budget.
+        let mut raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..2048 {
+            raw.extend(format!("h{i}: {}\r\n", "v".repeat(64)).into_bytes());
+        }
+        raw.extend(b"\r\n");
+        assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_writer_and_parser() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, &[("x-r2f2-cache", "hit")], "application/json", b"{}")
+            .unwrap();
+        let resp = read_response(&mut Cursor::new(&buf[..])).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("X-R2F2-Cache"), Some("hit"));
+        assert_eq!(resp.body, b"{}");
+        assert_eq!(resp.text(), "{}");
+    }
+
+    #[test]
+    fn error_statuses_carry_reasons() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 503, &[], "application/json", b"{\"error\": \"full\"}").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert_eq!(reason(404), "Not Found");
+        assert_eq!(reason(405), "Method Not Allowed");
+    }
+}

@@ -1,0 +1,507 @@
+//! The simulation service: `r2f2 serve` (DESIGN.md §12).
+//!
+//! The fourth architectural layer — **serve**, atop arith (§3), solve
+//! (§11) and orchestrate (coordinator). Everything below this layer is a
+//! one-shot invocation; this module gives the registry, the engines and
+//! the adaptive scheduler a long-lived surface shaped like the workload
+//! numerical-precision experimentation actually is: repeated parameterized
+//! queries over the same solvers.
+//!
+//! Std-only: a `TcpListener` acceptor thread, the persistent
+//! [`pool::WorkerPool`] (bounded MPMC queue — a full queue rejects with
+//! `503`, which is the whole backpressure story), and the
+//! [`cache::ResultCache`] (sound because runs are bit-reproducible; see
+//! that module's docs for why, and for the debug determinism guard).
+//!
+//! Endpoints:
+//!
+//! | route | behavior |
+//! | --- | --- |
+//! | `POST /v1/run` | JSON body → [`ExperimentConfig`] (same fields as the TOML config) → cached [`run_experiment`] → deterministic outcome JSON. Headers: `x-r2f2-cache: hit\|miss`, `x-r2f2-key: <fnv64>` |
+//! | `GET /v1/scenarios` | the [`SCENARIOS`] registry listing |
+//! | `GET /healthz` | liveness probe |
+//! | `GET /metrics` | merged per-worker [`Registry`] rollup + queue/cache gauges |
+//!
+//! The response body of `/v1/run` deliberately excludes wall-clock time —
+//! it is the *deterministic* payload, byte-identical across hits, misses
+//! and re-runs, which is what makes both the cache and the loopback
+//! bit-identity suite (`rust/tests/serve_loopback.rs`) possible. Timing
+//! lives in `/metrics` (`serve.handle_ns` percentiles) instead.
+
+pub mod cache;
+pub mod http;
+pub mod pool;
+
+use crate::config::json_mini::escape;
+use crate::config::{parse_json, ExperimentConfig};
+use crate::coordinator::job::Outcome;
+use crate::coordinator::{self, run_experiment};
+use crate::metrics::Registry;
+use crate::pde::scenario::SCENARIOS;
+use crate::pde::QuantMode;
+use cache::ResultCache;
+use pool::{Bounded, WorkerPool};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// At most this many concurrent detached 503-responder threads; beyond it
+/// rejected connections are dropped unanswered (still a rejection, and the
+/// acceptor stays alive under any flood).
+const MAX_REJECT_RESPONDERS: usize = 64;
+
+/// Server configuration (the `r2f2 serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// TCP port on 127.0.0.1 (0 = ephemeral, reported by [`Server::addr`]).
+    pub port: u16,
+    /// Worker threads ([`coordinator::default_workers`] by default, so the
+    /// `R2F2_WORKERS` env override applies).
+    pub workers: usize,
+    /// Bounded job-queue capacity; a full queue rejects with `503`.
+    pub queue_cap: usize,
+    /// Result-cache capacity (entries, LRU-evicted).
+    pub cache_cap: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            port: 7272,
+            workers: coordinator::default_workers(),
+            queue_cap: 64,
+            cache_cap: 256,
+        }
+    }
+}
+
+/// State shared by the acceptor, the workers and the metrics rollup.
+struct Shared {
+    cache: ResultCache,
+    queue: Arc<Bounded<TcpStream>>,
+    /// Acceptor-side counters (`serve.accepted` / `serve.rejected`).
+    acceptor_reg: Registry,
+    /// Every worker's private registry (handles — cloneable), so the
+    /// `/metrics` route can roll up the whole pool, not just the worker
+    /// that happens to serve the request.
+    worker_regs: Vec<Registry>,
+}
+
+/// The full metrics rollup over shared state: acceptor counters + every
+/// worker registry + queue/cache gauges. Both the `/metrics` route and
+/// [`Server::metrics_snapshot`] are exactly this.
+fn rollup(shared: &Shared) -> Registry {
+    let snap = Registry::new();
+    snap.merge(&shared.acceptor_reg);
+    for reg in &shared.worker_regs {
+        snap.merge(reg);
+    }
+    let st = shared.cache.stats();
+    snap.inc("serve.cache.hits", st.hits);
+    snap.inc("serve.cache.misses", st.misses);
+    snap.inc("serve.cache.evictions", st.evictions);
+    snap.inc("serve.cache.guard_checks", st.guard_checks);
+    snap.set("serve.queue.depth", shared.queue.len() as f64);
+    snap.set("serve.cache.entries", shared.cache.len() as f64);
+    snap
+}
+
+/// A running simulation service. Dropping (or [`Server::shutdown`]) stops
+/// the acceptor, drains admitted connections and joins every thread.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    pool: Option<WorkerPool<TcpStream>>,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind, spawn the worker pool and the acceptor, return immediately.
+    pub fn start(opts: ServeOptions) -> Result<Server, String> {
+        let listener = TcpListener::bind(("127.0.0.1", opts.port))
+            .map_err(|e| format!("bind 127.0.0.1:{}: {e}", opts.port))?;
+        let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+
+        let queue = Arc::new(Bounded::new(opts.queue_cap));
+        let worker_regs: Vec<Registry> =
+            (0..opts.workers.max(1)).map(|_| Registry::new()).collect();
+        let shared = Arc::new(Shared {
+            cache: ResultCache::new(opts.cache_cap),
+            queue: queue.clone(),
+            acceptor_reg: Registry::new(),
+            worker_regs: worker_regs.clone(),
+        });
+
+        let pool = {
+            let shared = shared.clone();
+            let handler = move |stream: TcpStream, reg: &Registry| {
+                handle_connection(stream, &shared, reg);
+            };
+            WorkerPool::with_registries(queue.clone(), worker_regs, handler)
+        };
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let stop = stop.clone();
+            let shared = shared.clone();
+            let responders = Arc::new(AtomicUsize::new(0));
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => {
+                            // Persistent accept errors (fd exhaustion)
+                            // must back off, not busy-spin a core.
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    shared.acceptor_reg.inc("serve.accepted", 1);
+                    if let Err(stream) = shared.queue.try_push(stream) {
+                        // Backpressure: reject with 503. The drain + write
+                        // happen on a short-lived detached thread so a slow
+                        // rejected client can never stall the accept loop —
+                        // stalling it under overload would make the server
+                        // reject work the draining queue could admit. The
+                        // responders are bounded and spawn failure is
+                        // non-fatal (a flood must not kill the acceptor);
+                        // past the bound the connection is dropped, which
+                        // is itself an unambiguous rejection.
+                        shared.acceptor_reg.inc("serve.rejected", 1);
+                        if responders.fetch_add(1, Ordering::SeqCst) < MAX_REJECT_RESPONDERS {
+                            let done = responders.clone();
+                            let spawned = std::thread::Builder::new()
+                                .name("r2f2-reject".into())
+                                .spawn(move || {
+                                    reject_with_503(stream);
+                                    done.fetch_sub(1, Ordering::SeqCst);
+                                });
+                            if spawned.is_err() {
+                                responders.fetch_sub(1, Ordering::SeqCst);
+                                shared.acceptor_reg.inc("serve.rejected_dropped", 1);
+                            }
+                        } else {
+                            responders.fetch_sub(1, Ordering::SeqCst);
+                            shared.acceptor_reg.inc("serve.rejected_dropped", 1);
+                        }
+                    }
+                }
+                // Listener drops here: the port is released before
+                // shutdown() returns.
+            })
+        };
+
+        Ok(Server { addr, stop, acceptor: Some(acceptor), pool: Some(pool), shared })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Cache effectiveness counters.
+    pub fn cache_stats(&self) -> cache::CacheStats {
+        self.shared.cache.stats()
+    }
+
+    /// Merged metrics rollup: acceptor counters + every worker registry
+    /// (via [`Registry::merge`]) + queue/cache gauges. Identical to what
+    /// `GET /metrics` serves.
+    pub fn metrics_snapshot(&self) -> Registry {
+        rollup(&self.shared)
+    }
+
+    /// Block on the acceptor thread — the `r2f2 serve` foreground mode
+    /// (runs until the process is killed).
+    pub fn wait(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.shutdown();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain admitted connections, join
+    /// the acceptor and every worker. Returning means no server thread is
+    /// left and the port is released.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() so the acceptor observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.shutdown();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request handling
+// ---------------------------------------------------------------------------
+
+fn respond(stream: &mut TcpStream, status: u16, extra: &[(&str, &str)], body: &str) {
+    let _ = http::write_response(stream, status, extra, "application/json", body.as_bytes());
+}
+
+/// Rejection path: drain the request (bounded by the parser's size limits,
+/// short timeouts), then answer 503. Draining first matters — closing a
+/// socket that still has unread received bytes sends RST, which would tear
+/// the 503 out of the client's receive buffer.
+fn reject_with_503(stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut reader = BufReader::new(stream);
+    let parsed = http::read_request(&mut reader);
+    let mut stream = reader.into_inner();
+    if parsed.is_err() {
+        // Mid-stream parse failure leaves unread bytes; see drain_best_effort.
+        drain_best_effort(&stream);
+    }
+    let _ = http::write_response(
+        &mut stream,
+        503,
+        &[("retry-after", "1")],
+        "application/json",
+        b"{\"error\": \"job queue full\"}",
+    );
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) {
+    respond(stream, status, &[], &format!("{{\"error\": \"{}\"}}", escape(msg)));
+}
+
+/// Best-effort drain of unread request bytes before an error response.
+/// Only needed when request parsing failed mid-stream: closing a socket
+/// with unread received bytes sends RST, which can tear the error response
+/// out of the client's receive buffer. Bounded in both bytes and time.
+fn drain_best_effort(stream: &TcpStream) {
+    use std::io::Read;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut sink = [0u8; 4096];
+    let mut total = 0usize;
+    let mut s = stream;
+    while total < 256 * 1024 {
+        match s.read(&mut sink) {
+            Ok(0) => break,
+            Ok(n) => total += n,
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared, reg: &Registry) {
+    // Connections are admitted before any bytes are read (the acceptor
+    // must stay non-blocking), so a client that connects and sends nothing
+    // holds a worker for this read window — keep it short. A full fix is
+    // a dedicated reader stage; known limitation, documented in
+    // DESIGN.md §12.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let mut reader = BufReader::new(stream);
+    let req = match http::read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            reg.inc("serve.http.400", 1);
+            let mut stream = reader.into_inner();
+            drain_best_effort(&stream);
+            respond_error(&mut stream, 400, &e);
+            return;
+        }
+    };
+    let mut stream = reader.into_inner();
+    reg.inc("serve.requests", 1);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond(
+            &mut stream,
+            200,
+            &[],
+            &format!("{{\"status\": \"ok\", \"scenarios\": {}}}", SCENARIOS.len()),
+        ),
+        ("GET", "/v1/scenarios") => respond(&mut stream, 200, &[], &scenarios_json()),
+        ("GET", "/metrics") => respond(&mut stream, 200, &[], &rollup(shared).to_json()),
+        ("POST", "/v1/run") => handle_run(&req.body, &mut stream, shared, reg),
+        (_, "/healthz" | "/v1/scenarios" | "/metrics") => {
+            reg.inc("serve.http.405", 1);
+            respond_error(&mut stream, 405, "use GET");
+        }
+        (_, "/v1/run") => {
+            reg.inc("serve.http.405", 1);
+            respond_error(&mut stream, 405, "use POST");
+        }
+        (_, path) => {
+            reg.inc("serve.http.404", 1);
+            respond_error(&mut stream, 404, &format!("no route {path}"));
+        }
+    }
+}
+
+fn handle_run(body: &[u8], stream: &mut TcpStream, shared: &Shared, reg: &Registry) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => {
+            reg.inc("serve.http.400", 1);
+            return respond_error(stream, 400, "body is not UTF-8");
+        }
+    };
+    let json = match parse_json(text) {
+        Ok(j) => j,
+        Err(e) => {
+            reg.inc("serve.http.400", 1);
+            return respond_error(stream, 400, &format!("bad JSON: {e}"));
+        }
+    };
+    let cfg = match ExperimentConfig::from_json(&json) {
+        Ok(c) => c,
+        Err(e) => {
+            reg.inc("serve.http.400", 1);
+            return respond_error(stream, 400, &format!("bad config: {e}"));
+        }
+    };
+    let (canonical, key) = cache::content_key(&cfg);
+    let (value, hit) =
+        shared.cache.get_or_insert_with(&canonical, || outcome_json(&run_experiment(&cfg, reg)));
+    reg.inc(if hit { "serve.run.hits" } else { "serve.run.misses" }, 1);
+    let cache_header = if hit { "hit" } else { "miss" };
+    let headers = [("x-r2f2-cache", cache_header), ("x-r2f2-key", key.as_str())];
+    respond(stream, 200, &headers, value.as_str());
+}
+
+// ---------------------------------------------------------------------------
+// JSON shaping
+// ---------------------------------------------------------------------------
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The deterministic response body for one outcome. Wall-clock time is
+/// deliberately excluded: everything here is bit-reproducible, which is
+/// the property the cache (and its determinism guard) relies on.
+pub fn outcome_json(o: &Outcome) -> String {
+    let mode = match o.mode {
+        QuantMode::MulOnly => "mul-only",
+        QuantMode::Full => "full",
+    };
+    let adjustments = match o.adjustments {
+        Some((w, n)) => format!("{{\"widen\": {w}, \"narrow\": {n}}}"),
+        None => "null".to_string(),
+    };
+    let range_events = match o.range_events {
+        Some((of, uf)) => format!("{{\"overflows\": {of}, \"underflows\": {uf}}}"),
+        None => "null".to_string(),
+    };
+    let field: Vec<String> = o.field.iter().map(|&v| json_f64(v)).collect();
+    format!(
+        "{{\"title\": \"{}\", \"app\": \"{}\", \"backend\": \"{}\", \"mode\": \"{mode}\", \
+         \"rel_err_vs_f64\": {}, \"muls\": {}, \"adjustments\": {adjustments}, \
+         \"range_events\": {range_events}, \"n\": {}, \"field\": [{}]}}",
+        escape(&o.title),
+        escape(&o.app),
+        escape(&o.backend),
+        json_f64(o.rel_err_vs_f64),
+        o.muls,
+        o.field.len(),
+        field.join(", ")
+    )
+}
+
+/// The `/v1/scenarios` body: the registry, one object per entry.
+pub fn scenarios_json() -> String {
+    let items: Vec<String> = SCENARIOS
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"name\": \"{}\", \"physics\": \"{}\", \"stress\": \"{}\", \
+                 \"wide_format\": \"{}\", \"expect_narrow\": {}}}",
+                escape(s.name),
+                escape(s.physics),
+                escape(s.stress),
+                s.wide_format,
+                s.expect_narrow
+            )
+        })
+        .collect();
+    format!("{{\"scenarios\": [{}]}}", items.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_backend;
+    use crate::pde::init::HeatInit;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = "heat".into();
+        c.backend = parse_backend("fixed:E5M10").unwrap();
+        c.heat.n = 17;
+        c.heat.dt = 0.25 / (16.0 * 16.0);
+        c.heat.steps = 10;
+        c.heat.init = HeatInit::sin_default();
+        c
+    }
+
+    #[test]
+    fn outcome_json_is_deterministic_and_parseable() {
+        let cfg = quick_cfg();
+        let a = outcome_json(&run_experiment(&cfg, &Registry::new()));
+        let b = outcome_json(&run_experiment(&cfg, &Registry::new()));
+        assert_eq!(a, b, "two runs of one config must serialize identically");
+        let j = parse_json(&a).unwrap();
+        assert_eq!(j.get("app").unwrap().as_str(), Some("heat"));
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("fixed:E5M10"));
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("mul-only"));
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(17));
+        assert_eq!(j.get("field").unwrap().as_arr().unwrap().len(), 17);
+        assert!(j.get("muls").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scenarios_json_lists_the_registry() {
+        let j = parse_json(&scenarios_json()).unwrap();
+        let arr = j.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), SCENARIOS.len());
+        for (item, spec) in arr.iter().zip(SCENARIOS) {
+            assert_eq!(item.get("name").unwrap().as_str(), Some(spec.name));
+        }
+    }
+
+    #[test]
+    fn server_starts_and_answers_healthz() {
+        let server = Server::start(ServeOptions {
+            port: 0,
+            workers: 2,
+            queue_cap: 8,
+            cache_cap: 8,
+        })
+        .unwrap();
+        let resp = http::request(server.addr(), "GET", "/healthz", b"").unwrap();
+        assert_eq!(resp.status, 200);
+        let j = parse_json(&resp.text()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,317 @@
+//! Persistent worker pool: the long-lived complement to the scoped/batch
+//! [`crate::coordinator::parallel_map`] (DESIGN.md §12).
+//!
+//! `parallel_map` is the right shape for a finite batch — spawn, drain an
+//! atomic index, join. A server needs the opposite lifecycle: workers that
+//! outlive any one job, a **bounded** queue that applies backpressure by
+//! rejecting (the acceptor turns a rejection into `503`), and a graceful
+//! shutdown that drains what was admitted and joins every thread. Both the
+//! queue ([`Bounded`]) and the pool ([`WorkerPool`]) are std-only:
+//! `Mutex` + `Condvar`, no async runtime.
+//!
+//! Observability: each worker owns a private [`Registry`] (low contention —
+//! one lock per counter bump, never shared across workers on the hot path);
+//! the server's `/metrics` rollup folds every worker registry together
+//! with [`Registry::merge`] and publishes the live queue depth as a gauge.
+
+use crate::metrics::Registry;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+struct State<T> {
+    queue: VecDeque<T>,
+    shutdown: bool,
+}
+
+/// A bounded MPMC queue. `try_push` never blocks (callers reject instead);
+/// `pop` blocks until an item arrives or shutdown has drained the queue.
+pub struct Bounded<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl<T> Bounded<T> {
+    /// Queue with room for `cap` (≥ 1) pending items.
+    pub fn new(cap: usize) -> Bounded<T> {
+        Bounded {
+            state: Mutex::new(State { queue: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Admit `item`, or hand it back if the queue is full or shut down.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.shutdown || s.queue.len() >= self.cap {
+            return Err(item);
+        }
+        s.queue.push_back(item);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available. Returns `None` once the queue has
+    /// been shut down **and** every admitted item has been drained — so a
+    /// graceful shutdown finishes the work it accepted.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.queue.pop_front() {
+                return Some(item);
+            }
+            if s.shutdown {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Current queue depth.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop admitting items and wake every blocked `pop`.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+}
+
+/// A fixed set of long-lived worker threads draining a [`Bounded`] queue.
+pub struct WorkerPool<T: Send + 'static> {
+    queue: Arc<Bounded<T>>,
+    handles: Vec<JoinHandle<()>>,
+    registries: Vec<Registry>,
+}
+
+impl<T: Send + 'static> WorkerPool<T> {
+    /// Spawn `workers` (≥ 1) threads running `handler` over the queue. The
+    /// handler receives the worker's private [`Registry`]; the pool itself
+    /// records `serve.served` and times `serve.handle_ns` around each job.
+    pub fn new<F>(queue: Arc<Bounded<T>>, workers: usize, handler: F) -> WorkerPool<T>
+    where
+        F: Fn(T, &Registry) + Send + Sync + 'static,
+    {
+        let registries: Vec<Registry> = (0..workers.max(1)).map(|_| Registry::new()).collect();
+        Self::with_registries(queue, registries, handler)
+    }
+
+    /// [`WorkerPool::new`] with caller-provided per-worker registries (one
+    /// worker per registry). The server uses this so the `/metrics` route
+    /// can reach every worker's registry through its shared state.
+    pub fn with_registries<F>(
+        queue: Arc<Bounded<T>>,
+        registries: Vec<Registry>,
+        handler: F,
+    ) -> WorkerPool<T>
+    where
+        F: Fn(T, &Registry) + Send + Sync + 'static,
+    {
+        assert!(!registries.is_empty(), "worker pool needs at least one registry");
+        let handler = Arc::new(handler);
+        let handles = registries
+            .iter()
+            .map(|reg| {
+                let queue = queue.clone();
+                let handler = handler.clone();
+                let reg = reg.clone();
+                std::thread::spawn(move || {
+                    while let Some(job) = queue.pop() {
+                        // A panicking handler must cost one job, not one
+                        // worker: config validation should make this
+                        // unreachable, but a dead worker is a permanent
+                        // capacity loss on a long-lived server.
+                        let caught = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                reg.time("serve.handle_ns", || (*handler)(job, &reg));
+                            }),
+                        );
+                        if caught.is_err() {
+                            reg.inc("serve.panics", 1);
+                        }
+                        reg.inc("serve.served", 1);
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { queue, handles, registries }
+    }
+
+    /// Admit a job, or hand it back when the queue is full (the caller
+    /// decides how to reject — the server answers `503`).
+    pub fn submit(&self, job: T) -> Result<(), T> {
+        self.queue.try_push(job)
+    }
+
+    /// Live queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Jobs completed across all workers.
+    pub fn served(&self) -> u64 {
+        self.registries.iter().map(|r| r.counter("serve.served")).sum()
+    }
+
+    /// The per-worker registries. The single `/metrics` rollup lives in
+    /// `server::mod` (`rollup`); it reaches these via the registry handles
+    /// the server passed to [`WorkerPool::with_registries`], so there is
+    /// exactly one merge implementation to keep honest.
+    pub fn registries(&self) -> &[Registry] {
+        &self.registries
+    }
+
+    /// Graceful shutdown: stop admissions, drain what was accepted, join
+    /// every worker thread. Returning means no pool thread is left.
+    pub fn shutdown(self) {
+        self.queue.shutdown();
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn bounded_rejects_when_full_and_when_shut_down() {
+        let q: Bounded<u32> = Bounded::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        q.shutdown();
+        assert_eq!(q.try_push(4), Err(4));
+        // Admitted items drain even after shutdown.
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let q: Bounded<u32> = Bounded::new(0);
+        assert!(q.try_push(1).is_ok());
+        assert_eq!(q.try_push(2), Err(2));
+    }
+
+    #[test]
+    fn pop_blocks_until_an_item_arrives() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.try_push(7).is_ok());
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn pool_processes_all_admitted_jobs_and_joins() {
+        let done = Arc::new(AtomicU64::new(0));
+        let queue: Arc<Bounded<u64>> = Arc::new(Bounded::new(64));
+        let pool = {
+            let done = done.clone();
+            WorkerPool::new(queue.clone(), 4, move |job, reg| {
+                done.fetch_add(job, Ordering::SeqCst);
+                reg.inc("test.jobs", 1);
+            })
+        };
+        let mut admitted = 0u64;
+        for i in 1..=50u64 {
+            if pool.submit(i).is_ok() {
+                admitted += i;
+            }
+        }
+        // Graceful: shutdown drains everything that was admitted.
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), admitted);
+        assert_eq!(queue.pop(), None, "queue drained and shut down");
+    }
+
+    #[test]
+    fn pool_counts_served_and_rolls_up_worker_registries() {
+        let queue: Arc<Bounded<u32>> = Arc::new(Bounded::new(64));
+        let pool = WorkerPool::new(queue.clone(), 3, move |job, reg| {
+            reg.inc("test.sum", job as u64);
+        });
+        for i in 0..30u32 {
+            pool.submit(i).unwrap();
+        }
+        // Wait for the queue to drain before snapshotting.
+        while !queue.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        while pool.served() < 30 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let snap = Registry::new();
+        for r in pool.registries() {
+            snap.merge(r);
+        }
+        assert_eq!(snap.counter("serve.served"), 30);
+        assert_eq!(snap.counter("test.sum"), (0..30u64).sum::<u64>());
+        assert!(snap.timer_summary("serve.handle_ns").is_some());
+        assert_eq!(pool.queue_depth(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn a_panicking_job_does_not_kill_the_worker() {
+        let queue: Arc<Bounded<u32>> = Arc::new(Bounded::new(8));
+        let pool = WorkerPool::new(queue.clone(), 1, move |job, _| {
+            if job == 1 {
+                panic!("boom");
+            }
+        });
+        pool.submit(1).unwrap();
+        pool.submit(2).unwrap();
+        while pool.served() < 2 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let snap = Registry::new();
+        for r in pool.registries() {
+            snap.merge(r);
+        }
+        assert_eq!(snap.counter("serve.panics"), 1);
+        assert_eq!(snap.counter("serve.served"), 2, "the worker survived job 1");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn one_slot_queue_rejects_under_load() {
+        // A deliberately slow single worker with a 1-slot queue: while the
+        // worker holds job A and the queue holds job B, every submit fails.
+        let queue: Arc<Bounded<u32>> = Arc::new(Bounded::new(1));
+        let pool = WorkerPool::new(queue.clone(), 1, move |_, _| {
+            std::thread::sleep(Duration::from_millis(40));
+        });
+        pool.submit(0).unwrap();
+        // Wait until the worker has dequeued job A, then fill the slot.
+        while !queue.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        pool.submit(1).unwrap();
+        let mut rejected = 0;
+        for i in 2..6u32 {
+            if pool.submit(i).is_err() {
+                rejected += 1;
+            }
+        }
+        assert_eq!(rejected, 4, "queue full while the worker is busy");
+        pool.shutdown();
+    }
+}

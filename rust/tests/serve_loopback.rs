@@ -1,0 +1,249 @@
+//! Serving-loop contract suite (DESIGN.md §12).
+//!
+//! The serving layer adds three moving parts on top of the solvers — a
+//! worker pool, a job queue and a result cache — and this suite pins the
+//! property that makes the whole layer sound: **a served response is
+//! byte-identical to a direct `run_experiment` of the same config**, no
+//! matter which worker ran it, whether it was a cache hit or a miss, or
+//! how many clients were racing. Plus the operational contracts: cache
+//! hits actually happen on repeats, a full 1-slot queue rejects with 503
+//! while in-flight work still completes, and shutdown joins every thread
+//! and releases the port.
+
+use r2f2::config::{parse_json, ExperimentConfig};
+use r2f2::coordinator::run_experiment;
+use r2f2::metrics::Registry;
+use r2f2::server::{http, outcome_json, ServeOptions, Server};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start(workers: usize, queue_cap: usize, cache_cap: usize) -> Server {
+    Server::start(ServeOptions { port: 0, workers, queue_cap, cache_cap })
+        .expect("server binds port 0")
+}
+
+/// One small config per registry scenario (mixed backends and modes).
+fn mixed_bodies() -> Vec<String> {
+    vec![
+        r#"{"app": "heat", "backend": "fixed:E5M10",
+            "heat": {"n": 33, "dt": 0.000244140625, "steps": 40}}"#
+            .to_string(),
+        r#"{"app": "advection", "backend": "fixed:E5M10",
+            "advection": {"n": 64, "steps": 50}}"#
+            .to_string(),
+        r#"{"app": "wave", "backend": "fixed:E5M10", "mode": "full",
+            "wave": {"n": 17, "steps": 40}}"#
+            .to_string(),
+        r#"{"app": "swe", "backend": "r2f2:<3,8,4>", "swe": {"steps": 5}}"#.to_string(),
+    ]
+}
+
+/// What the server must answer for `body`, computed directly — same JSON
+/// lowering, same job runner, same serializer.
+fn expected_response(body: &str) -> String {
+    let cfg = ExperimentConfig::from_json(&parse_json(body).unwrap()).unwrap();
+    outcome_json(&run_experiment(&cfg, &Registry::new()))
+}
+
+#[test]
+fn concurrent_mixed_load_is_bit_identical_to_direct_runs() {
+    let server = start(4, 32, 64);
+    let addr = server.addr();
+    let bodies = Arc::new(mixed_bodies());
+
+    // ≥ 8 concurrent clients, 4 requests each, cycling the scenario mix —
+    // every body is requested 8 times, so repeats (and cache hits, and in
+    // debug the determinism guard) are guaranteed.
+    let handles: Vec<_> = (0..8)
+        .map(|c| {
+            let bodies = bodies.clone();
+            std::thread::spawn(move || {
+                let mut got: Vec<(usize, String, String)> = Vec::new();
+                for i in 0..4 {
+                    let which = (c + i) % bodies.len();
+                    let resp = http::request(addr, "POST", "/v1/run", bodies[which].as_bytes())
+                        .expect("request succeeds");
+                    assert_eq!(resp.status, 200, "{}", resp.text());
+                    let cache = resp.header("x-r2f2-cache").expect("cache header").to_string();
+                    assert!(resp.header("x-r2f2-key").is_some(), "content address header");
+                    got.push((which, cache, resp.text()));
+                }
+                got
+            })
+        })
+        .collect();
+    let mut responses: Vec<(usize, String, String)> = Vec::new();
+    for h in handles {
+        responses.extend(h.join().unwrap());
+    }
+    assert_eq!(responses.len(), 32);
+
+    // Every response — hit or miss, any worker — bit-equals the direct run.
+    let expected: Vec<String> = bodies.iter().map(|b| expected_response(b)).collect();
+    for (which, _, text) in &responses {
+        assert_eq!(
+            text, &expected[*which],
+            "served response diverged from direct run_experiment (config {which})"
+        );
+    }
+
+    // Repeats must have produced hits, and the counters must agree.
+    let hits = responses.iter().filter(|(_, c, _)| c == "hit").count();
+    assert!(hits > 0, "32 requests over 4 configs must produce cache hits");
+    let stats = server.cache_stats();
+    assert_eq!(stats.hits as usize, hits);
+    assert!(stats.misses >= bodies.len() as u64, "each config misses at least once");
+    #[cfg(debug_assertions)]
+    assert!(stats.guard_checks > 0, "sampled hits re-verify determinism in debug");
+
+    // The /metrics rollup sees the same world.
+    let resp = http::request(addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let m = parse_json(&resp.text()).expect("metrics endpoint emits well-formed JSON");
+    let counters = m.get("counters").expect("counters section");
+    assert_eq!(
+        counters.get("serve.cache.hits").and_then(|v| v.as_f64()),
+        Some(hits as f64),
+        "cache-hit counter advances on repeated configs"
+    );
+    let snapshot = server.metrics_snapshot();
+    assert_eq!(snapshot.counter("serve.cache.hits"), hits as u64);
+    // `serve.served` increments after the response is written, so poll
+    // briefly instead of racing the last worker's bookkeeping.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let served = server.metrics_snapshot().counter("serve.served");
+        if served >= 33 {
+            break; // 32 runs + the /metrics request
+        }
+        assert!(std::time::Instant::now() < deadline, "served stuck at {served}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(snapshot.percentiles("serve.handle_ns", &[0.5, 0.99]).is_some());
+
+    server.shutdown();
+}
+
+#[test]
+fn textually_different_bodies_share_one_content_address() {
+    let server = start(2, 8, 8);
+    let addr = server.addr();
+    // Same config, different key order and whitespace.
+    let a = r#"{"app": "heat", "backend": "fixed:E5M10",
+                "heat": {"n": 17, "dt": 0.0009765625, "steps": 10}}"#;
+    let b = r#"{ "heat": {"steps": 10, "n": 17, "dt": 0.0009765625},
+                 "backend": "fixed:E5M10", "app": "heat" }"#;
+    let ra = http::request(addr, "POST", "/v1/run", a.as_bytes()).unwrap();
+    let rb = http::request(addr, "POST", "/v1/run", b.as_bytes()).unwrap();
+    assert_eq!(ra.status, 200);
+    assert_eq!(rb.status, 200);
+    assert_eq!(ra.header("x-r2f2-cache"), Some("miss"));
+    assert_eq!(rb.header("x-r2f2-cache"), Some("hit"), "content addressing, not text addressing");
+    assert_eq!(ra.header("x-r2f2-key"), rb.header("x-r2f2-key"));
+    assert_eq!(ra.text(), rb.text());
+    server.shutdown();
+}
+
+#[test]
+fn scenarios_healthz_and_error_routes() {
+    let server = start(2, 8, 8);
+    let addr = server.addr();
+
+    let resp = http::request(addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(
+        parse_json(&resp.text()).unwrap().get("status").unwrap().as_str(),
+        Some("ok")
+    );
+
+    let resp = http::request(addr, "GET", "/v1/scenarios", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let j = parse_json(&resp.text()).unwrap();
+    let names: Vec<&str> = j
+        .get("scenarios")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(names, vec!["heat1d", "swe2d", "advection1d", "wave2d"]);
+
+    // Error paths answer JSON errors, never hang, never kill a worker.
+    let resp = http::request(addr, "POST", "/v1/run", b"{not json").unwrap();
+    assert_eq!(resp.status, 400);
+    let resp = http::request(addr, "POST", "/v1/run", b"{\"app\": \"chess\"}").unwrap();
+    assert_eq!(resp.status, 400);
+    let resp = http::request(addr, "GET", "/v1/run", b"").unwrap();
+    assert_eq!(resp.status, 405);
+    let resp = http::request(addr, "POST", "/healthz", b"").unwrap();
+    assert_eq!(resp.status, 405);
+    let resp = http::request(addr, "GET", "/no/such/route", b"").unwrap();
+    assert_eq!(resp.status, 404);
+
+    // The server is still fully alive afterwards.
+    let resp = http::request(addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn one_slot_queue_rejects_excess_load_with_503() {
+    // 1 worker, 1 queue slot: once a slow request occupies the worker and
+    // a second occupies the slot, further requests must be rejected.
+    let server = start(1, 1, 8);
+    let addr = server.addr();
+    // Slow enough to hold the worker for the whole burst in any profile:
+    // ~1.5 M quantized muls plus the f64 reference run (tens of ms in
+    // release, ~a second in debug — the barrier-released burst lands in
+    // well under either).
+    let slow = r#"{"app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 129, "dt": 0.0000152587890625, "steps": 4000}}"#;
+
+    let barrier = Arc::new(std::sync::Barrier::new(8));
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                http::request(addr, "POST", "/v1/run", slow.as_bytes())
+                    .map(|r| r.status)
+                    .unwrap_or(0)
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let rejected = statuses.iter().filter(|&&s| s == 503).count();
+    assert_eq!(ok + rejected, 8, "every client gets a definite answer: {statuses:?}");
+    assert!(ok >= 1, "admitted work completes: {statuses:?}");
+    assert!(rejected >= 1, "a saturated 1-slot queue must reject: {statuses:?}");
+
+    let snapshot = server.metrics_snapshot();
+    assert_eq!(snapshot.counter("serve.rejected"), rejected as u64);
+    // All 8 requests hold the same config, so the rejected ones lost
+    // nothing: the survivors' responses are cache-consistent.
+    assert_eq!(server.cache_stats().misses, 1);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_joins_workers_and_releases_the_port() {
+    let server = start(3, 8, 8);
+    let addr = server.addr();
+    let resp = http::request(addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(resp.status, 200);
+
+    // shutdown() blocks until the acceptor and every worker have been
+    // joined — returning *is* the no-leaked-threads assertion.
+    server.shutdown();
+
+    // The listener is gone: connects are refused (give the OS a moment).
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "port must be released after shutdown"
+    );
+}
