@@ -11,7 +11,9 @@
 //! Flags (after `--` on the cargo command line):
 //!   --smoke         cut workload sizes and sample counts (CI mode)
 //!   --json <path>   also emit machine-readable results
-//!                   (schema `r2f2-bench-hotpath/3`, see EXPERIMENTS.md)
+//!                   (schema `r2f2-bench-hotpath/4`, see EXPERIMENTS.md §E10)
+//!   --out <path>    alias for --json (the `BENCH_smoke.json` snapshot path:
+//!                   `cargo bench --bench hotpath -- --smoke --out BENCH_smoke.json`)
 
 use r2f2::bench_util::{bench_with, black_box, fmt_ns, print_results, BenchResult};
 use r2f2::coordinator::parallel_map;
@@ -19,6 +21,7 @@ use r2f2::metrics::Registry;
 use r2f2::pde::adaptive::{
     fixed_cost_lut, run_heat as heat_run_adaptive, run_heat_scalar as heat_run_adaptive_scalar,
 };
+use r2f2::pde::decomp::run_heat as decomp_run_heat;
 use r2f2::pde::heat1d::{run as heat_run, run_scalar as heat_run_scalar, HeatParams};
 use r2f2::pde::scenario::{ScenarioSize, SCENARIOS};
 use r2f2::pde::swe2d::{run as swe_run, run_scalar as swe_run_scalar, QuantScope, SweParams};
@@ -45,8 +48,8 @@ fn parse_opts() -> Opts {
     while let Some(a) = args.next() {
         match a.as_str() {
             "--smoke" => opts.smoke = true,
-            "--json" => opts.json = args.next().or_else(|| {
-                eprintln!("--json needs a path");
+            "--json" | "--out" => opts.json = args.next().or_else(|| {
+                eprintln!("{a} needs a path");
                 std::process::exit(2);
             }),
             "--bench" => {} // cargo bench passes this through
@@ -106,6 +109,16 @@ struct ScenarioRow {
     muls: u64,
 }
 
+/// One domain-decomposition scaling row (pde::decomp, DESIGN.md §13): the
+/// heat workload sharded across the worker pool. Results are bit-identical
+/// at every shard count (tests/decomp_identity.rs), so the only thing that
+/// may move is the wall clock.
+struct DecompRow {
+    shards: usize,
+    median_ns: f64,
+    muls: u64,
+}
+
 // One escape routine crate-wide (PR-5 satellite): the same dual of
 // `config::json_mini`'s parser that `metrics::to_json` and the server use,
 // so bench-case names with quotes/backslashes/control chars stay valid.
@@ -118,10 +131,14 @@ fn emit_json(
     trajs: &[Trajectory],
     adaptive: &[AdaptiveRow],
     scenarios: &[ScenarioRow],
+    decomp: &[DecompRow],
 ) {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"r2f2-bench-hotpath/3\",\n");
+    out.push_str("  \"schema\": \"r2f2-bench-hotpath/4\",\n");
+    out.push_str(
+        "  \"generator\": \"cargo bench --bench hotpath -- --smoke --out BENCH_smoke.json\",\n",
+    );
     out.push_str(&format!("  \"smoke\": {smoke},\n"));
     out.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -184,6 +201,20 @@ fn emit_json(
             s.scalar_ns / s.packed_ns,
             s.muls,
             if i + 1 < scenarios.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"decomp\": [\n");
+    let base_ns = decomp.first().map_or(1.0, |d| d.median_ns);
+    for (i, d) in decomp.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"shards\": {}, \"median_ns\": {:.3}, \"muls\": {}, \
+             \"speedup_vs_unsharded\": {:.3}}}{}\n",
+            d.shards,
+            d.median_ns,
+            d.muls,
+            base_ns / d.median_ns,
+            if i + 1 < decomp.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n");
@@ -532,6 +563,46 @@ fn main() {
         );
     }
 
+    // ---- L3 domain decomposition (DESIGN.md §13) -------------------------
+    // The heat workload sharded across the worker pool via pde::decomp.
+    // Bit-identity is the conformance suite's job; here we record the
+    // wall-clock scaling and double-check the mul count never moves.
+    let mut results = Vec::new();
+    let mut decomp_rows: Vec<DecompRow> = Vec::new();
+    let mut decomp_muls = 0u64;
+    for shards in [1usize, 2, 4, 8] {
+        let pp = p.clone();
+        let r = bench_with(
+            &format!("{heat_label} fixed E5M10 decomp ×{shards} shards"),
+            samples,
+            Duration::from_millis(batch_ms),
+            &mut || {
+                let mut be = FixedArith::new(FpFormat::E5M10);
+                black_box(decomp_run_heat(&pp, &mut be, QuantMode::MulOnly, shards));
+            },
+        );
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let probe = decomp_run_heat(&p, &mut be, QuantMode::MulOnly, shards);
+        if shards == 1 {
+            decomp_muls = probe.muls;
+        }
+        assert_eq!(probe.muls, decomp_muls, "sharding must not change the op count");
+        decomp_rows.push(DecompRow { shards, median_ns: r.median_ns, muls: probe.muls });
+        results.push(r);
+    }
+    print_results("L3 domain decomposition (one run per iteration)", &results);
+    all_rows.extend(results);
+    println!("\nsharded-scaling rows ({} workers available):", r2f2::coordinator::default_workers());
+    for d in &decomp_rows {
+        println!(
+            "  shards {:<2} median {}  ×{:.2} vs unsharded  ({} muls)",
+            d.shards,
+            fmt_ns(d.median_ns),
+            decomp_rows[0].median_ns / d.median_ns,
+            d.muls
+        );
+    }
+
     // ---- Speedup summary -------------------------------------------------
     println!("\npacked-engine speedups (median):");
     println!(
@@ -642,6 +713,14 @@ fn main() {
     }
 
     if let Some(path) = &opts.json {
-        emit_json(path, opts.smoke, &all_rows, &trajs, &adaptive_rows, &scenario_rows);
+        emit_json(
+            path,
+            opts.smoke,
+            &all_rows,
+            &trajs,
+            &adaptive_rows,
+            &scenario_rows,
+            &decomp_rows,
+        );
     }
 }

@@ -103,6 +103,10 @@ pub struct ExperimentConfig {
     pub app: String,
     pub backend: BackendSpec,
     pub mode: QuantMode,
+    /// Domain-decomposition shard count (`pde::decomp`, DESIGN.md §13).
+    /// 1 = unsharded; any other value produces bit-identical results while
+    /// spreading each step across the worker pool.
+    pub shards: usize,
     pub heat: HeatParams,
     pub swe: SweParams,
     pub advection: AdvectionParams,
@@ -116,6 +120,7 @@ impl Default for ExperimentConfig {
             app: "heat".into(),
             backend: BackendSpec::R2f2(R2f2Config::C16_393),
             mode: QuantMode::MulOnly,
+            shards: 1,
             heat: HeatParams::default(),
             swe: SweParams::default(),
             advection: AdvectionParams::default(),
@@ -150,6 +155,12 @@ impl ExperimentConfig {
                 "full" => QuantMode::Full,
                 other => return Err(format!("mode must be mul-only|full, got `{other}`")),
             };
+        }
+        if let Some(v) = get(doc, "", "shards").and_then(Value::as_int) {
+            if !(1..=64).contains(&v) {
+                return Err(format!("shards must be in 1..=64, got {v}"));
+            }
+            cfg.shards = v as usize;
         }
 
         if let Some(v) = get(doc, "heat", "n").and_then(Value::as_int) {
@@ -317,9 +328,18 @@ impl ExperimentConfig {
         // Grid nodes × timesteps: ≈ minutes of worker time at worst, not
         // days (every default/preset is well below 1e7).
         const MAX_WORK: usize = 1_000_000_000;
+        // A sharded run (`shards > 1`, pde::decomp) spreads each timestep
+        // across that many pool workers, so the per-worker wall clock — the
+        // quantity these limits actually bound — stays put when the
+        // admitted grid and total work scale with the shard count. The 2D
+        // side cap stays fixed: it bounds the *assembled* global field's
+        // memory, which sharding does not reduce.
+        let scale = self.shards.max(1);
+        let max_nodes_1d = MAX_NODES_1D.saturating_mul(scale);
+        let max_work = MAX_WORK.saturating_mul(scale);
         let checks: [(&str, usize, usize); 8] = [
-            ("heat.n", self.heat.n, MAX_NODES_1D),
-            ("advection.n", self.advection.n, MAX_NODES_1D),
+            ("heat.n", self.heat.n, max_nodes_1d),
+            ("advection.n", self.advection.n, max_nodes_1d),
             ("swe.n", self.swe.n, MAX_SIDE_2D),
             ("wave.n", self.wave.n, MAX_SIDE_2D),
             ("heat.steps", self.heat.steps, MAX_STEPS),
@@ -339,10 +359,10 @@ impl ExperimentConfig {
             ("wave", self.wave.n.saturating_mul(self.wave.n).saturating_mul(self.wave.steps)),
         ];
         for (name, nodesteps) in work {
-            if nodesteps > MAX_WORK {
+            if nodesteps > max_work {
                 return Err(format!(
                     "{name}: n × steps = {nodesteps} node·steps exceeds the serving limit \
-                     of {MAX_WORK}"
+                     of {max_work}"
                 ));
             }
         }
@@ -504,6 +524,46 @@ mod tests {
             let j = crate::config::parse_json(doc).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "{doc}");
         }
+    }
+
+    #[test]
+    fn shards_knob_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml("shards = 8").unwrap();
+        assert_eq!(cfg.shards, 8);
+        assert_eq!(ExperimentConfig::from_toml("").unwrap().shards, 1);
+        let cfg = ExperimentConfig::from_json(
+            &crate::config::parse_json(r#"{"app": "heat", "shards": 4}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 4);
+        for bad in ["shards = 0", "shards = 65", "shards = -2"] {
+            assert!(ExperimentConfig::from_toml(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn serving_limits_scale_with_shards() {
+        // A 4M-node grid is over the unsharded cap but fits when the run is
+        // decomposed over at least 4 shards; the work product scales the
+        // same way. The 2D memory cap never scales.
+        let mut c = ExperimentConfig::default();
+        c.heat.n = 4_000_000;
+        c.heat.steps = 1;
+        assert!(c.check_serving_limits().is_err());
+        c.shards = 4;
+        c.check_serving_limits().unwrap();
+
+        let mut c = ExperimentConfig::default();
+        c.heat.n = 1_000_000;
+        c.heat.steps = 4_000;
+        assert!(c.check_serving_limits().is_err());
+        c.shards = 8;
+        c.check_serving_limits().unwrap();
+
+        let mut c = ExperimentConfig::default();
+        c.swe.n = 4096;
+        c.shards = 64;
+        assert!(c.check_serving_limits().is_err(), "2D side cap must not scale");
     }
 
     #[test]

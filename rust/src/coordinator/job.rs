@@ -3,7 +3,7 @@
 
 use crate::config::{BackendSpec, ExperimentConfig};
 use crate::metrics::Registry;
-use crate::pde::{self, advection1d, heat1d, swe2d, wave2d, QuantMode};
+use crate::pde::{self, decomp, swe2d, QuantMode};
 use std::time::Instant;
 
 /// Outcome of one simulation experiment.
@@ -28,13 +28,21 @@ pub struct Outcome {
 }
 
 /// Run one experiment (plus its f64 reference) natively.
+///
+/// `cfg.shards > 1` routes the run through the domain-decomposition
+/// adapters (`pde::decomp`, DESIGN.md §13) — bit-identical results, with
+/// each step spread across the worker pool. The f64 reference runs sharded
+/// too (also bit-identical either way, but the wall-clock win is the point
+/// of admitting shard-scaled grids).
 pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
     let t0 = Instant::now();
+    let shards = cfg.shards.max(1);
     let (field, reference, muls, adjustments, range_events) = match cfg.app.as_str() {
         "heat" => {
             let mut be = cfg.backend.build();
-            let res = heat1d::run(&cfg.heat, be.as_mut(), cfg.mode);
-            let reference = heat1d::run(&cfg.heat, &mut pde::F64Arith, QuantMode::MulOnly);
+            let res = decomp::run_heat(&cfg.heat, be.as_mut(), cfg.mode, shards);
+            let reference =
+                decomp::run_heat(&cfg.heat, &mut pde::F64Arith, QuantMode::MulOnly, shards);
             (
                 res.u,
                 reference.u,
@@ -45,9 +53,20 @@ pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
         }
         "swe" => {
             let mut be = cfg.backend.build();
-            let res = swe2d::run(&cfg.swe, be.as_mut(), swe2d::QuantScope::UxFluxOnly);
-            let reference =
-                swe2d::run(&cfg.swe, &mut pde::F64Arith, swe2d::QuantScope::UxFluxOnly);
+            let res = decomp::run_swe(
+                &cfg.swe,
+                be.as_mut(),
+                swe2d::QuantScope::UxFluxOnly,
+                QuantMode::MulOnly,
+                shards,
+            );
+            let reference = decomp::run_swe(
+                &cfg.swe,
+                &mut pde::F64Arith,
+                swe2d::QuantScope::UxFluxOnly,
+                QuantMode::MulOnly,
+                shards,
+            );
             (
                 res.h,
                 reference.h,
@@ -58,9 +77,13 @@ pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
         }
         "advection" => {
             let mut be = cfg.backend.build();
-            let res = advection1d::run(&cfg.advection, be.as_mut(), cfg.mode);
-            let reference =
-                advection1d::run(&cfg.advection, &mut pde::F64Arith, QuantMode::MulOnly);
+            let res = decomp::run_advection(&cfg.advection, be.as_mut(), cfg.mode, shards);
+            let reference = decomp::run_advection(
+                &cfg.advection,
+                &mut pde::F64Arith,
+                QuantMode::MulOnly,
+                shards,
+            );
             (
                 res.u,
                 reference.u,
@@ -71,8 +94,9 @@ pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
         }
         "wave" => {
             let mut be = cfg.backend.build();
-            let res = wave2d::run(&cfg.wave, be.as_mut(), cfg.mode);
-            let reference = wave2d::run(&cfg.wave, &mut pde::F64Arith, QuantMode::MulOnly);
+            let res = decomp::run_wave(&cfg.wave, be.as_mut(), cfg.mode, shards);
+            let reference =
+                decomp::run_wave(&cfg.wave, &mut pde::F64Arith, QuantMode::MulOnly, shards);
             (
                 res.u,
                 reference.u,
@@ -184,6 +208,24 @@ mod tests {
         assert_eq!(o.muls, 3 * 15 * 15 * 40);
         assert!(o.rel_err_vs_f64 < 0.2, "{}", o.rel_err_vs_f64);
         assert_eq!(m.counter("jobs.completed"), 2);
+    }
+
+    #[test]
+    fn sharded_experiment_is_bit_identical_to_unsharded() {
+        let m = Registry::new();
+        let mut base = quick_heat("fixed:E5M10");
+        base.heat.steps = 60;
+        let o1 = run_experiment(&base, &m);
+        for shards in [3usize, 7] {
+            let mut c = base.clone();
+            c.shards = shards;
+            let o = run_experiment(&c, &m);
+            assert_eq!(o.muls, o1.muls, "shards={shards}");
+            assert_eq!(o.range_events, o1.range_events, "shards={shards}");
+            let bits = |f: &[f64]| f.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&o.field), bits(&o1.field), "shards={shards}");
+            assert_eq!(o.rel_err_vs_f64.to_bits(), o1.rel_err_vs_f64.to_bits());
+        }
     }
 
     #[test]

@@ -118,18 +118,18 @@ pub struct AdvectionResult {
 /// The advection scenario state.
 #[derive(Debug)]
 pub struct AdvectionSim {
-    n: usize,
+    pub(super) n: usize,
     /// `c` (linear) or `Δt/(2Δx)` (Burgers) — the constant operand.
-    coeff: f64,
-    burgers: bool,
-    u: Vec<f64>,
-    next: Vec<f64>,
+    pub(super) coeff: f64,
+    pub(super) burgers: bool,
+    pub(super) u: Vec<f64>,
+    pub(super) next: Vec<f64>,
     /// Product row `pⱼ` scratch.
-    prod: Vec<f64>,
+    pub(super) prod: Vec<f64>,
     /// Burgers `(uⱼ, uⱼ)` pair scratch.
-    pairs: Vec<(f64, f64)>,
+    pub(super) pairs: Vec<(f64, f64)>,
     /// Burgers `uⱼ²` scratch.
-    sq: Vec<f64>,
+    pub(super) sq: Vec<f64>,
 }
 
 impl AdvectionSim {
@@ -261,7 +261,7 @@ impl Sim for AdvectionSim {
     }
 }
 
-fn finish(sim: AdvectionSim, stats: RunStats) -> AdvectionResult {
+pub(super) fn finish(sim: AdvectionSim, stats: RunStats) -> AdvectionResult {
     AdvectionResult {
         u: sim.into_field(),
         snapshots: stats.snapshots,

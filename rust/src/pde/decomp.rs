@@ -1,0 +1,1329 @@
+//! Domain decomposition over the worker pool (DESIGN.md §13).
+//!
+//! One grid, many shards: a 1D field splits into contiguous intervals and a
+//! 2D field into row strips, each shard carrying the halo cells its stencil
+//! reads across the cut. Per timestep every subdomain advances through
+//! [`crate::coordinator::parallel_map`] — deterministic per-shard work,
+//! like the Fig. 6 sweep — and the halo exchange happens at the step
+//! boundary when the shards' results are scattered back into the one
+//! global field the next step's gathers read.
+//!
+//! ```text
+//!        shard 0            shard 1            shard 2
+//!   ┌───────────────┬──────────────────┬───────────────┐
+//!   │ own: [0, a)   │   own: [a, b)    │  own: [b, n)  │
+//!   └───────────▲───┴──▲────────────▲──┴───▲───────────┘
+//!          gather a-1  │   gather   │  gather b
+//!               (halo) a..b-1 + a-1,b  (halo)
+//!   step k:  every shard reads its slab from the global field,
+//!            multiplies through its forked unit, writes its own cells;
+//!   barrier: scatter owned cells → global field (the halo exchange);
+//!   step k+1 gathers fresh halos — no shard ever reads a stale cell.
+//! ```
+//!
+//! **Why bit-identity holds.** The adapters below change *where* each
+//! multiplication executes, never *which* multiplications execute or on
+//! what operands:
+//!
+//! * Ownership is a partition: every global operation (each `r·uⱼ`
+//!   product, each flux evaluation, each combine) belongs to exactly one
+//!   shard, so values, `muls` counts and range-event counters sum to the
+//!   unsharded totals exactly.
+//! * Halo values travel in the f64 carrier and are re-encoded by the
+//!   consuming shard; encode under round-to-nearest-even is a pure
+//!   function of (value, format), and `decode∘encode` is the identity on
+//!   format-representable values (`tests/property_suite.rs`), so a halo
+//!   re-encode can never perturb a product.
+//! * Only **history-independent** backends fork ([`Arith::fork`]): their
+//!   per-op results depend on the operands alone, so a shard seeing only
+//!   its slice of the operation stream computes the same bits the global
+//!   stream would. History-dependent units (R2F2's split register, the
+//!   stochastic rounder) refuse to fork and the adapters fall back to the
+//!   unsharded single-stream path — sharding degrades to a no-op, never
+//!   to different arithmetic.
+//! * The shared-product dedup of the heat sweep charges each `r·uⱼ`
+//!   product once per *use* at the scalar multiplicity; each use lives in
+//!   exactly one shard's slab, so per-shard event counts sum to the
+//!   unsharded count even though a cut-adjacent product is *computed* by
+//!   both neighbours.
+//!
+//! The adapters implement [`Sim`], so the generic drivers — including the
+//! adaptive scheduler's save → attempt → decide epoch protocol — run
+//! sharded unchanged: [`Sim::save`]/[`Sim::restore`] act on the assembled
+//! global state, which makes a widen-retry atomic across *all* shards by
+//! construction. The conformance suite is `rust/tests/decomp_identity.rs`.
+
+use super::advection1d::{self, AdvectionParams, AdvectionResult, AdvectionSim};
+use super::heat1d::{self, HeatParams, HeatResult, HeatSim};
+use super::scenario::{self, Sim};
+use super::swe2d::{self, f2_plain, flux_row, reflect, QuantScope, SweParams, SweResult, SweSim};
+use super::wave2d::{self, WaveParams, WaveResult, WaveSim};
+use super::{AdaptiveArith, Arith, Ctx, QuantMode};
+use crate::coordinator::{default_workers, parallel_map};
+
+/// One shard's owned index range `[lo, hi)` of a 1D grid (or of a row set,
+/// for the 2D strips).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Part {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Part {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// Split `[0, n)` into `shards` contiguous parts covering it exactly once,
+/// sizes differing by at most one (the first `n mod k` parts take the
+/// extra element). `shards` is clamped to `[1, n]` so every returned part
+/// is non-empty — asking for more shards than elements yields `n` parts.
+pub fn partition(n: usize, shards: usize) -> Vec<Part> {
+    let k = shards.max(1).min(n.max(1));
+    let base = n / k;
+    let rem = n % k;
+    let mut parts = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        parts.push(Part { lo, hi: lo + len });
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    parts
+}
+
+/// The halo-extended slab a 1D-stencil shard must gather: its owned
+/// interior nodes plus one neighbour on each side. Returns `None` for a
+/// part that owns no interior node (a boundary-only sliver — nothing to
+/// compute). The slab bounds are global indices `[lo, hi)`.
+pub fn stencil_slab(part: Part, n: usize) -> Option<(usize, usize)> {
+    let i0 = part.lo.max(1);
+    let i1 = part.hi.min(n - 1);
+    if i0 >= i1 {
+        return None;
+    }
+    Some((i0 - 1, i1 + 1))
+}
+
+/// Fork one worker unit per shard, or `None` if the backend is
+/// history-dependent (the adapters then run the unsharded single stream).
+fn fork_units(be: &dyn Arith, count: usize) -> Option<Vec<Box<dyn Arith + Send>>> {
+    let mut units = Vec::with_capacity(count);
+    for _ in 0..count {
+        units.push(be.fork()?);
+    }
+    Some(units)
+}
+
+// ---------------------------------------------------------------------------
+// heat1d
+// ---------------------------------------------------------------------------
+
+struct HeatTask {
+    part: Part,
+    be: Box<dyn Arith + Send>,
+    muls: u64,
+    slab: Vec<f64>,
+    out: Vec<f64>,
+}
+
+/// [`HeatSim`] sharded into 1D intervals with one-node halos.
+pub struct DecompHeat {
+    inner: HeatSim,
+    shards: usize,
+}
+
+impl DecompHeat {
+    pub fn new(params: &HeatParams, shards: usize) -> DecompHeat {
+        DecompHeat { inner: HeatSim::new(params), shards }
+    }
+
+    pub fn into_inner(self) -> HeatSim {
+        self.inner
+    }
+}
+
+impl Sim for DecompHeat {
+    fn scenario(&self) -> &'static str {
+        self.inner.scenario()
+    }
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        self.inner.quant_state(ctx);
+    }
+    fn save(&self) -> Vec<Vec<f64>> {
+        self.inner.save()
+    }
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.inner.restore(saved);
+    }
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        self.inner.telemetry(out);
+    }
+    fn telemetry_len(&self) -> usize {
+        self.inner.telemetry_len()
+    }
+    fn primary_field(&self) -> Vec<f64> {
+        self.inner.primary_field()
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        let n = self.inner.n;
+        let parts = partition(n, self.shards);
+        let units = if parts.len() > 1 { fork_units(&*ctx.be, parts.len()) } else { None };
+        let Some(units) = units else {
+            // One shard, or a history-dependent backend: the unsharded
+            // single stream *is* the decomposed semantics.
+            self.inner.advance(ctx, steps, step_base, snapshot_every, snaps, batched);
+            return;
+        };
+
+        let mode = ctx.mode;
+        let workers = default_workers();
+        let r = self.inner.r;
+        let two_r = 2.0 * r;
+        let mut tasks: Vec<HeatTask> = parts
+            .into_iter()
+            .zip(units)
+            .map(|(part, be)| HeatTask { part, be, muls: 0, slab: Vec::new(), out: Vec::new() })
+            .collect();
+
+        for s in 0..steps {
+            let u = &self.inner.u;
+            tasks = parallel_map(tasks, workers, |mut t| {
+                let Some((s0, s1)) = stencil_slab(t.part, n) else {
+                    return t;
+                };
+                t.slab.clear();
+                t.slab.extend_from_slice(&u[s0..s1]);
+                let m = t.slab.len();
+                t.out.clear();
+                t.out.resize(m, 0.0);
+                let muls = {
+                    let mut c = Ctx::new(t.be.as_mut(), mode);
+                    if batched {
+                        c.stencil_step(&mut t.out, &t.slab, r);
+                    } else {
+                        // The canonical per-multiplication sequence on the
+                        // slab — identical per-node ops to the unsharded
+                        // scalar path.
+                        for i in 1..m - 1 {
+                            let left = c.mul(r, t.slab[i - 1]);
+                            let mid = c.mul(two_r, t.slab[i]);
+                            let right = c.mul(r, t.slab[i + 1]);
+                            let du = {
+                                let tmp = c.sub(left, mid);
+                                c.add(tmp, right)
+                            };
+                            let unew = c.add(t.slab[i], du);
+                            t.out[i] = c.quant(unew);
+                        }
+                    }
+                    c.muls
+                };
+                t.muls += muls;
+                t
+            });
+
+            // Halo exchange: scatter every shard's owned interior back into
+            // the global field; the next step's gathers see fresh values.
+            for t in &tasks {
+                if let Some((s0, _)) = stencil_slab(t.part, n) {
+                    let i0 = t.part.lo.max(1);
+                    let i1 = t.part.hi.min(n - 1);
+                    for g in i0..i1 {
+                        self.inner.next[g] = t.out[g - s0];
+                    }
+                }
+            }
+            self.inner.next[0] = self.inner.u[0];
+            self.inner.next[n - 1] = self.inner.u[n - 1];
+            std::mem::swap(&mut self.inner.u, &mut self.inner.next);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.inner.u.clone()));
+            }
+        }
+
+        for t in tasks {
+            ctx.muls += t.muls;
+            ctx.be.absorb(t.be.as_ref());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// advection1d
+// ---------------------------------------------------------------------------
+
+struct AdvTask {
+    part: Part,
+    be: Box<dyn Arith + Send>,
+    muls: u64,
+    pairs: Vec<(f64, f64)>,
+    sq: Vec<f64>,
+    prod: Vec<f64>,
+    out: Vec<f64>,
+}
+
+/// [`AdvectionSim`] sharded into 1D intervals. The product row is the halo:
+/// phase A fills each shard's owned products, the scatter publishes them,
+/// and phase B's periodic-wrap reads (`pᵢ₋₁` across a cut, including the
+/// `0 ↔ n−1` wrap) see the neighbour's fresh values.
+pub struct DecompAdvection {
+    inner: AdvectionSim,
+    shards: usize,
+}
+
+impl DecompAdvection {
+    pub fn new(params: &AdvectionParams, shards: usize) -> DecompAdvection {
+        DecompAdvection { inner: AdvectionSim::new(params), shards }
+    }
+
+    pub fn into_inner(self) -> AdvectionSim {
+        self.inner
+    }
+}
+
+impl Sim for DecompAdvection {
+    fn scenario(&self) -> &'static str {
+        self.inner.scenario()
+    }
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        self.inner.quant_state(ctx);
+    }
+    fn save(&self) -> Vec<Vec<f64>> {
+        self.inner.save()
+    }
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.inner.restore(saved);
+    }
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        self.inner.telemetry(out);
+    }
+    fn telemetry_len(&self) -> usize {
+        self.inner.telemetry_len()
+    }
+    fn primary_field(&self) -> Vec<f64> {
+        self.inner.primary_field()
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        let n = self.inner.n;
+        let parts = partition(n, self.shards);
+        let units = if parts.len() > 1 { fork_units(&*ctx.be, parts.len()) } else { None };
+        let Some(units) = units else {
+            self.inner.advance(ctx, steps, step_base, snapshot_every, snaps, batched);
+            return;
+        };
+
+        let mode = ctx.mode;
+        let workers = default_workers();
+        let coeff = self.inner.coeff;
+        let burgers = self.inner.burgers;
+        let mut tasks: Vec<AdvTask> = parts
+            .into_iter()
+            .zip(units)
+            .map(|(part, be)| AdvTask {
+                part,
+                be,
+                muls: 0,
+                pairs: Vec::new(),
+                sq: Vec::new(),
+                prod: Vec::new(),
+                out: Vec::new(),
+            })
+            .collect();
+
+        for s in 0..steps {
+            // Phase A: every shard's product row chunk, through its unit.
+            {
+                let u = &self.inner.u;
+                tasks = parallel_map(tasks, workers, |mut t| {
+                    let (lo, hi) = (t.part.lo, t.part.hi);
+                    let len = hi - lo;
+                    t.prod.clear();
+                    t.prod.resize(len, 0.0);
+                    let muls = {
+                        let mut c = Ctx::new(t.be.as_mut(), mode);
+                        if burgers {
+                            t.sq.clear();
+                            t.sq.resize(len, 0.0);
+                            if batched {
+                                t.pairs.clear();
+                                t.pairs.extend(u[lo..hi].iter().map(|&v| (v, v)));
+                                c.mul_pairs(&mut t.sq, &t.pairs);
+                                c.mul_batch(&mut t.prod, coeff, &t.sq);
+                            } else {
+                                for j in 0..len {
+                                    t.sq[j] = c.mul(u[lo + j], u[lo + j]);
+                                }
+                                for j in 0..len {
+                                    t.prod[j] = c.mul(coeff, t.sq[j]);
+                                }
+                            }
+                        } else if batched {
+                            c.mul_batch(&mut t.prod, coeff, &u[lo..hi]);
+                        } else {
+                            for j in 0..len {
+                                t.prod[j] = c.mul(coeff, u[lo + j]);
+                            }
+                        }
+                        c.muls
+                    };
+                    t.muls += muls;
+                    t
+                });
+            }
+            // Product halo exchange.
+            for t in &tasks {
+                self.inner.prod[t.part.lo..t.part.hi].copy_from_slice(&t.prod);
+            }
+            // Phase B: the combine, reading the assembled product row
+            // (periodic wrap crosses the cuts through the global arrays).
+            {
+                let u = &self.inner.u;
+                let prod = &self.inner.prod;
+                tasks = parallel_map(tasks, workers, |mut t| {
+                    let (lo, hi) = (t.part.lo, t.part.hi);
+                    t.out.clear();
+                    t.out.resize(hi - lo, 0.0);
+                    let mut c = Ctx::new(t.be.as_mut(), mode);
+                    for i in lo..hi {
+                        let im1 = if i == 0 { n - 1 } else { i - 1 };
+                        let d = c.sub(prod[i], prod[im1]);
+                        let unew = c.sub(u[i], d);
+                        t.out[i - lo] = c.quant(unew);
+                    }
+                    t
+                });
+            }
+            for t in &tasks {
+                self.inner.next[t.part.lo..t.part.hi].copy_from_slice(&t.out);
+            }
+            std::mem::swap(&mut self.inner.u, &mut self.inner.next);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.inner.u.clone()));
+            }
+        }
+
+        for t in tasks {
+            ctx.muls += t.muls;
+            ctx.be.absorb(t.be.as_ref());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wave2d
+// ---------------------------------------------------------------------------
+
+struct WaveTask {
+    /// Owned interior-row range (0-based over the `n−2` interior rows).
+    part: Part,
+    be: Box<dyn Arith + Send>,
+    muls: u64,
+    row_u: Vec<f64>,
+    row_old: Vec<f64>,
+    row_lap: Vec<f64>,
+    p1: Vec<f64>,
+    p0: Vec<f64>,
+    p2: Vec<f64>,
+    out: Vec<f64>,
+}
+
+/// [`WaveSim`] sharded into row strips. Each strip's Laplacian gather
+/// reads rows `i−1` and `i+1` of the global field — the one-row halo —
+/// while it owns the writes to its own rows only.
+pub struct DecompWave {
+    inner: WaveSim,
+    shards: usize,
+}
+
+impl DecompWave {
+    pub fn new(params: &WaveParams, shards: usize) -> DecompWave {
+        DecompWave { inner: WaveSim::new(params), shards }
+    }
+
+    pub fn into_inner(self) -> WaveSim {
+        self.inner
+    }
+}
+
+impl Sim for DecompWave {
+    fn scenario(&self) -> &'static str {
+        self.inner.scenario()
+    }
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        self.inner.quant_state(ctx);
+    }
+    fn save(&self) -> Vec<Vec<f64>> {
+        self.inner.save()
+    }
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.inner.restore(saved);
+    }
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        self.inner.telemetry(out);
+    }
+    fn telemetry_len(&self) -> usize {
+        self.inner.telemetry_len()
+    }
+    fn primary_field(&self) -> Vec<f64> {
+        self.inner.primary_field()
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        let n = self.inner.n;
+        let w = n - 2; // interior row width
+        let parts = partition(n - 2, self.shards);
+        let units = if parts.len() > 1 { fork_units(&*ctx.be, parts.len()) } else { None };
+        let Some(units) = units else {
+            self.inner.advance(ctx, steps, step_base, snapshot_every, snaps, batched);
+            return;
+        };
+
+        let mode = ctx.mode;
+        let workers = default_workers();
+        let (d1, d0, c2) = (self.inner.d1, self.inner.d0, self.inner.c2);
+        let mut tasks: Vec<WaveTask> = parts
+            .into_iter()
+            .zip(units)
+            .map(|(part, be)| WaveTask {
+                part,
+                be,
+                muls: 0,
+                row_u: vec![0.0; w],
+                row_old: vec![0.0; w],
+                row_lap: vec![0.0; w],
+                p1: vec![0.0; w],
+                p0: vec![0.0; w],
+                p2: vec![0.0; w],
+                out: Vec::new(),
+            })
+            .collect();
+
+        for s in 0..steps {
+            {
+                let u = &self.inner.u;
+                let uold = &self.inner.uold;
+                tasks = parallel_map(tasks, workers, |mut t| {
+                    let (lo, hi) = (t.part.lo, t.part.hi);
+                    t.out.clear();
+                    t.out.resize((hi - lo) * w, 0.0);
+                    let muls = {
+                        let mut c = Ctx::new(t.be.as_mut(), mode);
+                        for (ri, row) in (lo..hi).enumerate() {
+                            let i = row + 1; // global row index
+                            let base = i * n;
+                            for j in 1..n - 1 {
+                                let id = base + j;
+                                t.row_u[j - 1] = u[id];
+                                t.row_old[j - 1] = uold[id];
+                                t.row_lap[j - 1] = u[id - n] + u[id + n] + u[id - 1]
+                                    + u[id + 1]
+                                    - 4.0 * u[id];
+                            }
+                            if batched {
+                                c.mul_batch(&mut t.p1, d1, &t.row_u);
+                                c.mul_batch(&mut t.p0, d0, &t.row_old);
+                                c.mul_batch(&mut t.p2, c2, &t.row_lap);
+                            } else {
+                                for j in 0..w {
+                                    t.p1[j] = c.mul(d1, t.row_u[j]);
+                                }
+                                for j in 0..w {
+                                    t.p0[j] = c.mul(d0, t.row_old[j]);
+                                }
+                                for j in 0..w {
+                                    t.p2[j] = c.mul(c2, t.row_lap[j]);
+                                }
+                            }
+                            for j in 0..w {
+                                let sv = c.sub(t.p1[j], t.p0[j]);
+                                let unew = c.add(sv, t.p2[j]);
+                                t.out[ri * w + j] = c.quant(unew);
+                            }
+                        }
+                        c.muls
+                    };
+                    t.muls += muls;
+                    t
+                });
+            }
+
+            // Halo exchange: owned interior rows back into the global next.
+            for t in &tasks {
+                for (ri, row) in (t.part.lo..t.part.hi).enumerate() {
+                    let i = row + 1;
+                    self.inner.next[i * n + 1..i * n + n - 1]
+                        .copy_from_slice(&t.out[ri * w..(ri + 1) * w]);
+                }
+            }
+            // Dirichlet walls stay put (coordinator-side, as in the solver).
+            for j in 0..n {
+                self.inner.next[j] = self.inner.u[j];
+                self.inner.next[(n - 1) * n + j] = self.inner.u[(n - 1) * n + j];
+            }
+            for i in 1..n - 1 {
+                self.inner.next[i * n] = self.inner.u[i * n];
+                self.inner.next[i * n + n - 1] = self.inner.u[i * n + n - 1];
+            }
+            std::mem::swap(&mut self.inner.uold, &mut self.inner.u);
+            std::mem::swap(&mut self.inner.u, &mut self.inner.next);
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.inner.u.clone()));
+            }
+        }
+
+        for t in tasks {
+            ctx.muls += t.muls;
+            ctx.be.absorb(t.be.as_ref());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// swe2d
+// ---------------------------------------------------------------------------
+
+struct SweTask {
+    /// Owned x-half-step rows (of `0..=n`).
+    px: Part,
+    /// Owned y-half-step rows (of `0..n`).
+    py: Part,
+    /// Owned full-step rows, 0-based (global row = index + 1).
+    pf: Part,
+    be: Box<dyn Arith + Send>,
+    muls: u64,
+    fin: Vec<(f64, f64)>,
+    frow: Vec<f64>,
+    hx: Vec<f64>,
+    ux: Vec<f64>,
+    vx: Vec<f64>,
+    hy: Vec<f64>,
+    uy: Vec<f64>,
+    vy: Vec<f64>,
+    oh: Vec<f64>,
+    ou: Vec<f64>,
+    ov: Vec<f64>,
+}
+
+/// [`SweSim`] sharded into row strips, one partition per phase of the
+/// two-step Lax–Wendroff scheme. The half-step arrays are the halos: each
+/// phase's scatter publishes a shard's rows before the next phase's
+/// cross-row reads.
+pub struct DecompSwe {
+    inner: SweSim,
+    shards: usize,
+}
+
+impl DecompSwe {
+    pub fn new(params: &SweParams, scope: QuantScope, shards: usize) -> DecompSwe {
+        DecompSwe { inner: SweSim::new(params, scope), shards }
+    }
+
+    pub fn into_inner(self) -> SweSim {
+        self.inner
+    }
+}
+
+impl Sim for DecompSwe {
+    fn scenario(&self) -> &'static str {
+        self.inner.scenario()
+    }
+    fn quant_state(&mut self, ctx: &mut Ctx<'_>) {
+        self.inner.quant_state(ctx);
+    }
+    fn save(&self) -> Vec<Vec<f64>> {
+        self.inner.save()
+    }
+    fn restore(&mut self, saved: &[Vec<f64>]) {
+        self.inner.restore(saved);
+    }
+    fn telemetry(&self, out: &mut Vec<f64>) {
+        self.inner.telemetry(out);
+    }
+    fn telemetry_len(&self) -> usize {
+        self.inner.telemetry_len()
+    }
+    fn primary_field(&self) -> Vec<f64> {
+        self.inner.primary_field()
+    }
+
+    fn advance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        steps: usize,
+        step_base: usize,
+        snapshot_every: usize,
+        snaps: &mut Vec<(usize, Vec<f64>)>,
+        batched: bool,
+    ) {
+        let n = self.inner.n;
+        let m = self.inner.m;
+        // One shard count for all three phases (n ≥ 4 rows in each), so a
+        // task owns an aligned strip of every phase.
+        let k = self.shards.max(1).min(n);
+        let units = if k > 1 { fork_units(&*ctx.be, k) } else { None };
+        let Some(units) = units else {
+            self.inner.advance(ctx, steps, step_base, snapshot_every, snaps, batched);
+            return;
+        };
+
+        let mode = ctx.mode;
+        let workers = default_workers();
+        let scope = self.inner.scope;
+        let g2 = self.inner.g2;
+        let (ddx, ddy) = (self.inner.ddx, self.inner.ddy);
+        let all = scope == QuantScope::AllFluxMuls;
+        let parts_x = partition(n + 1, k);
+        let parts_y = partition(n, k);
+        let parts_f = partition(n, k);
+        let mut tasks: Vec<SweTask> = (0..k)
+            .zip(units)
+            .map(|(i, be)| SweTask {
+                px: parts_x[i],
+                py: parts_y[i],
+                pf: parts_f[i],
+                be,
+                muls: 0,
+                fin: Vec::new(),
+                frow: Vec::new(),
+                hx: Vec::new(),
+                ux: Vec::new(),
+                vx: Vec::new(),
+                hy: Vec::new(),
+                uy: Vec::new(),
+                vy: Vec::new(),
+                oh: Vec::new(),
+                ou: Vec::new(),
+                ov: Vec::new(),
+            })
+            .collect();
+
+        for s in 0..steps {
+            reflect(&mut self.inner.grid);
+
+            // First half step — x direction, rows of 0..=n by strip.
+            {
+                let grid = &self.inner.grid;
+                tasks = parallel_map(tasks, workers, |mut t| {
+                    let (a, b) = (t.px.lo, t.px.hi);
+                    let len = (b - a) * m;
+                    t.hx.clear();
+                    t.hx.resize(len, 0.0);
+                    t.ux.clear();
+                    t.ux.resize(len, 0.0);
+                    t.vx.clear();
+                    t.vx.resize(len, 0.0);
+                    let muls = {
+                        let mut c = Ctx::new(t.be.as_mut(), mode);
+                        for i in a..b {
+                            if all {
+                                t.fin.clear();
+                                for j in 0..n {
+                                    let ga = grid.idx(i + 1, j + 1);
+                                    let gb = grid.idx(i, j + 1);
+                                    t.fin.push((grid.u[ga], grid.h[ga]));
+                                    t.fin.push((grid.u[gb], grid.h[gb]));
+                                }
+                                flux_row(&mut c, g2, &t.fin, &mut t.frow, batched);
+                            }
+                            for j in 0..n {
+                                let ga = grid.idx(i + 1, j + 1);
+                                let gb = grid.idx(i, j + 1);
+                                let kk = (i - a) * m + j;
+                                t.hx[kk] = 0.5 * (grid.h[ga] + grid.h[gb])
+                                    - 0.5 * ddx * (grid.u[ga] - grid.u[gb]);
+                                let (fa, fb) = if all {
+                                    (t.frow[2 * j], t.frow[2 * j + 1])
+                                } else {
+                                    (
+                                        f2_plain(g2, grid.u[ga], grid.h[ga]),
+                                        f2_plain(g2, grid.u[gb], grid.h[gb]),
+                                    )
+                                };
+                                t.ux[kk] =
+                                    0.5 * (grid.u[ga] + grid.u[gb]) - 0.5 * ddx * (fa - fb);
+                                t.vx[kk] = 0.5 * (grid.v[ga] + grid.v[gb])
+                                    - 0.5
+                                        * ddx
+                                        * (grid.u[ga] * grid.v[ga] / grid.h[ga]
+                                            - grid.u[gb] * grid.v[gb] / grid.h[gb]);
+                            }
+                        }
+                        c.muls
+                    };
+                    t.muls += muls;
+                    t
+                });
+            }
+            for t in &tasks {
+                let (a, b) = (t.px.lo, t.px.hi);
+                self.inner.hx[a * m..b * m].copy_from_slice(&t.hx);
+                self.inner.ux[a * m..b * m].copy_from_slice(&t.ux);
+                self.inner.vx[a * m..b * m].copy_from_slice(&t.vx);
+            }
+
+            // First half step — y direction, rows of 0..n by strip.
+            {
+                let grid = &self.inner.grid;
+                tasks = parallel_map(tasks, workers, |mut t| {
+                    let (a, b) = (t.py.lo, t.py.hi);
+                    let len = (b - a) * m;
+                    t.hy.clear();
+                    t.hy.resize(len, 0.0);
+                    t.uy.clear();
+                    t.uy.resize(len, 0.0);
+                    t.vy.clear();
+                    t.vy.resize(len, 0.0);
+                    let muls = {
+                        let mut c = Ctx::new(t.be.as_mut(), mode);
+                        for i in a..b {
+                            if all {
+                                t.fin.clear();
+                                for j in 0..=n {
+                                    let ga = grid.idx(i + 1, j + 1);
+                                    let gb = grid.idx(i + 1, j);
+                                    t.fin.push((grid.v[ga], grid.h[ga]));
+                                    t.fin.push((grid.v[gb], grid.h[gb]));
+                                }
+                                flux_row(&mut c, g2, &t.fin, &mut t.frow, batched);
+                            }
+                            for j in 0..=n {
+                                let ga = grid.idx(i + 1, j + 1);
+                                let gb = grid.idx(i + 1, j);
+                                let kk = (i - a) * m + j;
+                                t.hy[kk] = 0.5 * (grid.h[ga] + grid.h[gb])
+                                    - 0.5 * ddy * (grid.v[ga] - grid.v[gb]);
+                                t.uy[kk] = 0.5 * (grid.u[ga] + grid.u[gb])
+                                    - 0.5
+                                        * ddy
+                                        * (grid.v[ga] * grid.u[ga] / grid.h[ga]
+                                            - grid.v[gb] * grid.u[gb] / grid.h[gb]);
+                                let (ga2, gb2) = if all {
+                                    (t.frow[2 * j], t.frow[2 * j + 1])
+                                } else {
+                                    (
+                                        f2_plain(g2, grid.v[ga], grid.h[ga]),
+                                        f2_plain(g2, grid.v[gb], grid.h[gb]),
+                                    )
+                                };
+                                t.vy[kk] =
+                                    0.5 * (grid.v[ga] + grid.v[gb]) - 0.5 * ddy * (ga2 - gb2);
+                            }
+                        }
+                        c.muls
+                    };
+                    t.muls += muls;
+                    t
+                });
+            }
+            for t in &tasks {
+                let (a, b) = (t.py.lo, t.py.hi);
+                self.inner.hy[a * m..b * m].copy_from_slice(&t.hy);
+                self.inner.uy[a * m..b * m].copy_from_slice(&t.uy);
+                self.inner.vy[a * m..b * m].copy_from_slice(&t.vy);
+            }
+
+            // Second (full) step — interior rows 1..=n by strip; reads the
+            // assembled half-step arrays (the halos), writes its own rows.
+            {
+                let grid = &self.inner.grid;
+                let (hx, ux, vx) = (&self.inner.hx, &self.inner.ux, &self.inner.vx);
+                let (hy, uy, vy) = (&self.inner.hy, &self.inner.uy, &self.inner.vy);
+                tasks = parallel_map(tasks, workers, |mut t| {
+                    let (a, b) = (t.pf.lo + 1, t.pf.hi + 1);
+                    let len = (b - a) * n;
+                    t.oh.clear();
+                    t.oh.resize(len, 0.0);
+                    t.ou.clear();
+                    t.ou.resize(len, 0.0);
+                    t.ov.clear();
+                    t.ov.resize(len, 0.0);
+                    let stride = if all { 4 } else { 2 };
+                    let muls = {
+                        let mut c = Ctx::new(t.be.as_mut(), mode);
+                        for i in a..b {
+                            t.fin.clear();
+                            for j in 1..=n {
+                                let kxa = i * m + (j - 1);
+                                let kxb = (i - 1) * m + (j - 1);
+                                t.fin.push((ux[kxa], hx[kxa]));
+                                t.fin.push((ux[kxb], hx[kxb]));
+                                if all {
+                                    let kya = (i - 1) * m + j;
+                                    let kyb = (i - 1) * m + (j - 1);
+                                    t.fin.push((vy[kya], hy[kya]));
+                                    t.fin.push((vy[kyb], hy[kyb]));
+                                }
+                            }
+                            flux_row(&mut c, g2, &t.fin, &mut t.frow, batched);
+                            for j in 1..=n {
+                                let cc = grid.idx(i, j);
+                                let kxa = i * m + (j - 1);
+                                let kxb = (i - 1) * m + (j - 1);
+                                let kya = (i - 1) * m + j;
+                                let kyb = (i - 1) * m + (j - 1);
+                                let o = (i - a) * n + (j - 1);
+
+                                t.oh[o] = grid.h[cc]
+                                    - (ddx * (ux[kxa] - ux[kxb]) + ddy * (vy[kya] - vy[kyb]));
+
+                                let base = (j - 1) * stride;
+                                let (fa, fb) = (t.frow[base], t.frow[base + 1]);
+                                t.ou[o] = grid.u[cc]
+                                    - (ddx * (fa - fb)
+                                        + ddy
+                                            * (vy[kya] * uy[kya] / hy[kya]
+                                                - vy[kyb] * uy[kyb] / hy[kyb]));
+
+                                let (ga, gb) = if all {
+                                    (t.frow[base + 2], t.frow[base + 3])
+                                } else {
+                                    (
+                                        f2_plain(g2, vy[kya], hy[kya]),
+                                        f2_plain(g2, vy[kyb], hy[kyb]),
+                                    )
+                                };
+                                t.ov[o] = grid.v[cc]
+                                    - (ddx
+                                        * (ux[kxa] * vx[kxa] / hx[kxa]
+                                            - ux[kxb] * vx[kxb] / hx[kxb])
+                                        + ddy * (ga - gb));
+                            }
+                        }
+                        c.muls
+                    };
+                    t.muls += muls;
+                    t
+                });
+            }
+            for t in &tasks {
+                for (ri, i) in ((t.pf.lo + 1)..(t.pf.hi + 1)).enumerate() {
+                    for j in 1..=n {
+                        let cc = self.inner.grid.idx(i, j);
+                        self.inner.grid.h[cc] = t.oh[ri * n + (j - 1)];
+                        self.inner.grid.u[cc] = t.ou[ri * n + (j - 1)];
+                        self.inner.grid.v[cc] = t.ov[ri * n + (j - 1)];
+                    }
+                }
+            }
+
+            let global = step_base + s + 1;
+            if snapshot_every != 0 && global % snapshot_every == 0 {
+                snaps.push((global, self.inner.interior_h()));
+            }
+        }
+
+        for t in tasks {
+            ctx.muls += t.muls;
+            ctx.be.absorb(t.be.as_ref());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run wrappers (the `shards` knob the config/serving layers call)
+// ---------------------------------------------------------------------------
+
+/// Sharded [`heat1d::run`]: `shards = 1` (or a non-forkable backend) is the
+/// unsharded run, and every other shard count is bit-identical to it.
+pub fn run_heat(
+    params: &HeatParams,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    shards: usize,
+) -> HeatResult {
+    let mut sim = DecompHeat::new(params, shards);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    heat1d::finish(sim.into_inner(), stats)
+}
+
+/// Sharded [`heat1d::run_adaptive`] — the widen-retry restores the whole
+/// assembled grid, so a format switch is atomic across all shards.
+pub fn run_heat_adaptive(
+    params: &HeatParams,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    shards: usize,
+) -> HeatResult {
+    let mut sim = DecompHeat::new(params, shards);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    heat1d::finish(sim.into_inner(), stats)
+}
+
+/// Sharded [`advection1d::run`].
+pub fn run_advection(
+    params: &AdvectionParams,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    shards: usize,
+) -> AdvectionResult {
+    let mut sim = DecompAdvection::new(params, shards);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    advection1d::finish(sim.into_inner(), stats)
+}
+
+/// Sharded [`advection1d::run_adaptive`].
+pub fn run_advection_adaptive(
+    params: &AdvectionParams,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    shards: usize,
+) -> AdvectionResult {
+    let mut sim = DecompAdvection::new(params, shards);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    advection1d::finish(sim.into_inner(), stats)
+}
+
+/// Sharded [`wave2d::run`].
+pub fn run_wave(
+    params: &WaveParams,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    shards: usize,
+) -> WaveResult {
+    let mut sim = DecompWave::new(params, shards);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    wave2d::finish(sim.into_inner(), stats)
+}
+
+/// Sharded [`wave2d::run_adaptive`].
+pub fn run_wave_adaptive(
+    params: &WaveParams,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    shards: usize,
+) -> WaveResult {
+    let mut sim = DecompWave::new(params, shards);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    wave2d::finish(sim.into_inner(), stats)
+}
+
+/// Sharded [`swe2d::run_mode`].
+pub fn run_swe(
+    params: &SweParams,
+    be: &mut dyn Arith,
+    scope: QuantScope,
+    mode: QuantMode,
+    shards: usize,
+) -> SweResult {
+    let mut sim = DecompSwe::new(params, scope, shards);
+    let stats = scenario::run_sim(&mut sim, be, mode, params.steps, params.snapshot_every, true);
+    swe2d::finish_result(sim.into_inner(), stats)
+}
+
+/// Sharded [`swe2d::run_adaptive`].
+pub fn run_swe_adaptive(
+    params: &SweParams,
+    sched: &mut AdaptiveArith,
+    scope: QuantScope,
+    mode: QuantMode,
+    shards: usize,
+) -> SweResult {
+    let mut sim = DecompSwe::new(params, scope, shards);
+    let stats = scenario::run_sim_adaptive(
+        &mut sim,
+        sched,
+        mode,
+        params.steps,
+        params.snapshot_every,
+        true,
+    );
+    swe2d::finish_result(sim.into_inner(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{BatchEngine, F64Arith, FixedArith, R2f2Arith};
+    use crate::r2f2core::R2f2Config;
+    use crate::softfloat::FpFormat;
+
+    #[test]
+    fn partition_covers_exactly_once_with_balanced_sizes() {
+        for n in [1usize, 2, 3, 7, 64, 1000] {
+            for shards in [1usize, 2, 3, 7, 64, 2000] {
+                let parts = partition(n, shards);
+                assert_eq!(parts.len(), shards.min(n));
+                assert_eq!(parts[0].lo, 0);
+                assert_eq!(parts.last().unwrap().hi, n);
+                for w in parts.windows(2) {
+                    assert_eq!(w[0].hi, w[1].lo, "gap/overlap at {w:?}");
+                }
+                let min = parts.iter().map(Part::len).min().unwrap();
+                let max = parts.iter().map(Part::len).max().unwrap();
+                assert!(max - min <= 1, "unbalanced: {min}..{max}");
+                assert!(parts.iter().all(|p| !p.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_slab_overlaps_are_exactly_one_node() {
+        let n = 11;
+        let parts = partition(n, 3);
+        let slabs: Vec<_> = parts.iter().filter_map(|&p| stencil_slab(p, n)).collect();
+        // Each slab = owned interior ± 1; neighbours overlap by 2 nodes
+        // (each other's halo + boundary-shared node).
+        for (&(s0, s1), &p) in slabs.iter().zip(parts.iter()) {
+            assert_eq!(s0, p.lo.max(1) - 1);
+            assert_eq!(s1, p.hi.min(n - 1) + 1);
+        }
+        // Boundary-only parts have no slab.
+        assert!(stencil_slab(Part { lo: 0, hi: 1 }, 3).is_none());
+        assert!(stencil_slab(Part { lo: 2, hi: 3 }, 3).is_none());
+        assert!(stencil_slab(Part { lo: 1, hi: 2 }, 3).is_some());
+    }
+
+    fn heat_params() -> HeatParams {
+        HeatParams { n: 33, dt: 0.25 / (32.0f64 * 32.0), steps: 25, ..HeatParams::default() }
+    }
+
+    #[test]
+    fn sharded_heat_is_bit_identical_for_forkable_backends() {
+        let p = heat_params();
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            let mut be = FixedArith::new(FpFormat::E5M10);
+            let base = heat1d::run(&p, &mut be, mode);
+            for shards in [1usize, 2, 3, 7, 32] {
+                let mut be = FixedArith::new(FpFormat::E5M10);
+                let run = run_heat(&p, &mut be, mode, shards);
+                assert_eq!(run.muls, base.muls, "{mode:?} shards={shards}");
+                assert_eq!(run.range_events, base.range_events, "{mode:?} shards={shards}");
+                for i in 0..p.n {
+                    assert_eq!(
+                        run.u[i].to_bits(),
+                        base.u[i].to_bits(),
+                        "{mode:?} shards={shards} node {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_heat_carrier_engine_and_f64_also_match() {
+        let p = heat_params();
+        let mut be = FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier);
+        let base = heat1d::run(&p, &mut be, QuantMode::Full);
+        let mut be = FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier);
+        let run = run_heat(&p, &mut be, QuantMode::Full, 3);
+        assert_eq!(run.range_events, base.range_events);
+        for i in 0..p.n {
+            assert_eq!(run.u[i].to_bits(), base.u[i].to_bits(), "node {i}");
+        }
+
+        let base = heat1d::run(&p, &mut F64Arith, QuantMode::MulOnly);
+        let run = run_heat(&p, &mut F64Arith, QuantMode::MulOnly, 5);
+        for i in 0..p.n {
+            assert_eq!(run.u[i].to_bits(), base.u[i].to_bits(), "f64 node {i}");
+        }
+    }
+
+    #[test]
+    fn non_forkable_backend_falls_back_to_the_unsharded_stream() {
+        let p = heat_params();
+        let mut a = R2f2Arith::new(R2f2Config::C16_393);
+        let base = heat1d::run(&p, &mut a, QuantMode::MulOnly);
+        let mut b = R2f2Arith::new(R2f2Config::C16_393);
+        let run = run_heat(&p, &mut b, QuantMode::MulOnly, 4);
+        assert_eq!(run.r2f2_stats, base.r2f2_stats);
+        for i in 0..p.n {
+            assert_eq!(run.u[i].to_bits(), base.u[i].to_bits(), "node {i}");
+        }
+    }
+
+    #[test]
+    fn n3_grid_shards_to_single_interior_node() {
+        // The degenerate split: two boundary-only shards, one worker shard.
+        let p = HeatParams { n: 3, dt: 0.25 / 4.0, steps: 8, ..HeatParams::default() };
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let base = heat1d::run(&p, &mut be, QuantMode::Full);
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let run = run_heat(&p, &mut be, QuantMode::Full, 3);
+        assert_eq!(run.muls, base.muls);
+        assert_eq!(run.range_events, base.range_events);
+        for i in 0..3 {
+            assert_eq!(run.u[i].to_bits(), base.u[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_burgers_advection_is_bit_identical() {
+        let p = AdvectionParams {
+            n: 64,
+            steps: 40,
+            ..AdvectionParams::burgers_default()
+        };
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            let mut be = FixedArith::new(FpFormat::E5M10);
+            let base = advection1d::run(&p, &mut be, mode);
+            for shards in [2usize, 3, 7, 63] {
+                let mut be = FixedArith::new(FpFormat::E5M10);
+                let run = run_advection(&p, &mut be, mode, shards);
+                assert_eq!(run.muls, base.muls, "{mode:?} shards={shards}");
+                assert_eq!(run.range_events, base.range_events, "{mode:?} shards={shards}");
+                for i in 0..p.n {
+                    assert_eq!(
+                        run.u[i].to_bits(),
+                        base.u[i].to_bits(),
+                        "{mode:?} shards={shards} cell {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_wave_is_bit_identical() {
+        let p = WaveParams { n: 17, dt: 0.5 / 16.0, steps: 30, ..WaveParams::default() };
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            let mut be = FixedArith::new(FpFormat::E5M10);
+            let base = wave2d::run(&p, &mut be, mode);
+            for shards in [2usize, 3, 7, 15] {
+                let mut be = FixedArith::new(FpFormat::E5M10);
+                let run = run_wave(&p, &mut be, mode, shards);
+                assert_eq!(run.muls, base.muls, "{mode:?} shards={shards}");
+                assert_eq!(run.range_events, base.range_events, "{mode:?} shards={shards}");
+                for i in 0..run.u.len() {
+                    assert_eq!(
+                        run.u[i].to_bits(),
+                        base.u[i].to_bits(),
+                        "{mode:?} shards={shards} node {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_swe_is_bit_identical_in_both_scopes() {
+        let p = SweParams { steps: 12, ..SweParams::default() };
+        for scope in [QuantScope::UxFluxOnly, QuantScope::AllFluxMuls] {
+            let mut be = FixedArith::new(FpFormat::new(6, 9));
+            let base = swe2d::run_mode(&p, &mut be, scope, QuantMode::MulOnly);
+            for shards in [2usize, 3, 7] {
+                let mut be = FixedArith::new(FpFormat::new(6, 9));
+                let run = run_swe(&p, &mut be, scope, QuantMode::MulOnly, shards);
+                assert_eq!(run.muls, base.muls, "{scope:?} shards={shards}");
+                assert_eq!(run.range_events, base.range_events, "{scope:?} shards={shards}");
+                assert_eq!(run.mass_drift.to_bits(), base.mass_drift.to_bits());
+                for (name, a, b) in
+                    [("h", &run.h, &base.h), ("u", &run.u, &base.u), ("v", &run.v, &base.v)]
+                {
+                    for i in 0..a.len() {
+                        assert_eq!(
+                            a[i].to_bits(),
+                            b[i].to_bits(),
+                            "{scope:?} shards={shards} {name}[{i}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_snapshots_match_unsharded() {
+        let p = HeatParams {
+            n: 33,
+            dt: 0.25 / (32.0f64 * 32.0),
+            steps: 40,
+            snapshot_every: 10,
+            ..HeatParams::default()
+        };
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let base = heat1d::run(&p, &mut be, QuantMode::Full);
+        let mut be = FixedArith::new(FpFormat::E5M10);
+        let run = run_heat(&p, &mut be, QuantMode::Full, 4);
+        assert_eq!(run.snapshots.len(), base.snapshots.len());
+        for (a, b) in run.snapshots.iter().zip(base.snapshots.iter()) {
+            assert_eq!(a.0, b.0);
+            for i in 0..a.1.len() {
+                assert_eq!(a.1[i].to_bits(), b.1[i].to_bits(), "snapshot step {} node {i}", a.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_adaptive_heat_matches_unsharded_schedule_and_field() {
+        use crate::pde::adaptive::AdaptivePolicy;
+        let p = HeatParams {
+            n: 33,
+            dt: 0.25 / (32.0f64 * 32.0),
+            steps: 600,
+            ..HeatParams::default()
+        };
+        let mut pol = AdaptivePolicy::heat_default();
+        pol.epoch_len = 50;
+        let mut s_base = AdaptiveArith::new(pol.clone());
+        let base = heat1d::run_adaptive(&p, &mut s_base, QuantMode::MulOnly);
+        for shards in [2usize, 5] {
+            let mut s_run = AdaptiveArith::new(pol.clone());
+            let run = run_heat_adaptive(&p, &mut s_run, QuantMode::MulOnly, shards);
+            assert_eq!(s_run.decisions(), s_base.decisions(), "shards={shards}");
+            assert_eq!(s_run.trace(), s_base.trace(), "shards={shards}");
+            assert_eq!(run.muls, base.muls, "shards={shards}");
+            assert_eq!(run.range_events, base.range_events, "shards={shards}");
+            for i in 0..p.n {
+                assert_eq!(run.u[i].to_bits(), base.u[i].to_bits(), "shards={shards} node {i}");
+            }
+        }
+        // The schedule must actually have widened (real adaptive pressure).
+        assert!(s_base.report().widen_events >= 1);
+    }
+}

@@ -94,10 +94,10 @@ pub struct HeatResult {
 /// rollback — is the generic drivers' job.
 #[derive(Debug)]
 pub struct HeatSim {
-    n: usize,
-    r: f64,
-    u: Vec<f64>,
-    next: Vec<f64>,
+    pub(super) n: usize,
+    pub(super) r: f64,
+    pub(super) u: Vec<f64>,
+    pub(super) next: Vec<f64>,
 }
 
 impl HeatSim {
@@ -216,7 +216,7 @@ impl Sim for HeatSim {
     }
 }
 
-fn finish(sim: HeatSim, stats: RunStats) -> HeatResult {
+pub(super) fn finish(sim: HeatSim, stats: RunStats) -> HeatResult {
     HeatResult {
         u: sim.into_field(),
         snapshots: stats.snapshots,

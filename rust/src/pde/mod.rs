@@ -16,6 +16,7 @@
 
 pub mod adaptive;
 pub mod advection1d;
+pub mod decomp;
 pub mod heat1d;
 pub mod init;
 pub mod scenario;
@@ -180,6 +181,22 @@ pub trait Arith {
     fn active_format(&self) -> Option<FpFormat> {
         None
     }
+    /// Spawn an independent worker unit for one decomposed subdomain
+    /// (`pde::decomp`, DESIGN.md §13): same format and engine, fresh
+    /// telemetry counters. Only **history-independent** backends — units
+    /// whose per-operation results depend on the operands alone, never on
+    /// the multiplication history — may fork, because forked workers see
+    /// only their shard's slice of the global operation stream. Stateful
+    /// units (R2F2's split register, the stochastic rounder) return `None`
+    /// and the decomposed drivers fall back to issuing the shards'
+    /// operations sequentially, in global order, through the original unit.
+    fn fork(&self) -> Option<Box<dyn Arith + Send>> {
+        None
+    }
+    /// Fold a forked worker's telemetry (range-event counters) back into
+    /// this unit after a decomposed advance. The default is a no-op for
+    /// backends that track nothing.
+    fn absorb(&mut self, _child: &dyn Arith) {}
 }
 
 /// The canonical scalar heat-stencil sequence — the reference semantics the
@@ -305,6 +322,9 @@ impl Arith for F64Arith {
             *o = q1 * q1 / q3 + g2 * (q3 * q3);
         }
     }
+    fn fork(&self) -> Option<Box<dyn Arith + Send>> {
+        Some(Box::new(F64Arith))
+    }
 }
 
 /// Hardware single precision (the paper's "32-bit" reference).
@@ -357,6 +377,9 @@ impl Arith for F32Arith {
         }
         next[0] = u[0];
         next[n - 1] = u[n - 1];
+    }
+    fn fork(&self) -> Option<Box<dyn Arith + Send>> {
+        Some(Box::new(F32Arith))
     }
 }
 
@@ -890,6 +913,18 @@ impl Arith for FixedArith {
     }
     fn active_format(&self) -> Option<FpFormat> {
         Some(self.fmt)
+    }
+    fn fork(&self) -> Option<Box<dyn Arith + Send>> {
+        // Per-op results depend only on (fmt, operands) — RNE rounding holds
+        // no state — so a worker with fresh counters and the same engine
+        // reproduces this unit's arithmetic bit-for-bit on its shard.
+        Some(Box::new(FixedArith::new(self.fmt).with_engine(self.engine)))
+    }
+    fn absorb(&mut self, child: &dyn Arith) {
+        if let Some(ev) = child.range_events() {
+            self.events.overflows += ev.overflows;
+            self.events.underflows += ev.underflows;
+        }
     }
 }
 

@@ -34,6 +34,7 @@
 
 use super::adaptive::{fixed_cost_lut, AdaptiveArith, AdaptivePolicy, Decision};
 use super::advection1d::{AdvectionParams, AdvectionSim};
+use super::decomp::{DecompAdvection, DecompHeat, DecompSwe, DecompWave};
 use super::heat1d::{HeatParams, HeatSim};
 use super::swe2d::{QuantScope, SweParams, SweSim};
 use super::wave2d::{WaveParams, WaveSim};
@@ -267,6 +268,14 @@ pub struct ScenarioSpec {
     /// Run under the adaptive scheduler (build it from
     /// [`ScenarioSpec::adaptive_policy`]).
     pub run_adaptive: fn(ScenarioSize, &mut AdaptiveArith, QuantMode, bool) -> ScenarioRun,
+    /// [`ScenarioSpec::run`] decomposed over the worker pool (`pde::decomp`,
+    /// DESIGN.md §13); the last argument is the shard count. Bit-identical
+    /// to `run` for every shard count — `rust/tests/decomp_identity.rs`
+    /// holds the contract.
+    pub run_sharded: fn(ScenarioSize, &mut dyn Arith, QuantMode, bool, usize) -> ScenarioRun,
+    /// [`ScenarioSpec::run_adaptive`] decomposed over the worker pool.
+    pub run_adaptive_sharded:
+        fn(ScenarioSize, &mut AdaptiveArith, QuantMode, bool, usize) -> ScenarioRun,
     /// The scenario's default adaptive ladder + epoch length.
     pub adaptive_policy: fn() -> AdaptivePolicy,
     /// The rung the default [`ScenarioSize::Adaptive`] run widens onto in
@@ -298,6 +307,8 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
         stress: "decaying sine crosses many octaves: wide range early, sub-ulp updates late",
         run: run_heat_scn,
         run_adaptive: run_heat_adaptive_scn,
+        run_sharded: run_heat_scn_sharded,
+        run_adaptive_sharded: run_heat_adaptive_scn_sharded,
         adaptive_policy: heat_scn_policy,
         wide_format: FpFormat::E5M10,
         expect_narrow: true,
@@ -309,6 +320,8 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
         stress: "flux term 0.5*g*h^2 ~ 1e5 overflows E5M10 while gradients need mantissa",
         run: run_swe_scn,
         run_adaptive: run_swe_adaptive_scn,
+        run_sharded: run_swe_scn_sharded,
+        run_adaptive_sharded: run_swe_adaptive_scn_sharded,
         adaptive_policy: AdaptivePolicy::swe_default,
         wide_format: FpFormat::new(6, 9),
         expect_narrow: false,
@@ -320,6 +333,8 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
         stress: "CFL-constant and state-by-state products walk the exponent range as transport decays",
         run: run_advection_scn,
         run_adaptive: run_advection_adaptive_scn,
+        run_sharded: run_advection_scn_sharded,
+        run_adaptive_sharded: run_advection_adaptive_scn_sharded,
         adaptive_policy: AdaptivePolicy::advection_default,
         wide_format: FpFormat::E5M10,
         expect_narrow: true,
@@ -331,6 +346,8 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
         stress: "signed oscillation exercises negatives/cancellation; amplitude 300 saturates E4M3",
         run: run_wave_scn,
         run_adaptive: run_wave_adaptive_scn,
+        run_sharded: run_wave_scn_sharded,
+        run_adaptive_sharded: run_wave_adaptive_scn_sharded,
         adaptive_policy: AdaptivePolicy::wave_default,
         wide_format: FpFormat::E5M10,
         expect_narrow: true,
@@ -410,6 +427,32 @@ fn run_heat_adaptive_scn(
     finish_scn(sim, stats)
 }
 
+fn run_heat_scn_sharded(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = heat_scn_params(size);
+    let mut sim = DecompHeat::new(&p, shards);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_heat_adaptive_scn_sharded(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = heat_scn_params(size);
+    let mut sim = DecompHeat::new(&p, shards);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
 // -- shallow water ---------------------------------------------------------
 
 fn swe_scn_params(size: ScenarioSize) -> SweParams {
@@ -440,6 +483,32 @@ fn run_swe_adaptive_scn(
 ) -> ScenarioRun {
     let p = swe_scn_params(size);
     let mut sim = SweSim::new(&p, QuantScope::UxFluxOnly);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_swe_scn_sharded(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = swe_scn_params(size);
+    let mut sim = DecompSwe::new(&p, QuantScope::UxFluxOnly, shards);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_swe_adaptive_scn_sharded(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = swe_scn_params(size);
+    let mut sim = DecompSwe::new(&p, QuantScope::UxFluxOnly, shards);
     let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
     finish_scn(sim, stats)
 }
@@ -489,6 +558,32 @@ fn run_advection_adaptive_scn(
     finish_scn(sim, stats)
 }
 
+fn run_advection_scn_sharded(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = advection_scn_params(size);
+    let mut sim = DecompAdvection::new(&p, shards);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_advection_adaptive_scn_sharded(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = advection_scn_params(size);
+    let mut sim = DecompAdvection::new(&p, shards);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
 // -- wave ------------------------------------------------------------------
 
 fn wave_scn_params(size: ScenarioSize) -> WaveParams {
@@ -524,6 +619,32 @@ fn run_wave_adaptive_scn(
 ) -> ScenarioRun {
     let p = wave_scn_params(size);
     let mut sim = WaveSim::new(&p);
+    let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_wave_scn_sharded(
+    size: ScenarioSize,
+    be: &mut dyn Arith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = wave_scn_params(size);
+    let mut sim = DecompWave::new(&p, shards);
+    let stats = run_sim(&mut sim, be, mode, p.steps, 0, batched);
+    finish_scn(sim, stats)
+}
+
+fn run_wave_adaptive_scn_sharded(
+    size: ScenarioSize,
+    sched: &mut AdaptiveArith,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+) -> ScenarioRun {
+    let p = wave_scn_params(size);
+    let mut sim = DecompWave::new(&p, shards);
     let stats = run_sim_adaptive(&mut sim, sched, mode, p.steps, 0, batched);
     finish_scn(sim, stats)
 }

@@ -101,15 +101,15 @@ pub struct SweResult {
     pub mass_drift: f64,
 }
 
-struct Grid {
-    n: usize,
-    h: Vec<f64>,
-    u: Vec<f64>,
-    v: Vec<f64>,
+pub(super) struct Grid {
+    pub(super) n: usize,
+    pub(super) h: Vec<f64>,
+    pub(super) u: Vec<f64>,
+    pub(super) v: Vec<f64>,
 }
 
 impl Grid {
-    fn idx(&self, i: usize, j: usize) -> usize {
+    pub(super) fn idx(&self, i: usize, j: usize) -> usize {
         i * (self.n + 2) + j
     }
 }
@@ -120,7 +120,7 @@ impl Grid {
 /// adder (`Ctx::add` gates this on the mode); the division stays in the
 /// f64 carrier — the backends model multipliers and adders, not dividers.
 #[inline]
-fn f2_quant(ctx: &mut Ctx, g2: f64, q1: f64, q3: f64) -> f64 {
+pub(super) fn f2_quant(ctx: &mut Ctx, g2: f64, q1: f64, q3: f64) -> f64 {
     let q1sq = ctx.mul(q1, q1);
     let q3sq = ctx.mul(q3, q3);
     let gq = ctx.mul(g2, q3sq);
@@ -129,11 +129,11 @@ fn f2_quant(ctx: &mut Ctx, g2: f64, q1: f64, q3: f64) -> f64 {
 
 /// The same flux in plain f64 (all the paper's other 23 sub-equations).
 #[inline]
-fn f2_plain(g2: f64, q1: f64, q3: f64) -> f64 {
+pub(super) fn f2_plain(g2: f64, q1: f64, q3: f64) -> f64 {
     q1 * q1 / q3 + g2 * (q3 * q3)
 }
 
-fn finish_result(sim: SweSim, stats: RunStats) -> SweResult {
+pub(super) fn finish_result(sim: SweSim, stats: RunStats) -> SweResult {
     sim.finish(stats.muls, stats.backend, stats.r2f2_stats, stats.range_events, stats.snapshots)
 }
 
@@ -230,7 +230,7 @@ pub fn run_adaptive_scalar(
 /// Evaluate one row's worth of quantized fluxes into a reused output
 /// buffer, either fused through the batched engine or via per-call
 /// [`f2_quant`] — the streams are identical.
-fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batched: bool) {
+pub(super) fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batched: bool) {
     out.clear();
     if batched {
         out.resize(fin.len(), 0.0);
@@ -245,22 +245,22 @@ fn flux_row(ctx: &mut Ctx, g2: f64, fin: &[(f64, f64)], out: &mut Vec<f64>, batc
 /// Only the grid (`h`, `u`, `v` with ghost cells) carries across steps; the
 /// half-step arrays and flux row buffers are per-step scratch.
 pub struct SweSim {
-    n: usize,
-    m: usize,
-    g2: f64,
-    ddx: f64,
-    ddy: f64,
-    scope: QuantScope,
-    grid: Grid,
-    hx: Vec<f64>,
-    ux: Vec<f64>,
-    vx: Vec<f64>,
-    hy: Vec<f64>,
-    uy: Vec<f64>,
-    vy: Vec<f64>,
-    fin: Vec<(f64, f64)>,
-    frow: Vec<f64>,
-    mass0: f64,
+    pub(super) n: usize,
+    pub(super) m: usize,
+    pub(super) g2: f64,
+    pub(super) ddx: f64,
+    pub(super) ddy: f64,
+    pub(super) scope: QuantScope,
+    pub(super) grid: Grid,
+    pub(super) hx: Vec<f64>,
+    pub(super) ux: Vec<f64>,
+    pub(super) vx: Vec<f64>,
+    pub(super) hy: Vec<f64>,
+    pub(super) uy: Vec<f64>,
+    pub(super) vy: Vec<f64>,
+    pub(super) fin: Vec<(f64, f64)>,
+    pub(super) frow: Vec<f64>,
+    pub(super) mass0: f64,
 }
 
 impl SweSim {
@@ -537,7 +537,7 @@ impl SweSim {
 }
 
 /// Copy the interior n×n block out of an (n+2)²-padded field.
-fn interior(a: &[f64], n: usize) -> Vec<f64> {
+pub(super) fn interior(a: &[f64], n: usize) -> Vec<f64> {
     let mut out = Vec::with_capacity(n * n);
     for i in 1..=n {
         for j in 1..=n {
@@ -548,7 +548,7 @@ fn interior(a: &[f64], n: usize) -> Vec<f64> {
 }
 
 /// Reflective walls: depth mirrors, wall-normal momentum negates.
-fn reflect(grid: &mut Grid) {
+pub(super) fn reflect(grid: &mut Grid) {
     let n = grid.n;
     for j in 0..n + 2 {
         let (w0, w1) = (grid.idx(0, j), grid.idx(1, j));

@@ -104,21 +104,21 @@ pub struct WaveResult {
 /// per-row product scratch.
 #[derive(Debug)]
 pub struct WaveSim {
-    n: usize,
-    d1: f64,
-    d0: f64,
-    c2: f64,
-    u: Vec<f64>,
-    uold: Vec<f64>,
-    next: Vec<f64>,
+    pub(super) n: usize,
+    pub(super) d1: f64,
+    pub(super) d0: f64,
+    pub(super) c2: f64,
+    pub(super) u: Vec<f64>,
+    pub(super) uold: Vec<f64>,
+    pub(super) next: Vec<f64>,
     /// Per-row scratch: current-state row, previous-state row, Laplacian
     /// row, and the three product rows.
-    row_u: Vec<f64>,
-    row_old: Vec<f64>,
-    row_lap: Vec<f64>,
-    p1: Vec<f64>,
-    p0: Vec<f64>,
-    p2: Vec<f64>,
+    pub(super) row_u: Vec<f64>,
+    pub(super) row_old: Vec<f64>,
+    pub(super) row_lap: Vec<f64>,
+    pub(super) p1: Vec<f64>,
+    pub(super) p0: Vec<f64>,
+    pub(super) p2: Vec<f64>,
 }
 
 impl WaveSim {
@@ -282,7 +282,7 @@ impl Sim for WaveSim {
     }
 }
 
-fn finish(sim: WaveSim, stats: RunStats) -> WaveResult {
+pub(super) fn finish(sim: WaveSim, stats: RunStats) -> WaveResult {
     WaveResult {
         u: sim.into_field(),
         snapshots: stats.snapshots,

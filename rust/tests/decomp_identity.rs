@@ -1,0 +1,202 @@
+//! Domain-decomposition conformance suite (DESIGN.md §13): sharding a run
+//! over the worker pool (`pde::decomp`) is **bit-invisible**. For every
+//! entry of `pde::scenario::SCENARIOS`, every batch engine, and both
+//! quantization modes, the sharded run's final field, mul count, and range
+//! telemetry counters are bit-identical to the unsharded run at any shard
+//! count — including non-divisible splits and shard counts larger than the
+//! grid. The adaptive scheduler derives the **same decision log** sharded
+//! as unsharded, because widen-retry saves/restores all shards atomically
+//! through the adapters' global save/restore.
+//!
+//! The CI `decomp-identity` job runs this suite under `R2F2_WORKERS` ∈
+//! {1, 4} and greps the `MATRIX |` lines into the job summary — the worker
+//! count must not leak into any result either.
+
+use r2f2::analysis::Log2Histogram;
+use r2f2::pde::decomp::partition;
+use r2f2::pde::scenario::{ScenarioRun, ScenarioSize, SCENARIOS};
+use r2f2::pde::{AdaptiveArith, BatchEngine, FixedArith, QuantMode};
+use r2f2::softfloat::FpFormat;
+
+/// Shard counts every conformance case runs at. 1 is the delegation path,
+/// 2/3 include non-divisible splits for every registry grid size, 7 is
+/// prime (never divides a registry grid evenly), and 61 exceeds several
+/// Quick-size grids' interiors, forcing single-node slivers and the
+/// shards > n clamp.
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 7, 61];
+
+const ENGINES: [&str; 3] = ["scalar", "carrier", "packed"];
+
+fn make_backend(engine: &str, fmt: FpFormat) -> FixedArith {
+    match engine {
+        "scalar" | "packed" => FixedArith::new(fmt),
+        "carrier" => FixedArith::new(fmt).with_engine(BatchEngine::Carrier),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+fn batched(engine: &str) -> bool {
+    engine != "scalar"
+}
+
+fn assert_fields_bit_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: node {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+fn assert_runs_bit_equal(a: &ScenarioRun, b: &ScenarioRun, what: &str) {
+    assert_fields_bit_equal(&a.field, &b.field, what);
+    assert_eq!(a.muls, b.muls, "{what}: muls");
+    assert_eq!(a.range_events, b.range_events, "{what}: range events");
+    assert_eq!(a.r2f2_stats, b.r2f2_stats, "{what}: stats");
+}
+
+/// The load-bearing matrix: scenario × engine × mode × shard count, all
+/// bit-identical to the unsharded run.
+#[test]
+fn sharded_runs_bit_identical_for_every_scenario_engine_and_mode() {
+    for spec in SCENARIOS {
+        let fmt = spec.wide_format;
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            for engine in ENGINES {
+                let b = batched(engine);
+                let mut base_be = make_backend(engine, fmt);
+                let base = (spec.run)(ScenarioSize::Quick, &mut base_be, mode, b);
+                for shards in SHARD_COUNTS {
+                    let mut be = make_backend(engine, fmt);
+                    let run = (spec.run_sharded)(ScenarioSize::Quick, &mut be, mode, b, shards);
+                    let what = format!("{}/{engine}/{mode:?}/shards={shards}", spec.name);
+                    assert_runs_bit_equal(&base, &run, &what);
+                }
+                println!(
+                    "MATRIX | {} | {engine} {:?} | shards {:?} | bit-identical |",
+                    spec.name, mode, SHARD_COUNTS
+                );
+            }
+        }
+    }
+}
+
+/// The adaptive scheduler is shard-blind: decision log, switch trace,
+/// range-event counters, and the committed trajectory are bit-identical at
+/// every shard count, with the epoch-0 widen-retry (guaranteed by every
+/// registry scenario's default setup) restoring **all** shards atomically.
+#[test]
+fn adaptive_schedule_and_trajectory_are_shard_invariant() {
+    for spec in SCENARIOS {
+        let policy = (spec.adaptive_policy)();
+        let mut s_base = AdaptiveArith::new(policy.clone());
+        let base = (spec.run_adaptive)(
+            ScenarioSize::Adaptive,
+            &mut s_base,
+            QuantMode::MulOnly,
+            true,
+        );
+        for shards in SHARD_COUNTS {
+            let mut s = AdaptiveArith::new(policy.clone());
+            let run = (spec.run_adaptive_sharded)(
+                ScenarioSize::Adaptive,
+                &mut s,
+                QuantMode::MulOnly,
+                true,
+                shards,
+            );
+            let what = format!("{} adaptive shards={shards}", spec.name);
+            assert_eq!(s.decisions(), s_base.decisions(), "{what}: decisions");
+            assert_eq!(s.trace(), s_base.trace(), "{what}: trace");
+            assert_runs_bit_equal(&base, &run, &what);
+        }
+        // Every registry default widens in epoch 0 (the retry is what makes
+        // atomic all-shard restore load-bearing, not a vacuous pass).
+        let rep = s_base.report();
+        assert!(rep.widen_events >= 1, "{}: no widen exercised: {:?}", spec.name, rep.trace);
+        println!(
+            "MATRIX | {} | adaptive shards {:?} | schedule+field identical | widen {} narrow {} |",
+            spec.name, SHARD_COUNTS, rep.widen_events, rep.narrow_events
+        );
+    }
+}
+
+fn assert_hist_equal(got: &Log2Histogram, want: &Log2Histogram, what: &str) {
+    assert_eq!(got.total, want.total, "{what}: total");
+    assert_eq!(got.zeros, want.zeros, "{what}: zeros");
+    assert_eq!(got.negatives, want.negatives, "{what}: negatives");
+    assert_eq!(got.nonfinite, want.nonfinite, "{what}: nonfinite");
+    assert_eq!(got.nonzero_range(), want.nonzero_range(), "{what}: min/max abs");
+    let a: Vec<(i32, u64)> = got.iter().collect();
+    let b: Vec<(i32, u64)> = want.iter().collect();
+    assert_eq!(a, b, "{what}: buckets");
+}
+
+/// Range telemetry under sharding: per-shard `Log2Histogram`s over the
+/// `pde::decomp::partition` slices of the (bit-identical) sharded field,
+/// merged in any order, equal the single histogram over the unsharded
+/// field — counts, `nonfinite`, and the `min_abs`/`max_abs` range.
+#[test]
+fn per_shard_histograms_merge_to_the_unsharded_histogram() {
+    for spec in SCENARIOS {
+        let mut be = FixedArith::new(spec.wide_format);
+        let run = (spec.run)(ScenarioSize::Quick, &mut be, QuantMode::MulOnly, true);
+        let mut want = Log2Histogram::new();
+        for &v in &run.field {
+            want.record(v);
+        }
+        for shards in [2usize, 3, 7] {
+            let mut be = FixedArith::new(spec.wide_format);
+            let srun = (spec.run_sharded)(ScenarioSize::Quick, &mut be, QuantMode::MulOnly, true, shards);
+            let per_shard: Vec<Log2Histogram> = partition(srun.field.len(), shards)
+                .into_iter()
+                .map(|p| {
+                    let mut h = Log2Histogram::new();
+                    for &v in &srun.field[p.lo..p.hi] {
+                        h.record(v);
+                    }
+                    h
+                })
+                .collect();
+            let mut fwd = Log2Histogram::new();
+            for h in per_shard.iter() {
+                fwd.merge(h);
+            }
+            let mut rev = Log2Histogram::new();
+            for h in per_shard.iter().rev() {
+                rev.merge(h);
+            }
+            assert_hist_equal(&fwd, &want, &format!("{} shards={shards} fwd", spec.name));
+            assert_hist_equal(&rev, &want, &format!("{} shards={shards} rev", spec.name));
+        }
+    }
+
+    // Fields are finite by construction above; shard a stream that also
+    // carries zeros, signs, and non-finites through the same partition
+    // helper so the `nonfinite` merge path is exercised under sharding too.
+    let stream: Vec<f64> = vec![
+        0.0,
+        -0.0,
+        1.5,
+        f64::INFINITY,
+        -2.5e-9,
+        f64::NAN,
+        3.0e7,
+        f64::NEG_INFINITY,
+        -42.0,
+        0.125,
+    ];
+    let mut want = Log2Histogram::new();
+    for &v in &stream {
+        want.record(v);
+    }
+    for shards in [2usize, 3, 7, 10, 25] {
+        let mut got = Log2Histogram::new();
+        for p in partition(stream.len(), shards) {
+            let mut h = Log2Histogram::new();
+            for &v in &stream[p.lo..p.hi] {
+                h.record(v);
+            }
+            got.merge(&h);
+        }
+        assert_hist_equal(&got, &want, &format!("nonfinite stream shards={shards}"));
+    }
+}

@@ -1,5 +1,6 @@
 //! Property-based invariants over the numerics stack (proptest_mini).
 
+use r2f2::pde::decomp::{partition, stencil_slab, Part};
 use r2f2::proptest_mini::check;
 use r2f2::r2f2core::{mul_packed, R2f2Config, R2f2Multiplier};
 use r2f2::softfloat::{add, decode, encode, mul, FpFormat, Fp, Rounder};
@@ -218,6 +219,104 @@ fn prop_quantize_is_nearest() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_partition_covers_grid_exactly_once() {
+    // The decomposition contract (pde::decomp, DESIGN.md §13): for any
+    // (n, shards) — including shards ≫ n — the parts are contiguous,
+    // non-empty, cover [0, n) exactly once, and balance to within one.
+    check("partition exact cover", 3000, |g| {
+        let n = g.int_in(1, 5000) as usize;
+        let shards = g.int_in(1, 600) as usize;
+        let parts = partition(n, shards);
+        if parts.len() != shards.min(n) {
+            return Err(format!("n={n} shards={shards}: {} parts", parts.len()));
+        }
+        let mut lo = 0usize;
+        for (i, p) in parts.iter().enumerate() {
+            if p.lo != lo {
+                return Err(format!("n={n} shards={shards}: part {i} starts at {}", p.lo));
+            }
+            if p.is_empty() {
+                return Err(format!("n={n} shards={shards}: part {i} empty"));
+            }
+            lo = p.hi;
+        }
+        if lo != n {
+            return Err(format!("n={n} shards={shards}: cover ends at {lo}"));
+        }
+        let sizes: Vec<usize> = parts.iter().map(Part::len).collect();
+        let (min, max) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        if max - min > 1 {
+            return Err(format!("n={n} shards={shards}: sizes {min}..{max}"));
+        }
+        // shards > n degenerates to n single-element parts, never a panic.
+        if shards > n && sizes.iter().any(|&s| s != 1) {
+            return Err(format!("n={n} shards={shards}: oversharded sizes {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stencil_slab_halos_overlap_by_exactly_one_node() {
+    // Each shard's slab is its owned interior writes plus a one-node halo
+    // on each side; every interior node is written by exactly one shard,
+    // and each halo node is owned by the neighbouring shard (or is the
+    // Dirichlet boundary).
+    check("stencil slab halo overlap", 3000, |g| {
+        let n = g.int_in(3, 4000) as usize;
+        let shards = g.int_in(1, 64) as usize;
+        check_slabs(n, shards)
+    });
+    // The smallest stencil grid: one interior node. Exactly one shard gets
+    // a slab (covering all of [0, n)); boundary-only slivers get None.
+    for shards in 1..=6 {
+        check_slabs(3, shards).unwrap();
+    }
+}
+
+fn check_slabs(n: usize, shards: usize) -> Result<(), String> {
+    let parts = partition(n, shards);
+    let mut writes = vec![0u32; n];
+    for p in &parts {
+        let Some((s0, s1)) = stencil_slab(*p, n) else {
+            // A boundary-only sliver: no interior node to write.
+            if !(p.hi <= 1 || p.lo >= n - 1 || p.is_empty()) {
+                return Err(format!("n={n} shards={shards}: {p:?} wrongly slab-less"));
+            }
+            continue;
+        };
+        let (w0, w1) = (p.lo.max(1), p.hi.min(n - 1));
+        if s0 != w0 - 1 || s1 != w1 + 1 {
+            return Err(format!(
+                "n={n} shards={shards}: {p:?} slab [{s0},{s1}) not writes [{w0},{w1}) ± 1"
+            ));
+        }
+        if s1 > n {
+            return Err(format!("n={n} shards={shards}: slab end {s1} out of grid"));
+        }
+        for w in writes.iter_mut().take(w1).skip(w0) {
+            *w += 1;
+        }
+        // The halo nodes are *read* but owned elsewhere: the left halo is
+        // the last cell of some earlier part (or node 0), symmetrically on
+        // the right.
+        if s0 >= p.lo && s0 != 0 {
+            return Err(format!("n={n} shards={shards}: left halo {s0} not a neighbour's cell"));
+        }
+        if s1 - 1 < p.hi && s1 != n {
+            return Err(format!("n={n} shards={shards}: right halo {} inside own part", s1 - 1));
+        }
+    }
+    for (i, &w) in writes.iter().enumerate() {
+        let want = u32::from(i >= 1 && i < n - 1);
+        if w != want {
+            return Err(format!("n={n} shards={shards}: node {i} written {w}× (want {want})"));
+        }
+    }
+    Ok(())
 }
 
 #[test]

@@ -189,6 +189,55 @@ fn scenarios_healthz_and_error_routes() {
 }
 
 #[test]
+fn sharded_responses_are_byte_identical_to_unsharded() {
+    // `shards` (pde::decomp, DESIGN.md §13) must be invisible in the
+    // served bytes: same config at shards=1 and shards=4 answers the
+    // identical body, and both bit-equal the direct run.
+    let server = start(4, 8, 8);
+    let addr = server.addr();
+    let base = r#"{"app": "heat", "backend": "fixed:E5M10", "shards": 1,
+                   "heat": {"n": 33, "dt": 0.000244140625, "steps": 40}}"#;
+    let sharded = base.replace("\"shards\": 1", "\"shards\": 4");
+
+    let r1 = http::request(addr, "POST", "/v1/run", base.as_bytes()).unwrap();
+    let r4 = http::request(addr, "POST", "/v1/run", sharded.as_bytes()).unwrap();
+    assert_eq!(r1.status, 200, "{}", r1.text());
+    assert_eq!(r4.status, 200, "{}", r4.text());
+    // Different shard counts are different content addresses — the second
+    // request must be a genuine sharded run, not a cache hit on the first.
+    assert_eq!(r4.header("x-r2f2-cache"), Some("miss"));
+    assert_ne!(r1.header("x-r2f2-key"), r4.header("x-r2f2-key"));
+    assert_eq!(r1.text(), r4.text(), "shards=4 response diverged from shards=1");
+    assert_eq!(r1.text(), expected_response(base));
+    server.shutdown();
+}
+
+#[test]
+fn serving_limits_scale_with_shards() {
+    // A grid 4× over the unsharded 10⁶-node cap: rejected with 400 as-is,
+    // admitted — and actually served — once `shards` spreads each step
+    // across that many pool workers. dt = 3e-14 keeps r = dt/dx² = 0.48
+    // under the explicit-scheme stability bound at n = 4_000_001.
+    let server = start(2, 8, 8);
+    let addr = server.addr();
+    let over = r#"{"app": "heat", "backend": "f64",
+                   "heat": {"n": 4000001, "dt": 3e-14, "steps": 1}}"#;
+    let resp = http::request(addr, "POST", "/v1/run", over.as_bytes()).unwrap();
+    assert_eq!(resp.status, 400, "over-limit unsharded config must be rejected");
+
+    let sharded = r#"{"app": "heat", "backend": "f64", "shards": 4,
+                      "heat": {"n": 4000001, "dt": 3e-14, "steps": 1}}"#;
+    let resp = http::request(addr, "POST", "/v1/run", sharded.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200, "sharded equivalent must be admitted");
+    // The body echoes a 4-million-node field — spot-check it rather than
+    // re-parsing ~80 MB of JSON.
+    let text = resp.text();
+    assert!(text.contains("\"n\": 4000001"), "served field must be the full grid");
+    assert!(text.contains("\"rel_err_vs_f64\": 0,"), "f64 run matches its own reference");
+    server.shutdown();
+}
+
+#[test]
 fn one_slot_queue_rejects_excess_load_with_503() {
     // 1 worker, 1 queue slot: once a slow request occupies the worker and
     // a second occupies the slot, further requests must be rejected.
