@@ -3,17 +3,25 @@
 //! L3 native: scalar multiplier throughput (the sweep/solver inner loop),
 //! then the perf trajectory of the solver engines — **scalar dispatch**
 //! (per-mul virtual calls) → **carrier engine** (PR-1 batching, f64-carrier
-//! round-trips) → **packed engine** (DESIGN.md §9, state in bits) — on the
-//! heat and shallow-water workloads, plus sweep sharding scaling.
+//! round-trips) → **packed engine** (DESIGN.md §9, state in bits) →
+//! **SWAR engine** (§14, two lanes per u64) → **tiled** (§14, cache-tiled
+//! sweeps over the worker pool) — on the heat and shallow-water workloads,
+//! plus sweep sharding scaling. Tiers a workload can't run (tiling only
+//! applies to `Full`-mode multi-step; R2F2 has no lane kernels) are `null`
+//! in the JSON, so every speedup row stays one comparable family.
 //! L1/L2 via PJRT: compiled heat/SWE step latency (skipped when artifacts
 //! are absent).
 //!
 //! Flags (after `--` on the cargo command line):
 //!   --smoke         cut workload sizes and sample counts (CI mode)
-//!   --json <path>   also emit machine-readable results
-//!                   (schema `r2f2-bench-hotpath/4`, see EXPERIMENTS.md §E10)
-//!   --out <path>    alias for --json (the `BENCH_smoke.json` snapshot path:
+//!   --out <path>    also emit machine-readable results
+//!                   (schema `r2f2-bench-hotpath/5`, see EXPERIMENTS.md §E11;
+//!                   the `BENCH_smoke.json` snapshot path:
 //!                   `cargo bench --bench hotpath -- --smoke --out BENCH_smoke.json`)
+//!   --json <path>   alias for --out (kept for older invocations)
+//!
+//! Any other flag is an error (exit 2) — a typo must not silently bench
+//! the wrong configuration.
 
 use r2f2::bench_util::{bench_with, black_box, fmt_ns, print_results, BenchResult};
 use r2f2::coordinator::parallel_map;
@@ -39,21 +47,27 @@ use std::time::Duration;
 
 struct Opts {
     smoke: bool,
-    json: Option<String>,
+    /// JSON output path. `--out` is the canonical spelling (it names the
+    /// committed `BENCH_smoke.json` snapshot); `--json` is an accepted
+    /// alias — both land here, there is exactly one output path.
+    out: Option<String>,
 }
 
 fn parse_opts() -> Opts {
-    let mut opts = Opts { smoke: false, json: None };
+    let mut opts = Opts { smoke: false, out: None };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--smoke" => opts.smoke = true,
-            "--json" | "--out" => opts.json = args.next().or_else(|| {
+            "--out" | "--json" => opts.out = args.next().or_else(|| {
                 eprintln!("{a} needs a path");
                 std::process::exit(2);
             }),
             "--bench" => {} // cargo bench passes this through
-            other => eprintln!("ignoring unknown arg {other:?}"),
+            other => {
+                eprintln!("unknown arg {other:?} (expected --smoke, --out <path>)");
+                std::process::exit(2);
+            }
         }
     }
     if std::env::var("R2F2_BENCH_SMOKE").is_ok() {
@@ -62,12 +76,19 @@ fn parse_opts() -> Opts {
     opts
 }
 
-/// One engine tier of the perf trajectory.
+/// One engine tier of the perf trajectory. Each tier adds exactly one
+/// optimisation on top of the previous one, so the row family reads as a
+/// cumulative ablation: `Swar` is the packed engine with two lanes per u64
+/// (DESIGN.md §14) pinned to a single tile; `Tiled` is the SWAR engine with
+/// the default cache-tile geometry, so Full-mode sweeps fan out over the
+/// worker pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Tier {
     Scalar,
     Carrier,
     Packed,
+    Swar,
+    Tiled,
 }
 
 impl Tier {
@@ -76,15 +97,21 @@ impl Tier {
             Tier::Scalar => "scalar dispatch",
             Tier::Carrier => "carrier engine",
             Tier::Packed => "packed engine",
+            Tier::Swar => "swar engine",
+            Tier::Tiled => "tiled swar engine",
         }
     }
 }
 
-/// Per-workload median timings of the three tiers, for the speedup table.
+/// Per-workload median timings of the tiers, for the speedup table.
+/// Tiers a workload can't run stay `NaN` and are emitted as JSON `null`
+/// (tiling only applies to Full-mode multi-step sweeps; the R2F2 truncated
+/// datapath has no lane kernels, so Swar degrades to Packed there and we
+/// don't report a duplicate number).
 struct Trajectory {
     workload: &'static str,
     backend: &'static str,
-    ns: [f64; 3], // indexed by Tier as declared
+    ns: [f64; 5], // indexed by Tier as declared; NaN = tier not applicable
 }
 
 /// One adaptive-scheduler workload row (DESIGN.md §10): timings of the
@@ -135,7 +162,7 @@ fn emit_json(
 ) {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"r2f2-bench-hotpath/4\",\n");
+    out.push_str("  \"schema\": \"r2f2-bench-hotpath/5\",\n");
     out.push_str(
         "  \"generator\": \"cargo bench --bench hotpath -- --smoke --out BENCH_smoke.json\",\n",
     );
@@ -155,19 +182,27 @@ fn emit_json(
     }
     out.push_str("  ],\n");
     out.push_str("  \"speedups\": [\n");
+    // NaN tiers (not applicable to the workload) become JSON `null` so every
+    // row keeps the same field set — one comparable family under schema /5.
+    let opt = |v: f64| if v.is_finite() { format!("{v:.3}") } else { "null".to_string() };
     for (i, t) in trajs.iter().enumerate() {
-        let [s, c, p] = t.ns;
+        let [s, c, p, sw, ti] = t.ns;
         out.push_str(&format!(
-            "    {{\"workload\": \"{}\", \"backend\": \"{}\", \"scalar_ns\": {:.3}, \
-             \"carrier_ns\": {:.3}, \"packed_ns\": {:.3}, \
-             \"packed_vs_carrier\": {:.3}, \"packed_vs_scalar\": {:.3}}}{}\n",
+            "    {{\"workload\": \"{}\", \"backend\": \"{}\", \"scalar_ns\": {}, \
+             \"carrier_ns\": {}, \"packed_ns\": {}, \"swar_ns\": {}, \"tiled_ns\": {}, \
+             \"packed_vs_carrier\": {}, \"packed_vs_scalar\": {}, \
+             \"swar_vs_packed\": {}, \"tiled_vs_packed\": {}}}{}\n",
             json_escape(t.workload),
             json_escape(t.backend),
-            s,
-            c,
-            p,
-            c / p,
-            s / p,
+            opt(s),
+            opt(c),
+            opt(p),
+            opt(sw),
+            opt(ti),
+            opt(c / p),
+            opt(s / p),
+            opt(p / sw),
+            opt(p / ti),
             if i + 1 < trajs.len() { "," } else { "" }
         ));
     }
@@ -347,13 +382,25 @@ fn main() {
     }
 
     fn heat_case(p: &HeatParams, which: usize, tier: Tier, mode: QuantMode) {
+        // Packed/Swar tiers pin the sweep to a single tile so the row
+        // isolates the kernel change; only the Tiled tier uses the default
+        // cache-tile geometry (and thus the worker pool on large grids).
+        let one_tile = usize::MAX / 2;
         let mut be: Box<dyn Arith> = match (which, tier) {
             (0, _) => Box::new(F64Arith),
             (1, _) => Box::new(F32Arith),
             (2, Tier::Carrier) => {
                 Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Carrier))
             }
-            (2, _) => Box::new(FixedArith::new(FpFormat::E5M10)),
+            (2, Tier::Swar) => Box::new(
+                FixedArith::new(FpFormat::E5M10)
+                    .with_engine(BatchEngine::Swar)
+                    .with_tiling(1, one_tile),
+            ),
+            (2, Tier::Tiled) => {
+                Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Swar))
+            }
+            (2, _) => Box::new(FixedArith::new(FpFormat::E5M10).with_tiling(1, one_tile)),
             (_, Tier::Carrier) => {
                 Box::new(R2f2Arith::new(R2f2Config::C16_393).with_engine(BatchEngine::Carrier))
             }
@@ -374,12 +421,16 @@ fn main() {
         (2, "fixed E5M10", true),
         (3, "r2f2 <3,9,3>", true),
     ] {
-        let tiers: &[Tier] = if is_fixed_or_r2f2 {
-            &[Tier::Scalar, Tier::Carrier, Tier::Packed]
-        } else {
-            &[Tier::Scalar, Tier::Packed]
+        // MulOnly batches pair up under the SWAR engine (fixed formats ≤ 16
+        // bits only — R2F2's truncated datapath treats Swar as Packed, so a
+        // Swar row there would just duplicate the packed number). Tiling is
+        // a Full-mode property and doesn't apply here.
+        let tiers: &[Tier] = match which {
+            2 => &[Tier::Scalar, Tier::Carrier, Tier::Packed, Tier::Swar],
+            _ if is_fixed_or_r2f2 => &[Tier::Scalar, Tier::Carrier, Tier::Packed],
+            _ => &[Tier::Scalar, Tier::Packed],
         };
-        let mut ns = [0.0f64; 3];
+        let mut ns = [f64::NAN; 5];
         for &tier in tiers {
             let pp = p.clone();
             let r = bench_with(
@@ -396,10 +447,14 @@ fn main() {
         }
     }
     // Full mode: the packed engine keeps the whole state in bits across
-    // timesteps — the tentpole row.
+    // timesteps, the SWAR engine runs two lanes per u64, and the tiled tier
+    // fans cache-tile row blocks out over the worker pool — the full
+    // trajectory. On this grid the default geometry collapses to a single
+    // tile (interior < MIN_TILE), so the tiled row documents parity, not a
+    // speedup; the large grid below is where tiling engages.
     {
-        let mut ns = [0.0f64; 3];
-        for tier in [Tier::Scalar, Tier::Carrier, Tier::Packed] {
+        let mut ns = [f64::NAN; 5];
+        for tier in [Tier::Scalar, Tier::Carrier, Tier::Packed, Tier::Swar, Tier::Tiled] {
             let pp = p.clone();
             let r = bench_with(
                 &format!("{heat_label} fixed E5M10 full [{}]", tier.label()),
@@ -411,6 +466,35 @@ fn main() {
             results.push(r);
         }
         trajs.push(Trajectory { workload: "heat-full", backend: "fixed E5M10", ns });
+    }
+    // Full mode on a cache-straining grid: interior spans several MIN_TILE
+    // widths, so the Tiled tier genuinely splits the sweep across workers
+    // (deterministic tile order keeps it bit-identical — tests/swar_vs_packed.rs).
+    {
+        let mut big = HeatParams::default();
+        if opts.smoke {
+            big.n = 4097;
+            big.dt = 0.25 / (4096.0f64 * 4096.0);
+            big.steps = 5;
+        } else {
+            big.n = 16385;
+            big.dt = 0.25 / (16384.0f64 * 16384.0);
+            big.steps = 10;
+        }
+        let big_label = if opts.smoke { "heat 4097×5" } else { "heat 16385×10" };
+        let mut ns = [f64::NAN; 5];
+        for tier in [Tier::Scalar, Tier::Carrier, Tier::Packed, Tier::Swar, Tier::Tiled] {
+            let pp = big.clone();
+            let r = bench_with(
+                &format!("{big_label} fixed E5M10 full [{}]", tier.label()),
+                samples,
+                Duration::from_millis(batch_ms),
+                &mut || heat_case(&pp, 2, tier, QuantMode::Full),
+            );
+            ns[tier as usize] = r.median_ns;
+            results.push(r);
+        }
+        trajs.push(Trajectory { workload: "heat-full-large", backend: "fixed E5M10", ns });
     }
     print_results("L3 heat solver (one run per iteration)", &results);
     all_rows.extend(results);
@@ -437,8 +521,11 @@ fn main() {
     }
     let swe_label = if opts.smoke { "swe 16×16×5" } else { "swe 16×16×20" };
     let mut results = Vec::new();
+    // The SWE hot path is flux_batch, which stays on the scalar-word packed
+    // kernels under every engine (DESIGN.md §14) — swar/tiled rows would
+    // duplicate the packed number, so they stay null here.
     for (fixed, name) in [(true, "fixed E5M10"), (false, "r2f2 <3,8,4>")] {
-        let mut ns = [0.0f64; 3];
+        let mut ns = [f64::NAN; 5];
         for tier in [Tier::Scalar, Tier::Carrier, Tier::Packed] {
             let pp = swe_p.clone();
             let r = bench_with(
@@ -604,22 +691,31 @@ fn main() {
     }
 
     // ---- Speedup summary -------------------------------------------------
-    println!("\npacked-engine speedups (median):");
+    println!("\nengine-tier speedups (median; '-' = tier not applicable):");
     println!(
-        "{:<14} {:<14} {:>12} {:>12} {:>12} {:>10} {:>10}",
-        "workload", "backend", "scalar", "carrier", "packed", "vs carr", "vs scal"
+        "{:<16} {:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "workload", "backend", "scalar", "carrier", "packed", "swar", "tiled", "pk/scal",
+        "sw/pk", "ti/pk"
     );
+    let cell = |v: f64| if v.is_finite() { fmt_ns(v) } else { "-".to_string() };
+    let ratio = |num: f64, den: f64| {
+        let r = num / den;
+        if r.is_finite() { format!("{r:.2}x") } else { "-".to_string() }
+    };
     for t in &trajs {
-        let [s, c, p] = t.ns;
+        let [s, c, p, sw, ti] = t.ns;
         println!(
-            "{:<14} {:<14} {:>12} {:>12} {:>12} {:>9.2}x {:>9.2}x",
+            "{:<16} {:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
             t.workload,
             t.backend,
-            fmt_ns(s),
-            fmt_ns(c),
-            fmt_ns(p),
-            c / p,
-            s / p
+            cell(s),
+            cell(c),
+            cell(p),
+            cell(sw),
+            cell(ti),
+            ratio(s, p),
+            ratio(p, sw),
+            ratio(p, ti)
         );
     }
 
@@ -712,7 +808,7 @@ fn main() {
         }
     }
 
-    if let Some(path) = &opts.json {
+    if let Some(path) = &opts.out {
         emit_json(
             path,
             opts.smoke,

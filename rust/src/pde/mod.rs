@@ -29,9 +29,10 @@ pub use scenario::{ScenarioRun, ScenarioSize, ScenarioSpec, Sim, SCENARIOS};
 use crate::r2f2core::{EncSlot, R2f2Config, R2f2Multiplier, Stats};
 use crate::softfloat::batch::{mul_batch_packed, mul_pairs_packed};
 use crate::softfloat::packed as pk;
+use crate::softfloat::swar as sw;
 use crate::softfloat::{
     add_f, decode, encode, mul as sf_mul, mul_f, quantize, quantize_flagged, Flags, Fp, FpFormat,
-    Rounder,
+    Rounder, SwarFormat,
 };
 
 /// How much of the solver arithmetic routes through the backend.
@@ -45,12 +46,12 @@ pub enum QuantMode {
     Full,
 }
 
-/// Which batched-engine implementation a backend runs (DESIGN.md §9).
+/// Which batched-engine implementation a backend runs (DESIGN.md §9, §14).
 ///
-/// Both engines are **bit-identical** to the scalar specification — the
+/// Every engine is **bit-identical** to the scalar specification — the
 /// selector exists so the perf trajectory keeps comparing them
-/// (`benches/hotpath.rs`) and so `rust/tests/packed_vs_carrier.rs` can hold
-/// them against each other.
+/// (`benches/hotpath.rs`) and so `rust/tests/packed_vs_carrier.rs` and
+/// `rust/tests/swar_vs_packed.rs` can hold them against each other.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BatchEngine {
     /// The PR-1 engine: hoisted encodes and dispatch, but every product
@@ -62,6 +63,13 @@ pub enum BatchEngine {
     /// and `QuantMode::Full` state persists packed across timesteps.
     #[default]
     Packed,
+    /// The SWAR tier of the packed engine (DESIGN.md §14): formats of
+    /// ≤ 16 total bits process two elements per `u64` through the
+    /// lane-paired kernels (`softfloat::swar`), with a scalar-word tail
+    /// for odd counts. Formats wider than a lane fall back to the packed
+    /// path; backends without lane kernels (R2F2's truncated datapath)
+    /// treat `Swar` as `Packed`.
+    Swar,
 }
 
 /// Range-event counters accumulated by the fixed-format backend (the
@@ -409,6 +417,9 @@ pub struct FixedArith {
     engine: BatchEngine,
     events: RangeEvents,
     scratch: PackedScratch,
+    /// Tile-geometry override `(workers, tile_width)` for the multi-step
+    /// `Full` driver. `None` derives both from `R2F2_WORKERS` / grid size.
+    tiling: Option<(usize, usize)>,
 }
 
 impl FixedArith {
@@ -418,12 +429,24 @@ impl FixedArith {
             engine: BatchEngine::default(),
             events: RangeEvents::default(),
             scratch: PackedScratch::default(),
+            tiling: None,
         }
     }
 
-    /// Select the batched-engine implementation (both are bit-identical).
+    /// Select the batched-engine implementation (all are bit-identical).
     pub fn with_engine(mut self, engine: BatchEngine) -> FixedArith {
         self.engine = engine;
+        self
+    }
+
+    /// Pin the tile geometry of the multi-step `Full` driver to exactly
+    /// `workers` pool workers and `tile_width` interior nodes per tile
+    /// (the last tile may be short). The tiled sweep is bit-identical for
+    /// every geometry — this hook exists so tests and benches can force
+    /// worker counts and non-divisible splits (`rust/tests/swar_vs_packed.rs`)
+    /// instead of inheriting `R2F2_WORKERS`.
+    pub fn with_tiling(mut self, workers: usize, tile_width: usize) -> FixedArith {
+        self.tiling = Some((workers.max(1), tile_width.max(1)));
         self
     }
 
@@ -436,9 +459,46 @@ impl FixedArith {
         }
     }
 
-    /// Does this instance run the packed-domain kernels?
+    /// Does this instance run the packed-domain kernels? `Swar` is a tier
+    /// of the packed engine, so it keeps every packed routing decision and
+    /// only swaps the innermost kernel calls.
     fn packed_on(&self) -> bool {
-        self.engine == BatchEngine::Packed && self.fmt.fits_word()
+        matches!(self.engine, BatchEngine::Packed | BatchEngine::Swar) && self.fmt.fits_word()
+    }
+
+    /// Does this instance run the lane-paired SWAR kernels on top of the
+    /// packed paths? Requires a format narrow enough for a 16-bit lane;
+    /// wider formats silently stay on the scalar-word packed kernels.
+    fn swar_on(&self) -> bool {
+        self.engine == BatchEngine::Swar && self.fmt.fits_lane()
+    }
+
+    /// The lane format when the SWAR tier is active.
+    fn swar_fmt(&self) -> Option<SwarFormat> {
+        if self.swar_on() {
+            Some(self.fmt.swar())
+        } else {
+            None
+        }
+    }
+
+    /// Tile geometry `(workers, tile_width)` for the multi-step `Full`
+    /// driver: the explicit [`FixedArith::with_tiling`] override, or
+    /// `R2F2_WORKERS`-many workers over cache-sized row blocks. The
+    /// default width divides the interior evenly across the pool but never
+    /// exceeds [`TILE_WIDTH`] words (so a tile's read set stays
+    /// cache-resident) and never drops below [`MIN_TILE`] (so small grids
+    /// — e.g. decomp shard slabs, §13 — collapse to one inline tile
+    /// instead of spawning threads: the two layers compose, they don't
+    /// nest pools).
+    fn tile_geometry(&self, n: usize) -> (usize, usize) {
+        if let Some(geom) = self.tiling {
+            return geom;
+        }
+        let workers = crate::coordinator::default_workers();
+        let interior = n.saturating_sub(2).max(1);
+        let per_worker = interior.div_ceil(workers);
+        (workers, per_worker.clamp(MIN_TILE, TILE_WIDTH))
     }
 
     /// One packed `MulOnly` stencil sweep: encode the state vector once,
@@ -466,22 +526,61 @@ impl FixedArith {
         pr_val.resize(n, 0.0);
         pr_fl.clear();
         pr_fl.resize(n, Flags::NONE);
-        for j in 0..n {
+        let sfmt = if self.engine == BatchEngine::Swar && self.fmt.fits_lane() {
+            Some(self.fmt.swar())
+        } else {
+            None
+        };
+        let mut j = 0;
+        if let Some(sf) = sfmt.as_ref() {
+            // SWAR tier: two products per u64; lane k of pair (j, j+1) is
+            // flat element j+k, so values and flags match the scalar loop
+            // lane-for-lane (DESIGN.md §14).
+            let vr = sw::pack2(wr, wr);
+            while j + 1 < n {
+                let (vp, fl) = sw::mul_packed_lanes(vr, sw::pack2(wu[j], wu[j + 1]), sf, &mut rnd);
+                let (p0, p1) = sw::unpack2(vp);
+                pr_val[j] = pk::decode_word(p0, &pf);
+                pr_val[j + 1] = pk::decode_word(p1, &pf);
+                pr_fl[j] = flr | enc_fl[j] | fl[0];
+                pr_fl[j + 1] = flr | enc_fl[j + 1] | fl[1];
+                j += 2;
+            }
+        }
+        while j < n {
             let (w, fl) = pk::mul_packed(wr, wu[j], &pf, &mut rnd);
             pr_val[j] = pk::decode_word(w, &pf);
             pr_fl[j] = flr | enc_fl[j] | fl;
+            j += 1;
         }
         let mut of = 0u64;
         let mut uf = 0u64;
         count_shared_product_events(pr_fl, &mut of, &mut uf);
 
-        for i in 1..n - 1 {
+        let mut i = 1;
+        if let Some(sf) = sfmt.as_ref() {
+            let v2r = sw::pack2(w2r, w2r);
+            while i + 1 < n - 1 {
+                let (vm, flm) = sw::mul_packed_lanes(v2r, sw::pack2(wu[i], wu[i + 1]), sf, &mut rnd);
+                let (m0, m1) = sw::unpack2(vm);
+                for (k, (wm, flk)) in [(m0, flm[0]), (m1, flm[1])].into_iter().enumerate() {
+                    let mid = pk::decode_word(wm, &pf);
+                    let flm = fl2r | enc_fl[i + k] | flk;
+                    of += u64::from(flm.overflow());
+                    uf += u64::from(flm.underflow());
+                    next[i + k] = u[i + k] + ((pr_val[i + k - 1] - mid) + pr_val[i + k + 1]);
+                }
+                i += 2;
+            }
+        }
+        while i < n - 1 {
             let (wm, flm) = pk::mul_packed(w2r, wu[i], &pf, &mut rnd);
             let mid = pk::decode_word(wm, &pf);
             let flm = fl2r | enc_fl[i] | flm;
             of += u64::from(flm.overflow());
             uf += u64::from(flm.underflow());
             next[i] = u[i] + ((pr_val[i - 1] - mid) + pr_val[i + 1]);
+            i += 1;
         }
         self.events.overflows += of;
         self.events.underflows += uf;
@@ -499,16 +598,35 @@ impl FixedArith {
         let mut rnd = Rounder::nearest_even();
         let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
         let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
+        let sfmt = if self.engine == BatchEngine::Swar && self.fmt.fits_lane() {
+            Some(self.fmt.swar())
+        } else {
+            None
+        };
         let PackedScratch { wu, enc_fl, pr_w, pr_fl, wnext, .. } = &mut self.scratch;
         pk::encode_slice_bits(u, &pf, &mut rnd, wu, enc_fl);
         wnext.clear();
         wnext.resize(n, 0);
-        pr_w.clear();
-        pr_w.resize(n, 0);
-        pr_fl.clear();
-        pr_fl.resize(n, Flags::NONE);
-        let (of, uf) =
-            packed_full_sweep(&pf, &mut rnd, wr, flr, w2r, fl2r, wu, enc_fl, wnext, pr_w, pr_fl);
+        // A single sweep is one full-width tile: the tiled and untiled
+        // paths are the same code (DESIGN.md §14).
+        let (of, uf) = tile_full_sweep(
+            &pf,
+            sfmt.as_ref(),
+            &mut rnd,
+            wr,
+            flr,
+            w2r,
+            fl2r,
+            wu,
+            enc_fl,
+            1,
+            n - 1,
+            &mut wnext[1..n - 1],
+            pr_w,
+            pr_fl,
+        );
+        wnext[0] = wu[0];
+        wnext[n - 1] = wu[n - 1];
         self.events.overflows += of;
         self.events.underflows += uf;
         for (o, &w) in next.iter_mut().zip(self.scratch.wnext.iter()) {
@@ -528,6 +646,14 @@ impl FixedArith {
     /// in the scalar path is exact and flag-free; raw Dirichlet boundary
     /// values are kept aside verbatim (their encode flags persist per
     /// sweep, exactly as the scalar path re-incurs them).
+    ///
+    /// Each sweep is dispatched as cache-tiled row blocks over
+    /// [`crate::coordinator::parallel_map`] (DESIGN.md §14): tiles read
+    /// the shared state with a ±1 halo and write disjoint `wnext`
+    /// segments, scattered back in deterministic tile order, so the tiled
+    /// sweep is bit-identical to the single-tile one for every geometry.
+    /// `parallel_map` is the per-step barrier; the swap and snapshot
+    /// decodes stay on the calling thread.
     fn stencil_multi_packed_full(
         &mut self,
         u: &mut [f64],
@@ -542,6 +668,7 @@ impl FixedArith {
         assert!(n >= 3);
         debug_assert!(steps > 0);
         let pf = self.fmt.packed();
+        let sfmt = self.swar_fmt();
         let mut rnd = Rounder::nearest_even();
         let (wr, flr) = pk::encode_bits(r.to_bits(), &pf, &mut rnd);
         let (w2r, fl2r) = pk::encode_bits((2.0 * r).to_bits(), &pf, &mut rnd);
@@ -551,17 +678,72 @@ impl FixedArith {
         let mut enc_fl: Vec<Flags> = Vec::new();
         pk::encode_slice_bits(u, &pf, &mut rnd, &mut wu, &mut enc_fl);
         let mut wnext = wu.clone();
-        let mut pr = vec![0u32; n];
-        let mut pr_fl = vec![Flags::NONE; n];
+        let mut pr: Vec<u32> = Vec::new();
+        let mut pr_fl: Vec<Flags> = Vec::new();
+
+        let (workers, tile_w) = self.tile_geometry(n);
+        let tiles = tile_ranges(n, tile_w);
 
         let mut of = 0u64;
         let mut uf = 0u64;
         for step in 0..steps {
-            let (o, f) = packed_full_sweep(
-                &pf, &mut rnd, wr, flr, w2r, fl2r, &wu, &enc_fl, &mut wnext, &mut pr, &mut pr_fl,
-            );
-            of += o;
-            uf += f;
+            if tiles.len() == 1 {
+                // One tile: run inline on the calling thread with reusable
+                // scratch — identical code path to the parallel tiles.
+                let (ts, te) = tiles[0];
+                let (o, f) = tile_full_sweep(
+                    &pf,
+                    sfmt.as_ref(),
+                    &mut rnd,
+                    wr,
+                    flr,
+                    w2r,
+                    fl2r,
+                    &wu,
+                    &enc_fl,
+                    ts,
+                    te,
+                    &mut wnext[ts..te],
+                    &mut pr,
+                    &mut pr_fl,
+                );
+                of += o;
+                uf += f;
+            } else {
+                let results =
+                    crate::coordinator::parallel_map(tiles.clone(), workers, |(ts, te)| {
+                        let mut rnd = Rounder::nearest_even();
+                        let mut seg = vec![0u32; te - ts];
+                        let mut pr: Vec<u32> = Vec::new();
+                        let mut pr_fl: Vec<Flags> = Vec::new();
+                        let (o, f) = tile_full_sweep(
+                            &pf,
+                            sfmt.as_ref(),
+                            &mut rnd,
+                            wr,
+                            flr,
+                            w2r,
+                            fl2r,
+                            &wu,
+                            &enc_fl,
+                            ts,
+                            te,
+                            &mut seg,
+                            &mut pr,
+                            &mut pr_fl,
+                        );
+                        (seg, o, f)
+                    });
+                // Scatter in tile order (segments are disjoint; the order
+                // fixes the counter accumulation sequence).
+                for (&(ts, te), (seg, o, f)) in tiles.iter().zip(results) {
+                    wnext[ts..te].copy_from_slice(&seg);
+                    of += o;
+                    uf += f;
+                }
+            }
+            wnext[0] = wu[0];
+            wnext[n - 1] = wu[n - 1];
             std::mem::swap(&mut wu, &mut wnext);
             if step == 0 {
                 // Interior values are representable from now on: the scalar
@@ -614,14 +796,61 @@ fn count_shared_product_events(pr_fl: &[Flags], of: &mut u64, uf: &mut u64) {
     }
 }
 
-/// One `Full`-mode sweep entirely in the packed domain (muls, adds and
-/// storage quantization — the quantize of an already-packed result is the
-/// identity). `enc_fl` carries the per-element encode flags of the current
-/// state, charged at the scalar multiplicity: each state value feeds up to
-/// three multiplications and one addition. Returns `(overflows, underflows)`.
+/// Upper bound on interior nodes per tile in the multi-step `Full` driver.
+/// A tile's working set (`u32` state + products + segment) stays a few
+/// tens of KiB — resident in L1/L2 while the sweep walks it.
+const TILE_WIDTH: usize = 4096;
+
+/// Lower bound on the *default* tile width: grids whose interior fits one
+/// such tile (decomp shard slabs, small scenarios) run inline instead of
+/// paying per-step thread dispatch for a handful of nodes. Tests pin
+/// smaller widths explicitly via [`FixedArith::with_tiling`].
+const MIN_TILE: usize = 1024;
+
+/// Split the interior `[1, n−1)` into contiguous tiles of `tile_w` nodes
+/// (the last tile may be short). Tile order is ascending and deterministic
+/// — the scatter in [`FixedArith::stencil_multi_packed_full`] relies on it.
+fn tile_ranges(n: usize, tile_w: usize) -> Vec<(usize, usize)> {
+    let tile_w = tile_w.max(1);
+    let mut tiles = Vec::new();
+    let mut ts = 1;
+    while ts < n - 1 {
+        let te = (ts + tile_w).min(n - 1);
+        tiles.push((ts, te));
+        ts = te;
+    }
+    tiles
+}
+
+/// One `Full`-mode sweep of the node range `[ts, te)` — a cache tile, or
+/// the whole interior — entirely in the packed domain (muls, adds and
+/// storage quantization; the quantize of an already-packed result is the
+/// identity). Reads the shared state `wu` with a ±1 halo and writes only
+/// `seg = wnext[ts..te]`, so disjoint tiles can run concurrently.
+///
+/// The shared products `r ⊗ u[j]` are (re)computed for `j ∈ [ts−1, te+1)`;
+/// a product on a tile seam is recomputed by both neighbours from the same
+/// words — RNE is a pure function of the operands, so the bits agree. Each
+/// product's range events are charged to the tile of its *consuming* node
+/// (`left` use at node `j+1`, `right` use at node `j−1`), so the per-tile
+/// counts partition the scalar multiplicity of
+/// [`count_shared_product_events`] exactly (DESIGN.md §14).
+///
+/// With `sf` set, lane-paired SWAR kernels process two elements per call
+/// with a scalar-word tail; lane `k` of pair `(j, j+1)` is flat element
+/// `j+k`, so values and flags match the scalar loop lane-for-lane. The
+/// pairing is legal because this path is RNE-only (gated like
+/// [`Arith::fork`]): rounding draws no RNG state, so reassociating the
+/// *op order* (pair-major instead of node-major) changes no bits and the
+/// counters are order-insensitive sums.
+///
+/// `enc_fl` carries the per-element encode flags of the current state,
+/// charged at the scalar multiplicity: each state value feeds up to three
+/// multiplications and one addition. Returns `(overflows, underflows)`.
 #[allow(clippy::too_many_arguments)]
-fn packed_full_sweep(
+fn tile_full_sweep(
     pf: &crate::softfloat::PackedFormat,
+    sf: Option<&SwarFormat>,
     rnd: &mut Rounder,
     wr: u32,
     flr: Flags,
@@ -629,34 +858,106 @@ fn packed_full_sweep(
     fl2r: Flags,
     wu: &[u32],
     enc_fl: &[Flags],
-    wnext: &mut [u32],
-    pr: &mut [u32],
-    pr_fl: &mut [Flags],
+    ts: usize,
+    te: usize,
+    seg: &mut [u32],
+    pr: &mut Vec<u32>,
+    pr_fl: &mut Vec<Flags>,
 ) -> (u64, u64) {
     let n = wu.len();
+    debug_assert!(1 <= ts && ts < te && te <= n - 1);
+    debug_assert_eq!(seg.len(), te - ts);
+    let lo = ts - 1;
+    let hi = te + 1; // product index range [lo, hi)
+    pr.clear();
+    pr.resize(hi - lo, 0);
+    pr_fl.clear();
+    pr_fl.resize(hi - lo, Flags::NONE);
+
     let mut of = 0u64;
     let mut uf = 0u64;
 
-    // r ⊗ u[j] once per j; range events counted once per use (`left` uses
-    // exist for j ≤ n−3, `right` uses for j ≥ 2 — the scalar multiplicity).
-    for j in 0..n {
-        let (w, fl) = pk::mul_packed(wr, wu[j], pf, rnd);
-        pr[j] = w;
-        pr_fl[j] = flr | enc_fl[j] | fl;
+    // r ⊗ u[j] for every product this tile consumes.
+    let mut j = lo;
+    if let Some(sf) = sf {
+        let vr = sw::pack2(wr, wr);
+        while j + 1 < hi {
+            let (vp, fl) = sw::mul_packed_lanes(vr, sw::pack2(wu[j], wu[j + 1]), sf, rnd);
+            let (p0, p1) = sw::unpack2(vp);
+            pr[j - lo] = p0;
+            pr[j + 1 - lo] = p1;
+            pr_fl[j - lo] = flr | enc_fl[j] | fl[0];
+            pr_fl[j + 1 - lo] = flr | enc_fl[j + 1] | fl[1];
+            j += 2;
+        }
     }
-    count_shared_product_events(pr_fl, &mut of, &mut uf);
+    while j < hi {
+        let (w, fl) = pk::mul_packed(wr, wu[j], pf, rnd);
+        pr[j - lo] = w;
+        pr_fl[j - lo] = flr | enc_fl[j] | fl;
+        j += 1;
+    }
+    // Charge each product once per use *inside this tile*: its `left` use
+    // sits at node j+1, its `right` use at node j−1. Summed over tiles
+    // this reproduces the scalar multiplicity (j ≤ n−3) + (j ≥ 2).
+    for j in lo..hi {
+        let mult = u64::from(j + 1 < te) + u64::from(j >= ts + 1);
+        let fl = pr_fl[j - lo];
+        if fl.overflow() {
+            of += mult;
+        }
+        if fl.underflow() {
+            uf += mult;
+        }
+    }
 
-    for i in 1..n - 1 {
+    let mut i = ts;
+    if let Some(sf) = sf {
+        let v2r = sw::pack2(w2r, w2r);
+        while i + 1 < te {
+            // mid = 2r ⊗ u, then s = left + (−mid); du = s + right;
+            // unew = u + du — the scalar Full sequence, two nodes per call.
+            let (vm, flm) = sw::mul_packed_lanes(v2r, sw::pack2(wu[i], wu[i + 1]), sf, rnd);
+            let (wm0, wm1) = sw::unpack2(vm);
+            let flm0 = fl2r | enc_fl[i] | flm[0];
+            let flm1 = fl2r | enc_fl[i + 1] | flm[1];
+            of += u64::from(flm0.overflow()) + u64::from(flm1.overflow());
+            uf += u64::from(flm0.underflow()) + u64::from(flm1.underflow());
+            let (vs, fls) = sw::add_packed_lanes(
+                sw::pack2(pr[i - 1 - lo], pr[i - lo]),
+                sw::pack2(pf.neg_word(wm0), pf.neg_word(wm1)),
+                sf,
+                rnd,
+            );
+            of += u64::from(fls[0].overflow()) + u64::from(fls[1].overflow());
+            uf += u64::from(fls[0].underflow()) + u64::from(fls[1].underflow());
+            let (vdu, fldu) =
+                sw::add_packed_lanes(vs, sw::pack2(pr[i + 1 - lo], pr[i + 2 - lo]), sf, rnd);
+            of += u64::from(fldu[0].overflow()) + u64::from(fldu[1].overflow());
+            uf += u64::from(fldu[0].underflow()) + u64::from(fldu[1].underflow());
+            let (vnew, flnew) = sw::add_packed_lanes(sw::pack2(wu[i], wu[i + 1]), vdu, sf, rnd);
+            // The scalar path re-encodes the raw u[i] inside this add.
+            let flnew0 = flnew[0] | enc_fl[i];
+            let flnew1 = flnew[1] | enc_fl[i + 1];
+            of += u64::from(flnew0.overflow()) + u64::from(flnew1.overflow());
+            uf += u64::from(flnew0.underflow()) + u64::from(flnew1.underflow());
+            let (n0, n1) = sw::unpack2(vnew);
+            seg[i - ts] = n0;
+            seg[i + 1 - ts] = n1;
+            i += 2;
+        }
+    }
+    while i < te {
         let (wm, flm) = pk::mul_packed(w2r, wu[i], pf, rnd);
         let flm = fl2r | enc_fl[i] | flm;
         of += u64::from(flm.overflow());
         uf += u64::from(flm.underflow());
         // s = left + (−mid); du = s + right; unew = u[i] + du — the scalar
         // Full sequence, with every operand already packed.
-        let (ws, fls) = pk::add_packed(pr[i - 1], pf.neg_word(wm), pf, rnd);
+        let (ws, fls) = pk::add_packed(pr[i - 1 - lo], pf.neg_word(wm), pf, rnd);
         of += u64::from(fls.overflow());
         uf += u64::from(fls.underflow());
-        let (wdu, fldu) = pk::add_packed(ws, pr[i + 1], pf, rnd);
+        let (wdu, fldu) = pk::add_packed(ws, pr[i + 1 - lo], pf, rnd);
         of += u64::from(fldu.overflow());
         uf += u64::from(fldu.underflow());
         let (wnew, flnew) = pk::add_packed(wu[i], wdu, pf, rnd);
@@ -666,10 +967,9 @@ fn packed_full_sweep(
         uf += u64::from(flnew.underflow());
         // quant(unew): encode∘decode is the identity on packed values and
         // raises no flags — storage quantization is free in this domain.
-        wnext[i] = wnew;
+        seg[i - ts] = wnew;
+        i += 1;
     }
-    wnext[0] = wu[0];
-    wnext[n - 1] = wu[n - 1];
     (of, uf)
 }
 
@@ -696,6 +996,45 @@ impl Arith for FixedArith {
         assert_eq!(out.len(), xs.len());
         let fmt = self.fmt;
         let mut rnd = Rounder::nearest_even();
+        if let Some(sf) = self.swar_fmt() {
+            // SWAR tier: the constant rides both lanes, operand pairs are
+            // encoded, multiplied and decoded two-per-u64, with the scalar
+            // packed kernels finishing an odd tail. Lane k of pair
+            // (2i, 2i+1) is flat element 2i+k, so per-element flag unions
+            // and counters match `mul_batch_packed` exactly; the op
+            // reordering (both encodes before both muls) is bit-free
+            // because this path is RNE-only (DESIGN.md §14).
+            let pf = fmt.packed();
+            let (wa, fla) = pk::encode_bits(a.to_bits(), &pf, &mut rnd);
+            let va = sw::pack2(wa, wa);
+            let mut of = 0u64;
+            let mut uf = 0u64;
+            let mut count = |fl: Flags| {
+                of += u64::from(fl.overflow());
+                uf += u64::from(fl.underflow());
+            };
+            let mut chunks = out.chunks_exact_mut(2);
+            let mut xpairs = xs.chunks_exact(2);
+            for (o, x) in chunks.by_ref().zip(xpairs.by_ref()) {
+                let (vb, flb) = sw::encode_lanes(x[0], x[1], &sf, &mut rnd);
+                let (vp, flp) = sw::mul_packed_lanes(va, vb, &sf, &mut rnd);
+                let (d0, d1) = sw::decode_lanes(vp, &sf);
+                o[0] = d0;
+                o[1] = d1;
+                count(fla | flb[0] | flp[0]);
+                count(fla | flb[1] | flp[1]);
+            }
+            for (o, &x) in chunks.into_remainder().iter_mut().zip(xpairs.remainder()) {
+                let (wb, flb) = pk::encode_bits(x.to_bits(), &pf, &mut rnd);
+                let (wp, flp) = pk::mul_packed(wa, wb, &pf, &mut rnd);
+                *o = pk::decode_word(wp, &pf);
+                count(fla | flb | flp);
+            }
+            drop(count);
+            self.events.overflows += of;
+            self.events.underflows += uf;
+            return;
+        }
         if self.packed_on() {
             // Packed engine: constant encoded once, word kernels, counters
             // accumulated without a per-batch flags allocation. One shared
@@ -725,6 +1064,41 @@ impl Arith for FixedArith {
         assert_eq!(out.len(), pairs.len());
         let fmt = self.fmt;
         let mut rnd = Rounder::nearest_even();
+        if let Some(sf) = self.swar_fmt() {
+            // SWAR tier of `mul_pairs_packed`: lane k of chunk (2i, 2i+1)
+            // is flat element 2i+k; the encode reordering is bit-free
+            // under RNE (this path never runs stochastic).
+            let pf = fmt.packed();
+            let mut of = 0u64;
+            let mut uf = 0u64;
+            let mut count = |fl: Flags| {
+                of += u64::from(fl.overflow());
+                uf += u64::from(fl.underflow());
+            };
+            let mut chunks = out.chunks_exact_mut(2);
+            let mut ppairs = pairs.chunks_exact(2);
+            for (o, p) in chunks.by_ref().zip(ppairs.by_ref()) {
+                let (va, fla) = sw::encode_lanes(p[0].0, p[1].0, &sf, &mut rnd);
+                let (vb, flb) = sw::encode_lanes(p[0].1, p[1].1, &sf, &mut rnd);
+                let (vp, flp) = sw::mul_packed_lanes(va, vb, &sf, &mut rnd);
+                let (d0, d1) = sw::decode_lanes(vp, &sf);
+                o[0] = d0;
+                o[1] = d1;
+                count(fla[0] | flb[0] | flp[0]);
+                count(fla[1] | flb[1] | flp[1]);
+            }
+            for (o, &(a, b)) in chunks.into_remainder().iter_mut().zip(ppairs.remainder()) {
+                let (wa, fla) = pk::encode_bits(a.to_bits(), &pf, &mut rnd);
+                let (wb, flb) = pk::encode_bits(b.to_bits(), &pf, &mut rnd);
+                let (wp, flp) = pk::mul_packed(wa, wb, &pf, &mut rnd);
+                *o = pk::decode_word(wp, &pf);
+                count(fla | flb | flp);
+            }
+            drop(count);
+            self.events.overflows += of;
+            self.events.underflows += uf;
+            return;
+        }
         if self.packed_on() {
             let pf = fmt.packed();
             let mut of = 0u64;
@@ -918,7 +1292,9 @@ impl Arith for FixedArith {
         // Per-op results depend only on (fmt, operands) — RNE rounding holds
         // no state — so a worker with fresh counters and the same engine
         // reproduces this unit's arithmetic bit-for-bit on its shard.
-        Some(Box::new(FixedArith::new(self.fmt).with_engine(self.engine)))
+        let mut child = FixedArith::new(self.fmt).with_engine(self.engine);
+        child.tiling = self.tiling;
+        Some(Box::new(child))
     }
     fn absorb(&mut self, child: &dyn Arith) {
         if let Some(ev) = child.range_events() {
@@ -934,6 +1310,9 @@ impl Arith for FixedArith {
 /// ([`R2f2Multiplier::mul_packed`], DESIGN.md §9);
 /// [`R2f2Arith::with_engine`] selects the frozen PR-1 cached-carrier engine
 /// for perf-baseline runs. Both are bit-identical to the scalar unit.
+/// R2F2's truncated datapath has no lane kernels, so [`BatchEngine::Swar`]
+/// runs the packed engine here (the variant stays valid so adaptive and
+/// comparison harnesses can pass one engine to every backend).
 #[derive(Debug)]
 pub struct R2f2Arith {
     pub unit: R2f2Multiplier,
@@ -945,7 +1324,8 @@ impl R2f2Arith {
         R2f2Arith { unit: R2f2Multiplier::new(cfg), engine: BatchEngine::default() }
     }
 
-    /// Select the batched-engine implementation (both are bit-identical).
+    /// Select the batched-engine implementation (all are bit-identical;
+    /// `Swar` degrades to `Packed` — see the type docs).
     pub fn with_engine(mut self, engine: BatchEngine) -> R2f2Arith {
         self.engine = engine;
         self
@@ -977,7 +1357,7 @@ impl Arith for R2f2Arith {
         // instead of per multiplication. State transitions stay exact.
         let c = self.unit.prepare_const(a);
         match self.engine {
-            BatchEngine::Packed => {
+            BatchEngine::Packed | BatchEngine::Swar => {
                 let mut slot = EncSlot::empty();
                 for (o, &x) in out.iter_mut().zip(xs.iter()) {
                     *o = self.unit.mul_packed(&c, x, &mut slot);
@@ -993,7 +1373,7 @@ impl Arith for R2f2Arith {
     fn mul_pairs(&mut self, out: &mut [f64], pairs: &[(f64, f64)]) {
         assert_eq!(out.len(), pairs.len());
         match self.engine {
-            BatchEngine::Packed => {
+            BatchEngine::Packed | BatchEngine::Swar => {
                 for (o, &(a, b)) in out.iter_mut().zip(pairs.iter()) {
                     *o = self.unit.mul_packed_pair(a, b);
                 }
@@ -1025,7 +1405,7 @@ impl Arith for R2f2Arith {
         let mut sm = EncSlot::empty();
         let mut sr = EncSlot::empty();
         match self.engine {
-            BatchEngine::Packed => {
+            BatchEngine::Packed | BatchEngine::Swar => {
                 for i in 1..n - 1 {
                     let left = self.unit.mul_packed(&cr, u[i - 1], &mut sl);
                     let mid = self.unit.mul_packed(&c2r, u[i], &mut sm);
@@ -1062,7 +1442,7 @@ impl Arith for R2f2Arith {
         assert_eq!(out.len(), q.len());
         let cg = self.unit.prepare_const(g2);
         match self.engine {
-            BatchEngine::Packed => {
+            BatchEngine::Packed | BatchEngine::Swar => {
                 let mut slot = EncSlot::empty();
                 for (o, &(q1, q3)) in out.iter_mut().zip(q.iter()) {
                     let q1sq = self.unit.mul_packed_pair(q1, q1);
@@ -1354,6 +1734,21 @@ mod tests {
         assert!(rel_l2(&a, &a) == 0.0);
     }
 
+    #[test]
+    fn tile_ranges_cover_interior_exactly() {
+        for n in [3usize, 4, 65, 100, 4099] {
+            for w in [1usize, 7, 32, 4096] {
+                let tiles = tile_ranges(n, w);
+                assert_eq!(tiles.first().unwrap().0, 1, "n={n} w={w}");
+                assert_eq!(tiles.last().unwrap().1, n - 1, "n={n} w={w}");
+                for pair in tiles.windows(2) {
+                    assert_eq!(pair[0].1, pair[1].0, "n={n} w={w}: contiguous");
+                }
+                assert!(tiles.iter().all(|&(a, b)| a < b && b - a <= w), "n={n} w={w}");
+            }
+        }
+    }
+
     /// Operand set spanning in-range, overflowing and underflowing values.
     fn nasty_xs(n: usize, seed: u64) -> Vec<f64> {
         let mut rng = crate::rng::SplitMix64::new(seed);
@@ -1404,12 +1799,26 @@ mod tests {
             "E5M10-carrier",
         );
         check_mul_batch_equivalence(
+            &|| {
+                Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Swar))
+                    as Box<dyn Arith>
+            },
+            "E5M10-swar",
+        );
+        check_mul_batch_equivalence(
             &|| Box::new(FixedArith::new(FpFormat::new(6, 9))) as Box<dyn Arith>,
             "E6M9",
         );
         check_mul_batch_equivalence(
             &|| Box::new(FixedArith::new(FpFormat::E11M52)) as Box<dyn Arith>,
             "E11M52 (no word fit, carrier fallback)",
+        );
+        check_mul_batch_equivalence(
+            &|| {
+                Box::new(FixedArith::new(FpFormat::E8M23).with_engine(BatchEngine::Swar))
+                    as Box<dyn Arith>
+            },
+            "E8M23-swar (no lane fit, packed fallback)",
         );
         check_mul_batch_equivalence(
             &|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>,
@@ -1444,6 +1853,13 @@ mod tests {
                         as Box<dyn Arith>
                 }),
                 "E5M10-carrier",
+            ),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Swar))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-swar",
             ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>), "r2f2"),
             (
@@ -1492,6 +1908,13 @@ mod tests {
                         as Box<dyn Arith>
                 }),
                 "E5M10-carrier",
+            ),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Swar))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-swar",
             ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>), "r2f2"),
             (
@@ -1579,6 +2002,13 @@ mod tests {
                 }),
                 "E5M10-carrier",
             ),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Swar))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-swar (flux stays on the packed path)",
+            ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_384)) as Box<dyn Arith>), "r2f2"),
             (
                 Box::new(|| {
@@ -1637,6 +2067,31 @@ mod tests {
                         as Box<dyn Arith>
                 }),
                 "E5M10-carrier",
+            ),
+            (
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_engine(BatchEngine::Swar))
+                        as Box<dyn Arith>
+                }),
+                "E5M10-swar",
+            ),
+            (
+                // Non-divisible tiles (interior 63 = 9×7) across a pool —
+                // tiled multi-step must match the iterated single sweep.
+                Box::new(|| {
+                    Box::new(FixedArith::new(FpFormat::E5M10).with_tiling(4, 7)) as Box<dyn Arith>
+                }),
+                "E5M10-tiled(4w,7)",
+            ),
+            (
+                Box::new(|| {
+                    Box::new(
+                        FixedArith::new(FpFormat::E5M10)
+                            .with_engine(BatchEngine::Swar)
+                            .with_tiling(3, 10),
+                    ) as Box<dyn Arith>
+                }),
+                "E5M10-swar-tiled(3w,10)",
             ),
             (Box::new(|| Box::new(R2f2Arith::new(R2f2Config::C16_393)) as Box<dyn Arith>), "r2f2"),
             (

@@ -104,6 +104,22 @@ impl FpFormat {
     pub fn packed(&self) -> PackedFormat {
         PackedFormat::new(*self)
     }
+
+    /// Does the format fit one 16-bit SWAR lane (`total_bits ≤ 16`,
+    /// DESIGN.md §14)? Then two elements ride per `u64` with full headroom:
+    /// `m_w ≤ 13` keeps mantissa products (`2·m_w+2 ≤ 28` bits) and aligned
+    /// adder sums (`m_w+5 ≤ 18` bits) inside a 32-bit lane slot. E5M10,
+    /// E4M3 and every rung of the adaptive ladder qualify; `E8M23` falls
+    /// back to the scalar-word packed engine.
+    pub const fn fits_lane(&self) -> bool {
+        self.total_bits() <= 16
+    }
+
+    /// Precompute the lane-replicated SWAR constant table
+    /// (DESIGN.md §14). Panics unless [`FpFormat::fits_lane`].
+    pub fn swar(&self) -> super::swar::SwarFormat {
+        super::swar::SwarFormat::new(*self)
+    }
 }
 
 /// Per-format constants precomputed once per batch/sweep so the

@@ -20,11 +20,14 @@
 //!
 //! The `ExMy` notation follows the paper: `E5M10` is standard half.
 //!
-//! Two kernel families implement these semantics, bit-identically: the
+//! Three kernel families implement these semantics, bit-identically: the
 //! **carrier** path ([`encode`]/[`mul`]/[`add`]/[`decode`] on [`Fp`]
-//! structs — the specification) and the **packed-domain** path
+//! structs — the specification), the **packed-domain** path
 //! ([`packed`]: `u32`-word kernels with precomputed [`PackedFormat`]
-//! constants and 64-bit intermediates — the hot-path engine, DESIGN.md §9).
+//! constants and 64-bit intermediates — the hot-path engine, DESIGN.md §9),
+//! and the **SWAR multi-lane** path ([`swar`]: two ≤16-bit lanes per `u64`
+//! with lane-replicated [`SwarFormat`] masks and branch-free lane cores,
+//! DESIGN.md §14).
 
 pub mod add;
 pub mod batch;
@@ -33,6 +36,7 @@ pub mod format;
 pub mod mul;
 pub mod packed;
 pub mod round;
+pub mod swar;
 
 pub use add::add;
 pub use batch::{mul_batch_f, mul_pairs_f};
@@ -41,6 +45,7 @@ pub use format::{Flags, Fp, FpFormat, PackedFormat};
 pub use mul::mul;
 pub use packed::PackedVec;
 pub use round::{Rounder, RoundingMode};
+pub use swar::SwarFormat;
 
 /// Quantize an `f64` to the nearest representable value of `fmt`
 /// (round-to-nearest-even), returning the value back as `f64`.

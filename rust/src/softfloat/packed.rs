@@ -152,6 +152,7 @@ pub fn mul_packed(wa: u32, wb: u32, pf: &PackedFormat, r: &mut Rounder) -> (u32,
 /// Add two packed words with one rounding step — the word-domain twin of
 /// [`crate::softfloat::add`] (align–add–normalize–round with
 /// guard/round/sticky bits), including its signed-zero conventions.
+#[inline]
 pub fn add_packed(wa: u32, wb: u32, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) {
     let sa = (wa >> pf.sign_shift) & 1;
     let sb = (wb >> pf.sign_shift) & 1;

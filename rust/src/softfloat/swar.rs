@@ -1,0 +1,584 @@
+//! SWAR (SIMD-within-a-register) packed-domain kernels (DESIGN.md §14).
+//!
+//! The §9 packed engine still pushes **one** `u32` word per
+//! [`mul_packed`]/[`add_packed`] call. For formats that fit a 16-bit lane
+//! (`total_bits ≤ 16` — E5M10, E4M3 and every rung of the adaptive ladder),
+//! two elements travel together in one `u64`:
+//!
+//! ```text
+//!        bit 63                32 31                 0
+//!        ┌──────────────────────┬──────────────────────┐
+//!   u64  │       lane 1         │       lane 0         │
+//!        │ 0…0 [sign|exp|frac]  │ 0…0 [sign|exp|frac]  │
+//!        └──────────────────────┴──────────────────────┘
+//! ```
+//!
+//! Each lane is a 32-bit slot holding one §3.1 wire-layout word in its low
+//! `total_bits` bits. A 16-bit ceiling (`m_w ≤ 13`) guarantees every
+//! intermediate stays inside its slot: mantissa products are `2·m_w+2 ≤ 28`
+//! bits and aligned adder sums are `m_w+G+2 ≤ 18` bits, so nothing a lane
+//! computes can touch its neighbour.
+//!
+//! **What is shared, what is unrolled.** Field extraction and
+//! classification run on the packed register with lane-replicated masks
+//! (one AND/shift serves both lanes — [`SwarFormat`] precomputes the
+//! doubled masks). The normalize/round tail is an **unrolled, branch-free
+//! lane core**: rounding needs data-dependent shift amounts (alignment
+//! distance, cancellation renormalize), and a per-lane variable shift on
+//! the packed register would smear bits across the lane boundary. The lane
+//! core therefore runs straight-line on one slot — every select is a mask
+//! (`wrapping_neg` of a bool), so the common path executes **no per-lane
+//! branches** and the two unrolled cores schedule as independent ILP
+//! streams.
+//!
+//! **Contract.** Every kernel is bit-identical **lane-for-lane** to the
+//! scalar word kernels of [`super::packed`]:
+//!
+//! * [`mul_packed_lanes`]`(va, vb)` lane `k` ≡ [`mul_packed`]`(a_k, b_k)`,
+//!   value and [`Flags`] both (per-lane flags, not a union — callers union
+//!   them exactly where the scalar loop would);
+//! * [`add_packed_lanes`] ≡ [`add_packed`] per lane, including the
+//!   signed-zero, exact-cancellation and pre-rounding-underflow early
+//!   paths (the mask cascade reproduces their priority order);
+//! * [`encode_lanes`]/[`decode_lanes`] ≡ [`encode_bits`]/`decode_word`
+//!   per lane.
+//!
+//! **Draw-order contract (stochastic rounding).** The deterministic modes
+//! (nearest-even, toward-zero) never consume RNG draws, so the branch-free
+//! cores are trivially draw-exact. Stochastic rounding draws **once per
+//! inexact rounding, in lane order: lane 0 consumes all of its draws
+//! before lane 1 draws.** That is exactly the sequence a scalar loop over
+//! the flat element array produces when element `2i+k` rides in lane `k`
+//! of packed word `i`, so a SWAR sweep and the scalar sweep leave a shared
+//! [`Rounder`] in the same state. The stochastic path delegates to the
+//! scalar kernels per lane (a data-dependent draw *is* a per-lane branch;
+//! there is no branch-free formulation that preserves the draw count), and
+//! `rust/tests/swar_vs_packed.rs` pins the sequence.
+//!
+//! [`mul_packed`]: super::packed::mul_packed
+//! [`add_packed`]: super::packed::add_packed
+//! [`encode_bits`]: super::packed::encode_bits
+
+use super::format::{Flags, FpFormat, PackedFormat};
+use super::packed;
+use super::round::{Rounder, RoundingMode};
+
+/// Lanes per SWAR word. Two 32-bit slots per `u64`; each slot holds one
+/// `total_bits ≤ 16` wire word with headroom for every intermediate.
+pub const LANES: usize = 2;
+
+/// Bits per lane slot.
+pub const LANE_BITS: u32 = 32;
+
+/// Guard + round + sticky bits carried through addition alignment (must
+/// match `softfloat::add` and `packed::add_packed`).
+const G: u32 = 3;
+
+/// Pack two scalar words into one SWAR word (lane 0 = low slot).
+#[inline]
+pub fn pack2(lane0: u32, lane1: u32) -> u64 {
+    ((lane1 as u64) << LANE_BITS) | lane0 as u64
+}
+
+/// Unpack a SWAR word into its `(lane 0, lane 1)` scalar words.
+#[inline]
+pub fn unpack2(v: u64) -> (u32, u32) {
+    (v as u32, (v >> LANE_BITS) as u32)
+}
+
+/// Lane-replicated constant table for the SWAR kernels: the scalar
+/// [`PackedFormat`] plus each mask doubled into both 32-bit slots, so one
+/// AND/shift classifies or extracts both lanes (DESIGN.md §14). Only
+/// formats with [`FpFormat::fits_lane`] are supported.
+#[derive(Debug, Clone, Copy)]
+pub struct SwarFormat {
+    /// The scalar constant table (shared by both lane cores).
+    pub pf: PackedFormat,
+    /// Fraction mask in both lanes.
+    pub frac2: u64,
+    /// Exponent-field mask (shifted down to bit 0) in both lanes.
+    pub exp2: u64,
+    /// Magnitude mask (exponent + fraction) in both lanes.
+    pub mag2: u64,
+    /// Implicit leading-one bit (`1 << m_w`) in both lanes.
+    pub lead2: u64,
+    /// Bit 0 of each lane (`0x0000_0001_0000_0001`).
+    pub lane_lsb: u64,
+}
+
+impl SwarFormat {
+    /// Derive the table. Panics unless the format fits a 16-bit lane.
+    pub fn new(fmt: FpFormat) -> SwarFormat {
+        assert!(
+            fmt.fits_lane(),
+            "SWAR lanes require total_bits ≤ 16, got {} for {fmt}",
+            fmt.total_bits()
+        );
+        let pf = PackedFormat::new(fmt);
+        let rep = |m: u32| ((m as u64) << LANE_BITS) | m as u64;
+        SwarFormat {
+            pf,
+            frac2: rep(pf.frac_mask),
+            exp2: rep(pf.exp_mask),
+            mag2: rep(pf.mag_mask),
+            lead2: rep(1u32 << pf.m_w),
+            lane_lsb: rep(1),
+        }
+    }
+}
+
+/// Branch-free select: `if c { t } else { f }` as mask arithmetic.
+#[inline]
+fn sel32(c: bool, t: u32, f: u32) -> u32 {
+    let m = (c as u32).wrapping_neg();
+    (t & m) | (f & !m)
+}
+
+#[inline]
+fn sel64(c: bool, t: u64, f: u64) -> u64 {
+    let m = (c as u64).wrapping_neg();
+    (t & m) | (f & !m)
+}
+
+#[inline]
+fn sel8(c: bool, t: u8, f: u8) -> u8 {
+    let m = (c as u8).wrapping_neg();
+    (t & m) | (f & !m)
+}
+
+/// Branch-free `round_shift64` for the deterministic modes. `shift ≥ 1`
+/// at every call site (so `half` is well-formed); when `lost == 0` the
+/// up-bit is provably false in both modes, matching the scalar early
+/// return. Returns `(rounded, inexact)`.
+#[inline]
+fn round_lane(v: u64, shift: u32, rne: bool) -> (u64, bool) {
+    debug_assert!(shift >= 1);
+    let kept = v >> shift;
+    let lost = v & ((1u64 << shift) - 1);
+    let half = 1u64 << (shift - 1);
+    let up = rne & ((lost > half) | ((lost == half) & (kept & 1 == 1)));
+    (kept + up as u64, lost != 0)
+}
+
+/// One lane of the branch-free multiply tail: raw significand product →
+/// normalize → round → rebase → saturate/flush, mirroring
+/// `mul::normalize_round_pack64` select-for-branch. `zero_in` marks a
+/// zero operand (result is the signed zero with no flags, the scalar
+/// early return).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn mul_lane_tail(
+    sig_a: u64,
+    sig_b: u64,
+    sign: u32,
+    exp_sum: i64,
+    zero_in: bool,
+    pf: &PackedFormat,
+    rne: bool,
+) -> (u32, Flags) {
+    let m_w = pf.m_w;
+    let p = sig_a * sig_b; // ≤ 2·m_w+2 ≤ 28 bits
+    let hi = ((p >> (2 * m_w + 1)) & 1) as u32;
+    let (f, inexact) = round_lane(p, m_w + hi, rne);
+    let carry = (f >> (m_w + 1)) & 1;
+    let f = f >> carry;
+    let e = exp_sum - (1i64 << (pf.e_w - 1)) + 1 + hi as i64 + carry as i64;
+
+    let under = e <= 0;
+    let over = e > pf.max_biased_exp;
+    let normal =
+        (sign << pf.sign_shift) | (((e as u32) & pf.exp_mask) << m_w) | (f as u32 & pf.frac_mask);
+    let w = sel32(
+        zero_in,
+        pf.zero_word(sign),
+        sel32(under, pf.zero_word(sign), sel32(over, pf.max_word_signed(sign), normal)),
+    );
+    let bits = (over as u8) | ((under as u8) << 1) | ((inexact as u8) << 2);
+    (w, Flags(sel8(zero_in, 0, bits)))
+}
+
+/// Multiply both lanes: lane `k` of the result ≡
+/// [`packed::mul_packed`]`(lane_k(va), lane_k(vb))`, value and flags.
+/// Deterministic modes run the branch-free SWAR core; stochastic rounding
+/// delegates to the scalar kernel per lane **in lane order** (the
+/// draw-order contract in the module docs).
+#[inline]
+pub fn mul_packed_lanes(
+    va: u64,
+    vb: u64,
+    sf: &SwarFormat,
+    r: &mut Rounder,
+) -> (u64, [Flags; 2]) {
+    let pf = &sf.pf;
+    if r.mode == RoundingMode::Stochastic {
+        let (a0, a1) = unpack2(va);
+        let (b0, b1) = unpack2(vb);
+        let (w0, f0) = packed::mul_packed(a0, b0, pf, r);
+        let (w1, f1) = packed::mul_packed(a1, b1, pf, r);
+        return (pack2(w0, w1), [f0, f1]);
+    }
+    let rne = r.mode == RoundingMode::NearestEven;
+
+    // Shared-mask stage: both lanes' signs, exponents and significands in
+    // one register op each.
+    let sign2 = ((va ^ vb) >> pf.sign_shift) & sf.lane_lsb;
+    let ea2 = (va >> pf.m_w) & sf.exp2;
+    let eb2 = (vb >> pf.m_w) & sf.exp2;
+    let sig_a2 = (va & sf.frac2) | sf.lead2;
+    let sig_b2 = (vb & sf.frac2) | sf.lead2;
+
+    // Unrolled branch-free lane cores (variable rounding shifts cannot run
+    // on the packed register — see module docs).
+    let (ea0, ea1) = unpack2(ea2);
+    let (eb0, eb1) = unpack2(eb2);
+    let (w0, f0) = mul_lane_tail(
+        sig_a2 as u32 as u64,
+        sig_b2 as u32 as u64,
+        sign2 as u32,
+        ea0 as i64 + eb0 as i64,
+        ea0 == 0 || eb0 == 0,
+        pf,
+        rne,
+    );
+    let (w1, f1) = mul_lane_tail(
+        sig_a2 >> LANE_BITS,
+        sig_b2 >> LANE_BITS,
+        (sign2 >> LANE_BITS) as u32,
+        ea1 as i64 + eb1 as i64,
+        ea1 == 0 || eb1 == 0,
+        pf,
+        rne,
+    );
+    (pack2(w0, w1), [f0, f1])
+}
+
+/// One lane of the branch-free addition core, mirroring
+/// [`packed::add_packed`]'s control flow as a select cascade with the same
+/// priority order (zeros, magnitude order, alignment with sticky
+/// collapse, add/sub split, exact cancellation, pre-rounding underflow,
+/// post-rounding renormalize + range checks).
+#[inline]
+fn add_lane(wa: u32, wb: u32, pf: &PackedFormat, rne: bool) -> (u32, Flags) {
+    let m_w = pf.m_w;
+    let sa = (wa >> pf.sign_shift) & 1;
+    let sb = (wb >> pf.sign_shift) & 1;
+    let mag_a = wa & pf.mag_mask;
+    let mag_b = wb & pf.mag_mask;
+    let a_zero = mag_a >> m_w == 0;
+    let b_zero = mag_b >> m_w == 0;
+
+    // Magnitude order: the word's magnitude bits ARE the (exp, frac)
+    // lexicographic key, so `hi` dominates the result sign.
+    let swap = mag_a < mag_b;
+    let hs = sel32(swap, sb, sa);
+    let hmag = sel32(swap, mag_b, mag_a);
+    let lmag = sel32(swap, mag_a, mag_b);
+
+    let lead = 1u64 << m_w;
+    let mhi = (lead | (hmag & pf.frac_mask) as u64) << G;
+    let mlo_full = lead | (lmag & pf.frac_mask) as u64;
+    let hexp = (hmag >> m_w) as i64;
+
+    // Clamped alignment: for d ≥ m_w+G+2 the clamped shift empties the
+    // kept bits and the sticky OR alone reproduces the scalar pure-sticky
+    // arm — one formula covers d == 0, the in-range shift and the far
+    // case, with the shift bounded ≤ m_w+G+2 ≤ 18 (no u64 shift hazard
+    // even though raw d can reach the full exponent range).
+    let d = ((hmag >> m_w) - (lmag >> m_w)).min(m_w + G + 2);
+    let full = mlo_full << G;
+    let mlo = (full >> d) | u64::from(full & ((1u64 << d) - 1) != 0);
+
+    // Effective addition (same sign): sum ∈ [2^(m_w+G+1), 2^(m_w+G+2)).
+    let sum = mhi + mlo;
+    let hi_bit = ((sum >> (m_w + G + 1)) & 1) as u32;
+    let (val_add, inex_add) = round_lane(sum, G + hi_bit, rne);
+    let e_add = hexp + hi_bit as i64;
+
+    // Effective subtraction: mhi ≥ mlo by the magnitude order, so the
+    // difference never wraps. `| cancel` keeps leading_zeros off 64 on
+    // exact cancellation; that lane's result is overridden below.
+    let diff = mhi - mlo;
+    let cancel = diff == 0;
+    let msb = 63 - (diff | u64::from(cancel)).leading_zeros();
+    let lshift = (m_w + G) - msb;
+    let e_sub = hexp - lshift as i64;
+    // Scalar add_packed returns zero + UNDERFLOW *before* rounding here,
+    // so INEXACT is suppressed and (in stochastic mode) no draw happens —
+    // the select cascade must keep that flag shape.
+    let sub_under = e_sub <= 0;
+    let (val_sub, inex_sub) = round_lane(diff << lshift, G, rne);
+
+    let same = sa == sb;
+    let val = sel64(same, val_add, val_sub);
+    let e = sel64(same, e_add as u64, e_sub as u64) as i64;
+    let inexact = (same & inex_add) | (!same & inex_sub);
+
+    // pack_word: post-rounding renormalize carry, then range checks.
+    let carry = (val >> (m_w + 1)) & 1;
+    let val = val >> carry;
+    let e = e + carry as i64;
+    let under = e <= 0;
+    let over = e > pf.max_biased_exp;
+    let normal =
+        (hs << pf.sign_shift) | (((e as u32) & pf.exp_mask) << m_w) | (val as u32 & pf.frac_mask);
+    let w_main = sel32(under, pf.zero_word(hs), sel32(over, pf.max_word_signed(hs), normal));
+    let fl_main = (over as u8) | ((under as u8) << 1) | ((inexact as u8) << 2);
+
+    // Subtraction early exits (exact cancellation → +0 with no flags;
+    // pre-rounding underflow → signed zero + UNDERFLOW only).
+    let sub_cancel = !same & cancel;
+    let sub_uf = !same & !cancel & sub_under;
+    let w_main = sel32(sub_cancel, 0, sel32(sub_uf, pf.zero_word(hs), w_main));
+    let fl_main = sel8(sub_cancel, 0, sel8(sub_uf, Flags::UNDERFLOW.0, fl_main));
+
+    // Zero-operand early exits (both → zero of ANDed sign; one → the
+    // other word verbatim; all flag-free).
+    let any_zero = a_zero | b_zero;
+    let w = sel32(
+        a_zero & b_zero,
+        pf.zero_word(sa & sb),
+        sel32(a_zero, wb, sel32(b_zero, wa, w_main)),
+    );
+    (w, Flags(sel8(any_zero, 0, fl_main)))
+}
+
+/// Add both lanes: lane `k` of the result ≡
+/// [`packed::add_packed`]`(lane_k(va), lane_k(vb))`, value and flags.
+/// Deterministic modes run the branch-free cores; stochastic rounding
+/// delegates per lane in lane order (draw-order contract).
+#[inline]
+pub fn add_packed_lanes(
+    va: u64,
+    vb: u64,
+    sf: &SwarFormat,
+    r: &mut Rounder,
+) -> (u64, [Flags; 2]) {
+    let pf = &sf.pf;
+    if r.mode == RoundingMode::Stochastic {
+        let (a0, a1) = unpack2(va);
+        let (b0, b1) = unpack2(vb);
+        let (w0, f0) = packed::add_packed(a0, b0, pf, r);
+        let (w1, f1) = packed::add_packed(a1, b1, pf, r);
+        return (pack2(w0, w1), [f0, f1]);
+    }
+    let rne = r.mode == RoundingMode::NearestEven;
+    let (a0, a1) = unpack2(va);
+    let (b0, b1) = unpack2(vb);
+    let (w0, f0) = add_lane(a0, b0, pf, rne);
+    let (w1, f1) = add_lane(a1, b1, pf, rne);
+    (pack2(w0, w1), [f0, f1])
+}
+
+/// One lane of the branch-free encode core — the select-cascade twin of
+/// [`packed::encode_bits`]. The f64 classification (zero/subnormal flush,
+/// NaN, infinity) and the range checks become mask selects with the
+/// scalar priority order; the single rounding uses the shared
+/// `frac_shift` constant (≥ 39 for lane formats, so the shift always
+/// runs).
+#[inline]
+fn encode_lane(bits: u64, pf: &PackedFormat, rne: bool) -> (u32, Flags) {
+    let sign = ((bits >> 63) as u32) & 1;
+    let e_f64 = ((bits >> 52) & 0x7FF) as i64;
+    let frac52 = bits & ((1u64 << 52) - 1);
+
+    let (f, inexact) = round_lane(frac52, pf.frac_shift, rne);
+    // f ≤ 2^m_w after a possible round-up carry; the frac mask then zeroes
+    // the fraction exactly as the scalar renormalize branch does.
+    let carry = (f >> pf.m_w) & 1;
+    let e = e_f64 - 1023 + carry as i64 + pf.bias;
+
+    let is_flush = e_f64 == 0;
+    let is_special = e_f64 == 0x7FF;
+    let is_nan = is_special && frac52 != 0;
+    let is_inf = is_special && frac52 == 0;
+    let under = e <= 0;
+    let over = e > pf.max_biased_exp;
+    let normal =
+        (sign << pf.sign_shift) | (((e as u32) & pf.exp_mask) << pf.m_w) | (f as u32 & pf.frac_mask);
+    let w = sel32(
+        is_nan,
+        0,
+        sel32(
+            is_inf,
+            pf.max_word_signed(sign),
+            sel32(
+                is_flush,
+                pf.zero_word(sign),
+                sel32(under, pf.zero_word(sign), sel32(over, pf.max_word_signed(sign), normal)),
+            ),
+        ),
+    );
+    let normal_bits = (over as u8) | ((under as u8) << 1) | ((inexact as u8) << 2);
+    let fl = sel8(
+        is_nan,
+        Flags::NAN_INPUT.0,
+        sel8(
+            is_inf,
+            Flags::OVERFLOW.0,
+            sel8(is_flush, ((frac52 != 0) as u8) << 1, normal_bits),
+        ),
+    );
+    (w, Flags(fl))
+}
+
+/// Encode two `f64`s into one SWAR word (`a` → lane 0, `b` → lane 1),
+/// lane-for-lane ≡ [`packed::encode_bits`]. The inputs are two full
+/// 64-bit carriers, so there is no register-packing win on this side —
+/// the SWAR payoff is that the *output* is already lane-packed for
+/// [`mul_packed_lanes`]/[`add_packed_lanes`]. Stochastic rounding
+/// delegates per lane in lane order.
+#[inline]
+pub fn encode_lanes(a: f64, b: f64, sf: &SwarFormat, r: &mut Rounder) -> (u64, [Flags; 2]) {
+    let pf = &sf.pf;
+    if r.mode == RoundingMode::Stochastic {
+        let (w0, f0) = packed::encode_bits(a.to_bits(), pf, r);
+        let (w1, f1) = packed::encode_bits(b.to_bits(), pf, r);
+        return (pack2(w0, w1), [f0, f1]);
+    }
+    let rne = r.mode == RoundingMode::NearestEven;
+    let (w0, f0) = encode_lane(a.to_bits(), pf, rne);
+    let (w1, f1) = encode_lane(b.to_bits(), pf, rne);
+    (pack2(w0, w1), [f0, f1])
+}
+
+/// Decode both lanes back to `f64` — branch-free, exact, lane-for-lane ≡
+/// `packed::decode_word` (the zero-exponent case is a mask select).
+#[inline]
+pub fn decode_lanes(v: u64, sf: &SwarFormat) -> (f64, f64) {
+    let pf = &sf.pf;
+    let decode_lane = |w: u32| -> f64 {
+        let sign = ((w >> pf.sign_shift) & 1) as u64;
+        let exp = (w >> pf.m_w) & pf.exp_mask;
+        let e_f64 = (exp as i64 - pf.bias + 1023) as u64;
+        let frac = (w & pf.frac_mask) as u64;
+        let body = sel64(exp != 0, (e_f64 << 52) | (frac << pf.frac_shift), 0);
+        f64::from_bits((sign << 63) | body)
+    };
+    let (w0, w1) = unpack2(v);
+    (decode_lane(w0), decode_lane(w1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        assert_eq!(unpack2(pack2(0xDEAD, 0xBEEF)), (0xDEAD, 0xBEEF));
+        assert_eq!(pack2(0xFFFF_FFFF, 0), 0xFFFF_FFFF);
+        assert_eq!(pack2(0, 1), 1u64 << 32);
+    }
+
+    #[test]
+    fn swar_format_masks_are_lane_replicated() {
+        let sf = SwarFormat::new(FpFormat::E5M10);
+        let pf = &sf.pf;
+        assert_eq!(sf.frac2, pack2(pf.frac_mask, pf.frac_mask));
+        assert_eq!(sf.exp2, pack2(pf.exp_mask, pf.exp_mask));
+        assert_eq!(sf.mag2, pack2(pf.mag_mask, pf.mag_mask));
+        assert_eq!(sf.lead2, pack2(1 << pf.m_w, 1 << pf.m_w));
+        assert_eq!(sf.lane_lsb, pack2(1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "total_bits ≤ 16")]
+    fn oversized_format_rejected() {
+        let _ = SwarFormat::new(FpFormat::E8M23); // 32 bits: word-packable, not lane-packable
+    }
+
+    #[test]
+    fn e8m7_is_the_widest_lane_format() {
+        // bfloat16 is exactly 16 bits — the widest admissible lane format.
+        let _ = SwarFormat::new(FpFormat::E8M7);
+        assert!(FpFormat::E8M7.fits_lane());
+        assert!(!FpFormat::new(6, 10).fits_lane()); // 17 bits
+    }
+
+    #[test]
+    fn encode_decode_lanes_match_scalar_on_nasty_values() {
+        let specials = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            65520.0,
+            6.103515625e-5,
+            1e-30,
+            1e30,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MIN_POSITIVE / 4.0,
+            f64::MAX,
+        ];
+        for fmt in [FpFormat::E5M10, FpFormat::E4M3, FpFormat::E5M8] {
+            let sf = SwarFormat::new(fmt);
+            let mut ra = Rounder::nearest_even();
+            let mut rb = Rounder::nearest_even();
+            for &a in &specials {
+                for &b in &[1.0, -2.5, 1e-9] {
+                    let (v, fl) = encode_lanes(a, b, &sf, &mut ra);
+                    let (w0, g0) = packed::encode_bits(a.to_bits(), &sf.pf, &mut rb);
+                    let (w1, g1) = packed::encode_bits(b.to_bits(), &sf.pf, &mut rb);
+                    assert_eq!((unpack2(v), fl), ((w0, w1), [g0, g1]), "{fmt}: {a} {b}");
+                    let (d0, d1) = decode_lanes(v, &sf);
+                    assert_eq!(d0.to_bits(), packed::decode_word(w0, &sf.pf).to_bits());
+                    assert_eq!(d1.to_bits(), packed::decode_word(w1, &sf.pf).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn toward_zero_mode_matches_scalar() {
+        let sf = SwarFormat::new(FpFormat::E5M10);
+        let mut rng = SplitMix64::new(0x7A);
+        let mut ra = Rounder::toward_zero();
+        let mut rb = Rounder::toward_zero();
+        for _ in 0..5_000 {
+            let a = f64::from_bits(rng.next_u64());
+            let b = f64::from_bits(rng.next_u64());
+            let (va, fa) = encode_lanes(a, b, &sf, &mut ra);
+            let (w0, g0) = packed::encode_bits(a.to_bits(), &sf.pf, &mut rb);
+            let (w1, g1) = packed::encode_bits(b.to_bits(), &sf.pf, &mut rb);
+            assert_eq!((unpack2(va), fa), ((w0, w1), [g0, g1]), "encode {a:e} {b:e}");
+            let (vm, fm) = mul_packed_lanes(va, va, &sf, &mut ra);
+            let (m0, h0) = packed::mul_packed(w0, w0, &sf.pf, &mut rb);
+            let (m1, h1) = packed::mul_packed(w1, w1, &sf.pf, &mut rb);
+            assert_eq!((unpack2(vm), fm), ((m0, m1), [h0, h1]), "mul {a:e} {b:e}");
+            let (vs, fs) = add_packed_lanes(va, vm, &sf, &mut ra);
+            let (s0, k0) = packed::add_packed(w0, m0, &sf.pf, &mut rb);
+            let (s1, k1) = packed::add_packed(w1, m1, &sf.pf, &mut rb);
+            assert_eq!((unpack2(vs), fs), ((s0, s1), [k0, k1]), "add {a:e} {b:e}");
+        }
+    }
+
+    #[test]
+    fn stochastic_delegation_preserves_draw_sequence() {
+        // The SWAR stochastic path and a scalar loop in flat-element order
+        // must consume identical RNG draws: interleave kernels and check
+        // the rounders stay in lockstep (same results ⇒ same draw counts).
+        let sf = SwarFormat::new(FpFormat::E4M3);
+        let mut rng = SplitMix64::new(0x7B);
+        let mut ra = Rounder::stochastic(99);
+        let mut rb = Rounder::stochastic(99);
+        for _ in 0..5_000 {
+            let a = rng.log_uniform(1e-3, 1e3);
+            let b = -rng.log_uniform(1e-3, 1e3);
+            let (va, fa) = encode_lanes(a, b, &sf, &mut ra);
+            let (w0, g0) = packed::encode_bits(a.to_bits(), &sf.pf, &mut rb);
+            let (w1, g1) = packed::encode_bits(b.to_bits(), &sf.pf, &mut rb);
+            assert_eq!((unpack2(va), fa), ((w0, w1), [g0, g1]), "encode {a:e} {b:e}");
+            let (vm, fm) = mul_packed_lanes(va, va, &sf, &mut ra);
+            let (m0, h0) = packed::mul_packed(w0, w0, &sf.pf, &mut rb);
+            let (m1, h1) = packed::mul_packed(w1, w1, &sf.pf, &mut rb);
+            assert_eq!((unpack2(vm), fm), ((m0, m1), [h0, h1]), "mul {a:e} {b:e}");
+            let (vs, fs) = add_packed_lanes(va, vm, &sf, &mut ra);
+            let (s0, k0) = packed::add_packed(w0, m0, &sf.pf, &mut rb);
+            let (s1, k1) = packed::add_packed(w1, m1, &sf.pf, &mut rb);
+            assert_eq!((unpack2(vs), fs), ((s0, s1), [k0, k1]), "add {a:e} {b:e}");
+        }
+    }
+}

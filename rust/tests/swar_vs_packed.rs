@@ -1,0 +1,397 @@
+//! SWAR-tier conformance suite (DESIGN.md §14): the scalar packed word
+//! kernels are the **specification**, the two-lane SWAR kernels are only an
+//! implementation. Lane `k` of every `*_lanes` call must reproduce the
+//! scalar kernel on that lane's operands — value bits and [`Flags`] —
+//! exhaustively for E4M3 and across proptest regimes that hammer the
+//! saturate/flush boundaries, plus the stochastic draw-order contract
+//! (lane 0 draws before lane 1, i.e. flat element order).
+//!
+//! The solver half freezes the cache-tiled `stencil_multi` driver: tiled
+//! execution at any worker count and any (non-divisible) tile split is
+//! bit-identical to the untiled path and to the scalar specification, for
+//! every registry scenario and engine — and composes with the decomp
+//! sharding of §13. The CI `swar-identity` job runs this suite under
+//! `R2F2_WORKERS` ∈ {1, 4} and greps the `MATRIX |` lines into the job
+//! summary.
+
+use r2f2::pde::heat1d::{self, HeatParams};
+use r2f2::pde::init::HeatInit;
+use r2f2::pde::scenario::{ScenarioRun, ScenarioSize, SCENARIOS};
+use r2f2::pde::{BatchEngine, FixedArith, QuantMode};
+use r2f2::proptest_mini::{check, Gen};
+use r2f2::softfloat::{packed, swar, Flags, FpFormat, Rounder, RoundingMode};
+
+// ---------------------------------------------------------------------------
+// Kernel level: lane-for-lane vs the scalar word kernels
+// ---------------------------------------------------------------------------
+
+/// Every valid word of `fmt`: both signs, every fraction, every biased
+/// exponent up to `max_biased_exp` (the all-ones exponent is reserved —
+/// the kernels' precondition, same filter as the packed exhaustive suite).
+fn valid_words(fmt: FpFormat) -> Vec<u32> {
+    let e_mask = (1u32 << fmt.e_w) - 1;
+    (0..(1u32 << fmt.total_bits()))
+        .filter(|w| i64::from((w >> fmt.m_w) & e_mask) <= fmt.max_biased_exp())
+        .collect()
+}
+
+const DET_MODES: [RoundingMode; 2] = [RoundingMode::NearestEven, RoundingMode::TowardZero];
+
+/// Exhaustive E4M3 multiply: every (wa, wb) word pair, in **both** lane
+/// positions, with cycling partner traffic in the other lane — both lanes
+/// of every call are checked against the scalar kernel.
+#[test]
+fn exhaustive_e4m3_mul_lane_for_lane() {
+    let fmt = FpFormat::new(4, 3);
+    let pf = fmt.packed();
+    let sf = fmt.swar();
+    let words = valid_words(fmt);
+    for mode in DET_MODES {
+        let mut r = Rounder::new(mode, 0);
+        for (i, &wa) in words.iter().enumerate() {
+            let pa = words[(i * 7 + 3) % words.len()];
+            for (j, &wb) in words.iter().enumerate() {
+                let pb = words[(j * 13 + 5) % words.len()];
+                let want = packed::mul_packed(wa, wb, &pf, &mut r);
+                let partner = packed::mul_packed(pa, pb, &pf, &mut r);
+                for lane in 0..2usize {
+                    let (va, vb) = if lane == 0 {
+                        (swar::pack2(wa, pa), swar::pack2(wb, pb))
+                    } else {
+                        (swar::pack2(pa, wa), swar::pack2(pb, wb))
+                    };
+                    let (v, fl) = swar::mul_packed_lanes(va, vb, &sf, &mut r);
+                    let lanes = [swar::unpack2(v).0, swar::unpack2(v).1];
+                    assert_eq!(
+                        (lanes[lane], fl[lane]),
+                        want,
+                        "{mode:?}: {wa:#x} ⊗ {wb:#x} in lane {lane}"
+                    );
+                    assert_eq!(
+                        (lanes[1 - lane], fl[1 - lane]),
+                        partner,
+                        "{mode:?}: partner {pa:#x} ⊗ {pb:#x} opposite lane {lane}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Exhaustive E4M3 add: same matrix as the multiply — every word pair,
+/// both lane positions, both deterministic modes.
+#[test]
+fn exhaustive_e4m3_add_lane_for_lane() {
+    let fmt = FpFormat::new(4, 3);
+    let pf = fmt.packed();
+    let sf = fmt.swar();
+    let words = valid_words(fmt);
+    for mode in DET_MODES {
+        let mut r = Rounder::new(mode, 0);
+        for (i, &wa) in words.iter().enumerate() {
+            let pa = words[(i * 11 + 1) % words.len()];
+            for (j, &wb) in words.iter().enumerate() {
+                let pb = words[(j * 17 + 9) % words.len()];
+                let want = packed::add_packed(wa, wb, &pf, &mut r);
+                let partner = packed::add_packed(pa, pb, &pf, &mut r);
+                for lane in 0..2usize {
+                    let (va, vb) = if lane == 0 {
+                        (swar::pack2(wa, pa), swar::pack2(wb, pb))
+                    } else {
+                        (swar::pack2(pa, wa), swar::pack2(pb, wb))
+                    };
+                    let (v, fl) = swar::add_packed_lanes(va, vb, &sf, &mut r);
+                    let lanes = [swar::unpack2(v).0, swar::unpack2(v).1];
+                    assert_eq!(
+                        (lanes[lane], fl[lane]),
+                        want,
+                        "{mode:?}: {wa:#x} + {wb:#x} in lane {lane}"
+                    );
+                    assert_eq!(
+                        (lanes[1 - lane], fl[1 - lane]),
+                        partner,
+                        "{mode:?}: partner {pa:#x} + {pb:#x} opposite lane {lane}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Proptest regime sweep: operands biased toward each format's saturate
+/// and flush boundaries (plus zeros, specials, and raw nasties) through
+/// the full encode → mul → add → decode lane pipeline, lane-for-lane
+/// against the scalar kernels under both deterministic modes.
+#[test]
+fn lane_pipeline_matches_scalar_on_boundary_regimes() {
+    for fmt in [FpFormat::E5M10, FpFormat::new(4, 3), FpFormat::E8M7, FpFormat::new(2, 1)] {
+        let pf = fmt.packed();
+        let sf = fmt.swar();
+        let max = fmt.max_value();
+        for mode in DET_MODES {
+            let mut r = Rounder::new(mode, 0xB0B);
+            check(&format!("swar-boundary-{fmt}-{mode:?}"), 4000, |g: &mut Gen| {
+                let mut pick = |g: &mut Gen| match g.below(5) {
+                    // Around the saturate boundary.
+                    0 => g.f64_signed_log(max * 0.125, max * 8.0),
+                    // Around the flush boundary (log-uniform far below 1).
+                    1 => g.f64_signed_log(1e-14, 1e-2),
+                    2 => 0.0,
+                    3 => g.f64_signed_log(1e-3, 1e3),
+                    _ => g.f64_nasty(),
+                };
+                let (a0, a1, b0, b1) = (pick(g), pick(g), pick(g), pick(g));
+
+                // Scalar reference, flat element order.
+                let (wa0, fa0) = packed::encode_bits(a0.to_bits(), &pf, &mut r);
+                let (wa1, fa1) = packed::encode_bits(a1.to_bits(), &pf, &mut r);
+                let (wb0, fb0) = packed::encode_bits(b0.to_bits(), &pf, &mut r);
+                let (wb1, fb1) = packed::encode_bits(b1.to_bits(), &pf, &mut r);
+                let (wp0, fp0) = packed::mul_packed(wa0, wb0, &pf, &mut r);
+                let (wp1, fp1) = packed::mul_packed(wa1, wb1, &pf, &mut r);
+                let (ws0, fs0) = packed::add_packed(wa0, wp0, &pf, &mut r);
+                let (ws1, fs1) = packed::add_packed(wa1, wp1, &pf, &mut r);
+
+                // SWAR pipeline on the same elements.
+                let (va, fla) = swar::encode_lanes(a0, a1, &sf, &mut r);
+                let (vb, flb) = swar::encode_lanes(b0, b1, &sf, &mut r);
+                let (vp, flp) = swar::mul_packed_lanes(va, vb, &sf, &mut r);
+                let (vs, fls) = swar::add_packed_lanes(va, vp, &sf, &mut r);
+
+                let enc_ok = va == swar::pack2(wa0, wa1)
+                    && vb == swar::pack2(wb0, wb1)
+                    && fla == [fa0, fa1]
+                    && flb == [fb0, fb1];
+                let mul_ok = vp == swar::pack2(wp0, wp1) && flp == [fp0, fp1];
+                let add_ok = vs == swar::pack2(ws0, ws1) && fls == [fs0, fs1];
+                let dec_ok = {
+                    let (d0, d1) = swar::decode_lanes(vs, &sf);
+                    d0.to_bits() == packed::decode_word(ws0, &pf).to_bits()
+                        && d1.to_bits() == packed::decode_word(ws1, &pf).to_bits()
+                };
+                if enc_ok && mul_ok && add_ok && dec_ok {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "a=({a0:e},{a1:e}) b=({b0:e},{b1:e}): enc={enc_ok} mul={mul_ok} \
+                         add={add_ok} dec={dec_ok}"
+                    ))
+                }
+            });
+        }
+    }
+}
+
+/// The draw-order contract: under stochastic rounding a `*_lanes` call
+/// consumes the RNG exactly like the flat scalar loop — lane 0 first, then
+/// lane 1. Two rounders seeded identically must stay in lock-step through
+/// a long mixed stream (one desynchronized draw would cascade into every
+/// later result, so bit-equality here pins the whole sequence).
+#[test]
+fn stochastic_draw_order_matches_flat_element_order() {
+    for fmt in [FpFormat::E5M10, FpFormat::new(4, 3)] {
+        let pf = fmt.packed();
+        let sf = fmt.swar();
+        let mut rs = Rounder::new(RoundingMode::Stochastic, 0xD1CE);
+        let mut rk = Rounder::new(RoundingMode::Stochastic, 0xD1CE);
+        check(&format!("swar-draw-order-{fmt}"), 3000, |g: &mut Gen| {
+            let mut pick = |g: &mut Gen| match g.below(4) {
+                0 => 0.0,
+                _ => g.f64_signed_log(1e-9, 1e9),
+            };
+            let (a0, a1, b0, b1) = (pick(g), pick(g), pick(g), pick(g));
+
+            let (wa0, fa0) = packed::encode_bits(a0.to_bits(), &pf, &mut rk);
+            let (wa1, fa1) = packed::encode_bits(a1.to_bits(), &pf, &mut rk);
+            let (wb0, fb0) = packed::encode_bits(b0.to_bits(), &pf, &mut rk);
+            let (wb1, fb1) = packed::encode_bits(b1.to_bits(), &pf, &mut rk);
+            let (wp0, fp0) = packed::mul_packed(wa0, wb0, &pf, &mut rk);
+            let (wp1, fp1) = packed::mul_packed(wa1, wb1, &pf, &mut rk);
+            let (wq0, fq0) = packed::add_packed(wp0, wb0, &pf, &mut rk);
+            let (wq1, fq1) = packed::add_packed(wp1, wb1, &pf, &mut rk);
+
+            let (va, fla) = swar::encode_lanes(a0, a1, &sf, &mut rs);
+            let (vb, flb) = swar::encode_lanes(b0, b1, &sf, &mut rs);
+            let (vp, flp) = swar::mul_packed_lanes(va, vb, &sf, &mut rs);
+            let (vq, flq) = swar::add_packed_lanes(vp, vb, &sf, &mut rs);
+
+            let ok = va == swar::pack2(wa0, wa1)
+                && vb == swar::pack2(wb0, wb1)
+                && vp == swar::pack2(wp0, wp1)
+                && vq == swar::pack2(wq0, wq1)
+                && fla == [fa0, fa1]
+                && flb == [fb0, fb1]
+                && flp == [fp0, fp1]
+                && flq == [fq0, fq1];
+            if ok {
+                Ok(())
+            } else {
+                Err(format!("a=({a0:e},{a1:e}) b=({b0:e},{b1:e}): draw sequence diverged"))
+            }
+        });
+    }
+}
+
+/// Flags are a union over the whole lane word, never smeared across lanes:
+/// an overflowing lane 0 next to an in-range lane 1 must flag only lane 0
+/// (and vice versa). Spot-checks the flag *independence* the exhaustive
+/// tests imply.
+#[test]
+fn lane_flags_are_independent() {
+    let fmt = FpFormat::E5M10;
+    let pf = fmt.packed();
+    let sf = fmt.swar();
+    let mut r = Rounder::nearest_even();
+    let (big, _) = packed::encode_bits(60000.0f64.to_bits(), &pf, &mut r);
+    let (one, _) = packed::encode_bits(1.5f64.to_bits(), &pf, &mut r);
+    let (tiny, _) = packed::encode_bits(1e-4f64.to_bits(), &pf, &mut r);
+
+    let (_, fl) = swar::mul_packed_lanes(swar::pack2(big, one), swar::pack2(big, one), &sf, &mut r);
+    assert!(fl[0].overflow() && !fl[1].overflow(), "overflow stays in lane 0: {fl:?}");
+    let (_, fl) =
+        swar::mul_packed_lanes(swar::pack2(one, tiny), swar::pack2(one, tiny), &sf, &mut r);
+    assert!(!fl[0].underflow() && fl[1].underflow(), "underflow stays in lane 1: {fl:?}");
+    let (_, fl) = swar::mul_packed_lanes(swar::pack2(one, one), swar::pack2(one, one), &sf, &mut r);
+    assert_eq!(fl, [Flags::NONE, Flags::NONE], "clean lanes raise nothing");
+}
+
+// ---------------------------------------------------------------------------
+// Solver level: cache-tiled stencil_multi vs untiled vs scalar spec
+// ---------------------------------------------------------------------------
+
+/// Tile geometries every identity case runs at: worker counts {1, 4}
+/// (mirroring the CI `R2F2_WORKERS` axis), widths that split the interiors
+/// non-divisibly (7 and 16 never divide the 99/63-node interiors), and a
+/// width larger than any test grid (the untiled single-tile path).
+const GEOMETRIES: [(usize, usize); 5] = [(1, 7), (1, 4096), (4, 7), (4, 16), (4, 4096)];
+
+const TILED_ENGINES: [BatchEngine; 2] = [BatchEngine::Packed, BatchEngine::Swar];
+
+fn engine_tag(e: BatchEngine) -> &'static str {
+    match e {
+        BatchEngine::Carrier => "carrier",
+        BatchEngine::Packed => "packed",
+        BatchEngine::Swar => "swar",
+    }
+}
+
+fn assert_fields_bit_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: node {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+fn assert_runs_bit_equal(a: &ScenarioRun, b: &ScenarioRun, what: &str) {
+    assert_fields_bit_equal(&a.field, &b.field, what);
+    assert_eq!(a.muls, b.muls, "{what}: muls");
+    assert_eq!(a.range_events, b.range_events, "{what}: range events");
+    assert_eq!(a.r2f2_stats, b.r2f2_stats, "{what}: stats");
+}
+
+fn tiling_regimes() -> Vec<(&'static str, HeatParams)> {
+    let base = HeatParams { n: 101, dt: 0.25 / (100.0f64 * 100.0), ..HeatParams::default() };
+    vec![
+        ("mid", HeatParams { steps: 120, snapshot_every: 40, ..base.clone() }),
+        (
+            "tiny",
+            HeatParams {
+                steps: 80,
+                init: HeatInit::Sin { amplitude: 5e-4, cycles: 2.0 },
+                ..base.clone()
+            },
+        ),
+        (
+            "huge",
+            HeatParams { steps: 60, init: HeatInit::Sin { amplitude: 2.5e5, cycles: 2.0 }, ..base },
+        ),
+    ]
+}
+
+/// The load-bearing solver matrix: regime × engine × tile geometry, tiled
+/// `Full`-mode multi-step runs bit-identical to the scalar specification
+/// and the untiled path — fields, snapshots, mul counts, and range-event
+/// counters (which also pins the per-tile event multiplicity partition).
+#[test]
+fn tiled_stencil_multi_bit_identical_to_untiled_and_scalar() {
+    for (regime, p) in &tiling_regimes() {
+        for engine in TILED_ENGINES {
+            let mut scalar_be = FixedArith::new(FpFormat::E5M10).with_engine(engine);
+            let want = heat1d::run_scalar(p, &mut scalar_be, QuantMode::Full);
+            let mut untiled_be =
+                FixedArith::new(FpFormat::E5M10).with_engine(engine).with_tiling(1, 1 << 20);
+            let untiled = heat1d::run(p, &mut untiled_be, QuantMode::Full);
+            for (workers, width) in GEOMETRIES {
+                let what = format!("heat/{regime}/{}/tiles({workers}w,{width})", engine_tag(engine));
+                let mut be = FixedArith::new(FpFormat::E5M10)
+                    .with_engine(engine)
+                    .with_tiling(workers, width);
+                let got = heat1d::run(p, &mut be, QuantMode::Full);
+                for (other, tag) in [(&want, "scalar"), (&untiled, "untiled")] {
+                    assert_fields_bit_equal(&other.u, &got.u, &format!("{what} vs {tag}"));
+                    assert_eq!(other.muls, got.muls, "{what} vs {tag}: muls");
+                    assert_eq!(
+                        other.range_events, got.range_events,
+                        "{what} vs {tag}: range events (tile multiplicity partition)"
+                    );
+                    assert_eq!(
+                        other.snapshots.len(),
+                        got.snapshots.len(),
+                        "{what} vs {tag}: snapshots"
+                    );
+                    for (i, ((ss, su), (gs, gu))) in
+                        other.snapshots.iter().zip(got.snapshots.iter()).enumerate()
+                    {
+                        assert_eq!(ss, gs, "{what} vs {tag}: snapshot step {i}");
+                        assert_fields_bit_equal(su, gu, &format!("{what} vs {tag}: snapshot {i}"));
+                    }
+                }
+            }
+            println!(
+                "MATRIX | heat/{regime} | {} | tiles {:?} | bit-identical |",
+                engine_tag(engine),
+                GEOMETRIES
+            );
+        }
+    }
+}
+
+/// Every registry scenario, both modes, Packed and Swar engines, tiled and
+/// untiled, and composed with §13 decomp sharding: all bit-identical to
+/// the default packed untiled run. The worker pool (`R2F2_WORKERS` in CI)
+/// must not leak into any result.
+#[test]
+fn scenario_matrix_swar_and_tiled_bit_identical() {
+    for spec in SCENARIOS {
+        let fmt = spec.wide_format;
+        for mode in [QuantMode::MulOnly, QuantMode::Full] {
+            let mut base_be = FixedArith::new(fmt);
+            let base = (spec.run)(ScenarioSize::Quick, &mut base_be, mode, true);
+            for engine in TILED_ENGINES {
+                for (workers, width) in [(1, 7), (4, 16)] {
+                    let mut be =
+                        FixedArith::new(fmt).with_engine(engine).with_tiling(workers, width);
+                    let run = (spec.run)(ScenarioSize::Quick, &mut be, mode, true);
+                    let what = format!(
+                        "{}/{}/{mode:?}/tiles({workers}w,{width})",
+                        spec.name,
+                        engine_tag(engine)
+                    );
+                    assert_runs_bit_equal(&base, &run, &what);
+                }
+                // Tiling composes with decomp sharding: shards fan out over
+                // the pool, each shard's slab tiles (and usually collapses
+                // to one inline tile) — still bit-identical.
+                let mut be = FixedArith::new(fmt).with_engine(engine).with_tiling(2, 9);
+                let sharded = (spec.run_sharded)(ScenarioSize::Quick, &mut be, mode, true, 3);
+                let what =
+                    format!("{}/{}/{mode:?}/shards=3+tiles", spec.name, engine_tag(engine));
+                assert_runs_bit_equal(&base, &sharded, &what);
+            }
+            println!(
+                "MATRIX | {} | {mode:?} | packed+swar × tiled × sharded | bit-identical |",
+                spec.name
+            );
+        }
+    }
+}
