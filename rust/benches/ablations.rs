@@ -9,6 +9,7 @@
 //! * the flexible partial-product truncation — accuracy cost of the
 //!   hardware approximation.
 
+use r2f2::bench_util::parse_bench_args_no_artifact;
 use r2f2::pde::heat1d::{run, HeatParams};
 use r2f2::pde::{rel_l2, Arith, F32Arith, QuantMode};
 use r2f2::r2f2core::{mul_packed, R2f2Config, R2f2Multiplier, Stats};
@@ -43,6 +44,9 @@ fn heat_with(unit: R2f2Multiplier) -> (f64, Stats) {
 }
 
 fn main() {
+    // No artifact here — the tables are the output; strict parsing still
+    // rejects typos and a meaningless --out with exit 2.
+    let _args = parse_bench_args_no_artifact();
     let cfg = R2f2Config::C16_393;
 
     // ---- redundancy window width (§4.2) --------------------------------

@@ -6,6 +6,7 @@
 //! the f32 result, with single-digit/tens adjustment counts over ~1.5 M
 //! multiplications (paper: 5 overflow + 23 redundancy).
 
+use r2f2::bench_util::parse_bench_args;
 use r2f2::pde::heat1d::{run, HeatParams};
 use r2f2::pde::init::HeatInit;
 use r2f2::pde::{rel_l2, F32Arith, F64Arith, FixedArith, QuantMode, R2f2Arith};
@@ -20,6 +21,7 @@ fn sample(u: &[f64]) -> Vec<f64> {
 }
 
 fn main() {
+    let args = parse_bench_args();
     let mut csv = CsvWriter::new();
     csv.row(vec!["figure", "init", "backend", "mode", "rel_err_vs_f64", "widen", "narrow", "wall_ms"]);
 
@@ -118,7 +120,8 @@ fn main() {
         println!("{}", line_plot("final profiles", &refs, 64, 14));
     }
 
-    let path = std::path::Path::new("target/reports/fig1_fig7_heat.csv");
+    let out = args.out.unwrap_or_else(|| "target/reports/fig1_fig7_heat.csv".to_string());
+    let path = std::path::Path::new(&out);
     csv.write(path).expect("write csv");
     println!("wrote {}", path.display());
 }

@@ -5,11 +5,13 @@
 //! (paper: first quarter reaches ±500, last quarter within ±0.25).
 
 use r2f2::analysis::heat_distribution;
+use r2f2::bench_util::parse_bench_args;
 use r2f2::pde::heat1d::HeatParams;
 use r2f2::report::ascii_plot::histogram;
 use r2f2::report::{sig, CsvWriter, Table};
 
 fn main() {
+    let args = parse_bench_args();
     // Long decay so the range shift spans the paper's three decades:
     // amplitude 500 → ~0.2 needs t ≈ ln(2500)/(α·k²).
     let n = 257;
@@ -64,7 +66,8 @@ fn main() {
         sig(rep.stages.last().unwrap().max_abs, 3)
     );
 
-    let path = std::path::Path::new("target/reports/fig2_distribution.csv");
+    let out = args.out.unwrap_or_else(|| "target/reports/fig2_distribution.csv".to_string());
+    let path = std::path::Path::new(&out);
     csv.write(path).expect("write csv");
     println!("wrote {}", path.display());
 }

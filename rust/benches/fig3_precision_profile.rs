@@ -6,12 +6,14 @@
 //! configurations) and compares the profiled optimum with the intuition
 //! formula — reproducing the paper's finding that they disagree.
 
+use r2f2::bench_util::parse_bench_args;
 use r2f2::report::{sig, CsvWriter, Table};
 use r2f2::sweep::config_profile::{
     best_of, eq1_exponent_bits, profile_range, sixteen_bit_family, PAPER_RANGES,
 };
 
 fn main() {
+    let args = parse_bench_args();
     let configs = sixteen_bit_family();
     let mut csv = CsvWriter::new();
     let mut header = vec!["range".to_string()];
@@ -53,7 +55,8 @@ fn main() {
     println!("{}", t.render());
     println!("Conclusion reproduced: Eq.(1) disagrees with the profiled optimum on\nmost ranges — \"dynamically determining the optimal data precision\nconfiguration in practice is non-trivial\".");
 
-    let path = std::path::Path::new("target/reports/fig3_profile.csv");
+    let out = args.out.unwrap_or_else(|| "target/reports/fig3_profile.csv".to_string());
+    let path = std::path::Path::new(&out);
     csv.write(path).expect("write csv");
     println!("wrote {}", path.display());
 }

@@ -11,12 +11,14 @@
 //! (≈10 M multiplications per unit per pairing); default is a 2000×200
 //! subsample with statistically identical structure.
 
+use r2f2::bench_util::parse_bench_args;
 use r2f2::report::ascii_plot::line_plot;
 use r2f2::report::{pct, CsvWriter, Table};
 use r2f2::sweep::error_sweep::{error_sweep, paper_pairings, SweepParams};
 use std::time::Instant;
 
 fn main() {
+    let args = parse_bench_args();
     let full = std::env::var("R2F2_BENCH_FULL").is_ok();
     let params = if full {
         SweepParams::default() // 10 000 × 1000 — the paper's exact protocol
@@ -111,7 +113,8 @@ fn main() {
          approximation) match the paper's description."
     );
 
-    let path = std::path::Path::new("target/reports/fig6_error_sweep.csv");
+    let out = args.out.unwrap_or_else(|| "target/reports/fig6_error_sweep.csv".to_string());
+    let path = std::path::Path::new(&out);
     csv.write(path).expect("write csv");
     println!("wrote {}", path.display());
 }

@@ -6,6 +6,7 @@
 //! visible artifacts. ~30 K substituted multiplications; R2F2 adjusted 7
 //! (overflow) + 15 (redundancy) times.
 
+use r2f2::bench_util::parse_bench_args;
 use r2f2::pde::swe2d::{run, QuantScope, SweParams};
 use r2f2::pde::{rel_l2, F64Arith, FixedArith, R2f2Arith};
 use r2f2::r2f2core::R2f2Config;
@@ -15,6 +16,7 @@ use r2f2::softfloat::FpFormat;
 use std::time::Instant;
 
 fn main() {
+    let args = parse_bench_args();
     // Three snapshot times like the paper's 2/6/12-hour panels.
     let mut params = SweParams::default();
     params.steps = 60;
@@ -103,7 +105,8 @@ fn main() {
         "0".into(),
         format!("{}", he.overflows),
     ]);
-    let path = std::path::Path::new("target/reports/fig8_swe.csv");
+    let out = args.out.unwrap_or_else(|| "target/reports/fig8_swe.csv".to_string());
+    let path = std::path::Path::new(&out);
     csv.write(path).expect("write csv");
     println!("wrote {}", path.display());
 }

@@ -23,7 +23,9 @@
 //! Any other flag is an error (exit 2) — a typo must not silently bench
 //! the wrong configuration.
 
-use r2f2::bench_util::{bench_with, black_box, fmt_ns, print_results, BenchResult};
+use r2f2::bench_util::{
+    bench_with, black_box, fmt_ns, parse_bench_args, print_results, BenchArgs, BenchResult,
+};
 use r2f2::coordinator::parallel_map;
 use r2f2::metrics::Registry;
 use r2f2::pde::adaptive::{
@@ -45,36 +47,9 @@ use r2f2::softfloat::{add_f, mul_batch_f, mul_f, quantize, Flags, FpFormat, Roun
 use r2f2::sweep::error_sweep::{error_sweep, SweepParams};
 use std::time::Duration;
 
-struct Opts {
-    smoke: bool,
-    /// JSON output path. `--out` is the canonical spelling (it names the
-    /// committed `BENCH_smoke.json` snapshot); `--json` is an accepted
-    /// alias — both land here, there is exactly one output path.
-    out: Option<String>,
-}
-
-fn parse_opts() -> Opts {
-    let mut opts = Opts { smoke: false, out: None };
-    let mut args = std::env::args().skip(1);
-    while let Some(a) = args.next() {
-        match a.as_str() {
-            "--smoke" => opts.smoke = true,
-            "--out" | "--json" => opts.out = args.next().or_else(|| {
-                eprintln!("{a} needs a path");
-                std::process::exit(2);
-            }),
-            "--bench" => {} // cargo bench passes this through
-            other => {
-                eprintln!("unknown arg {other:?} (expected --smoke, --out <path>)");
-                std::process::exit(2);
-            }
-        }
-    }
-    if std::env::var("R2F2_BENCH_SMOKE").is_ok() {
-        opts.smoke = true;
-    }
-    opts
-}
+// Argv handling lives in `bench_util::parse_bench_args` (shared with the
+// figure benches): `--smoke`, canonical `--out` with `--json` as alias,
+// unknown flags exit 2.
 
 /// One engine tier of the perf trajectory. Each tier adds exactly one
 /// optimisation on top of the previous one, so the row family reads as a
@@ -262,7 +237,7 @@ fn emit_json(
 }
 
 fn main() {
-    let opts = parse_opts();
+    let opts: BenchArgs = parse_bench_args();
     let (samples, batch_ms) = if opts.smoke { (5, 1) } else { (10, 5) };
     let unit_samples = if opts.smoke { 8 } else { 30 };
     let mut all_rows: Vec<BenchResult> = Vec::new();

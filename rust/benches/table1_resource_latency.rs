@@ -6,13 +6,15 @@
 //! numbers with per-cell deviation. The Vitis HLS *library* rows are opaque
 //! vendor IP and are reported verbatim for context.
 
-use r2f2::bench_util::{bench, black_box, print_results};
+use r2f2::bench_util::{bench, black_box, parse_bench_args_no_artifact, print_results};
 use r2f2::r2f2core::{datapath, mul_packed, resource, R2f2Config};
 use r2f2::report::Table;
 use r2f2::rng::SplitMix64;
 use r2f2::softfloat::{encode, mul, FpFormat, Rounder};
 
 fn main() {
+    // Tables only, no artifact; strict parsing rejects typos with exit 2.
+    let _args = parse_bench_args_no_artifact();
     println!("==================== TABLE 1 ====================");
 
     // Library rows (from the paper; not modelled — see DESIGN.md §6).

@@ -1,0 +1,435 @@
+//! Line-level lexing for the static conformance pass (DESIGN.md §15).
+//!
+//! The rule engine must never false-positive on text that is not code: a
+//! `f64` inside a doc comment, a `HashMap` inside a string literal, a
+//! quote character inside a char literal. This lexer walks a source file
+//! once and produces, per line,
+//!
+//! * `code` — the line with comments removed and the *contents* of string
+//!   and char literals blanked (delimiters kept, so `"as f64"` lexes to
+//!   `""` and can never match a pattern);
+//! * `comment` — the concatenated comment text of the line, which is where
+//!   audit allow markers live (and the only place they are recognized);
+//! * `in_test` — whether the line sits in the file's test region.
+//!
+//! It is deliberately *not* a Rust parser: it understands exactly the
+//! token forms that could hide a pattern or a marker — line comments,
+//! nested block comments, string literals with escapes, raw strings
+//! (`r"…"`, `r#"…"#`, any hash depth, multi-line), byte strings and
+//! byte/char literals, and the char-literal-vs-lifetime ambiguity — and
+//! nothing else. Everything it does is per-character and std-only.
+//!
+//! **Test region heuristic.** Module convention in this tree (enforced by
+//! review, relied on here): the `#[cfg(test)] mod tests` block is the last
+//! item of a file. The lexer marks every line from the first `#[cfg(test)]`
+//! attribute to end-of-file as test code; rules that exempt tests skip
+//! those lines. A `#[cfg(test)]` on an early item would over-exempt the
+//! rest of the file — the conformance suite pins the heuristic instead
+//! with fixtures.
+
+/// One lexed source line.
+#[derive(Debug, Clone)]
+pub struct LexedLine {
+    /// Code with comments removed and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text (line + block comments) on this line.
+    pub comment: String,
+    /// Raw line, untouched — findings quote this.
+    pub raw: String,
+    /// True from the first `#[cfg(test)]` attribute to end of file.
+    pub in_test: bool,
+}
+
+/// Lexer state that survives a newline.
+enum State {
+    Code,
+    /// Inside a block comment at the given nesting depth.
+    Block(u32),
+    /// Inside a normal string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` + this many `#`.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex a whole source file into per-line code/comment channels.
+pub fn lex(src: &str) -> Vec<LexedLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out: Vec<LexedLine> = Vec::new();
+    let mut state = State::Code;
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut raw = String::new();
+    let mut in_test = false;
+    let mut i = 0usize;
+
+    macro_rules! flush_line {
+        () => {{
+            if !in_test && code.contains("#[cfg(test)]") {
+                in_test = true;
+            }
+            out.push(LexedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                raw: std::mem::take(&mut raw),
+                in_test,
+            });
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c != '\n' {
+            raw.push(c);
+        }
+        match state {
+            State::Code => match c {
+                '\n' => flush_line!(),
+                '/' if chars.get(i + 1) == Some(&'/') => {
+                    // Line comment: everything to end-of-line is comment
+                    // text (doc comments included — they are comments).
+                    let mut j = i + 2;
+                    while j < chars.len() && chars[j] != '\n' {
+                        comment.push(chars[j]);
+                        raw.push(chars[j]);
+                        j += 1;
+                    }
+                    i = j;
+                    continue; // let the '\n' (or EOF) be handled above
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    state = State::Block(1);
+                    raw.push('*');
+                    i += 2;
+                    continue;
+                }
+                '"' => {
+                    code.push('"');
+                    state = State::Str;
+                }
+                'r' => {
+                    // Possible raw string start: r"…", r#"…"#, br"…".
+                    // The `r` must not continue an identifier (`writer"`
+                    // is not a raw string) — a single `b` prefix is the
+                    // byte-string exception.
+                    let prev = code.chars().last();
+                    let ident_prev = match prev {
+                        Some('b') => {
+                            let before = code.chars().rev().nth(1);
+                            before.is_some_and(is_ident)
+                        }
+                        Some(p) => is_ident(p),
+                        None => false,
+                    };
+                    let mut hashes = 0u32;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if !ident_prev && chars.get(j) == Some(&'"') {
+                        code.push_str("r\"");
+                        for k in i + 1..=j {
+                            if chars[k] != '\n' {
+                                raw.push(chars[k]);
+                            }
+                        }
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                        continue;
+                    }
+                    code.push('r');
+                }
+                '\'' => {
+                    // Char literal vs lifetime. `'\…'` and `'x'` are
+                    // literals (contents blanked); anything else is a
+                    // lifetime tick, which stays in the code channel.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 1;
+                        while j < chars.len() {
+                            match chars[j] {
+                                '\\' => j += 2,
+                                '\'' => break,
+                                _ => j += 1,
+                            }
+                        }
+                        code.push_str("''");
+                        for k in i + 1..=j.min(chars.len() - 1) {
+                            if chars[k] != '\n' {
+                                raw.push(chars[k]);
+                            }
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                    if chars.get(i + 2) == Some(&'\'') {
+                        code.push_str("''");
+                        if chars[i + 1] != '\n' {
+                            raw.push(chars[i + 1]);
+                        }
+                        raw.push('\'');
+                        i += 3;
+                        continue;
+                    }
+                    code.push('\'');
+                }
+                _ => code.push(c),
+            },
+            State::Block(depth) => match c {
+                '\n' => flush_line!(),
+                '*' if chars.get(i + 1) == Some(&'/') => {
+                    raw.push('/');
+                    i += 2;
+                    if depth == 1 {
+                        state = State::Code;
+                        comment.push(' ');
+                    } else {
+                        state = State::Block(depth - 1);
+                    }
+                    continue;
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    // Rust block comments nest.
+                    raw.push('*');
+                    i += 2;
+                    state = State::Block(depth + 1);
+                    continue;
+                }
+                _ => comment.push(c),
+            },
+            State::Str => match c {
+                '\n' => flush_line!(), // strings may span lines
+                '\\' => {
+                    if let Some(&n) = chars.get(i + 1) {
+                        if n != '\n' {
+                            raw.push(n);
+                        }
+                        i += 2;
+                        if n == '\n' {
+                            flush_line!();
+                        }
+                        continue;
+                    }
+                }
+                '"' => {
+                    code.push('"');
+                    state = State::Code;
+                }
+                _ => {} // blank string contents
+            },
+            State::RawStr(hashes) => match c {
+                '\n' => flush_line!(),
+                '"' => {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        for k in 0..hashes as usize {
+                            raw.push(chars[i + 1 + k]);
+                        }
+                        i += 1 + hashes as usize;
+                        state = State::Code;
+                        continue;
+                    }
+                }
+                _ => {} // blank raw-string contents
+            },
+        }
+        i += 1;
+    }
+    if !code.is_empty() || !comment.is_empty() || !raw.is_empty() {
+        flush_line!();
+    }
+    out
+}
+
+/// A parsed audit allow marker (see DESIGN.md §15 for the grammar).
+///
+/// Recognition triggers on the marker literal — the tool name, `-audit`,
+/// and a trailing colon (see [`marker_trigger`]) — inside a comment; prose
+/// that mentions the marker *name* without the colon (like this sentence)
+/// is never parsed. After the trigger the grammar is
+/// `allow(<rule>[, <rule>…])` followed by a separator (`—`, `-` or `:`)
+/// and a non-empty reason.
+#[derive(Debug, Clone)]
+pub struct Marker {
+    /// Rule ids named inside `allow(…)` (empty when malformed).
+    pub rules: Vec<String>,
+    /// Free-text justification after the separator.
+    pub reason: String,
+    /// Set when the text after the trigger does not parse as `allow(…)`.
+    pub malformed: Option<&'static str>,
+}
+
+/// The literal that makes a comment a marker. Built from pieces so the
+/// auditor's own sources never contain the trigger in comment position.
+pub fn marker_trigger() -> String {
+    format!("{}-{}:", "r2f2", "audit")
+}
+
+/// Parse an audit marker out of a line's comment text, if present.
+pub fn parse_marker(comment: &str) -> Option<Marker> {
+    let trigger = marker_trigger();
+    let at = comment.find(&trigger)?;
+    let rest = comment[at + trigger.len()..].trim_start();
+    let Some(inner_start) = rest.strip_prefix("allow(") else {
+        return Some(Marker {
+            rules: Vec::new(),
+            reason: String::new(),
+            malformed: Some("expected `allow(<rule>)` after the marker trigger"),
+        });
+    };
+    let Some(close) = inner_start.find(')') else {
+        return Some(Marker {
+            rules: Vec::new(),
+            reason: String::new(),
+            malformed: Some("unclosed `allow(`"),
+        });
+    };
+    let ids: Vec<String> = inner_start[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if ids.is_empty() {
+        return Some(Marker {
+            rules: Vec::new(),
+            reason: String::new(),
+            malformed: Some("empty rule list in `allow()`"),
+        });
+    }
+    let reason = inner_start[close + 1..]
+        .trim_start_matches([' ', '\t', '—', '–', '-', ':'])
+        .trim()
+        .to_string();
+    Some(Marker { rules: ids, reason, malformed: None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_stripped() {
+        let c = code_of("let x = 1; // uses f64 internally\n");
+        assert_eq!(c, vec!["let x = 1; "]);
+    }
+
+    #[test]
+    fn doc_comments_stripped() {
+        let c = code_of("/// encode an f64 slice\npub fn f() {}\n");
+        assert_eq!(c, vec!["", "pub fn f() {}"]);
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let c = code_of("a /* x /* y */ f64 */ b\nc /* open\nstill f64\nclose */ d\n");
+        assert_eq!(c, vec!["a  b", "c ", "", " d"]);
+    }
+
+    #[test]
+    fn string_contents_blanked() {
+        let c = code_of("let s = \"as f64\"; let t = 2;\n");
+        assert_eq!(c, vec!["let s = \"\"; let t = 2;"]);
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_the_string() {
+        let c = code_of("let s = \"a\\\"f64\\\"b\"; g();\n");
+        assert_eq!(c, vec!["let s = \"\"; g();"]);
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let src = "let s = r#\"line one f64\nline two HashMap\"#; tail();\n";
+        let c = code_of(src);
+        assert_eq!(c, vec!["let s = r\"", "\"; tail();"]);
+    }
+
+    #[test]
+    fn raw_string_hash_depth_respected() {
+        let c = code_of("let s = r##\"inner \"# still f64\"##; x();\n");
+        assert_eq!(c, vec!["let s = r\"\"; x();"]);
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_raw_string() {
+        let c = code_of("writer\"f64\" + 1\n");
+        // `writer` keeps its r; the quoted part is a normal string.
+        assert_eq!(c, vec!["writer\"\" + 1"]);
+    }
+
+    #[test]
+    fn char_literals_blanked_lifetimes_kept() {
+        let c = code_of("let q = '\"'; let e = '\\''; fn f<'a>(x: &'a str) {}\n");
+        assert_eq!(c, vec!["let q = ''; let e = ''; fn f<'a>(x: &'a str) {}"]);
+    }
+
+    #[test]
+    fn test_region_marked_from_cfg_test() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n fn b() {}\n}\n";
+        let l = lex(src);
+        assert!(!l[0].in_test);
+        assert!(l[1].in_test && l[2].in_test && l[3].in_test);
+    }
+
+    #[test]
+    fn cfg_test_inside_string_does_not_start_region() {
+        let src = "let s = \"#[cfg(test)]\";\nfn real() {}\n";
+        let l = lex(src);
+        assert!(!l[0].in_test && !l[1].in_test);
+    }
+
+    #[test]
+    fn comment_channel_collects_text() {
+        let l = lex("code(); // trailing words\n");
+        assert_eq!(l[0].comment.trim(), "trailing words");
+        assert_eq!(l[0].raw, "code(); // trailing words");
+    }
+
+    #[test]
+    fn marker_parses_with_reason() {
+        let m = parse_marker(&format!(" {} allow(unsafe-free) — ffi shim", marker_trigger()))
+            .unwrap();
+        assert_eq!(m.rules, vec!["unsafe-free"]);
+        assert_eq!(m.reason, "ffi shim");
+        assert!(m.malformed.is_none());
+    }
+
+    #[test]
+    fn marker_multi_rule_and_ascii_separator() {
+        let m = parse_marker(&format!("{} allow(a, b) - why not", marker_trigger())).unwrap();
+        assert_eq!(m.rules, vec!["a", "b"]);
+        assert_eq!(m.reason, "why not");
+    }
+
+    #[test]
+    fn marker_without_reason_parses_empty() {
+        let m = parse_marker(&format!("{} allow(unsafe-free)", marker_trigger())).unwrap();
+        assert!(m.malformed.is_none());
+        assert!(m.reason.is_empty());
+    }
+
+    #[test]
+    fn marker_malformed_without_allow() {
+        let m = parse_marker(&format!("{} allov(unsafe-free)", marker_trigger())).unwrap();
+        assert!(m.malformed.is_some());
+    }
+
+    #[test]
+    fn prose_without_colon_is_not_a_marker() {
+        assert!(parse_marker("the r2f2-audit pass checks this").is_none());
+    }
+}

@@ -1,0 +1,454 @@
+//! `r2f2 audit` — the zero-dep static conformance pass (DESIGN.md §15).
+//!
+//! Every guarantee the reproduction rests on — packed/SWAR kernels
+//! bit-identical to the scalar reference (§9/§14), the stochastic
+//! draw-order contract (§14), cache soundness from bit-reproducible runs
+//! (§12) — is a *source-level discipline*: one stray `f64` multiply in a
+//! kernel module, one `HashMap` iteration on a result path, one ad-hoc RNG
+//! silently voids contracts the dynamic suites can only probe pointwise.
+//! This module makes the discipline statically checkable on every PR:
+//!
+//! * [`lexer`] — line-level lexing that strips comments and blanks
+//!   string/char-literal contents, so rules never false-positive on them;
+//! * [`rules`] — the rule inventory with its per-module policy map;
+//! * [`report`] — findings with `file:line + rule id + quoted snippet`,
+//!   the `r2f2-audit/1` JSON report, and the counts-only snapshot.
+//!
+//! Violations are suppressible only by an inline allow marker (grammar in
+//! DESIGN.md §15): a comment carrying the marker trigger, `allow(<rule>)`
+//! and a **non-empty reason**. A trailing marker covers its own line; a
+//! marker on a comment-only line covers the next code line. Reason-less,
+//! malformed or unknown-rule markers are findings themselves
+//! (`allow-marker`), and stale markers that suppress nothing are surfaced
+//! as `unused_markers` (non-gating).
+//!
+//! The CLI surface is `r2f2 audit [--json <out>] [--snapshot <out>]
+//! [--rule <id>] [--root <dir>]`; the process exits non-zero on any
+//! unsuppressed finding, which is what the CI `static-analysis` job gates
+//! on.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Allow, AuditReport, Finding, UnusedMarker};
+pub use rules::{RuleSpec, ALLOW_MARKER, RULES, ZERO_DEP};
+
+use std::path::{Path, PathBuf};
+
+/// Audit configuration.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Repository root (the directory holding `rust/src/lib.rs`).
+    pub root: PathBuf,
+    /// Restrict the report to one rule id.
+    pub rule: Option<String>,
+}
+
+/// A marker resolved to the line it covers.
+struct BoundMarker {
+    /// 0-based index of the marker's own line.
+    at: usize,
+    /// 0-based index of the line it suppresses (None: dangled at EOF).
+    target: Option<usize>,
+    marker: lexer::Marker,
+    used: bool,
+}
+
+fn truncate_snippet(raw: &str) -> String {
+    let t = raw.trim();
+    if t.chars().count() <= 120 {
+        t.to_string()
+    } else {
+        let mut s: String = t.chars().take(117).collect();
+        s.push_str("...");
+        s
+    }
+}
+
+/// Resolve every marker in `lines` to its covered line and emit the
+/// `allow-marker` hygiene findings (malformed / unknown rule / missing
+/// reason / self-allow) into `rep`.
+fn bind_markers(path: &str, lines: &[lexer::LexedLine], rep: &mut AuditReport) -> Vec<BoundMarker> {
+    let mut markers: Vec<BoundMarker> = Vec::new();
+    let mut pending: Vec<usize> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let has_code = !line.code.trim().is_empty();
+        if has_code {
+            for mi in pending.drain(..) {
+                markers[mi].target = Some(idx);
+            }
+        }
+        if let Some(marker) = lexer::parse_marker(&line.comment) {
+            let mi = markers.len();
+            markers.push(BoundMarker {
+                at: idx,
+                target: if has_code { Some(idx) } else { None },
+                marker,
+                used: false,
+            });
+            if !has_code {
+                pending.push(mi);
+            }
+        }
+    }
+
+    for bm in &markers {
+        let snippet = truncate_snippet(&lines[bm.at].raw);
+        let mut notes: Vec<String> = Vec::new();
+        if let Some(why) = bm.marker.malformed {
+            notes.push(why.to_string());
+        }
+        for id in &bm.marker.rules {
+            if id == ALLOW_MARKER {
+                notes.push("allow-marker is not suppressible".to_string());
+            } else if rules::rule(id).is_none() {
+                notes.push(format!("unknown rule `{id}`"));
+            }
+        }
+        if bm.marker.malformed.is_none() && bm.marker.reason.is_empty() {
+            notes.push("missing reason (`allow(<rule>)` needs a justification)".to_string());
+        }
+        for note in notes {
+            rep.findings.push(Finding {
+                file: path.to_string(),
+                line: bm.at + 1,
+                rule: ALLOW_MARKER.to_string(),
+                snippet: snippet.clone(),
+                note,
+            });
+        }
+    }
+    markers
+}
+
+/// Audit one Rust source file (the whole line-rule set + marker hygiene).
+/// `path` is the repo-root-relative label the policy map keys on — tests
+/// pass fixture labels like `rust/src/softfloat/mul.rs`.
+pub fn audit_source(path: &str, src: &str) -> AuditReport {
+    let mut rep = AuditReport { files_scanned: 1, ..AuditReport::default() };
+    let lines = lexer::lex(src);
+    let mut markers = bind_markers(path, &lines, &mut rep);
+
+    for rule in RULES {
+        if rule.patterns.is_empty() || !rules::applies(rule, path) {
+            continue;
+        }
+        for (idx, line) in lines.iter().enumerate() {
+            if rule.exempt_tests && line.in_test {
+                continue;
+            }
+            if line.code.trim().is_empty() {
+                continue;
+            }
+            if !rule.patterns.iter().any(|p| rules::pattern_matches(p, &line.code)) {
+                continue;
+            }
+            // One finding per (line, rule) however many patterns hit.
+            let covering = markers.iter_mut().find(|m| {
+                m.target == Some(idx)
+                    && m.marker.malformed.is_none()
+                    && m.marker.rules.iter().any(|id| id == rule.id)
+            });
+            match covering {
+                Some(m) => {
+                    m.used = true;
+                    rep.allows.push(Allow {
+                        file: path.to_string(),
+                        line: idx + 1,
+                        rule: rule.id.to_string(),
+                        reason: m.marker.reason.clone(),
+                    });
+                }
+                None => rep.findings.push(Finding {
+                    file: path.to_string(),
+                    line: idx + 1,
+                    rule: rule.id.to_string(),
+                    snippet: truncate_snippet(&lines[idx].raw),
+                    note: String::new(),
+                }),
+            }
+        }
+    }
+
+    for m in &markers {
+        if !m.used && m.marker.malformed.is_none() && !m.marker.rules.is_empty() {
+            rep.unused.push(UnusedMarker {
+                file: path.to_string(),
+                line: m.at + 1,
+                rules: m.marker.rules.join(", "),
+            });
+        }
+    }
+    rep
+}
+
+/// Audit one `Cargo.toml` for the `zero-dep` rule: every dependency
+/// section (`[dependencies]`, `[dev-dependencies]`, `[build-dependencies]`,
+/// `[target.….dependencies]`, `[workspace.dependencies]`) must be empty.
+/// Suppression works like in Rust sources, with `#` comments.
+pub fn audit_cargo_toml(path: &str, src: &str) -> AuditReport {
+    let mut rep = AuditReport { files_scanned: 1, ..AuditReport::default() };
+    // Reuse the marker binder by mapping TOML lines onto lexed lines:
+    // `#` starts a comment (our manifests use no `#` inside strings).
+    let lines: Vec<lexer::LexedLine> = src
+        .lines()
+        .map(|l| {
+            let (code, comment) = match l.find('#') {
+                Some(p) => (l[..p].to_string(), l[p + 1..].to_string()),
+                None => (l.to_string(), String::new()),
+            };
+            lexer::LexedLine { code, comment, raw: l.to_string(), in_test: false }
+        })
+        .collect();
+    let mut markers = bind_markers(path, &lines, &mut rep);
+
+    let mut section = String::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let t = line.code.trim();
+        if t.starts_with('[') && t.ends_with(']') {
+            section = t.trim_matches(['[', ']']).trim().to_string();
+            continue;
+        }
+        let dep_section = section == "dependencies"
+            || section == "dev-dependencies"
+            || section == "build-dependencies"
+            || section.ends_with(".dependencies");
+        if !dep_section || t.is_empty() || !t.contains('=') {
+            continue;
+        }
+        let covering = markers.iter_mut().find(|m| {
+            m.target == Some(idx)
+                && m.marker.malformed.is_none()
+                && m.marker.rules.iter().any(|id| id == ZERO_DEP)
+        });
+        match covering {
+            Some(m) => {
+                m.used = true;
+                rep.allows.push(Allow {
+                    file: path.to_string(),
+                    line: idx + 1,
+                    rule: ZERO_DEP.to_string(),
+                    reason: m.marker.reason.clone(),
+                });
+            }
+            None => rep.findings.push(Finding {
+                file: path.to_string(),
+                line: idx + 1,
+                rule: ZERO_DEP.to_string(),
+                snippet: truncate_snippet(&line.raw),
+                note: format!("dependency declared in [{section}]"),
+            }),
+        }
+    }
+
+    for m in &markers {
+        if !m.used && m.marker.malformed.is_none() && !m.marker.rules.is_empty() {
+            rep.unused.push(UnusedMarker {
+                file: path.to_string(),
+                line: m.at + 1,
+                rules: m.marker.rules.join(", "),
+            });
+        }
+    }
+    rep
+}
+
+fn merge(into: &mut AuditReport, from: AuditReport) {
+    into.findings.extend(from.findings);
+    into.allows.extend(from.allows);
+    into.unused.extend(from.unused);
+    into.files_scanned += from.files_scanned;
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// The directories the auditor sweeps, relative to the repo root. The
+/// per-rule policy map narrows further (e.g. only `unsafe-free` and
+/// marker hygiene apply outside `rust/src/`).
+pub const SCAN_DIRS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// The manifests the `zero-dep` rule parses.
+pub const SCAN_MANIFESTS: &[&str] = &["Cargo.toml", "rust/Cargo.toml"];
+
+/// Locate the repo root from the current directory (CLI runs from the
+/// repo root; `cargo test` runs from `rust/`).
+pub fn find_root() -> Result<PathBuf, String> {
+    for cand in [".", "..", "../.."] {
+        let p = PathBuf::from(cand);
+        if p.join("rust/src/lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    Err("cannot locate the repo root (no rust/src/lib.rs in ., .. or ../..)".to_string())
+}
+
+/// Run the audit over the real tree.
+pub fn run(opts: &Options) -> Result<AuditReport, String> {
+    let mut rep = AuditReport::default();
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in SCAN_DIRS {
+        let d = opts.root.join(dir);
+        if d.is_dir() {
+            walk_rs(&d, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        return Err(format!("no .rs files under {} — wrong --root?", opts.root.display()));
+    }
+    for f in &files {
+        let rel = rel_label(&opts.root, f);
+        let src =
+            std::fs::read_to_string(f).map_err(|e| format!("read {}: {e}", f.display()))?;
+        merge(&mut rep, audit_source(&rel, &src));
+    }
+    for m in SCAN_MANIFESTS {
+        let p = opts.root.join(m);
+        if p.is_file() {
+            let src =
+                std::fs::read_to_string(&p).map_err(|e| format!("read {}: {e}", p.display()))?;
+            merge(&mut rep, audit_cargo_toml(m, &src));
+        }
+    }
+    if let Some(only) = &opts.rule {
+        if rules::rule(only).is_none() {
+            let known: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+            return Err(format!("unknown rule `{only}` (known: {})", known.join(", ")));
+        }
+        rep.findings.retain(|f| &f.rule == only);
+        rep.allows.retain(|a| &a.rule == only);
+        // Unused markers are only meaningful for a whole-inventory run.
+        rep.unused.clear();
+    }
+    rep.sort();
+    Ok(rep)
+}
+
+fn rel_label(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn marker(rule: &str, reason: &str) -> String {
+        format!("// {} allow({rule}) \u{2014} {reason}", lexer::marker_trigger())
+    }
+
+    #[test]
+    fn finding_then_trailing_marker_suppresses() {
+        let label = "rust/src/softfloat/mul.rs";
+        let bad = "fn leak(x: f64) -> f64 { x }\n";
+        let rep = audit_source(label, bad);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, "native-float-quarantine");
+        assert_eq!(rep.findings[0].line, 1);
+
+        let ok = format!("fn leak(x: f64) -> f64 {{ x }} {}\n", marker("native-float-quarantine", "test shim"));
+        let rep = audit_source(label, &ok);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.allows.len(), 1);
+        assert_eq!(rep.allows[0].reason, "test shim");
+    }
+
+    #[test]
+    fn standalone_marker_covers_next_code_line() {
+        let label = "rust/src/softfloat/packed.rs";
+        let src = format!("{}\nfn b(x: f64) {{}}\n", marker("native-float-quarantine", "boundary"));
+        let rep = audit_source(label, &src);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.allows.len(), 1);
+        assert_eq!(rep.allows[0].line, 2, "allow is recorded at the covered line");
+    }
+
+    #[test]
+    fn one_finding_per_line_rule_pair() {
+        let rep = audit_source("rust/src/softfloat/swar.rs", "fn f(a: f64, b: f64) -> (f64, f32) { (a, b as f32) }\n");
+        assert_eq!(rep.findings.len(), 1, "many tokens on one line dedupe");
+    }
+
+    #[test]
+    fn reasonless_marker_is_a_finding_but_still_suppresses() {
+        let label = "rust/src/softfloat/mul.rs";
+        let src = format!("fn leak(x: f64) {{}} // {} allow(native-float-quarantine)\n", lexer::marker_trigger());
+        let rep = audit_source(label, &src);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, ALLOW_MARKER);
+        assert!(rep.findings[0].note.contains("missing reason"));
+        assert_eq!(rep.allows.len(), 1, "the target violation is still visibly suppressed");
+    }
+
+    #[test]
+    fn unknown_rule_marker_is_a_finding() {
+        let src = format!("fn ok() {{}} {}\n", marker("no-such-rule", "whatever"));
+        let rep = audit_source("rust/src/pde/mod.rs", &src);
+        assert_eq!(rep.findings.len(), 1);
+        assert!(rep.findings[0].note.contains("unknown rule"));
+    }
+
+    #[test]
+    fn unused_marker_surfaced_not_gating() {
+        let src = format!("fn ok() {{}} {}\n", marker("unsafe-free", "leftover"));
+        let rep = audit_source("rust/src/pde/mod.rs", &src);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.unused.len(), 1);
+    }
+
+    #[test]
+    fn test_region_exemption_per_rule() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn helper(x: f64) {}\n    fn hole() { let p = 0; }\n}\n";
+        let rep = audit_source("rust/src/softfloat/mul.rs", src);
+        assert!(rep.findings.is_empty(), "native-float is test-exempt: {:?}", rep.findings);
+
+        let src_unsafe = "#[cfg(test)]\nmod tests {\n    unsafe fn hole() {}\n}\n";
+        let rep = audit_source("rust/src/softfloat/mul.rs", src_unsafe);
+        assert_eq!(rep.findings.len(), 1, "unsafe-free is NOT test-exempt");
+        assert_eq!(rep.findings[0].rule, "unsafe-free");
+    }
+
+    #[test]
+    fn cargo_toml_dep_sections() {
+        let clean = "[package]\nname = \"x\"\n\n[features]\npjrt = []\n";
+        assert!(audit_cargo_toml("rust/Cargo.toml", clean).findings.is_empty());
+
+        let dirty = "[dependencies]\nserde = \"1\"\n";
+        let rep = audit_cargo_toml("rust/Cargo.toml", dirty);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, ZERO_DEP);
+        assert_eq!(rep.findings[0].line, 2);
+
+        let allowed = format!(
+            "[dependencies]\n# {} allow(zero-dep) \u{2014} vendored path dep for pjrt\nxla = {{ path = \"../xla\" }}\n",
+            lexer::marker_trigger()
+        );
+        let rep = audit_cargo_toml("rust/Cargo.toml", &allowed);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.allows.len(), 1);
+
+        let dev = "[dev-dependencies]\nproptest = \"1\"\n";
+        assert_eq!(audit_cargo_toml("Cargo.toml", dev).findings.len(), 1);
+    }
+
+    #[test]
+    fn rule_filter_validated_and_applied() {
+        let root = find_root().expect("repo root");
+        let err = run(&Options { root: root.clone(), rule: Some("nope".into()) }).unwrap_err();
+        assert!(err.contains("unknown rule"));
+    }
+}

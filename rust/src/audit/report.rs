@@ -1,0 +1,284 @@
+//! Audit findings, the machine-readable report (`r2f2-audit/1`), and the
+//! counts-only snapshot committed as `rust/AUDIT_smoke.json`.
+//!
+//! Emission rules: findings/allows are sorted (file, line, rule) so the
+//! report is byte-stable for a given tree; the snapshot contains *counts
+//! only* (no file:line), so it changes exactly when the shipped rule set
+//! or the allowlist population changes — that is the reviewed trajectory
+//! CI diffs, not file churn.
+
+use super::rules::{self, RULES};
+use crate::config::json_mini::escape;
+
+/// One unsuppressed rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-root-relative path.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+    /// Extra context (marker diagnostics); empty for pattern findings.
+    pub note: String,
+}
+
+/// One suppressed violation: a finding covered by a reasoned allow marker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A syntactically valid marker that suppressed nothing. Surfaced (table +
+/// JSON) but non-gating: stale markers are cleanup, not contract breaks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnusedMarker {
+    pub file: String,
+    pub line: usize,
+    /// Comma-joined rule ids the marker named.
+    pub rules: String,
+}
+
+/// Everything one audit run produced.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<Allow>,
+    pub unused: Vec<UnusedMarker>,
+    pub files_scanned: usize,
+}
+
+impl AuditReport {
+    /// Sort all sections (file, line, rule) for stable emission.
+    pub fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+        });
+        self.allows.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+        });
+        self.unused.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    }
+
+    /// Per-rule (id, findings, allows) in inventory order.
+    pub fn counts(&self) -> Vec<(&'static str, usize, usize)> {
+        RULES
+            .iter()
+            .map(|r| {
+                let f = self.findings.iter().filter(|x| x.rule == r.id).count();
+                let a = self.allows.iter().filter(|x| x.rule == r.id).count();
+                (r.id, f, a)
+            })
+            .collect()
+    }
+
+    /// The full machine-readable report (schema `r2f2-audit/1`,
+    /// EXPERIMENTS.md). `generator` records the exact invocation.
+    pub fn to_json(&self, generator: &str) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"r2f2-audit/1\",\n");
+        s.push_str(&format!("  \"generator\": \"{}\",\n", escape(generator)));
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str("  \"rules\": [\n");
+        let counts = self.counts();
+        for (i, rule) in RULES.iter().enumerate() {
+            let (_, nf, na) = counts[i];
+            s.push_str(&format!(
+                "    {{ \"id\": \"{}\", \"summary\": \"{}\", \"contract\": \"{}\", \"findings\": {}, \"allows\": {} }}{}\n",
+                escape(rule.id),
+                escape(rule.summary),
+                escape(rule.contract),
+                nf,
+                na,
+                if i + 1 < RULES.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{ \"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"snippet\": \"{}\", \"note\": \"{}\" }}{}\n",
+                escape(&f.file),
+                f.line,
+                escape(&f.rule),
+                escape(&f.snippet),
+                escape(&f.note),
+                if i + 1 < self.findings.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"allows\": [\n");
+        for (i, a) in self.allows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{ \"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"reason\": \"{}\" }}{}\n",
+                escape(&a.file),
+                a.line,
+                escape(&a.rule),
+                escape(&a.reason),
+                if i + 1 < self.allows.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"unused_markers\": [\n");
+        for (i, u) in self.unused.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{ \"file\": \"{}\", \"line\": {}, \"rules\": \"{}\" }}{}\n",
+                escape(&u.file),
+                u.line,
+                escape(&u.rules),
+                if i + 1 < self.unused.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"total_findings\": {},\n", self.findings.len()));
+        s.push_str(&format!("  \"total_allows\": {}\n", self.allows.len()));
+        s.push_str("}\n");
+        s
+    }
+
+    /// The counts-only snapshot (committed as `rust/AUDIT_smoke.json` and
+    /// diffed byte-for-byte by CI). Deliberately excludes file:line so it
+    /// only moves when the rule set or the allowlist population moves.
+    pub fn snapshot_json(&self, generator: &str) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"r2f2-audit/1\",\n");
+        s.push_str(&format!("  \"generator\": \"{}\",\n", escape(generator)));
+        s.push_str("  \"rules\": [\n");
+        let counts = self.counts();
+        for (i, (id, nf, na)) in counts.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{ \"id\": \"{}\", \"findings\": {}, \"allows\": {} }}{}\n",
+                escape(id),
+                nf,
+                na,
+                if i + 1 < counts.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"total_findings\": {},\n", self.findings.len()));
+        s.push_str(&format!("  \"total_allows\": {}\n", self.allows.len()));
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable report. Each rule gets an `AUDIT |` row (the CI job
+    /// summary greps these, like the conformance suites' `MATRIX |` rows),
+    /// findings are listed file:line with the rule id and quoted snippet.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "audit: {} files scanned, {} finding(s), {} allow(s), {} unused marker(s)\n\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.allows.len(),
+            self.unused.len()
+        ));
+        for (id, nf, na) in self.counts() {
+            s.push_str(&format!("AUDIT | {id} | findings {nf} | allows {na}\n"));
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\nfindings:\n");
+            for f in &self.findings {
+                let note = if f.note.is_empty() {
+                    String::new()
+                } else {
+                    format!(" ({})", f.note)
+                };
+                s.push_str(&format!(
+                    "  {}:{} [{}]{} `{}`\n",
+                    f.file, f.line, f.rule, note, f.snippet
+                ));
+                if let Some(rule) = rules::rule(&f.rule) {
+                    s.push_str(&format!("      contract: {}\n", rule.contract));
+                }
+            }
+        }
+        if !self.unused.is_empty() {
+            s.push_str("\nunused allow markers (stale — remove them):\n");
+            for u in &self.unused {
+                s.push_str(&format!("  {}:{} allow({})\n", u.file, u.line, u.rules));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AuditReport {
+        let mut rep = AuditReport {
+            findings: vec![Finding {
+                file: "rust/src/x.rs".into(),
+                line: 9,
+                rule: "unsafe-free".into(),
+                snippet: "unsafe { hole() }".into(),
+                note: String::new(),
+            }],
+            allows: vec![Allow {
+                file: "rust/src/y.rs".into(),
+                line: 3,
+                rule: "wall-clock-quarantine".into(),
+                reason: "bench harness".into(),
+            }],
+            unused: Vec::new(),
+            files_scanned: 2,
+        };
+        rep.sort();
+        rep
+    }
+
+    #[test]
+    fn json_is_parseable_and_carries_schema() {
+        let rep = sample();
+        let doc = crate::config::json_mini::parse_json(&rep.to_json("r2f2 audit")).unwrap();
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("r2f2-audit/1"));
+        assert_eq!(doc.get("total_findings").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(doc.get("total_allows").and_then(|v| v.as_usize()), Some(1));
+        let rules_arr = doc.get("rules").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rules_arr.len(), RULES.len());
+    }
+
+    #[test]
+    fn snapshot_is_parseable_counts_only() {
+        let rep = sample();
+        let snap = rep.snapshot_json("r2f2 audit --snapshot rust/AUDIT_smoke.json");
+        let doc = crate::config::json_mini::parse_json(&snap).unwrap();
+        assert!(doc.get("findings").is_none(), "snapshot must not carry file:line detail");
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("r2f2-audit/1"));
+        assert!(!snap.contains("x.rs"), "snapshot leaks a path");
+    }
+
+    #[test]
+    fn render_has_audit_rows_for_every_rule() {
+        let rep = sample();
+        let text = rep.render();
+        for rule in RULES {
+            assert!(
+                text.contains(&format!("AUDIT | {} |", rule.id)),
+                "missing AUDIT row for {}",
+                rule.id
+            );
+        }
+        assert!(text.contains("rust/src/x.rs:9"));
+    }
+
+    #[test]
+    fn counts_align_with_inventory_order() {
+        let rep = sample();
+        let counts = rep.counts();
+        assert_eq!(counts.len(), RULES.len());
+        for (i, rule) in RULES.iter().enumerate() {
+            assert_eq!(counts[i].0, rule.id);
+        }
+        let unsafe_row = counts.iter().find(|c| c.0 == "unsafe-free").unwrap();
+        assert_eq!((unsafe_row.1, unsafe_row.2), (1, 0));
+    }
+}

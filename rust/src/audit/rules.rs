@@ -1,0 +1,250 @@
+//! The rule inventory and the per-module policy map (DESIGN.md §15).
+//!
+//! Each rule protects a contract the repo already enforces dynamically
+//! somewhere (the §9/§13/§14 bit-identity suites, the §12 cache-soundness
+//! argument) — the auditor makes the *source-level discipline* behind the
+//! contract checkable on every PR without running anything.
+//!
+//! A rule is (patterns × path policy × test-exemption). Paths are
+//! repo-root-relative with `/` separators; a rule applies to a file when
+//! the path starts with one of `include` and none of `exclude`. The rule
+//! list is the inventory CI diffs against the DESIGN.md §15 catalog, so
+//! adding a rule here without documenting it (or vice versa) fails the
+//! `static-analysis` job.
+
+/// A textual pattern matched against lexed code (never comments/strings).
+#[derive(Debug, Clone, Copy)]
+pub enum Pattern {
+    /// Literal matched with identifier boundaries: the preceding char must
+    /// not be `[A-Za-z_]` (digits ARE allowed before, so the literal
+    /// suffix in `2.0f64` still matches) and the following char must not
+    /// be `[A-Za-z0-9_]` (so the identifier `e_f64` never matches).
+    Token(&'static str),
+    /// Magic numeric constant, matched as a substring of the lowercased,
+    /// underscore-stripped line — catches `0x9E37_79B9_7F4A_7C15` however
+    /// it is grouped. Spell the needle lowercase without underscores.
+    Const(&'static str),
+}
+
+/// One audit rule: identity, what it protects, where it applies.
+#[derive(Debug)]
+pub struct RuleSpec {
+    pub id: &'static str,
+    /// One-line human summary (rendered in the report table).
+    pub summary: &'static str,
+    /// The DESIGN.md invariant this rule protects, cited by section.
+    pub contract: &'static str,
+    pub patterns: &'static [Pattern],
+    /// Path prefixes the rule applies to.
+    pub include: &'static [&'static str],
+    /// Path prefixes carved back out (the policy allowlist).
+    pub exclude: &'static [&'static str],
+    /// Whether `#[cfg(test)]` regions are exempt.
+    pub exempt_tests: bool,
+}
+
+/// Rule id of the marker-hygiene rule (reason-less / malformed / unknown
+/// allow markers). Not suppressible — an allow marker cannot allow itself.
+pub const ALLOW_MARKER: &str = "allow-marker";
+
+/// Rule id of the manifest rule (checked against `Cargo.toml`, not `.rs`).
+pub const ZERO_DEP: &str = "zero-dep";
+
+/// The integer-datapath kernel modules: everything on the packed hot path
+/// must stay in `u32`/`u64` bit domains (DESIGN.md §9/§14). The
+/// encode/decode boundary functions that legitimately touch the `f64`
+/// carrier inside these files carry inline allow markers; the carrier-side
+/// modules (`encode.rs`, `format.rs`, `batch.rs`, `mod.rs`) are outside
+/// the quarantine by policy.
+const KERNEL_MODULES: &[&str] = &[
+    "rust/src/softfloat/mul.rs",
+    "rust/src/softfloat/add.rs",
+    "rust/src/softfloat/round.rs",
+    "rust/src/softfloat/packed.rs",
+    "rust/src/softfloat/swar.rs",
+];
+
+/// The full inventory, in report order.
+pub const RULES: &[RuleSpec] = &[
+    RuleSpec {
+        id: "native-float-quarantine",
+        summary: "no f32/f64 in the integer-datapath kernel modules",
+        contract: "DESIGN.md \u{a7}9/\u{a7}14 \u{2014} packed and SWAR kernels are bit-identical to the scalar reference because every intermediate is an integer; one stray native-float op voids packed_vs_carrier/swar_vs_packed",
+        patterns: &[Pattern::Token("f64"), Pattern::Token("f32")],
+        include: KERNEL_MODULES,
+        exclude: &[],
+        exempt_tests: true,
+    },
+    RuleSpec {
+        id: "wall-clock-quarantine",
+        summary: "Instant::now/SystemTime only in metrics and bench harnesses",
+        contract: "DESIGN.md \u{a7}12 \u{2014} result bodies and cache keys exclude wall-clock, which is what makes the content-addressed cache sound; a clock read on a result path breaks bit-reproducibility",
+        patterns: &[Pattern::Token("Instant::now"), Pattern::Token("SystemTime")],
+        include: &["rust/src/"],
+        exclude: &["rust/src/metrics/", "rust/src/bench_util.rs"],
+        exempt_tests: true,
+    },
+    RuleSpec {
+        id: "ordered-iteration",
+        summary: "no HashMap/HashSet in result-affecting modules",
+        contract: "DESIGN.md \u{a7}11/\u{a7}13 \u{2014} scenario results, sweeps and solver state must be iteration-order deterministic; hash iteration order is seeded per process, so use BTreeMap/BTreeSet or an explicit sort",
+        patterns: &[Pattern::Token("HashMap"), Pattern::Token("HashSet")],
+        include: &["rust/src/config/", "rust/src/sweep/", "rust/src/pde/", "rust/src/softfloat/"],
+        exclude: &[],
+        exempt_tests: true,
+    },
+    RuleSpec {
+        id: "rng-discipline",
+        summary: "all stochastic draws flow through rng.rs / Rounder",
+        contract: "DESIGN.md \u{a7}9/\u{a7}14 \u{2014} the stochastic draw-order contract: one SplitMix64 stream, one draw sequence, identical across scalar/packed/SWAR engines; an inline generator or RandomState entropy forks the sequence",
+        patterns: &[
+            Pattern::Token("RandomState"),
+            Pattern::Token("DefaultHasher"),
+            Pattern::Token("thread_rng"),
+            Pattern::Token("from_entropy"),
+            // SplitMix64 / PCG / java.util.Random / xorshift* multipliers:
+            // an inline reimplementation of a mixer is an unsanctioned
+            // stream even when it is seeded deterministically.
+            Pattern::Const("0x9e3779b97f4a7c15"),
+            Pattern::Const("0xbf58476d1ce4e5b9"),
+            Pattern::Const("0x94d049bb133111eb"),
+            Pattern::Const("6364136223846793005"),
+            Pattern::Const("0x5deece66d"),
+            Pattern::Const("1103515245"),
+            Pattern::Const("0x2545f4914f6cdd1d"),
+        ],
+        include: &["rust/src/"],
+        exclude: &["rust/src/rng.rs"],
+        exempt_tests: true,
+    },
+    RuleSpec {
+        id: "unsafe-free",
+        summary: "the `unsafe` token is banned tree-wide",
+        contract: "lib.rs `#![forbid(unsafe_code)]` \u{2014} the auditor extends the compiler gate to benches, tests and examples, and (unlike the attribute) cannot be out-scoped by a nested allow",
+        patterns: &[Pattern::Token("unsafe")],
+        include: &["rust/src/", "rust/benches/", "rust/tests/", "examples/"],
+        exclude: &[],
+        exempt_tests: false,
+    },
+    RuleSpec {
+        id: ZERO_DEP,
+        summary: "Cargo.toml dependency sections stay empty",
+        contract: "DESIGN.md \u{a7}1 \u{2014} the tree is std-only by construction (offline environment); every capability is in-tree, and the pjrt runtime is a feature-gated stub, not a dependency",
+        patterns: &[], // manifest rule: audited by `audit_cargo_toml`, not line patterns
+        include: &["Cargo.toml", "rust/Cargo.toml"],
+        exclude: &[],
+        exempt_tests: false,
+    },
+    RuleSpec {
+        id: ALLOW_MARKER,
+        summary: "allow markers must name a known rule and carry a reason",
+        contract: "DESIGN.md \u{a7}15 \u{2014} suppressions are part of the reviewed surface: a reason-less or malformed marker is itself a finding, so the allowlist population stays a deliberate trajectory",
+        patterns: &[], // engine-internal: emitted while resolving markers
+        include: &["rust/src/", "rust/benches/", "rust/tests/", "examples/", "Cargo.toml"],
+        exclude: &[],
+        exempt_tests: false,
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule(id: &str) -> Option<&'static RuleSpec> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Does `rule` apply to the file at root-relative `path`?
+pub fn applies(rule: &RuleSpec, path: &str) -> bool {
+    rule.include.iter().any(|p| path.starts_with(p))
+        && !rule.exclude.iter().any(|p| path.starts_with(p))
+}
+
+/// Match one pattern against one lexed code line.
+pub fn pattern_matches(pat: &Pattern, code: &str) -> bool {
+    match pat {
+        Pattern::Token(tok) => token_match(code, tok),
+        Pattern::Const(needle) => {
+            let norm: String =
+                code.chars().filter(|&c| c != '_').map(|c| c.to_ascii_lowercase()).collect();
+            norm.contains(needle)
+        }
+    }
+}
+
+/// Identifier-boundary literal search (see [`Pattern::Token`]).
+fn token_match(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(tok) {
+        let i = start + pos;
+        let prev_ok = i == 0 || {
+            let p = bytes[i - 1];
+            !(p.is_ascii_alphabetic() || p == b'_')
+        };
+        let end = i + tok.len();
+        let next_ok = end >= bytes.len() || {
+            let n = bytes[end];
+            !(n.is_ascii_alphanumeric() || n == b'_')
+        };
+        if prev_ok && next_ok {
+            return true;
+        }
+        start = i + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries() {
+        let t = Pattern::Token("f64");
+        assert!(pattern_matches(&t, "fn f(x: f64) {}"));
+        assert!(pattern_matches(&t, "let y = 2.0f64;"), "literal suffix counts");
+        assert!(pattern_matches(&t, "f64::from_bits(b)"));
+        assert!(pattern_matches(&t, "x as f64"));
+        assert!(!pattern_matches(&t, "let e_f64 = 3;"), "identifier tail is not a use");
+        assert!(!pattern_matches(&t, "let f64x = 3;"), "identifier head is not a use");
+        assert!(!pattern_matches(&t, "F64_EXP_MASK"), "case-sensitive");
+    }
+
+    #[test]
+    fn multi_segment_token() {
+        let t = Pattern::Token("Instant::now");
+        assert!(pattern_matches(&t, "let t0 = Instant::now();"));
+        assert!(pattern_matches(&t, "std::time::Instant::now()"));
+        assert!(!pattern_matches(&t, "use std::time::Instant;"));
+    }
+
+    #[test]
+    fn const_pattern_ignores_grouping_and_case() {
+        let c = Pattern::Const("0x9e3779b97f4a7c15");
+        assert!(pattern_matches(&c, "wrapping_add(0x9E37_79B9_7F4A_7C15)"));
+        assert!(pattern_matches(&c, "wrapping_add(0x9e3779b97f4a7c15)"));
+        assert!(!pattern_matches(&c, "wrapping_add(0x9e3779b9)"));
+    }
+
+    #[test]
+    fn policy_map_includes_and_excludes() {
+        let wall = rule("wall-clock-quarantine").unwrap();
+        assert!(applies(wall, "rust/src/coordinator/job.rs"));
+        assert!(!applies(wall, "rust/src/metrics/mod.rs"));
+        assert!(!applies(wall, "rust/src/bench_util.rs"));
+        assert!(!applies(wall, "rust/benches/hotpath.rs"), "benches measure time by design");
+
+        let nf = rule("native-float-quarantine").unwrap();
+        assert!(applies(nf, "rust/src/softfloat/packed.rs"));
+        assert!(!applies(nf, "rust/src/softfloat/encode.rs"), "carrier boundary is policy");
+        assert!(!applies(nf, "rust/src/pde/heat1d.rs"));
+    }
+
+    #[test]
+    fn inventory_ids_unique_and_nonempty() {
+        let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate rule id");
+        assert!(n >= 6, "the catalog ships at least six rules");
+    }
+}

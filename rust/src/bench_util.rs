@@ -131,6 +131,62 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Parsed command line of a `harness = false` bench binary.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    /// `--smoke` (or `R2F2_BENCH_SMOKE` in the environment): cut workload
+    /// sizes to CI scale.
+    pub smoke: bool,
+    /// `--out <path>` (canonical; `--json` is an accepted alias): override
+    /// the bench's default artifact path. `None` keeps the default.
+    pub out: Option<String>,
+}
+
+/// Strict argv parsing shared by the figure/ablation/hotpath benches.
+///
+/// Grammar: `--smoke`, `--out <path>` (alias `--json`), and cargo's own
+/// `--bench` passthrough. Anything else exits 2 loudly — a typo must not
+/// silently bench the wrong configuration (same convention as the
+/// `r2f2` CLI's unknown-option handling).
+pub fn parse_bench_args() -> BenchArgs {
+    parse_bench_tokens(std::env::args().skip(1))
+}
+
+fn parse_bench_tokens<I: Iterator<Item = String>>(mut args: I) -> BenchArgs {
+    let mut out = BenchArgs::default();
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => out.smoke = true,
+            "--out" | "--json" => {
+                out.out = Some(args.next().unwrap_or_else(|| {
+                    eprintln!("{a} needs a path");
+                    std::process::exit(2);
+                }))
+            }
+            "--bench" => {} // cargo bench passes this through
+            other => {
+                eprintln!("unknown arg {other:?} (expected --smoke, --out <path>)");
+                std::process::exit(2);
+            }
+        }
+    }
+    if std::env::var("R2F2_BENCH_SMOKE").is_ok() {
+        out.smoke = true;
+    }
+    out
+}
+
+/// Variant for benches that print tables only and write no artifact:
+/// `--out` is a usage error there, not a silently dropped flag.
+pub fn parse_bench_args_no_artifact() -> BenchArgs {
+    let args = parse_bench_args();
+    if let Some(path) = &args.out {
+        eprintln!("this bench emits no artifact; --out {path} is not supported");
+        std::process::exit(2);
+    }
+    args
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +216,18 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.50 µs");
         assert_eq!(fmt_ns(2.5e6), "2.50 ms");
         assert_eq!(fmt_ns(3.1e9), "3.10 s");
+    }
+
+    #[test]
+    fn bench_args_happy_path() {
+        let toks = ["--smoke", "--out", "x.csv", "--bench"];
+        let a = parse_bench_tokens(toks.iter().map(|s| s.to_string()));
+        assert!(a.smoke);
+        assert_eq!(a.out.as_deref(), Some("x.csv"));
+
+        let toks = ["--json", "y.json"];
+        let a = parse_bench_tokens(toks.iter().map(|s| s.to_string()));
+        assert_eq!(a.out.as_deref(), Some("y.json"), "--json stays an alias for --out");
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub struct Outcome {
 /// too (also bit-identical either way, but the wall-clock win is the point
 /// of admitting shard-scaled grids).
 pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — Outcome.wall is display-only; outcome_json (the cache body) excludes it
     let shards = cfg.shards.max(1);
     let (field, reference, muls, adjustments, range_events) = match cfg.app.as_str() {
         "heat" => {

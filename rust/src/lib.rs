@@ -49,10 +49,24 @@
 //!   substrates (TOML-subset config, counters, CSV/ASCII-plot emitters,
 //!   argument parsing) built from scratch for this offline environment.
 //!
+//! * [`audit`] — the static conformance pass (DESIGN.md §15): `r2f2 audit`
+//!   lexes the tree (comments/strings stripped) and enforces the
+//!   determinism and bit-identity disciplines as source-level rules —
+//!   native-float quarantine in the integer kernels, wall-clock and hash
+//!   iteration quarantines on result paths, RNG discipline, `unsafe`-free,
+//!   zero-dep manifests — with reasoned inline allow markers as the only
+//!   suppression channel.
+//!
 //! See `DESIGN.md` for the bit-exact emulation spec shared with the Pallas
 //! kernels and `EXPERIMENTS.md` for paper-vs-measured results.
 
+// The whole crate is safe Rust; the audit subsystem's `unsafe-free` rule
+// extends the same ban to benches/tests/examples, which this attribute
+// cannot reach.
+#![forbid(unsafe_code)]
+
 pub mod analysis;
+pub mod audit;
 pub mod bench_util;
 pub mod cli;
 pub mod config;

@@ -10,8 +10,10 @@
 //!   pipeline  three-layer run: AOT artifacts via PJRT (the e2e path)
 //!   serve     long-lived simulation service (worker pool + result cache)
 //!   bench-serve  loopback load generator for the service (BENCH_serve.json)
+//!   audit     static conformance pass over the tree (DESIGN.md §15)
 
 use r2f2::analysis;
+use r2f2::audit;
 use r2f2::cli::Args;
 use r2f2::config::{parse_backend, ExperimentConfig, APPS};
 use r2f2::coordinator::{self, Coordinator};
@@ -47,6 +49,7 @@ fn main() {
         "sweep" => cmd_sweep(&mut args),
         "table1" => cmd_table1(&mut args),
         "pipeline" => cmd_pipeline(&mut args),
+        "audit" => cmd_audit(&mut args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -57,9 +60,15 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if let Err(e) = result.and_then(|()| args.finish().map_err(|e| e.to_string())) {
+    if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);
+    }
+    // Unknown / unconsumed flags are usage errors, not runtime failures:
+    // exit 2 loudly (same convention as the bench harnesses).
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
 }
 
@@ -90,6 +99,12 @@ COMMANDS
             [--smoke] [--out FILE] — start an in-process server and drive
             it from N loopback clients (M requests each); emits
             BENCH_serve.json (schema r2f2-bench-serve/1)
+  audit     [--json [FILE]] [--snapshot FILE] [--rule ID] [--root DIR] —
+            static conformance pass (DESIGN.md §15): lexes the tree and
+            enforces the determinism/bit-identity rules; exits non-zero
+            on any unsuppressed finding. --json alone prints the
+            r2f2-audit/1 report to stdout; --snapshot writes the
+            counts-only form diffed against rust/AUDIT_smoke.json
 
 BACKEND SPECS: f64 | f32 | fixed:E5M10 (any ExMy) | r2f2:<3,9,3> (any <EB,MB,FX>)"
     );
@@ -371,8 +386,12 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         .max(1);
     let queue_cap: usize = args.get_parse("queue-cap", 64usize).map_err(|e| e.to_string())?;
     let cache_cap: usize = args.get_parse("cache-cap", 256usize).map_err(|e| e.to_string())?;
-    // `wait` below never returns; surface unknown-flag typos first.
-    args.finish().map_err(|e| e.to_string())?;
+    // `wait` below never returns; surface unknown-flag typos first (usage
+    // errors exit 2, matching the top-level convention).
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let server = Server::start(ServeOptions { port, workers, queue_cap, cache_cap })?;
     println!("r2f2 serve: listening on http://{}", server.addr());
     println!("  endpoints  POST /v1/run · GET /v1/scenarios · GET /healthz · GET /metrics");
@@ -453,6 +472,7 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
         bodies.len()
     );
 
+    // r2f2-audit: allow(wall-clock-quarantine) — load-generator wall timing; feeds BENCH_serve.json, never a result body
     let t0 = Instant::now();
     let handles: Vec<_> = (0..clients)
         .map(|c| {
@@ -462,7 +482,7 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
                 let (mut hits, mut errors) = (0u64, 0u64);
                 for i in 0..per_client {
                     let body = &bodies[(c + i) % bodies.len()];
-                    let t = Instant::now();
+                    let t = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — per-request latency sample for the bench table
                     match http::request(addr, "POST", "/v1/run", body.as_bytes()) {
                         Ok(resp) if resp.status == 200 => {
                             latencies.push(t.elapsed().as_nanos() as f64);
@@ -498,9 +518,9 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
     // Workers bump `serve.served` after writing the response, so a client
     // can join before the last increment lands — drain briefly so the
     // artifact's `served` matches what was actually answered.
-    let deadline = Instant::now() + std::time::Duration::from_secs(2);
+    let deadline = Instant::now() + std::time::Duration::from_secs(2); // r2f2-audit: allow(wall-clock-quarantine) — bounded drain timeout, not a result
     while server.metrics_snapshot().counter("serve.served") < ok as u64
-        && Instant::now() < deadline
+        && Instant::now() < deadline // r2f2-audit: allow(wall-clock-quarantine) — drain-loop clock check against the timeout above
     {
         std::thread::sleep(std::time::Duration::from_millis(5));
     }
@@ -561,4 +581,56 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
     std::fs::write(&out_path, json).map_err(|e| format!("write {out_path}: {e}"))?;
     println!("wrote {out_path}");
     Ok(())
+}
+
+fn cmd_audit(args: &mut Args) -> Result<(), String> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => audit::find_root()?,
+    };
+    let rule = args.get("rule");
+    // `--json` is a declared switch, so `audit --json out.json` parses as
+    // the switch plus a positional; `--json=out.json` lands in the option
+    // map. Accept both, plus canonical `--out`; a bare `--json` streams
+    // the report to stdout.
+    let json_opt = args.get("json").or_else(|| args.get("out"));
+    let json_switch = args.switch("json");
+    let json_positional = if json_switch { args.positional.first().cloned() } else { None };
+    let json_path = json_opt.or(json_positional);
+    let snapshot = args.get("snapshot");
+
+    let generator = match &rule {
+        Some(id) => format!("r2f2 audit --rule {id}"),
+        None => "r2f2 audit".to_string(),
+    };
+    let report = audit::run(&audit::Options { root, rule })?;
+
+    let json_to_stdout = json_switch && json_path.is_none();
+    if json_to_stdout {
+        print!("{}", report.to_json(&generator));
+    } else {
+        print!("{}", report.render());
+    }
+    if let Some(path) = &json_path {
+        std::fs::write(path, report.to_json(&generator))
+            .map_err(|e| format!("write {path}: {e}"))?;
+        if !json_to_stdout {
+            println!("wrote {path}");
+        }
+    }
+    if let Some(path) = &snapshot {
+        // The snapshot generator is fixed so the emitted bytes do not
+        // depend on where CI writes the file (it is diffed against the
+        // committed rust/AUDIT_smoke.json).
+        std::fs::write(path, report.snapshot_json(&generator))
+            .map_err(|e| format!("write {path}: {e}"))?;
+        if !json_to_stdout {
+            println!("wrote {path}");
+        }
+    }
+    if report.findings.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} unsuppressed audit finding(s)", report.findings.len()))
+    }
 }

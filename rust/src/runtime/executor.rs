@@ -46,7 +46,7 @@ impl HeatRunner {
         let mut widen = 0i64;
         let mut narrow = 0i64;
 
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — PJRT steps/s telemetry; the field result is clock-independent
         for _ in 0..steps {
             if self.adaptive {
                 let mut outs = self.exe.run(&[u, r_lit.clone_literal(), k, s])?;
@@ -107,7 +107,7 @@ impl SweRunner {
         let mut widen = 0i64;
         let mut narrow = 0i64;
 
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — PJRT steps/s telemetry; the field result is clock-independent
         for _ in 0..steps {
             if self.adaptive {
                 let mut outs = self.exe.run(&[h, u, v, k, s])?;

@@ -79,7 +79,7 @@ pub fn encode_bits(bits: u64, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags
 /// context, constants hoisted — element-for-element bit-identical to
 /// calling [`encode`] in a loop.
 pub fn encode_slice_bits(
-    xs: &[f64],
+    xs: &[f64], // r2f2-audit: allow(native-float-quarantine) — encode boundary: carrier input is bits-only via to_bits, no float arithmetic
     pf: &PackedFormat,
     r: &mut Rounder,
     words: &mut Vec<u32>,
@@ -100,15 +100,15 @@ pub fn encode_slice_bits(
 /// word's fraction slides into the top of the f64 fraction field and the
 /// exponent is rebased. No float arithmetic; exact.
 #[inline]
-pub fn decode_word(w: u32, pf: &PackedFormat) -> f64 {
+pub fn decode_word(w: u32, pf: &PackedFormat) -> f64 { // r2f2-audit: allow(native-float-quarantine) — decode boundary: exact bit construction
     let sign = ((w >> pf.sign_shift) & 1) as u64;
     let exp = (w >> pf.m_w) & pf.exp_mask;
     if exp == 0 {
-        return f64::from_bits(sign << 63);
+        return f64::from_bits(sign << 63); // r2f2-audit: allow(native-float-quarantine) — signed-zero carrier, pure bit pattern
     }
     let e_f64 = (exp as i64 - pf.bias + 1023) as u64;
     let frac = (w & pf.frac_mask) as u64;
-    f64::from_bits((sign << 63) | (e_f64 << 52) | (frac << pf.frac_shift))
+    f64::from_bits((sign << 63) | (e_f64 << 52) | (frac << pf.frac_shift)) // r2f2-audit: allow(native-float-quarantine) — from_bits is exact, no rounding
 }
 
 /// Shared tail of [`mul_packed`]: normalize the raw mantissa product,
@@ -310,7 +310,7 @@ impl PackedVec {
 
     /// Encode an `f64` slice, returning the packed vector and the
     /// per-element encode flags.
-    pub fn encode(xs: &[f64], fmt: FpFormat, r: &mut Rounder) -> (PackedVec, Vec<Flags>) {
+    pub fn encode(xs: &[f64], fmt: FpFormat, r: &mut Rounder) -> (PackedVec, Vec<Flags>) { // r2f2-audit: allow(native-float-quarantine) — encode boundary into the packed domain
         let mut v = PackedVec::new(fmt);
         let mut flags = Vec::new();
         encode_slice_bits(xs, &v.pf, r, &mut v.words, &mut flags);
@@ -318,13 +318,13 @@ impl PackedVec {
     }
 
     /// Re-encode in place from an `f64` slice (flags appended to `flags`).
-    pub fn encode_from(&mut self, xs: &[f64], r: &mut Rounder, flags: &mut Vec<Flags>) {
+    pub fn encode_from(&mut self, xs: &[f64], r: &mut Rounder, flags: &mut Vec<Flags>) { // r2f2-audit: allow(native-float-quarantine) — encode boundary into the packed domain
         let pf = self.pf;
         encode_slice_bits(xs, &pf, r, &mut self.words, flags);
     }
 
     /// Decode every element into `out` (must match in length). Exact.
-    pub fn decode_into(&self, out: &mut [f64]) {
+    pub fn decode_into(&self, out: &mut [f64]) { // r2f2-audit: allow(native-float-quarantine) — decode boundary out of the packed domain (exact)
         assert_eq!(out.len(), self.words.len());
         for (o, &w) in out.iter_mut().zip(self.words.iter()) {
             *o = decode_word(w, &self.pf);
@@ -383,7 +383,7 @@ impl PackedVec {
 /// Convenience for tests and interop: encode one `f64` through the carrier
 /// [`encode`] and pack the result to a word — the value [`encode_bits`]
 /// must reproduce.
-pub fn encode_via_carrier(x: f64, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) {
+pub fn encode_via_carrier(x: f64, pf: &PackedFormat, r: &mut Rounder) -> (u32, Flags) { // r2f2-audit: allow(native-float-quarantine) — carrier-path oracle the packed encoder is tested against
     let (fp, fl) = encode(x, pf.fmt, r);
     (pf.from_fp(fp), fl)
 }

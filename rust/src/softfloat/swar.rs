@@ -428,7 +428,7 @@ fn encode_lane(bits: u64, pf: &PackedFormat, rne: bool) -> (u32, Flags) {
 /// [`mul_packed_lanes`]/[`add_packed_lanes`]. Stochastic rounding
 /// delegates per lane in lane order.
 #[inline]
-pub fn encode_lanes(a: f64, b: f64, sf: &SwarFormat, r: &mut Rounder) -> (u64, [Flags; 2]) {
+pub fn encode_lanes(a: f64, b: f64, sf: &SwarFormat, r: &mut Rounder) -> (u64, [Flags; 2]) { // r2f2-audit: allow(native-float-quarantine) — encode boundary: carriers enter via to_bits only
     let pf = &sf.pf;
     if r.mode == RoundingMode::Stochastic {
         let (w0, f0) = packed::encode_bits(a.to_bits(), pf, r);
@@ -444,15 +444,15 @@ pub fn encode_lanes(a: f64, b: f64, sf: &SwarFormat, r: &mut Rounder) -> (u64, [
 /// Decode both lanes back to `f64` — branch-free, exact, lane-for-lane ≡
 /// `packed::decode_word` (the zero-exponent case is a mask select).
 #[inline]
-pub fn decode_lanes(v: u64, sf: &SwarFormat) -> (f64, f64) {
+pub fn decode_lanes(v: u64, sf: &SwarFormat) -> (f64, f64) { // r2f2-audit: allow(native-float-quarantine) — decode boundary out of the lane domain (exact)
     let pf = &sf.pf;
-    let decode_lane = |w: u32| -> f64 {
+    let decode_lane = |w: u32| -> f64 { // r2f2-audit: allow(native-float-quarantine) — per-lane bit construction, no float arithmetic
         let sign = ((w >> pf.sign_shift) & 1) as u64;
         let exp = (w >> pf.m_w) & pf.exp_mask;
         let e_f64 = (exp as i64 - pf.bias + 1023) as u64;
         let frac = (w & pf.frac_mask) as u64;
         let body = sel64(exp != 0, (e_f64 << 52) | (frac << pf.frac_shift), 0);
-        f64::from_bits((sign << 63) | body)
+        f64::from_bits((sign << 63) | body) // r2f2-audit: allow(native-float-quarantine) — from_bits is exact
     };
     let (w0, w1) = unpack2(v);
     (decode_lane(w0), decode_lane(w1))

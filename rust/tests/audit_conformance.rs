@@ -1,0 +1,415 @@
+//! Conformance suite for the static-analysis pass (DESIGN.md §15).
+//!
+//! Fixture corpus: every shipped rule is demonstrated (a) firing on a
+//! minimal violation, (b) staying silent on the policy-allowlisted idiom,
+//! (c) ignoring matches hidden in comments and string literals, and
+//! (d) suppressed by a reasoned allow marker — with reason-less, unknown
+//! and malformed markers producing `allow-marker` findings. The final
+//! tests run the auditor end-to-end over the real tree and pin the
+//! committed `AUDIT_smoke.json` snapshot.
+//!
+//! All fixtures live in raw strings, so the auditor's own scan of this
+//! file sees only blanked literals — the suite can exercise violations
+//! without carrying any.
+
+use r2f2::audit::{audit_cargo_toml, audit_source, find_root, run, Options, AuditReport, RULES};
+
+/// Rule ids found (unsuppressed) in a fixture.
+fn fired(rep: &AuditReport) -> Vec<&str> {
+    rep.findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+#[test]
+fn native_float_fires_in_kernel_modules() {
+    for path in [
+        "rust/src/softfloat/mul.rs",
+        "rust/src/softfloat/add.rs",
+        "rust/src/softfloat/round.rs",
+        "rust/src/softfloat/packed.rs",
+        "rust/src/softfloat/swar.rs",
+    ] {
+        let rep = audit_source(path, r#"pub fn leak(x: f64) -> f64 { x * 2.0 }"#);
+        assert_eq!(fired(&rep), vec!["native-float-quarantine"], "{path}");
+        assert_eq!(rep.findings[0].line, 1);
+        assert!(rep.findings[0].snippet.contains("leak"), "finding quotes the line");
+    }
+    // f32 and literal suffixes count too; many hits on a line dedupe.
+    let rep = audit_source(
+        "rust/src/softfloat/swar.rs",
+        r#"fn f(a: f32) -> f64 { a as f64 + 2.0f64 }"#,
+    );
+    assert_eq!(rep.findings.len(), 1, "one finding per (line, rule)");
+}
+
+#[test]
+fn native_float_silent_outside_quarantine_and_on_identifiers() {
+    // The f64 reference solvers and the carrier boundary are policy, not
+    // marker, exemptions.
+    for path in
+        ["rust/src/pde/heat1d.rs", "rust/src/softfloat/encode.rs", "rust/src/analysis/mod.rs"]
+    {
+        let rep = audit_source(path, r#"pub fn reference(x: f64) -> f64 { x }"#);
+        assert!(rep.findings.is_empty(), "{path} is outside the quarantine");
+    }
+    // Identifiers and constants that merely *contain* the token.
+    let rep = audit_source(
+        "rust/src/softfloat/packed.rs",
+        r#"let e_f64 = (exp + bias) as u64; const F64_EXP_MASK: u64 = 0x7ff;"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn comment_and_string_matches_are_ignored() {
+    let rep = audit_source(
+        "rust/src/softfloat/mul.rs",
+        r#"// widens to f64 conceptually, but the datapath is u64
+let label = "f64 carrier"; /* also f64 here */
+let raw = r"f32 and f64 in a raw string";"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+
+    let rep = audit_source(
+        "rust/src/server/mod.rs",
+        r#"let doc = "call Instant::now for wall time"; // Instant::now in prose"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn wall_clock_fires_on_result_paths_only() {
+    let bad = r#"let t0 = std::time::Instant::now();"#;
+    let rep = audit_source("rust/src/server/mod.rs", bad);
+    assert_eq!(fired(&rep), vec!["wall-clock-quarantine"]);
+    let rep = audit_source("rust/src/pde/mod.rs", r#"let t = SystemTime::now();"#);
+    assert_eq!(fired(&rep), vec!["wall-clock-quarantine"]);
+
+    // metrics/ and the bench harness are the sanctioned homes of the clock.
+    for path in ["rust/src/metrics/mod.rs", "rust/src/bench_util.rs"] {
+        let rep = audit_source(path, bad);
+        assert!(rep.findings.is_empty(), "{path} is policy-allowlisted");
+    }
+    // Benches measure time by design — outside the rule's include set.
+    let rep = audit_source("rust/benches/fig8_swe.rs", bad);
+    assert!(rep.findings.is_empty());
+}
+
+#[test]
+fn ordered_iteration_fires_in_result_affecting_modules() {
+    let bad = r#"use std::collections::HashMap; let m: HashMap<u32, u32> = HashMap::new();"#;
+    for path in [
+        "rust/src/config/mod.rs",
+        "rust/src/sweep/error_sweep.rs",
+        "rust/src/pde/scenario.rs",
+        "rust/src/softfloat/batch.rs",
+    ] {
+        let rep = audit_source(path, bad);
+        assert_eq!(fired(&rep), vec!["ordered-iteration"], "{path}");
+    }
+    let rep = audit_source("rust/src/server/cache.rs", bad);
+    assert!(rep.findings.is_empty(), "server is outside the ordered-iteration policy");
+    let rep = audit_source("rust/src/config/mod.rs", r#"let s: HashSet<u32> = HashSet::new();"#);
+    assert_eq!(fired(&rep), vec!["ordered-iteration"]);
+}
+
+#[test]
+fn rng_discipline_catches_entropy_and_inline_mixers() {
+    let rep = audit_source("rust/src/pde/mod.rs", r#"let mut rng = thread_rng();"#);
+    assert_eq!(fired(&rep), vec!["rng-discipline"]);
+    let rep = audit_source(
+        "rust/src/sweep/mod.rs",
+        r#"let s = std::collections::hash_map::RandomState::new();"#,
+    );
+    assert_eq!(fired(&rep), vec!["rng-discipline"]);
+    // An inline SplitMix64 mixer, grouped and upper-cased — the Const
+    // patterns normalize before matching.
+    let rep = audit_source(
+        "rust/src/pde/adaptive.rs",
+        r#"state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);"#,
+    );
+    assert_eq!(fired(&rep), vec!["rng-discipline"]);
+    // An inline LCG multiplier (the PCG/Knuth constant).
+    let rep = audit_source(
+        "rust/src/analysis/mod.rs",
+        r#"seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);"#,
+    );
+    assert_eq!(fired(&rep), vec!["rng-discipline"]);
+    // rng.rs itself is the sanctioned home of those constants.
+    let rep = audit_source(
+        "rust/src/rng.rs",
+        r#"self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);"#,
+    );
+    assert!(rep.findings.is_empty());
+}
+
+#[test]
+fn unsafe_free_fires_everywhere_including_tests() {
+    let bad = r#"pub fn hole(p: *const u8) -> u8 { unsafe { *p } }"#;
+    for path in [
+        "rust/src/softfloat/mod.rs",
+        "rust/benches/hotpath.rs",
+        "rust/tests/decomp_identity.rs",
+        "examples/quickstart.rs",
+    ] {
+        let rep = audit_source(path, bad);
+        assert_eq!(fired(&rep), vec!["unsafe-free"], "{path}");
+    }
+    // NOT test-exempt: an unsafe block inside #[cfg(test)] still fires.
+    let rep = audit_source(
+        "rust/src/pde/mod.rs",
+        r#"pub fn ok() {}
+#[cfg(test)]
+mod tests {
+    fn hole(p: *const u8) -> u8 { unsafe { *p } }
+}"#,
+    );
+    assert_eq!(fired(&rep), vec!["unsafe-free"]);
+    assert_eq!(rep.findings[0].line, 4);
+    // `unsafe_code` (the forbid attribute's token) is an identifier, not
+    // a use of the keyword.
+    let rep = audit_source("rust/src/pde/mod.rs", r#"let unsafe_code_mentions = 3;"#);
+    assert!(rep.findings.is_empty());
+}
+
+#[test]
+fn test_region_exempts_only_rules_that_opt_in() {
+    let rep = audit_source(
+        "rust/src/softfloat/mul.rs",
+        r#"pub fn kernel(w: u64) -> u64 { w }
+#[cfg(test)]
+mod tests {
+    fn oracle(x: f64) -> f64 { x }
+    fn clocked() { let t = std::time::Instant::now(); let _ = t; }
+}"#,
+    );
+    assert!(rep.findings.is_empty(), "f64 oracles and clocks in tests are fine: {:?}", rep.findings);
+}
+
+#[test]
+fn trailing_marker_suppresses_and_records_allow() {
+    let rep = audit_source(
+        "rust/src/softfloat/packed.rs",
+        r#"pub fn decode(w: u32) -> f64 { // r2f2-audit: allow(native-float-quarantine) — decode boundary, exact bits
+    f64::from_bits(w as u64) // r2f2-audit: allow(native-float-quarantine) — from_bits is exact
+}"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(rep.allows.len(), 2);
+    assert_eq!(rep.allows[0].rule, "native-float-quarantine");
+    assert_eq!(rep.allows[0].reason, "decode boundary, exact bits");
+    assert!(rep.unused.is_empty());
+}
+
+#[test]
+fn line_above_marker_covers_next_code_line() {
+    let rep = audit_source(
+        "rust/src/server/mod.rs",
+        r#"// r2f2-audit: allow(wall-clock-quarantine) — connection idle timeout, not a result
+let t0 = std::time::Instant::now();"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(rep.allows.len(), 1);
+    assert_eq!(rep.allows[0].line, 2, "the allow is recorded at the covered line");
+}
+
+#[test]
+fn marker_does_not_leak_past_its_line() {
+    // The marker covers line 1 only; the same violation on line 2 fires.
+    let rep = audit_source(
+        "rust/src/server/mod.rs",
+        r#"let a = std::time::Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — first one only
+let b = std::time::Instant::now();"#,
+    );
+    assert_eq!(fired(&rep), vec!["wall-clock-quarantine"]);
+    assert_eq!(rep.findings[0].line, 2);
+    assert_eq!(rep.allows.len(), 1);
+}
+
+#[test]
+fn reasonless_marker_is_flagged_but_suppression_still_applies() {
+    let rep = audit_source(
+        "rust/src/softfloat/mul.rs",
+        r#"fn leak(x: f64) -> f64 { x } // r2f2-audit: allow(native-float-quarantine)"#,
+    );
+    assert_eq!(fired(&rep), vec!["allow-marker"], "the missing reason is the finding");
+    assert!(rep.findings[0].note.contains("missing reason"));
+    assert_eq!(rep.allows.len(), 1, "the target violation shows as allowed, not hidden");
+}
+
+#[test]
+fn unknown_and_malformed_markers_are_findings_without_suppression() {
+    let rep = audit_source(
+        "rust/src/pde/mod.rs",
+        r#"fn ok() {} // r2f2-audit: allow(no-such-rule) — whatever"#,
+    );
+    assert_eq!(fired(&rep), vec!["allow-marker"]);
+    assert!(rep.findings[0].note.contains("unknown rule"));
+
+    let rep = audit_source(
+        "rust/src/softfloat/mul.rs",
+        r#"fn leak(x: f64) -> f64 { x } // r2f2-audit: allowing this one"#,
+    );
+    // Malformed marker AND the (unsuppressed) violation both surface.
+    let mut rules = fired(&rep);
+    rules.sort_unstable();
+    assert_eq!(rules, vec!["allow-marker", "native-float-quarantine"]);
+
+    // An allow marker cannot allow itself.
+    let rep = audit_source(
+        "rust/src/pde/mod.rs",
+        r#"fn ok() {} // r2f2-audit: allow(allow-marker) — nice try"#,
+    );
+    assert_eq!(fired(&rep), vec!["allow-marker"]);
+    assert!(rep.findings[0].note.contains("not suppressible"));
+}
+
+#[test]
+fn prose_mentions_without_the_trigger_colon_are_not_markers() {
+    let rep = audit_source(
+        "rust/src/pde/mod.rs",
+        r#"fn ok() {} // the r2f2-audit pass would flag a HashMap here"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn unused_markers_are_surfaced_not_gating() {
+    let rep = audit_source(
+        "rust/src/pde/mod.rs",
+        r#"fn ok() {} // r2f2-audit: allow(wall-clock-quarantine) — stale leftover"#,
+    );
+    assert!(rep.findings.is_empty());
+    assert_eq!(rep.unused.len(), 1);
+    assert!(rep.unused[0].rules.contains("wall-clock-quarantine"));
+}
+
+#[test]
+fn zero_dep_fires_on_dependency_growth() {
+    let rep = audit_cargo_toml(
+        "rust/Cargo.toml",
+        r#"[package]
+name = "r2f2"
+
+[dependencies]
+serde = "1"
+"#,
+    );
+    assert_eq!(fired(&rep), vec!["zero-dep"]);
+    assert_eq!(rep.findings[0].line, 5);
+    assert!(rep.findings[0].note.contains("dependencies"));
+
+    // dev-dependencies and target-scoped sections count too.
+    let rep = audit_cargo_toml("Cargo.toml", "[dev-dependencies]\nproptest = \"1\"\n");
+    assert_eq!(fired(&rep), vec!["zero-dep"]);
+    let rep = audit_cargo_toml(
+        "rust/Cargo.toml",
+        "[target.'cfg(unix)'.dependencies]\nlibc = \"0.2\"\n",
+    );
+    assert_eq!(fired(&rep), vec!["zero-dep"]);
+}
+
+#[test]
+fn zero_dep_silent_on_features_lints_and_workspace() {
+    let rep = audit_cargo_toml(
+        "rust/Cargo.toml",
+        r#"[package]
+name = "r2f2"
+edition = "2021"
+
+[features]
+default = []
+pjrt = []
+
+[lints.clippy]
+type_complexity = "allow"
+
+[[bench]]
+name = "hotpath"
+harness = false
+"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    let rep = audit_cargo_toml("Cargo.toml", "[workspace]\nmembers = [\"rust\"]\n");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn zero_dep_suppressible_with_a_reasoned_marker() {
+    let rep = audit_cargo_toml(
+        "rust/Cargo.toml",
+        r#"[dependencies]
+# r2f2-audit: allow(zero-dep) — vendored path-only pjrt bindings, no registry fetch
+xla = { path = "../xla" }
+"#,
+    );
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(rep.allows.len(), 1);
+    assert_eq!(rep.allows[0].rule, "zero-dep");
+}
+
+#[test]
+fn rule_inventory_is_complete() {
+    // The six contract rules plus the marker-hygiene rule, in the fixed
+    // report order the snapshot relies on.
+    let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+    assert_eq!(
+        ids,
+        vec![
+            "native-float-quarantine",
+            "wall-clock-quarantine",
+            "ordered-iteration",
+            "rng-discipline",
+            "unsafe-free",
+            "zero-dep",
+            "allow-marker",
+        ]
+    );
+    for rule in RULES {
+        assert!(!rule.summary.is_empty() && !rule.contract.is_empty(), "{}", rule.id);
+        assert!(rule.contract.contains('§'), "{} must cite its DESIGN.md contract", rule.id);
+    }
+}
+
+// ---- end-to-end over the real tree ------------------------------------
+
+#[test]
+fn e2e_real_tree_has_zero_unsuppressed_findings() {
+    let root = find_root().expect("repo root");
+    let rep = run(&Options { root, rule: None }).expect("audit runs");
+    assert!(rep.files_scanned > 50, "the walker saw the tree ({} files)", rep.files_scanned);
+    let rendered: Vec<String> = rep
+        .findings
+        .iter()
+        .map(|f| format!("{}:{} [{}] {} `{}`", f.file, f.line, f.rule, f.note, f.snippet))
+        .collect();
+    assert!(rep.findings.is_empty(), "unsuppressed findings:\n{}", rendered.join("\n"));
+    // Every marker in the tree suppresses something and carries a reason.
+    assert!(rep.unused.is_empty(), "stale markers: {:?}", rep.unused);
+    for allow in &rep.allows {
+        assert!(!allow.reason.is_empty(), "{}:{} reason-less allow", allow.file, allow.line);
+    }
+}
+
+#[test]
+fn e2e_snapshot_matches_committed_audit_smoke_json() {
+    let root = find_root().expect("repo root");
+    let committed = std::fs::read_to_string(root.join("rust/AUDIT_smoke.json"))
+        .expect("rust/AUDIT_smoke.json is committed");
+    let rep = run(&Options { root, rule: None }).expect("audit runs");
+    let live = rep.snapshot_json("r2f2 audit");
+    assert_eq!(
+        live, committed,
+        "allowlist population drifted — regenerate rust/AUDIT_smoke.json \
+         (r2f2 audit --snapshot rust/AUDIT_smoke.json) and review the diff"
+    );
+}
+
+#[test]
+fn e2e_rule_filter_restricts_the_report() {
+    let root = find_root().expect("repo root");
+    let rep = run(&Options { root, rule: Some("native-float-quarantine".into()) })
+        .expect("filtered audit runs");
+    assert!(rep.findings.is_empty());
+    assert!(!rep.allows.is_empty(), "the kernel boundary allows survive the filter");
+    assert!(rep.allows.iter().all(|a| a.rule == "native-float-quarantine"));
+}
