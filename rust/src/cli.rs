@@ -106,6 +106,31 @@ impl Args {
         }
     }
 
+    /// Comma-separated typed list with default (`--rates 50,100,200`).
+    /// Empty segments are rejected rather than skipped — `50,,200` is a
+    /// typo, not a two-element list.
+    pub fn get_list<T: std::str::FromStr>(
+        &mut self,
+        key: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|part| part.trim().parse::<T>())
+                .collect::<Result<Vec<T>, _>>()
+                .map_err(|_| CliError::BadValue {
+                    key: key.to_string(),
+                    value: v,
+                    expected: "comma-separated list",
+                }),
+        }
+    }
+
     /// Bare switch (`--verbose`).
     pub fn switch(&mut self, key: &str) -> bool {
         self.consumed.insert(key.to_string());
@@ -193,6 +218,31 @@ mod tests {
         let mut a = Args::parse(toks("run --backend=r2f2:<3,9,3> --dry-run"), SW).unwrap();
         assert_eq!(a.get("backend").as_deref(), Some("r2f2:<3,9,3>"));
         assert!(a.switch("dry-run"));
+    }
+
+    #[test]
+    fn comma_separated_lists_parse() {
+        let mut a = Args::parse(toks("bench-serve --rates 50,100,200"), SW).unwrap();
+        assert_eq!(a.get_list("rates", &[40u64]).unwrap(), vec![50, 100, 200]);
+        assert_eq!(a.get_list("missing", &[40u64]).unwrap(), vec![40], "default applies");
+
+        let mut b = Args::parse(toks("bench-serve --rates=25"), SW).unwrap();
+        assert_eq!(b.get_list("rates", &[0u64]).unwrap(), vec![25], "equals form, single item");
+
+        // Whitespace around segments is trimmed (one quoted shell token).
+        let mut c = Args::parse(vec!["bench-serve".into(), "--rates".into(), "10 , 30".into()], SW)
+            .unwrap();
+        assert_eq!(c.get_list("rates", &[0u64]).unwrap(), vec![10, 30]);
+
+        // Trailing commas and junk are typos, not silently-shorter lists.
+        for bad in ["50,100,", ",50", "50,x,70"] {
+            let mut d =
+                Args::parse(vec!["bench-serve".into(), format!("--rates={bad}")], SW).unwrap();
+            assert!(
+                matches!(d.get_list("rates", &[0u64]), Err(CliError::BadValue { .. })),
+                "{bad}"
+            );
+        }
     }
 
     #[test]

@@ -32,6 +32,19 @@ impl BackendSpec {
         }
     }
 
+    /// [`BackendSpec::build`] with a `Send` bound: the job executor parks a
+    /// run's backend between epochs and hands it across worker threads
+    /// (`server::jobs`, DESIGN.md §16). Every concrete backend is plain
+    /// data, so this is the same construction under a tighter type.
+    pub fn build_send(&self) -> Box<dyn crate::pde::Arith + Send> {
+        match *self {
+            BackendSpec::F64 => Box::new(crate::pde::F64Arith),
+            BackendSpec::F32 => Box::new(crate::pde::F32Arith),
+            BackendSpec::Fixed(fmt) => Box::new(crate::pde::FixedArith::new(fmt)),
+            BackendSpec::R2f2(cfg) => Box::new(crate::pde::R2f2Arith::new(cfg)),
+        }
+    }
+
     pub fn name(&self) -> String {
         match *self {
             BackendSpec::F64 => "f64".into(),

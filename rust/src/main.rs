@@ -92,13 +92,17 @@ COMMANDS
   table1    — Table 1 resource & latency model vs paper
   pipeline  [--artifacts DIR --steps S --backend r2f2|e5m10|f32] — run the
             heat simulation through the AOT artifacts on PJRT (three-layer)
-  serve     [--port P] [--workers W] [--queue-cap Q] [--cache-cap C] — the
-            simulation service: POST /v1/run, GET /v1/scenarios, /healthz,
-            /metrics (DESIGN.md §12); R2F2_WORKERS overrides the pool size
+  serve     [--port P] [--workers W] [--queue-cap Q] [--cache-cap C]
+            [--keepalive-ms MS] [--jobs-cap J] — the simulation service:
+            POST /v1/run, async POST /v1/jobs (+ status/result/events/
+            pause/resume), GET /v1/scenarios, /healthz, /metrics
+            (DESIGN.md §12/§16); R2F2_WORKERS overrides the pool size
   bench-serve [--clients N] [--requests M] [--workers W] [--cache-cap C]
-            [--smoke] [--out FILE] — start an in-process server and drive
-            it from N loopback clients (M requests each); emits
-            BENCH_serve.json (schema r2f2-bench-serve/1)
+            [--rates R1,R2,...] [--smoke] [--out FILE] — start an
+            in-process server and drive it from N loopback clients
+            (M requests each), then replay an open-loop arrival sweep at
+            each rate (req/s); emits BENCH_serve.json
+            (schema r2f2-bench-serve/2)
   audit     [--json [FILE]] [--snapshot FILE] [--rule ID] [--root DIR] —
             static conformance pass (DESIGN.md §15): lexes the tree and
             enforces the determinism/bit-identity rules; exits non-zero
@@ -386,16 +390,30 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
         .max(1);
     let queue_cap: usize = args.get_parse("queue-cap", 64usize).map_err(|e| e.to_string())?;
     let cache_cap: usize = args.get_parse("cache-cap", 256usize).map_err(|e| e.to_string())?;
+    let keepalive_ms: u64 = args.get_parse("keepalive-ms", 5000u64).map_err(|e| e.to_string())?;
+    let jobs_cap: usize =
+        args.get_parse("jobs-cap", 64usize).map_err(|e| e.to_string())?.max(1);
     // `wait` below never returns; surface unknown-flag typos first (usage
     // errors exit 2, matching the top-level convention).
     if let Err(e) = args.finish() {
         eprintln!("error: {e}");
         std::process::exit(2);
     }
-    let server = Server::start(ServeOptions { port, workers, queue_cap, cache_cap })?;
+    let server = Server::start(ServeOptions {
+        port,
+        workers,
+        queue_cap,
+        cache_cap,
+        keepalive_ms,
+        jobs_cap,
+    })?;
     println!("r2f2 serve: listening on http://{}", server.addr());
-    println!("  endpoints  POST /v1/run · GET /v1/scenarios · GET /healthz · GET /metrics");
-    println!("  pool       workers={workers} queue-cap={queue_cap} cache-cap={cache_cap}");
+    println!("  endpoints  POST /v1/run · POST /v1/jobs · GET /v1/jobs/:id[/result|/events]");
+    println!("             GET /v1/scenarios · GET /healthz · GET /metrics");
+    println!(
+        "  pool       workers={workers} queue-cap={queue_cap} cache-cap={cache_cap} \
+         keepalive-ms={keepalive_ms} jobs-cap={jobs_cap}"
+    );
     println!("  (foreground; stop with Ctrl-C)");
     server.wait();
     Ok(())
@@ -455,6 +473,13 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
         .map_err(|e| e.to_string())?
         .max(1);
     let cache_cap: usize = args.get_parse("cache-cap", 256usize).map_err(|e| e.to_string())?;
+    let default_rates: &[u64] = if smoke { &[40, 80] } else { &[50, 100, 200, 400] };
+    let rates: Vec<u64> = args
+        .get_list("rates", default_rates)
+        .map_err(|e| e.to_string())?
+        .into_iter()
+        .filter(|&r| r > 0)
+        .collect();
     let out_path = args.get_or("out", "BENCH_serve.json");
 
     let server = Server::start(ServeOptions {
@@ -462,6 +487,8 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
         workers,
         queue_cap: 2 * clients + 8,
         cache_cap,
+        keepalive_ms: 5000,
+        jobs_cap: 64,
     })?;
     let addr = server.addr();
     let bodies = bench_serve_bodies(smoke);
@@ -528,6 +555,68 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
     let served = snapshot.counter("serve.served");
     let rejected = snapshot.counter("serve.rejected");
     let cache = server.cache_stats();
+
+    // ---- open-loop arrival sweep (latency under load) ----------------
+    // The closed loop above measures capacity: clients wait for each
+    // response, so a slow server throttles its own load generator. The
+    // open loop dispatches on a fixed timer regardless of completions —
+    // queueing delay shows up in the tail (and the 503 count) instead of
+    // silently slowing the offered rate.
+    struct OpenLoopRow {
+        rate_rps: u64,
+        sent: usize,
+        ok: usize,
+        rejected: u64,
+        p50_ns: f64,
+        p99_ns: f64,
+        achieved_rps: f64,
+    }
+    let mut open_rows: Vec<OpenLoopRow> = Vec::with_capacity(rates.len());
+    let window_s = if smoke { 0.5 } else { 1.0 };
+    for &rate in &rates {
+        let interval = std::time::Duration::from_nanos(1_000_000_000 / rate);
+        let sent = ((rate as f64 * window_s).round() as usize).max(4);
+        let t_rate = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — open-loop dispatch schedule; feeds the bench artifact only
+        let mut open_handles = Vec::with_capacity(sent);
+        for i in 0..sent {
+            let target = t_rate + interval * i as u32;
+            let now = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — pacing check against the dispatch schedule
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let body = bodies[i % bodies.len()].clone();
+            open_handles.push(std::thread::spawn(move || {
+                let t = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — per-request latency sample for the open-loop table
+                match http::request(addr, "POST", "/v1/run", body.as_bytes()) {
+                    Ok(resp) if resp.status == 200 => {
+                        (Some(t.elapsed().as_nanos() as f64), false)
+                    }
+                    Ok(resp) if resp.status == 503 => (None, true),
+                    _ => (None, false),
+                }
+            }));
+        }
+        let mut lat: Vec<f64> = Vec::with_capacity(sent);
+        let mut rej = 0u64;
+        for h in open_handles {
+            match h.join().map_err(|_| "open-loop thread panicked".to_string())? {
+                (Some(ns), _) => lat.push(ns),
+                (None, true) => rej += 1,
+                (None, false) => {}
+            }
+        }
+        let wall_rate = t_rate.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        open_rows.push(OpenLoopRow {
+            rate_rps: rate,
+            sent,
+            ok: lat.len(),
+            rejected: rej,
+            p50_ns: if lat.is_empty() { 0.0 } else { percentile(&lat, 50.0) },
+            p99_ns: if lat.is_empty() { 0.0 } else { percentile(&lat, 99.0) },
+            achieved_rps: lat.len() as f64 / wall_rate.max(1e-9),
+        });
+    }
     server.shutdown();
     let throughput = ok as f64 / wall.as_secs_f64();
     let p50 = percentile(&latencies, 50.0);
@@ -549,7 +638,21 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
     t.row(vec!["client errors".to_string(), errors.to_string()]);
     println!("{}", t.render());
 
-    // Machine-greppable summary row (the CI serve-smoke job tables this).
+    let mut ot = Table::new(vec!["rate req/s", "sent", "ok", "503", "p50", "p99", "achieved"]);
+    for r in &open_rows {
+        ot.row(vec![
+            r.rate_rps.to_string(),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.rejected.to_string(),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns),
+            format!("{:.1} req/s", r.achieved_rps),
+        ]);
+    }
+    println!("open-loop latency under load ({window_s} s per rate)\n{}", ot.render());
+
+    // Machine-greppable summary rows (the CI serve-smoke job tables these).
     println!(
         "SERVE | {clients}×{per_client} req, {workers} workers | {throughput:.1} req/s | \
          p50 {} p99 {} | {} hits, {rejected} rejected |",
@@ -557,16 +660,40 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
         fmt_ns(p99),
         report::pct(hit_rate)
     );
+    for r in &open_rows {
+        println!(
+            "SERVE | open-loop {} rps | {} ok / {} sent | p50 {} p99 {} | {} rejected | \
+             achieved {:.1} rps |",
+            r.rate_rps,
+            r.ok,
+            r.sent,
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns),
+            r.rejected,
+            r.achieved_rps
+        );
+    }
 
+    let open_json: Vec<String> = open_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"rate_rps\": {}, \"sent\": {}, \"ok\": {}, \"rejected\": {}, \
+                 \"p50_ns\": {:.3}, \"p99_ns\": {:.3}, \"achieved_rps\": {:.3}}}",
+                r.rate_rps, r.sent, r.ok, r.rejected, r.p50_ns, r.p99_ns, r.achieved_rps
+            )
+        })
+        .collect();
     let json = format!(
-        "{{\n  \"schema\": \"r2f2-bench-serve/1\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"schema\": \"r2f2-bench-serve/2\",\n  \"smoke\": {smoke},\n  \
          \"clients\": {clients},\n  \"requests_per_client\": {per_client},\n  \
          \"requests\": {total_requests},\n  \"distinct_configs\": {},\n  \
          \"workers\": {workers},\n  \"wall_s\": {:.6},\n  \
          \"throughput_rps\": {:.3},\n  \"p50_ns\": {:.3},\n  \"p99_ns\": {:.3},\n  \
          \"cache_hit_rate\": {:.6},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \
          \"cache_evictions\": {},\n  \"guard_checks\": {},\n  \"served\": {served},\n  \
-         \"rejected\": {rejected},\n  \"errors\": {errors}\n}}\n",
+         \"rejected\": {rejected},\n  \"errors\": {errors},\n  \
+         \"open_loop\": [\n{}\n  ]\n}}\n",
         bodies.len(),
         wall.as_secs_f64(),
         throughput,
@@ -577,6 +704,7 @@ fn cmd_bench_serve(args: &mut Args) -> Result<(), String> {
         cache.misses,
         cache.evictions,
         cache.guard_checks,
+        open_json.join(",\n"),
     );
     std::fs::write(&out_path, json).map_err(|e| format!("write {out_path}: {e}"))?;
     println!("wrote {out_path}");

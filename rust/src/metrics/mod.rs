@@ -78,6 +78,18 @@ impl Registry {
         self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
     }
 
+    /// Raise a gauge to `value` if it exceeds the current reading — a peak
+    /// tracker (high-water mark) under one lock acquisition, so concurrent
+    /// observers cannot lose a peak between a read and a write. The serve
+    /// acceptor uses this for `serve.connections.peak`.
+    pub fn set_max(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.gauges.entry(name.to_string()).or_insert(value);
+        if value > *e {
+            *e = value;
+        }
+    }
+
     /// Record one duration sample (nanoseconds).
     pub fn observe_ns(&self, name: &str, ns: u64) {
         let mut g = self.inner.lock().unwrap();
@@ -251,6 +263,20 @@ mod tests {
         m.set("rmse", 0.5);
         m.set("rmse", 0.25);
         assert_eq!(m.gauge("rmse"), Some(0.25));
+    }
+
+    #[test]
+    fn set_max_tracks_the_high_water_mark() {
+        let m = Registry::new();
+        m.set_max("peak", 3.0);
+        m.set_max("peak", 1.0);
+        assert_eq!(m.gauge("peak"), Some(3.0), "lower readings never regress the peak");
+        m.set_max("peak", 7.0);
+        assert_eq!(m.gauge("peak"), Some(7.0));
+        // Interacts with plain set() as an ordinary gauge.
+        m.set("peak", 0.0);
+        m.set_max("peak", 2.0);
+        assert_eq!(m.gauge("peak"), Some(2.0));
     }
 
     #[test]

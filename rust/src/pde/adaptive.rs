@@ -108,6 +108,34 @@ pub struct EpochTelemetry {
     pub samples: u64,
 }
 
+/// One epoch-boundary observation, streamed to a registered
+/// [`AdaptiveArith::set_epoch_hook`] observer as the schedule evolves —
+/// the live feed behind the job API's `/v1/jobs/:id/events` stream
+/// (DESIGN.md §16). Purely an observer: the hook sees every decision
+/// *after* it is made and can neither veto nor reorder it, so a hooked run
+/// is bit-identical to an unhooked one.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochEvent {
+    /// Committed-epoch index (retried attempts share the index).
+    pub epoch: usize,
+    /// Global timestep at the epoch boundary.
+    pub step: usize,
+    pub decision: Decision,
+    /// The rung in force *after* the decision was applied.
+    pub format: FpFormat,
+    pub telemetry: EpochTelemetry,
+}
+
+/// Boxed epoch observer. A newtype (rather than a bare boxed closure
+/// field) so [`AdaptiveArith`] can keep `#[derive(Debug)]`.
+pub struct EpochHook(Box<dyn FnMut(&EpochEvent) + Send>);
+
+impl std::fmt::Debug for EpochHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("EpochHook(..)")
+    }
+}
+
 /// Hysteresis policy for the solver-level widen/narrow state machine.
 #[derive(Debug, Clone)]
 pub struct AdaptivePolicy {
@@ -251,6 +279,8 @@ pub struct AdaptiveArith {
     pressure_at_widest: u64,
     /// Previous epoch's state sample (raw bits), for the stall detector.
     last_state_bits: Vec<u64>,
+    /// Optional epoch-boundary observer (see [`EpochEvent`]).
+    hook: Option<EpochHook>,
 }
 
 impl AdaptiveArith {
@@ -279,7 +309,16 @@ impl AdaptiveArith {
             ops,
             pressure_at_widest: 0,
             last_state_bits: Vec::new(),
+            hook: None,
         }
+    }
+
+    /// Register an observer invoked at every epoch boundary (including
+    /// retried attempts) with the decision just made and the telemetry
+    /// that drove it. Observation only — the schedule and the committed
+    /// trajectory are bit-identical with or without a hook.
+    pub fn set_epoch_hook(&mut self, hook: impl FnMut(&EpochEvent) + Send + 'static) {
+        self.hook = Some(EpochHook(Box::new(hook)));
     }
 
     /// Select the batched-engine implementation of the wrapped unit (call
@@ -428,6 +467,8 @@ impl AdaptiveArith {
             }
         }
 
+        // Capture before the match: Stay/Narrow advance the epoch counter.
+        let epoch_index = self.epoch;
         match decision {
             Decision::Widen => {
                 let from = self.format();
@@ -460,6 +501,15 @@ impl AdaptiveArith {
             Decision::Stay => {
                 self.epoch += 1;
             }
+        }
+        if let Some(h) = self.hook.as_mut() {
+            (h.0)(&EpochEvent {
+                epoch: epoch_index,
+                step,
+                decision,
+                format: self.policy.ladder[self.rung],
+                telemetry: tele,
+            });
         }
         decision
     }
@@ -730,6 +780,38 @@ mod tests {
         let before = sched.modeled_cost_lut();
         assert!((before - fixed_cost_lut(FpFormat::E4M3, 100)).abs() < 1e-9);
         assert!(fixed_cost_lut(FpFormat::E4M3, 100) < fixed_cost_lut(FpFormat::E5M10, 100));
+    }
+
+    #[test]
+    fn epoch_hook_observes_every_decision_without_perturbing_the_run() {
+        use std::sync::{Arc, Mutex};
+        let p = tiny_heat();
+        let mut plain = AdaptiveArith::new(AdaptivePolicy::heat_default());
+        let res_plain = run_heat(&p, &mut plain, QuantMode::MulOnly);
+        let rep_plain = plain.report();
+
+        let events: Arc<Mutex<Vec<EpochEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&events);
+        let mut hooked = AdaptiveArith::new(AdaptivePolicy::heat_default());
+        hooked.set_epoch_hook(move |e| sink.lock().unwrap().push(*e));
+        let res_hooked = run_heat(&p, &mut hooked, QuantMode::MulOnly);
+        let rep_hooked = hooked.report();
+
+        // Observation only: identical schedule, bit-identical field.
+        assert_eq!(rep_plain.decisions, rep_hooked.decisions);
+        for i in 0..p.n {
+            assert_eq!(res_plain.u[i].to_bits(), res_hooked.u[i].to_bits(), "node {i}");
+        }
+        // One event per epoch-boundary decision, retried attempts included,
+        // carrying the decision and the post-decision rung.
+        let seen = events.lock().unwrap();
+        assert_eq!(seen.len(), rep_hooked.decisions.len());
+        for (e, d) in seen.iter().zip(rep_hooked.decisions.iter()) {
+            assert_eq!(e.decision, *d);
+        }
+        let widen = seen.iter().find(|e| e.decision == Decision::Widen).expect("a widen event");
+        assert_eq!(widen.format, FpFormat::E5M10, "format is the post-decision rung");
+        assert!(widen.telemetry.events.overflows >= 1 || widen.telemetry.nonfinite > 0);
     }
 
     #[test]

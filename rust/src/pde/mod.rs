@@ -205,6 +205,20 @@ pub trait Arith {
     /// this unit after a decomposed advance. The default is a no-op for
     /// backends that track nothing.
     fn absorb(&mut self, _child: &dyn Arith) {}
+    /// Clone this unit's **semantic** state into an independent boxed
+    /// backend — the checkpoint hook behind the resumable job API
+    /// (`server::jobs`, DESIGN.md §16). Unlike [`Arith::fork`] (which
+    /// requires history-independence and hands out *fresh* counters), a
+    /// snapshot carries everything forward — range-event counters, the
+    /// R2F2 split register and its redundancy streak, the stochastic
+    /// rounder's stream position — so advancing the snapshot is
+    /// bit-identical to advancing the original from the same state.
+    /// Backends without a snapshot (`None`, the default) force a
+    /// restart-from-step-0 resume, which is still deterministic, just not
+    /// incremental.
+    fn snapshot(&self) -> Option<Box<dyn Arith + Send>> {
+        None
+    }
 }
 
 /// The canonical scalar heat-stencil sequence — the reference semantics the
@@ -333,6 +347,9 @@ impl Arith for F64Arith {
     fn fork(&self) -> Option<Box<dyn Arith + Send>> {
         Some(Box::new(F64Arith))
     }
+    fn snapshot(&self) -> Option<Box<dyn Arith + Send>> {
+        Some(Box::new(F64Arith))
+    }
 }
 
 /// Hardware single precision (the paper's "32-bit" reference).
@@ -387,6 +404,9 @@ impl Arith for F32Arith {
         next[n - 1] = u[n - 1];
     }
     fn fork(&self) -> Option<Box<dyn Arith + Send>> {
+        Some(Box::new(F32Arith))
+    }
+    fn snapshot(&self) -> Option<Box<dyn Arith + Send>> {
         Some(Box::new(F32Arith))
     }
 }
@@ -1302,6 +1322,15 @@ impl Arith for FixedArith {
             self.events.underflows += ev.underflows;
         }
     }
+    fn snapshot(&self) -> Option<Box<dyn Arith + Send>> {
+        // RNE rounding holds no cross-operation state; the semantic state
+        // is (fmt, engine, tiling, counters). Scratch buffers are transient
+        // within one call and rebuild on demand.
+        let mut copy = FixedArith::new(self.fmt).with_engine(self.engine);
+        copy.events = self.events;
+        copy.tiling = self.tiling;
+        Some(Box::new(copy))
+    }
 }
 
 /// The runtime-reconfigurable multiplier under test.
@@ -1465,6 +1494,13 @@ impl Arith for R2f2Arith {
     fn active_format(&self) -> Option<FpFormat> {
         Some(self.unit.config().format(self.unit.split()))
     }
+    fn snapshot(&self) -> Option<Box<dyn Arith + Send>> {
+        // R2F2 is history-dependent (split register, redundancy streak,
+        // adjustment counters) — exactly why it cannot `fork`. The derived
+        // `Clone` on [`R2f2Multiplier`] carries all of it, so a snapshot
+        // resumes the adjustment trajectory mid-stream bit-exactly.
+        Some(Box::new(R2f2Arith { unit: self.unit.clone(), engine: self.engine }))
+    }
 }
 
 /// Fixed format with **stochastic rounding** — the extension the paper
@@ -1527,6 +1563,16 @@ impl Arith for StochasticArith {
     }
     fn active_format(&self) -> Option<FpFormat> {
         Some(self.fmt)
+    }
+    fn snapshot(&self) -> Option<Box<dyn Arith + Send>> {
+        // The rounder's SplitMix64 stream position is part of the semantic
+        // state (the §14 draw-order contract): cloning it means the
+        // snapshot consumes the *same* draw sequence the original would.
+        Some(Box::new(StochasticArith {
+            fmt: self.fmt,
+            rounder: self.rounder.clone(),
+            events: self.events,
+        }))
     }
 }
 
@@ -2169,5 +2215,86 @@ mod tests {
         assert_eq!(ctx.muls, 8 + 9); // 3 interior nodes × 3 muls
         ctx.flux_batch(&mut out, 4.9, &[(1.0, 2.0); 4]);
         assert_eq!(ctx.muls, 17 + 12);
+    }
+
+    /// Drive `be` through a mixed operation stream and return the outputs.
+    fn snapshot_probe(be: &mut dyn Arith, rounds: usize) -> Vec<u64> {
+        let mut bits = Vec::new();
+        for r in 0..rounds {
+            let a = 1.25 + r as f64 * 0.375;
+            let xs = [0.5, -3.0, 700.0, 1e-6, 42.0, -0.125];
+            let mut out = [0.0; 6];
+            be.mul_batch(&mut out, a, &xs);
+            bits.extend(out.iter().map(|v| v.to_bits()));
+            let pairs = [(a, 2.5), (-a, 1e3), (a * 0.01, a)];
+            let mut po = [0.0; 3];
+            be.mul_pairs(&mut po, &pairs);
+            bits.extend(po.iter().map(|v| v.to_bits()));
+        }
+        bits
+    }
+
+    #[test]
+    fn snapshot_resumes_bit_identically_for_every_backend() {
+        // The jobs-layer checkpoint contract: run a prefix, snapshot, then
+        // the snapshot's continuation must bit-equal the original's — for
+        // history-free (fixed) AND history-dependent (R2F2, stochastic)
+        // units, counters included.
+        let mk: Vec<(&str, Box<dyn Fn() -> Box<dyn Arith + Send>>)> = vec![
+            ("f64", Box::new(|| Box::new(F64Arith))),
+            ("f32", Box::new(|| Box::new(F32Arith))),
+            ("fixed", Box::new(|| Box::new(FixedArith::new(FpFormat::E5M10)))),
+            (
+                "r2f2",
+                Box::new(|| Box::new(R2f2Arith::new(crate::r2f2core::R2f2Config::C16_393))),
+            ),
+            ("stochastic", Box::new(|| Box::new(StochasticArith::new(FpFormat::E5M10, 7)))),
+        ];
+        for (name, make) in &mk {
+            let mut whole = make();
+            let whole_bits = snapshot_probe(whole.as_mut(), 8);
+
+            let mut prefix = make();
+            let prefix_bits = snapshot_probe(prefix.as_mut(), 5);
+            let mut resumed = prefix.snapshot().unwrap_or_else(|| panic!("{name}: snapshot"));
+            // Continue on the snapshot: rounds 5..8 of the same stream.
+            let mut tail_bits = Vec::new();
+            for r in 5..8 {
+                let a = 1.25 + r as f64 * 0.375;
+                let xs = [0.5, -3.0, 700.0, 1e-6, 42.0, -0.125];
+                let mut out = [0.0; 6];
+                resumed.mul_batch(&mut out, a, &xs);
+                tail_bits.extend(out.iter().map(|v| v.to_bits()));
+                let pairs = [(a, 2.5), (-a, 1e3), (a * 0.01, a)];
+                let mut po = [0.0; 3];
+                resumed.mul_pairs(&mut po, &pairs);
+                tail_bits.extend(po.iter().map(|v| v.to_bits()));
+            }
+            let mut stitched = prefix_bits;
+            stitched.extend(tail_bits);
+            assert_eq!(stitched, whole_bits, "{name}: snapshot continuation diverged");
+            assert_eq!(
+                resumed.range_events(),
+                whole.range_events(),
+                "{name}: range-event counters must carry across the snapshot"
+            );
+            assert_eq!(
+                resumed.r2f2_stats(),
+                whole.r2f2_stats(),
+                "{name}: adjustment counters must carry across the snapshot"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_is_independent_of_the_original() {
+        // Advancing the original after the snapshot must not disturb the
+        // snapshot (checkpoints outlive the epoch that made them).
+        let mut be = R2f2Arith::new(crate::r2f2core::R2f2Config::C16_393);
+        snapshot_probe(&mut be, 3);
+        let snap = be.snapshot().unwrap();
+        let stats_at_snapshot = snap.r2f2_stats();
+        snapshot_probe(&mut be, 4); // keep mutating the original
+        assert_eq!(snap.r2f2_stats(), stats_at_snapshot, "snapshot state leaked");
     }
 }

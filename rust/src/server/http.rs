@@ -2,13 +2,15 @@
 //! this environment — DESIGN.md §12).
 //!
 //! Scope: exactly what `r2f2 serve` and its loopback load generator need.
-//! One request per connection (`Connection: close` on every response),
-//! `Content-Length`-framed bodies only (no chunked transfer), header names
-//! normalized to lowercase. Both directions live here — [`read_request`] /
-//! [`write_response`] for the server workers, [`request`] /
-//! [`read_response`] for the in-process clients (`bench-serve`,
-//! `tests/serve_loopback.rs`) — so the parser that the tests drive is the
-//! same code the server trusts.
+//! `Content-Length`-framed bodies on requests and plain responses, chunked
+//! transfer encoding for the streamed job-event route, HTTP/1.1 keep-alive
+//! with in-order pipelining (DESIGN.md §16), header names normalized to
+//! lowercase. Both directions live here — [`read_request`] /
+//! [`write_response_with`] for the server workers, [`request`] /
+//! [`Client`] / [`read_response`] for the in-process clients
+//! (`bench-serve`, `tests/serve_loopback.rs`, `tests/serve_keepalive.rs`)
+//! — so the parser that the tests drive is the same code the server
+//! trusts.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -63,7 +65,9 @@ impl Response {
 pub fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
+        409 => "Conflict",
         404 => "Not Found",
         405 => "Method Not Allowed",
         500 => "Internal Server Error",
@@ -127,11 +131,27 @@ pub fn write_response<W: Write>(
     content_type: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_response_with(w, status, extra_headers, content_type, body, true)
+}
+
+/// Write a complete `Content-Length`-framed response, advertising
+/// `connection: keep-alive` when `close` is false — identical bytes to
+/// [`write_response`] apart from that one header, which is what makes
+/// keep-alive vs one-shot responses byte-comparable in the tests.
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    content_type: &str,
+    body: &[u8],
+    close: bool,
+) -> std::io::Result<()> {
     let mut head = format!(
         "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\n\
-         content-length: {}\r\nconnection: close\r\n",
+         content-length: {}\r\nconnection: {}\r\n",
         reason(status),
-        body.len()
+        body.len(),
+        if close { "close" } else { "keep-alive" }
     );
     for (k, v) in extra_headers {
         head.push_str(&format!("{k}: {v}\r\n"));
@@ -139,6 +159,47 @@ pub fn write_response<W: Write>(
     head.push_str("\r\n");
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
+    w.flush()
+}
+
+/// Start a chunked streaming response (the `/v1/jobs/:id/events` route).
+/// Streams always end with `connection: close` — the stream's length is
+/// unknowable up front, so the terminal chunk is the framing boundary and
+/// the socket is not reused after it.
+pub fn write_chunked_head<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    content_type: &str,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\n\
+         transfer-encoding: chunked\r\nconnection: close\r\n",
+        reason(status)
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.flush()
+}
+
+/// Write one chunk of a chunked response (empty `data` is skipped — a
+/// zero-length chunk would terminate the stream).
+pub fn write_chunk<W: Write>(w: &mut W, data: &[u8]) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked response (the zero chunk + final CRLF).
+pub fn finish_chunked<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
     w.flush()
 }
 
@@ -168,18 +229,56 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, String> {
         headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
     }
 
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.to_ascii_lowercase().contains("chunked"));
     let mut body = Vec::new();
-    match headers.iter().find(|(k, _)| k == "content-length") {
-        Some((_, v)) => {
-            let len: usize = v.parse().map_err(|_| format!("bad content-length `{v}`"))?;
-            body = vec![0u8; len];
-            r.read_exact(&mut body).map_err(|e| format!("body read: {e}"))?;
+    if chunked {
+        while let Some(chunk) = read_chunk(r)? {
+            body.extend_from_slice(&chunk);
         }
-        None => {
-            r.read_to_end(&mut body).map_err(|e| format!("body read: {e}"))?;
+    } else {
+        match headers.iter().find(|(k, _)| k == "content-length") {
+            Some((_, v)) => {
+                let len: usize = v.parse().map_err(|_| format!("bad content-length `{v}`"))?;
+                body = vec![0u8; len];
+                r.read_exact(&mut body).map_err(|e| format!("body read: {e}"))?;
+            }
+            None => {
+                r.read_to_end(&mut body).map_err(|e| format!("body read: {e}"))?;
+            }
         }
     }
     Ok(Response { status, headers, body })
+}
+
+/// Read one chunk of a chunked body: `Some(data)` per chunk, `None` at the
+/// terminal zero chunk. Exposed so a streaming client can consume events
+/// incrementally instead of blocking for the whole stream.
+pub fn read_chunk<R: BufRead>(r: &mut R) -> Result<Option<Vec<u8>>, String> {
+    let mut budget = MAX_HEADER_BYTES;
+    let line = read_crlf_line(r, &mut budget)?;
+    let size_part = line.split(';').next().unwrap_or("").trim();
+    let n = usize::from_str_radix(size_part, 16).map_err(|_| format!("bad chunk size `{line}`"))?;
+    if n == 0 {
+        // Consume trailers (none are ever sent here) up to the blank line.
+        loop {
+            if read_crlf_line(r, &mut budget)?.is_empty() {
+                return Ok(None);
+            }
+        }
+    }
+    if n > MAX_BODY_BYTES {
+        return Err(format!("chunk of {n} bytes exceeds the {MAX_BODY_BYTES} limit"));
+    }
+    let mut data = vec![0u8; n];
+    r.read_exact(&mut data).map_err(|e| format!("chunk read: {e}"))?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf).map_err(|e| format!("chunk read: {e}"))?;
+    if &crlf != b"\r\n" {
+        return Err("chunk missing CRLF terminator".into());
+    }
+    Ok(Some(data))
 }
 
 /// One-shot client: connect, send `method path` with `body`, parse the
@@ -205,6 +304,94 @@ pub fn request(
     w.flush().map_err(|e| format!("send: {e}"))?;
     let mut r = BufReader::new(&stream);
     read_response(&mut r)
+}
+
+/// A keep-alive client: one TCP connection carrying many requests, with
+/// optional pipelining ([`Client::send_only`] several, then [`Client::recv`]
+/// in order). The write half and the buffered read half are the same
+/// socket via `try_clone`.
+pub struct Client {
+    addr: SocketAddr,
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client, String> {
+        let w = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        w.set_read_timeout(Some(Duration::from_secs(60))).map_err(|e| format!("timeout: {e}"))?;
+        let r = BufReader::new(w.try_clone().map_err(|e| format!("clone: {e}"))?);
+        Ok(Client { addr, w, r })
+    }
+
+    /// Queue a request without reading its response (pipelining). With
+    /// `close` the request asks the server to end the connection after
+    /// answering.
+    pub fn send_only(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        close: bool,
+    ) -> Result<(), String> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.addr,
+            body.len(),
+            if close { "close" } else { "keep-alive" }
+        );
+        self.w.write_all(head.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        self.w.write_all(body).map_err(|e| format!("send: {e}"))?;
+        self.w.flush().map_err(|e| format!("send: {e}"))
+    }
+
+    /// Read the next in-order response off the connection.
+    pub fn recv(&mut self) -> Result<Response, String> {
+        read_response(&mut self.r)
+    }
+
+    /// One request-response exchange, leaving the connection open.
+    pub fn send(&mut self, method: &str, path: &str, body: &[u8]) -> Result<Response, String> {
+        self.send_only(method, path, body, false)?;
+        self.recv()
+    }
+
+    /// Read the next chunk of an in-flight chunked response (after a
+    /// [`Client::send_only`] to a streaming route and manual header
+    /// consumption via [`Client::recv_stream_head`]).
+    pub fn recv_chunk(&mut self) -> Result<Option<Vec<u8>>, String> {
+        read_chunk(&mut self.r)
+    }
+
+    /// Consume a streaming response's status line and headers, leaving the
+    /// chunked body for incremental [`Client::recv_chunk`] calls.
+    pub fn recv_stream_head(&mut self) -> Result<(u16, Vec<(String, String)>), String> {
+        let mut budget = MAX_HEADER_BYTES;
+        let start = read_crlf_line(&mut self.r, &mut budget)?;
+        let status: u16 = start
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("malformed status line `{start}`"))?;
+        let mut headers = Vec::new();
+        loop {
+            let line = read_crlf_line(&mut self.r, &mut budget)?;
+            if line.is_empty() {
+                break;
+            }
+            let (k, v) =
+                line.split_once(':').ok_or_else(|| format!("malformed header `{line}`"))?;
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        Ok((status, headers))
+    }
+
+    /// Shut down the write half, signalling a half-closed socket to the
+    /// server while the read half stays open (the keep-alive edge-case
+    /// tests drive this).
+    pub fn close_write(&mut self) -> Result<(), String> {
+        self.w.shutdown(std::net::Shutdown::Write).map_err(|e| format!("shutdown: {e}"))
+    }
 }
 
 #[cfg(test)]
@@ -287,5 +474,63 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
         assert_eq!(reason(404), "Not Found");
         assert_eq!(reason(405), "Method Not Allowed");
+        assert_eq!(reason(202), "Accepted");
+        assert_eq!(reason(409), "Conflict");
+    }
+
+    #[test]
+    fn keep_alive_responses_differ_only_in_the_connection_header() {
+        let mut one = Vec::new();
+        let mut ka = Vec::new();
+        write_response_with(&mut one, 200, &[], "application/json", b"{\"x\": 1}", true).unwrap();
+        write_response_with(&mut ka, 200, &[], "application/json", b"{\"x\": 1}", false).unwrap();
+        let one = String::from_utf8(one).unwrap();
+        let ka = String::from_utf8(ka).unwrap();
+        assert!(one.contains("connection: close\r\n"));
+        assert!(ka.contains("connection: keep-alive\r\n"));
+        assert_eq!(
+            one.replace("connection: close", "connection: keep-alive"),
+            ka,
+            "identical apart from the connection header"
+        );
+        // Both parse to the same body.
+        let a = read_response(&mut Cursor::new(one.as_bytes())).unwrap();
+        let b = read_response(&mut Cursor::new(ka.as_bytes())).unwrap();
+        assert_eq!(a.body, b.body);
+    }
+
+    #[test]
+    fn chunked_stream_roundtrips_through_writer_and_parser() {
+        let mut buf = Vec::new();
+        write_chunked_head(&mut buf, 200, &[("x-r2f2-job", "job-1")], "application/x-ndjson")
+            .unwrap();
+        write_chunk(&mut buf, b"{\"event\": \"epoch\"}\n").unwrap();
+        write_chunk(&mut buf, b"").unwrap(); // skipped, not a terminator
+        write_chunk(&mut buf, b"{\"event\": \"done\"}\n").unwrap();
+        finish_chunked(&mut buf).unwrap();
+        let resp = read_response(&mut Cursor::new(&buf[..])).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("transfer-encoding"), Some("chunked"));
+        assert_eq!(resp.header("x-r2f2-job"), Some("job-1"));
+        assert_eq!(resp.text(), "{\"event\": \"epoch\"}\n{\"event\": \"done\"}\n");
+    }
+
+    #[test]
+    fn chunks_read_incrementally() {
+        let mut buf = Vec::new();
+        write_chunk(&mut buf, b"alpha").unwrap();
+        write_chunk(&mut buf, b"beta").unwrap();
+        finish_chunked(&mut buf).unwrap();
+        let mut r = Cursor::new(&buf[..]);
+        assert_eq!(read_chunk(&mut r).unwrap().as_deref(), Some(&b"alpha"[..]));
+        assert_eq!(read_chunk(&mut r).unwrap().as_deref(), Some(&b"beta"[..]));
+        assert_eq!(read_chunk(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn malformed_chunks_error() {
+        for raw in [&b"zz\r\n"[..], &b"5\r\nabcdeXX"[..], &b"ffffffffff\r\n"[..]] {
+            assert!(read_chunk(&mut Cursor::new(raw)).is_err(), "{raw:?}");
+        }
     }
 }

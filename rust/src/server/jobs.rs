@@ -1,0 +1,958 @@
+//! Resumable jobs: the checkpointed epoch executor behind the async
+//! `POST /v1/jobs` API (DESIGN.md §16).
+//!
+//! A job is one experiment run sliced into **epochs** of `epoch_steps`
+//! timesteps. The server's worker pool runs exactly one epoch per queue
+//! item and re-enqueues a continuation past the queue's admission cap but
+//! *behind* admitted work ([`crate::server::pool::Bounded::push_unbounded`]),
+//! so a long run never pins a worker: progress queries, pause/resume and
+//! fresh `/v1/run` traffic interleave at epoch boundaries even on a
+//! single-worker pool.
+//!
+//! **Determinism contract.** A job's result body is byte-identical to
+//! `outcome_json(run_experiment(cfg))` on the same config. The executor
+//! replicates `pde::scenario::run_sim`'s protocol exactly — one storage
+//! quantization up front, then `Sim::advance` chunks with continuing
+//! `step_base` — and the §8/§9 engine contracts make chunked advances
+//! bit-identical to one fused advance. Checkpoints reuse the `Sim`
+//! save/restore that powers the adaptive widen-retry, plus
+//! [`crate::pde::Arith::snapshot`] to carry backend counters and the R2F2
+//! split register across the boundary, so a crash-resumed job replays the
+//! lost epoch from identical state and lands on identical bytes.
+//!
+//! Hostile input is rejected at **submit** time with the same
+//! [`ExperimentConfig::from_json`] serving limits as `/v1/run` — a giant
+//! grid is a `400` before any worker allocates. The store is bounded on
+//! both sides: at most `cap` live (non-terminal) jobs — beyond that,
+//! submit returns [`SubmitError::Full`] and the server answers `503` —
+//! and at most `cap` finished ones, evicted oldest-completion-first (a
+//! terminal job is immutable, so its completion is its last meaningful
+//! use; completion order is LRU order).
+
+use crate::analysis::Log2Histogram;
+use crate::config::{json_escape, parse_json, ExperimentConfig, Json};
+use crate::coordinator::Outcome;
+use crate::metrics::Registry;
+use crate::pde::{decomp, swe2d::QuantScope, Arith, Ctx, F64Arith, QuantMode, Sim};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Crash-resume attempts before a job is marked failed.
+pub const MAX_ATTEMPTS: u32 = 3;
+/// Per-job event-log cap. Non-terminal events past the cap are counted and
+/// dropped (the log keeps its cursor semantics — nothing is ever removed
+/// from the front); the terminal event always lands so streams terminate.
+pub const MAX_EVENTS: usize = 4096;
+
+/// Job lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, no epoch run yet.
+    Queued,
+    /// Epochs are executing (or a continuation is queued).
+    Running,
+    /// Parked at an epoch boundary; `resume` re-enqueues it.
+    Paused,
+    /// Finished; the result body is ready.
+    Done,
+    /// Exhausted its crash-resume budget.
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Paused => "paused",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+/// Live run state parked between epochs: the sim mid-trajectory and the
+/// arithmetic backend mid-count.
+struct RunState {
+    sim: Box<dyn Sim + Send>,
+    be: Box<dyn Arith + Send>,
+    muls: u64,
+    steps_done: usize,
+    epochs_done: usize,
+    /// Has the one-time storage quantization run (epoch 0 of a fresh or
+    /// restarted trajectory)?
+    quanted: bool,
+}
+
+/// Epoch-boundary checkpoint: everything a worker needs to replay the next
+/// epoch after the previous owner panicked. `be` is `None` only for a
+/// backend without [`Arith::snapshot`] — resuming then restarts from step
+/// 0, which is still deterministic, just not incremental.
+struct Checkpoint {
+    saved: Vec<Vec<f64>>,
+    steps_done: usize,
+    epochs_done: usize,
+    muls: u64,
+    be: Option<Box<dyn Arith + Send>>,
+}
+
+/// One submitted job.
+pub struct Job {
+    pub id: String,
+    cfg: ExperimentConfig,
+    pub state: JobState,
+    steps_total: usize,
+    epoch_steps: usize,
+    pub steps_done: usize,
+    pub epochs_done: usize,
+    /// Crash-resume count (panics survived so far).
+    pub attempts: u32,
+    /// Test-only fault injection: panic when this epoch index starts.
+    fault_at_epoch: Option<usize>,
+    run: Option<RunState>,
+    checkpoint: Option<Checkpoint>,
+    /// Is a worker currently inside `run_epoch` for this job?
+    in_flight: bool,
+    events: Vec<String>,
+    events_dropped: u64,
+    /// Final body, byte-identical to `outcome_json(run_experiment(cfg))`.
+    pub body: Option<String>,
+    pub error: Option<String>,
+}
+
+impl Job {
+    fn push_event(&mut self, line: String, terminal: bool) {
+        if terminal || self.events.len() < MAX_EVENTS - 1 {
+            self.events.push(line);
+        } else {
+            self.events_dropped += 1;
+        }
+    }
+
+    /// Events from `cursor` on (the streaming route's incremental read).
+    pub fn events_from(&self, cursor: usize) -> &[String] {
+        &self.events[cursor.min(self.events.len())..]
+    }
+
+    pub fn events_len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Progress/status record for `GET /v1/jobs/:id`.
+    pub fn status_json(&self) -> String {
+        let mut s = format!(
+            "{{\"id\": \"{}\", \"state\": \"{}\", \"title\": \"{}\", \"app\": \"{}\", \
+             \"backend\": \"{}\", \"steps\": {}, \"steps_done\": {}, \"epochs\": {}, \
+             \"epoch_steps\": {}, \"attempts\": {}, \"events\": {}, \"events_dropped\": {}, \
+             \"result_ready\": {}",
+            json_escape(&self.id),
+            self.state.as_str(),
+            json_escape(&self.cfg.title),
+            json_escape(&self.cfg.app),
+            json_escape(&self.cfg.backend.name()),
+            self.steps_total,
+            self.steps_done,
+            self.epochs_done,
+            self.epoch_steps,
+            self.attempts,
+            self.events.len(),
+            self.events_dropped,
+            self.body.is_some()
+        );
+        if let Some(e) = &self.error {
+            s.push_str(&format!(", \"error\": \"{}\"", json_escape(e)));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Why a submit was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Malformed or over-limit config — the server answers `400`.
+    Bad(String),
+    /// Live-job capacity reached — the server answers `503`.
+    Full,
+}
+
+struct StoreInner {
+    jobs: BTreeMap<String, Arc<Mutex<Job>>>,
+    /// Terminal jobs in completion order (completion is a terminal job's
+    /// last state change, so this is LRU order for eviction).
+    terminal: VecDeque<String>,
+    next_id: u64,
+}
+
+/// Bounded job store: at most `cap` live jobs (submit rejects beyond) and
+/// at most `cap` terminal ones (oldest-completion evicted).
+pub struct JobStore {
+    inner: Mutex<StoreInner>,
+    cap: usize,
+}
+
+impl JobStore {
+    pub fn new(cap: usize) -> JobStore {
+        JobStore {
+            inner: Mutex::new(StoreInner {
+                jobs: BTreeMap::new(),
+                terminal: VecDeque::new(),
+                next_id: 0,
+            }),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Validate a `POST /v1/jobs` body and admit the job. The config goes
+    /// through the exact `/v1/run` gauntlet ([`ExperimentConfig::from_json`]
+    /// including `check_serving_limits`) *before* any state is allocated —
+    /// an oversized grid must cost a `400`, never a worker allocation.
+    ///
+    /// Two job-only sections ride along (both ignored by the config
+    /// parser's unknown-key leniency, so they never perturb the result):
+    /// `{"job": {"epoch_steps": N}}` sizes the epochs, and
+    /// `{"fault": {"panic_at_epoch": K}}` arms a one-shot injected worker
+    /// panic for the crash-resume tests.
+    pub fn submit(&self, body: &[u8]) -> Result<String, SubmitError> {
+        let text =
+            std::str::from_utf8(body).map_err(|_| SubmitError::Bad("body is not UTF-8".into()))?;
+        let json = parse_json(text).map_err(|e| SubmitError::Bad(format!("bad JSON: {e}")))?;
+        let cfg = ExperimentConfig::from_json(&json)
+            .map_err(|e| SubmitError::Bad(format!("bad config: {e}")))?;
+        let steps_total = app_steps(&cfg);
+        let epoch_steps = match json.get("job").and_then(|j| j.get("epoch_steps")) {
+            None => steps_total.div_ceil(8).max(1),
+            Some(v) => match v.as_usize().filter(|&n| n >= 1) {
+                Some(n) => n,
+                None => {
+                    return Err(SubmitError::Bad("job.epoch_steps must be at least 1".into()))
+                }
+            },
+        };
+        let fault_at_epoch =
+            json.get("fault").and_then(|f| f.get("panic_at_epoch")).and_then(Json::as_usize);
+
+        let mut inner = self.inner.lock().unwrap();
+        let live = inner.jobs.len() - inner.terminal.len();
+        if live >= self.cap {
+            return Err(SubmitError::Full);
+        }
+        inner.next_id += 1;
+        let id = format!("job-{}", inner.next_id);
+        let mut job = Job {
+            id: id.clone(),
+            state: JobState::Queued,
+            steps_total,
+            epoch_steps,
+            steps_done: 0,
+            epochs_done: 0,
+            attempts: 0,
+            fault_at_epoch,
+            run: None,
+            checkpoint: None,
+            in_flight: false,
+            events: Vec::new(),
+            events_dropped: 0,
+            body: None,
+            error: None,
+            cfg,
+        };
+        job.push_event(
+            format!(
+                "{{\"event\": \"submitted\", \"job\": \"{}\", \"app\": \"{}\", \
+                 \"steps\": {}, \"epoch_steps\": {}}}",
+                json_escape(&id),
+                json_escape(&job.cfg.app),
+                steps_total,
+                epoch_steps
+            ),
+            false,
+        );
+        inner.jobs.insert(id.clone(), Arc::new(Mutex::new(job)));
+        Ok(id)
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<Mutex<Job>>> {
+        self.inner.lock().unwrap().jobs.get(id).cloned()
+    }
+
+    /// `(live, terminal)` job counts, for the `/metrics` gauges.
+    pub fn counts(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.jobs.len() - inner.terminal.len(), inner.terminal.len())
+    }
+
+    /// Record that `id` reached a terminal state; evicts the
+    /// oldest-completed job beyond the cap. Returns how many were evicted.
+    fn mark_terminal(&self, id: &str) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.terminal.push_back(id.to_string());
+        let mut evicted = 0;
+        while inner.terminal.len() > self.cap {
+            if let Some(old) = inner.terminal.pop_front() {
+                inner.jobs.remove(&old);
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Park a job at its next epoch boundary. Idempotent on an already
+    /// paused job; `Err` on a terminal one.
+    pub fn pause(&self, id: &str) -> Result<(), String> {
+        let job = self.get(id).ok_or_else(|| format!("no job {id}"))?;
+        let mut j = job.lock().unwrap();
+        match j.state {
+            JobState::Queued | JobState::Running => {
+                j.state = JobState::Paused;
+                let line = format!(
+                    "{{\"event\": \"paused\", \"steps_done\": {}}}",
+                    j.steps_done
+                );
+                j.push_event(line, false);
+                Ok(())
+            }
+            JobState::Paused => Ok(()),
+            JobState::Done | JobState::Failed => {
+                Err(format!("job {id} is {}", j.state.as_str()))
+            }
+        }
+    }
+
+    /// Un-park a paused job. `Ok(true)` means the caller must re-enqueue a
+    /// continuation (no worker currently owns the job); `Ok(false)` means
+    /// an in-flight epoch will re-enqueue it itself.
+    pub fn resume(&self, id: &str) -> Result<bool, String> {
+        let job = self.get(id).ok_or_else(|| format!("no job {id}"))?;
+        let mut j = job.lock().unwrap();
+        match j.state {
+            JobState::Paused => {
+                j.state =
+                    if j.steps_done == 0 && j.run.is_none() && j.checkpoint.is_none() {
+                        JobState::Queued
+                    } else {
+                        JobState::Running
+                    };
+                let line = format!(
+                    "{{\"event\": \"resumed\", \"steps_done\": {}}}",
+                    j.steps_done
+                );
+                j.push_event(line, false);
+                Ok(!j.in_flight)
+            }
+            JobState::Queued | JobState::Running => Ok(false),
+            JobState::Done | JobState::Failed => {
+                Err(format!("job {id} is {}", j.state.as_str()))
+            }
+        }
+    }
+}
+
+/// Total timesteps of the app the config selects.
+fn app_steps(cfg: &ExperimentConfig) -> usize {
+    match cfg.app.as_str() {
+        "heat" => cfg.heat.steps,
+        "swe" => cfg.swe.steps,
+        "advection" => cfg.advection.steps,
+        "wave" => cfg.wave.steps,
+        other => panic!("unknown app {other}"),
+    }
+}
+
+/// The app's `snapshot_every` (every `Sim::advance` chunk must see the
+/// same value `run_sim` passes, or snapshot cadence would diverge).
+fn app_snapshot_every(cfg: &ExperimentConfig) -> usize {
+    match cfg.app.as_str() {
+        "heat" => cfg.heat.snapshot_every,
+        "swe" => cfg.swe.snapshot_every,
+        "advection" => cfg.advection.snapshot_every,
+        "wave" => cfg.wave.snapshot_every,
+        other => panic!("unknown app {other}"),
+    }
+}
+
+/// The `Ctx` mode `run_experiment` drives this app with (`swe` is always
+/// flux-scoped MulOnly there; `Outcome.mode` still reports the config's).
+fn effective_mode(cfg: &ExperimentConfig) -> QuantMode {
+    if cfg.app == "swe" {
+        QuantMode::MulOnly
+    } else {
+        cfg.mode
+    }
+}
+
+/// The sharded sim exactly as `decomp::run_*` constructs it, so the
+/// chunked trajectory matches the one-shot run byte for byte.
+fn build_sim(cfg: &ExperimentConfig) -> Box<dyn Sim + Send> {
+    let shards = cfg.shards.max(1);
+    match cfg.app.as_str() {
+        "heat" => Box::new(decomp::DecompHeat::new(&cfg.heat, shards)),
+        "swe" => Box::new(decomp::DecompSwe::new(&cfg.swe, QuantScope::UxFluxOnly, shards)),
+        "advection" => Box::new(decomp::DecompAdvection::new(&cfg.advection, shards)),
+        "wave" => Box::new(decomp::DecompWave::new(&cfg.wave, shards)),
+        other => panic!("unknown app {other}"),
+    }
+}
+
+/// The f64 ground-truth field, via the same sharded entry points
+/// `run_experiment` uses.
+fn reference_field(cfg: &ExperimentConfig) -> Vec<f64> {
+    let shards = cfg.shards.max(1);
+    match cfg.app.as_str() {
+        "heat" => decomp::run_heat(&cfg.heat, &mut F64Arith, QuantMode::MulOnly, shards).u,
+        "swe" => {
+            decomp::run_swe(
+                &cfg.swe,
+                &mut F64Arith,
+                QuantScope::UxFluxOnly,
+                QuantMode::MulOnly,
+                shards,
+            )
+            .h
+        }
+        "advection" => {
+            decomp::run_advection(&cfg.advection, &mut F64Arith, QuantMode::MulOnly, shards).u
+        }
+        "wave" => decomp::run_wave(&cfg.wave, &mut F64Arith, QuantMode::MulOnly, shards).u,
+        other => panic!("unknown app {other}"),
+    }
+}
+
+fn fresh_run(cfg: &ExperimentConfig) -> RunState {
+    RunState {
+        sim: build_sim(cfg),
+        be: cfg.backend.build_send(),
+        muls: 0,
+        steps_done: 0,
+        epochs_done: 0,
+        quanted: false,
+    }
+}
+
+/// What one `run_epoch` call tells the worker loop to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpochOutcome {
+    /// Re-enqueue a continuation (`Bounded::push_unbounded`).
+    Continue,
+    /// The job reached a terminal state — no continuation.
+    Terminal,
+    /// Nothing to do (paused, already terminal, evicted, or owned by
+    /// another worker) — no continuation.
+    Idle,
+}
+
+/// Run exactly one epoch of `id` on the calling worker thread.
+///
+/// Structure: (1) under the job lock, claim the run state (or the recipe
+/// to rebuild it from the checkpoint) so progress queries stay responsive
+/// while the epoch computes; (2) compute outside the lock inside this
+/// function's **own** `catch_unwind` — the pool's outer guard would save
+/// the worker but lose the continuation; (3) write back, checkpoint, and
+/// decide whether to continue.
+pub fn run_epoch(store: &JobStore, id: &str, reg: &Registry) -> EpochOutcome {
+    let Some(job) = store.get(id) else {
+        return EpochOutcome::Idle; // evicted
+    };
+
+    enum Boot {
+        Live(RunState),
+        Checkpoint {
+            saved: Vec<Vec<f64>>,
+            steps_done: usize,
+            epochs_done: usize,
+            muls: u64,
+            be: Option<Box<dyn Arith + Send>>,
+        },
+        Fresh,
+    }
+
+    // Phase 1: claim the job.
+    let (cfg, boot, fault, epoch_steps) = {
+        let mut j = job.lock().unwrap();
+        match j.state {
+            JobState::Paused | JobState::Done | JobState::Failed => return EpochOutcome::Idle,
+            JobState::Queued => j.state = JobState::Running,
+            JobState::Running => {}
+        }
+        if j.in_flight {
+            // A duplicate continuation (pause/resume race); the owner will
+            // re-enqueue when it finishes.
+            return EpochOutcome::Idle;
+        }
+        j.in_flight = true;
+        // Disarm the fault *before* running so the resumed attempt cannot
+        // trip over it again.
+        let fault = j.fault_at_epoch == Some(j.epochs_done);
+        if fault {
+            j.fault_at_epoch = None;
+        }
+        let boot = match j.run.take() {
+            Some(r) => Boot::Live(r),
+            None => match &j.checkpoint {
+                Some(ck) => Boot::Checkpoint {
+                    saved: ck.saved.clone(),
+                    steps_done: ck.steps_done,
+                    epochs_done: ck.epochs_done,
+                    muls: ck.muls,
+                    // Snapshot-of-checkpoint: the checkpoint stays intact
+                    // for the *next* panic.
+                    be: ck.be.as_ref().and_then(|b| b.snapshot()),
+                },
+                None => Boot::Fresh,
+            },
+        };
+        (j.cfg.clone(), boot, fault, j.epoch_steps)
+    };
+
+    // Phase 2: compute, outside the job lock.
+    struct EpochDone {
+        run: RunState,
+        chunk: usize,
+        overflows: u64,
+        underflows: u64,
+        min_abs: f64,
+        max_abs: f64,
+        nonfinite: u64,
+        finished: Option<String>, // the final outcome body
+        rel_err: f64,
+    }
+    let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> EpochDone {
+            let mut run = match boot {
+                Boot::Live(r) => r,
+                Boot::Fresh => fresh_run(&cfg),
+                Boot::Checkpoint { saved, steps_done, epochs_done, muls, be } => match be {
+                    Some(be) => {
+                        let mut sim = build_sim(&cfg);
+                        sim.restore(&saved);
+                        RunState { sim, be, muls, steps_done, epochs_done, quanted: true }
+                    }
+                    // No backend snapshot: restart the trajectory from step
+                    // 0 — deterministic, just not incremental.
+                    None => fresh_run(&cfg),
+                },
+            };
+            if fault {
+                panic!("injected worker fault at epoch {} of {id}", run.epochs_done);
+            }
+            let steps_total = app_steps(&cfg);
+            let snapshot_every = app_snapshot_every(&cfg);
+            let chunk = epoch_steps.min(steps_total - run.steps_done);
+            let mode = effective_mode(&cfg);
+            let ev0 = run.be.range_events().unwrap_or_default();
+            let mut snaps: Vec<(usize, Vec<f64>)> = Vec::new();
+            let delta = {
+                let mut ctx = Ctx::new(run.be.as_mut(), mode);
+                if !run.quanted {
+                    run.sim.quant_state(&mut ctx);
+                    run.quanted = true;
+                }
+                run.sim.advance(
+                    &mut ctx,
+                    chunk,
+                    run.steps_done,
+                    snapshot_every,
+                    &mut snaps,
+                    true,
+                );
+                ctx.muls
+            };
+            run.muls += delta;
+            run.steps_done += chunk;
+            run.epochs_done += 1;
+
+            // Per-epoch range telemetry: the same observables the adaptive
+            // scheduler's EpochTelemetry carries.
+            let ev1 = run.be.range_events().unwrap_or_default();
+            let mut tele: Vec<f64> = Vec::new();
+            run.sim.telemetry(&mut tele);
+            let mut hist = Log2Histogram::new();
+            for &v in &tele {
+                hist.record(v);
+            }
+            let (min_abs, max_abs) = hist.nonzero_range().unwrap_or((0.0, 0.0));
+
+            let mut finished = None;
+            let mut rel_err = 0.0;
+            if run.steps_done >= steps_total {
+                // Final assembly, replicating `run_experiment` exactly:
+                // field, f64 reference, rel_l2, counters — then the same
+                // `outcome_json` serializer (wall is excluded from it).
+                let field = run.sim.primary_field();
+                let reference = reference_field(&cfg);
+                rel_err = crate::pde::rel_l2(&field, &reference);
+                let outcome = Outcome {
+                    title: cfg.title.clone(),
+                    app: cfg.app.clone(),
+                    backend: cfg.backend.name(),
+                    mode: cfg.mode,
+                    rel_err_vs_f64: rel_err,
+                    muls: run.muls,
+                    adjustments: run
+                        .be
+                        .r2f2_stats()
+                        .map(|s| (s.overflow_adjustments, s.redundancy_adjustments)),
+                    range_events: run.be.range_events().map(|e| (e.overflows, e.underflows)),
+                    wall: std::time::Duration::ZERO,
+                    field,
+                };
+                finished = Some(super::outcome_json(&outcome));
+            }
+            EpochDone {
+                chunk,
+                overflows: ev1.overflows - ev0.overflows,
+                underflows: ev1.underflows - ev0.underflows,
+                min_abs,
+                max_abs,
+                nonfinite: hist.nonfinite,
+                finished,
+                rel_err,
+                run,
+            }
+        },
+    ));
+
+    // Phase 3: write back.
+    let mut j = job.lock().unwrap();
+    j.in_flight = false;
+    match computed {
+        Err(_) => {
+            reg.inc("serve.jobs.panics", 1);
+            j.attempts += 1;
+            if j.attempts >= MAX_ATTEMPTS {
+                j.state = JobState::Failed;
+                j.error = Some(format!(
+                    "worker panicked {} times; crash-resume budget exhausted",
+                    j.attempts
+                ));
+                let line = format!(
+                    "{{\"event\": \"failed\", \"error\": \"{}\"}}",
+                    json_escape(j.error.as_deref().unwrap_or(""))
+                );
+                j.push_event(line, true);
+                j.run = None;
+                j.checkpoint = None;
+                drop(j);
+                reg.inc("serve.jobs.failed", 1);
+                reg.inc("serve.jobs.evicted", store.mark_terminal(id));
+                EpochOutcome::Terminal
+            } else {
+                // Resume from the last checkpoint (or step 0): the live run
+                // died with the panic, so roll progress back to it.
+                let (from_step, epochs) = match &j.checkpoint {
+                    Some(ck) => (ck.steps_done, ck.epochs_done),
+                    None => (0, 0),
+                };
+                j.steps_done = from_step;
+                j.epochs_done = epochs;
+                let attempt = j.attempts;
+                let line = format!(
+                    "{{\"event\": \"crash_resumed\", \"attempt\": {attempt}, \
+                     \"from_step\": {from_step}}}"
+                );
+                j.push_event(line, false);
+                drop(j);
+                reg.inc("serve.jobs.crash_resumes", 1);
+                EpochOutcome::Continue
+            }
+        }
+        Ok(done) => {
+            reg.inc("serve.jobs.epochs", 1);
+            let run = done.run;
+            j.steps_done = run.steps_done;
+            j.epochs_done = run.epochs_done;
+            let line = format!(
+                "{{\"event\": \"epoch\", \"epoch\": {}, \"steps_done\": {}, \"steps\": {}, \
+                 \"chunk\": {}, \"muls\": {}, \"overflows\": {}, \"underflows\": {}, \
+                 \"nonfinite\": {}, \"min_abs\": {}, \"max_abs\": {}}}",
+                run.epochs_done - 1,
+                run.steps_done,
+                j.steps_total,
+                done.chunk,
+                run.muls,
+                done.overflows,
+                done.underflows,
+                done.nonfinite,
+                super::json_f64(done.min_abs),
+                super::json_f64(done.max_abs)
+            );
+            j.push_event(line, false);
+            match done.finished {
+                Some(body) => {
+                    let line = format!(
+                        "{{\"event\": \"done\", \"rel_err_vs_f64\": {}, \"muls\": {}}}",
+                        super::json_f64(done.rel_err),
+                        run.muls
+                    );
+                    j.push_event(line, true);
+                    j.body = Some(body);
+                    j.state = JobState::Done;
+                    j.run = None;
+                    j.checkpoint = None;
+                    drop(j);
+                    // Same accounting run_experiment performs.
+                    reg.inc("jobs.completed", 1);
+                    reg.inc("jobs.muls", run.muls);
+                    reg.inc("serve.jobs.completed", 1);
+                    reg.inc("serve.jobs.evicted", store.mark_terminal(id));
+                    EpochOutcome::Terminal
+                }
+                None => {
+                    // Checkpoint the epoch boundary, then park the live run.
+                    j.checkpoint = Some(Checkpoint {
+                        saved: run.sim.save(),
+                        steps_done: run.steps_done,
+                        epochs_done: run.epochs_done,
+                        muls: run.muls,
+                        be: run.be.snapshot(),
+                    });
+                    j.run = Some(run);
+                    if j.state == JobState::Paused {
+                        // Parked mid-epoch: keep the state, drop the
+                        // continuation; `resume` re-enqueues.
+                        EpochOutcome::Idle
+                    } else {
+                        EpochOutcome::Continue
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_experiment;
+    use crate::server::outcome_json;
+
+    fn tiny_heat_body(extra: &str) -> String {
+        format!(
+            "{{\"title\": \"jobs-test\", \"app\": \"heat\", \"backend\": \"fixed:E5M10\", \
+             \"heat\": {{\"n\": 33, \"steps\": 48, \"dt\": 2.4e-4}}{extra}}}"
+        )
+    }
+
+    fn drive_to_terminal(store: &JobStore, id: &str, reg: &Registry) -> usize {
+        let mut spins = 0;
+        loop {
+            match run_epoch(store, id, reg) {
+                EpochOutcome::Terminal | EpochOutcome::Idle => return spins,
+                EpochOutcome::Continue => spins += 1,
+            }
+            assert!(spins < 10_000, "job {id} never terminated");
+        }
+    }
+
+    fn expected_body(body: &str) -> String {
+        let cfg = ExperimentConfig::from_json(&parse_json(body).unwrap()).unwrap();
+        outcome_json(&run_experiment(&cfg, &Registry::new()))
+    }
+
+    #[test]
+    fn submit_validates_like_v1_run() {
+        let store = JobStore::new(4);
+        assert!(matches!(
+            store.submit(&[0xff, 0xfe]),
+            Err(SubmitError::Bad(e)) if e == "body is not UTF-8"
+        ));
+        assert!(matches!(
+            store.submit(b"{nope"),
+            Err(SubmitError::Bad(e)) if e.starts_with("bad JSON")
+        ));
+        // The serving limits fire at submit time — before any allocation.
+        let huge = "{\"app\": \"heat\", \"heat\": {\"n\": 2000000000}}";
+        assert!(matches!(
+            store.submit(huge.as_bytes()),
+            Err(SubmitError::Bad(e)) if e.contains("serving limit")
+        ));
+        assert!(matches!(
+            store.submit(tiny_heat_body(", \"job\": {\"epoch_steps\": 0}").as_bytes()),
+            Err(SubmitError::Bad(e)) if e.contains("epoch_steps")
+        ));
+    }
+
+    #[test]
+    fn ids_are_deterministic_and_capacity_binds() {
+        let store = JobStore::new(2);
+        let a = store.submit(tiny_heat_body("").as_bytes()).unwrap();
+        let b = store.submit(tiny_heat_body("").as_bytes()).unwrap();
+        assert_eq!(a, "job-1");
+        assert_eq!(b, "job-2");
+        assert_eq!(store.submit(tiny_heat_body("").as_bytes()), Err(SubmitError::Full));
+        assert_eq!(store.counts(), (2, 0));
+    }
+
+    #[test]
+    fn job_body_is_byte_identical_to_run_experiment() {
+        let reg = Registry::new();
+        for body in [
+            tiny_heat_body(""),
+            tiny_heat_body(", \"job\": {\"epoch_steps\": 7}"), // unaligned chunks
+            "{\"app\": \"wave\", \"backend\": \"r2f2:<3,9,3>\", \
+              \"wave\": {\"n\": 17, \"steps\": 30}}"
+                .to_string(),
+            "{\"app\": \"swe\", \"backend\": \"fixed:E5M10\", \"mode\": \"full\", \
+              \"swe\": {\"steps\": 8}}"
+                .to_string(),
+            "{\"app\": \"advection\", \"backend\": \"f32\", \
+              \"advection\": {\"n\": 64, \"steps\": 40}, \"shards\": 3}"
+                .to_string(),
+        ] {
+            let store = JobStore::new(4);
+            let id = store.submit(body.as_bytes()).unwrap();
+            drive_to_terminal(&store, &id, &reg);
+            let job = store.get(&id).unwrap();
+            let j = job.lock().unwrap();
+            assert_eq!(j.state, JobState::Done, "{body}");
+            assert_eq!(j.body.as_deref().unwrap(), expected_body(&body), "{body}");
+        }
+    }
+
+    #[test]
+    fn injected_panic_is_resumed_from_the_checkpoint() {
+        let reg = Registry::new();
+        let body = tiny_heat_body(", \"job\": {\"epoch_steps\": 10}, \
+                                    \"fault\": {\"panic_at_epoch\": 2}");
+        let store = JobStore::new(4);
+        let id = store.submit(body.as_bytes()).unwrap();
+        drive_to_terminal(&store, &id, &reg);
+        let job = store.get(&id).unwrap();
+        let j = job.lock().unwrap();
+        assert_eq!(j.state, JobState::Done);
+        assert_eq!(j.attempts, 1, "exactly one crash survived");
+        assert!(
+            j.events.iter().any(|e| e.contains("\"crash_resumed\"")),
+            "events: {:?}",
+            j.events
+        );
+        // The replayed epoch lands on identical bytes.
+        assert_eq!(j.body.as_deref().unwrap(), expected_body(&body));
+        assert_eq!(reg.counter("serve.jobs.crash_resumes"), 1);
+    }
+
+    #[test]
+    fn panic_before_any_checkpoint_restarts_from_step_zero() {
+        let reg = Registry::new();
+        let body = tiny_heat_body(", \"fault\": {\"panic_at_epoch\": 0}");
+        let store = JobStore::new(4);
+        let id = store.submit(body.as_bytes()).unwrap();
+        drive_to_terminal(&store, &id, &reg);
+        let j = store.get(&id).unwrap();
+        let j = j.lock().unwrap();
+        assert_eq!(j.state, JobState::Done);
+        assert_eq!(j.body.as_deref().unwrap(), expected_body(&body));
+    }
+
+    #[test]
+    fn repeated_panics_exhaust_the_budget() {
+        // A fault re-armed from the test side every epoch: fail after
+        // MAX_ATTEMPTS. (Disarm-before-panic means one submit-time fault
+        // can only fire once, so re-arm manually.)
+        let reg = Registry::new();
+        let store = JobStore::new(4);
+        let id = store.submit(tiny_heat_body("").as_bytes()).unwrap();
+        let mut outcome = EpochOutcome::Continue;
+        let mut spins = 0;
+        while outcome == EpochOutcome::Continue {
+            {
+                let job = store.get(&id).unwrap();
+                let mut j = job.lock().unwrap();
+                let e = j.epochs_done;
+                j.fault_at_epoch = Some(e);
+            }
+            outcome = run_epoch(&store, &id, &reg);
+            spins += 1;
+            assert!(spins < 100);
+        }
+        let j = store.get(&id).unwrap();
+        let j = j.lock().unwrap();
+        assert_eq!(j.state, JobState::Failed);
+        assert_eq!(j.attempts, MAX_ATTEMPTS);
+        assert!(j.events.iter().any(|e| e.contains("\"failed\"")));
+    }
+
+    #[test]
+    fn pause_parks_and_resume_continues() {
+        let reg = Registry::new();
+        let store = JobStore::new(4);
+        let id = store
+            .submit(tiny_heat_body(", \"job\": {\"epoch_steps\": 10}").as_bytes())
+            .unwrap();
+        assert_eq!(run_epoch(&store, &id, &reg), EpochOutcome::Continue);
+        store.pause(&id).unwrap();
+        assert_eq!(run_epoch(&store, &id, &reg), EpochOutcome::Idle, "paused jobs don't run");
+        let before = store.get(&id).unwrap().lock().unwrap().steps_done;
+        assert_eq!(before, 10);
+        assert!(store.resume(&id).unwrap(), "caller must re-enqueue");
+        drive_to_terminal(&store, &id, &reg);
+        let j = store.get(&id).unwrap();
+        let j = j.lock().unwrap();
+        assert_eq!(j.state, JobState::Done);
+        assert_eq!(j.body.as_deref().unwrap(), expected_body(&tiny_heat_body("")));
+        assert!(j.events.iter().any(|e| e.contains("\"paused\"")));
+        assert!(j.events.iter().any(|e| e.contains("\"resumed\"")));
+    }
+
+    #[test]
+    fn terminal_jobs_are_evicted_oldest_completion_first() {
+        let reg = Registry::new();
+        let store = JobStore::new(2);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            let id = store.submit(tiny_heat_body("").as_bytes()).unwrap();
+            drive_to_terminal(&store, &id, &reg);
+            ids.push(id);
+        }
+        // Cap 2: the first-completed job is gone, the last two remain.
+        assert!(store.get(&ids[0]).is_none(), "oldest terminal evicted");
+        assert!(store.get(&ids[1]).is_some());
+        assert!(store.get(&ids[2]).is_some());
+        assert_eq!(store.counts(), (0, 2));
+        // Evicted jobs idle rather than panic if a stale continuation pops.
+        assert_eq!(run_epoch(&store, &ids[0], &reg), EpochOutcome::Idle);
+    }
+
+    #[test]
+    fn event_log_is_capped_but_always_terminates() {
+        let store = JobStore::new(2);
+        let id = store.submit(tiny_heat_body("").as_bytes()).unwrap();
+        let job = store.get(&id).unwrap();
+        let mut j = job.lock().unwrap();
+        for i in 0..(2 * MAX_EVENTS) {
+            j.push_event(format!("{{\"event\": \"spam\", \"i\": {i}}}"), false);
+        }
+        assert_eq!(j.events_len(), MAX_EVENTS - 1);
+        assert!(j.events_dropped > 0);
+        j.push_event("{\"event\": \"done\"}".into(), true);
+        assert_eq!(j.events_len(), MAX_EVENTS, "the terminal event always lands");
+        assert!(j.events_from(MAX_EVENTS - 1)[0].contains("done"));
+    }
+
+    #[test]
+    fn status_json_reports_progress() {
+        let reg = Registry::new();
+        let store = JobStore::new(4);
+        let id = store
+            .submit(tiny_heat_body(", \"job\": {\"epoch_steps\": 10}").as_bytes())
+            .unwrap();
+        let s = store.get(&id).unwrap().lock().unwrap().status_json();
+        assert!(s.contains("\"state\": \"queued\""), "{s}");
+        assert!(s.contains("\"steps\": 48"), "{s}");
+        run_epoch(&store, &id, &reg);
+        let s = store.get(&id).unwrap().lock().unwrap().status_json();
+        assert!(s.contains("\"state\": \"running\""), "{s}");
+        assert!(s.contains("\"steps_done\": 10"), "{s}");
+        assert!(s.contains("\"result_ready\": false"), "{s}");
+        drive_to_terminal(&store, &id, &reg);
+        let s = store.get(&id).unwrap().lock().unwrap().status_json();
+        assert!(s.contains("\"state\": \"done\""), "{s}");
+        assert!(s.contains("\"result_ready\": true"), "{s}");
+        // The status record parses as JSON.
+        assert!(parse_json(&s).is_ok(), "{s}");
+    }
+}

@@ -1,4 +1,4 @@
-//! The simulation service: `r2f2 serve` (DESIGN.md §12).
+//! The simulation service: `r2f2 serve` (DESIGN.md §12, §16).
 //!
 //! The fourth architectural layer — **serve**, atop arith (§3), solve
 //! (§11) and orchestrate (coordinator). Everything below this layer is a
@@ -7,29 +7,54 @@
 //! numerical-precision experimentation actually is: repeated parameterized
 //! queries over the same solvers.
 //!
-//! Std-only: a `TcpListener` acceptor thread, the persistent
-//! [`pool::WorkerPool`] (bounded MPMC queue — a full queue rejects with
-//! `503`, which is the whole backpressure story), and the
-//! [`cache::ResultCache`] (sound because runs are bit-reproducible; see
-//! that module's docs for why, and for the debug determinism guard).
+//! Std-only, three moving parts:
+//!
+//! - a **nonblocking acceptor** that owns every idle socket: it polls a
+//!   1-byte `peek` over the idle table and hands a connection to the pool
+//!   only when request bytes have actually arrived. Keep-alive sockets
+//!   come *back* to this table between requests, so a silent connection
+//!   costs an entry in a `Vec` and a timer — never a worker (the §12
+//!   slow-loris limitation, fixed). Idle sockets past the keep-alive
+//!   deadline are closed (`serve.idle_expired`).
+//! - the persistent [`pool::WorkerPool`] draining a bounded [`Work`]
+//!   queue of ready connections and job-epoch continuations (a full queue
+//!   rejects new connections with `503`, which is the whole backpressure
+//!   story; continuations re-enter past the cap but behind admitted
+//!   connections, bounded by the job store's own cap).
+//! - the [`cache::ResultCache`] (sound because runs are bit-reproducible;
+//!   see that module's docs for why, and for the debug determinism guard).
 //!
 //! Endpoints:
 //!
 //! | route | behavior |
 //! | --- | --- |
 //! | `POST /v1/run` | JSON body → [`ExperimentConfig`] (same fields as the TOML config) → cached [`run_experiment`] → deterministic outcome JSON. Headers: `x-r2f2-cache: hit\|miss`, `x-r2f2-key: <fnv64>` |
+//! | `POST /v1/jobs` | same body (+ optional `job.epoch_steps`) → `202` with a job id; the run executes as checkpointed epochs on the pool ([`jobs`]) |
+//! | `GET /v1/jobs/:id` | progress/status record |
+//! | `GET /v1/jobs/:id/result` | `200` outcome body (byte-identical to `/v1/run` on the same config) · `409` while unfinished · `500` if failed |
+//! | `GET /v1/jobs/:id/events` | chunked ndjson stream of per-epoch progress + range telemetry, ending when the job does |
+//! | `POST /v1/jobs/:id/pause` · `/resume` | park / continue at epoch boundaries |
 //! | `GET /v1/scenarios` | the [`SCENARIOS`] registry listing |
 //! | `GET /healthz` | liveness probe |
-//! | `GET /metrics` | merged per-worker [`Registry`] rollup + queue/cache gauges |
+//! | `GET /metrics` | merged per-worker [`Registry`] rollup + queue/cache/connection/job gauges |
 //!
-//! The response body of `/v1/run` deliberately excludes wall-clock time —
-//! it is the *deterministic* payload, byte-identical across hits, misses
-//! and re-runs, which is what makes both the cache and the loopback
-//! bit-identity suite (`rust/tests/serve_loopback.rs`) possible. Timing
-//! lives in `/metrics` (`serve.handle_ns` percentiles) instead.
+//! HTTP/1.1 keep-alive with in-order pipelining: a worker keeps answering
+//! as long as the client has already-buffered requests, then parks the
+//! socket back with the acceptor. Responses differ from the one-shot path
+//! only in the `connection:` header, which is what the byte-identity
+//! keep-alive tests pin.
+//!
+//! The response body of `/v1/run` (and of a job's `/result`) deliberately
+//! excludes wall-clock time — it is the *deterministic* payload,
+//! byte-identical across hits, misses, re-runs and crash-resumed jobs,
+//! which is what makes the cache, the loopback bit-identity suite
+//! (`rust/tests/serve_loopback.rs`) and the job suite
+//! (`rust/tests/serve_jobs.rs`) possible. Timing lives in `/metrics`
+//! (`serve.handle_ns` percentiles) instead.
 
 pub mod cache;
 pub mod http;
+pub mod jobs;
 pub mod pool;
 
 use crate::config::json_mini::escape;
@@ -40,17 +65,29 @@ use crate::metrics::Registry;
 use crate::pde::scenario::SCENARIOS;
 use crate::pde::QuantMode;
 use cache::ResultCache;
+use jobs::{EpochOutcome, JobStore, SubmitError};
 use pool::{Bounded, WorkerPool};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// At most this many concurrent detached 503-responder threads; beyond it
 /// rejected connections are dropped unanswered (still a rejection, and the
 /// acceptor stays alive under any flood).
 const MAX_REJECT_RESPONDERS: usize = 64;
+
+/// At most this many concurrent detached event-streamer threads; beyond it
+/// `GET /v1/jobs/:id/events` answers `503`. Streams are long-lived by
+/// design (they follow a job to its terminal state), so they must not be
+/// able to occupy the worker pool — each one owns its socket on a thread
+/// of its own, and this cap bounds the thread count.
+const MAX_STREAMERS: usize = 32;
+
+/// Acceptor poll tick: the granularity of idle-socket peeks, returned
+/// keep-alive pickups and the stop flag.
+const ACCEPT_TICK: Duration = Duration::from_millis(1);
 
 /// Server configuration (the `r2f2 serve` flags).
 #[derive(Debug, Clone)]
@@ -60,10 +97,18 @@ pub struct ServeOptions {
     /// Worker threads ([`coordinator::default_workers`] by default, so the
     /// `R2F2_WORKERS` env override applies).
     pub workers: usize,
-    /// Bounded job-queue capacity; a full queue rejects with `503`.
+    /// Bounded work-queue capacity; a full queue rejects with `503`.
     pub queue_cap: usize,
     /// Result-cache capacity (entries, LRU-evicted).
     pub cache_cap: usize,
+    /// Keep-alive idle deadline in milliseconds: how long a connection may
+    /// sit in the acceptor's idle table with no request bytes before it is
+    /// closed (`serve.idle_expired`). Also the arrival deadline for a
+    /// fresh connection's first byte.
+    pub keepalive_ms: u64,
+    /// Job-store capacity: at most this many live jobs (`503` beyond) and
+    /// this many retained terminal results (oldest-completion evicted).
+    pub jobs_cap: usize,
 }
 
 impl Default for ServeOptions {
@@ -73,15 +118,56 @@ impl Default for ServeOptions {
             workers: coordinator::default_workers(),
             queue_cap: 64,
             cache_cap: 256,
+            keepalive_ms: 5000,
+            jobs_cap: 64,
         }
     }
+}
+
+/// A tracked connection: the socket plus the shared connection-count
+/// gauge, incremented on accept and decremented on drop — however the
+/// socket leaves (served and closed, idle-expired, rejected, streamed).
+struct Conn {
+    /// `None` only transiently, while a worker has moved the socket into
+    /// a `BufReader` (the `Conn` survives as the gauge guard).
+    stream: Option<TcpStream>,
+    gauge: Arc<AtomicI64>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, gauge: Arc<AtomicI64>) -> Conn {
+        gauge.fetch_add(1, Ordering::SeqCst);
+        Conn { stream: Some(stream), gauge }
+    }
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One unit of worker-pool work.
+enum Work {
+    /// A connection with request bytes waiting.
+    Conn(Conn),
+    /// Run one epoch of this job, then re-enqueue the continuation.
+    Job(String),
 }
 
 /// State shared by the acceptor, the workers and the metrics rollup.
 struct Shared {
     cache: ResultCache,
-    queue: Arc<Bounded<TcpStream>>,
-    /// Acceptor-side counters (`serve.accepted` / `serve.rejected`).
+    queue: Arc<Bounded<Work>>,
+    jobs: JobStore,
+    /// Workers park finished keep-alive sockets back to the acceptor's
+    /// idle table through this channel.
+    returns: mpsc::Sender<Conn>,
+    /// Live connection count (the `serve.connections` gauge).
+    connections: Arc<AtomicI64>,
+    /// Live detached event-streamer count (capped at [`MAX_STREAMERS`]).
+    streamers: Arc<AtomicUsize>,
+    /// Acceptor-side counters (`serve.accepted` / `serve.rejected` / ...).
     acceptor_reg: Registry,
     /// Every worker's private registry (handles — cloneable), so the
     /// `/metrics` route can roll up the whole pool, not just the worker
@@ -90,8 +176,8 @@ struct Shared {
 }
 
 /// The full metrics rollup over shared state: acceptor counters + every
-/// worker registry + queue/cache gauges. Both the `/metrics` route and
-/// [`Server::metrics_snapshot`] are exactly this.
+/// worker registry + queue/cache/connection/job gauges. Both the
+/// `/metrics` route and [`Server::metrics_snapshot`] are exactly this.
 fn rollup(shared: &Shared) -> Registry {
     let snap = Registry::new();
     snap.merge(&shared.acceptor_reg);
@@ -105,16 +191,21 @@ fn rollup(shared: &Shared) -> Registry {
     snap.inc("serve.cache.guard_checks", st.guard_checks);
     snap.set("serve.queue.depth", shared.queue.len() as f64);
     snap.set("serve.cache.entries", shared.cache.len() as f64);
+    snap.set("serve.connections", shared.connections.load(Ordering::SeqCst) as f64);
+    snap.set("serve.streamers", shared.streamers.load(Ordering::SeqCst) as f64);
+    let (live, terminal) = shared.jobs.counts();
+    snap.set("serve.jobs.live", live as f64);
+    snap.set("serve.jobs.terminal", terminal as f64);
     snap
 }
 
 /// A running simulation service. Dropping (or [`Server::shutdown`]) stops
-/// the acceptor, drains admitted connections and joins every thread.
+/// the acceptor, drains admitted work and joins every pool thread.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
-    pool: Option<WorkerPool<TcpStream>>,
+    pool: Option<WorkerPool<Work>>,
     shared: Arc<Shared>,
 }
 
@@ -124,21 +215,37 @@ impl Server {
         let listener = TcpListener::bind(("127.0.0.1", opts.port))
             .map_err(|e| format!("bind 127.0.0.1:{}: {e}", opts.port))?;
         let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        listener.set_nonblocking(true).map_err(|e| format!("nonblocking: {e}"))?;
 
         let queue = Arc::new(Bounded::new(opts.queue_cap));
         let worker_regs: Vec<Registry> =
             (0..opts.workers.max(1)).map(|_| Registry::new()).collect();
+        let (returns, returned) = mpsc::channel::<Conn>();
         let shared = Arc::new(Shared {
             cache: ResultCache::new(opts.cache_cap),
             queue: queue.clone(),
+            jobs: JobStore::new(opts.jobs_cap),
+            returns,
+            connections: Arc::new(AtomicI64::new(0)),
+            streamers: Arc::new(AtomicUsize::new(0)),
             acceptor_reg: Registry::new(),
             worker_regs: worker_regs.clone(),
         });
 
         let pool = {
             let shared = shared.clone();
-            let handler = move |stream: TcpStream, reg: &Registry| {
-                handle_connection(stream, &shared, reg);
+            let handler = move |work: Work, reg: &Registry| match work {
+                Work::Conn(conn) => handle_conn(conn, &shared, reg),
+                Work::Job(id) => {
+                    if jobs::run_epoch(&shared.jobs, &id, reg) == EpochOutcome::Continue {
+                        // Continuations bypass the cap but queue behind
+                        // admitted connections; see `Bounded::push_unbounded`
+                        // for why that is both bounded and fair. Failure
+                        // means shutdown — the job stays resumable from its
+                        // checkpoint, just unscheduled.
+                        let _ = shared.queue.push_unbounded(Work::Job(id));
+                    }
+                }
             };
             WorkerPool::with_registries(queue.clone(), worker_regs, handler)
         };
@@ -147,51 +254,9 @@ impl Server {
         let acceptor = {
             let stop = stop.clone();
             let shared = shared.clone();
-            let responders = Arc::new(AtomicUsize::new(0));
+            let keepalive = Duration::from_millis(opts.keepalive_ms.max(1));
             std::thread::spawn(move || {
-                for conn in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let stream = match conn {
-                        Ok(s) => s,
-                        Err(_) => {
-                            // Persistent accept errors (fd exhaustion)
-                            // must back off, not busy-spin a core.
-                            std::thread::sleep(Duration::from_millis(10));
-                            continue;
-                        }
-                    };
-                    shared.acceptor_reg.inc("serve.accepted", 1);
-                    if let Err(stream) = shared.queue.try_push(stream) {
-                        // Backpressure: reject with 503. The drain + write
-                        // happen on a short-lived detached thread so a slow
-                        // rejected client can never stall the accept loop —
-                        // stalling it under overload would make the server
-                        // reject work the draining queue could admit. The
-                        // responders are bounded and spawn failure is
-                        // non-fatal (a flood must not kill the acceptor);
-                        // past the bound the connection is dropped, which
-                        // is itself an unambiguous rejection.
-                        shared.acceptor_reg.inc("serve.rejected", 1);
-                        if responders.fetch_add(1, Ordering::SeqCst) < MAX_REJECT_RESPONDERS {
-                            let done = responders.clone();
-                            let spawned = std::thread::Builder::new()
-                                .name("r2f2-reject".into())
-                                .spawn(move || {
-                                    reject_with_503(stream);
-                                    done.fetch_sub(1, Ordering::SeqCst);
-                                });
-                            if spawned.is_err() {
-                                responders.fetch_sub(1, Ordering::SeqCst);
-                                shared.acceptor_reg.inc("serve.rejected_dropped", 1);
-                            }
-                        } else {
-                            responders.fetch_sub(1, Ordering::SeqCst);
-                            shared.acceptor_reg.inc("serve.rejected_dropped", 1);
-                        }
-                    }
-                }
+                accept_loop(&listener, &stop, &shared, returned, keepalive);
                 // Listener drops here: the port is released before
                 // shutdown() returns.
             })
@@ -211,8 +276,8 @@ impl Server {
     }
 
     /// Merged metrics rollup: acceptor counters + every worker registry
-    /// (via [`Registry::merge`]) + queue/cache gauges. Identical to what
-    /// `GET /metrics` serves.
+    /// (via [`Registry::merge`]) + queue/cache/connection/job gauges.
+    /// Identical to what `GET /metrics` serves.
     pub fn metrics_snapshot(&self) -> Registry {
         rollup(&self.shared)
     }
@@ -228,17 +293,17 @@ impl Server {
         }
     }
 
-    /// Graceful shutdown: stop accepting, drain admitted connections, join
-    /// the acceptor and every worker. Returning means no server thread is
-    /// left and the port is released.
+    /// Graceful shutdown: stop accepting, drain admitted work, join the
+    /// acceptor and every worker. Returning means no pool or acceptor
+    /// thread is left and the port is released. (Detached event streamers
+    /// may outlive shutdown briefly; they own their sockets and exit when
+    /// their job ends or their client hangs up.)
     pub fn shutdown(mut self) {
         self.shutdown_impl();
     }
 
     fn shutdown_impl(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Wake the blocking accept() so the acceptor observes the flag.
-        let _ = TcpStream::connect(self.addr);
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
@@ -255,18 +320,151 @@ impl Drop for Server {
 }
 
 // ---------------------------------------------------------------------------
+// The acceptor: nonblocking accept + idle-socket polling
+// ---------------------------------------------------------------------------
+
+/// What one idle-table poll says about a socket.
+enum Poll {
+    /// No bytes yet, deadline not reached.
+    Wait,
+    /// Request bytes waiting — dispatch to the pool.
+    Ready,
+    /// Peer closed (half-closed counts: a read-shut client can never send
+    /// another request, so the socket is done).
+    Closed,
+    /// Idle past the keep-alive deadline.
+    Expired,
+}
+
+/// The acceptor loop: accept new sockets, re-admit keep-alive returns,
+/// peek-poll the idle table, dispatch ready connections, expire idle ones.
+/// Every socket in here is nonblocking; a connection only costs a worker
+/// once its request bytes have arrived.
+fn accept_loop(
+    listener: &TcpListener,
+    stop: &AtomicBool,
+    shared: &Shared,
+    returned: mpsc::Receiver<Conn>,
+    keepalive: Duration,
+) {
+    let responders = Arc::new(AtomicUsize::new(0));
+    let mut idle: Vec<(Conn, Instant)> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        // One clock read per tick: deadlines for this tick's admissions and
+        // the expiry sweep all use it (1 ms granularity is plenty).
+        let now = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — keep-alive idle deadlines are real time; no result bytes derive from this
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    shared.acceptor_reg.inc("serve.accepted", 1);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // socket dropped; nothing to track
+                    }
+                    idle.push((Conn::new(stream, shared.connections.clone()), now + keepalive));
+                    let open = shared.connections.load(Ordering::SeqCst).max(0) as f64;
+                    shared.acceptor_reg.set_max("serve.connections.peak", open);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    // Persistent accept errors (fd exhaustion) must back
+                    // off, not busy-spin a core.
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+        while let Ok(conn) = returned.try_recv() {
+            shared.acceptor_reg.inc("serve.keepalive.parked", 1);
+            idle.push((conn, now + keepalive));
+        }
+        let mut i = 0;
+        while i < idle.len() {
+            let verdict = match &idle[i].0.stream {
+                None => Poll::Closed,
+                Some(s) => match s.peek(&mut [0u8; 1]) {
+                    Ok(0) => Poll::Closed,
+                    Ok(_) => Poll::Ready,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        if now >= idle[i].1 {
+                            Poll::Expired
+                        } else {
+                            Poll::Wait
+                        }
+                    }
+                    Err(_) => Poll::Closed,
+                },
+            };
+            match verdict {
+                Poll::Wait => i += 1,
+                Poll::Closed => {
+                    shared.acceptor_reg.inc("serve.closed", 1);
+                    idle.swap_remove(i);
+                }
+                Poll::Expired => {
+                    shared.acceptor_reg.inc("serve.idle_expired", 1);
+                    idle.swap_remove(i);
+                }
+                Poll::Ready => {
+                    let (conn, _) = idle.swap_remove(i);
+                    if let Err(Work::Conn(conn)) = shared.queue.try_push(Work::Conn(conn)) {
+                        reject(conn, shared, &responders);
+                    }
+                }
+            }
+        }
+        std::thread::sleep(ACCEPT_TICK);
+    }
+    // Remaining idle sockets close here (their gauge guards drop).
+}
+
+/// Backpressure: reject with 503. The drain + write happen on a
+/// short-lived detached thread so a slow rejected client can never stall
+/// the accept loop — stalling it under overload would make the server
+/// reject work the draining queue could admit. The responders are bounded
+/// and spawn failure is non-fatal (a flood must not kill the acceptor);
+/// past the bound the connection is dropped, which is itself an
+/// unambiguous rejection.
+fn reject(conn: Conn, shared: &Shared, responders: &Arc<AtomicUsize>) {
+    shared.acceptor_reg.inc("serve.rejected", 1);
+    if responders.fetch_add(1, Ordering::SeqCst) < MAX_REJECT_RESPONDERS {
+        let done = responders.clone();
+        let spawned = std::thread::Builder::new().name("r2f2-reject".into()).spawn(move || {
+            reject_with_503(conn);
+            done.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            responders.fetch_sub(1, Ordering::SeqCst);
+            shared.acceptor_reg.inc("serve.rejected_dropped", 1);
+        }
+    } else {
+        responders.fetch_sub(1, Ordering::SeqCst);
+        shared.acceptor_reg.inc("serve.rejected_dropped", 1);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Request handling
 // ---------------------------------------------------------------------------
 
-fn respond(stream: &mut TcpStream, status: u16, extra: &[(&str, &str)], body: &str) {
-    let _ = http::write_response(stream, status, extra, "application/json", body.as_bytes());
+fn respond(stream: &mut TcpStream, status: u16, extra: &[(&str, &str)], body: &str, close: bool) {
+    let _ =
+        http::write_response_with(stream, status, extra, "application/json", body.as_bytes(), close);
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, msg: &str, close: bool) {
+    respond(stream, status, &[], &format!("{{\"error\": \"{}\"}}", escape(msg)), close);
 }
 
 /// Rejection path: drain the request (bounded by the parser's size limits,
 /// short timeouts), then answer 503. Draining first matters — closing a
 /// socket that still has unread received bytes sends RST, which would tear
 /// the 503 out of the client's receive buffer.
-fn reject_with_503(stream: TcpStream) {
+fn reject_with_503(mut conn: Conn) {
+    let Some(stream) = conn.stream.take() else { return };
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
     let mut reader = BufReader::new(stream);
@@ -283,10 +481,7 @@ fn reject_with_503(stream: TcpStream) {
         "application/json",
         b"{\"error\": \"job queue full\"}",
     );
-}
-
-fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) {
-    respond(stream, status, &[], &format!("{{\"error\": \"{}\"}}", escape(msg)));
+    // `conn` drops here: the connection gauge sees the rejection out.
 }
 
 /// Best-effort drain of unread request bytes before an error response.
@@ -308,72 +503,345 @@ fn drain_best_effort(stream: &TcpStream) {
     }
 }
 
-fn handle_connection(stream: TcpStream, shared: &Shared, reg: &Registry) {
-    // Connections are admitted before any bytes are read (the acceptor
-    // must stay non-blocking), so a client that connects and sends nothing
-    // holds a worker for this read window — keep it short. A full fix is
-    // a dedicated reader stage; known limitation, documented in
-    // DESIGN.md §12.
+/// Serve one dispatched connection: answer the request whose bytes woke
+/// it, keep answering while the client has pipelined more, then either
+/// close (client asked, or an error did) or park the socket back with the
+/// acceptor for the next keep-alive round.
+///
+/// The 2-second read deadline bounds what a byte-dribbling client can cost
+/// a worker *per request*; a client sending nothing costs only the
+/// acceptor's idle table (the §16 division of labor).
+fn handle_conn(mut conn: Conn, shared: &Shared, reg: &Registry) {
+    let Some(stream) = conn.stream.take() else { return };
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
     let mut reader = BufReader::new(stream);
-    let req = match http::read_request(&mut reader) {
-        Ok(r) => r,
-        Err(e) => {
-            reg.inc("serve.http.400", 1);
-            let mut stream = reader.into_inner();
-            drain_best_effort(&stream);
-            respond_error(&mut stream, 400, &e);
+    let mut served_here = 0u64;
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(e) => {
+                reg.inc("serve.http.400", 1);
+                let mut stream = reader.into_inner();
+                drain_best_effort(&stream);
+                respond_error(&mut stream, 400, &e, true);
+                return;
+            }
+        };
+        reg.inc("serve.requests", 1);
+        if served_here > 0 {
+            reg.inc("serve.keepalive.reuses", 1);
+        }
+        served_here += 1;
+        let close = req
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+
+        // The events route streams for the job's lifetime: it takes the
+        // socket over entirely (chunked, `connection: close`).
+        if let Some((id, Some("events"))) = job_path(&req.path) {
+            if req.method == "GET" {
+                conn.stream = Some(reader.into_inner());
+                handle_events(conn, id, shared, reg);
+                return;
+            }
+        }
+
+        route(&req, reader.get_mut(), shared, reg, close);
+        if close {
             return;
         }
-    };
-    let mut stream = reader.into_inner();
-    reg.inc("serve.requests", 1);
+        if !reader.buffer().is_empty() {
+            // The client pipelined: answer in order, same worker, no
+            // round-trip through the acceptor.
+            reg.inc("serve.pipelined", 1);
+            continue;
+        }
+        // Park the socket back with the acceptor until the next request.
+        let stream = reader.into_inner();
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        conn.stream = Some(stream);
+        let _ = shared.returns.send(conn); // acceptor gone ⇒ drop closes
+        return;
+    }
+}
+
+/// Dispatch one parsed request to its route.
+fn route(req: &http::Request, stream: &mut TcpStream, shared: &Shared, reg: &Registry, close: bool) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => respond(
-            &mut stream,
+            stream,
             200,
             &[],
             &format!("{{\"status\": \"ok\", \"scenarios\": {}}}", SCENARIOS.len()),
+            close,
         ),
-        ("GET", "/v1/scenarios") => respond(&mut stream, 200, &[], &scenarios_json()),
-        ("GET", "/metrics") => respond(&mut stream, 200, &[], &rollup(shared).to_json()),
-        ("POST", "/v1/run") => handle_run(&req.body, &mut stream, shared, reg),
+        ("GET", "/v1/scenarios") => respond(stream, 200, &[], &scenarios_json(), close),
+        ("GET", "/metrics") => respond(stream, 200, &[], &rollup(shared).to_json(), close),
+        ("POST", "/v1/run") => handle_run(&req.body, stream, shared, reg, close),
+        ("POST", "/v1/jobs") => handle_job_submit(&req.body, stream, shared, reg, close),
         (_, "/healthz" | "/v1/scenarios" | "/metrics") => {
             reg.inc("serve.http.405", 1);
-            respond_error(&mut stream, 405, "use GET");
+            respond_error(stream, 405, "use GET", close);
         }
-        (_, "/v1/run") => {
+        (_, "/v1/run" | "/v1/jobs") => {
             reg.inc("serve.http.405", 1);
-            respond_error(&mut stream, 405, "use POST");
+            respond_error(stream, 405, "use POST", close);
         }
-        (_, path) => {
-            reg.inc("serve.http.404", 1);
-            respond_error(&mut stream, 404, &format!("no route {path}"));
+        (method, path) => match job_path(path) {
+            Some((id, sub)) => handle_job_routes(method, id, sub, stream, shared, reg, close),
+            None => {
+                reg.inc("serve.http.404", 1);
+                respond_error(stream, 404, &format!("no route {path}"), close);
+            }
+        },
+    }
+}
+
+/// Split `/v1/jobs/<id>[/<sub>]` into `(id, sub)`; `None` for any other
+/// path (including `/v1/jobs` itself and empty ids).
+fn job_path(path: &str) -> Option<(&str, Option<&str>)> {
+    let rest = path.strip_prefix("/v1/jobs/")?;
+    match rest.split_once('/') {
+        None if rest.is_empty() => None,
+        None => Some((rest, None)),
+        Some((id, sub)) if !id.is_empty() && !sub.is_empty() => Some((id, Some(sub))),
+        Some(_) => None,
+    }
+}
+
+fn handle_job_submit(
+    body: &[u8],
+    stream: &mut TcpStream,
+    shared: &Shared,
+    reg: &Registry,
+    close: bool,
+) {
+    match shared.jobs.submit(body) {
+        Ok(id) => {
+            reg.inc("serve.jobs.submitted", 1);
+            // First epoch enqueued like a continuation: bypasses the cap
+            // (bounded by jobs_cap, which the submit above just enforced)
+            // so an accepted job is always scheduled.
+            let _ = shared.queue.push_unbounded(Work::Job(id.clone()));
+            let body = format!(
+                "{{\"id\": \"{id}\", \"status\": \"/v1/jobs/{id}\", \
+                 \"result\": \"/v1/jobs/{id}/result\", \"events\": \"/v1/jobs/{id}/events\"}}"
+            );
+            respond(stream, 202, &[("x-r2f2-job", id.as_str())], &body, close);
+        }
+        Err(SubmitError::Bad(e)) => {
+            reg.inc("serve.http.400", 1);
+            respond_error(stream, 400, &e, close);
+        }
+        Err(SubmitError::Full) => {
+            reg.inc("serve.jobs.rejected", 1);
+            respond(
+                stream,
+                503,
+                &[("retry-after", "1")],
+                "{\"error\": \"job store full\"}",
+                close,
+            );
         }
     }
 }
 
-fn handle_run(body: &[u8], stream: &mut TcpStream, shared: &Shared, reg: &Registry) {
+fn handle_job_routes(
+    method: &str,
+    id: &str,
+    sub: Option<&str>,
+    stream: &mut TcpStream,
+    shared: &Shared,
+    reg: &Registry,
+    close: bool,
+) {
+    let job = shared.jobs.get(id);
+    let not_found = |stream: &mut TcpStream, reg: &Registry| {
+        reg.inc("serve.http.404", 1);
+        respond_error(stream, 404, &format!("no job {id}"), close);
+    };
+    match (method, sub) {
+        ("GET", None) => match job {
+            Some(j) => respond(stream, 200, &[], &j.lock().unwrap().status_json(), close),
+            None => not_found(stream, reg),
+        },
+        ("GET", Some("result")) => match job {
+            Some(j) => {
+                let j = j.lock().unwrap();
+                if let Some(body) = &j.body {
+                    respond(stream, 200, &[("x-r2f2-job", id)], body, close);
+                } else if j.state == jobs::JobState::Failed {
+                    reg.inc("serve.http.500", 1);
+                    respond_error(stream, 500, j.error.as_deref().unwrap_or("job failed"), close);
+                } else {
+                    reg.inc("serve.http.409", 1);
+                    respond_error(
+                        stream,
+                        409,
+                        &format!("job {id} is {}", j.state.as_str()),
+                        close,
+                    );
+                }
+            }
+            None => not_found(stream, reg),
+        },
+        ("POST", Some("pause")) => match job {
+            Some(j) => match shared.jobs.pause(id) {
+                Ok(()) => {
+                    reg.inc("serve.jobs.paused", 1);
+                    respond(stream, 200, &[], &j.lock().unwrap().status_json(), close);
+                }
+                Err(e) => {
+                    reg.inc("serve.http.409", 1);
+                    respond_error(stream, 409, &e, close);
+                }
+            },
+            None => not_found(stream, reg),
+        },
+        ("POST", Some("resume")) => match job {
+            Some(j) => match shared.jobs.resume(id) {
+                Ok(needs_enqueue) => {
+                    reg.inc("serve.jobs.resumed", 1);
+                    if needs_enqueue {
+                        let _ = shared.queue.push_unbounded(Work::Job(id.to_string()));
+                    }
+                    respond(stream, 200, &[], &j.lock().unwrap().status_json(), close);
+                }
+                Err(e) => {
+                    reg.inc("serve.http.409", 1);
+                    respond_error(stream, 409, &e, close);
+                }
+            },
+            None => not_found(stream, reg),
+        },
+        (_, Some("events")) => {
+            // GET /events is consumed before routing; only wrong methods
+            // can land here.
+            reg.inc("serve.http.405", 1);
+            respond_error(stream, 405, "use GET", close);
+        }
+        (_, None | Some("result")) => {
+            reg.inc("serve.http.405", 1);
+            respond_error(stream, 405, "use GET", close);
+        }
+        (_, Some("pause" | "resume")) => {
+            reg.inc("serve.http.405", 1);
+            respond_error(stream, 405, "use POST", close);
+        }
+        (_, Some(other)) => {
+            reg.inc("serve.http.404", 1);
+            respond_error(stream, 404, &format!("no route /v1/jobs/{id}/{other}"), close);
+        }
+    }
+}
+
+/// `GET /v1/jobs/:id/events`: hand the socket to a detached streamer
+/// thread that follows the job's ndjson event log to its terminal state.
+/// Streamers are bounded by [`MAX_STREAMERS`] (503 beyond) so they can
+/// never exhaust threads, and they hold the `Conn` gauge guard for their
+/// whole lifetime, so `/metrics` counts streaming connections too.
+fn handle_events(mut conn: Conn, id: &str, shared: &Shared, reg: &Registry) {
+    let Some(mut stream) = conn.stream.take() else { return };
+    let Some(job) = shared.jobs.get(id) else {
+        reg.inc("serve.http.404", 1);
+        respond_error(&mut stream, 404, &format!("no job {id}"), true);
+        return;
+    };
+    if shared.streamers.fetch_add(1, Ordering::SeqCst) >= MAX_STREAMERS {
+        shared.streamers.fetch_sub(1, Ordering::SeqCst);
+        reg.inc("serve.streamers.rejected", 1);
+        respond(
+            &mut stream,
+            503,
+            &[("retry-after", "1")],
+            "{\"error\": \"too many event streams\"}",
+            true,
+        );
+        return;
+    }
+    reg.inc("serve.streams", 1);
+    conn.stream = Some(stream);
+    let streamers = shared.streamers.clone();
+    let spawned = std::thread::Builder::new().name("r2f2-stream".into()).spawn(move || {
+        stream_events(conn, job);
+        streamers.fetch_sub(1, Ordering::SeqCst);
+    });
+    if spawned.is_err() {
+        shared.streamers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The streamer body: chunked ndjson, one event per line, following the
+/// job's event log cursor until the job is terminal and fully flushed.
+/// Exits early if the client hangs up (detected by peek between polls).
+fn stream_events(mut conn: Conn, job: Arc<Mutex<jobs::Job>>) {
+    let Some(mut stream) = conn.stream.take() else { return };
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    // The read half is only peeked for EOF; a short timeout turns those
+    // peeks into cheap liveness checks.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(1)));
+    if http::write_chunked_head(&mut stream, 200, &[], "application/x-ndjson").is_err() {
+        return;
+    }
+    let mut cursor = 0usize;
+    loop {
+        let (batch, done) = {
+            let j = job.lock().unwrap();
+            (j.events_from(cursor).to_vec(), j.state.is_terminal())
+        };
+        cursor += batch.len();
+        for line in &batch {
+            let mut data = Vec::with_capacity(line.len() + 1);
+            data.extend_from_slice(line.as_bytes());
+            data.push(b'\n');
+            if http::write_chunk(&mut stream, &data).is_err() {
+                return;
+            }
+        }
+        if done {
+            // Terminal events are appended under the same lock that sets
+            // the state, so `done` implies the log above was complete.
+            break;
+        }
+        match stream.peek(&mut [0u8; 1]) {
+            Ok(0) => return, // client hung up
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return,
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let _ = http::finish_chunked(&mut stream);
+}
+
+fn handle_run(body: &[u8], stream: &mut TcpStream, shared: &Shared, reg: &Registry, close: bool) {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
         Err(_) => {
             reg.inc("serve.http.400", 1);
-            return respond_error(stream, 400, "body is not UTF-8");
+            return respond_error(stream, 400, "body is not UTF-8", close);
         }
     };
     let json = match parse_json(text) {
         Ok(j) => j,
         Err(e) => {
             reg.inc("serve.http.400", 1);
-            return respond_error(stream, 400, &format!("bad JSON: {e}"));
+            return respond_error(stream, 400, &format!("bad JSON: {e}"), close);
         }
     };
     let cfg = match ExperimentConfig::from_json(&json) {
         Ok(c) => c,
         Err(e) => {
             reg.inc("serve.http.400", 1);
-            return respond_error(stream, 400, &format!("bad config: {e}"));
+            return respond_error(stream, 400, &format!("bad config: {e}"), close);
         }
     };
     let (canonical, key) = cache::content_key(&cfg);
@@ -382,7 +850,7 @@ fn handle_run(body: &[u8], stream: &mut TcpStream, shared: &Shared, reg: &Regist
     reg.inc(if hit { "serve.run.hits" } else { "serve.run.misses" }, 1);
     let cache_header = if hit { "hit" } else { "miss" };
     let headers = [("x-r2f2-cache", cache_header), ("x-r2f2-key", key.as_str())];
-    respond(stream, 200, &headers, value.as_str());
+    respond(stream, 200, &headers, value.as_str(), close);
 }
 
 // ---------------------------------------------------------------------------
@@ -464,6 +932,17 @@ mod tests {
         c
     }
 
+    fn test_opts() -> ServeOptions {
+        ServeOptions {
+            port: 0,
+            workers: 2,
+            queue_cap: 8,
+            cache_cap: 8,
+            keepalive_ms: 5000,
+            jobs_cap: 8,
+        }
+    }
+
     #[test]
     fn outcome_json_is_deterministic_and_parseable() {
         let cfg = quick_cfg();
@@ -490,18 +969,76 @@ mod tests {
     }
 
     #[test]
+    fn job_path_splits_ids_and_subresources() {
+        assert_eq!(job_path("/v1/jobs/job-1"), Some(("job-1", None)));
+        assert_eq!(job_path("/v1/jobs/job-1/result"), Some(("job-1", Some("result"))));
+        assert_eq!(job_path("/v1/jobs/job-1/events"), Some(("job-1", Some("events"))));
+        assert_eq!(job_path("/v1/jobs"), None);
+        assert_eq!(job_path("/v1/jobs/"), None);
+        assert_eq!(job_path("/v1/jobs/job-1/"), None);
+        assert_eq!(job_path("/v1/run"), None);
+    }
+
+    #[test]
     fn server_starts_and_answers_healthz() {
-        let server = Server::start(ServeOptions {
-            port: 0,
-            workers: 2,
-            queue_cap: 8,
-            cache_cap: 8,
-        })
-        .unwrap();
+        let server = Server::start(test_opts()).unwrap();
         let resp = http::request(server.addr(), "GET", "/healthz", b"").unwrap();
         assert_eq!(resp.status, 200);
         let j = parse_json(&resp.text()).unwrap();
         assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_on_one_connection() {
+        let server = Server::start(test_opts()).unwrap();
+        let mut client = http::Client::connect(server.addr()).unwrap();
+        for _ in 0..3 {
+            let resp = client.send("GET", "/healthz", b"").unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.header("connection"), Some("keep-alive"));
+        }
+        let snap = server.metrics_snapshot();
+        assert!(
+            snap.counter("serve.keepalive.reuses") + snap.counter("serve.keepalive.parked") >= 2,
+            "reuse must show up in metrics"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn job_submitted_over_http_completes_and_matches_v1_run() {
+        let server = Server::start(test_opts()).unwrap();
+        let body = b"{\"app\": \"heat\", \"backend\": \"fixed:E5M10\", \
+                      \"heat\": {\"n\": 17, \"steps\": 24, \"dt\": 9.7e-4}}";
+        let accepted = http::request(server.addr(), "POST", "/v1/jobs", body).unwrap();
+        assert_eq!(accepted.status, 202);
+        let id = parse_json(&accepted.text())
+            .unwrap()
+            .get("id")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let result_path = format!("/v1/jobs/{id}/result");
+        let deadline = 4000; // polls
+        let mut body_out = None;
+        for _ in 0..deadline {
+            let r = http::request(server.addr(), "GET", &result_path, b"").unwrap();
+            if r.status == 200 {
+                body_out = Some(r.text());
+                break;
+            }
+            assert_eq!(r.status, 409, "only 'not finished' is acceptable while polling");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let direct = http::request(server.addr(), "POST", "/v1/run", body).unwrap();
+        assert_eq!(direct.status, 200);
+        assert_eq!(
+            body_out.expect("job finished"),
+            direct.text(),
+            "job result must be byte-identical to /v1/run"
+        );
         server.shutdown();
     }
 }

@@ -53,6 +53,27 @@ impl<T> Bounded<T> {
         Ok(())
     }
 
+    /// Re-admit a continuation at the back of the queue, bypassing the
+    /// capacity cap. For job-epoch continuations (`server::jobs`): each
+    /// running job has at most one continuation in flight and the job store
+    /// is itself bounded, so the bypass is bounded by `jobs_cap` — a
+    /// continuation must never be *lost* to a full queue. Back-of-queue
+    /// placement is equally deliberate: already-admitted connections are
+    /// served between epochs, which is what keeps a long job queryable,
+    /// pausable and streamable on a single-worker pool instead of
+    /// monopolizing it until done. The delay per epoch is bounded by the
+    /// queue cap (new connections beyond it are rejected, not queued).
+    /// Fails only after shutdown.
+    pub fn push_unbounded(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.shutdown {
+            return Err(item);
+        }
+        s.queue.push_back(item);
+        self.ready.notify_one();
+        Ok(())
+    }
+
     /// Block until an item is available. Returns `None` once the queue has
     /// been shut down **and** every admitted item has been drained — so a
     /// graceful shutdown finishes the work it accepted.
@@ -200,6 +221,18 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_unbounded_bypasses_the_cap_but_waits_its_turn() {
+        let q: Bounded<u32> = Bounded::new(1);
+        assert!(q.try_push(1).is_ok());
+        assert_eq!(q.try_push(2), Err(2), "cap still binds ordinary pushes");
+        assert!(q.push_unbounded(3).is_ok(), "continuations bypass the cap");
+        assert_eq!(q.pop(), Some(1), "admitted work is served before the continuation");
+        assert_eq!(q.pop(), Some(3));
+        q.shutdown();
+        assert_eq!(q.push_unbounded(4), Err(4), "nothing re-enters after shutdown");
     }
 
     #[test]

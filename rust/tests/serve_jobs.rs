@@ -1,0 +1,291 @@
+//! Async job API contract suite (DESIGN.md §16): the checkpointed-epoch
+//! executor driven end-to-end over HTTP.
+//!
+//! The load-bearing property is the same one `serve_loopback.rs` pins for
+//! `/v1/run`: **a job's fetched result is byte-identical to a direct
+//! `run_experiment` of the same config** — through epoch chunking, event
+//! streaming, pause/resume parking and an injected worker panic resumed
+//! from the checkpoint. Plus the operational contracts: the job store's
+//! live cap answers 503, progress is queryable while the run computes,
+//! and the event stream terminates exactly when the job does.
+//!
+//! The server runs `coordinator::default_workers()` threads, so the CI
+//! `jobs-smoke` matrix exercises this suite at `R2F2_WORKERS=1` (every
+//! epoch and every HTTP request interleave on one worker) and `=4`
+//! (continuations migrate between workers). Tests print machine-greppable
+//! `SERVE |` rows for the CI job summary.
+
+use r2f2::config::{parse_json, ExperimentConfig};
+use r2f2::coordinator::{default_workers, run_experiment};
+use r2f2::metrics::Registry;
+use r2f2::server::{http, outcome_json, ServeOptions, Server};
+use std::time::Duration;
+
+fn start(jobs_cap: usize) -> Server {
+    Server::start(ServeOptions {
+        port: 0,
+        workers: default_workers(),
+        queue_cap: 32,
+        cache_cap: 32,
+        keepalive_ms: 5000,
+        jobs_cap,
+    })
+    .expect("server binds port 0")
+}
+
+/// What the job's result must byte-equal, computed directly. Job-only
+/// sections (`job`, `fault`) are ignored by the config parser, so the
+/// same body works for both paths.
+fn expected_response(body: &str) -> String {
+    let cfg = ExperimentConfig::from_json(&parse_json(body).unwrap()).unwrap();
+    outcome_json(&run_experiment(&cfg, &Registry::new()))
+}
+
+/// Submit a job, return its id (asserting the 202 contract).
+fn submit(addr: std::net::SocketAddr, body: &str) -> String {
+    let resp = http::request(addr, "POST", "/v1/jobs", body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 202, "{}", resp.text());
+    let j = parse_json(&resp.text()).unwrap();
+    let id = j.get("id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(resp.header("x-r2f2-job"), Some(id.as_str()));
+    assert_eq!(
+        j.get("result").unwrap().as_str(),
+        Some(format!("/v1/jobs/{id}/result").as_str()),
+        "submit echoes the resource links"
+    );
+    id
+}
+
+/// Poll `GET /result` until 200 (409 is the only acceptable interim).
+fn poll_result(addr: std::net::SocketAddr, id: &str) -> http::Response {
+    let path = format!("/v1/jobs/{id}/result");
+    for _ in 0..4000 {
+        let r = http::request(addr, "GET", &path, b"").unwrap();
+        if r.status == 200 {
+            return r;
+        }
+        assert_eq!(r.status, 409, "only 'not finished' is acceptable while polling: {}", r.text());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("job {id} never finished");
+}
+
+#[test]
+fn streamed_job_completes_and_result_is_byte_identical() {
+    let server = start(8);
+    let addr = server.addr();
+    // 48 steps in epochs of 10 → 5 epochs (the last one short).
+    let body = r#"{"title": "stream-test", "app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 33, "steps": 48, "dt": 2.4e-4},
+                   "job": {"epoch_steps": 10}}"#;
+    let id = submit(addr, body);
+
+    // Follow the event stream to the job's terminal state: chunked
+    // ndjson on a dedicated streamer thread, ending when the job does.
+    let mut c = http::Client::connect(addr).unwrap();
+    c.send_only("GET", &format!("/v1/jobs/{id}/events"), b"", false).unwrap();
+    let (status, headers) = c.recv_stream_head().unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        headers.iter().any(|(k, v)| k == "transfer-encoding" && v.contains("chunked")),
+        "events stream chunked: {headers:?}"
+    );
+    let mut streamed = String::new();
+    while let Some(chunk) = c.recv_chunk().unwrap() {
+        streamed.push_str(&String::from_utf8(chunk).unwrap());
+    }
+    let lines: Vec<&str> = streamed.lines().collect();
+    assert!(lines[0].contains("\"event\": \"submitted\""), "{streamed}");
+    let epochs = lines.iter().filter(|l| l.contains("\"event\": \"epoch\"")).count();
+    assert_eq!(epochs, 5, "48 steps / 10 per epoch = 5 epochs:\n{streamed}");
+    assert!(lines.last().unwrap().contains("\"event\": \"done\""), "{streamed}");
+    // Per-epoch telemetry carries the adaptive scheduler's observables.
+    let epoch_line = lines.iter().find(|l| l.contains("\"event\": \"epoch\"")).unwrap();
+    for field in ["steps_done", "muls", "overflows", "underflows", "min_abs", "max_abs"] {
+        assert!(epoch_line.contains(field), "epoch event missing {field}: {epoch_line}");
+    }
+    // Every event line is well-formed JSON.
+    for l in &lines {
+        assert!(parse_json(l).is_ok(), "unparseable event: {l}");
+    }
+
+    // The stream ended ⇒ the job is done ⇒ the result is ready *now*.
+    let status = http::request(addr, "GET", &format!("/v1/jobs/{id}"), b"").unwrap();
+    let sj = parse_json(&status.text()).unwrap();
+    assert_eq!(sj.get("state").unwrap().as_str(), Some("done"));
+    assert_eq!(sj.get("steps_done").unwrap().as_usize(), Some(48));
+    let result = http::request(addr, "GET", &format!("/v1/jobs/{id}/result"), b"").unwrap();
+    assert_eq!(result.status, 200);
+    assert_eq!(
+        result.text(),
+        expected_response(body),
+        "chunked-epoch job result must byte-equal the direct run"
+    );
+    println!(
+        "SERVE | jobs stream | {} workers | {epochs} epochs, {} events | byte-identical ok |",
+        default_workers(),
+        lines.len()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn crash_resumed_job_is_byte_identical_over_http() {
+    let server = start(8);
+    let addr = server.addr();
+    // The worker owning epoch 2 panics; the next epoch replays from the
+    // epoch-1 checkpoint and the job still lands on identical bytes.
+    let body = r#"{"app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 33, "steps": 48, "dt": 2.4e-4},
+                   "job": {"epoch_steps": 10},
+                   "fault": {"panic_at_epoch": 2}}"#;
+    let id = submit(addr, body);
+    let result = poll_result(addr, &id);
+    assert_eq!(
+        result.text(),
+        expected_response(body),
+        "crash-resumed job result must byte-equal the direct run"
+    );
+
+    let status = http::request(addr, "GET", &format!("/v1/jobs/{id}"), b"").unwrap();
+    let sj = parse_json(&status.text()).unwrap();
+    assert_eq!(sj.get("attempts").unwrap().as_usize(), Some(1), "exactly one crash survived");
+
+    // The full event log (the stream of a terminal job returns at once)
+    // records the resume point.
+    let mut c = http::Client::connect(addr).unwrap();
+    c.send_only("GET", &format!("/v1/jobs/{id}/events"), b"", false).unwrap();
+    let (st, _) = c.recv_stream_head().unwrap();
+    assert_eq!(st, 200);
+    let mut streamed = String::new();
+    while let Some(chunk) = c.recv_chunk().unwrap() {
+        streamed.push_str(&String::from_utf8(chunk).unwrap());
+    }
+    assert!(
+        streamed.contains("\"event\": \"crash_resumed\""),
+        "resume must be visible in the event log:\n{streamed}"
+    );
+    let snap = server.metrics_snapshot();
+    assert_eq!(snap.counter("serve.jobs.panics"), 1);
+    assert_eq!(snap.counter("serve.jobs.crash_resumes"), 1);
+    println!(
+        "SERVE | jobs crash-resume | {} workers | 1 panic survived | byte-identical ok |",
+        default_workers()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn pause_parks_and_resume_finishes_over_http() {
+    let server = start(8);
+    let addr = server.addr();
+    // Long enough that the pause lands mid-run: ~1.5M quantized muls in
+    // 1000 four-step epochs (tens of ms in release, ~a second in debug).
+    let body = r#"{"app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 129, "dt": 0.0000152587890625, "steps": 4000},
+                   "job": {"epoch_steps": 4}}"#;
+    let id = submit(addr, body);
+
+    let paused = http::request(addr, "POST", &format!("/v1/jobs/{id}/pause"), b"").unwrap();
+    assert_eq!(paused.status, 200, "{}", paused.text());
+    assert_eq!(
+        parse_json(&paused.text()).unwrap().get("state").unwrap().as_str(),
+        Some("paused")
+    );
+    // Any in-flight epoch finishes and parks; after that, progress freezes.
+    std::thread::sleep(Duration::from_millis(150));
+    let s1 = http::request(addr, "GET", &format!("/v1/jobs/{id}"), b"").unwrap().text();
+    std::thread::sleep(Duration::from_millis(150));
+    let s2 = http::request(addr, "GET", &format!("/v1/jobs/{id}"), b"").unwrap().text();
+    let steps = |s: &str| parse_json(s).unwrap().get("steps_done").unwrap().as_usize().unwrap();
+    assert_eq!(steps(&s1), steps(&s2), "a paused job must not advance: {s1} vs {s2}");
+    assert!(steps(&s1) < 4000, "pause must land before completion");
+
+    let resumed = http::request(addr, "POST", &format!("/v1/jobs/{id}/resume"), b"").unwrap();
+    assert_eq!(resumed.status, 200, "{}", resumed.text());
+    let result = poll_result(addr, &id);
+    assert_eq!(
+        result.text(),
+        expected_response(body),
+        "paused-and-resumed job result must byte-equal the direct run"
+    );
+    // Terminal jobs answer 409 to further pause/resume.
+    let r = http::request(addr, "POST", &format!("/v1/jobs/{id}/pause"), b"").unwrap();
+    assert_eq!(r.status, 409);
+    println!(
+        "SERVE | jobs pause/resume | {} workers | parked at step {} of 4000 | byte-identical ok |",
+        default_workers(),
+        steps(&s1)
+    );
+    server.shutdown();
+}
+
+#[test]
+fn job_store_cap_answers_503_and_unknown_jobs_404() {
+    let server = start(2);
+    let addr = server.addr();
+    // Two slow live jobs fill the cap=2 store.
+    let slow = r#"{"app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 129, "dt": 0.0000152587890625, "steps": 4000},
+                   "job": {"epoch_steps": 1}}"#;
+    let a = submit(addr, slow);
+    let b = submit(addr, slow);
+    assert_ne!(a, b);
+    let full = http::request(addr, "POST", "/v1/jobs", slow.as_bytes()).unwrap();
+    assert_eq!(full.status, 503, "live cap must reject: {}", full.text());
+    assert!(full.text().contains("job store full"));
+
+    // Unknown ids are 404 on every job route.
+    for (method, path) in [
+        ("GET", "/v1/jobs/job-999".to_string()),
+        ("GET", "/v1/jobs/job-999/result".to_string()),
+        ("GET", "/v1/jobs/job-999/events".to_string()),
+        ("POST", "/v1/jobs/job-999/pause".to_string()),
+        ("POST", "/v1/jobs/job-999/resume".to_string()),
+    ] {
+        let r = http::request(addr, method, &path, b"").unwrap();
+        assert_eq!(r.status, 404, "{method} {path}: {}", r.text());
+    }
+    // Wrong methods are 405, not 404.
+    let r = http::request(addr, "GET", &format!("/v1/jobs/{a}/pause"), b"").unwrap();
+    assert_eq!(r.status, 405);
+    let r = http::request(addr, "POST", &format!("/v1/jobs/{a}/result"), b"").unwrap();
+    assert_eq!(r.status, 405);
+    println!("SERVE | jobs limits | cap 2 | 503 at capacity, 404/405 contracts ok |");
+    server.shutdown();
+}
+
+#[test]
+fn status_is_queryable_while_the_job_computes() {
+    let server = start(8);
+    let addr = server.addr();
+    let body = r#"{"app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 129, "dt": 0.0000152587890625, "steps": 4000},
+                   "job": {"epoch_steps": 4}}"#;
+    let id = submit(addr, body);
+    // Even at R2F2_WORKERS=1, status answers *during* the run, because
+    // epoch continuations queue behind admitted connections.
+    let mut mid_run = false;
+    for _ in 0..2000 {
+        let s = http::request(addr, "GET", &format!("/v1/jobs/{id}"), b"").unwrap();
+        assert_eq!(s.status, 200);
+        let j = parse_json(&s.text()).unwrap();
+        let done = j.get("steps_done").unwrap().as_usize().unwrap();
+        let state = j.get("state").unwrap().as_str().unwrap().to_string();
+        if state == "done" {
+            break;
+        }
+        if done > 0 {
+            mid_run = true; // a progress reading strictly between 0 and done
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let result = poll_result(addr, &id);
+    assert_eq!(result.text(), expected_response(body));
+    assert!(mid_run, "progress must be observable mid-run");
+    println!(
+        "SERVE | jobs progress | {} workers | mid-run status ok | byte-identical ok |",
+        default_workers()
+    );
+    server.shutdown();
+}

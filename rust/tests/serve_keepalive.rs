@@ -1,0 +1,198 @@
+//! Keep-alive edge-case suite (DESIGN.md §16): the acceptor/worker
+//! division of labor under connection reuse, pipelining, half-closes and
+//! silent clients.
+//!
+//! The §12 server burned a worker thread per connection for its whole
+//! lifetime; the §16 acceptor owns every idle socket and a worker is only
+//! charged while request bytes are actually being answered. These tests
+//! pin the edges of that contract: pipelined requests answered in order
+//! on one socket, half-closed sockets reaped by the acceptor (not a
+//! worker), silent connections expired at the keep-alive deadline, a
+//! mid-header staller bounded by the per-request read deadline, and
+//! keep-alive responses byte-identical to one-shot ones modulo the
+//! `connection:` header.
+
+use r2f2::config::{parse_json, ExperimentConfig};
+use r2f2::coordinator::run_experiment;
+use r2f2::metrics::Registry;
+use r2f2::server::{http, outcome_json, ServeOptions, Server};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn start(keepalive_ms: u64) -> Server {
+    Server::start(ServeOptions {
+        port: 0,
+        workers: 2,
+        queue_cap: 8,
+        cache_cap: 8,
+        keepalive_ms,
+        jobs_cap: 8,
+    })
+    .expect("server binds port 0")
+}
+
+fn expected_response(body: &str) -> String {
+    let cfg = ExperimentConfig::from_json(&parse_json(body).unwrap()).unwrap();
+    outcome_json(&run_experiment(&cfg, &Registry::new()))
+}
+
+/// Poll the metrics rollup until `counter` reaches `want` (bounded).
+fn await_counter(server: &Server, counter: &str, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if server.metrics_snapshot().counter(counter) >= want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{counter} never reached {want} (at {})",
+            server.metrics_snapshot().counter(counter)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order_on_one_socket() {
+    let server = start(5000);
+    let addr = server.addr();
+    let run_a = r#"{"app": "heat", "backend": "fixed:E5M10",
+                    "heat": {"n": 17, "dt": 0.0009765625, "steps": 10}}"#;
+    let run_b = r#"{"app": "heat", "backend": "f32",
+                    "heat": {"n": 17, "dt": 0.0009765625, "steps": 10}}"#;
+
+    // Queue three requests before reading any response; HTTP/1.1 requires
+    // in-order answers, and distinct bodies prove the order is real.
+    let mut c = http::Client::connect(addr).unwrap();
+    c.send_only("POST", "/v1/run", run_a.as_bytes(), false).unwrap();
+    c.send_only("POST", "/v1/run", run_b.as_bytes(), false).unwrap();
+    c.send_only("GET", "/healthz", b"", false).unwrap();
+
+    let ra = c.recv().unwrap();
+    assert_eq!(ra.status, 200);
+    assert_eq!(ra.text(), expected_response(run_a), "first answer is the first request's");
+    let rb = c.recv().unwrap();
+    assert_eq!(rb.status, 200);
+    assert_eq!(rb.text(), expected_response(run_b), "second answer is the second request's");
+    let rh = c.recv().unwrap();
+    assert_eq!(rh.status, 200);
+    assert!(rh.text().contains("\"status\": \"ok\""));
+    for r in [&ra, &rb, &rh] {
+        assert_eq!(r.header("connection"), Some("keep-alive"));
+    }
+
+    // All three rode one TCP connection, whichever mix of same-worker
+    // pipelining and acceptor re-dispatch carried them.
+    let snap = server.metrics_snapshot();
+    assert_eq!(snap.counter("serve.accepted"), 1, "one connection for three requests");
+    assert!(
+        snap.counter("serve.pipelined")
+            + snap.counter("serve.keepalive.reuses")
+            + snap.counter("serve.keepalive.parked")
+            >= 2,
+        "reuse must be visible in the metrics"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn half_closed_sockets_are_reaped_by_the_acceptor() {
+    let server = start(5000);
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    // The acceptor's peek sees EOF — no worker is charged, no deadline
+    // needs to pass.
+    await_counter(&server, "serve.closed", 1);
+    // The server closed its side too: the read half drains to EOF.
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let mut sink = Vec::new();
+    assert_eq!(s.read_to_end(&mut sink).unwrap_or(0), 0, "no bytes for a dead connection");
+    server.shutdown();
+}
+
+#[test]
+fn idle_connections_expire_at_the_keepalive_deadline() {
+    let server = start(50); // 50 ms keep-alive window
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    // Send nothing: the connection sits in the acceptor's idle table and
+    // must be expired by the deadline sweep, costing no worker.
+    await_counter(&server, "serve.idle_expired", 1);
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let mut sink = Vec::new();
+    assert_eq!(s.read_to_end(&mut sink).unwrap_or(0), 0, "expired socket is closed");
+
+    // A served-then-silent connection expires the same way.
+    let mut c = http::Client::connect(server.addr()).unwrap();
+    let r = c.send("GET", "/healthz", b"").unwrap();
+    assert_eq!(r.status, 200);
+    await_counter(&server, "serve.idle_expired", 2);
+    server.shutdown();
+}
+
+#[test]
+fn a_mid_header_staller_is_bounded_by_the_read_deadline() {
+    let server = start(5000);
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    // Dribble half a request line and stall. The first bytes wake the
+    // acceptor and charge a worker — whose 2-second read deadline then
+    // bounds the damage: a 400, not a captured thread.
+    s.write_all(b"GET /heal").unwrap();
+    s.flush().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let t0 = Instant::now();
+    let resp = http::read_response(&mut std::io::BufReader::new(&s));
+    let waited = t0.elapsed();
+    match resp {
+        Ok(r) => assert_eq!(r.status, 400, "stalled request must be answered 400"),
+        Err(_) => {} // server may also just close after the deadline
+    }
+    assert!(
+        waited < Duration::from_secs(8),
+        "the staller must be cut off by the read deadline, waited {waited:?}"
+    );
+    // The worker survived; the server still answers.
+    let r = http::request(server.addr(), "GET", "/healthz", b"").unwrap();
+    assert_eq!(r.status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_responses_are_byte_identical_to_one_shot() {
+    let server = start(5000);
+    let addr = server.addr();
+    let body = r#"{"app": "heat", "backend": "fixed:E5M10",
+                   "heat": {"n": 17, "dt": 0.0009765625, "steps": 10}}"#;
+
+    let one_shot = http::request(addr, "POST", "/v1/run", body.as_bytes()).unwrap();
+    assert_eq!(one_shot.status, 200);
+    assert_eq!(one_shot.header("connection"), Some("close"));
+
+    let mut c = http::Client::connect(addr).unwrap();
+    let kept = c.send("POST", "/v1/run", body.as_bytes()).unwrap();
+    assert_eq!(kept.status, 200);
+    assert_eq!(kept.header("connection"), Some("keep-alive"));
+    assert_eq!(
+        kept.body, one_shot.body,
+        "the payload must not depend on the connection's disposition"
+    );
+    // Same again on the same socket (a cache hit now): still identical.
+    let again = c.send("POST", "/v1/run", body.as_bytes()).unwrap();
+    assert_eq!(again.header("x-r2f2-cache"), Some("hit"));
+    assert_eq!(again.body, one_shot.body);
+    server.shutdown();
+}
+
+#[test]
+fn connection_close_is_honored_mid_keep_alive() {
+    let server = start(5000);
+    let mut c = http::Client::connect(server.addr()).unwrap();
+    let r = c.send("GET", "/healthz", b"").unwrap();
+    assert_eq!(r.header("connection"), Some("keep-alive"));
+    c.send_only("GET", "/healthz", b"", true).unwrap();
+    let r = c.recv().unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("connection"), Some("close"), "the close request is the last answered");
+    assert!(c.recv().is_err(), "the server must close after honoring connection: close");
+    server.shutdown();
+}

@@ -19,8 +19,15 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn start(workers: usize, queue_cap: usize, cache_cap: usize) -> Server {
-    Server::start(ServeOptions { port: 0, workers, queue_cap, cache_cap })
-        .expect("server binds port 0")
+    Server::start(ServeOptions {
+        port: 0,
+        workers,
+        queue_cap,
+        cache_cap,
+        keepalive_ms: 5000,
+        jobs_cap: 8,
+    })
+    .expect("server binds port 0")
 }
 
 /// One small config per registry scenario (mixed backends and modes).
@@ -234,6 +241,35 @@ fn serving_limits_scale_with_shards() {
     let text = resp.text();
     assert!(text.contains("\"n\": 4000001"), "served field must be the full grid");
     assert!(text.contains("\"rel_err_vs_f64\": 0,"), "f64 run matches its own reference");
+    server.shutdown();
+}
+
+#[test]
+fn job_submission_enforces_the_same_serving_limits_as_v1_run() {
+    // Regression: the async job layer must reject a hostile config at
+    // POST /v1/jobs time (400, nothing enqueued), not at execution time —
+    // an admitted 4-million-node job would otherwise tie up a worker
+    // allocating ~10⁸ bytes before the limit check fired. Same grid as
+    // the /v1/run case above; the sharded variant is legitimate and must
+    // still be admitted asynchronously (202).
+    let server = start(2, 8, 8);
+    let addr = server.addr();
+    let over = r#"{"app": "heat", "backend": "f64",
+                   "heat": {"n": 4000001, "dt": 3e-14, "steps": 1}}"#;
+    let resp = http::request(addr, "POST", "/v1/jobs", over.as_bytes()).unwrap();
+    assert_eq!(resp.status, 400, "over-limit job must be rejected at submit time");
+    assert!(resp.text().contains("serving limit"), "{}", resp.text());
+
+    // Nothing was enqueued: the store reports zero live jobs.
+    let m = http::request(addr, "GET", "/metrics", b"").unwrap();
+    let j = parse_json(&m.text()).unwrap();
+    let live = j.get("gauges").and_then(|g| g.get("serve.jobs.live")).and_then(|v| v.as_f64());
+    assert_eq!(live, Some(0.0), "rejected job must not occupy a store slot");
+
+    let sharded = r#"{"app": "heat", "backend": "f64", "shards": 4,
+                      "heat": {"n": 4000001, "dt": 3e-14, "steps": 1}}"#;
+    let resp = http::request(addr, "POST", "/v1/jobs", sharded.as_bytes()).unwrap();
+    assert_eq!(resp.status, 202, "sharded equivalent must be admitted: {}", resp.text());
     server.shutdown();
 }
 
