@@ -4,6 +4,7 @@
 use crate::config::{BackendSpec, ExperimentConfig};
 use crate::metrics::Registry;
 use crate::pde::{self, decomp, swe2d, QuantMode};
+use crate::trace::{Clock, Collector, Value};
 use std::time::Instant;
 
 /// Outcome of one simulation experiment.
@@ -124,6 +125,62 @@ pub fn run_experiment(cfg: &ExperimentConfig, metrics: &Registry) -> Outcome {
     }
 }
 
+/// [`run_experiment`] with a `run.start`/`run.done` span pair on lane
+/// `run/<app>` when a trace collector is given. Tracing cannot perturb
+/// the run: the events are recorded strictly before and after the solver
+/// executes, their content is built from the deterministic outcome
+/// (logical clock: final step count and mul counter), and the wall
+/// duration attached to `run.done` reuses `Outcome.wall` — the already
+/// sanctioned display-only measurement above, excluded from trace
+/// content like it is from the cache body.
+pub fn run_experiment_traced(
+    cfg: &ExperimentConfig,
+    metrics: &Registry,
+    trace: Option<&Collector>,
+) -> Outcome {
+    let lane = format!("run/{}", cfg.app);
+    if let Some(c) = trace {
+        c.record(
+            &lane,
+            "run.start",
+            Clock::zero(),
+            vec![
+                ("app".into(), Value::Str(cfg.app.clone())),
+                ("backend".into(), Value::Str(cfg.backend.name())),
+                ("shards".into(), Value::U64(cfg.shards.max(1) as u64)),
+            ],
+        );
+    }
+    let outcome = run_experiment(cfg, metrics);
+    if let Some(c) = trace {
+        let steps = match cfg.app.as_str() {
+            "heat" => cfg.heat.steps,
+            "swe" => cfg.swe.steps,
+            "advection" => cfg.advection.steps,
+            "wave" => cfg.wave.steps,
+            _ => 0,
+        };
+        let (widen, narrow) = outcome.adjustments.unwrap_or((0, 0));
+        let (overflows, underflows) = outcome.range_events.unwrap_or((0, 0));
+        c.record_wall(
+            &lane,
+            "run.done",
+            Clock { step: steps as u64, epoch: 0, muls: outcome.muls },
+            vec![
+                ("backend".into(), Value::Str(outcome.backend.clone())),
+                ("rel_err_vs_f64".into(), Value::F64(outcome.rel_err_vs_f64)),
+                ("widen".into(), Value::U64(widen)),
+                ("narrow".into(), Value::U64(narrow)),
+                ("overflows".into(), Value::U64(overflows)),
+                ("underflows".into(), Value::U64(underflows)),
+                ("n".into(), Value::U64(outcome.field.len() as u64)),
+            ],
+            outcome.wall.as_nanos() as u64,
+        );
+    }
+    outcome
+}
+
 /// Standard comparison set for an app: f64, f32, fixed half, R2F2-16.
 pub fn comparison_set(app: &str) -> Vec<ExperimentConfig> {
     use crate::r2f2core::R2f2Config;
@@ -226,6 +283,29 @@ mod tests {
             assert_eq!(bits(&o.field), bits(&o1.field), "shards={shards}");
             assert_eq!(o.rel_err_vs_f64.to_bits(), o1.rel_err_vs_f64.to_bits());
         }
+    }
+
+    #[test]
+    fn traced_run_records_spans_without_perturbing_the_outcome() {
+        let m = Registry::new();
+        let cfg = quick_heat("fixed:E5M10");
+        let plain = run_experiment(&cfg, &m);
+        let c = Collector::new();
+        let traced = run_experiment_traced(&cfg, &m, Some(&c));
+        let bits = |f: &[f64]| f.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&traced.field), bits(&plain.field), "tracing must not touch results");
+        assert_eq!(traced.muls, plain.muls);
+        let events = c.snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "run.start");
+        assert_eq!(events[1].name, "run.done");
+        assert!(events[0].lane.starts_with("run/heat"));
+        assert_eq!(events[1].clock.muls, traced.muls);
+        assert!(events[1].wall_ns.is_some(), "run.done carries the sanctioned wall attachment");
+        assert!(
+            run_experiment_traced(&cfg, &m, None).muls == plain.muls,
+            "None collector is the untraced path"
+        );
     }
 
     #[test]

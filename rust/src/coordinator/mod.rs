@@ -7,7 +7,7 @@
 pub mod job;
 pub mod pool;
 
-pub use job::{comparison_set, run_experiment, Outcome};
+pub use job::{comparison_set, run_experiment, run_experiment_traced, Outcome};
 pub use pool::{default_workers, parallel_map};
 
 use crate::config::ExperimentConfig;

@@ -49,6 +49,14 @@
 //!   substrates (TOML-subset config, counters, CSV/ASCII-plot emitters,
 //!   argument parsing) built from scratch for this offline environment.
 //!
+//! * [`trace`] — deterministic structured tracing + the precision
+//!   profiler (DESIGN.md §17): span/event records stamped with logical
+//!   clocks (step/epoch/mul counters, never wall time on content paths),
+//!   per-worker bounded ring collectors that merge order-invariantly,
+//!   ndjson export under `r2f2-trace/1`, and `r2f2 profile` — a
+//!   RAPTOR-style pilot that recommends a per-scenario starting format
+//!   (predicted RMSE + modeled datapath cost) the adaptive scheduler can
+//!   seed its ladder from.
 //! * [`audit`] — the static conformance pass (DESIGN.md §15): `r2f2 audit`
 //!   lexes the tree (comments/strings stripped) and enforces the
 //!   determinism and bit-identity disciplines as source-level rules —
@@ -81,3 +89,4 @@ pub mod runtime;
 pub mod server;
 pub mod softfloat;
 pub mod sweep;
+pub mod trace;

@@ -1,10 +1,14 @@
 //! `r2f2` — the Layer-3 command-line driver.
 //!
 //! Subcommands map one-to-one onto the paper's experiments:
-//!   run       one simulation experiment (TOML config or flags)
+//!   run       one simulation experiment (TOML config or flags); --trace
+//!             exports the run's span records as r2f2-trace/1 ndjson
 //!   compare   f64 / f32 / half / R2F2 side by side (Figs 1, 7, 8)
 //!   analyze   data-distribution study (Fig 2)
-//!   profile   precision-configuration profiling + Eq.(1) check (Fig 3)
+//!   profile   precision-configuration profiling + Eq.(1) check (Fig 3);
+//!             with --scenario, the RAPTOR-style pilot: per-rung range
+//!             telemetry → recommended starting format with predicted
+//!             RMSE and modeled datapath cost (ROADMAP item 4)
 //!   sweep     multiplication-accuracy sweep (Fig 6)
 //!   table1    resource + latency model (Table 1)
 //!   pipeline  three-layer run: AOT artifacts via PJRT (the e2e path)
@@ -80,14 +84,20 @@ USAGE: r2f2 <command> [options]
 
 COMMANDS
   run       --config FILE | --app heat|swe|advection|wave --backend SPEC
-            [--mode mul-only|full] [--n N --steps S] — run one experiment
-            vs the f64 reference
+            [--mode mul-only|full] [--n N --steps S] [--trace FILE] — run
+            one experiment vs the f64 reference; --trace writes the run's
+            deterministic span records (r2f2-trace/1 ndjson)
   compare   --app heat|swe|advection|wave — f64/f32/half/R2F2 comparison
             table (Figs 1/7/8)
   scenarios [--scenario NAME] [--profile] — list the scenario registry;
             with --profile, per-scenario fixed-format precision profiles
   analyze   [--n N --steps S] — Fig 2 data-distribution study
   profile   [--pairs P] — Fig 3 precision profiling + Eq.(1) check
+            --scenario NAME|all [--out FILE] — RAPTOR-style pilot over the
+            scenario registry: per-rung range telemetry, recommended
+            starting format + predicted rel-err + modeled LUT cost
+            (r2f2-profile-plan/1); the adaptive scheduler can seed its
+            ladder from the plan
   sweep     [--intervals I --pairs P] — Fig 6 accuracy sweep
   table1    — Table 1 resource & latency model vs paper
   pipeline  [--artifacts DIR --steps S --backend r2f2|e5m10|f32] — run the
@@ -95,8 +105,10 @@ COMMANDS
   serve     [--port P] [--workers W] [--queue-cap Q] [--cache-cap C]
             [--keepalive-ms MS] [--jobs-cap J] — the simulation service:
             POST /v1/run, async POST /v1/jobs (+ status/result/events/
-            pause/resume), GET /v1/scenarios, /healthz, /metrics
-            (DESIGN.md §12/§16); R2F2_WORKERS overrides the pool size
+            pause/resume), POST /v1/profile, GET /v1/scenarios, /v1/trace,
+            /healthz, /metrics (JSON, or Prometheus text under
+            Accept: text/plain) (DESIGN.md §12/§16/§17); R2F2_WORKERS
+            overrides the pool size
   bench-serve [--clients N] [--requests M] [--workers W] [--cache-cap C]
             [--rates R1,R2,...] [--smoke] [--out FILE] — start an
             in-process server and drive it from N loopback clients
@@ -161,10 +173,16 @@ fn experiment_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
 }
 
 fn cmd_run(args: &mut Args) -> Result<(), String> {
+    let trace_path = args.get("trace");
     let cfg = experiment_from_args(args)?;
     let metrics = Registry::new();
-    let outcome = coordinator::run_experiment(&cfg, &metrics);
+    let collector = trace_path.as_ref().map(|_| r2f2::trace::Collector::new());
+    let outcome = coordinator::run_experiment_traced(&cfg, &metrics, collector.as_ref());
     println!("{}", Coordinator::outcome_table(std::slice::from_ref(&outcome)));
+    if let (Some(path), Some(c)) = (&trace_path, &collector) {
+        std::fs::write(path, c.to_ndjson()).map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote {path} ({} events, schema r2f2-trace/1)", c.len());
+    }
     if args.switch("verbose") {
         let ds: Vec<f64> = outcome.field.iter().step_by(outcome.field.len().div_ceil(64)).copied().collect();
         println!("{}", ascii_plot::line_plot("final field", &[("u", &ds)], 64, 12));
@@ -268,6 +286,11 @@ fn cmd_analyze(args: &mut Args) -> Result<(), String> {
 }
 
 fn cmd_profile(args: &mut Args) -> Result<(), String> {
+    // `--scenario` selects the RAPTOR-style pilot (ROADMAP item 4); the
+    // original Fig 3 study stays the default path.
+    if let Some(which) = args.get("scenario") {
+        return cmd_profile_pilot(&which, args);
+    }
     let pairs: usize = args.get_parse("pairs", 1000usize).map_err(|e| e.to_string())?;
     let configs = config_profile::sixteen_bit_family();
     let mut t = Table::new(vec!["range", "best (profiled)", "avg err", "Eq.(1) says", "agree?"]);
@@ -284,6 +307,88 @@ fn cmd_profile(args: &mut Args) -> Result<(), String> {
         ]);
     }
     println!("Fig 3 / §3.2: profiled optimum vs the intuition formula\n{}", t.render());
+    Ok(())
+}
+
+/// `r2f2 profile --scenario NAME|all [--out FILE]`: the precision
+/// profiler + recommendation engine. Runs the short pilot
+/// (`trace::profile`), prints each plan as a table plus greppable
+/// `PROFILE |` summary rows, and optionally writes the
+/// `r2f2-profile-plan/1` JSON artifact.
+fn cmd_profile_pilot(which: &str, args: &mut Args) -> Result<(), String> {
+    use r2f2::pde::scenario;
+    use r2f2::trace::profile;
+    let out = args.get("out");
+    let plans = if which == "all" {
+        profile::run_all_pilots(None)
+    } else {
+        match scenario::find(which) {
+            Some(spec) => vec![profile::run_pilot(spec, None)],
+            None => {
+                let names: Vec<&str> = SCENARIOS.iter().map(|s| s.name).collect();
+                return Err(format!(
+                    "unknown scenario `{which}` (have: {}, or `all`)",
+                    names.join(", ")
+                ));
+            }
+        }
+    };
+    for plan in &plans {
+        let mut t = Table::new(vec![
+            "rung",
+            "format",
+            "rel-err vs f64",
+            "oflow",
+            "uflow",
+            "modeled LUT cost",
+            "clean",
+        ]);
+        for r in &plan.rungs {
+            t.row(vec![
+                r.rung.to_string(),
+                r.format.to_string(),
+                format!("{:.3e}", r.rel_err),
+                r.overflows.to_string(),
+                r.underflows.to_string(),
+                format!("{:.3e}", r.modeled_cost_lut),
+                if r.clean { "yes".to_string() } else { "no".to_string() },
+            ]);
+        }
+        let rec = plan.recommended();
+        println!("{}: pilot precision plan (Quick, mul-only)\n{}", plan.scenario, t.render());
+        println!(
+            "{}: seed the adaptive ladder at rung {} ({}) — predicted rel-err {:.3e}, \
+             modeled cost {:.3e}; f64 field occupies {} octaves (90% bulk: {})\n",
+            plan.scenario,
+            plan.seed_rung,
+            rec.format,
+            rec.rel_err,
+            rec.modeled_cost_lut,
+            plan.occupied_octaves,
+            plan.bulk90_octaves
+        );
+        // Machine-greppable summary row (the CI trace-smoke job tables these).
+        println!(
+            "PROFILE | {} | seed rung {} ({}) | rel-err {:.3e} | cost {:.3e} | \
+             {} octaves (bulk90 {}) |",
+            plan.scenario,
+            plan.seed_rung,
+            rec.format,
+            rec.rel_err,
+            rec.modeled_cost_lut,
+            plan.occupied_octaves,
+            plan.bulk90_octaves
+        );
+    }
+    if let Some(path) = out {
+        let doc = if plans.len() == 1 {
+            plans[0].to_json()
+        } else {
+            profile::plans_json(&plans)
+        };
+        std::fs::write(&path, doc).map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote {path} (schema r2f2-profile-plan/1)");
+    }
     Ok(())
 }
 
@@ -409,7 +514,8 @@ fn cmd_serve(args: &mut Args) -> Result<(), String> {
     })?;
     println!("r2f2 serve: listening on http://{}", server.addr());
     println!("  endpoints  POST /v1/run · POST /v1/jobs · GET /v1/jobs/:id[/result|/events]");
-    println!("             GET /v1/scenarios · GET /healthz · GET /metrics");
+    println!("             POST /v1/profile · GET /v1/scenarios · GET /v1/trace · GET /healthz");
+    println!("             GET /metrics (JSON; Prometheus text under Accept: text/plain)");
     println!(
         "  pool       workers={workers} queue-cap={queue_cap} cache-cap={cache_cap} \
          keepalive-ms={keepalive_ms} jobs-cap={jobs_cap}"

@@ -125,10 +125,27 @@ impl Registry {
 
     /// Percentiles (nearest-rank, in nanoseconds) of a timer's retained
     /// samples at the given fractions — `percentiles("t", &[0.5, 0.99])`
-    /// is (p50, p99). `None` if the timer has no samples. Sample order
-    /// never matters, so percentiles over a [`Registry::merge`] rollup are
-    /// invariant to merge order; past `TIMER_SAMPLE_CAP` observations the
-    /// window is recent-biased rather than complete.
+    /// is (p50, p99).
+    ///
+    /// Window semantics (what a dashboard must know before reading p99):
+    ///
+    /// * **Empty timer** (never observed, or merged from empty sources) →
+    ///   `None`, never a fabricated zero.
+    /// * **Single sample** → that sample at *every* fraction, p0 through
+    ///   p100 (nearest-rank over one element).
+    /// * The window holds at most `TIMER_SAMPLE_CAP` (= 4096) samples
+    ///   **per source registry**. Up to the cap it is complete; from
+    ///   observation `cap + 1` on, each new sample overwrites ring-style
+    ///   (slot `(count - 1) % cap`), so exactly at the boundary the
+    ///   oldest sample is the first to go and the window becomes
+    ///   **recent-biased** rather than complete. `count`/`mean`/`max`
+    ///   from [`Registry::timer_summary`] stay exact forever.
+    /// * Sample order never matters, so percentiles over a
+    ///   [`Registry::merge`] rollup are invariant to merge order (a
+    ///   rollup window is bounded by sources × cap).
+    ///
+    /// [`Registry::to_prometheus`] surfaces the held window size per timer
+    /// (`*_ns_window`) so the bias is visible where the quantiles are read.
     pub fn percentiles(&self, name: &str, fracs: &[f64]) -> Option<Vec<f64>> {
         let g = self.inner.lock().unwrap();
         let t = g.timers.get(name)?;
@@ -137,6 +154,14 @@ impl Registry {
         }
         let sorted = t.sorted_samples();
         Some(fracs.iter().map(|&p| crate::bench_util::percentile(&sorted, p * 100.0)).collect())
+    }
+
+    /// `true` when the two handles share one underlying registry. The
+    /// server uses this to map a worker's registry handle back to its
+    /// slot (and so to the worker's trace collector) without comparing
+    /// contents.
+    pub fn same_instance(&self, other: &Registry) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
     }
 
     /// Fold another registry into this one: counters **sum**, gauges take
@@ -232,6 +257,149 @@ impl Registry {
             .collect();
         parts.push(format!("\"timers\": {{{}}}", timers.join(", ")));
         format!("{{{}}}", parts.join(", "))
+    }
+
+    /// Prometheus text exposition (format 0.0.4) — what `GET /metrics`
+    /// serves under `Accept: text/plain` while JSON stays the default.
+    ///
+    /// Mapping: every metric is prefixed `r2f2_` and its name sanitized to
+    /// the Prometheus charset `[a-zA-Z0-9_:]`. When sanitizing mangled the
+    /// name, the original rides along as a `raw="..."` label (escaped with
+    /// the exposition-format dual of `json_mini::escape`: `\\`, `\"`,
+    /// `\n`) — so hostile names stay round-trippable and two names that
+    /// sanitize identically stay distinguishable under one `# TYPE` line.
+    /// Counters and gauges map directly; each timer becomes a summary
+    /// family `<name>_ns` (quantile 0.5/0.99 over the bounded recent-biased
+    /// window, exact `_sum`/`_count`) plus a `<name>_ns_window` gauge
+    /// surfacing how many samples the quantiles were computed over — a
+    /// dashboard reading p99 can see when the window, not the history, is
+    /// speaking (see [`Registry::percentiles`]).
+    pub fn to_prometheus(&self) -> String {
+        // One lock for the whole exposition; quantiles are computed inline
+        // (calling self.percentiles here would re-take the lock).
+        let g = self.inner.lock().unwrap();
+        let mut out = format!(
+            "# r2f2 metrics exposition; timer quantiles use a bounded recent-biased \
+             window (cap {TIMER_SAMPLE_CAP} samples per source), *_ns_window is the held sample count\n"
+        );
+        let families = |names: Vec<&String>| {
+            let mut fam: BTreeMap<String, Vec<&String>> = BTreeMap::new();
+            for k in names {
+                fam.entry(prom_sanitize(k)).or_default().push(k);
+            }
+            fam
+        };
+        for (family, members) in families(g.counters.keys().collect()) {
+            out.push_str(&format!("# TYPE {family} counter\n"));
+            for k in members {
+                out.push_str(&format!(
+                    "{family}{} {}\n",
+                    prom_raw_label(k),
+                    g.counters[k]
+                ));
+            }
+        }
+        for (family, members) in families(g.gauges.keys().collect()) {
+            out.push_str(&format!("# TYPE {family} gauge\n"));
+            for k in members {
+                out.push_str(&format!(
+                    "{family}{} {}\n",
+                    prom_raw_label(k),
+                    prom_f64(g.gauges[k])
+                ));
+            }
+        }
+        for (family, members) in families(g.timers.keys().collect()) {
+            let ns = format!("{family}_ns");
+            out.push_str(&format!("# TYPE {ns} summary\n"));
+            out.push_str(&format!("# TYPE {ns}_window gauge\n"));
+            for k in members {
+                let t = &g.timers[k];
+                let sorted = t.sorted_samples();
+                let raw = if prom_sanitize(k) == format!("r2f2_{k}") {
+                    String::new()
+                } else {
+                    format!("raw=\"{}\"", prom_label_escape(k))
+                };
+                let with = |extra: &str| -> String {
+                    match (raw.is_empty(), extra.is_empty()) {
+                        (true, true) => String::new(),
+                        (true, false) => format!("{{{extra}}}"),
+                        (false, true) => format!("{{{raw}}}"),
+                        (false, false) => format!("{{{raw},{extra}}}"),
+                    }
+                };
+                for (q, pct) in [("0.5", 50.0), ("0.99", 99.0)] {
+                    let v = if sorted.is_empty() {
+                        f64::NAN
+                    } else {
+                        crate::bench_util::percentile(&sorted, pct)
+                    };
+                    out.push_str(&format!(
+                        "{ns}{} {}\n",
+                        with(&format!("quantile=\"{q}\"")),
+                        prom_f64(v)
+                    ));
+                }
+                out.push_str(&format!("{ns}_sum{} {}\n", with(""), t.sum_ns));
+                out.push_str(&format!("{ns}_count{} {}\n", with(""), t.count));
+                out.push_str(&format!("{ns}_window{} {}\n", with(""), t.samples.len()));
+            }
+        }
+        out
+    }
+}
+
+/// Sanitize a metric name to the Prometheus charset and namespace it:
+/// `r2f2_` prefix, every byte outside `[a-zA-Z0-9_:]` replaced with `_`.
+fn prom_sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("r2f2_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// `{raw="<escaped original>"}` when sanitizing changed the name, empty
+/// otherwise.
+fn prom_raw_label(name: &str) -> String {
+    if prom_sanitize(name) == format!("r2f2_{name}") {
+        String::new()
+    } else {
+        format!("{{raw=\"{}\"}}", prom_label_escape(name))
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+fn prom_label_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Prometheus sample-value rendering (unlike JSON, the text format has
+/// literal spellings for non-finite values).
+fn prom_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
     }
 }
 
@@ -449,5 +617,181 @@ mod tests {
         let za = r.find("counter a").unwrap();
         let zz = r.find("counter z").unwrap();
         assert!(za < zz, "BTreeMap ordering expected");
+    }
+
+    #[test]
+    fn same_instance_is_handle_identity_not_content_equality() {
+        let a = Registry::new();
+        let b = Registry::new();
+        assert!(a.same_instance(&a.clone()));
+        assert!(!a.same_instance(&b), "distinct registries, even both empty");
+    }
+
+    /// Minimal parser for the exposition's sample lines:
+    /// `name{label="value"} number` → (name, Option<raw label>, value).
+    /// Un-escapes the label the way a Prometheus scraper would, so the
+    /// test proves hostile names *round-trip*, not just "don't crash".
+    fn parse_exposition(text: &str) -> Vec<(String, Option<String>, f64)> {
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            let (name, raw) = match head.split_once('{') {
+                None => (head.to_string(), None),
+                Some((name, rest)) => {
+                    let labels = rest.strip_suffix('}').expect("closed label set");
+                    let raw = labels.split("raw=\"").nth(1).map(|tail| {
+                        // The value runs to the closing unescaped quote.
+                        let mut s = String::new();
+                        let mut chars = tail.chars();
+                        while let Some(c) = chars.next() {
+                            match c {
+                                '"' => break,
+                                '\\' => match chars.next() {
+                                    Some('n') => s.push('\n'),
+                                    Some(other) => s.push(other),
+                                    None => {}
+                                },
+                                other => s.push(other),
+                            }
+                        }
+                        s
+                    });
+                    (name.to_string(), raw)
+                }
+            };
+            let v = match value {
+                "NaN" => f64::NAN,
+                "+Inf" => f64::INFINITY,
+                "-Inf" => f64::NEG_INFINITY,
+                n => n.parse().expect("numeric sample value"),
+            };
+            out.push((name, raw, v));
+        }
+        out
+    }
+
+    #[test]
+    fn prometheus_hostile_names_roundtrip() {
+        let m = Registry::new();
+        m.inc("quo\"te", 1);
+        m.inc("back\\slash", 2);
+        m.set("new\nline", 2.5);
+        m.set("dotted.ok", f64::INFINITY);
+        m.observe_ns("t\tab", 10);
+        let text = m.to_prometheus();
+        let samples = parse_exposition(&text);
+        let find = |raw: &str| {
+            samples
+                .iter()
+                .find(|(_, r, _)| r.as_deref() == Some(raw))
+                .unwrap_or_else(|| panic!("no sample with raw label {raw:?}"))
+        };
+        assert_eq!(find("quo\"te").2, 1.0);
+        assert_eq!(find("back\\slash").2, 2.0);
+        assert_eq!(find("new\nline").2, 2.5);
+        assert_eq!(find("dotted.ok").2, f64::INFINITY);
+        // Mangled names still expose under the sanitized family name.
+        assert!(find("quo\"te").0.starts_with("r2f2_quo_te"));
+        // The timer summary carries its raw label on every series.
+        let timer_lines: Vec<_> =
+            samples.iter().filter(|(_, r, _)| r.as_deref() == Some("t\tab")).collect();
+        assert_eq!(timer_lines.len(), 5, "2 quantiles + sum + count + window");
+        // A name containing a newline cannot forge extra sample lines:
+        // every non-comment line still parsed as exactly one sample above,
+        // and none of them starts with the smuggled text.
+        assert!(text.lines().all(|l| l.starts_with('#') || l.starts_with("r2f2_")));
+    }
+
+    #[test]
+    fn prometheus_groups_colliding_names_under_one_type_line() {
+        let m = Registry::new();
+        // Both sanitize to r2f2_cache_hits: one family, one TYPE line,
+        // two samples kept distinguishable by the raw label.
+        m.inc("cache.hits", 1);
+        m.inc("cache_hits", 2);
+        // A colon is legal in the exposition charset and survives as-is.
+        m.inc("cache:hits", 3);
+        let text = m.to_prometheus();
+        let type_lines: Vec<_> = text.lines().filter(|l| l.starts_with("# TYPE")).collect();
+        assert_eq!(type_lines.len(), 2, "one family per distinct sanitized name");
+        assert_eq!(
+            text.matches("# TYPE r2f2_cache_hits counter").count(),
+            1,
+            "colliding names must not duplicate the TYPE line"
+        );
+        assert!(text.contains("# TYPE r2f2_cache:hits counter"));
+        assert!(text.contains("r2f2_cache_hits{raw=\"cache.hits\"} 1"));
+        assert!(text.contains("r2f2_cache_hits 2\n"));
+        assert!(text.contains("r2f2_cache:hits 3\n"));
+    }
+
+    #[test]
+    fn prometheus_clean_names_have_no_labels_and_json_stays_untouched() {
+        let m = Registry::new();
+        m.inc("serve_requests", 3);
+        m.set("rmse", 0.5);
+        m.observe_ns("step", 100);
+        m.observe_ns("step", 300);
+        let text = m.to_prometheus();
+        assert!(text.contains("# TYPE r2f2_serve_requests counter\n"));
+        assert!(text.contains("r2f2_serve_requests 3\n"));
+        assert!(text.contains("r2f2_rmse 0.5\n"));
+        assert!(text.contains("r2f2_step_ns{quantile=\"0.5\"} "));
+        assert!(text.contains("r2f2_step_ns{quantile=\"0.99\"} "));
+        assert!(text.contains("r2f2_step_ns_sum 400\n"));
+        assert!(text.contains("r2f2_step_ns_count 2\n"));
+        assert!(text.contains("r2f2_step_ns_window 2\n"), "window size is surfaced");
+        // The exposition is a second rendering, not a change to the first:
+        // the JSON body existing clients parse keeps its exact shape.
+        let parsed = crate::config::parse_json(&m.to_json()).unwrap();
+        let t = parsed.get("timers").unwrap().get("step").unwrap();
+        assert_eq!(t.get("count").unwrap().as_usize(), Some(2));
+        assert!(t.get("window").is_none(), "window stays out of the JSON shape");
+    }
+
+    #[test]
+    fn percentile_window_exact_cap_boundary() {
+        let m = Registry::new();
+        // Exactly at the cap the window is still complete: p0 is the very
+        // first observation.
+        for i in 1..=TIMER_SAMPLE_CAP as u64 {
+            m.observe_ns("t", i);
+        }
+        assert_eq!(
+            m.percentiles("t", &[0.0, 1.0]).unwrap(),
+            vec![1.0, TIMER_SAMPLE_CAP as f64]
+        );
+        // One past the cap, the ring overwrites slot (count-1) % cap = 0 —
+        // the oldest sample is the first casualty and the window turns
+        // recent-biased, while count stays exact.
+        m.observe_ns("t", TIMER_SAMPLE_CAP as u64 + 1);
+        assert_eq!(
+            m.percentiles("t", &[0.0, 1.0]).unwrap(),
+            vec![2.0, TIMER_SAMPLE_CAP as f64 + 1.0]
+        );
+        let (count, _, max) = m.timer_summary("t").unwrap();
+        assert_eq!(count, TIMER_SAMPLE_CAP + 1);
+        assert_eq!(max, TIMER_SAMPLE_CAP as u64 + 1);
+        // The exposition's window gauge reports the cap, telling the
+        // reader its quantiles describe the last `cap` samples only.
+        let text = m.to_prometheus();
+        assert!(text.contains(&format!("r2f2_t_ns_window {TIMER_SAMPLE_CAP}\n")));
+    }
+
+    #[test]
+    fn prometheus_empty_timer_exposes_nan_quantiles() {
+        // A timer family that was merged in with zero samples must not
+        // fabricate a 0 latency; the text format can say NaN.
+        let m = Registry::new();
+        let empty = Registry::new();
+        empty.inner.lock().unwrap().timers.insert("t".into(), Timer::default());
+        m.merge(&empty);
+        let text = m.to_prometheus();
+        assert!(text.contains("r2f2_t_ns{quantile=\"0.5\"} NaN\n"));
+        assert!(text.contains("r2f2_t_ns_count 0\n"));
+        assert!(text.contains("r2f2_t_ns_window 0\n"));
     }
 }

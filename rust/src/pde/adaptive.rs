@@ -142,7 +142,11 @@ pub struct AdaptivePolicy {
     /// Formats ordered narrow → wide. The scheduler moves along this
     /// ladder one rung at a time.
     pub ladder: Vec<FpFormat>,
-    /// Starting rung index into `ladder`.
+    /// Starting rung index into `ladder`. Cold starts default to 0
+    /// (narrowest, probing upward); `trace::profile::ProfilePlan::
+    /// seeded_policy` re-seeds this from a pilot run instead
+    /// (profile-guided adaptation, ROADMAP item 4) — the committed
+    /// trajectory is unchanged either way, only the probing cost moves.
     pub start_rung: usize,
     /// Timesteps per epoch (the telemetry/decision granularity).
     pub epoch_len: usize,

@@ -306,6 +306,32 @@ pub fn request(
     read_response(&mut r)
 }
 
+/// [`request`] plus caller-supplied extra request headers — what content
+/// negotiation needs (e.g. `Accept: text/plain` against `GET /metrics`).
+pub fn request_with_headers(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<Response, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| format!("timeout: {e}"))?;
+    let mut w = &stream;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\n");
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", body.len()));
+    w.write_all(head.as_bytes()).map_err(|e| format!("send: {e}"))?;
+    w.write_all(body).map_err(|e| format!("send: {e}"))?;
+    w.flush().map_err(|e| format!("send: {e}"))?;
+    let mut r = BufReader::new(&stream);
+    read_response(&mut r)
+}
+
 /// A keep-alive client: one TCP connection carrying many requests, with
 /// optional pipelining ([`Client::send_only`] several, then [`Client::recv`]
 /// in order). The write half and the buffered read half are the same

@@ -36,7 +36,9 @@
 //! | `POST /v1/jobs/:id/pause` · `/resume` | park / continue at epoch boundaries |
 //! | `GET /v1/scenarios` | the [`SCENARIOS`] registry listing |
 //! | `GET /healthz` | liveness probe |
-//! | `GET /metrics` | merged per-worker [`Registry`] rollup + queue/cache/connection/job gauges |
+//! | `GET /metrics` | merged per-worker [`Registry`] rollup + queue/cache/connection/job gauges. JSON by default; Prometheus text exposition when the `Accept` header asks for `text/plain` |
+//! | `GET /v1/trace` | merged per-worker [`trace::Collector`] rollup as `r2f2-trace/1` ndjson (request/job lifecycle spans on logical clocks; wall durations attached, excluded from trace *content*) |
+//! | `POST /v1/profile` | `{"scenario": "<name>"\|"all"}` → RAPTOR-style pilot ([`trace::profile`]): per-rung range telemetry and a recommended starting format with predicted RMSE + modeled datapath cost |
 //!
 //! HTTP/1.1 keep-alive with in-order pipelining: a worker keeps answering
 //! as long as the client has already-buffered requests, then parks the
@@ -64,6 +66,7 @@ use crate::coordinator::{self, run_experiment};
 use crate::metrics::Registry;
 use crate::pde::scenario::SCENARIOS;
 use crate::pde::QuantMode;
+use crate::trace::{profile, Clock, Collector, Value};
 use cache::ResultCache;
 use jobs::{EpochOutcome, JobStore, SubmitError};
 use pool::{Bounded, WorkerPool};
@@ -173,6 +176,33 @@ struct Shared {
     /// `/metrics` route can roll up the whole pool, not just the worker
     /// that happens to serve the request.
     worker_regs: Vec<Registry>,
+    /// One trace collector per worker, indexed like `worker_regs` (a
+    /// worker finds its collector by registry handle identity,
+    /// [`trace_for`]); `GET /v1/trace` merges them order-invariantly.
+    traces: Vec<Collector>,
+}
+
+/// The trace collector belonging to the worker whose registry is `reg`.
+/// Falls back to slot 0 for callers outside the pool (tests driving
+/// handlers directly).
+fn trace_for<'a>(shared: &'a Shared, reg: &Registry) -> &'a Collector {
+    shared
+        .worker_regs
+        .iter()
+        .position(|r| r.same_instance(reg))
+        .map_or(&shared.traces[0], |i| &shared.traces[i])
+}
+
+/// Merge every per-worker trace collector into one snapshot — the
+/// [`Collector::merge`] dual of [`rollup`]. Export order is canonical
+/// (lane, seq, content), so the bytes don't depend on worker count or
+/// merge order.
+fn trace_rollup(shared: &Shared) -> Collector {
+    let all = Collector::new();
+    for t in &shared.traces {
+        all.merge(t);
+    }
+    all
 }
 
 /// The full metrics rollup over shared state: acceptor counters + every
@@ -230,6 +260,7 @@ impl Server {
             streamers: Arc::new(AtomicUsize::new(0)),
             acceptor_reg: Registry::new(),
             worker_regs: worker_regs.clone(),
+            traces: (0..opts.workers.max(1)).map(|_| Collector::new()).collect(),
         });
 
         let pool = {
@@ -237,7 +268,36 @@ impl Server {
             let handler = move |work: Work, reg: &Registry| match work {
                 Work::Conn(conn) => handle_conn(conn, &shared, reg),
                 Work::Job(id) => {
-                    if jobs::run_epoch(&shared.jobs, &id, reg) == EpochOutcome::Continue {
+                    let outcome = jobs::run_epoch(&shared.jobs, &id, reg);
+                    // The epoch span's logical clock is the job's own
+                    // checkpoint counters — no wall time on this record.
+                    let clock = shared
+                        .jobs
+                        .get(&id)
+                        .map(|j| {
+                            let j = j.lock().unwrap();
+                            Clock {
+                                step: j.steps_done as u64,
+                                epoch: j.epochs_done as u64,
+                                muls: 0,
+                            }
+                        })
+                        .unwrap_or_default();
+                    let outcome_name = match outcome {
+                        EpochOutcome::Continue => "continue",
+                        EpochOutcome::Terminal => "terminal",
+                        EpochOutcome::Idle => "idle",
+                    };
+                    trace_for(&shared, reg).record(
+                        "server/jobs",
+                        "job.epoch",
+                        clock,
+                        vec![
+                            ("id".into(), Value::Str(id.clone())),
+                            ("outcome".into(), Value::Str(outcome_name.into())),
+                        ],
+                    );
+                    if outcome == EpochOutcome::Continue {
                         // Continuations bypass the cap but queue behind
                         // admitted connections; see `Bounded::push_unbounded`
                         // for why that is both bounded and fair. Failure
@@ -280,6 +340,12 @@ impl Server {
     /// Identical to what `GET /metrics` serves.
     pub fn metrics_snapshot(&self) -> Registry {
         rollup(&self.shared)
+    }
+
+    /// Merged trace-collector rollup over every worker — identical to
+    /// what `GET /v1/trace` exports.
+    pub fn trace_snapshot(&self) -> Collector {
+        trace_rollup(&self.shared)
     }
 
     /// Block on the acceptor thread — the `r2f2 serve` foreground mode
@@ -454,6 +520,12 @@ fn respond(stream: &mut TcpStream, status: u16, extra: &[(&str, &str)], body: &s
         http::write_response_with(stream, status, extra, "application/json", body.as_bytes(), close);
 }
 
+/// [`respond`] with a non-JSON content type (the Prometheus exposition
+/// and the trace ndjson export).
+fn respond_as(stream: &mut TcpStream, status: u16, content_type: &str, body: &str, close: bool) {
+    let _ = http::write_response_with(stream, status, &[], content_type, body.as_bytes(), close);
+}
+
 fn respond_error(stream: &mut TcpStream, status: u16, msg: &str, close: bool) {
     respond(stream, status, &[], &format!("{{\"error\": \"{}\"}}", escape(msg)), close);
 }
@@ -549,7 +621,18 @@ fn handle_conn(mut conn: Conn, shared: &Shared, reg: &Registry) {
             }
         }
 
+        let t0 = Instant::now(); // r2f2-audit: allow(wall-clock-quarantine) — request-span wall duration is telemetry attached outside the deterministic trace content; no result bytes derive from it
         route(&req, reader.get_mut(), shared, reg, close);
+        trace_for(shared, reg).record_wall(
+            "server/http",
+            "http.request",
+            Clock::zero(),
+            vec![
+                ("method".into(), Value::Str(req.method.clone())),
+                ("path".into(), Value::Str(req.path.clone())),
+            ],
+            t0.elapsed().as_nanos() as u64,
+        );
         if close {
             return;
         }
@@ -581,14 +664,39 @@ fn route(req: &http::Request, stream: &mut TcpStream, shared: &Shared, reg: &Reg
             close,
         ),
         ("GET", "/v1/scenarios") => respond(stream, 200, &[], &scenarios_json(), close),
-        ("GET", "/metrics") => respond(stream, 200, &[], &rollup(shared).to_json(), close),
+        ("GET", "/metrics") => {
+            // Content negotiation: the JSON body existing clients parse is
+            // the default and stays byte-identical; a scraper asking for
+            // text/plain gets the Prometheus exposition instead.
+            let wants_text =
+                req.header("accept").map(|v| v.contains("text/plain")).unwrap_or(false);
+            if wants_text {
+                respond_as(
+                    stream,
+                    200,
+                    "text/plain; version=0.0.4",
+                    &rollup(shared).to_prometheus(),
+                    close,
+                );
+            } else {
+                respond(stream, 200, &[], &rollup(shared).to_json(), close);
+            }
+        }
+        ("GET", "/v1/trace") => respond_as(
+            stream,
+            200,
+            "application/x-ndjson",
+            &trace_rollup(shared).to_ndjson(),
+            close,
+        ),
         ("POST", "/v1/run") => handle_run(&req.body, stream, shared, reg, close),
         ("POST", "/v1/jobs") => handle_job_submit(&req.body, stream, shared, reg, close),
-        (_, "/healthz" | "/v1/scenarios" | "/metrics") => {
+        ("POST", "/v1/profile") => handle_profile(&req.body, stream, shared, reg, close),
+        (_, "/healthz" | "/v1/scenarios" | "/metrics" | "/v1/trace") => {
             reg.inc("serve.http.405", 1);
             respond_error(stream, 405, "use GET", close);
         }
-        (_, "/v1/run" | "/v1/jobs") => {
+        (_, "/v1/run" | "/v1/jobs" | "/v1/profile") => {
             reg.inc("serve.http.405", 1);
             respond_error(stream, 405, "use POST", close);
         }
@@ -624,6 +732,12 @@ fn handle_job_submit(
     match shared.jobs.submit(body) {
         Ok(id) => {
             reg.inc("serve.jobs.submitted", 1);
+            trace_for(shared, reg).record(
+                "server/jobs",
+                "job.submitted",
+                Clock::zero(),
+                vec![("id".into(), Value::Str(id.clone()))],
+            );
             // First epoch enqueued like a continuation: bypasses the cap
             // (bounded by jobs_cap, which the submit above just enforced)
             // so an accepted job is always scheduled.
@@ -820,6 +934,60 @@ fn stream_events(mut conn: Conn, job: Arc<Mutex<jobs::Job>>) {
         std::thread::sleep(Duration::from_millis(5));
     }
     let _ = http::finish_chunked(&mut stream);
+}
+
+/// `POST /v1/profile`: run the RAPTOR-style pilot and return the format
+/// plan. Body `{"scenario": "<name>"}` profiles one registry entry (plan
+/// object); `{"scenario": "all"}` — or an empty/omitted field — profiles
+/// the whole registry (`{"plans": [...]}` wrapper). Pilot `profile.rung`
+/// events land in the serving worker's trace collector, so a profile
+/// shows up under `GET /v1/trace` like any other span source.
+fn handle_profile(
+    body: &[u8],
+    stream: &mut TcpStream,
+    shared: &Shared,
+    reg: &Registry,
+    close: bool,
+) {
+    let which = if body.is_empty() {
+        "all".to_string()
+    } else {
+        let text = match std::str::from_utf8(body) {
+            Ok(t) => t,
+            Err(_) => {
+                reg.inc("serve.http.400", 1);
+                return respond_error(stream, 400, "body is not UTF-8", close);
+            }
+        };
+        let json = match parse_json(text) {
+            Ok(j) => j,
+            Err(e) => {
+                reg.inc("serve.http.400", 1);
+                return respond_error(stream, 400, &format!("bad JSON: {e}"), close);
+            }
+        };
+        json.get("scenario")
+            .and_then(|s| s.as_str())
+            .unwrap_or("all")
+            .to_string()
+    };
+    let tr = trace_for(shared, reg);
+    reg.inc("serve.profiles", 1);
+    if which == "all" {
+        let plans = reg.time("serve.profile_ns", || profile::run_all_pilots(Some(tr)));
+        respond(stream, 200, &[], &profile::plans_json(&plans), close)
+    } else {
+        match crate::pde::scenario::find(&which) {
+            Some(spec) => {
+                let plan = reg.time("serve.profile_ns", || profile::run_pilot(spec, Some(tr)));
+                respond(stream, 200, &[], &plan.to_json(), close)
+            }
+            None => {
+                reg.inc("serve.http.400", 1);
+                respond_error(stream, 400, &format!("no scenario {which}"), close)
+            }
+        }
+    }
 }
 
 fn handle_run(body: &[u8], stream: &mut TcpStream, shared: &Shared, reg: &Registry, close: bool) {
@@ -1039,6 +1207,107 @@ mod tests {
             direct.text(),
             "job result must be byte-identical to /v1/run"
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_negotiates_prometheus_text_and_keeps_json_default() {
+        let server = Server::start(test_opts()).unwrap();
+        let _ = http::request(server.addr(), "GET", "/healthz", b"").unwrap();
+        let json = http::request(server.addr(), "GET", "/metrics", b"").unwrap();
+        assert_eq!(json.status, 200);
+        assert_eq!(json.header("content-type"), Some("application/json"));
+        let parsed = parse_json(&json.text()).expect("default body is still JSON");
+        assert!(parsed.get("counters").is_some());
+        let prom = http::request_with_headers(
+            server.addr(),
+            "GET",
+            "/metrics",
+            &[("accept", "text/plain")],
+            b"",
+        )
+        .unwrap();
+        assert_eq!(prom.status, 200);
+        assert_eq!(prom.header("content-type"), Some("text/plain; version=0.0.4"));
+        let text = prom.text();
+        assert!(text.starts_with("# r2f2 metrics exposition"));
+        assert!(text.contains("# TYPE r2f2_serve_accepted counter"));
+        assert!(
+            text.lines().all(|l| l.starts_with('#') || l.starts_with("r2f2_")),
+            "every exposition line is a comment or a namespaced sample"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_route_exports_request_and_job_spans() {
+        let server = Server::start(test_opts()).unwrap();
+        let _ = http::request(server.addr(), "GET", "/healthz", b"").unwrap();
+        let body = b"{\"app\": \"heat\", \"backend\": \"fixed:E5M10\", \
+                      \"heat\": {\"n\": 17, \"steps\": 24, \"dt\": 9.7e-4}}";
+        let accepted = http::request(server.addr(), "POST", "/v1/jobs", body).unwrap();
+        assert_eq!(accepted.status, 202);
+        // Let the job's first epoch land so a job.epoch span exists.
+        for _ in 0..4000 {
+            if server.trace_snapshot().snapshot().iter().any(|e| e.name == "job.epoch") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let resp = http::request(server.addr(), "GET", "/v1/trace", b"").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("application/x-ndjson"));
+        let text = resp.text();
+        let header = parse_json(text.lines().next().unwrap()).unwrap();
+        assert_eq!(header.get("schema").unwrap().as_str(), Some("r2f2-trace/1"));
+        assert!(text.contains("\"name\": \"http.request\""));
+        assert!(text.contains("\"name\": \"job.submitted\""));
+        assert!(text.contains("\"name\": \"job.epoch\""));
+        for line in text.lines() {
+            parse_json(line).expect("every trace line is one JSON object");
+        }
+        // The request spans carry wall durations (sanctioned attachments);
+        // the content projection drops them and nothing else.
+        let content = server.trace_snapshot().content_ndjson();
+        assert!(!content.contains("wall_ns"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn profile_route_returns_a_plan_and_rejects_unknown_scenarios() {
+        let server = Server::start(test_opts()).unwrap();
+        let one = http::request(
+            server.addr(),
+            "POST",
+            "/v1/profile",
+            b"{\"scenario\": \"heat1d\"}",
+        )
+        .unwrap();
+        assert_eq!(one.status, 200);
+        let plan = parse_json(&one.text()).unwrap();
+        assert_eq!(plan.get("schema").unwrap().as_str(), Some("r2f2-profile-plan/1"));
+        assert_eq!(plan.get("scenario").unwrap().as_str(), Some("heat1d"));
+        assert!(plan.get("recommendation").unwrap().get("seed_rung").is_some());
+        let bad = http::request(
+            server.addr(),
+            "POST",
+            "/v1/profile",
+            b"{\"scenario\": \"nope\"}",
+        )
+        .unwrap();
+        assert_eq!(bad.status, 400);
+        let all = http::request(server.addr(), "POST", "/v1/profile", b"").unwrap();
+        assert_eq!(all.status, 200);
+        let plans = parse_json(&all.text()).unwrap();
+        assert_eq!(
+            plans.get("plans").unwrap().as_arr().unwrap().len(),
+            SCENARIOS.len(),
+            "empty body profiles the whole registry"
+        );
+        let wrong_method = http::request(server.addr(), "GET", "/v1/profile", b"").unwrap();
+        assert_eq!(wrong_method.status, 405);
+        let wrong_method = http::request(server.addr(), "POST", "/v1/trace", b"").unwrap();
+        assert_eq!(wrong_method.status, 405);
         server.shutdown();
     }
 }

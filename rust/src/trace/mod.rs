@@ -1,0 +1,547 @@
+//! Deterministic structured tracing (DESIGN.md §17).
+//!
+//! Spans and events on the solver/serving paths are stamped with **logical
+//! clocks** — step, epoch and multiplication counters the computation
+//! already owns — never with wall time. Wall-clock durations may be
+//! *attached* to an event (`wall_ns`, recorded only from sanctioned modules
+//! behind reasoned `r2f2-audit` wall-clock markers), but they live outside
+//! the event's content: [`Collector::content_ndjson`] projects them away,
+//! and everything that remains is bit-reproducible and worker/shard-count
+//! invariant by the same contracts that make results reproducible
+//! (`rust/tests/trace_identity.rs`).
+//!
+//! Collection mirrors `metrics::Registry`: a [`Collector`] is a cloneable
+//! handle onto a bounded ring (oldest events dropped, drops accounted), and
+//! per-worker collectors [`Collector::merge`] order-invariantly — the
+//! export is sorted by `(lane, seq, content)`, so the bytes cannot depend
+//! on which collector an event landed in or in which order rings merged.
+//!
+//! Export is ndjson under schema `r2f2-trace/1`: one header line, then one
+//! event per line (`r2f2 run --trace FILE`, `GET /v1/trace`).
+
+pub mod profile;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::config::json_mini::escape;
+use crate::pde::adaptive::{AdaptiveArith, AdaptiveReport, Decision};
+use crate::pde::{QuantMode, ScenarioRun, ScenarioSize};
+use crate::pde::scenario::ScenarioSpec;
+
+/// The trace artifact schema (EXPERIMENTS.md E14).
+pub const SCHEMA: &str = "r2f2-trace/1";
+
+/// Default ring capacity. Sized so a full Adaptive-size scenario trace
+/// (one event per committed epoch plus the summary events) never drops.
+pub const DEFAULT_CAP: usize = 16 * 1024;
+
+/// Logical timestamp: the counters the traced computation already owns.
+/// Sources stamp whichever components they track and leave the rest 0 —
+/// no component ever derives from a clock read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Clock {
+    /// Solver timestep at the event.
+    pub step: u64,
+    /// Epoch / phase index.
+    pub epoch: u64,
+    /// Multiplications issued so far (0 where the source doesn't count).
+    pub muls: u64,
+}
+
+impl Clock {
+    /// The all-zero clock for events with no solver position (lifecycle
+    /// markers, request spans).
+    pub fn zero() -> Clock {
+        Clock::default()
+    }
+}
+
+/// A typed event field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    fn to_json(&self) -> String {
+        match self {
+            Value::U64(v) => format!("{v}"),
+            Value::I64(v) => format!("{v}"),
+            Value::F64(v) => json_f64(*v),
+            Value::Bool(v) => format!("{v}"),
+            Value::Str(s) => format!("\"{}\"", escape(s)),
+        }
+    }
+}
+
+/// Deterministic JSON rendering for floats: shortest round-trip form,
+/// non-finite mapped to `null` (JSON has no Inf/NaN literals).
+pub(crate) fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// One span/event record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Logical stream the event belongs to (`scenario/heat1d`,
+    /// `server/http`, `run/swe`, ...). Sequence numbers are per-lane.
+    pub lane: String,
+    /// Per-lane sequence number, assigned under the collector lock in
+    /// emission order. Survives merges unchanged.
+    pub seq: u64,
+    /// Event name (`adaptive.epoch`, `http.request`, ...).
+    pub name: String,
+    pub clock: Clock,
+    /// Typed payload in emission order (emitters are deterministic, so the
+    /// order is too).
+    pub fields: Vec<(String, Value)>,
+    /// Sanctioned wall-clock attachment — **not** part of the event's
+    /// deterministic content; see [`Collector::content_ndjson`].
+    pub wall_ns: Option<u64>,
+}
+
+impl TraceEvent {
+    /// The deterministic projection: everything except `wall_ns`.
+    pub fn content_json(&self) -> String {
+        self.render(false)
+    }
+
+    /// The full record, `wall_ns` included where present.
+    pub fn to_json(&self) -> String {
+        self.render(true)
+    }
+
+    fn render(&self, with_wall: bool) -> String {
+        let mut out = format!(
+            "{{\"lane\": \"{}\", \"seq\": {}, \"name\": \"{}\", \"step\": {}, \"epoch\": {}, \"muls\": {}",
+            escape(&self.lane),
+            self.seq,
+            escape(&self.name),
+            self.clock.step,
+            self.clock.epoch,
+            self.clock.muls
+        );
+        out.push_str(", \"fields\": {");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {}", escape(k), v.to_json()));
+        }
+        out.push('}');
+        if with_wall {
+            if let Some(w) = self.wall_ns {
+                out.push_str(&format!(", \"wall_ns\": {w}"));
+            }
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[derive(Debug)]
+struct Ring {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    /// Next sequence number per lane. Monotonic even across drops, so
+    /// merged exports sort stably and drops are visible as seq gaps.
+    next_seq: BTreeMap<String, u64>,
+}
+
+/// A cloneable handle onto one bounded event ring (the `Registry` idiom:
+/// clones share the ring; per-worker collectors merge order-invariantly).
+#[derive(Debug, Clone)]
+pub struct Collector {
+    inner: Arc<Mutex<Ring>>,
+}
+
+impl Collector {
+    pub fn new() -> Collector {
+        Collector::with_capacity(DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Collector {
+        let cap = cap.max(1);
+        Collector {
+            inner: Arc::new(Mutex::new(Ring {
+                cap,
+                events: VecDeque::new(),
+                dropped: 0,
+                next_seq: BTreeMap::new(),
+            })),
+        }
+    }
+
+    /// Record one event (no wall-clock attachment — the deterministic
+    /// path). The per-lane sequence number is assigned here.
+    pub fn record(&self, lane: &str, name: &str, clock: Clock, fields: Vec<(String, Value)>) {
+        self.push(lane, name, clock, fields, None);
+    }
+
+    /// Record one event with a wall-clock duration attached. Callers sit
+    /// in sanctioned modules behind reasoned wall-clock allow markers; the
+    /// attachment never enters [`Collector::content_ndjson`].
+    pub fn record_wall(
+        &self,
+        lane: &str,
+        name: &str,
+        clock: Clock,
+        fields: Vec<(String, Value)>,
+        wall_ns: u64,
+    ) {
+        self.push(lane, name, clock, fields, Some(wall_ns));
+    }
+
+    fn push(
+        &self,
+        lane: &str,
+        name: &str,
+        clock: Clock,
+        fields: Vec<(String, Value)>,
+        wall_ns: Option<u64>,
+    ) {
+        let mut ring = self.inner.lock().unwrap();
+        let seq = ring.next_seq.entry(lane.to_string()).or_insert(0);
+        let event = TraceEvent {
+            lane: lane.to_string(),
+            seq: *seq,
+            name: name.to_string(),
+            clock,
+            fields,
+            wall_ns,
+        };
+        *seq += 1;
+        if ring.events.len() == ring.cap {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(event);
+    }
+
+    /// Fold `other`'s events into this collector, `Registry::merge` style:
+    /// events keep their lane/seq identity, drop counts add, and per-lane
+    /// sequence allocation resumes past the highest seen — so merging is
+    /// order-invariant up to the canonical export sort. Merging a
+    /// collector with itself (same ring) is a no-op.
+    pub fn merge(&self, other: &Collector) {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return;
+        }
+        let (theirs, their_dropped, their_seqs) = {
+            let ring = other.inner.lock().unwrap();
+            (
+                ring.events.iter().cloned().collect::<Vec<_>>(),
+                ring.dropped,
+                ring.next_seq.clone(),
+            )
+        };
+        let mut ring = self.inner.lock().unwrap();
+        for (lane, next) in their_seqs {
+            let slot = ring.next_seq.entry(lane).or_insert(0);
+            *slot = (*slot).max(next);
+        }
+        ring.dropped += their_dropped;
+        for event in theirs {
+            if ring.events.len() == ring.cap {
+                ring.events.pop_front();
+                ring.dropped += 1;
+            }
+            ring.events.push_back(event);
+        }
+    }
+
+    /// Events dropped to the ring bound (here and in merged-in rings).
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all events (the window, not the per-lane seq counters — a
+    /// cleared collector keeps allocating past what it already issued).
+    pub fn clear(&self) {
+        let mut ring = self.inner.lock().unwrap();
+        ring.events.clear();
+    }
+
+    /// The held events in canonical export order: sorted by
+    /// `(lane, seq, content)`. Insertion and merge order cannot show.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut events: Vec<TraceEvent> =
+            self.inner.lock().unwrap().events.iter().cloned().collect();
+        events.sort_by(|a, b| {
+            (a.lane.as_str(), a.seq)
+                .cmp(&(b.lane.as_str(), b.seq))
+                .then_with(|| a.content_json().cmp(&b.content_json()))
+        });
+        events
+    }
+
+    /// Full ndjson export under [`SCHEMA`]: one header line, then one
+    /// event per line in canonical order, `wall_ns` included where a
+    /// sanctioned site attached it.
+    pub fn to_ndjson(&self) -> String {
+        self.export(true)
+    }
+
+    /// The deterministic projection of [`Collector::to_ndjson`]: identical
+    /// bytes except that every `wall_ns` attachment is omitted. This is
+    /// the artifact `trace_identity.rs` holds bit-identical across worker
+    /// and shard counts.
+    pub fn content_ndjson(&self) -> String {
+        self.export(false)
+    }
+
+    fn export(&self, with_wall: bool) -> String {
+        let events = self.snapshot();
+        let dropped = self.dropped();
+        let mut out = format!(
+            "{{\"schema\": \"{}\", \"generator\": \"r2f2\", \"events\": {}, \"dropped\": {}}}\n",
+            SCHEMA,
+            events.len(),
+            dropped
+        );
+        for e in &events {
+            out.push_str(&if with_wall { e.to_json() } else { e.content_json() });
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Default for Collector {
+    fn default() -> Collector {
+        Collector::new()
+    }
+}
+
+/// Stable lowercase name for an adaptive decision.
+pub fn decision_name(d: Decision) -> &'static str {
+    match d {
+        Decision::Stay => "stay",
+        Decision::Widen => "widen",
+        Decision::Narrow => "narrow",
+    }
+}
+
+/// Run a registry scenario adaptively with tracing: installs the
+/// [`AdaptiveArith::set_epoch_hook`] observer (one `adaptive.epoch` event
+/// per epoch-boundary decision, retried attempts included), runs the
+/// scenario through its registry hooks (sharded when `shards > 1`), then
+/// appends the per-rung and run-summary events from the scheduler's
+/// report.
+///
+/// Tracing cannot perturb the run: the hook observes decisions *after*
+/// they are applied, on the driving thread, and the scheduler contract
+/// (`pde::adaptive`) guarantees a hooked run is bit-identical to an
+/// unhooked one. Event content is worker/shard invariant because the §13
+/// decomp contract pins identical decisions and telemetry at any shard
+/// count (`rust/tests/trace_identity.rs` asserts both).
+pub fn trace_scenario_adaptive(
+    spec: &ScenarioSpec,
+    size: ScenarioSize,
+    mode: QuantMode,
+    batched: bool,
+    shards: usize,
+    collector: &Collector,
+) -> (ScenarioRun, AdaptiveReport) {
+    let lane = format!("scenario/{}", spec.name);
+    let mut sched = AdaptiveArith::new((spec.adaptive_policy)());
+    let sink = collector.clone();
+    let hook_lane = lane.clone();
+    sched.set_epoch_hook(move |e| {
+        sink.record(
+            &hook_lane,
+            "adaptive.epoch",
+            Clock { step: e.step as u64, epoch: e.epoch as u64, muls: 0 },
+            vec![
+                ("decision".into(), Value::Str(decision_name(e.decision).into())),
+                ("format".into(), Value::Str(e.format.to_string())),
+                ("overflows".into(), Value::U64(e.telemetry.events.overflows)),
+                ("underflows".into(), Value::U64(e.telemetry.events.underflows)),
+                ("nonfinite".into(), Value::U64(e.telemetry.nonfinite)),
+                ("max_abs".into(), Value::F64(e.telemetry.max_abs)),
+                ("min_abs".into(), Value::F64(e.telemetry.min_abs)),
+                ("samples".into(), Value::U64(e.telemetry.samples)),
+            ],
+        );
+    });
+    let run = if shards > 1 {
+        (spec.run_adaptive_sharded)(size, &mut sched, mode, batched, shards)
+    } else {
+        (spec.run_adaptive)(size, &mut sched, mode, batched)
+    };
+    let report = sched.report();
+    for (i, (fmt, ops)) in report.ops_per_rung.iter().enumerate() {
+        collector.record(
+            &lane,
+            "adaptive.rung",
+            Clock { step: 0, epoch: i as u64, muls: *ops },
+            vec![
+                ("format".into(), Value::Str(fmt.to_string())),
+                ("ops".into(), Value::U64(*ops)),
+            ],
+        );
+    }
+    collector.record(
+        &lane,
+        "scenario.done",
+        Clock { step: 0, epoch: report.epochs as u64, muls: run.muls },
+        vec![
+            ("backend".into(), Value::Str(run.backend.clone())),
+            ("decisions".into(), Value::U64(report.decisions.len() as u64)),
+            ("widen_events".into(), Value::U64(report.widen_events)),
+            ("narrow_events".into(), Value::U64(report.narrow_events)),
+            ("final_format".into(), Value::Str(report.final_format.to_string())),
+            ("modeled_cost_lut".into(), Value::F64(report.modeled_cost_lut)),
+        ],
+    );
+    (run, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_json;
+
+    fn ev(c: &Collector, lane: &str, name: &str, step: u64) {
+        c.record(
+            lane,
+            name,
+            Clock { step, epoch: 0, muls: step * 10 },
+            vec![("k".into(), Value::U64(step))],
+        );
+    }
+
+    #[test]
+    fn seq_is_per_lane_and_monotonic() {
+        let c = Collector::new();
+        ev(&c, "a", "x", 0);
+        ev(&c, "b", "x", 0);
+        ev(&c, "a", "x", 1);
+        let snap = c.snapshot();
+        let seqs: Vec<(String, u64)> =
+            snap.iter().map(|e| (e.lane.clone(), e.seq)).collect();
+        assert_eq!(
+            seqs,
+            vec![("a".to_string(), 0), ("a".to_string(), 1), ("b".to_string(), 0)]
+        );
+    }
+
+    #[test]
+    fn ring_bound_drops_oldest_with_accounting() {
+        let c = Collector::with_capacity(3);
+        for i in 0..5 {
+            ev(&c, "a", "x", i);
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.dropped(), 2);
+        let snap = c.snapshot();
+        // Most recent kept; seqs keep counting through the drops.
+        assert_eq!(snap.first().unwrap().seq, 2);
+        assert_eq!(snap.last().unwrap().seq, 4);
+        let header = c.to_ndjson();
+        assert!(header.starts_with("{\"schema\": \"r2f2-trace/1\""));
+        assert!(header.lines().next().unwrap().contains("\"dropped\": 2"));
+    }
+
+    #[test]
+    fn merge_is_order_invariant_and_self_merge_is_noop() {
+        let a = Collector::new();
+        let b = Collector::new();
+        ev(&a, "w0", "x", 0);
+        ev(&a, "w0", "x", 1);
+        ev(&b, "w1", "x", 0);
+        ev(&b, "shared", "y", 7);
+
+        let ab = Collector::new();
+        ab.merge(&a);
+        ab.merge(&b);
+        let ba = Collector::new();
+        ba.merge(&b);
+        ba.merge(&a);
+        assert_eq!(ab.to_ndjson(), ba.to_ndjson(), "merge order must not show");
+
+        let before = a.to_ndjson();
+        a.merge(&a.clone());
+        assert_eq!(a.to_ndjson(), before, "self-merge is a no-op");
+    }
+
+    #[test]
+    fn merge_resumes_lane_sequences_past_the_merged_high_water() {
+        let a = Collector::new();
+        let b = Collector::new();
+        ev(&b, "lane", "x", 0);
+        ev(&b, "lane", "x", 1);
+        a.merge(&b);
+        ev(&a, "lane", "x", 2);
+        let seqs: Vec<u64> = a.snapshot().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2], "no seq collision after merge");
+    }
+
+    #[test]
+    fn content_projection_strips_wall_and_nothing_else() {
+        let c = Collector::new();
+        c.record_wall("a", "x", Clock::zero(), vec![("k".into(), Value::Bool(true))], 1234);
+        let full = c.to_ndjson();
+        let content = c.content_ndjson();
+        assert!(full.contains("\"wall_ns\": 1234"));
+        assert!(!content.contains("wall_ns"));
+        assert_eq!(full.replace(", \"wall_ns\": 1234", ""), content);
+    }
+
+    #[test]
+    fn every_export_line_is_valid_json_even_with_hostile_names() {
+        let c = Collector::new();
+        c.record(
+            "la\"ne\n",
+            "ev\\il",
+            Clock { step: 1, epoch: 2, muls: 3 },
+            vec![
+                ("we\"ird\tkey".into(), Value::Str("va\\lue\n".into())),
+                ("nan".into(), Value::F64(f64::NAN)),
+                ("neg".into(), Value::I64(-5)),
+                ("f".into(), Value::F64(0.125)),
+            ],
+        );
+        for line in c.to_ndjson().lines() {
+            let doc = parse_json(line).expect("line parses");
+            assert!(doc.get("schema").is_some() || doc.get("lane").is_some());
+        }
+        let snap = c.snapshot();
+        let doc = parse_json(&snap[0].content_json()).unwrap();
+        assert_eq!(doc.get("lane").unwrap().as_str().unwrap(), "la\"ne\n");
+        assert_eq!(doc.get("step").unwrap().as_f64().unwrap(), 1.0);
+        let fields = doc.get("fields").unwrap();
+        assert_eq!(fields.get("we\"ird\tkey").unwrap().as_str().unwrap(), "va\\lue\n");
+        assert_eq!(fields.get("nan"), Some(&crate::config::json_mini::Json::Null));
+        assert_eq!(fields.get("f").unwrap().as_f64().unwrap(), 0.125);
+    }
+
+    #[test]
+    fn clear_keeps_sequence_allocation() {
+        let c = Collector::new();
+        ev(&c, "a", "x", 0);
+        c.clear();
+        assert!(c.is_empty());
+        ev(&c, "a", "x", 1);
+        assert_eq!(c.snapshot()[0].seq, 1, "cleared collectors do not reissue seqs");
+    }
+}

@@ -1,0 +1,303 @@
+//! Precision profiler + recommendation engine (ROADMAP item 4, the
+//! RAPTOR direction from PAPERS.md).
+//!
+//! A **pilot** runs each rung of a scenario's adaptive ladder at
+//! [`ScenarioSize::Quick`] against the f64 reference, collecting per-rung
+//! range telemetry (overflow/underflow events, rel-L2 error, modeled
+//! datapath cost from `r2f2core::resource` via `fixed_cost_lut`) plus the
+//! reference field's magnitude histogram. The resulting [`ProfilePlan`]
+//! recommends the narrowest *clean* rung — no overflow events and a
+//! finite error — as the adaptive scheduler's starting rung
+//! (profile-guided adaptation, [`ProfilePlan::seeded_policy`]).
+//!
+//! Why seeding is safe: the adaptive contract (`pde::adaptive`,
+//! DESIGN.md §10) already guarantees the committed trajectory bit-equals
+//! the wide-format fixed run regardless of the starting rung — a wrong
+//! seed only costs the aborted narrow attempt it would have made anyway.
+//! A *right* seed skips cold-start probing entirely, so the modeled cost
+//! is never higher than the cold start's and strictly lower whenever the
+//! cold start pays for an aborted attempt (`rust/tests/trace_identity.rs`
+//! holds both across the whole registry).
+//!
+//! Everything the pilot measures is deterministic (fixed-format Quick
+//! runs, logical counters), so plans are bit-reproducible; the pilot's
+//! only outputs are JSON under schema [`PLAN_SCHEMA`] and optional
+//! `profile.rung` trace events.
+
+use crate::analysis::field_histogram;
+use crate::coordinator::pool::default_workers;
+use crate::pde::adaptive::AdaptivePolicy;
+use crate::pde::scenario::{fixed_run_cost, ScenarioSpec, SCENARIOS};
+use crate::pde::{rel_l2, F64Arith, FixedArith, QuantMode, ScenarioSize};
+use crate::softfloat::FpFormat;
+use crate::trace::{json_f64, Clock, Collector, Value};
+
+/// The profile-plan artifact schema (EXPERIMENTS.md E14).
+pub const PLAN_SCHEMA: &str = "r2f2-profile-plan/1";
+
+/// One ladder rung's pilot measurement.
+#[derive(Debug, Clone)]
+pub struct PlanRung {
+    /// Index into the scenario's adaptive ladder (narrow → wide).
+    pub rung: usize,
+    pub format: FpFormat,
+    /// rel-L2 of the rung's Quick run vs the f64 reference.
+    pub rel_err: f64,
+    pub overflows: u64,
+    pub underflows: u64,
+    pub muls: u64,
+    /// Modeled LUT cost of running the whole pilot at this rung
+    /// (`fixed_run_cost`, i.e. `r2f2core::resource` per-mul LUTs × muls).
+    pub modeled_cost_lut: f64,
+    /// No overflow events and a finite error — eligible as a seed.
+    pub clean: bool,
+}
+
+/// A pilot's recommendation for one scenario.
+#[derive(Debug, Clone)]
+pub struct ProfilePlan {
+    pub scenario: String,
+    /// Quantization mode the pilot ran under.
+    pub mode: QuantMode,
+    /// Octaves occupied by the f64 reference field's magnitudes.
+    pub occupied_octaves: usize,
+    /// Octaves holding 90% of the reference field's mass.
+    pub bulk90_octaves: usize,
+    /// Every ladder rung's measurement, in ladder order.
+    pub rungs: Vec<PlanRung>,
+    /// Recommended starting rung: the narrowest clean rung, else the
+    /// widest rung when nothing narrower survived the pilot.
+    pub seed_rung: usize,
+}
+
+fn mode_name(mode: QuantMode) -> &'static str {
+    match mode {
+        QuantMode::MulOnly => "mul-only",
+        QuantMode::Full => "full",
+    }
+}
+
+impl ProfilePlan {
+    /// The recommended rung's measurement.
+    pub fn recommended(&self) -> &PlanRung {
+        &self.rungs[self.seed_rung]
+    }
+
+    /// The scenario's default adaptive policy, re-seeded at the
+    /// recommended rung. Every other knob (ladder, epoch length,
+    /// thresholds) is untouched, so the committed trajectory still
+    /// bit-equals the wide fixed run.
+    pub fn seeded_policy(&self, spec: &ScenarioSpec) -> AdaptivePolicy {
+        let mut policy = (spec.adaptive_policy)();
+        policy.start_rung = self.seed_rung.min(policy.ladder.len().saturating_sub(1));
+        policy
+    }
+
+    /// The plan as one JSON object under [`PLAN_SCHEMA`].
+    pub fn to_json(&self) -> String {
+        let rec = self.recommended();
+        let mut out = format!(
+            "{{\"schema\": \"{}\", \"generator\": \"r2f2 profile\", \"scenario\": \"{}\"",
+            PLAN_SCHEMA, self.scenario
+        );
+        out.push_str(&format!(
+            ", \"pilot\": {{\"size\": \"quick\", \"mode\": \"{}\", \"occupied_octaves\": {}, \"bulk90_octaves\": {}}}",
+            mode_name(self.mode),
+            self.occupied_octaves,
+            self.bulk90_octaves
+        ));
+        out.push_str(", \"rungs\": [");
+        for (i, r) in self.rungs.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"rung\": {}, \"format\": \"{}\", \"rel_err\": {}, \"overflows\": {}, \"underflows\": {}, \"muls\": {}, \"modeled_cost_lut\": {}, \"clean\": {}}}",
+                r.rung,
+                r.format,
+                json_f64(r.rel_err),
+                r.overflows,
+                r.underflows,
+                r.muls,
+                json_f64(r.modeled_cost_lut),
+                r.clean
+            ));
+        }
+        out.push_str(&format!(
+            "], \"recommendation\": {{\"seed_rung\": {}, \"format\": \"{}\", \"predicted_rel_err\": {}, \"modeled_cost_lut\": {}}}}}",
+            self.seed_rung,
+            rec.format,
+            json_f64(rec.rel_err),
+            json_f64(rec.modeled_cost_lut)
+        ));
+        out
+    }
+}
+
+/// Wrap a batch of plans as one artifact document.
+pub fn plans_json(plans: &[ProfilePlan]) -> String {
+    let mut out = format!(
+        "{{\"schema\": \"{}\", \"generator\": \"r2f2 profile\", \"plans\": [",
+        PLAN_SCHEMA
+    );
+    for (i, p) in plans.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&p.to_json());
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Run the pilot for one scenario: f64 reference plus one fixed-format
+/// Quick run per ladder rung, batched engine, [`QuantMode::MulOnly`].
+/// When a collector is given, each rung emits a `profile.rung` event on
+/// lane `profile/<scenario>` (logical clock: rung index as epoch, the
+/// rung run's mul counter).
+pub fn run_pilot(spec: &ScenarioSpec, trace: Option<&Collector>) -> ProfilePlan {
+    let mode = QuantMode::MulOnly;
+    let mut f64_be = F64Arith;
+    let reference = (spec.run)(ScenarioSize::Quick, &mut f64_be, mode, true);
+    let hist = field_histogram(&reference.field, default_workers());
+    let ladder = (spec.adaptive_policy)().ladder;
+    let lane = format!("profile/{}", spec.name);
+
+    let mut rungs = Vec::with_capacity(ladder.len());
+    for (i, fmt) in ladder.iter().enumerate() {
+        let mut be = FixedArith::new(*fmt);
+        let run = (spec.run)(ScenarioSize::Quick, &mut be, mode, true);
+        let (overflows, underflows) = match run.range_events {
+            Some(e) => (e.overflows, e.underflows),
+            None => (0, 0),
+        };
+        let rel_err = rel_l2(&run.field, &reference.field);
+        let clean = overflows == 0 && rel_err.is_finite();
+        let rung = PlanRung {
+            rung: i,
+            format: *fmt,
+            rel_err,
+            overflows,
+            underflows,
+            muls: run.muls,
+            modeled_cost_lut: fixed_run_cost(*fmt, &run),
+            clean,
+        };
+        if let Some(c) = trace {
+            c.record(
+                &lane,
+                "profile.rung",
+                Clock { step: 0, epoch: i as u64, muls: run.muls },
+                vec![
+                    ("format".into(), Value::Str(rung.format.to_string())),
+                    ("rel_err".into(), Value::F64(rung.rel_err)),
+                    ("overflows".into(), Value::U64(rung.overflows)),
+                    ("clean".into(), Value::Bool(rung.clean)),
+                ],
+            );
+        }
+        rungs.push(rung);
+    }
+    let seed_rung = rungs
+        .iter()
+        .position(|r| r.clean)
+        .unwrap_or_else(|| ladder.len().saturating_sub(1));
+    let plan = ProfilePlan {
+        scenario: spec.name.to_string(),
+        mode,
+        occupied_octaves: hist.occupied_octaves(),
+        bulk90_octaves: hist.bulk_octaves(0.9),
+        rungs,
+        seed_rung,
+    };
+    if let Some(c) = trace {
+        let rec = plan.recommended();
+        c.record(
+            &lane,
+            "profile.plan",
+            Clock { step: 0, epoch: plan.seed_rung as u64, muls: 0 },
+            vec![
+                ("seed_rung".into(), Value::U64(plan.seed_rung as u64)),
+                ("format".into(), Value::Str(rec.format.to_string())),
+                ("predicted_rel_err".into(), Value::F64(rec.rel_err)),
+                ("modeled_cost_lut".into(), Value::F64(rec.modeled_cost_lut)),
+            ],
+        );
+    }
+    plan
+}
+
+/// Pilot every registry scenario, in registry order.
+pub fn run_all_pilots(trace: Option<&Collector>) -> Vec<ProfilePlan> {
+    SCENARIOS.iter().map(|s| run_pilot(s, trace)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_json;
+
+    #[test]
+    fn every_scenario_pilot_recommends_the_wide_rung() {
+        // At Quick size every registry scenario's initial state already
+        // overflows its narrow rung on encode (amplitudes 300–500 vs
+        // E4M3's max finite 240; SWE's 0.5·g·h² flux vs E5M10's 65504),
+        // so the narrowest clean rung is the wide one — the pilot must
+        // find exactly that, never a dirty rung and never rung 0.
+        for spec in SCENARIOS {
+            let plan = run_pilot(spec, None);
+            assert_eq!(plan.rungs.len(), (spec.adaptive_policy)().ladder.len());
+            assert!(plan.rungs[plan.seed_rung].clean, "{}: dirty seed", spec.name);
+            assert_eq!(plan.seed_rung, 1, "{}: expected wide seed", spec.name);
+            assert_eq!(plan.recommended().format, spec.wide_format, "{}", spec.name);
+            assert!(!plan.rungs[0].clean, "{}: narrow rung should overflow", spec.name);
+            assert!(plan.rungs[0].overflows > 0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn plan_json_parses_and_carries_the_schema() {
+        let plan = run_pilot(&SCENARIOS[0], None);
+        let doc = parse_json(&plan.to_json()).expect("plan JSON parses");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), PLAN_SCHEMA);
+        assert_eq!(
+            doc.get("scenario").unwrap().as_str().unwrap(),
+            SCENARIOS[0].name
+        );
+        let rungs = doc.get("rungs").unwrap().as_arr().unwrap();
+        assert_eq!(rungs.len(), plan.rungs.len());
+        let rec = doc.get("recommendation").unwrap();
+        assert_eq!(
+            rec.get("seed_rung").unwrap().as_usize().unwrap(),
+            plan.seed_rung
+        );
+
+        let batch = parse_json(&plans_json(&[plan])).expect("batch parses");
+        assert_eq!(batch.get("plans").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn seeded_policy_only_moves_the_start_rung() {
+        let spec = &SCENARIOS[0];
+        let plan = run_pilot(spec, None);
+        let seeded = plan.seeded_policy(spec);
+        let default = (spec.adaptive_policy)();
+        assert_eq!(seeded.start_rung, plan.seed_rung);
+        assert_eq!(seeded.ladder, default.ladder);
+        assert_eq!(seeded.epoch_len, default.epoch_len);
+        assert_eq!(
+            seeded.widen_overflow_threshold,
+            default.widen_overflow_threshold
+        );
+    }
+
+    #[test]
+    fn pilot_trace_events_land_on_the_profile_lane() {
+        let c = Collector::new();
+        let plan = run_pilot(&SCENARIOS[0], Some(&c));
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), plan.rungs.len() + 1);
+        assert!(snap.iter().all(|e| e.lane == format!("profile/{}", SCENARIOS[0].name)));
+        assert_eq!(snap.last().unwrap().name, "profile.plan");
+    }
+}

@@ -1,0 +1,237 @@
+//! Trace-determinism and profile-guided-seeding contracts (DESIGN.md §17,
+//! EXPERIMENTS.md E14), enforced for **every** entry of
+//! `pde::scenario::SCENARIOS`:
+//!
+//! 1. **Content identity** — the wall-stripped trace projection
+//!    (`Collector::content_ndjson`) is byte-identical across worker counts
+//!    {1, 4} and shard counts {1, 3}, and attaching the collector leaves
+//!    the solver output bit-identical to an untraced run. Trace content is
+//!    a pure function of the experiment, not of the machine shape.
+//! 2. **Profile-guided seeding** (ROADMAP item 4) — a Quick-size pilot
+//!    recommends seeding the adaptive ladder at the wide rung for every
+//!    scenario (all four narrow rungs overflow from the initial encode);
+//!    the seeded run's committed trajectory bit-equals the all-wide fixed
+//!    run while its modeled LUT cost is strictly below the cold-start
+//!    adaptive run (which pays for the aborted epoch-0 narrow attempt) and
+//!    never above the all-wide cost — strictly below it wherever the
+//!    scenario decays into a narrowing stall.
+//! 3. **Export schema** — every ndjson line parses with the crate's own
+//!    JSON parser and the header carries `r2f2-trace/1`.
+//!
+//! The CI `trace-smoke` job greps this suite's `TRACE |` / `PROFILE |`
+//! rows into its job summary.
+
+use r2f2::pde::adaptive::fixed_cost_lut;
+use r2f2::pde::scenario::{ScenarioSize, SCENARIOS};
+use r2f2::pde::{rmse, AdaptiveArith, F64Arith, FixedArith, QuantMode};
+use r2f2::trace::profile::run_pilot;
+use r2f2::trace::{trace_scenario_adaptive, Collector};
+
+fn assert_fields_bit_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: node {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+/// Run `f` with `R2F2_WORKERS` pinned to `n`, restoring the prior value.
+/// `default_workers` re-reads the variable on every call, so the override
+/// takes effect immediately for the pool underneath sharded runs.
+fn with_workers<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let prev = std::env::var("R2F2_WORKERS").ok();
+    std::env::set_var("R2F2_WORKERS", n.to_string());
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("R2F2_WORKERS", v),
+        None => std::env::remove_var("R2F2_WORKERS"),
+    }
+    out
+}
+
+#[test]
+fn trace_content_is_worker_and_shard_invariant_and_nonperturbing() {
+    for spec in SCENARIOS {
+        // Untraced baseline: the epoch hook and collector must not perturb
+        // the committed trajectory by a single bit.
+        let mut plain_sched = AdaptiveArith::new((spec.adaptive_policy)());
+        let plain =
+            (spec.run_adaptive)(ScenarioSize::Adaptive, &mut plain_sched, QuantMode::MulOnly, true);
+
+        let mut legs: Vec<(usize, usize, String)> = Vec::new();
+        for workers in [1usize, 4] {
+            with_workers(workers, || {
+                for shards in [1usize, 3] {
+                    let collector = Collector::new();
+                    let (run, report) = trace_scenario_adaptive(
+                        spec,
+                        ScenarioSize::Adaptive,
+                        QuantMode::MulOnly,
+                        true,
+                        shards,
+                        &collector,
+                    );
+                    let what = format!("{} w{workers} s{shards}", spec.name);
+                    assert_fields_bit_equal(&run.field, &plain.field, &what);
+                    assert_eq!(run.muls, plain.muls, "{what}: muls");
+                    assert_eq!(collector.dropped(), 0, "{what}: ring overflowed");
+                    assert!(report.epochs > 0, "{what}: no epochs committed");
+                    legs.push((workers, shards, collector.content_ndjson()));
+                }
+            });
+        }
+
+        let (w0, s0, first) = &legs[0];
+        for (w, s, content) in &legs[1..] {
+            assert_eq!(
+                content, first,
+                "{}: trace content diverges between workers={w0} shards={s0} and workers={w} shards={s}",
+                spec.name
+            );
+        }
+        assert!(first.contains("\"adaptive.epoch\""), "{}: no epoch spans", spec.name);
+        assert!(first.contains("\"scenario.done\""), "{}: no terminal span", spec.name);
+        assert!(!first.contains("wall_ns"), "{}: wall clock leaked into content", spec.name);
+
+        // ndjson: one header line plus one line per event.
+        let events = first.lines().count() - 1;
+        println!(
+            "TRACE | {} | {events} events | content byte-identical across workers {{1,4}} x shards {{1,3}} | untraced run bit-equal |",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn profile_seeded_adaptive_matches_wide_rmse_at_lower_cost() {
+    for spec in SCENARIOS {
+        let plan = run_pilot(spec, None);
+        assert_eq!(
+            plan.seed_rung, 1,
+            "{}: pilot should recommend the wide rung (narrow overflows at Quick size)",
+            spec.name
+        );
+
+        // Cold-start adaptive: pays for the aborted epoch-0 narrow attempt.
+        let mut cold_sched = AdaptiveArith::new((spec.adaptive_policy)());
+        let cold =
+            (spec.run_adaptive)(ScenarioSize::Adaptive, &mut cold_sched, QuantMode::MulOnly, true);
+        let cold_report = cold_sched.report();
+        assert!(cold_report.widen_events >= 1, "{}: cold start never widened", spec.name);
+
+        // Profile-seeded adaptive: same ladder, start rung from the pilot.
+        let mut seeded_sched = AdaptiveArith::new(plan.seeded_policy(spec));
+        let seeded =
+            (spec.run_adaptive)(ScenarioSize::Adaptive, &mut seeded_sched, QuantMode::MulOnly, true);
+        let seeded_report = seeded_sched.report();
+
+        // All-wide fixed reference and the f64 ground truth.
+        let mut wide_be = FixedArith::new(spec.wide_format);
+        let wide = (spec.run)(ScenarioSize::Adaptive, &mut wide_be, QuantMode::MulOnly, true);
+        let mut f64_be = F64Arith;
+        let reference = (spec.run)(ScenarioSize::Adaptive, &mut f64_be, QuantMode::MulOnly, true);
+
+        // The seeded committed trajectory is the all-wide trajectory (for
+        // non-narrowing scenarios bit-for-bit; narrowing scenarios land the
+        // identical final RMSE — same envelope scenario_matrix enforces for
+        // the cold adaptive run, inherited by seeding at the same rung the
+        // cold run widens into).
+        let rmse_seeded = rmse(&seeded.field, &reference.field);
+        let rmse_cold = rmse(&cold.field, &reference.field);
+        let rmse_wide = rmse(&wide.field, &reference.field);
+        assert_fields_bit_equal(&seeded.field, &cold.field, &format!("{} seeded vs cold", spec.name));
+        assert_eq!(
+            rmse_seeded.to_bits(),
+            rmse_wide.to_bits(),
+            "{}: seeded RMSE {rmse_seeded:.6e} != all-wide RMSE {rmse_wide:.6e}",
+            spec.name
+        );
+        assert_eq!(rmse_cold.to_bits(), rmse_wide.to_bits(), "{}: cold RMSE drifted", spec.name);
+
+        // Cost: seeding skips the aborted narrow attempt, so the modeled
+        // LUT cost is strictly below cold start and never above all-wide.
+        let cost_wide = fixed_cost_lut(spec.wide_format, wide.muls);
+        assert!(
+            seeded_report.modeled_cost_lut < cold_report.modeled_cost_lut,
+            "{}: seeded cost {:.6e} not strictly below cold-start {:.6e}",
+            spec.name,
+            seeded_report.modeled_cost_lut,
+            cold_report.modeled_cost_lut
+        );
+        assert!(
+            seeded_report.modeled_cost_lut <= cost_wide * (1.0 + 1e-12),
+            "{}: seeded cost {:.6e} above all-wide {:.6e}",
+            spec.name,
+            seeded_report.modeled_cost_lut,
+            cost_wide
+        );
+        if spec.expect_narrow {
+            assert!(
+                seeded_report.narrow_events >= 1,
+                "{}: expected the seeded run to narrow after the stall",
+                spec.name
+            );
+            assert!(
+                seeded_report.modeled_cost_lut < cost_wide,
+                "{}: narrowing scenario should undercut all-wide cost",
+                spec.name
+            );
+        }
+
+        println!(
+            "PROFILE | {} | seed rung {} ({}) | rmse {:.3e} == all-wide | cost {:.3e} < cold {:.3e} (wide {:.3e}) |",
+            spec.name,
+            plan.seed_rung,
+            plan.recommended().format,
+            rmse_seeded,
+            seeded_report.modeled_cost_lut,
+            cold_report.modeled_cost_lut,
+            cost_wide
+        );
+    }
+}
+
+#[test]
+fn trace_export_parses_and_carries_the_schema() {
+    let spec = &SCENARIOS[0];
+    let collector = Collector::new();
+    let _ = trace_scenario_adaptive(
+        spec,
+        ScenarioSize::Adaptive,
+        QuantMode::MulOnly,
+        true,
+        1,
+        &collector,
+    );
+    let text = collector.to_ndjson();
+    let mut lines = text.lines();
+
+    let header = r2f2::config::parse_json(lines.next().expect("header line"))
+        .expect("header line is valid JSON");
+    assert_eq!(header.get("schema").and_then(|v| v.as_str()), Some("r2f2-trace/1"));
+    assert_eq!(
+        header.get("events").and_then(|v| v.as_f64()),
+        Some(collector.len() as f64),
+        "header event count"
+    );
+    assert_eq!(header.get("dropped").and_then(|v| v.as_f64()), Some(0.0));
+
+    let mut n = 0usize;
+    for line in lines {
+        let event = r2f2::config::parse_json(line)
+            .unwrap_or_else(|e| panic!("event line is not valid JSON ({e}): {line}"));
+        for key in ["lane", "seq", "name", "step", "epoch", "muls", "fields"] {
+            assert!(event.get(key).is_some(), "event missing {key:?}: {line}");
+        }
+        n += 1;
+    }
+    assert_eq!(n, collector.len(), "line count matches collector");
+
+    // The content projection differs from the full export only by wall
+    // attachments — this run records none, so the bodies agree.
+    let content = collector.content_ndjson();
+    assert_eq!(
+        text.lines().skip(1).collect::<Vec<_>>(),
+        content.lines().skip(1).collect::<Vec<_>>(),
+        "no wall attachments expected on the scenario lane"
+    );
+}
